@@ -1,0 +1,63 @@
+//! Hardware design-space exploration over the §6 accelerator model.
+//!
+//!   cargo run --release --example hw_explore
+//!
+//! Sweeps MAC-array sizes and precisions, printing the area/power/latency
+//! frontier for the char-PTB workload plus the paper's two published
+//! design points, and shows where the compute-bound → memory-bound
+//! crossover falls as DRAM bandwidth shrinks.
+
+use rbtw::hwsim::{high_speed_design, paper_workloads, simulate_timestep,
+                  synthesize, timestep_latency, HwConfig, Precision};
+use rbtw::util::table::Table;
+
+fn main() {
+    let w = &paper_workloads()[0]; // char-PTB LSTM h=1000
+    println!("workload: {} (LSTM h={}, d_in={})\n", w.name, w.hidden, w.d_in);
+
+    println!("== lane-count sweep ==");
+    let mut t = Table::new(&["precision", "# MAC", "area mm2", "power mW",
+                             "latency us", "util %"]);
+    for prec in [Precision::Fixed12, Precision::Binary, Precision::Ternary] {
+        for lanes in [100usize, 200, 500, 1000, 2000] {
+            let cfg = HwConfig { mac_units: lanes, ..HwConfig::low_power(prec) };
+            let syn = synthesize(&cfg);
+            let p = timestep_latency(&cfg, w);
+            t.row(&[
+                prec.label().into(),
+                lanes.to_string(),
+                format!("{:.2}", syn.area_mm2),
+                format!("{:.0}", syn.power_mw),
+                format!("{:.1}", p.latency_us),
+                format!("{:.0}", p.stats.utilization * 100.0),
+            ]);
+        }
+    }
+    t.print();
+
+    println!("\n== paper design points ==");
+    let fp = HwConfig::low_power(Precision::Fixed12);
+    let mut t2 = Table::new(&["design", "precision", "latency us", "speedup"]);
+    let base = timestep_latency(&fp, w).latency_us;
+    for prec in [Precision::Fixed12, Precision::Binary, Precision::Ternary] {
+        for (label, cfg) in [("low-power", HwConfig::low_power(prec)),
+                             ("high-speed", high_speed_design(prec, &fp))] {
+            let l = timestep_latency(&cfg, w).latency_us;
+            t2.row(&[label.into(), prec.label().into(),
+                     format!("{l:.1}"), format!("{:.1}x", base / l)]);
+        }
+    }
+    t2.print();
+
+    println!("\n== bandwidth sensitivity (binary high-speed) ==");
+    let mut t3 = Table::new(&["dram GB/s", "compute us", "dram us", "bound"]);
+    for gbps in [256.0, 128.0, 64.0, 25.6, 12.8, 6.4] {
+        let cfg = HwConfig { dram_gbps: gbps,
+                             ..high_speed_design(Precision::Binary, &fp) };
+        let s = simulate_timestep(&cfg, w.cell, w.d_in, w.hidden, w.layers);
+        let (cu, du) = (s.time_us(&cfg), s.dram_time_us(&cfg));
+        t3.row(&[format!("{gbps}"), format!("{cu:.1}"), format!("{du:.1}"),
+                 (if du > cu { "memory" } else { "compute" }).into()]);
+    }
+    t3.print();
+}

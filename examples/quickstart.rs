@@ -1,0 +1,42 @@
+//! Quickstart: the 60-second tour of the rbtw stack.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Loads the ternary char-LM artifact, takes a few optimizer steps on the
+//! synthetic PTB-like corpus, evaluates, and exports the packed
+//! deployment weights — touching every layer: data pipeline → PJRT
+//! train/eval executables → bit-packed export.
+
+use std::path::PathBuf;
+
+use rbtw::coordinator::{Split, TrainSpec, Trainer};
+use rbtw::model::export_packed;
+use rbtw::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from("artifacts");
+    anyhow::ensure!(dir.join("char_ptb_ter.meta.json").exists(),
+                    "run `make artifacts` first");
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    let spec = TrainSpec { steps: 60, lr: 5e-3, eval_every: 20,
+                           eval_batches: 2, ..TrainSpec::default() };
+    let mut trainer = Trainer::new(&engine, &dir, "char_ptb_ter", spec)?;
+    println!("training char_ptb_ter (BN-LSTM, stochastic ternary weights)…");
+    let report = trainer.run()?;
+    println!("  first loss {:.3} → last loss {:.3} nats",
+             report.train_loss.points[0].1,
+             report.train_loss.last().unwrap());
+
+    let ev = trainer.evaluate(Split::Test, 4)?;
+    println!("  test bpc {:.3}", ev.metric);
+
+    let packed = export_packed(&trainer.sess, 0xC0FFEE)?;
+    let fp32: usize = packed.matrices.values()
+        .map(|m| { let (r, c) = m.dims(); r * c * 4 }).sum();
+    println!("  packed deployment weights: {} B (vs {} B fp32, {:.1}x)",
+             packed.total_bytes(), fp32,
+             fp32 as f64 / packed.total_bytes() as f64);
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Serving example: batched request serving over the AOT Pallas-cell
+//! executable, with latency/throughput reporting — plus the packed
+//! popcount engine as the "ASIC-style" single-stream comparison.
+//!
+//!   cargo run --release --example serve_lm [n_requests]
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use rbtw::coordinator::{InferenceServer, Request};
+use rbtw::quant::PackedLstmCell;
+use rbtw::runtime::{Engine, Session};
+use rbtw::util::stats::percentiles;
+use rbtw::util::table::Table;
+use rbtw::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n_requests: usize = std::env::args().nth(1)
+        .and_then(|s| s.parse().ok()).unwrap_or(48);
+    let dir = PathBuf::from("artifacts");
+    let engine = Engine::cpu()?;
+    let mut rng = Rng::new(17);
+    let mut t = Table::new(&["artifact", "req", "tok/s", "p50 ms", "p99 ms",
+                             "peak batch"]);
+
+    for artifact in ["char_ptb_fp", "char_ptb_bin", "char_ptb_ter"] {
+        let mut server = InferenceServer::open(&engine, &dir, artifact,
+                                               n_requests)?;
+        for id in 0..n_requests as u64 {
+            server.submit(Request {
+                id,
+                prompt: (0..12).map(|_| rng.below(50) as i32).collect(),
+                gen_len: 24,
+                temperature: 0.8,
+            })?;
+        }
+        let t0 = Instant::now();
+        let responses = server.pump(1_000_000)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let lat: Vec<f64> = responses.iter()
+            .map(|r| (r.queue_time + r.run_time).as_secs_f64() * 1e3)
+            .collect();
+        let ps = percentiles(&lat, &[0.5, 0.99]);
+        t.row(&[
+            artifact.into(),
+            responses.len().to_string(),
+            format!("{:.0}", server.stats.tokens_processed as f64 / wall),
+            format!("{:.1}", ps[0]),
+            format!("{:.1}", ps[1]),
+            server.stats.peak_active_slots.to_string(),
+        ]);
+    }
+    println!("== PJRT continuous-batching server ==");
+    t.print();
+
+    // single-stream ASIC-style path for the ternary model
+    let sess = Session::open(&engine, &dir, "char_ptb_ter")?;
+    let mut cell = PackedLstmCell::from_session(&sess, 3)?;
+    let mut h = vec![0.0f32; cell.hidden];
+    let mut c = vec![0.0f32; cell.hidden];
+    let t0 = Instant::now();
+    let n = 50_000;
+    for i in 0..n {
+        cell.step_token(i % 50, &mut h, &mut c);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\n== packed popcount engine (single stream, ternary) ==");
+    println!("{:.0} steps/s, weight footprint {} B", n as f64 / dt,
+             cell.weight_bytes());
+    Ok(())
+}

@@ -1,0 +1,450 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts for the rust runtime.
+
+For each registered experiment this emits:
+
+    artifacts/<name>_<entry>.hlo.txt   one per entrypoint (train/eval/...)
+    artifacts/<name>.meta.json         input/output binding + paper row
+    artifacts/<name>.init.bin          raw f32 init values (params|state|opt)
+
+HLO **text** is the interchange format (NOT lowered.compile() or a
+serialized HloModuleProto): jax >= 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs exactly once, here. The rust binary is self-contained given
+the artifacts directory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import quantizers as Q
+from . import train as T
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """One named artifact bundle: a model + its entrypoints + paper row."""
+    name: str
+    task: str                      # charlm | wordlm | mnist | qa
+    model: M.ModelConfig
+    train: T.TrainConfig
+    entries: tuple[str, ...] = ("train", "eval")
+    # eval variants: list of (suffix, seq_len, batch)
+    eval_variants: tuple = ()
+    # infer variants: list of (suffix, batch)
+    infer_variants: tuple = ()
+    paper: dict = dataclasses.field(default_factory=dict)
+
+
+REGISTRY: dict[str, Experiment] = {}
+
+
+def _reg(e: Experiment):
+    assert e.name not in REGISTRY, e.name
+    REGISTRY[e.name] = e
+
+
+# --- Table 1: char-level LSTM on PTB / War&Peace / Linux Kernel -----------
+# Reduced scale: hidden 96 (paper: 1000/512/512), seq 50 (paper 100).
+# paper[...] carries the published row so benches print paper-vs-measured.
+
+_CHAR_CORPORA = {
+    # corpus: (vocab, paper_hidden, paper rows {method: (bpc, size_kb)})
+    "ptb": (50, 1000, {
+        "fp": 1.39, "bin": 1.43, "bc": 2.51, "lab": 1.56, "ter": 1.39,
+        "twn": 1.51, "ttq": 1.49, "laq2": 1.46, "laq3": 1.46, "laq4": 1.47,
+        "dorefa3": 1.47, "dorefa4": 1.47}),
+    "wp": (87, 512, {
+        "fp": 1.72, "bin": 1.78, "bc": 5.10, "lab": 1.86, "ter": 1.72,
+        "twn": 1.86, "ttq": 1.83, "laq2": 1.80, "laq3": 1.83, "laq4": 1.83,
+        "dorefa3": 1.95, "dorefa4": 1.92}),
+    "lk": (101, 512, {
+        "fp": 1.73, "bin": 1.79, "bc": 4.24, "lab": 1.88, "ter": 1.75,
+        "twn": 1.85, "ttq": 1.88, "laq2": 1.81, "laq3": 1.84, "laq4": 1.90,
+        "dorefa3": 1.84, "dorefa4": 1.90}),
+}
+
+_CHAR_METHODS = ["fp", "bin", "ter", "bc", "lab", "twn", "ttq",
+                 "laq2", "laq3", "laq4", "dorefa3", "dorefa4"]
+
+
+def _char_arch(method: str) -> str:
+    """Ours (bin/ter) use the paper's BN-LSTM; every baseline (and the FP
+    reference) is the vanilla LSTM, as in the paper's comparisons."""
+    return "bnlstm" if method in ("bin", "ter") else "lstm"
+
+
+for corpus, (vocab, paper_h, rows) in _CHAR_CORPORA.items():
+    for method in _CHAR_METHODS:
+        _reg(Experiment(
+            name=f"char_{corpus}_{method}",
+            task="charlm",
+            model=M.ModelConfig(arch=_char_arch(method), quantizer=method,
+                                vocab=vocab, hidden=96),
+            train=T.TrainConfig(optimizer="adam", seq_len=50, batch=32),
+            paper={"table": 1, "hidden": paper_h, "seq_len": 100,
+                   "metric": "bpc", "value": rows[method],
+                   "bits": Q.bits(method)},
+        ))
+
+# extra entry points on the flagship PTB configs:
+#   - gate statistics (Appendix A figs 4/5/6) for fp / bc / bin
+#   - serving infer (batch 1 and 16) for fp / bin / ter
+#   - eval at longer sequences (Fig 2b) for fp / bin / ter
+#   - batch-size sweep training (Fig 3) for bin / ter / fp
+for m in ("fp", "bc", "bin"):
+    e = REGISTRY[f"char_ptb_{m}"]
+    REGISTRY[e.name] = dataclasses.replace(e, entries=e.entries + ("gatestats",))
+for m in ("fp", "bin", "ter"):
+    e = REGISTRY[f"char_ptb_{m}"]
+    REGISTRY[e.name] = dataclasses.replace(
+        e,
+        infer_variants=(("b1", 1), ("b16", 16)),
+        eval_variants=(("len25", 25, 32), ("len100", 100, 32),
+                       ("len200", 200, 16), ("len400", 400, 8)),
+    )
+for m in ("fp", "bin", "ter"):
+    for b in (2, 8, 16, 64):
+        base = REGISTRY[f"char_ptb_{m}"]
+        _reg(Experiment(
+            name=f"char_ptb_{m}_b{b}",
+            task="charlm",
+            model=base.model,
+            train=dataclasses.replace(base.train, batch=b),
+            paper={"figure": 3, "metric": "bpc"},
+        ))
+
+# --- Table 2: Text8 ---------------------------------------------------------
+for method, bpc in (("fp", 1.46), ("bin", 1.54), ("ter", 1.51), ("bc", 2.45)):
+    _reg(Experiment(
+        name=f"char_text8_{method}",
+        task="charlm",
+        model=M.ModelConfig(arch=_char_arch(method), quantizer=method,
+                            vocab=27, hidden=128),
+        train=T.TrainConfig(optimizer="adam", seq_len=60, batch=32),
+        paper={"table": 2, "hidden": 2000, "seq_len": 180,
+               "metric": "bpc", "value": bpc, "bits": Q.bits(method)},
+    ))
+
+# --- Table 3: word-level PTB ------------------------------------------------
+_WORD_SIZES = {
+    # ours: (hidden, layers, dropout); paper: (hidden, layers)
+    "small": (64, 1, 0.0, 300, 1),
+    "medium": (128, 1, 0.35, 650, 2),
+    "large": (192, 2, 0.45, 1500, 2),
+}
+_WORD_ROWS = {
+    ("small", "fp"): 91.5, ("small", "bin"): 92.2, ("small", "ter"): 90.7,
+    ("small", "bc"): 125.9, ("small", "alt2"): 103.1,
+    ("small", "alt3"): 93.8, ("small", "alt4"): 91.4,
+    ("medium", "fp"): 87.6, ("medium", "bin"): 87.2,
+    ("medium", "ter"): 86.1, ("medium", "bc"): 108.4,
+    ("large", "fp"): 78.5, ("large", "bin"): 76.5, ("large", "ter"): 76.3,
+    ("large", "bc"): 128.5,
+}
+for (size, method), ppl in _WORD_ROWS.items():
+    h, layers, drop, ph, pl_ = _WORD_SIZES[size]
+    _reg(Experiment(
+        name=f"word_{size}_{method}",
+        task="wordlm",
+        model=M.ModelConfig(arch=_char_arch(method), quantizer=method,
+                            vocab=2000, emb_dim=h, hidden=h,
+                            num_layers=layers, dropout=drop),
+        train=T.TrainConfig(optimizer="sgd", grad_clip=0.25, seq_len=35,
+                            batch=20),
+        paper={"table": 3, "hidden": ph, "layers": pl_, "metric": "ppl",
+               "value": ppl, "bits": Q.bits(method),
+               "ops_multiplier": Q.OPS_MULTIPLIER.get(method, 1)},
+    ))
+
+# --- Table 4: sequential MNIST ---------------------------------------------
+for method, acc in (("fp", 98.9), ("bin", 98.6), ("ter", 98.8),
+                    ("bc", 68.3), ("alt2", 98.8)):
+    _reg(Experiment(
+        name=f"mnist_{method}",
+        task="mnist",
+        model=M.ModelConfig(arch=_char_arch(method), quantizer=method,
+                            vocab=0, input_dim=1, hidden=100,
+                            head="classifier", num_classes=10),
+        train=T.TrainConfig(optimizer="adam", seq_len=784, batch=64),
+        paper={"table": 4, "hidden": 100, "metric": "acc", "value": acc,
+               "bits": Q.bits(method),
+               "ops_multiplier": Q.OPS_MULTIPLIER.get(method, 1)},
+    ))
+
+# --- Table 5: CNN-QA attentive reader ---------------------------------------
+for method, acc in (("fp", 59.81), ("bin", 59.22), ("ter", 60.03),
+                    ("bc", 5.34)):
+    _reg(Experiment(
+        name=f"qa_{method}",
+        task="qa",
+        model=M.ModelConfig(arch=_char_arch(method), quantizer=method,
+                            vocab=120, emb_dim=32, hidden=48,
+                            head="attreader", num_classes=30),
+        train=T.TrainConfig(optimizer="adam", seq_len=60, batch=32),
+        paper={"table": 5, "hidden": 256, "metric": "acc", "value": acc,
+               "bits": Q.bits(method)},
+    ))
+
+# --- Table 6: char-level GRU -------------------------------------------------
+_GRU_ROWS = {
+    ("ptb", "fp"): 1.40, ("ptb", "bin"): 1.46, ("ptb", "ter"): 1.41,
+    ("wp", "fp"): 1.75, ("wp", "bin"): 1.92, ("wp", "ter"): 1.82,
+    ("lk", "fp"): 1.82, ("lk", "bin"): 1.90, ("lk", "ter"): 1.81,
+}
+for (corpus, method), bpc in _GRU_ROWS.items():
+    vocab, paper_h, _ = _CHAR_CORPORA[corpus]
+    arch = "bngru" if method in ("bin", "ter") else "gru"
+    _reg(Experiment(
+        name=f"gru_{corpus}_{method}",
+        task="charlm",
+        model=M.ModelConfig(arch=arch, quantizer=method, vocab=vocab,
+                            hidden=96),
+        train=T.TrainConfig(optimizer="adam", seq_len=50, batch=32),
+        paper={"table": 6, "hidden": paper_h, "metric": "bpc",
+               "value": bpc, "bits": Q.bits(method)},
+    ))
+
+
+# ---------------------------------------------------------------------------
+# lowering machinery
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+_DTYPE = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32",
+          jnp.uint32.dtype: "u32"}
+
+
+def _leaf_specs(tree, groups):
+    """Flatten (dict|array)* example args into ordered [(group, name,
+    shape, dtype)] matching jax's flatten order (sorted dict keys)."""
+    specs = []
+    for group, obj in groups:
+        if isinstance(obj, dict):
+            for k in sorted(obj.keys()):
+                v = obj[k]
+                specs.append({"group": group, "name": k,
+                              "shape": list(v.shape),
+                              "dtype": _DTYPE[v.dtype]})
+        else:
+            specs.append({"group": group, "name": group,
+                          "shape": list(obj.shape),
+                          "dtype": _DTYPE[obj.dtype]})
+    return specs
+
+
+def _out_specs(out_tree):
+    """Output leaf specs via tree flatten with paths."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(out_tree)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        specs.append({"name": name or "out", "shape": list(leaf.shape),
+                      "dtype": _DTYPE[jnp.dtype(leaf.dtype)]})
+    return specs
+
+
+def _example_data(e: Experiment, seq_len=None, batch=None):
+    """Zero-valued example arrays with the artifact's data shapes."""
+    tl = seq_len or e.train.seq_len
+    b = batch or e.train.batch
+    m = e.model
+    if e.task == "qa":
+        doc = jnp.zeros((tl, b), jnp.int32)
+        query = jnp.zeros((10, b), jnp.int32)
+        y = jnp.zeros((b,), jnp.int32)
+        return {"doc": doc, "query": query, "y": y}
+    if m.head == "classifier":
+        x = jnp.zeros((tl, b, m.input_dim), jnp.float32)
+        y = jnp.zeros((b,), jnp.int32)
+    else:
+        x = jnp.zeros((tl, b), jnp.int32)
+        y = jnp.zeros((tl, b), jnp.int32)
+    return {"x": x, "y": y}
+
+
+def _init_bundle(e: Experiment, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    if e.model.head == "attreader":
+        params, state = M.init_attreader(e.model, key)
+    else:
+        params, state = M.init_params(e.model, key)
+    opt = T.init_opt(e.train, params)
+    return params, state, opt
+
+
+def _footprint(e: Experiment) -> dict:
+    """Recurrent-weight memory accounting at OUR scale; the paper-scale
+    Size columns are recomputed rust-side from paper dims + bits."""
+    m = e.model
+    n_params = 0
+    # include every quantized matrix (attreader has 4 directional LSTMs)
+    dummy_params, _, _ = _init_bundle(e)
+    rec = [k for k in dummy_params
+           if k.endswith(("/wx", "/wh")) and "att/" not in k]
+    for k in rec:
+        n_params += int(np.prod(dummy_params[k].shape))
+    return {
+        "recurrent_params": n_params,
+        "bytes_fp32": n_params * 4,
+        "bytes_quant": int(n_params * Q.bits(e.model.quantizer) / 8),
+        "recurrent_names": sorted(rec),
+    }
+
+
+def lower_experiment(e: Experiment, outdir: str, verbose: bool = True):
+    params, state, opt = _init_bundle(e)
+    seed = jnp.zeros((), jnp.int32)
+    lr = jnp.asarray(0.001, jnp.float32)
+    meta = {
+        "name": e.name,
+        "task": e.task,
+        "model": dataclasses.asdict(e.model),
+        "train": dataclasses.asdict(e.train),
+        "paper": e.paper,
+        "bits_per_weight": Q.bits(e.model.quantizer),
+        "footprint": _footprint(e),
+        "entrypoints": {},
+    }
+
+    def emit(entry_name, fn, groups, fname_suffix):
+        t0 = time.time()
+        example = [obj for _, obj in groups]
+        # keep_unused: the HLO signature must carry EVERY leaf (even ones a
+        # given entrypoint ignores, e.g. the softmax head in gatestats) so
+        # the rust binding can use one uniform input order per bundle.
+        lowered = jax.jit(fn, keep_unused=True).lower(*example)
+        text = to_hlo_text(lowered)
+        out_shape = jax.eval_shape(fn, *example)
+        hlo_file = f"{e.name}_{fname_suffix}.hlo.txt"
+        with open(os.path.join(outdir, hlo_file), "w") as f:
+            f.write(text)
+        meta["entrypoints"][entry_name] = {
+            "hlo": hlo_file,
+            "inputs": _leaf_specs(None, groups),
+            "outputs": _out_specs(out_shape),
+        }
+        if verbose:
+            print(f"  {e.name}:{entry_name}  {len(text)/1e6:.2f} MB "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+
+    data = _example_data(e)
+    if e.task == "qa":
+        if "train" in e.entries:
+            step = T.build_attreader_train_step(e.model, e.train)
+            emit("train", step,
+                 [("params", params), ("state", state), ("opt", opt),
+                  ("doc", data["doc"]), ("query", data["query"]),
+                  ("y", data["y"]), ("seed", seed), ("lr", lr)], "train")
+        if "eval" in e.entries:
+            step = T.build_attreader_eval_step(e.model)
+            emit("eval", step,
+                 [("params", params), ("state", state),
+                  ("doc", data["doc"]), ("query", data["query"]),
+                  ("y", data["y"]), ("seed", seed)], "eval")
+    else:
+        if "train" in e.entries:
+            step = T.build_train_step(e.model, e.train)
+            emit("train", step,
+                 [("params", params), ("state", state), ("opt", opt),
+                  ("x", data["x"]), ("y", data["y"]), ("seed", seed),
+                  ("lr", lr)], "train")
+        if "eval" in e.entries:
+            step = T.build_eval_step(e.model)
+            emit("eval", step,
+                 [("params", params), ("state", state), ("x", data["x"]),
+                  ("y", data["y"]), ("seed", seed)], "eval")
+        if "gatestats" in e.entries:
+            step = T.build_gate_stats_step(e.model)
+            emit("gatestats", step,
+                 [("params", params), ("state", state), ("x", data["x"]),
+                  ("seed", seed)], "gatestats")
+        for suffix, sl, b in e.eval_variants:
+            step = T.build_eval_step(e.model)
+            d = _example_data(e, seq_len=sl, batch=b)
+            emit(f"eval_{suffix}", step,
+                 [("params", params), ("state", state), ("x", d["x"]),
+                  ("y", d["y"]), ("seed", seed)], f"eval_{suffix}")
+        for suffix, b in e.infer_variants:
+            step = T.build_infer_step(e.model)
+            x1 = jnp.zeros((b, e.model.layer_input_dim(0)), jnp.float32)
+            h1 = jnp.zeros((b, e.model.hidden), jnp.float32)
+            c1 = jnp.zeros((b, e.model.hidden), jnp.float32)
+            emit(f"infer_{suffix}", step,
+                 [("params", params), ("state", state), ("x", x1),
+                  ("h", h1), ("c", c1), ("seed", seed)], f"infer_{suffix}")
+
+    # init.bin: params | state | opt, each name-sorted, raw f32 LE.
+    segments = []
+    offset = 0
+    blobs = []
+    for group, d in (("params", params), ("state", state), ("opt", opt)):
+        for k in sorted(d.keys()):
+            arr = np.asarray(d[k], np.float32)
+            segments.append({"group": group, "name": k,
+                             "shape": list(arr.shape), "dtype": "f32",
+                             "offset": offset, "nbytes": arr.nbytes})
+            blobs.append(arr.tobytes())
+            offset += arr.nbytes
+    init_file = f"{e.name}.init.bin"
+    with open(os.path.join(outdir, init_file), "wb") as f:
+        f.write(b"".join(blobs))
+    meta["init"] = {"file": init_file, "total_bytes": offset,
+                    "segments": segments}
+
+    with open(os.path.join(outdir, f"{e.name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--only", nargs="*", default=[])
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    if args.list:
+        for name in sorted(REGISTRY):
+            print(name)
+        return
+
+    names = sorted(REGISTRY) if args.all else args.only
+    if not names:
+        print("nothing to do: pass --all or --only <names>", file=sys.stderr)
+        sys.exit(1)
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+    for i, name in enumerate(names):
+        print(f"[{i+1}/{len(names)}] {name}", flush=True)
+        lower_experiment(REGISTRY[name], args.out)
+    print(f"done: {len(names)} experiments in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO)."""
+
+from .quant_matmul import (BlockPlan, choose_block_plan, qmatmul,
+                           qmatmul_bn, qmatmul_ste)
+from .bnlstm_cell import bnlstm_cell, fold_bn
+
+__all__ = [
+    "BlockPlan", "choose_block_plan", "qmatmul", "qmatmul_bn",
+    "qmatmul_ste", "bnlstm_cell", "fold_bn",
+]

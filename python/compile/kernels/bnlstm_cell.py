@@ -1,0 +1,102 @@
+"""Fused BN-LSTM cell Pallas kernel.
+
+One kernel invocation computes a full Eq. 7 cell update:
+
+    pre = BN(x @ Wx_q) + BN(h @ Wh_q) + b        (two quantized matmuls,
+    i, f, g, o = split(pre)                       BN folded to scale/shift)
+    c' = f*c + i*g ;  h' = o * tanh(c')
+
+Fusing the cell keeps the gate block (batch x 4H) in VMEM between the
+matmuls and the elementwise tail — on real TPU this removes two HBM
+round-trips of the pre-activation tensor per timestep, which dominates the
+timestep latency for the small-batch serving regime the paper's high-speed
+engine targets (Appendix D / Fig. 7).
+
+The grid partitions the batch only; each program owns the full (4H)-wide
+gate slab so the nonlinear tail never crosses block boundaries. This caps
+H at VMEM/(4*4*3) per program — ≥ 8k hidden units, far beyond the paper's
+2000-unit largest model (the VMEM table lives in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref,
+                 sx_ref, tx_ref, sh_ref, th_ref, b_ref,
+                 h_out_ref, c_out_ref):
+    """Single-program fused cell over one batch tile."""
+    xw = jnp.dot(x_ref[...], wx_ref[...], preferred_element_type=jnp.float32)
+    hw = jnp.dot(h_ref[...], wh_ref[...], preferred_element_type=jnp.float32)
+    pre = (xw * sx_ref[...] + tx_ref[...]) \
+        + (hw * sh_ref[...] + th_ref[...]) + b_ref[...]
+
+    hid = c_ref.shape[-1]
+    i = jax.nn.sigmoid(pre[:, 0 * hid:1 * hid])
+    f = jax.nn.sigmoid(pre[:, 1 * hid:2 * hid])
+    g = jnp.tanh(pre[:, 2 * hid:3 * hid])
+    o = jax.nn.sigmoid(pre[:, 3 * hid:4 * hid])
+
+    c_new = f * c_ref[...] + i * g
+    c_out_ref[...] = c_new
+    h_out_ref[...] = o * jnp.tanh(c_new)
+
+
+def bnlstm_cell(x, h, c, wx_q, wh_q, scale_x, shift_x, scale_h, shift_h,
+                bias, block_batch: int | None = None):
+    """Fused BN-LSTM cell step.
+
+    x: (B, Dx); h, c: (B, H); wx_q: (Dx, 4H); wh_q: (H, 4H) — quantized
+    (±alpha/0) weights as f32. scale/shift: (4H,) folded BN statistics for
+    the input and recurrent paths. bias: (4H,). Gate order [i, f, g, o].
+    Returns (h', c').
+    """
+    batch, dx = x.shape
+    hid = h.shape[-1]
+    n4 = 4 * hid
+    assert wx_q.shape == (dx, n4) and wh_q.shape == (hid, n4)
+    bb = min(batch, block_batch or 128)
+    grid = (pl.cdiv(batch, bb),)
+
+    row = lambda v: v.reshape(1, n4).astype(jnp.float32)
+    kernel = functools.partial(_cell_kernel)
+
+    h_new, c_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, dx), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hid), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hid), lambda i: (i, 0)),
+            pl.BlockSpec((dx, n4), lambda i: (0, 0)),
+            pl.BlockSpec((hid, n4), lambda i: (0, 0)),
+            pl.BlockSpec((1, n4), lambda i: (0, 0)),
+            pl.BlockSpec((1, n4), lambda i: (0, 0)),
+            pl.BlockSpec((1, n4), lambda i: (0, 0)),
+            pl.BlockSpec((1, n4), lambda i: (0, 0)),
+            pl.BlockSpec((1, n4), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, hid), lambda i: (i, 0)),
+            pl.BlockSpec((bb, hid), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, hid), jnp.float32),
+            jax.ShapeDtypeStruct((batch, hid), jnp.float32),
+        ],
+        interpret=True,
+    )(x.astype(jnp.float32), h.astype(jnp.float32), c.astype(jnp.float32),
+      wx_q.astype(jnp.float32), wh_q.astype(jnp.float32),
+      row(scale_x), row(shift_x), row(scale_h), row(shift_h), row(bias))
+    return h_new, c_new
+
+
+def fold_bn(mean, var, phi, gamma, eps: float = 1e-5):
+    """Fold BN statistics into (scale, shift): BN(y) == y*scale + shift."""
+    scale = phi / jnp.sqrt(var + eps)
+    return scale, gamma - mean * scale

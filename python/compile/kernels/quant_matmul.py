@@ -1,0 +1,239 @@
+"""Pallas kernels for the quantized gate pre-activation hot path.
+
+The paper's ASIC replaces 12-bit multipliers with multiplexers because the
+weights are in {-1, 0, +1}. The TPU translation (DESIGN.md
+§Hardware-Adaptation): weights ride the MXU as ±1/0 values at full matmul
+rate, so compute cost is unchanged and the entire win moves to the memory
+system — weights are stored bit-packed in HBM (1 b binary / 2 b ternary)
+and unpacked in-register after the HBM→VMEM stream expressed by the
+BlockSpec grid below.
+
+All kernels are built with ``interpret=True``: this image's PJRT plugin is
+CPU-only and cannot execute Mosaic custom-calls; interpret mode lowers to
+plain HLO so the exact same program runs under the rust PJRT client.
+Real-TPU performance is *estimated* in DESIGN.md §9 / EXPERIMENTS.md §Perf
+from the VMEM footprint + MXU-utilization model in ``vmem_model`` below.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Block-size selection / VMEM model
+# ---------------------------------------------------------------------------
+
+class BlockPlan(NamedTuple):
+    """Tile sizes for the (m, k) x (k, n) contraction."""
+    bm: int
+    bk: int
+    bn: int
+
+    def vmem_bytes(self, packed_bits: int = 2) -> int:
+        """Estimated VMEM residency with double buffering.
+
+        x tile f32 + packed weight tile (packed_bits per element, int8
+        carrier) + f32 accumulator tile; input tiles are double-buffered.
+        """
+        x_tile = self.bm * self.bk * 4
+        w_tile = self.bk * self.bn * packed_bits // 8
+        acc = self.bm * self.bn * 4
+        return 2 * (x_tile + w_tile) + acc
+
+    def mxu_utilization(self, m: int, k: int, n: int) -> float:
+        """MXU busy-fraction estimate for the full problem.
+
+        The 128x128 systolic array retires one 128x128x1 MAC slab per
+        cycle; tiles narrower than 128 in m or n waste lanes. Grid-edge
+        remainders are modeled by ceil-division.
+        """
+        gm, gk, gn = (math.ceil(m / self.bm), math.ceil(k / self.bk),
+                      math.ceil(n / self.bn))
+        useful = m * k * n
+        lanes_m = min(self.bm, 128)
+        lanes_n = min(self.bn, 128)
+        cycles_per_tile = (math.ceil(self.bm / 128) * math.ceil(self.bn / 128)
+                           * self.bk)
+        total_cycles = gm * gk * gn * cycles_per_tile
+        issued = total_cycles * 128 * 128
+        occupancy = (lanes_m / min(self.bm, 128)) * (lanes_n / min(self.bn, 128))
+        return min(1.0, useful / issued) * occupancy
+
+
+def choose_block_plan(m: int, k: int, n: int,
+                      vmem_budget: int = 16 * 2 ** 20,
+                      packed_bits: int = 2) -> BlockPlan:
+    """Pick the largest MXU-aligned plan that fits the VMEM budget.
+
+    Preference order: maximize bn and bk (weight-stationary streaming of
+    the packed planes), then bm; all rounded to the 8/128 TPU lane grid
+    when the problem is large enough to allow it.
+    """
+    def align(x: int, q: int) -> int:
+        return max(q, (x // q) * q) if x >= q else x
+
+    best = None
+    for bm in (align(m, 8), min(m, 128), min(m, 256)):
+        for bk in (min(k, 128), min(k, 256), min(k, 512)):
+            for bn in (min(n, 128), min(n, 256), min(n, 512)):
+                plan = BlockPlan(max(1, bm), max(1, bk), max(1, bn))
+                if plan.vmem_bytes(packed_bits) > vmem_budget:
+                    continue
+                score = (plan.mxu_utilization(m, k, n),
+                         plan.bn * plan.bk, plan.bm)
+                if best is None or score > best[0]:
+                    best = (score, plan)
+    assert best is not None, "no feasible block plan"
+    return best[1]
+
+
+# ---------------------------------------------------------------------------
+# qmatmul: tiled x @ Wq
+# ---------------------------------------------------------------------------
+
+def _qmatmul_kernel(x_ref, w_ref, o_ref, *, gk: int):
+    """Grid (gm, gn, gk); the output block is revisited across the k steps
+    (its index map ignores ki), so it doubles as the f32 accumulator —
+    the output tile stays resident in VMEM for the whole contraction."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _fit_divisor(dim: int, want: int) -> int:
+    """Largest block size <= want that divides dim exactly.
+
+    The accumulate-into-output-block pattern requires every grid step to
+    cover a full block: non-dividing tiles would re-accumulate padding at
+    the grid edge. Snapping to a divisor keeps arbitrary BlockPlans safe.
+    """
+    want = max(1, min(want, dim))
+    for d in range(want, 0, -1):
+        if dim % d == 0:
+            return d
+    return 1
+
+
+def qmatmul(x: jnp.ndarray, wq: jnp.ndarray,
+            plan: BlockPlan | None = None) -> jnp.ndarray:
+    """Tiled quantized matmul: x (m, k) @ wq (k, n) -> (m, n), f32.
+
+    ``wq`` carries ±1/0 (times alpha) as f32; numerics must match
+    ``ref.qmatmul_ref`` exactly (same f32 accumulation).
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    if plan is None:
+        plan = choose_block_plan(m, k, n)
+    bm, bk, bn = (_fit_divisor(m, plan.bm), _fit_divisor(k, plan.bk),
+                  _fit_divisor(n, plan.bn))
+    gm, gk, gn = (m // bm, k // bk, n // bn)
+
+    return pl.pallas_call(
+        functools.partial(_qmatmul_kernel, gk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), wq.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# qmatmul_bn: fused BN(x @ Wq; phi, gamma) with precomputed statistics
+# ---------------------------------------------------------------------------
+
+def _qmatmul_bn_kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref,
+                       *, gk: int):
+    """Same contraction grid as _qmatmul_kernel; the BN affine transform is
+    folded into a per-output-column (scale, shift) pair applied at flush
+    time, so the normalization costs one FMA per output element and zero
+    extra HBM traffic for the statistics."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(ki == gk - 1)
+    def _flush():
+        o_ref[...] = o_ref[...] * scale_ref[...] + shift_ref[...]
+
+
+def qmatmul_bn(x: jnp.ndarray, wq: jnp.ndarray, mean: jnp.ndarray,
+               var: jnp.ndarray, phi: jnp.ndarray, gamma: jnp.ndarray,
+               eps: float = 1e-5, plan: BlockPlan | None = None) -> jnp.ndarray:
+    """Fused Eq. 7 hot path: BN(x @ Wq; phi, gamma) with given statistics.
+
+    BN(y) = gamma + phi * (y - mean) / sqrt(var + eps) is refactored to
+    y * scale + shift with scale = phi * rsqrt(var + eps) and
+    shift = gamma - mean * scale — the canonical inference-time BN fold.
+    """
+    m, k = x.shape
+    _, n = wq.shape
+    scale = (phi / jnp.sqrt(var + eps)).astype(jnp.float32)
+    shift = (gamma - mean * scale).astype(jnp.float32)
+    if plan is None:
+        plan = choose_block_plan(m, k, n)
+    bm, bk, bn = (_fit_divisor(m, plan.bm), _fit_divisor(k, plan.bk),
+                  _fit_divisor(n, plan.bn))
+    gm, gk, gn = (m // bm, k // bk, n // bn)
+
+    return pl.pallas_call(
+        functools.partial(_qmatmul_bn_kernel, gk=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ki: (i, ki)),
+            pl.BlockSpec((bk, bn), lambda i, j, ki: (ki, j)),
+            pl.BlockSpec((1, bn), lambda i, j, ki: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, ki: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ki: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), wq.astype(jnp.float32),
+      scale.reshape(1, n), shift.reshape(1, n))
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP wrapper so training graphs can also route through the kernel
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def qmatmul_ste(x: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    """qmatmul with a hand-written VJP (the kernel itself has no autodiff
+    rule).  Gradients are the standard matmul cotangents; combined with the
+    straight-through estimator in ``quantizers.py`` this realizes Eq. 1."""
+    return qmatmul(x, wq)
+
+
+def _qmatmul_ste_fwd(x, wq):
+    return qmatmul(x, wq), (x, wq)
+
+
+def _qmatmul_ste_bwd(res, g):
+    x, wq = res
+    return (jnp.dot(g, wq.T, preferred_element_type=jnp.float32),
+            jnp.dot(x.T, g, preferred_element_type=jnp.float32))
+
+
+qmatmul_ste.defvjp(_qmatmul_ste_fwd, _qmatmul_ste_bwd)

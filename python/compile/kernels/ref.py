@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package is checked against the functions here by
+``python/tests/test_kernels.py`` (assert_allclose + hypothesis sweeps).
+These are the ground truth for L1 numerics; the L2 model calls the same
+math through ``layers.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qmatmul_ref(x: jnp.ndarray, wq: jnp.ndarray) -> jnp.ndarray:
+    """Quantized matmul oracle: x (m, k) @ wq (k, n) -> (m, n) in f32.
+
+    ``wq`` holds the already-quantized weights as f32 values in
+    {-1, 0, +1} scaled by alpha; the kernel must reproduce a plain f32
+    contraction bit-for-bit (same accumulation dtype).
+    """
+    return jnp.dot(x.astype(jnp.float32), wq.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def bn_apply_ref(y: jnp.ndarray, mean: jnp.ndarray, var: jnp.ndarray,
+                 phi: jnp.ndarray, gamma: jnp.ndarray,
+                 eps: float = 1e-5) -> jnp.ndarray:
+    """Batch-norm *apply* oracle (Eq. 3 with precomputed statistics).
+
+    y: (m, n); mean/var/phi/gamma: (n,). The paper's convention: phi is the
+    learned gain, gamma the learned shift (zero for the gate transforms).
+    """
+    inv = phi / jnp.sqrt(var + eps)
+    return gamma + (y - mean) * inv
+
+
+def qmatmul_bn_ref(x, wq, mean, var, phi, gamma, eps: float = 1e-5):
+    """Fused Eq. 7 hot path oracle: BN(x @ Wq; phi, gamma)."""
+    return bn_apply_ref(qmatmul_ref(x, wq), mean, var, phi, gamma, eps)
+
+
+def lstm_cell_ref(xw, hw, b, c_prev,
+                  phi_c=None, gamma_c=None, eps: float = 1e-5):
+    """LSTM cell tail oracle given fused pre-activations.
+
+    xw, hw: (batch, 4*hidden) — the (already batch-normalized) results of
+    the input and recurrent quantized matmuls, gate order [i, f, g, o].
+    b: (4*hidden,) bias. Returns (h, c).
+
+    When phi_c/gamma_c are given, the cell state is batch-normalized
+    before the output tanh (Alg. 1 line 13, the optional BN(c)).
+    """
+    pre = xw + hw + b
+    h4 = pre.shape[-1] // 4
+    i = jnp.reciprocal(1.0 + jnp.exp(-pre[..., 0 * h4:1 * h4]))
+    f = jnp.reciprocal(1.0 + jnp.exp(-pre[..., 1 * h4:2 * h4]))
+    g = jnp.tanh(pre[..., 2 * h4:3 * h4])
+    o = jnp.reciprocal(1.0 + jnp.exp(-pre[..., 3 * h4:4 * h4]))
+    c = f * c_prev + i * g
+    if phi_c is not None:
+        mean = jnp.mean(c, axis=0, keepdims=True)
+        var = jnp.var(c, axis=0, keepdims=True)
+        c_bn = gamma_c + phi_c * (c - mean) / jnp.sqrt(var + eps)
+        h = o * jnp.tanh(c_bn)
+    else:
+        h = o * jnp.tanh(c)
+    return h, c
+
+
+def pack_ternary_ref(wq: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Bit-plane packing oracle for ternary weights.
+
+    wq: (k, n) f32 in {-1, 0, +1}. Returns (sign_plane, mask_plane) as
+    uint8 arrays of shape (ceil(k/8), n): bit b of row r covers wq[8r+b].
+    mask bit = |w|, sign bit = (w > 0). Matches rust `quant::pack`.
+    """
+    k, n = wq.shape
+    kp = (k + 7) // 8 * 8
+    wpad = jnp.pad(wq, ((0, kp - k), (0, 0)))
+    mask = (wpad != 0).astype(jnp.uint8)
+    sign = (wpad > 0).astype(jnp.uint8)
+    shifts = (jnp.arange(kp, dtype=jnp.uint8) % 8)[:, None]
+    rows = jnp.arange(kp) // 8
+
+    def plane(bits):
+        weighted = (bits << shifts).astype(jnp.uint8)
+        out = jnp.zeros(((kp // 8), n), dtype=jnp.uint8)
+        return out.at[rows].add(weighted)
+
+    return plane(sign), plane(mask)

@@ -1,0 +1,102 @@
+"""Shared L2 building blocks: batch normalization (Eq. 3), initializers,
+embeddings, and the softmax cross-entropy head.
+
+Parameter convention: a flat ``dict[str, jnp.ndarray]`` for trainables and
+a separate flat dict for non-trainable state (BN running statistics). The
+AOT boundary flattens both with sorted keys; rust binds by name via
+meta.json.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def glorot_uniform(key, shape):
+    """Glorot & Bengio (2010) uniform init — also defines the paper's
+    fixed quantization scale alpha (the uniform bound)."""
+    fan_in, fan_out = shape[0], shape[-1]
+    limit = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, jnp.float32, -limit, limit)
+
+
+def orthogonal(key, shape, gain: float = 1.0):
+    """Orthogonal init for recurrent matrices (used by the FP baselines)."""
+    n = max(shape)
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    q, _ = jnp.linalg.qr(a)
+    return gain * q[: shape[0], : shape[1]]
+
+
+# ---------------------------------------------------------------------------
+# batch normalization (Eq. 3)
+# ---------------------------------------------------------------------------
+
+def bn_train(x, phi, gamma, eps: float = BN_EPS):
+    """Training-mode BN over the batch axis (axis 0).
+
+    x: (B, N); phi/gamma: (N,). Returns (y, batch_mean, batch_var). The
+    statistics are returned so the caller can fold them into the EMA
+    running state (Alg. 1 forward pass).
+    """
+    mean = jnp.mean(x, axis=0)
+    var = jnp.var(x, axis=0)
+    y = gamma + phi * (x - mean) / jnp.sqrt(var + eps)
+    return y, mean, var
+
+
+def bn_infer(x, phi, gamma, mean, var, eps: float = BN_EPS):
+    """Inference-mode BN with running statistics."""
+    return gamma + phi * (x - mean) / jnp.sqrt(var + eps)
+
+
+def ema_update(running, batch, momentum: float = BN_MOMENTUM):
+    """Exponential moving average for the running statistics."""
+    return momentum * running + (1.0 - momentum) * batch
+
+
+# ---------------------------------------------------------------------------
+# heads
+# ---------------------------------------------------------------------------
+
+def dense(params, prefix, x):
+    """y = x @ W + b."""
+    return x @ params[f"{prefix}/w"] + params[f"{prefix}/b"]
+
+
+def embedding(params, prefix, tokens):
+    """Row lookup; tokens int32 of any shape -> (+emb_dim,)."""
+    return params[f"{prefix}/emb"][tokens]
+
+
+def softmax_xent(logits, targets):
+    """Mean cross-entropy in nats.
+
+    logits: (..., V); targets: int32 (...). BPC = loss / ln 2,
+    perplexity = exp(loss) — computed on the rust side from this scalar.
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(logits, targets):
+    """Mean top-1 accuracy."""
+    return jnp.mean((jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32))
+
+
+def dropout(key, x, rate: float):
+    """Inverted dropout; identity when rate == 0."""
+    if rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)

@@ -1,0 +1,495 @@
+"""L2 model zoo: the paper's BN-LSTM / BN-GRU with learned recurrent
+binary/ternary weights (Eq. 7 / Alg. 1), the vanilla baselines, and the
+Attentive Reader for the CNN question-answering task (§5.4).
+
+Every architecture is a pure function over a flat parameter dict plus a
+flat BN-running-statistics state dict. Weight quantization happens once
+per forward pass (Alg. 1 lines 3-6), then the scan reuses the quantized
+matrices for every timestep — matching the paper and keeping inference
+memory at 1-2 bits/weight.
+
+Gate order for LSTM matrices is [i, f, g, o]; for GRU it is [z, r, n].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import quantizers as Q
+from .kernels import bnlstm_cell as _pallas_cell
+from .kernels import fold_bn
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration for one experiment model."""
+    arch: str = "bnlstm"          # bnlstm | lstm | bngru | gru
+    quantizer: str = "ter"        # see quantizers.REGISTRY
+    vocab: int = 50               # token vocabulary (0 => continuous input)
+    input_dim: int = 0            # continuous input width (seq-MNIST: 1)
+    emb_dim: int = 0              # 0 => one-hot/continuous input, no embedding
+    hidden: int = 96
+    num_layers: int = 1
+    head: str = "lm"              # lm | classifier | attreader
+    num_classes: int = 0          # classifier/attreader output size
+    dropout: float = 0.0          # non-recurrent dropout (Zaremba-style)
+    bn_cell: bool = False         # optional BN(c) (Alg. 1 line 13)
+    use_kernel: bool = False      # route inference through the Pallas cell
+
+    @property
+    def use_bn(self) -> bool:
+        return self.arch in ("bnlstm", "bngru")
+
+    @property
+    def is_gru(self) -> bool:
+        return self.arch in ("bngru", "gru")
+
+    @property
+    def gates(self) -> int:
+        return 3 if self.is_gru else 4
+
+    def layer_input_dim(self, layer: int) -> int:
+        if layer > 0:
+            return self.hidden
+        if self.emb_dim:
+            return self.emb_dim
+        if self.input_dim:
+            return self.input_dim
+        return self.vocab
+
+
+# ---------------------------------------------------------------------------
+# parameter / state construction
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> tuple[dict, dict]:
+    """Build (params, state) for ``cfg``.
+
+    Forget-gate bias starts at 1.0 (standard LSTM practice); BN gains phi
+    start at 0.1 per Cooijmans et al. (2016), which the paper builds on.
+    """
+    params: dict[str, jnp.ndarray] = {}
+    state: dict[str, jnp.ndarray] = {}
+    g = cfg.gates
+    keys = iter(jax.random.split(key, 64))
+
+    for l in range(cfg.num_layers):
+        d = cfg.layer_input_dim(l)
+        h = cfg.hidden
+        p = f"l{l}"
+        params[f"{p}/wx"] = L.glorot_uniform(next(keys), (d, g * h))
+        params[f"{p}/wh"] = L.glorot_uniform(next(keys), (h, g * h))
+        bias = jnp.zeros(g * h)
+        if not cfg.is_gru:
+            bias = bias.at[h:2 * h].set(1.0)  # forget gate
+        params[f"{p}/b"] = bias
+        if cfg.quantizer == "ttq":
+            for mat in ("x", "h"):
+                params[f"{p}/ttq_wp_{mat}"] = jnp.asarray(1.0)
+                params[f"{p}/ttq_wn_{mat}"] = jnp.asarray(1.0)
+        if cfg.use_bn:
+            params[f"{p}/phi_x"] = jnp.full(g * h, 0.1)
+            params[f"{p}/phi_h"] = jnp.full(g * h, 0.1)
+            state[f"{p}/rm_x"] = jnp.zeros(g * h)
+            state[f"{p}/rv_x"] = jnp.ones(g * h)
+            state[f"{p}/rm_h"] = jnp.zeros(g * h)
+            state[f"{p}/rv_h"] = jnp.ones(g * h)
+            if cfg.bn_cell and not cfg.is_gru:
+                params[f"{p}/phi_c"] = jnp.full(h, 0.1)
+                params[f"{p}/gamma_c"] = jnp.zeros(h)
+                state[f"{p}/rm_c"] = jnp.zeros(h)
+                state[f"{p}/rv_c"] = jnp.ones(h)
+
+    if cfg.emb_dim:
+        params["emb/emb"] = 0.1 * jax.random.normal(
+            next(keys), (cfg.vocab, cfg.emb_dim), jnp.float32)
+
+    if cfg.head == "lm":
+        params["head/w"] = L.glorot_uniform(next(keys), (cfg.hidden, cfg.vocab))
+        params["head/b"] = jnp.zeros(cfg.vocab)
+    elif cfg.head == "classifier":
+        params["head/w"] = L.glorot_uniform(next(keys),
+                                            (cfg.hidden, cfg.num_classes))
+        params["head/b"] = jnp.zeros(cfg.num_classes)
+    elif cfg.head == "attreader":
+        h2 = 2 * cfg.hidden
+        params["att/w_ym"] = L.glorot_uniform(next(keys), (h2, h2))
+        params["att/w_um"] = L.glorot_uniform(next(keys), (h2, h2))
+        params["att/w_ms"] = L.glorot_uniform(next(keys), (h2, 1))
+        params["att/w_rg"] = L.glorot_uniform(next(keys), (h2, h2))
+        params["att/w_ug"] = L.glorot_uniform(next(keys), (h2, h2))
+        params["head/w"] = L.glorot_uniform(next(keys), (h2, cfg.num_classes))
+        params["head/b"] = jnp.zeros(cfg.num_classes)
+    else:
+        raise ValueError(f"unknown head {cfg.head}")
+    return params, state
+
+
+def recurrent_weight_names(cfg: ModelConfig) -> list[str]:
+    """The matrices the paper quantizes (and whose bytes every Size column
+    counts): the input and recurrent weights of each RNN layer."""
+    out = []
+    for l in range(cfg.num_layers):
+        out += [f"l{l}/wx", f"l{l}/wh"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# quantization of the recurrent weights (Alg. 1 lines 3-6)
+# ---------------------------------------------------------------------------
+
+def quantize_weights(cfg: ModelConfig, params: dict, key) -> dict:
+    """Sample quantized versions of every recurrent matrix.
+
+    Returns {name: quantized array}; the scale alpha is the per-matrix
+    Glorot bound (the paper's fixed alpha). FP configs return the shadow
+    weights unchanged.
+    """
+    out = {}
+    for i, name in enumerate(recurrent_weight_names(cfg)):
+        w = params[name]
+        sub = jax.random.fold_in(key, i)
+        if cfg.quantizer == "ttq":
+            layer, mat = name.split("/")
+            suffix = mat[1]  # wx -> x, wh -> h
+            out[name] = Q.ttq_apply(w, sub,
+                                    params[f"{layer}/ttq_wp_{suffix}"],
+                                    params[f"{layer}/ttq_wn_{suffix}"])
+        else:
+            alpha = Q.glorot_alpha(w.shape[0], w.shape[1])
+            qfn = Q.get(cfg.quantizer, alpha)
+            out[name] = qfn(w, sub)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# recurrent cores
+# ---------------------------------------------------------------------------
+
+def _input_preact(cfg, params, wq, layer, xs):
+    """xw for all timesteps at once.
+
+    xs is int32 tokens (T, B) when this layer sits on a one-hot input, else
+    f32 (T, B, D). The token path gathers rows of the quantized matrix —
+    numerically identical to the one-hot matmul, and exactly what the
+    paper's accelerator does with its weight SRAM addressing.
+    """
+    wx_q = wq[f"l{layer}/wx"]
+    if xs.dtype in (jnp.int32, jnp.int64):
+        return wx_q[xs]
+    return xs @ wx_q
+
+
+def _bn_seq_train(seq, phi):
+    """Vectorized per-timestep training BN for a (T, B, N) tensor.
+
+    Returns (normalized, mean-of-means, mean-of-vars) — the per-step batch
+    statistics averaged over T for the EMA state update.
+    """
+    mean = jnp.mean(seq, axis=1, keepdims=True)
+    var = jnp.var(seq, axis=1, keepdims=True)
+    y = phi * (seq - mean) / jnp.sqrt(var + L.BN_EPS)
+    return y, jnp.mean(mean[:, 0, :], axis=0), jnp.mean(var[:, 0, :], axis=0)
+
+
+def lstm_layer(cfg, params, state, wq, layer, xs, h0, c0, train):
+    """One (BN-)LSTM layer over a full sequence.
+
+    xs: tokens (T, B) or features (T, B, D). Returns
+    (hs (T,B,H), (h_T, c_T), state_updates dict, gate_trace dict).
+    gate_trace carries per-step gate activations for the Appendix-A
+    figures; entries are (T, B, H) tensors.
+    """
+    p = f"l{layer}"
+    h = cfg.hidden
+    wh_q = wq[f"{p}/wh"]
+    b = params[f"{p}/b"]
+    xw = _input_preact(cfg, params, wq, layer, xs)  # (T, B, 4H)
+
+    updates: dict[str, jnp.ndarray] = {}
+    if cfg.use_bn:
+        if train:
+            xw_n, mx, vx = _bn_seq_train(xw, params[f"{p}/phi_x"])
+            updates[f"{p}/rm_x"] = L.ema_update(state[f"{p}/rm_x"], mx)
+            updates[f"{p}/rv_x"] = L.ema_update(state[f"{p}/rv_x"], vx)
+        else:
+            xw_n = L.bn_infer(xw, params[f"{p}/phi_x"], 0.0,
+                              state[f"{p}/rm_x"], state[f"{p}/rv_x"])
+    else:
+        xw_n = xw
+
+    phi_h = params.get(f"{p}/phi_h")
+    phi_c = params.get(f"{p}/phi_c")
+    gamma_c = params.get(f"{p}/gamma_c")
+
+    def step(carry, xw_t):
+        hprev, cprev = carry
+        hw = hprev @ wh_q
+        if cfg.use_bn:
+            if train:
+                hw_n, mh, vh = L.bn_train(hw, phi_h, 0.0)
+            else:
+                hw_n = L.bn_infer(hw, phi_h, 0.0,
+                                  state[f"{p}/rm_h"], state[f"{p}/rv_h"])
+                mh = vh = jnp.zeros(hw.shape[-1])
+        else:
+            hw_n = hw
+            mh = vh = jnp.zeros(hw.shape[-1])
+        pre = xw_t + hw_n + b
+        i = jax.nn.sigmoid(pre[:, 0 * h:1 * h])
+        f = jax.nn.sigmoid(pre[:, 1 * h:2 * h])
+        g = jnp.tanh(pre[:, 2 * h:3 * h])
+        o = jax.nn.sigmoid(pre[:, 3 * h:4 * h])
+        c = f * cprev + i * g
+        if phi_c is not None:
+            if train:
+                c_n, mc, vc = L.bn_train(c, phi_c, gamma_c)
+            else:
+                c_n = L.bn_infer(c, phi_c, gamma_c,
+                                 state[f"{p}/rm_c"], state[f"{p}/rv_c"])
+                mc = vc = jnp.zeros(h)
+        else:
+            c_n = c
+            mc = vc = jnp.zeros(h)
+        hnew = o * jnp.tanh(c_n)
+        ip = pre[:, 0 * h:1 * h]
+        return (hnew, c), (hnew, (mh, vh, mc, vc), (i, f, o, g, ip))
+
+    (hT, cT), (hs, stats, gates) = jax.lax.scan(step, (h0, c0), xw_n)
+
+    if cfg.use_bn and train:
+        mh, vh, mc, vc = (jnp.mean(s, axis=0) for s in stats)
+        updates[f"{p}/rm_h"] = L.ema_update(state[f"{p}/rm_h"], mh)
+        updates[f"{p}/rv_h"] = L.ema_update(state[f"{p}/rv_h"], vh)
+        if phi_c is not None:
+            updates[f"{p}/rm_c"] = L.ema_update(state[f"{p}/rm_c"], mc)
+            updates[f"{p}/rv_c"] = L.ema_update(state[f"{p}/rv_c"], vc)
+
+    i, f, o, g, ip = gates
+    trace = {"i": i, "f": f, "o": o, "g": g, "i_pre": ip, "h": hs}
+    return hs, (hT, cT), updates, trace
+
+
+def gru_layer(cfg, params, state, wq, layer, xs, h0, train):
+    """One (BN-)GRU layer over a full sequence. Gate order [z, r, n]."""
+    p = f"l{layer}"
+    h = cfg.hidden
+    wh_q = wq[f"{p}/wh"]
+    b = params[f"{p}/b"]
+    xw = _input_preact(cfg, params, wq, layer, xs)  # (T, B, 3H)
+
+    updates: dict[str, jnp.ndarray] = {}
+    if cfg.use_bn:
+        if train:
+            xw_n, mx, vx = _bn_seq_train(xw, params[f"{p}/phi_x"])
+            updates[f"{p}/rm_x"] = L.ema_update(state[f"{p}/rm_x"], mx)
+            updates[f"{p}/rv_x"] = L.ema_update(state[f"{p}/rv_x"], vx)
+        else:
+            xw_n = L.bn_infer(xw, params[f"{p}/phi_x"], 0.0,
+                              state[f"{p}/rm_x"], state[f"{p}/rv_x"])
+    else:
+        xw_n = xw
+
+    phi_h = params.get(f"{p}/phi_h")
+
+    def step(carry, xw_t):
+        hprev = carry
+        hw = hprev @ wh_q
+        if cfg.use_bn:
+            if train:
+                hw_n, mh, vh = L.bn_train(hw, phi_h, 0.0)
+            else:
+                hw_n = L.bn_infer(hw, phi_h, 0.0,
+                                  state[f"{p}/rm_h"], state[f"{p}/rv_h"])
+                mh = vh = jnp.zeros(hw.shape[-1])
+        else:
+            hw_n = hw
+            mh = vh = jnp.zeros(hw.shape[-1])
+        z = jax.nn.sigmoid(xw_t[:, 0 * h:1 * h] + hw_n[:, 0 * h:1 * h]
+                           + b[0 * h:1 * h])
+        r = jax.nn.sigmoid(xw_t[:, 1 * h:2 * h] + hw_n[:, 1 * h:2 * h]
+                           + b[1 * h:2 * h])
+        n = jnp.tanh(xw_t[:, 2 * h:3 * h] + r * hw_n[:, 2 * h:3 * h]
+                     + b[2 * h:3 * h])
+        hnew = (1.0 - z) * hprev + z * n
+        return hnew, (hnew, (mh, vh))
+
+    hT, (hs, stats) = jax.lax.scan(step, h0, xw_n)
+    if cfg.use_bn and train:
+        mh, vh = (jnp.mean(s, axis=0) for s in stats)
+        updates[f"{p}/rm_h"] = L.ema_update(state[f"{p}/rm_h"], mh)
+        updates[f"{p}/rv_h"] = L.ema_update(state[f"{p}/rv_h"], vh)
+    return hs, hT, updates, {}
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+def rnn_forward(cfg: ModelConfig, params, state, xs, key, train,
+                h0=None, c0=None, collect_gates: bool = False):
+    """Stacked RNN over a sequence.
+
+    xs: int32 tokens (T, B) or f32 features (T, B, D).
+    Returns (hs_top (T,B,H), finals, state_updates, gate_trace).
+    finals: list of (h, c) per layer (LSTM) or h per layer (GRU).
+    """
+    kq, kdrop = jax.random.split(jax.random.fold_in(key, 0x5157))
+    wq = quantize_weights(cfg, params, kq)
+    batch = xs.shape[1]
+    cur = xs
+    if cfg.emb_dim:
+        cur = L.embedding(params, "emb", cur)
+    if train and cfg.dropout > 0 and cfg.emb_dim:
+        cur = L.dropout(jax.random.fold_in(kdrop, 99), cur, cfg.dropout)
+
+    updates: dict[str, jnp.ndarray] = {}
+    finals = []
+    trace = {}
+    for l in range(cfg.num_layers):
+        if cfg.is_gru:
+            hl = h0[l] if h0 is not None else jnp.zeros((batch, cfg.hidden))
+            hs, hT, upd, tr = gru_layer(cfg, params, state, wq, l, cur,
+                                        hl, train)
+            finals.append(hT)
+        else:
+            hl = h0[l] if h0 is not None else jnp.zeros((batch, cfg.hidden))
+            cl = c0[l] if c0 is not None else jnp.zeros((batch, cfg.hidden))
+            hs, (hT, cT), upd, tr = lstm_layer(cfg, params, state, wq, l,
+                                               cur, hl, cl, train)
+            finals.append((hT, cT))
+        updates.update(upd)
+        if collect_gates and l == 0:
+            trace = tr
+        cur = hs
+        if train and cfg.dropout > 0:
+            cur = L.dropout(jax.random.fold_in(kdrop, l), cur, cfg.dropout)
+    return cur, finals, updates, trace
+
+
+def lm_logits(cfg, params, hs):
+    """(T, B, H) -> (T, B, V)."""
+    return hs @ params["head/w"] + params["head/b"]
+
+
+def classifier_logits(cfg, params, h_last):
+    """(B, H) -> (B, C)."""
+    return h_last @ params["head/w"] + params["head/b"]
+
+
+# ---------------------------------------------------------------------------
+# Attentive Reader (Hermann et al. 2015) for the CNN-QA task (§5.4)
+# ---------------------------------------------------------------------------
+
+def _bilstm(cfg, params, state, xs, key, train):
+    """Bidirectional single-layer LSTM; returns per-token (T, B, 2H) and
+    the (fwd-last ++ bwd-first) summary (B, 2H).
+
+    Uses layer 0 for the forward direction and layer 1 for the backward
+    direction (two independent parameter sets, as in the paper's
+    two-bidirectional-LSTM reader).
+    """
+    sub = dataclasses.replace(cfg, num_layers=1)
+    kf, kb = jax.random.split(key)
+    # forward direction: layer-0 params
+    hs_f, fin_f, upd_f, _ = rnn_forward(
+        sub, params, state, xs, kf, train)
+    # backward direction: reverse time, run layer-0 of the 'bwd/' params
+    xs_rev = jnp.flip(xs, axis=0)
+    bwd_params = {k[4:]: v for k, v in params.items() if k.startswith("bwd/")}
+    bwd_state = {k[4:]: v for k, v in state.items() if k.startswith("bwd/")}
+    hs_b, fin_b, upd_b, _ = rnn_forward(
+        sub, bwd_params, bwd_state, xs_rev, kb, train)
+    hs_b = jnp.flip(hs_b, axis=0)
+    ys = jnp.concatenate([hs_f, hs_b], axis=-1)
+    summary = jnp.concatenate([fin_f[0][0], fin_b[0][0]], axis=-1)
+    upd = dict(upd_f)
+    upd.update({f"bwd/{k}": v for k, v in upd_b.items()})
+    return ys, summary, upd
+
+
+def attreader_forward(cfg: ModelConfig, params, state, doc, query, key,
+                      train):
+    """Attentive Reader: encode doc + query with bidirectional (BN-)LSTMs,
+    attend, and classify the answer entity.
+
+    doc: (Td, B) int32; query: (Tq, B) int32. Returns (logits (B, C),
+    state_updates).
+    """
+    kd, kq2 = jax.random.split(jax.random.fold_in(key, 0xA77))
+    ys, _, upd_d = _bilstm(cfg, params, state, doc, kd, train)      # (Td,B,2H)
+    _, u, upd_q = _bilstm(cfg, {k[6:]: v for k, v in params.items()
+                                if k.startswith("query/")},
+                          {k[6:]: v for k, v in state.items()
+                           if k.startswith("query/")},
+                          query, kq2, train)
+    m = jnp.tanh(ys @ params["att/w_ym"] + (u @ params["att/w_um"])[None])
+    s = jax.nn.softmax((m @ params["att/w_ms"])[..., 0], axis=0)    # (Td, B)
+    r = jnp.einsum("tb,tbh->bh", s, ys)                             # (B, 2H)
+    g = jnp.tanh(r @ params["att/w_rg"] + u @ params["att/w_ug"])
+    logits = g @ params["head/w"] + params["head/b"]
+    upd = dict(upd_d)
+    upd.update({f"query/{k}": v for k, v in upd_q.items()})
+    return logits, upd
+
+
+def init_attreader(cfg: ModelConfig, key) -> tuple[dict, dict]:
+    """Params/state for the attentive reader: doc fwd ('l0/...'), doc bwd
+    ('bwd/l0/...'), query fwd ('query/l0/...'), query bwd
+    ('query/bwd/l0/...'), attention + head."""
+    sub = dataclasses.replace(cfg, num_layers=1, head="attreader")
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    core, st = init_params(sub, k1)
+    params = {k: v for k, v in core.items() if k.startswith("l0/")}
+    state = dict(st)
+    bwd_p, bwd_s = init_params(dataclasses.replace(sub, head="lm",
+                                                   vocab=cfg.vocab), k2)
+    params.update({f"bwd/{k}": v for k, v in bwd_p.items()
+                   if k.startswith("l0/")})
+    state.update({f"bwd/{k}": v for k, v in bwd_s.items()})
+    qf_p, qf_s = init_params(dataclasses.replace(sub, head="lm"), k3)
+    params.update({f"query/{k}": v for k, v in qf_p.items()
+                   if k.startswith("l0/")})
+    state.update({f"query/{k}": v for k, v in qf_s.items()})
+    qb_p, qb_s = init_params(dataclasses.replace(sub, head="lm"), k4)
+    params.update({f"query/bwd/{k}": v for k, v in qb_p.items()
+                   if k.startswith("l0/")})
+    state.update({f"query/bwd/{k}": v for k, v in qb_s.items()})
+    params.update({k: v for k, v in core.items()
+                   if k.startswith(("att/", "head/"))})
+    if cfg.emb_dim:
+        params["emb/emb"] = 0.1 * jax.random.normal(
+            k5, (cfg.vocab, cfg.emb_dim), jnp.float32)
+        params["query/emb/emb"] = params["emb/emb"]
+        params["bwd/emb/emb"] = params["emb/emb"]
+        params["query/bwd/emb/emb"] = params["emb/emb"]
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# Pallas-kernel inference cell (deployment path)
+# ---------------------------------------------------------------------------
+
+def kernel_infer_step(cfg: ModelConfig, params, state, wq, x_t, h, c):
+    """One deployment-path LSTM step through the fused Pallas cell.
+
+    x_t: one-hot/continuous f32 (B, D). Only valid for single-layer
+    bnlstm configs (the serving configuration); BN statistics are the
+    folded running estimates.
+    """
+    assert cfg.num_layers == 1 and not cfg.is_gru
+    p = "l0"
+    phi_x = params[f"{p}/phi_x"]
+    phi_h = params[f"{p}/phi_h"]
+    sx, tx = fold_bn(state[f"{p}/rm_x"], state[f"{p}/rv_x"], phi_x,
+                     jnp.zeros_like(phi_x))
+    sh, th = fold_bn(state[f"{p}/rm_h"], state[f"{p}/rv_h"], phi_h,
+                     jnp.zeros_like(phi_h))
+    # Pallas cell uses gate order [i, f, g, o] — same as ours.
+    return _pallas_cell(x_t, h, c, wq[f"{p}/wx"], wq[f"{p}/wh"],
+                        sx, tx, sh, th, params[f"{p}/b"])

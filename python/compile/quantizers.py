@@ -1,0 +1,286 @@
+"""Weight quantizers: the paper's stochastic binary/ternary scheme (Eq.
+4–6) and every baseline it is compared against in Tables 1–6.
+
+All quantizers share the straight-through-estimator contract of Eq. 1:
+the forward pass emits quantized weights, the backward pass is identity
+w.r.t. the full-precision shadow weights. ``ste`` implements that contract
+once; each quantizer body is a plain (non-differentiable-ok) function.
+
+Quantizers that need randomness take a PRNG key; deterministic ones ignore
+it. All return weights in the *scaled* domain (already multiplied by their
+scale), so the model code can use them verbatim in the matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def ste(fn: Callable) -> Callable:
+    """Wrap ``fn(w, key) -> wq`` with an identity VJP w.r.t. ``w`` (Eq. 1).
+
+    The key (and any other operands) get zero cotangents.
+    """
+    @jax.custom_vjp
+    def wrapped(w, key):
+        return fn(w, key)
+
+    def fwd(w, key):
+        return fn(w, key), None
+
+    def bwd(_, g):
+        return (g, None)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# the paper's quantizers (Eq. 4-6)
+# ---------------------------------------------------------------------------
+
+def _ours_binary_raw(w: jnp.ndarray, key, *, alpha: float) -> jnp.ndarray:
+    """Eq. 4 + 6: stochastic binarization with fixed Glorot scale alpha.
+
+    wn = clip(w/alpha, -1, 1); P(+1) = (wn+1)/2; wb in {-alpha, +alpha}.
+    """
+    wn = jnp.clip(w / alpha, -1.0, 1.0)
+    p1 = (wn + 1.0) * 0.5
+    u = jax.random.uniform(key, w.shape)
+    wb = jnp.where(u < p1, 1.0, -1.0)
+    return alpha * wb
+
+
+def _ours_ternary_raw(w: jnp.ndarray, key, *, alpha: float) -> jnp.ndarray:
+    """Eq. 5 + 6: stochastic ternarization with fixed Glorot scale alpha.
+
+    P(nonzero) = |wn|; value = sign(w). wt in {-alpha, 0, +alpha}.
+    """
+    wn = jnp.clip(w / alpha, -1.0, 1.0)
+    p_nz = jnp.abs(wn)
+    u = jax.random.uniform(key, w.shape)
+    wt = jnp.where(u < p_nz, jnp.sign(wn), 0.0)
+    return alpha * wt
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def _binaryconnect_raw(w: jnp.ndarray, key, *, alpha: float) -> jnp.ndarray:
+    """BinaryConnect (deterministic): alpha * sign(w).
+
+    The paper's failing baseline (Table 1/3/4/5, Appendix A): no BN, no
+    probability reshaping — thresholding only.
+    """
+    del key
+    return alpha * jnp.where(w >= 0, 1.0, -1.0)
+
+
+def _binaryconnect_stoch_raw(w, key, *, alpha: float):
+    """BinaryConnect (stochastic): P(+1) = hard_sigmoid(w/alpha)."""
+    p1 = jnp.clip((w / alpha + 1.0) * 0.5, 0.0, 1.0)
+    u = jax.random.uniform(key, w.shape)
+    return alpha * jnp.where(u < p1, 1.0, -1.0)
+
+
+def _lab_raw(w: jnp.ndarray, key, **_) -> jnp.ndarray:
+    """Loss-aware binarization (Hou et al. 2016), diagonal-curvature
+    closed form. With the diagonal Adam second moments approximated as
+    uniform, the proximal step reduces to the optimal L2 binarization:
+    alpha = E|w| per output column, b = sign(w). (Substitution documented
+    in DESIGN.md §3.)"""
+    del key
+    alpha = jnp.mean(jnp.abs(w), axis=0, keepdims=True)
+    return alpha * jnp.where(w >= 0, 1.0, -1.0)
+
+
+def _twn_raw(w: jnp.ndarray, key, **_) -> jnp.ndarray:
+    """Ternary Weight Networks (Li & Liu 2016): threshold 0.7*E|w|,
+    scale = mean |w| over the surviving entries (per matrix)."""
+    del key
+    delta = 0.7 * jnp.mean(jnp.abs(w))
+    mask = (jnp.abs(w) > delta).astype(w.dtype)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    alpha = (jnp.abs(w) * mask).sum() / denom
+    return alpha * mask * jnp.sign(w)
+
+
+def _ttq_raw(w: jnp.ndarray, key, *, wp: jnp.ndarray, wn: jnp.ndarray,
+             threshold_frac: float = 0.05) -> jnp.ndarray:
+    """Trained Ternary Quantization (Zhu et al. 2016): learned asymmetric
+    scales wp (positive side) and wn (negative side); threshold is a fixed
+    fraction of max|w|."""
+    del key
+    delta = threshold_frac * jnp.max(jnp.abs(w))
+    pos = (w > delta).astype(w.dtype)
+    neg = (w < -delta).astype(w.dtype)
+    return wp * pos - wn * neg
+
+
+def _dorefa_raw(w: jnp.ndarray, key, *, k: int) -> jnp.ndarray:
+    """DoReFa-Net k-bit weights (Zhou et al. 2016):
+    w_q = 2*quantize_k(tanh(w)/(2 max|tanh(w)|) + 1/2) - 1."""
+    del key
+    t = jnp.tanh(w)
+    x = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
+    levels = (1 << k) - 1
+    q = jnp.round(x * levels) / levels
+    return 2.0 * q - 1.0
+
+
+def _uniform_als_raw(w: jnp.ndarray, key, *, k: int,
+                     iters: int = 3) -> jnp.ndarray:
+    """LAQ-style k-bit symmetric uniform quantization with the scale fit
+    by alternating least squares (per matrix):
+
+        Q = clip(round(w/s), -m, m),  s <- <w,Q>/<Q,Q>,  m = 2^(k-1)-1.
+
+    k=2 gives the ternary LAQ row of Table 1. This is the curvature-free
+    relaxation of Hou & Kwok (2018); see DESIGN.md §3.
+    """
+    del key
+    m = (1 << (k - 1)) - 1
+    s = jnp.mean(jnp.abs(w)) / max(m, 1) * 2.0 + 1e-12
+    for _ in range(iters):
+        q = jnp.clip(jnp.round(w / s), -m, m)
+        s = (w * q).sum() / jnp.maximum((q * q).sum(), 1e-6)
+    q = jnp.clip(jnp.round(w / s), -m, m)
+    return s * q
+
+
+def _alternating_raw(w: jnp.ndarray, key, *, k: int,
+                     refine_iters: int = 2) -> jnp.ndarray:
+    """Alternating multi-bit binarization (Xu et al. 2018 / Guo et al.
+    2017): w ~ sum_z alpha_z * b_z, built greedily on the residual and
+    refined by alternating least squares over the k binary codes.
+
+    Costs k binary planes (k x memory, k x ops — reflected in the
+    Operations column of Tables 3/4).
+    """
+    del key
+    planes = []
+    r = w
+    for _ in range(k):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.mean(jnp.abs(r))
+        planes.append([a, b])
+        r = r - a * b
+    for _ in range(refine_iters):
+        for z in range(k):
+            others = sum(a * b for zz, (a, b) in enumerate(planes) if zz != z)
+            rz = w - others
+            b = jnp.where(rz >= 0, 1.0, -1.0)
+            a = jnp.mean(jnp.abs(rz))
+            planes[z] = [a, b]
+    return sum(a * b for a, b in planes)
+
+
+def _identity_raw(w: jnp.ndarray, key, **_) -> jnp.ndarray:
+    """Full-precision passthrough (the baseline rows)."""
+    del key
+    return w
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+#: quantizer name -> (factory(alpha) -> fn(w, key) -> wq, bits-per-weight)
+#: ``bits`` drives the Size columns (quant::memory on the rust side uses
+#: the same table; keep in sync with rust/src/quant/memory.rs).
+REGISTRY: dict[str, tuple[Callable, float]] = {}
+
+
+def _register(name: str, bits: float, raw_fn: Callable, **fixed):
+    needs_alpha = "alpha" in raw_fn.__code__.co_varnames
+
+    def factory(alpha: float) -> Callable:
+        kwargs = dict(fixed)
+        if needs_alpha:
+            kwargs["alpha"] = alpha
+        return ste(functools.partial(raw_fn, **kwargs))
+
+    REGISTRY[name] = (factory, bits)
+
+
+_register("fp", 32.0, _identity_raw)
+_register("bin", 1.0, _ours_binary_raw)
+_register("ter", 2.0, _ours_ternary_raw)
+_register("bc", 1.0, _binaryconnect_raw)
+_register("bc_stoch", 1.0, _binaryconnect_stoch_raw)
+_register("lab", 1.0, _lab_raw)
+_register("twn", 2.0, _twn_raw)
+# TTQ's scales are trained parameters — the model binds them via ttq();
+# the registry entry only carries the bit width for the Size columns.
+REGISTRY["ttq"] = (None, 2.0)
+_register("dorefa2", 2.0, _dorefa_raw, k=2)
+_register("dorefa3", 3.0, _dorefa_raw, k=3)
+_register("dorefa4", 4.0, _dorefa_raw, k=4)
+_register("laq2", 2.0, _uniform_als_raw, k=2)
+_register("laq3", 3.0, _uniform_als_raw, k=3)
+_register("laq4", 4.0, _uniform_als_raw, k=4)
+_register("alt1", 1.0, _alternating_raw, k=1)
+_register("alt2", 2.0, _alternating_raw, k=2)
+_register("alt3", 3.0, _alternating_raw, k=3)
+_register("alt4", 4.0, _alternating_raw, k=4)
+
+
+def get(name: str, alpha: float) -> Callable:
+    """Build quantizer ``name`` with Glorot scale ``alpha``.
+
+    Returns ``fn(w, key) -> wq`` with STE backward. TTQ is special-cased
+    in the model (its scales are trained parameters).
+    """
+    factory, _bits = REGISTRY[name]
+    return factory(alpha)
+
+
+def bits(name: str) -> float:
+    """Bits per weight for the Size/bandwidth columns."""
+    return REGISTRY[name][1]
+
+
+@jax.custom_vjp
+def ttq_apply(w, key, wp, wn):
+    """TTQ forward: learned asymmetric scales (Zhu et al. 2016).
+
+    wp/wn are *operands* (not closure captures) so they are first-class
+    jit parameters and receive their published gradients:
+    dL/dwp = sum over positive-bucket cotangents, dL/dwn = -sum over the
+    negative bucket; dL/dw is the bucket-scaled STE.
+    """
+    del key
+    return _ttq_raw(w, None, wp=wp, wn=wn)
+
+
+def _ttq_fwd(w, key, wp, wn):
+    return ttq_apply(w, key, wp, wn), (w, wp, wn)
+
+
+def _ttq_bwd(res, g):
+    w, wp, wn = res
+    delta = 0.05 * jnp.max(jnp.abs(w))
+    pos = (w > delta).astype(w.dtype)
+    neg = (w < -delta).astype(w.dtype)
+    mid = 1.0 - pos - neg
+    gw = g * (wp * pos + wn * neg + mid)
+    return gw, None, (g * pos).sum(), -(g * neg).sum()
+
+
+ttq_apply.defvjp(_ttq_fwd, _ttq_bwd)
+
+
+def glorot_alpha(fan_in: int, fan_out: int) -> float:
+    """The paper's fixed scale: the Glorot-uniform bound
+    sqrt(6/(fan_in+fan_out)) (Glorot & Bengio 2010)."""
+    import math
+    return math.sqrt(6.0 / (fan_in + fan_out))
+
+
+#: names whose runtime representation multiplies ops by k (Tables 3/4).
+OPS_MULTIPLIER = {"alt1": 1, "alt2": 2, "alt3": 3, "alt4": 4}

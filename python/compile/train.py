@@ -1,0 +1,260 @@
+"""Training/eval/inference step builders (the functions AOT-lowered to
+HLO artifacts).
+
+Every step is a pure function over flat, name-sorted parameter / state /
+optimizer dictionaries so the rust runtime can bind inputs and outputs by
+position using the ordering recorded in meta.json. The learning rate and
+PRNG seed are runtime *inputs* (scalars): rust owns the LR schedule (the
+word-PTB divide-by-4-on-plateau rule lives in the coordinator) and the
+stochastic-quantization sampling seed.
+
+Weight updates follow Alg. 1: gradients are taken w.r.t. the quantized
+weights and applied (STE) to the full-precision shadow weights, which are
+then clipped to [-alpha, alpha] to keep the Bernoulli probabilities of
+Eq. 4/5 well-defined.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import model as M
+from . import quantizers as Q
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adam"       # adam | sgd
+    grad_clip: float = 0.0        # global-norm clip (0 = off); word-PTB: 0.25
+    weight_clip: bool = True      # clip shadow weights to [-alpha, alpha]
+    seq_len: int = 50
+    batch: int = 32
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# optimizers (flat-dict native — no optax offline)
+# ---------------------------------------------------------------------------
+
+def adam_init(params: dict) -> dict:
+    opt = {f"m/{k}": jnp.zeros_like(v) for k, v in params.items()}
+    opt.update({f"v/{k}": jnp.zeros_like(v) for k, v in params.items()})
+    opt["t"] = jnp.zeros((), jnp.float32)
+    return opt
+
+
+def adam_update(tc: TrainConfig, params, grads, opt, lr):
+    t = opt["t"] + 1.0
+    out_p, out_o = {}, {"t": t}
+    bc1 = 1.0 - tc.adam_b1 ** t
+    bc2 = 1.0 - tc.adam_b2 ** t
+    for k, g in grads.items():
+        m = tc.adam_b1 * opt[f"m/{k}"] + (1.0 - tc.adam_b1) * g
+        v = tc.adam_b2 * opt[f"v/{k}"] + (1.0 - tc.adam_b2) * g * g
+        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + tc.adam_eps)
+        out_p[k] = params[k] - step
+        out_o[f"m/{k}"] = m
+        out_o[f"v/{k}"] = v
+    return out_p, out_o
+
+
+def sgd_init(params: dict) -> dict:
+    return {"t": jnp.zeros((), jnp.float32)}
+
+
+def sgd_update(tc: TrainConfig, params, grads, opt, lr):
+    out_p = {k: params[k] - lr * g for k, g in grads.items()}
+    return out_p, {"t": opt["t"] + 1.0}
+
+
+def clip_global_norm(grads: dict, max_norm: float) -> dict:
+    total = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+    scale = jnp.minimum(1.0, max_norm / (total + 1e-12))
+    return {k: g * scale for k, g in grads.items()}
+
+
+def clip_shadow_weights(cfg: M.ModelConfig, params: dict) -> dict:
+    """Clip recurrent shadow weights to [-alpha, alpha] (keeps Eq. 4/5
+    probabilities in [0, 1]). FP configs are left untouched."""
+    if cfg.quantizer == "fp":
+        return params
+    out = dict(params)
+    for name in M.recurrent_weight_names(cfg):
+        w = params[name]
+        a = Q.glorot_alpha(w.shape[0], w.shape[1])
+        out[name] = jnp.clip(w, -a, a)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg, params, state, xs, ys, key, train):
+    """Char/word LM loss (mean CE in nats) + state updates."""
+    hs, _, upd, _ = M.rnn_forward(cfg, params, state, xs, key, train)
+    logits = M.lm_logits(cfg, params, hs)
+    return L.softmax_xent(logits, ys), upd
+
+
+def classifier_loss(cfg, params, state, xs, ys, key, train):
+    """Sequence classification (seq-MNIST): logits from the final hidden
+    state. xs: (T, B, D) f32; ys: (B,) int32."""
+    hs, _, upd, _ = M.rnn_forward(cfg, params, state, xs, key, train)
+    logits = M.classifier_logits(cfg, params, hs[-1])
+    loss = L.softmax_xent(logits, ys)
+    acc = L.accuracy(logits, ys)
+    return loss, (upd, acc)
+
+
+def attreader_loss(cfg, params, state, doc, query, ys, key, train):
+    logits, upd = M.attreader_forward(cfg, params, state, doc, query, key,
+                                      train)
+    return L.softmax_xent(logits, ys), (upd, L.accuracy(logits, ys))
+
+
+# ---------------------------------------------------------------------------
+# step builders — each returns a pure fn ready for jax.jit(...).lower(...)
+# ---------------------------------------------------------------------------
+
+def _merge_state(state: dict, upd: dict) -> dict:
+    out = dict(state)
+    out.update(upd)
+    return out
+
+
+def build_train_step(cfg: M.ModelConfig, tc: TrainConfig) -> Callable:
+    """(params, state, opt, x, y, seed, lr) -> (params, state, opt, loss).
+
+    x: int32 (T, B) tokens for LM heads, f32 (T, B, D) for classifier.
+    y: int32 (T, B) for LM, (B,) for classifier.
+    """
+    update = adam_update if tc.optimizer == "adam" else sgd_update
+
+    def step(params, state, opt, x, y, seed, lr):
+        key = jax.random.PRNGKey(seed)
+
+        def lossfn(p):
+            if cfg.head == "lm":
+                loss, upd = lm_loss(cfg, p, state, x, y, key, True)
+            else:
+                loss, (upd, _acc) = classifier_loss(cfg, p, state, x, y,
+                                                    key, True)
+            return loss, upd
+
+        (loss, upd), grads = jax.value_and_grad(lossfn, has_aux=True)(params)
+        if tc.grad_clip > 0:
+            grads = clip_global_norm(grads, tc.grad_clip)
+        new_params, new_opt = update(tc, params, grads, opt, lr)
+        if tc.weight_clip:
+            new_params = clip_shadow_weights(cfg, new_params)
+        return new_params, _merge_state(state, upd), new_opt, loss
+
+    return step
+
+
+def build_eval_step(cfg: M.ModelConfig) -> Callable:
+    """(params, state, x, y, seed) -> loss (mean CE nats).
+
+    Inference mode: running BN statistics, freshly sampled stochastic
+    binary/ternary weights (the deployment regime of §5.5 / Fig. 1b).
+    """
+    def step(params, state, x, y, seed):
+        key = jax.random.PRNGKey(seed)
+        if cfg.head == "lm":
+            loss, _ = lm_loss(cfg, params, state, x, y, key, False)
+            return loss
+        loss, (_, acc) = classifier_loss(cfg, params, state, x, y, key,
+                                         False)
+        return loss, acc
+
+    return step
+
+
+def build_attreader_train_step(cfg: M.ModelConfig, tc: TrainConfig):
+    """(params, state, opt, doc, query, y, seed, lr) ->
+    (params, state, opt, loss, acc)."""
+    update = adam_update if tc.optimizer == "adam" else sgd_update
+
+    def step(params, state, opt, doc, query, y, seed, lr):
+        key = jax.random.PRNGKey(seed)
+
+        def lossfn(p):
+            loss, (upd, acc) = attreader_loss(cfg, p, state, doc, query, y,
+                                              key, True)
+            return loss, (upd, acc)
+
+        (loss, (upd, acc)), grads = jax.value_and_grad(
+            lossfn, has_aux=True)(params)
+        if tc.grad_clip > 0:
+            grads = clip_global_norm(grads, tc.grad_clip)
+        new_params, new_opt = update(tc, params, grads, opt, lr)
+        if tc.weight_clip:
+            new_params = clip_shadow_weights(cfg, new_params)
+        return new_params, _merge_state(state, upd), new_opt, loss, acc
+
+    return step
+
+
+def build_attreader_eval_step(cfg: M.ModelConfig):
+    def step(params, state, doc, query, y, seed):
+        key = jax.random.PRNGKey(seed)
+        loss, (_, acc) = attreader_loss(cfg, params, state, doc, query, y,
+                                        key, False)
+        return loss, acc
+
+    return step
+
+
+def build_infer_step(cfg: M.ModelConfig) -> Callable:
+    """Single-timestep serving step through the fused Pallas cell:
+
+        (params, state, x_onehot, h, c, seed) -> (logits, h', c')
+
+    Weights are stochastically quantized per call (sampled deployment
+    weights); BN uses folded running statistics. Single-layer LSTM only —
+    the serving configuration.
+    """
+    def step(params, state, x, h, c, seed):
+        key = jax.random.PRNGKey(seed)
+        wq = M.quantize_weights(cfg, params, jax.random.fold_in(key, 0x5157))
+        if cfg.use_bn:
+            h2, c2 = M.kernel_infer_step(cfg, params, state, wq, x, h, c)
+        else:
+            # vanilla cell (baseline serving) — same kernel, identity BN
+            n4 = 4 * cfg.hidden
+            ones, zeros = jnp.ones(n4), jnp.zeros(n4)
+            from .kernels import bnlstm_cell as cell
+            h2, c2 = cell(x, h, c, wq["l0/wx"], wq["l0/wh"],
+                          ones, zeros, ones, zeros, params["l0/b"])
+        logits = M.classifier_logits(cfg, params, h2) if cfg.head != "lm" \
+            else h2 @ params["head/w"] + params["head/b"]
+        return logits, h2, c2
+
+    return step
+
+
+def build_gate_stats_step(cfg: M.ModelConfig) -> Callable:
+    """(params, state, x, seed, train_mode) -> (i, f, o, g, i_pre, h).
+
+    Dumps layer-0 gate activations (T, B, H) for the Appendix-A density
+    figures. train_mode selects batch-vs-running BN statistics.
+    """
+    def step(params, state, x, seed):
+        key = jax.random.PRNGKey(seed)
+        _, _, _, tr = M.rnn_forward(cfg, params, state, x, key, True,
+                                    collect_gates=True)
+        return (tr["i"], tr["f"], tr["o"], tr["g"], tr["i_pre"], tr["h"])
+
+    return step
+
+
+def init_opt(tc: TrainConfig, params: dict) -> dict:
+    return adam_init(params) if tc.optimizer == "adam" else sgd_init(params)

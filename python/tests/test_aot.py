@@ -1,0 +1,130 @@
+"""AOT boundary tests: the registry is well-formed, lowering produces
+consistent meta/HLO/init triples, and pack_ternary_ref matches the rust
+packing convention."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import quantizers as Q
+from compile.kernels.ref import pack_ternary_ref
+
+
+class TestRegistry:
+    def test_table_coverage(self):
+        """Every table of the paper has registry entries."""
+        names = set(aot.REGISTRY)
+        # Table 1: 12 methods x 3 corpora
+        for c in ["ptb", "wp", "lk"]:
+            for m in aot._CHAR_METHODS:
+                assert f"char_{c}_{m}" in names
+        # Table 2
+        assert {"char_text8_fp", "char_text8_bin", "char_text8_ter",
+                "char_text8_bc"} <= names
+        # Table 3
+        assert {"word_small_fp", "word_small_alt4", "word_large_ter"} <= names
+        # Table 4 / 5 / 6
+        assert {"mnist_fp", "mnist_alt2", "qa_ter", "gru_ptb_ter"} <= names
+        # Fig 3 batch sweep
+        assert "char_ptb_ter_b8" in names
+
+    def test_paper_rows_carry_published_values(self):
+        e = aot.REGISTRY["char_ptb_ter"]
+        assert e.paper["value"] == 1.39
+        assert e.paper["hidden"] == 1000
+        e = aot.REGISTRY["word_small_alt2"]
+        assert e.paper["value"] == 103.1
+        assert e.paper["ops_multiplier"] == 2
+
+    def test_ours_use_bn_baselines_do_not(self):
+        assert aot.REGISTRY["char_ptb_ter"].model.arch == "bnlstm"
+        assert aot.REGISTRY["char_ptb_bc"].model.arch == "lstm"
+        assert aot.REGISTRY["char_ptb_fp"].model.arch == "lstm"
+
+    def test_bits_consistent_with_quantizers(self):
+        for name, e in aot.REGISTRY.items():
+            if "bits" in e.paper:
+                assert e.paper["bits"] == Q.bits(e.model.quantizer), name
+
+
+class TestLowering:
+    @pytest.fixture(scope="class")
+    def lowered(self, tmp_path_factory):
+        out = str(tmp_path_factory.mktemp("aot"))
+        # smallest bundle for speed: shrink a charlm config
+        import dataclasses
+        e = aot.REGISTRY["char_ptb_ter"]
+        small = dataclasses.replace(
+            e,
+            name="tiny_test",
+            model=dataclasses.replace(e.model, hidden=16),
+            train=dataclasses.replace(e.train, seq_len=8, batch=4),
+            entries=("train", "eval"),
+            eval_variants=(),
+            infer_variants=(("b2", 2),),
+        )
+        aot.lower_experiment(small, out, verbose=False)
+        return out
+
+    def test_files_exist(self, lowered):
+        for f in ["tiny_test.meta.json", "tiny_test.init.bin",
+                  "tiny_test_train.hlo.txt", "tiny_test_eval.hlo.txt",
+                  "tiny_test_infer_b2.hlo.txt"]:
+            assert os.path.exists(os.path.join(lowered, f)), f
+
+    def test_meta_io_consistency(self, lowered):
+        meta = json.load(open(os.path.join(lowered, "tiny_test.meta.json")))
+        train = meta["entrypoints"]["train"]
+        groups = [i["group"] for i in train["inputs"]]
+        # params/state/opt arrive before data/scalars, in sorted order
+        p_names = [i["name"] for i in train["inputs"] if i["group"] == "params"]
+        assert p_names == sorted(p_names)
+        # outputs = params + state + opt + loss
+        n_pso = sum(1 for g in groups if g in ("params", "state", "opt"))
+        assert len(train["outputs"]) == n_pso + 1
+        # init.bin covers each params/state/opt leaf exactly once
+        seg = [(s["group"], s["name"]) for s in meta["init"]["segments"]]
+        assert len(seg) == len(set(seg)) == n_pso
+
+    def test_init_bin_size(self, lowered):
+        meta = json.load(open(os.path.join(lowered, "tiny_test.meta.json")))
+        size = os.path.getsize(os.path.join(lowered, "tiny_test.init.bin"))
+        assert size == meta["init"]["total_bytes"]
+        total = sum(s["nbytes"] for s in meta["init"]["segments"])
+        assert total == size
+
+    def test_hlo_entry_arity(self, lowered):
+        meta = json.load(open(os.path.join(lowered, "tiny_test.meta.json")))
+        hlo = open(os.path.join(lowered, "tiny_test_eval.hlo.txt")).read()
+        n_inputs = len(meta["entrypoints"]["eval"]["inputs"])
+        header = hlo.split("\n", 1)[0]
+        # entry_computation_layout lists every parameter
+        assert header.count("f32[") + header.count("s32[") >= n_inputs
+
+    def test_footprint_counts(self, lowered):
+        meta = json.load(open(os.path.join(lowered, "tiny_test.meta.json")))
+        fp = meta["footprint"]
+        # 4 gates x 16 hidden x (50 + 16) inputs
+        assert fp["recurrent_params"] == 4 * 16 * (50 + 16)
+        assert fp["bytes_quant"] * 4 == fp["bytes_fp32"] / 4  # 2-bit ternary
+
+
+class TestPackingOracle:
+    def test_pack_ternary_ref_shape(self):
+        w = jnp.asarray(np.random.RandomState(0).choice(
+            [-1.0, 0.0, 1.0], size=(70, 5)).astype(np.float32))
+        sign, mask = pack_ternary_ref(w)
+        assert sign.shape == (9, 5)  # ceil(70/8)
+        assert mask.shape == (9, 5)
+
+    def test_pack_ternary_ref_bits(self):
+        w = jnp.asarray([[1.0], [0.0], [-1.0], [1.0]])
+        sign, mask = pack_ternary_ref(w)
+        # rows 0..3 -> bits 0..3: mask 0b1101, sign 0b1001
+        assert int(mask[0, 0]) == 0b1101
+        assert int(sign[0, 0]) == 0b1001

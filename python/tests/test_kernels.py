@@ -1,0 +1,155 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracles in ref.py.
+
+This is the core numerics signal of the repo — the same kernels lower
+into the serving artifacts the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant_matmul import (BlockPlan, choose_block_plan,
+                                          qmatmul, qmatmul_bn, qmatmul_ste)
+from compile.kernels.bnlstm_cell import bnlstm_cell, fold_bn
+from compile.kernels import ref
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     jnp.float32)
+
+
+def tern(key, shape):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    sign = jnp.sign(jax.random.normal(k1, shape))
+    mask = (jax.random.uniform(k2, shape) < 0.7).astype(jnp.float32)
+    return sign * mask
+
+
+class TestQMatmul:
+    def test_matches_ref_basic(self):
+        x = rand(0, (48, 96))
+        w = tern(1, (96, 384))
+        np.testing.assert_allclose(np.asarray(qmatmul(x, w)),
+                                   np.asarray(ref.qmatmul_ref(x, w)),
+                                   rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 70), k=st.integers(1, 130), n=st.integers(1, 150))
+    def test_matches_ref_shapes(self, m, k, n):
+        x = rand(m * 1000 + k, (m, k))
+        w = tern(n, (k, n))
+        np.testing.assert_allclose(np.asarray(qmatmul(x, w)),
+                                   np.asarray(ref.qmatmul_ref(x, w)),
+                                   rtol=2e-5, atol=2e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(bm=st.integers(8, 64), bk=st.integers(8, 96), bn=st.integers(8, 128))
+    def test_block_plan_invariance(self, bm, bk, bn):
+        """Any tile shape must give the same numbers (grid correctness)."""
+        x = rand(7, (40, 96))
+        w = tern(8, (96, 120))
+        out = qmatmul(x, w, plan=BlockPlan(bm, bk, bn))
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.qmatmul_ref(x, w)),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_binary_weights(self):
+        x = rand(2, (16, 32))
+        w = jnp.sign(rand(3, (32, 64)) + 1e-9)
+        np.testing.assert_allclose(np.asarray(qmatmul(x, w)),
+                                   np.asarray(ref.qmatmul_ref(x, w)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_vjp_matches_dense_grad(self):
+        x = rand(4, (8, 16))
+        w = tern(5, (16, 24))
+        g1 = jax.grad(lambda a: qmatmul_ste(a, w).sum())(x)
+        g2 = jax.grad(lambda a: ref.qmatmul_ref(a, w).sum())(x)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-5, atol=1e-5)
+        gw1 = jax.grad(lambda b: qmatmul_ste(x, b).sum())(w)
+        gw2 = jax.grad(lambda b: ref.qmatmul_ref(x, b).sum())(w)
+        np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestQMatmulBN:
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(2, 48), k=st.integers(2, 96), n=st.integers(2, 128))
+    def test_matches_ref(self, m, k, n):
+        x = rand(m, (m, k))
+        w = tern(k, (k, n))
+        mean = rand(n + 1, (n,), 0.2)
+        var = jnp.abs(rand(n + 2, (n,))) + 0.3
+        phi = jnp.abs(rand(n + 3, (n,), 0.2)) + 0.05
+        gamma = rand(n + 4, (n,), 0.1)
+        got = qmatmul_bn(x, w, mean, var, phi, gamma)
+        want = ref.qmatmul_bn_ref(x, w, mean, var, phi, gamma)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_identity_bn_is_plain_matmul(self):
+        x = rand(1, (8, 16))
+        w = tern(2, (16, 32))
+        got = qmatmul_bn(x, w, jnp.zeros(32), jnp.ones(32) - 1e-5,
+                         jnp.ones(32), jnp.zeros(32))
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.qmatmul_ref(x, w)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestFusedCell:
+    @settings(max_examples=10, deadline=None)
+    @given(batch=st.integers(1, 24), dx=st.integers(1, 60),
+           hid=st.integers(1, 48))
+    def test_matches_composed_ref(self, batch, dx, hid):
+        x = rand(batch, (batch, dx))
+        h = rand(batch + 1, (batch, hid), 0.1)
+        c = rand(batch + 2, (batch, hid), 0.1)
+        wx = tern(dx, (dx, 4 * hid))
+        wh = tern(hid + 7, (hid, 4 * hid))
+        b = rand(batch + 3, (4 * hid,), 0.1)
+        mean = rand(batch + 4, (4 * hid,), 0.1)
+        var = jnp.abs(rand(batch + 5, (4 * hid,))) + 0.4
+        phi = jnp.full((4 * hid,), 0.1)
+        gamma = jnp.zeros(4 * hid)
+        sx, tx = fold_bn(mean, var, phi, gamma)
+        sh, th = fold_bn(mean * 0.3, var * 1.2, phi, gamma)
+        hn, cn = bnlstm_cell(x, h, c, wx, wh, sx, tx, sh, th, b)
+        xw = ref.bn_apply_ref(ref.qmatmul_ref(x, wx), mean, var, phi, gamma)
+        hw = ref.bn_apply_ref(ref.qmatmul_ref(h, wh), mean * 0.3, var * 1.2,
+                              phi, gamma)
+        hr, cr = ref.lstm_cell_ref(xw, hw, b, c)
+        np.testing.assert_allclose(np.asarray(hn), np.asarray(hr),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(cn), np.asarray(cr),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_state_bounds(self):
+        """h = o * tanh(c) must stay in (-1, 1)."""
+        x = rand(0, (8, 20), 3.0)
+        h = rand(1, (8, 16), 3.0)
+        c = rand(2, (8, 16), 3.0)
+        wx = tern(3, (20, 64))
+        wh = tern(4, (16, 64))
+        ones, zeros = jnp.ones(64), jnp.zeros(64)
+        hn, _ = bnlstm_cell(x, h, c, wx, wh, ones, zeros, ones, zeros, zeros)
+        assert bool(jnp.all(jnp.abs(hn) <= 1.0))
+
+
+class TestBlockPlanModel:
+    def test_vmem_within_budget(self):
+        plan = choose_block_plan(256, 2000, 8000)
+        assert plan.vmem_bytes() <= 16 * 2 ** 20
+
+    def test_mxu_utilization_bounds(self):
+        plan = BlockPlan(128, 128, 128)
+        u = plan.mxu_utilization(1024, 1024, 1024)
+        assert 0.0 < u <= 1.0
+
+    def test_small_problem_clamps(self):
+        plan = choose_block_plan(4, 10, 12)
+        assert plan.bm >= 1 and plan.bk >= 1 and plan.bn >= 1

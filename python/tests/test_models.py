@@ -1,0 +1,221 @@
+"""L2 model shape/finite-ness/behavioral tests: BN-LSTM vs vanilla, GRU,
+attentive reader, BN statistics flow, and the train/eval step builders."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers as L
+from compile import model as M
+from compile import train as T
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make(arch="bnlstm", quant="ter", **kw):
+    cfg = M.ModelConfig(arch=arch, quantizer=quant, vocab=30, hidden=24, **kw)
+    params, state = M.init_params(cfg, KEY)
+    return cfg, params, state
+
+
+def tokens(t=12, b=4, vocab=30, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (t, b), 0, vocab)
+
+
+class TestBatchNorm:
+    def test_train_normalizes(self):
+        x = jax.random.normal(KEY, (64, 8)) * 3.0 + 2.0
+        y, mean, var = L.bn_train(x, jnp.ones(8), 0.0)
+        np.testing.assert_allclose(np.asarray(jnp.mean(y, axis=0)),
+                                   np.zeros(8), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(jnp.std(y, axis=0)),
+                                   np.ones(8), atol=1e-2)
+        np.testing.assert_allclose(np.asarray(mean),
+                                   np.asarray(jnp.mean(x, axis=0)), rtol=1e-5)
+
+    def test_infer_uses_given_stats(self):
+        x = jnp.ones((4, 3))
+        y = L.bn_infer(x, jnp.ones(3), 0.0, jnp.ones(3), jnp.ones(3))
+        np.testing.assert_allclose(np.asarray(y), np.zeros((4, 3)), atol=1e-3)
+
+    def test_ema(self):
+        r = L.ema_update(jnp.ones(3), jnp.zeros(3), momentum=0.9)
+        np.testing.assert_allclose(np.asarray(r), 0.9 * np.ones(3), rtol=1e-6)
+
+
+class TestInitParams:
+    def test_bnlstm_has_bn_params(self):
+        cfg, params, state = make()
+        assert "l0/phi_x" in params and "l0/phi_h" in params
+        assert "l0/rm_x" in state and "l0/rv_h" in state
+
+    def test_vanilla_has_no_bn(self):
+        cfg, params, state = make(arch="lstm", quant="bc")
+        assert "l0/phi_x" not in params
+        assert not state
+
+    def test_forget_gate_bias_one(self):
+        cfg, params, _ = make()
+        b = np.asarray(params["l0/b"])
+        h = cfg.hidden
+        np.testing.assert_array_equal(b[h:2 * h], np.ones(h))
+        np.testing.assert_array_equal(b[:h], np.zeros(h))
+
+    def test_gru_param_shapes(self):
+        cfg, params, _ = make(arch="bngru")
+        assert params["l0/wx"].shape == (30, 3 * 24)
+        assert params["l0/wh"].shape == (24, 3 * 24)
+
+    def test_ttq_extra_scales(self):
+        cfg, params, _ = make(arch="lstm", quant="ttq")
+        assert "l0/ttq_wp_x" in params and "l0/ttq_wn_h" in params
+
+    def test_multilayer(self):
+        cfg, params, _ = make(num_layers=2)
+        assert params["l1/wx"].shape == (24, 96)
+
+
+class TestForward:
+    @pytest.mark.parametrize("arch,quant", [
+        ("bnlstm", "bin"), ("bnlstm", "ter"), ("lstm", "fp"),
+        ("lstm", "bc"), ("bngru", "ter"), ("gru", "fp"), ("lstm", "ttq"),
+    ])
+    def test_shapes_and_finite(self, arch, quant):
+        cfg, params, state = make(arch=arch, quant=quant)
+        hs, finals, upd, _ = M.rnn_forward(cfg, params, state, tokens(),
+                                           KEY, True)
+        assert hs.shape == (12, 4, 24)
+        assert bool(jnp.isfinite(hs).all())
+        if cfg.use_bn:
+            assert upd, "BN must emit running-stat updates in train mode"
+        else:
+            assert not upd
+
+    def test_eval_mode_deterministic_given_seed(self):
+        cfg, params, state = make()
+        a, _, _, _ = M.rnn_forward(cfg, params, state, tokens(), KEY, False)
+        b, _, _, _ = M.rnn_forward(cfg, params, state, tokens(), KEY, False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_quantization_seed_changes_output(self):
+        cfg, params, state = make()
+        a, _, _, _ = M.rnn_forward(cfg, params, state, tokens(),
+                                   jax.random.PRNGKey(1), False)
+        b, _, _, _ = M.rnn_forward(cfg, params, state, tokens(),
+                                   jax.random.PRNGKey(2), False)
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_fp_ignores_seed(self):
+        cfg, params, state = make(arch="lstm", quant="fp")
+        a, _, _, _ = M.rnn_forward(cfg, params, state, tokens(),
+                                   jax.random.PRNGKey(1), False)
+        b, _, _, _ = M.rnn_forward(cfg, params, state, tokens(),
+                                   jax.random.PRNGKey(2), False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_quantized_weights_in_codomain(self):
+        cfg, params, _ = make(quant="ter")
+        wq = M.quantize_weights(cfg, params, KEY)
+        import math
+        alpha = math.sqrt(6.0 / (30 + 96))
+        vals = np.unique(np.asarray(wq["l0/wx"]))
+        for v in vals:
+            assert min(abs(v - t) for t in (-alpha, 0.0, alpha)) < 1e-5, v
+
+    def test_gate_trace_ranges(self):
+        cfg, params, state = make()
+        _, _, _, tr = M.rnn_forward(cfg, params, state, tokens(), KEY, True,
+                                    collect_gates=True)
+        for g in ["i", "f", "o"]:
+            arr = np.asarray(tr[g])
+            assert arr.min() >= 0.0 and arr.max() <= 1.0
+        assert np.abs(np.asarray(tr["g"])).max() <= 1.0
+
+
+class TestAttentiveReader:
+    def test_forward_and_loss(self):
+        cfg = M.ModelConfig(arch="bnlstm", quantizer="ter", vocab=120,
+                            emb_dim=16, hidden=12, head="attreader",
+                            num_classes=30)
+        params, state = M.init_attreader(cfg, KEY)
+        doc = jax.random.randint(KEY, (20, 4), 0, 120)
+        query = jax.random.randint(jax.random.PRNGKey(1), (5, 4), 0, 120)
+        logits, upd = M.attreader_forward(cfg, params, state, doc, query,
+                                          KEY, True)
+        assert logits.shape == (4, 30)
+        assert bool(jnp.isfinite(logits).all())
+        # updates must cover all four directional LSTMs
+        prefixes = {k[:k.find("l0/")] for k in upd}
+        assert prefixes == {"", "bwd/", "query/", "query/bwd/"}
+
+
+class TestTrainSteps:
+    def test_train_step_improves_on_fixed_batch(self):
+        cfg, params, state = make(quant="ter")
+        tc = T.TrainConfig(optimizer="adam", seq_len=12, batch=4)
+        step = T.build_train_step(cfg, tc)
+        opt = T.init_opt(tc, params)
+        x = tokens()
+        y = x  # learnable identity task
+        losses = []
+        for i in range(25):
+            params, state, opt, loss = step(params, state, opt, x, y,
+                                            jnp.asarray(i), jnp.asarray(5e-3))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.2, losses[::6]
+
+    def test_weight_clip_keeps_probabilities_valid(self):
+        cfg, params, state = make(quant="bin")
+        tc = T.TrainConfig(optimizer="adam", seq_len=12, batch=4)
+        step = T.build_train_step(cfg, tc)
+        opt = T.init_opt(tc, params)
+        x = tokens()
+        for i in range(5):
+            params, state, opt, _ = step(params, state, opt, x, x,
+                                         jnp.asarray(i), jnp.asarray(0.1))
+        import math
+        alpha = math.sqrt(6.0 / (30 + 96))
+        assert float(jnp.abs(params["l0/wx"]).max()) <= alpha + 1e-6
+
+    def test_eval_step_scalar(self):
+        cfg, params, state = make()
+        step = T.build_eval_step(cfg)
+        loss = step(params, state, tokens(), tokens(seed=3), jnp.asarray(0))
+        assert loss.shape == ()
+        assert bool(jnp.isfinite(loss))
+
+    def test_sgd_with_clip(self):
+        cfg, params, state = make(arch="lstm", quant="fp")
+        tc = T.TrainConfig(optimizer="sgd", grad_clip=0.25, seq_len=12,
+                           batch=4)
+        step = T.build_train_step(cfg, tc)
+        opt = T.init_opt(tc, params)
+        _, _, opt2, loss = step(params, state, opt, tokens(), tokens(seed=2),
+                                jnp.asarray(0), jnp.asarray(1.0))
+        assert bool(jnp.isfinite(loss))
+        assert float(opt2["t"]) == 1.0
+
+    def test_classifier_step(self):
+        cfg = M.ModelConfig(arch="bnlstm", quantizer="bin", vocab=0,
+                            input_dim=2, hidden=16, head="classifier",
+                            num_classes=5)
+        params, state = M.init_params(cfg, KEY)
+        tc = T.TrainConfig(optimizer="adam", seq_len=20, batch=6)
+        step = T.build_train_step(cfg, tc)
+        opt = T.init_opt(tc, params)
+        x = jax.random.normal(KEY, (20, 6, 2))
+        y = jax.random.randint(KEY, (6,), 0, 5)
+        _, _, _, loss = step(params, state, opt, x, y, jnp.asarray(0),
+                             jnp.asarray(1e-3))
+        assert bool(jnp.isfinite(loss))
+
+    def test_gate_stats_step_outputs(self):
+        cfg, params, state = make(arch="lstm", quant="bc")
+        step = T.build_gate_stats_step(cfg)
+        out = step(params, state, tokens(), jnp.asarray(0))
+        assert len(out) == 6
+        assert out[0].shape == (12, 4, 24)

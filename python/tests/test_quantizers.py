@@ -1,0 +1,183 @@
+"""Quantizer laws: Eq. 4-6 probabilities, codomains, STE gradients, and
+the baseline quantizers' defining properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quantizers as Q
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def in_set(arr, values, tol=1e-6):
+    arr = np.asarray(arr)
+    return all(min(abs(arr.flat[i] - v) for v in values) < tol
+               for i in range(arr.size))
+
+
+class TestOursBinary:
+    def test_codomain(self):
+        alpha = 0.5
+        w = jax.random.normal(KEY, (64, 64)) * 0.2
+        wq = Q.get("bin", alpha)(w, KEY)
+        assert in_set(wq, [alpha, -alpha])
+
+    def test_probability_law(self):
+        """Eq. 4: P(+1) = (wn+1)/2 — check empirically at wn=0.5."""
+        alpha = 1.0
+        w = jnp.full((200, 200), 0.5)
+        keys = jax.random.split(KEY, 8)
+        rates = [float(jnp.mean(Q.get("bin", alpha)(w, k) > 0)) for k in keys]
+        assert abs(np.mean(rates) - 0.75) < 0.01
+
+    def test_expectation_unbiased(self):
+        """E[wq] == w (clipped): stochastic rounding is unbiased."""
+        alpha = 1.0
+        w = jnp.linspace(-0.9, 0.9, 19)
+        keys = jax.random.split(KEY, 2000)
+        acc = sum(Q.get("bin", alpha)(w, k) for k in keys) / 2000.0
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(w), atol=0.05)
+
+    def test_saturated_deterministic(self):
+        alpha = 0.3
+        w = jnp.full((16,), 10.0)  # wn clips to +1
+        wq = Q.get("bin", alpha)(w, KEY)
+        assert bool(jnp.all(wq == alpha))
+
+    def test_ste_gradient_identity(self):
+        alpha = 0.25
+        w = jax.random.normal(KEY, (8, 8)) * 0.1
+        g = jax.grad(lambda p: Q.get("bin", alpha)(p, KEY).sum())(w)
+        np.testing.assert_allclose(np.asarray(g), np.ones((8, 8)), atol=1e-6)
+
+
+class TestOursTernary:
+    def test_codomain(self):
+        alpha = 0.5
+        w = jax.random.normal(KEY, (64, 64)) * 0.2
+        wq = Q.get("ter", alpha)(w, KEY)
+        assert in_set(wq, [alpha, 0.0, -alpha])
+
+    def test_zero_weight_stays_zero(self):
+        wq = Q.get("ter", 1.0)(jnp.zeros((32, 32)), KEY)
+        assert bool(jnp.all(wq == 0.0))
+
+    def test_probability_law(self):
+        """Eq. 5: P(nonzero) = |wn|."""
+        alpha = 1.0
+        w = jnp.full((300, 300), -0.3)
+        keys = jax.random.split(KEY, 8)
+        rates = [float(jnp.mean(Q.get("ter", alpha)(w, k) != 0)) for k in keys]
+        assert abs(np.mean(rates) - 0.3) < 0.01
+        # and the nonzeros carry sign(w)
+        wq = Q.get("ter", alpha)(w, KEY)
+        nz = np.asarray(wq)[np.asarray(wq) != 0]
+        assert (nz < 0).all()
+
+    def test_expectation_unbiased(self):
+        alpha = 1.0
+        w = jnp.linspace(-0.8, 0.8, 17)
+        keys = jax.random.split(KEY, 2000)
+        acc = sum(Q.get("ter", alpha)(w, k) for k in keys) / 2000.0
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(w), atol=0.05)
+
+    def test_ste_gradient_identity(self):
+        g = jax.grad(lambda p: Q.get("ter", 0.5)(p, KEY).sum())(
+            jax.random.normal(KEY, (6, 6)) * 0.1)
+        np.testing.assert_allclose(np.asarray(g), np.ones((6, 6)), atol=1e-6)
+
+
+class TestBaselines:
+    def test_binaryconnect_is_sign(self):
+        alpha = 0.2
+        w = jax.random.normal(KEY, (32, 32))
+        wq = Q.get("bc", alpha)(w, KEY)
+        np.testing.assert_allclose(np.asarray(wq),
+                                   alpha * np.where(np.asarray(w) >= 0, 1, -1))
+
+    def test_lab_scale_is_column_mean_abs(self):
+        w = jax.random.normal(KEY, (64, 8))
+        wq = Q.get("lab", 1.0)(w, KEY)
+        want = np.mean(np.abs(np.asarray(w)), axis=0, keepdims=True)
+        np.testing.assert_allclose(np.abs(np.asarray(wq)),
+                                   np.broadcast_to(want, (64, 8)), rtol=1e-5)
+
+    def test_twn_threshold(self):
+        w = jax.random.normal(KEY, (128, 128))
+        wq = np.asarray(Q.get("twn", 1.0)(w, KEY))
+        delta = 0.7 * np.mean(np.abs(np.asarray(w)))
+        # below-threshold entries are zero
+        below = np.abs(np.asarray(w)) <= delta
+        assert (wq[below] == 0).all()
+        # above-threshold entries share one scale
+        nz = np.abs(wq[~below])
+        assert nz.size > 0 and np.allclose(nz, nz[0], rtol=1e-5)
+
+    @pytest.mark.parametrize("k", [2, 3, 4])
+    def test_dorefa_level_count(self, k):
+        w = jax.random.normal(KEY, (64, 64))
+        wq = np.asarray(Q.get(f"dorefa{k}", 1.0)(w, KEY))
+        levels = np.unique(np.round(wq, 5))
+        assert len(levels) <= 2 ** k
+        assert wq.min() >= -1.0 - 1e-5 and wq.max() <= 1.0 + 1e-5
+
+    @pytest.mark.parametrize("k", [2, 3, 4])
+    def test_laq_grid(self, k):
+        w = jax.random.normal(KEY, (64, 64))
+        wq = np.asarray(Q.get(f"laq{k}", 1.0)(w, KEY))
+        m = 2 ** (k - 1) - 1
+        levels = np.unique(np.round(wq / (np.abs(wq)[np.abs(wq) > 0].min()
+                                          if (np.abs(wq) > 0).any() else 1.0)))
+        assert len(np.unique(np.round(wq, 6))) <= 2 * m + 1
+
+    @pytest.mark.parametrize("k", [1, 2, 3, 4])
+    def test_alternating_error_decreases_with_k(self, k):
+        w = jax.random.normal(KEY, (64, 64))
+        wq = Q.get(f"alt{k}", 1.0)(w, KEY)
+        err = float(jnp.mean((w - wq) ** 2))
+        if k > 1:
+            prev = Q.get(f"alt{k-1}", 1.0)(w, KEY)
+            err_prev = float(jnp.mean((w - prev) ** 2))
+            assert err < err_prev, f"k={k}: {err} !< {err_prev}"
+
+    def test_ttq_asymmetric_scales(self):
+        w = jax.random.normal(KEY, (64, 64))
+        wq = np.asarray(Q.ttq_apply(w, KEY, jnp.asarray(0.7), jnp.asarray(0.3)))
+        pos = np.unique(wq[wq > 0])
+        neg = np.unique(wq[wq < 0])
+        np.testing.assert_allclose(pos, [0.7], rtol=1e-6)
+        np.testing.assert_allclose(neg, [-0.3], rtol=1e-6)
+
+    def test_fp_identity(self):
+        w = jax.random.normal(KEY, (16, 16))
+        np.testing.assert_array_equal(np.asarray(Q.get("fp", 1.0)(w, KEY)),
+                                      np.asarray(w))
+
+
+class TestRegistry:
+    def test_bits_table(self):
+        assert Q.bits("bin") == 1.0
+        assert Q.bits("ter") == 2.0
+        assert Q.bits("fp") == 32.0
+        assert Q.bits("alt4") == 4.0
+        assert Q.bits("ttq") == 2.0
+
+    def test_ops_multiplier(self):
+        assert Q.OPS_MULTIPLIER["alt2"] == 2
+        assert "bin" not in Q.OPS_MULTIPLIER
+
+    def test_glorot_alpha(self):
+        assert abs(Q.glorot_alpha(96, 384) - (6.0 / 480) ** 0.5) < 1e-9
+
+    @settings(max_examples=20, deadline=None)
+    @given(name=st.sampled_from(["bin", "ter", "bc", "lab", "twn",
+                                 "dorefa3", "laq2", "alt2"]),
+           seed=st.integers(0, 2 ** 30))
+    def test_all_quantizers_finite(self, name, seed):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (24, 24)) * 0.5
+        wq = Q.get(name, 0.5)(w, jax.random.PRNGKey(seed + 1))
+        assert bool(jnp.isfinite(wq).all())

@@ -1,0 +1,81 @@
+//! Shared bench-harness helpers: every table/figure bench trains through
+//! the same Trainer path and prints paper-vs-measured rows.
+//!
+//! Environment knobs:
+//!   RBTW_STEPS   — char-LM training budget (default 600)
+//!   RBTW_SCALE   — multiplies every bench's step budget (default 1.0)
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+
+use rbtw::coordinator::{LrSchedule, Split, TrainSpec, Trainer};
+use rbtw::runtime::{ArtifactMeta, Engine};
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn have(name: &str) -> bool {
+    artifacts_dir().join(format!("{name}.meta.json")).exists()
+}
+
+pub fn scale() -> f64 {
+    std::env::var("RBTW_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+pub fn char_steps() -> usize {
+    let base = std::env::var("RBTW_STEPS").ok().and_then(|s| s.parse().ok())
+        .unwrap_or(600usize);
+    (base as f64 * scale()) as usize
+}
+
+pub fn scaled(steps: usize) -> usize {
+    ((steps as f64 * scale()) as usize).max(10)
+}
+
+/// Train an artifact and return (test metric, valid metric, report name).
+pub fn run_experiment(engine: &Engine, name: &str, steps: usize, lr: f32,
+                      schedule: LrSchedule) -> anyhow::Result<(f64, f64)> {
+    let spec = TrainSpec {
+        steps,
+        lr,
+        schedule,
+        eval_every: (steps / 4).max(1),
+        eval_batches: 4,
+        seed: 42,
+        verbose: false,
+    };
+    let mut trainer = Trainer::new(engine, &artifacts_dir(), name, spec)?;
+    let report = trainer.run()?;
+    let test = trainer.evaluate(Split::Test, 8)?;
+    Ok((test.metric, report.final_valid))
+}
+
+/// The published row value recorded in the artifact's meta.
+pub fn paper_value(name: &str) -> Option<f64> {
+    let meta = ArtifactMeta::load(&artifacts_dir(), name).ok()?;
+    meta.paper.get("value").and_then(|v| v.as_f64())
+}
+
+pub fn paper_dims(name: &str) -> Option<(usize, usize)> {
+    let meta = ArtifactMeta::load(&artifacts_dir(), name).ok()?;
+    let h = meta.paper.get("hidden")?.as_usize()?;
+    let layers = meta.paper.get("layers").and_then(|l| l.as_usize()).unwrap_or(1);
+    Some((h, layers))
+}
+
+pub fn bits(name: &str) -> f64 {
+    ArtifactMeta::load(&artifacts_dir(), name)
+        .map(|m| m.bits_per_weight)
+        .unwrap_or(32.0)
+}
+
+/// Standard bench banner explaining the scale substitution.
+pub fn banner(what: &str) {
+    println!("\n=== {what} ===");
+    println!(
+        "(reduced scale: synthetic corpora + small models on XLA-CPU; \
+         compare ORDERINGS with the paper column, not absolute values — \
+         DESIGN.md §3)"
+    );
+}

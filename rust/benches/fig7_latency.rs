@@ -1,0 +1,27 @@
+//! Figure 7 (Appendix D): per-timestep latency of the accelerator across
+//! the paper's tasks, full-precision vs binary vs ternary high-speed.
+
+mod common;
+
+use rbtw::hwsim::{fig7_points, paper_workloads};
+use rbtw::util::table::Table;
+
+fn main() {
+    common::banner("Figure 7: accelerator timestep latency per task");
+    let mut t = Table::new(&["task", "fp us", "binary us", "ternary us",
+                             "bin speedup", "ter speedup"]);
+    for w in paper_workloads() {
+        let (fp, b, tr) = fig7_points(&w);
+        t.row(&[
+            w.name.into(),
+            format!("{:.2}", fp.latency_us),
+            format!("{:.2}", b.latency_us),
+            format!("{:.2}", tr.latency_us),
+            format!("{:.1}x", fp.latency_us / b.latency_us),
+            format!("{:.1}x", fp.latency_us / tr.latency_us),
+        ]);
+    }
+    t.print();
+    println!("(paper: binary up to 10x, ternary up to 5x; small layers \
+              underfill the wider arrays and gain less)");
+}

@@ -1,0 +1,51 @@
+//! Appendix A figures 4/5/6: probability densities of the LSTM gates and
+//! hidden state for BinaryConnect vs full-precision vs our binarized
+//! BN-LSTM — the diagnosis behind the paper's method (gates saturate
+//! under naive binarization; BN restores control of information flow).
+
+mod common;
+
+use rbtw::coordinator::{TrainSpec, Trainer};
+use rbtw::runtime::{literal, Engine};
+use rbtw::util::stats::Histogram;
+use rbtw::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("Appendix A: gate/state probability densities");
+    let engine = Engine::cpu()?;
+    let steps = common::scaled(300);
+    for name in ["char_ptb_fp", "char_ptb_bc", "char_ptb_bin"] {
+        let spec = TrainSpec { steps, lr: 1e-2, eval_every: steps,
+                               eval_batches: 2, ..TrainSpec::default() };
+        let mut trainer = Trainer::new(&engine, &common::artifacts_dir(),
+                                       name, spec)?;
+        trainer.run()?;
+        // dump gate activations on one held-out batch
+        let (seq, batch, vocab) = (trainer.sess.meta.seq_len(),
+                                   trainer.sess.meta.batch(),
+                                   trainer.sess.meta.vocab());
+        let mut rng = Rng::new(99);
+        let xs: Vec<i32> = (0..seq * batch)
+            .map(|_| rng.below(vocab as u64) as i32).collect();
+        let x = literal::i32_literal(&xs, &[seq, batch])?;
+        let stats = trainer.sess.gate_stats(&x, 7)?;
+        println!("\n-- {name} ({steps} steps) --");
+        for (gate, values) in &stats {
+            let (lo, hi) = match gate.as_str() {
+                "i" | "f" | "o" => (0.0, 1.0),
+                "g" | "h" => (-1.0, 1.0),
+                _ => (-8.0, 8.0), // i_pre
+            };
+            let mut h = Histogram::new(lo, hi, 40);
+            h.add_all(values);
+            let mean = values.iter().map(|&v| v as f64).sum::<f64>()
+                / values.len() as f64;
+            println!("  {gate:<6} [{lo:>4},{hi:>3}] {}  mean {mean:+.3}",
+                     h.sparkline());
+        }
+        eprintln!("  [{name}] done");
+    }
+    println!("\n(paper Appx A: BinaryConnect's i/o saturate at 1, g at ±1, \
+              i_pre drifts all-positive; BN-LSTM keeps the densities spread)");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Microbenchmarks of the quantized inference substrate (§6 on CPU):
+//! packed popcount GEMV vs dense f32 GEMV across the paper's layer sizes,
+//! plus the packed-cell end-to-end step rate. The expected pattern: the
+//! packed kernels win by the weight-bandwidth ratio once the matrix
+//! leaves cache — the CPU realization of the 12x DRAM argument.
+
+mod common;
+
+use rbtw::quant::{gemv_binary, gemv_binary_lut, gemv_f32, gemv_ternary,
+                  gemv_ternary_lut, gemv_ternary_planes, LutScratch, Packed,
+                  PackedBinary, PackedLstmCell, PackedTernary, TernaryPlanes};
+use rbtw::util::bench::{bench, black_box, print_header};
+use rbtw::util::Rng;
+
+fn main() {
+    common::banner("quant engine: popcount GEMV vs dense f32");
+    let mut rng = Rng::new(5);
+    print_header("GEMV (k x n = hidden x 4*hidden)");
+    for hidden in [100usize, 512, 1000, 2000] {
+        let (k, n) = (hidden, 4 * hidden);
+        let alpha = 0.1f32;
+        let dense: Vec<f32> = (0..k * n)
+            .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+            .collect();
+        let x: Vec<f32> = (0..k).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0f32; n];
+
+        let m = bench(&format!("dense f32 GEMV h={hidden}"), || {
+            gemv_f32(black_box(&dense), k, n, black_box(&x), &mut y);
+        });
+        println!("{}", m.report());
+        let f32_ns = m.median_ns;
+
+        let tern = PackedTernary::pack(&dense, k, n, alpha);
+        let m = bench(&format!("ternary GEMV (naive) h={hidden}"), || {
+            gemv_ternary(black_box(&tern), black_box(&x), &mut y);
+        });
+        println!("{}  ({:.2}x vs f32)", m.report(), f32_ns / m.median_ns);
+        let mut scratch = LutScratch::default();
+        let m = bench(&format!("ternary GEMV (LUT) h={hidden}"), || {
+            gemv_ternary_lut(black_box(&tern), black_box(&x), &mut y,
+                             &mut scratch);
+        });
+        println!("{}  ({:.2}x vs f32)", m.report(), f32_ns / m.median_ns);
+        let planes = TernaryPlanes::from_packed(&tern);
+        let m = bench(&format!("ternary GEMV (planes) h={hidden}"), || {
+            gemv_ternary_planes(black_box(&planes), black_box(&x), &mut y,
+                                &mut scratch);
+        });
+        println!("{}  ({:.2}x vs f32)", m.report(), f32_ns / m.median_ns);
+
+        let bdense: Vec<f32> = dense.iter()
+            .map(|&v| if v >= 0.0 { alpha } else { -alpha }).collect();
+        let bin = PackedBinary::pack(&bdense, k, n, alpha);
+        let m = bench(&format!("binary GEMV (naive) h={hidden}"), || {
+            gemv_binary(black_box(&bin), black_box(&x), &mut y);
+        });
+        println!("{}  ({:.2}x vs f32)", m.report(), f32_ns / m.median_ns);
+        let mut scratch = LutScratch::default();
+        let m = bench(&format!("binary GEMV (LUT) h={hidden}"), || {
+            gemv_binary_lut(black_box(&bin), black_box(&x), &mut y,
+                            &mut scratch);
+        });
+        println!("{}  ({:.2}x vs f32)", m.report(), f32_ns / m.median_ns);
+    }
+
+    print_header("packed LSTM cell step (token path)");
+    for hidden in [100usize, 512, 1000] {
+        let vocab = 50;
+        let alpha = 0.1f32;
+        let n4 = 4 * hidden;
+        let mk = |rows: usize, rng: &mut Rng| -> Vec<f32> {
+            (0..rows * n4).map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+                .collect()
+        };
+        let wx = mk(vocab, &mut rng);
+        let wh = mk(hidden, &mut rng);
+        let mut cell = PackedLstmCell::new(
+            Packed::Ternary(PackedTernary::pack(&wx, vocab, n4, alpha)),
+            Packed::Ternary(PackedTernary::pack(&wh, hidden, n4, alpha)),
+            vec![1.0; n4], vec![0.0; n4], vec![1.0; n4], vec![0.0; n4],
+            vec![0.0; n4],
+        ).unwrap();
+        let mut h = vec![0.0f32; hidden];
+        let mut c = vec![0.0f32; hidden];
+        let mut tok = 3usize;
+        let m = bench(&format!("cell step h={hidden}"), || {
+            cell.step_token(tok, &mut h, &mut c);
+            tok = (tok + 7) % 50;
+        });
+        println!("{}  ({:.0} steps/s)", m.report(), 1e9 / m.median_ns);
+    }
+}

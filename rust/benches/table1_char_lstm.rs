@@ -1,0 +1,55 @@
+//! Table 1: char-level BPC of quantized LSTMs on the PTB / War&Peace /
+//! Linux-Kernel (synthetic substitutes), all 12 methods, plus the Size
+//! column at the paper's model dimensions.
+
+mod common;
+
+use rbtw::coordinator::LrSchedule;
+use rbtw::quant::{paper_kbytes, rnn_weight_params, weight_bytes, Cell};
+use rbtw::runtime::Engine;
+use rbtw::util::table::Table;
+
+const METHODS: [(&str, &str); 12] = [
+    ("fp", "LSTM (baseline)"),
+    ("bin", "LSTM binary (ours)"),
+    ("ter", "LSTM ternary (ours)"),
+    ("bc", "BinaryConnect"),
+    ("lab", "LAB"),
+    ("twn", "TWN"),
+    ("ttq", "TTQ"),
+    ("laq2", "LAQ ternary"),
+    ("laq3", "LAQ 3-bit"),
+    ("laq4", "LAQ 4-bit"),
+    ("dorefa3", "DoReFa 3-bit"),
+    ("dorefa4", "DoReFa 4-bit"),
+];
+
+fn main() -> anyhow::Result<()> {
+    common::banner("Table 1: char-level BPC, LSTM, 3 corpora");
+    let engine = Engine::cpu()?;
+    let steps = common::char_steps();
+    for corpus in ["ptb", "wp", "lk"] {
+        let vocab = match corpus { "ptb" => 50, "wp" => 87, _ => 101 };
+        println!("\n-- corpus {corpus} (vocab {vocab}), {steps} steps --");
+        let mut t = Table::new(&["model", "bits", "paper bpc", "ours bpc",
+                                 "paper size KB"]);
+        for (method, label) in METHODS {
+            let name = format!("char_{corpus}_{method}");
+            if !common::have(&name) {
+                continue;
+            }
+            let (test, _) = common::run_experiment(
+                &engine, &name, steps, 1e-2, LrSchedule::Constant)?;
+            let paper = common::paper_value(&name).unwrap_or(f64::NAN);
+            let (ph, _) = common::paper_dims(&name).unwrap_or((1000, 1));
+            let params = rnn_weight_params(Cell::Lstm, vocab, ph, 1);
+            let size = paper_kbytes(weight_bytes(params, common::bits(&name)));
+            t.row(&[label.into(), format!("{}", common::bits(&name)),
+                    format!("{paper:.2}"), format!("{test:.3}"),
+                    size.to_string()]);
+            eprintln!("  [{name}] done");
+        }
+        t.print();
+    }
+    Ok(())
+}

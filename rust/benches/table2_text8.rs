@@ -1,0 +1,36 @@
+//! Table 2: Text8 (synthetic substitute) BPC + model size in MByte at the
+//! paper's scale (LSTM h=2000).
+
+mod common;
+
+use rbtw::coordinator::LrSchedule;
+use rbtw::quant::{paper_mbytes, rnn_weight_params, weight_bytes, Cell};
+use rbtw::runtime::Engine;
+use rbtw::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("Table 2: Text8 char-level BPC");
+    let engine = Engine::cpu()?;
+    let steps = common::char_steps();
+    let mut t = Table::new(&["model", "paper bpc", "ours bpc",
+                             "paper size MB"]);
+    for (method, label) in [("fp", "LSTM (baseline)"),
+                            ("bin", "binary (ours)"),
+                            ("ter", "ternary (ours)"),
+                            ("bc", "BinaryConnect")] {
+        let name = format!("char_text8_{method}");
+        if !common::have(&name) {
+            continue;
+        }
+        let (test, _) = common::run_experiment(
+            &engine, &name, steps, 1e-2, LrSchedule::Constant)?;
+        let params = rnn_weight_params(Cell::Lstm, 27, 2000, 1);
+        let mb = paper_mbytes(weight_bytes(params, common::bits(&name)));
+        t.row(&[label.into(),
+                format!("{:.2}", common::paper_value(&name).unwrap_or(f64::NAN)),
+                format!("{test:.3}"), format!("{mb:.1}")]);
+        eprintln!("  [{name}] done");
+    }
+    t.print();
+    Ok(())
+}

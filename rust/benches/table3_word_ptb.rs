@@ -1,0 +1,49 @@
+//! Table 3: word-level PTB perplexity (synthetic Zipf corpus), small /
+//! medium / large models, + Size and Operations columns at paper scale.
+
+mod common;
+
+use rbtw::coordinator::LrSchedule;
+use rbtw::quant::{paper_kbytes, rnn_weight_params, step_ops, weight_bytes,
+                  Cell};
+use rbtw::runtime::Engine;
+use rbtw::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("Table 3: word-PTB perplexity");
+    let engine = Engine::cpu()?;
+    let steps = common::scaled(400);
+    let rows = [
+        ("small", vec!["fp", "bin", "ter", "bc", "alt2", "alt3", "alt4"]),
+        ("medium", vec!["fp", "bin", "ter", "bc"]),
+        ("large", vec!["fp", "bin", "ter", "bc"]),
+    ];
+    for (size, methods) in rows {
+        println!("\n-- {size} model, {steps} steps (SGD + plateau lr/4) --");
+        let mut t = Table::new(&["model", "paper ppl", "ours ppl",
+                                 "paper size KB", "paper MOps"]);
+        for method in methods {
+            let name = format!("word_{size}_{method}");
+            if !common::have(&name) {
+                continue;
+            }
+            let (test, _) = common::run_experiment(
+                &engine, &name, steps, 1.0,
+                LrSchedule::Plateau { factor: 4.0 })?;
+            let (ph, layers) = common::paper_dims(&name).unwrap_or((300, 1));
+            let params = rnn_weight_params(Cell::Lstm, ph, ph, layers);
+            let k = match method {
+                "alt2" => 2, "alt3" => 3, "alt4" => 4, _ => 1 };
+            t.row(&[
+                format!("{size} {method}"),
+                format!("{:.1}", common::paper_value(&name).unwrap_or(f64::NAN)),
+                format!("{test:.1}"),
+                paper_kbytes(weight_bytes(params, common::bits(&name))).to_string(),
+                format!("{:.1}", step_ops(Cell::Lstm, ph, ph, layers, k) as f64 / 1e6),
+            ]);
+            eprintln!("  [{name}] done");
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Table 4: pixel-by-pixel sequential MNIST (synthetic glyphs), accuracy
+//! + Size/Operations at paper scale (LSTM h=100, 784 steps per sample).
+
+mod common;
+
+use rbtw::coordinator::LrSchedule;
+use rbtw::quant::{paper_kbytes, rnn_weight_params, step_ops, weight_bytes,
+                  Cell};
+use rbtw::runtime::Engine;
+use rbtw::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("Table 4: sequential MNIST accuracy");
+    let engine = Engine::cpu()?;
+    let steps = common::scaled(120);
+    let mut t = Table::new(&["model", "paper acc %", "ours acc %",
+                             "size KB", "KOps"]);
+    for (method, label) in [("fp", "LSTM (baseline)"),
+                            ("bin", "binary (ours)"),
+                            ("ter", "ternary (ours)"),
+                            ("bc", "BinaryConnect"),
+                            ("alt2", "Alternating 2-bit")] {
+        let name = format!("mnist_{method}");
+        if !common::have(&name) {
+            continue;
+        }
+        let (test, _) = common::run_experiment(
+            &engine, &name, steps, 1e-3, LrSchedule::Constant)?;
+        let params = rnn_weight_params(Cell::Lstm, 1, 100, 1);
+        let k = if method == "alt2" { 2 } else { 1 };
+        t.row(&[
+            label.into(),
+            format!("{:.1}", common::paper_value(&name).unwrap_or(f64::NAN)),
+            format!("{test:.1}"),
+            paper_kbytes(weight_bytes(params, common::bits(&name))).to_string(),
+            format!("{:.1}", step_ops(Cell::Lstm, 1, 100, 1, k) as f64 / 1e3),
+        ]);
+        eprintln!("  [{name}] done");
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 6: char-level BPC with (BN-)GRUs on the three corpora —
+//! the paper's architecture-generality check.
+
+mod common;
+
+use rbtw::coordinator::LrSchedule;
+use rbtw::quant::{paper_kbytes, rnn_weight_params, weight_bytes, Cell};
+use rbtw::runtime::Engine;
+use rbtw::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    common::banner("Table 6: char-level BPC, GRU");
+    let engine = Engine::cpu()?;
+    let steps = common::char_steps();
+    for corpus in ["ptb", "wp", "lk"] {
+        let vocab = match corpus { "ptb" => 50, "wp" => 87, _ => 101 };
+        println!("\n-- corpus {corpus}, {steps} steps --");
+        let mut t = Table::new(&["model", "paper bpc", "ours bpc",
+                                 "paper size KB"]);
+        for (method, label) in [("fp", "GRU (baseline)"),
+                                ("bin", "GRU binary (ours)"),
+                                ("ter", "GRU ternary (ours)")] {
+            let name = format!("gru_{corpus}_{method}");
+            if !common::have(&name) {
+                continue;
+            }
+            let (test, _) = common::run_experiment(
+                &engine, &name, steps, 1e-2, LrSchedule::Constant)?;
+            let (ph, _) = common::paper_dims(&name).unwrap_or((512, 1));
+            let params = rnn_weight_params(Cell::Gru, vocab, ph, 1);
+            t.row(&[label.into(),
+                    format!("{:.2}", common::paper_value(&name).unwrap_or(f64::NAN)),
+                    format!("{test:.3}"),
+                    paper_kbytes(weight_bytes(params, common::bits(&name)))
+                        .to_string()]);
+            eprintln!("  [{name}] done");
+        }
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Table 7: implementation results of the binary/ternary accelerators vs
+//! full precision — low-power and high-speed design points from the
+//! calibrated 65 nm component model, plus the §6 headline factors.
+
+mod common;
+
+use rbtw::hwsim::{high_speed_design, low_power_savings, synthesize,
+                  HwConfig, Precision};
+use rbtw::quant::bandwidth_saving_vs_12bit;
+use rbtw::util::table::Table;
+
+fn main() {
+    common::banner("Table 7: accelerator implementation results");
+    // paper's published rows for side-by-side comparison
+    let paper: &[(&str, &str, usize, f64, f64, f64)] = &[
+        ("low-power", "Full-Precision", 100, 80.0, 2.56, 336.0),
+        ("low-power", "Binary", 100, 80.0, 0.24, 37.0),
+        ("low-power", "Ternary", 100, 80.0, 0.42, 61.0),
+        ("high-speed", "Full-Precision", 100, 80.0, 2.56, 336.0),
+        ("high-speed", "Binary", 1000, 800.0, 2.54, 347.0),
+        ("high-speed", "Ternary", 500, 400.0, 2.16, 302.0),
+    ];
+    let mut t = Table::new(&["design", "precision", "# MAC",
+                             "GOps/s (paper/ours)", "area mm2 (paper/ours)",
+                             "power mW (paper/ours)"]);
+    let fp = HwConfig::low_power(Precision::Fixed12);
+    for &(design, plabel, pmac, pgops, parea, ppow) in paper {
+        let prec = match plabel {
+            "Binary" => Precision::Binary,
+            "Ternary" => Precision::Ternary,
+            _ => Precision::Fixed12,
+        };
+        let cfg = match design {
+            "low-power" => HwConfig::low_power(prec),
+            _ => high_speed_design(prec, &fp),
+        };
+        let s = synthesize(&cfg);
+        assert_eq!(cfg.mac_units, pmac, "MAC count mismatch vs paper");
+        t.row(&[
+            design.into(),
+            plabel.into(),
+            format!("{}", cfg.mac_units),
+            format!("{pgops:.0} / {:.0}", s.throughput_gops),
+            format!("{parea:.2} / {:.2}", s.area_mm2),
+            format!("{ppow:.0} / {:.0}", s.power_mw),
+        ]);
+    }
+    t.print();
+
+    println!("\nheadline factors:");
+    let (ab, pb) = low_power_savings(Precision::Binary);
+    let (at, pt) = low_power_savings(Precision::Ternary);
+    println!("  binary low-power:  {ab:.1}x area (paper 10.6x), {pb:.1}x power (paper 9x)");
+    println!("  ternary low-power: {at:.1}x area, {pt:.1}x power");
+    println!("  memory bandwidth:  binary {:.0}x, ternary {:.0}x (paper: up to 12x)",
+             bandwidth_saving_vs_12bit(1.0), bandwidth_saving_vs_12bit(2.0));
+}

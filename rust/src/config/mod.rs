@@ -1,0 +1,256 @@
+//! Experiment configuration: a hand-rolled TOML-subset parser (offline —
+//! no `toml` crate) plus the run presets the CLI and benches share.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string /
+//! integer / float / bool / homogeneous-scalar-array values, `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{LrSchedule, TrainSpec};
+
+/// One parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value ("" = top level).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Build a TrainSpec from a `[train]` section, falling back to
+    /// task-appropriate defaults for missing keys.
+    pub fn train_spec(&self, defaults: TrainSpec) -> Result<TrainSpec> {
+        let mut spec = defaults;
+        if let Some(s) = self.sections.get("train") {
+            if let Some(v) = s.get("steps") {
+                spec.steps = v.as_i64().context("steps")? as usize;
+            }
+            if let Some(v) = s.get("lr") {
+                spec.lr = v.as_f64().context("lr")? as f32;
+            }
+            if let Some(v) = s.get("eval_every") {
+                spec.eval_every = v.as_i64().context("eval_every")? as usize;
+            }
+            if let Some(v) = s.get("eval_batches") {
+                spec.eval_batches = v.as_i64().context("eval_batches")? as usize;
+            }
+            if let Some(v) = s.get("seed") {
+                spec.seed = v.as_i64().context("seed")? as u64;
+            }
+            if let Some(v) = s.get("verbose") {
+                spec.verbose = v.as_bool().context("verbose")?;
+            }
+            if let Some(v) = s.get("schedule") {
+                spec.schedule = match v.as_str().context("schedule")? {
+                    "constant" => LrSchedule::Constant,
+                    "plateau" => LrSchedule::Plateau { factor: 4.0 },
+                    "exp" => LrSchedule::Exp { rate: 0.97, every: 100 },
+                    other => bail!("unknown schedule {other}"),
+                };
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// Task-default training presets (mirror Appendix C).
+pub fn default_spec_for_task(task: &str) -> TrainSpec {
+    match task {
+        // Appendix C.1: Adam, lr 2e-3
+        "charlm" => TrainSpec { lr: 2e-3, steps: 400, ..TrainSpec::default() },
+        // Appendix C.2: SGD, high initial lr, divide by 4 on plateau
+        "wordlm" => TrainSpec {
+            lr: 1.0,
+            steps: 400,
+            schedule: LrSchedule::Plateau { factor: 4.0 },
+            ..TrainSpec::default()
+        },
+        // Appendix C.3: Adam, lr 1e-3
+        "mnist" => TrainSpec { lr: 1e-3, steps: 200, eval_every: 40,
+                               ..TrainSpec::default() },
+        // Appendix C.4: Adam, lr 3e-3 exp decay
+        "qa" => TrainSpec {
+            lr: 3e-3,
+            steps: 300,
+            schedule: LrSchedule::Exp { rate: 0.9, every: 50 },
+            ..TrainSpec::default()
+        },
+        _ => TrainSpec::default(),
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unclosed array")?;
+        let mut items = vec![];
+        for part in body.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').context("unclosed string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            top = 1
+            [train]
+            steps = 500          # comment
+            lr = 0.002
+            verbose = true
+            schedule = "plateau"
+            corpora = ["ptb", "wp"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(cfg.get("train", "steps"), Some(&Value::Int(500)));
+        assert_eq!(cfg.get("train", "lr").unwrap().as_f64(), Some(0.002));
+        assert_eq!(cfg.get("train", "verbose").unwrap().as_bool(), Some(true));
+        let arr = match cfg.get("train", "corpora").unwrap() {
+            Value::Arr(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 2);
+    }
+
+    #[test]
+    fn builds_train_spec() {
+        let cfg = Config::parse(
+            "[train]\nsteps = 7\nlr = 0.5\nschedule = \"plateau\"\n",
+        )
+        .unwrap();
+        let spec = cfg.train_spec(default_spec_for_task("charlm")).unwrap();
+        assert_eq!(spec.steps, 7);
+        assert_eq!(spec.lr, 0.5);
+        assert!(matches!(spec.schedule, LrSchedule::Plateau { .. }));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(Config::parse("[oops\n").is_err());
+        assert!(Config::parse("keyonly\n").is_err());
+        assert!(Config::parse("a = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn task_defaults_differ() {
+        assert!(default_spec_for_task("wordlm").lr > default_spec_for_task("charlm").lr);
+        assert!(matches!(default_spec_for_task("qa").schedule, LrSchedule::Exp { .. }));
+    }
+}

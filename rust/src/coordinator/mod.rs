@@ -1,0 +1,10 @@
+//! L3 coordination: the training orchestrator and the continuous-batching
+//! inference server. Everything here deals in plain rust types; XLA
+//! values stay inside `runtime::Session`.
+
+pub mod server;
+pub mod trainer;
+
+pub use server::{InferenceServer, Request, Response, ServerStats};
+pub use trainer::{EvalResult, LrSchedule, Split, TaskData, TrainReport,
+                  TrainSpec, Trainer};

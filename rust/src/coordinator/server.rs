@@ -1,0 +1,307 @@
+//! Serving coordinator: a continuous-batching inference server over the
+//! fused-Pallas-cell `infer_*` entrypoints.
+//!
+//! Architecture (vLLM-router-like, scaled to this model family):
+//! * clients submit [`Request`]s through a bounded queue (backpressure:
+//!   `submit` fails fast when the queue is full);
+//! * a single engine worker owns the `Session` and a fixed number of
+//!   decode **slots** (the `infer_b16` batch width). Each engine step
+//!   advances every active slot by one token — prompt tokens first
+//!   (prefill, scoring mode), then sampled continuation tokens;
+//! * finished requests free their slot, which is immediately refilled
+//!   from the queue — no batch-boundary stalls (continuous batching).
+//!
+//! The LSTM state (h, c) of every slot lives in two host-side f32
+//! matrices that are rebuilt into literals per step — the state is tiny
+//! ((B, H) each) compared to the weight stream, matching the paper's
+//! observation that recurrent serving is weight-bandwidth-bound.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{literal, Engine, Session};
+use crate::util::Rng;
+
+/// A generation/scoring request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// prompt tokens (consumed in scoring mode).
+    pub prompt: Vec<i32>,
+    /// number of tokens to generate after the prompt.
+    pub gen_len: usize,
+    /// sampling temperature; 0 = greedy.
+    pub temperature: f32,
+}
+
+/// Completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub generated: Vec<i32>,
+    /// mean log-prob of the prompt tokens under the model (scoring).
+    pub prompt_logprob: f64,
+    pub queue_time: Duration,
+    pub run_time: Duration,
+    pub engine_steps: u64,
+}
+
+/// Server statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    pub completed: u64,
+    pub engine_steps: u64,
+    pub tokens_processed: u64,
+    pub peak_active_slots: usize,
+}
+
+struct Slot {
+    req: Request,
+    submitted: Instant,
+    started: Instant,
+    pos: usize,
+    generated: Vec<i32>,
+    logprob_sum: f64,
+    last_token: i32,
+    steps: u64,
+}
+
+/// The in-process serving engine. Drive it with [`InferenceServer::pump`]
+/// (bench/test mode) or wrap it in a thread.
+pub struct InferenceServer {
+    sess: Session,
+    entry: String,
+    slots: Vec<Option<Slot>>,
+    queue: VecDeque<(Request, Instant)>,
+    queue_cap: usize,
+    vocab: usize,
+    hidden: usize,
+    /// per-slot hidden/cell state, row-major (n_slots, hidden).
+    h: Vec<f32>,
+    c: Vec<f32>,
+    done_tx: mpsc::Sender<Response>,
+    pub done_rx: mpsc::Receiver<Response>,
+    rng: Rng,
+    seed_counter: i32,
+    pub stats: ServerStats,
+}
+
+impl InferenceServer {
+    /// Open a server over `artifact`'s `infer_b16` entrypoint.
+    pub fn open(engine: &Engine, artifacts_dir: &Path, artifact: &str,
+                queue_cap: usize) -> Result<Self> {
+        let sess = Session::open(engine, artifacts_dir, artifact)?;
+        let entry = "infer_b16".to_string();
+        let e = sess.meta.entry(&entry)
+            .context("artifact lacks infer_b16 (serving) entrypoint")?;
+        let x = &e.inputs[e.input_index("x", "x").unwrap()];
+        let n_slots = x.shape[0];
+        let vocab = x.shape[1];
+        let hidden = sess.meta.hidden();
+        let (done_tx, done_rx) = mpsc::channel();
+        Ok(Self {
+            sess,
+            entry,
+            slots: (0..n_slots).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            queue_cap,
+            vocab,
+            hidden,
+            h: vec![0.0; n_slots * hidden],
+            c: vec![0.0; n_slots * hidden],
+            done_tx,
+            done_rx,
+            rng: Rng::new(0x5E17E),
+            seed_counter: 1,
+            stats: ServerStats::default(),
+        })
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Enqueue a request; fails when the queue is full (backpressure).
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        anyhow::ensure!(self.queue.len() < self.queue_cap,
+                        "queue full ({} pending)", self.queue.len());
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(req.prompt.iter().all(|&t| (t as usize) < self.vocab),
+                        "prompt token out of vocab");
+        self.queue.push_back((req, Instant::now()));
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Admit queued requests into free slots.
+    fn schedule(&mut self) {
+        for i in 0..self.slots.len() {
+            if self.slots[i].is_none() {
+                if let Some((req, submitted)) = self.queue.pop_front() {
+                    // fresh state for the new stream
+                    self.h[i * self.hidden..(i + 1) * self.hidden].fill(0.0);
+                    self.c[i * self.hidden..(i + 1) * self.hidden].fill(0.0);
+                    let first = req.prompt[0];
+                    self.slots[i] = Some(Slot {
+                        started: Instant::now(),
+                        submitted,
+                        pos: 0,
+                        generated: vec![],
+                        logprob_sum: 0.0,
+                        last_token: first,
+                        steps: 0,
+                        req,
+                    });
+                }
+            }
+        }
+        let active = self.active();
+        self.stats.peak_active_slots = self.stats.peak_active_slots.max(active);
+    }
+
+    /// One engine step: every active slot advances one token.
+    /// Returns the number of active slots stepped.
+    pub fn step(&mut self) -> Result<usize> {
+        self.schedule();
+        let n = self.slots.len();
+        let active = self.active();
+        if active == 0 {
+            return Ok(0);
+        }
+        // build the one-hot input from each slot's current token
+        let mut x = vec![0.0f32; n * self.vocab];
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(s) = slot {
+                x[i * self.vocab + s.last_token as usize] = 1.0;
+            }
+        }
+        let xl = literal::f32_literal(&x, &[n, self.vocab])?;
+        let hl = literal::f32_literal(&self.h, &[n, self.hidden])?;
+        let cl = literal::f32_literal(&self.c, &[n, self.hidden])?;
+        self.seed_counter = self.seed_counter.wrapping_add(1);
+        let (logits, h2, c2) =
+            self.sess.infer_step(&self.entry, &xl, &hl, &cl, self.seed_counter)?;
+        self.h = literal::to_f32_vec(&h2)?;
+        self.c = literal::to_f32_vec(&c2)?;
+        let logits = literal::to_f32_vec(&logits)?;
+        self.stats.engine_steps += 1;
+
+        for i in 0..n {
+            let Some(slot) = self.slots[i].as_mut() else { continue };
+            slot.steps += 1;
+            self.stats.tokens_processed += 1;
+            let row = &logits[i * self.vocab..(i + 1) * self.vocab];
+            // advance: either consume the next prompt token (scoring) or
+            // sample a continuation.
+            if slot.pos + 1 < slot.req.prompt.len() {
+                let next = slot.req.prompt[slot.pos + 1];
+                slot.logprob_sum += log_softmax_at(row, next as usize);
+                slot.pos += 1;
+                slot.last_token = next;
+            } else if slot.generated.len() < slot.req.gen_len {
+                let next = sample_token(row, slot.req.temperature, &mut self.rng);
+                slot.generated.push(next);
+                slot.last_token = next;
+            }
+            let done = slot.pos + 1 >= slot.req.prompt.len()
+                && slot.generated.len() >= slot.req.gen_len;
+            if done {
+                let s = self.slots[i].take().unwrap();
+                let scored = (s.req.prompt.len() - 1).max(1);
+                let resp = Response {
+                    id: s.req.id,
+                    generated: s.generated,
+                    prompt_logprob: s.logprob_sum / scored as f64,
+                    queue_time: s.started.duration_since(s.submitted),
+                    run_time: s.started.elapsed(),
+                    engine_steps: s.steps,
+                };
+                let _ = self.done_tx.send(resp);
+                self.stats.completed += 1;
+            }
+        }
+        Ok(active)
+    }
+
+    /// Drive the engine until the queue and all slots drain; collect
+    /// responses. `max_steps` guards against livelock.
+    pub fn pump(&mut self, max_steps: usize) -> Result<Vec<Response>> {
+        let mut out = vec![];
+        for _ in 0..max_steps {
+            if self.pending() == 0 && self.active() == 0 {
+                break;
+            }
+            self.step()?;
+            while let Ok(r) = self.done_rx.try_recv() {
+                out.push(r);
+            }
+        }
+        while let Ok(r) = self.done_rx.try_recv() {
+            out.push(r);
+        }
+        Ok(out)
+    }
+}
+
+fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
+    let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+    let z: f64 = logits.iter().map(|&l| ((l - max) as f64).exp()).sum();
+    (logits[idx] - max) as f64 - z.ln()
+}
+
+fn sample_token(logits: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i32)
+            .unwrap_or(0);
+    }
+    let max = logits.iter().cloned().fold(f32::MIN, f32::max);
+    let weights: Vec<f64> = logits
+        .iter()
+        .map(|&l| (((l - max) / temperature) as f64).exp())
+        .collect();
+    rng.categorical(&weights) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampling_picks_argmax() {
+        let mut rng = Rng::new(1);
+        let logits = [0.1f32, 2.0, -1.0, 0.5];
+        assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn tempered_sampling_prefers_high_logits() {
+        let mut rng = Rng::new(2);
+        let logits = [0.0f32, 4.0, 0.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample_token(&logits, 1.0, &mut rng) == 1)
+            .count();
+        assert!(hits > 150, "hits {hits}");
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let total: f64 = (0..3).map(|i| log_softmax_at(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,428 @@
+//! Training orchestrator: owns the step loop, LR schedule, evaluation
+//! cadence and checkpointing for one experiment artifact.
+//!
+//! The division of labor mirrors the paper's workflow: XLA executes the
+//! AOT-compiled train/eval steps (Alg. 1), while rust owns everything
+//! around them — data order, the word-PTB divide-by-4-on-plateau LR rule
+//! (Appendix C.2), early stopping and reporting. Python is not involved.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::data::{charlm, mnist::GlyphSet, qa::ClozeGen, wordlm};
+use crate::metrics::{bpc, perplexity, Series};
+use crate::model::Checkpoint;
+use crate::runtime::{literal, Engine, Session};
+use crate::util::Rng;
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant,
+    /// divide by `factor` whenever the validation metric worsens
+    /// (the paper's word-PTB rule: factor 4).
+    Plateau { factor: f32 },
+    /// multiply by `rate` every `every` steps (exponential decay — the
+    /// paper's War&Peace/LinuxKernel setting).
+    Exp { rate: f32, every: usize },
+}
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub steps: usize,
+    pub lr: f32,
+    pub schedule: LrSchedule,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        Self {
+            steps: 300,
+            lr: 2e-3,
+            schedule: LrSchedule::Constant,
+            eval_every: 50,
+            eval_batches: 8,
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+/// Where eval batches come from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Valid,
+    Test,
+}
+
+/// Task-specific data feed, constructed from the artifact metadata.
+pub enum TaskData {
+    CharLm {
+        corpus: charlm::CharCorpus,
+        seq: usize,
+        batch: usize,
+        pos: usize,
+    },
+    WordLm {
+        corpus: wordlm::WordCorpus,
+        seq: usize,
+        batch: usize,
+        pos: usize,
+    },
+    Mnist {
+        glyphs: GlyphSet,
+        batch: usize,
+        rng: Rng,
+    },
+    Qa {
+        gen: ClozeGen,
+        batch: usize,
+        rng: Rng,
+    },
+}
+
+/// Infer the corpus spec from the artifact's vocabulary (the registry
+/// fixes vocab per corpus: 50=ptb, 87=wp, 101=lk, 27=text8).
+fn char_spec_for_vocab(vocab: usize) -> Result<charlm::CorpusSpec> {
+    let name = match vocab {
+        50 => "ptb",
+        87 => "wp",
+        101 => "lk",
+        27 => "text8",
+        v => bail!("no corpus mapped to vocab {v}"),
+    };
+    Ok(charlm::spec_by_name(name).unwrap())
+}
+
+impl TaskData {
+    pub fn for_session(sess: &Session) -> Result<Self> {
+        let seq = sess.meta.seq_len();
+        let batch = sess.meta.batch();
+        match sess.meta.task.as_str() {
+            "charlm" => Ok(TaskData::CharLm {
+                corpus: charlm::CharCorpus::synthetic(&char_spec_for_vocab(
+                    sess.meta.vocab(),
+                )?),
+                seq,
+                batch,
+                pos: 0,
+            }),
+            "wordlm" => Ok(TaskData::WordLm {
+                corpus: wordlm::WordCorpus::synthetic(&wordlm::ptb_words_like()),
+                seq,
+                batch,
+                pos: 0,
+            }),
+            "mnist" => Ok(TaskData::Mnist {
+                glyphs: GlyphSet::new(0xD161),
+                batch,
+                rng: Rng::new(0xFEED),
+            }),
+            "qa" => Ok(TaskData::Qa {
+                gen: ClozeGen::new(seq, 10),
+                batch,
+                rng: Rng::new(0xC102E),
+            }),
+            t => bail!("unknown task {t}"),
+        }
+    }
+
+    /// Metric name for reporting (bpc / ppl / acc).
+    pub fn metric_name(&self) -> &'static str {
+        match self {
+            TaskData::CharLm { .. } => "bpc",
+            TaskData::WordLm { .. } => "ppl",
+            TaskData::Mnist { .. } | TaskData::Qa { .. } => "acc",
+        }
+    }
+
+    /// Convert a (loss, maybe-acc) eval result into the task metric.
+    pub fn to_metric(&self, loss: f64, acc: Option<f64>) -> f64 {
+        match self {
+            TaskData::CharLm { .. } => bpc(loss),
+            TaskData::WordLm { .. } => perplexity(loss),
+            TaskData::Mnist { .. } | TaskData::Qa { .. } => {
+                acc.unwrap_or(f64::NAN) * 100.0
+            }
+        }
+    }
+
+    /// Lower metric values are better for LM tasks, higher for accuracy.
+    pub fn lower_is_better(&self) -> bool {
+        !matches!(self, TaskData::Mnist { .. } | TaskData::Qa { .. })
+    }
+}
+
+/// Sequential-window batch from a token stream (contiguous LM batching).
+fn lm_window(stream: &[u16], seq: usize, batch: usize, pos: &mut usize)
+    -> (Vec<i32>, Vec<i32>)
+{
+    let track = stream.len() / batch;
+    if *pos + seq + 1 > track {
+        *pos = 0;
+    }
+    let mut x = vec![0i32; seq * batch];
+    let mut y = vec![0i32; seq * batch];
+    for b in 0..batch {
+        let base = b * track + *pos;
+        for t in 0..seq {
+            x[t * batch + b] = stream[base + t] as i32;
+            y[t * batch + b] = stream[base + t + 1] as i32;
+        }
+    }
+    *pos += seq;
+    (x, y)
+}
+
+/// Evaluation summary.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub acc: Option<f64>,
+    pub metric: f64,
+}
+
+/// Training run report (feeds the benches and EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub name: String,
+    pub train_loss: Series,
+    pub valid_metric: Series,
+    pub final_valid: f64,
+    pub final_test: f64,
+    pub metric_name: &'static str,
+    pub steps_run: usize,
+    pub lr_final: f32,
+}
+
+/// The orchestrator.
+pub struct Trainer {
+    pub sess: Session,
+    pub data: TaskData,
+    pub spec: TrainSpec,
+}
+
+impl Trainer {
+    pub fn new(engine: &Engine, artifacts_dir: &Path, name: &str,
+               spec: TrainSpec) -> Result<Self> {
+        let sess = Session::open(engine, artifacts_dir, name)
+            .with_context(|| format!("opening artifact {name}"))?;
+        let data = TaskData::for_session(&sess)?;
+        Ok(Self { sess, data, spec })
+    }
+
+    fn next_train_batch(&mut self) -> Result<Vec<(&'static str, Literal)>> {
+        let seq = self.sess.meta.seq_len();
+        match &mut self.data {
+            TaskData::CharLm { corpus, seq, batch, pos } => {
+                let (x, y) = lm_window(&corpus.train, *seq, *batch, pos);
+                Ok(vec![
+                    ("x", literal::i32_literal(&x, &[*seq, *batch])?),
+                    ("y", literal::i32_literal(&y, &[*seq, *batch])?),
+                ])
+            }
+            TaskData::WordLm { corpus, seq, batch, pos } => {
+                let (x, y) = lm_window(&corpus.train, *seq, *batch, pos);
+                Ok(vec![
+                    ("x", literal::i32_literal(&x, &[*seq, *batch])?),
+                    ("y", literal::i32_literal(&y, &[*seq, *batch])?),
+                ])
+            }
+            TaskData::Mnist { glyphs, batch, rng } => {
+                let (x, y) = glyphs.batch(rng, *batch);
+                Ok(vec![
+                    ("x", literal::f32_literal(&x, &[seq, *batch, 1])?),
+                    ("y", literal::i32_literal(&y, &[*batch])?),
+                ])
+            }
+            TaskData::Qa { gen, batch, rng } => {
+                let (doc, query, y) = gen.batch(rng, *batch);
+                Ok(vec![
+                    ("doc", literal::i32_literal(&doc, &[gen.doc_len, *batch])?),
+                    ("query", literal::i32_literal(&query, &[gen.query_len, *batch])?),
+                    ("y", literal::i32_literal(&y, &[*batch])?),
+                ])
+            }
+        }
+    }
+
+    /// Mean eval over `n_batches` fresh batches from `split`.
+    pub fn evaluate(&mut self, split: Split, n_batches: usize) -> Result<EvalResult> {
+        self.evaluate_entry("eval", split, n_batches)
+    }
+
+    /// Evaluate through an arbitrary eval entrypoint (the `eval_len*`
+    /// variants drive Fig. 2b).
+    pub fn evaluate_entry(&mut self, entry: &str, split: Split,
+                          n_batches: usize) -> Result<EvalResult> {
+        let e = self.sess.meta.entry(entry)?;
+        // entry data shape may differ from the train shape (eval_len*)
+        let (eseq, ebatch) = match &self.data {
+            TaskData::Mnist { .. } => {
+                let x = &e.inputs[e.input_index("x", "x").unwrap()];
+                (x.shape[0], x.shape[1])
+            }
+            TaskData::Qa { .. } => {
+                let d = &e.inputs[e.input_index("doc", "doc").unwrap()];
+                (d.shape[0], d.shape[1])
+            }
+            _ => {
+                let x = &e.inputs[e.input_index("x", "x").unwrap()];
+                (x.shape[0], x.shape[1])
+            }
+        };
+        let mut loss_sum = 0.0;
+        let mut acc_sum = 0.0;
+        let mut has_acc = false;
+        let mut pos = 0usize;
+        let mut rng = Rng::new(self.spec.seed ^ 0xE7A1);
+        for i in 0..n_batches {
+            let seed = (self.spec.seed as i32).wrapping_add(1000 + i as i32);
+            let out = match &mut self.data {
+                TaskData::CharLm { corpus, .. } => {
+                    let stream = match split {
+                        Split::Valid => &corpus.valid,
+                        Split::Test => &corpus.test,
+                    };
+                    let (x, y) = lm_window(stream, eseq, ebatch, &mut pos);
+                    let xl = literal::i32_literal(&x, &[eseq, ebatch])?;
+                    let yl = literal::i32_literal(&y, &[eseq, ebatch])?;
+                    self.sess.eval_step(entry, &[("x", &xl), ("y", &yl)], seed)?
+                }
+                TaskData::WordLm { corpus, .. } => {
+                    let stream = match split {
+                        Split::Valid => &corpus.valid,
+                        Split::Test => &corpus.test,
+                    };
+                    let (x, y) = lm_window(stream, eseq, ebatch, &mut pos);
+                    let xl = literal::i32_literal(&x, &[eseq, ebatch])?;
+                    let yl = literal::i32_literal(&y, &[eseq, ebatch])?;
+                    self.sess.eval_step(entry, &[("x", &xl), ("y", &yl)], seed)?
+                }
+                TaskData::Mnist { glyphs, .. } => {
+                    let (x, y) = glyphs.batch(&mut rng, ebatch);
+                    let xl = literal::f32_literal(&x, &[eseq, ebatch, 1])?;
+                    let yl = literal::i32_literal(&y, &[ebatch])?;
+                    self.sess.eval_step(entry, &[("x", &xl), ("y", &yl)], seed)?
+                }
+                TaskData::Qa { gen, .. } => {
+                    let (doc, query, y) = gen.batch(&mut rng, ebatch);
+                    let dl = literal::i32_literal(&doc, &[gen.doc_len, ebatch])?;
+                    let ql = literal::i32_literal(&query, &[gen.query_len, ebatch])?;
+                    let yl = literal::i32_literal(&y, &[ebatch])?;
+                    self.sess.eval_step(entry, &[("doc", &dl), ("query", &ql),
+                                                 ("y", &yl)], seed)?
+                }
+            };
+            loss_sum += out[0] as f64;
+            if out.len() > 1 {
+                acc_sum += out[1] as f64;
+                has_acc = true;
+            }
+        }
+        let loss = loss_sum / n_batches as f64;
+        let acc = has_acc.then_some(acc_sum / n_batches as f64);
+        Ok(EvalResult { loss, acc, metric: self.data.to_metric(loss, acc) })
+    }
+
+    /// Full training run per the spec. Returns the report.
+    pub fn run(&mut self) -> Result<TrainReport> {
+        let mut train_loss = Series::new("train_loss");
+        let mut valid_metric = Series::new("valid_metric");
+        let mut lr = self.spec.lr;
+        let mut best = f64::INFINITY;
+        let lower_better = self.data.lower_is_better();
+        let is_qa = matches!(self.data, TaskData::Qa { .. });
+
+        for step in 0..self.spec.steps {
+            let seed = (self.spec.seed as i32).wrapping_add(step as i32);
+            let batch = self.next_train_batch()?;
+            let loss = if is_qa {
+                let refs: Vec<(&str, &Literal)> =
+                    batch.iter().map(|(n, l)| (*n, l)).collect();
+                let (d, q, y) = (refs[0].1, refs[1].1, refs[2].1);
+                self.sess.train_step_qa(d, q, y, seed, lr)?.0
+            } else {
+                let refs: Vec<(&str, &Literal)> =
+                    batch.iter().map(|(n, l)| (*n, l)).collect();
+                let (x, y) = (refs[0].1, refs[1].1);
+                self.sess.train_step(x, y, seed, lr)?
+            };
+            if !loss.is_finite() {
+                bail!("divergence at step {step}: loss {loss}");
+            }
+            train_loss.push(step as u64, loss as f64);
+
+            if let LrSchedule::Exp { rate, every } = self.spec.schedule {
+                if step > 0 && step % every == 0 {
+                    lr *= rate;
+                }
+            }
+
+            let do_eval = (step + 1) % self.spec.eval_every == 0
+                || step + 1 == self.spec.steps;
+            if do_eval {
+                let ev = self.evaluate(Split::Valid, self.spec.eval_batches)?;
+                valid_metric.push(step as u64 + 1, ev.metric);
+                let score = if lower_better { ev.metric } else { -ev.metric };
+                if let LrSchedule::Plateau { factor } = self.spec.schedule {
+                    if score > best {
+                        lr /= factor;
+                    }
+                }
+                best = best.min(score);
+                if self.spec.verbose {
+                    eprintln!(
+                        "[{}] step {:>5} loss {:.4} valid {} {:.4} lr {:.2e}",
+                        self.sess.meta.name, step + 1, loss,
+                        self.data.metric_name(), ev.metric, lr
+                    );
+                }
+            }
+        }
+        let final_valid = valid_metric.last().unwrap_or(f64::NAN);
+        let test = self.evaluate(Split::Test, self.spec.eval_batches)?;
+        Ok(TrainReport {
+            name: self.sess.meta.name.clone(),
+            train_loss,
+            valid_metric,
+            final_valid,
+            final_test: test.metric,
+            metric_name: self.data.metric_name(),
+            steps_run: self.spec.steps,
+            lr_final: lr,
+        })
+    }
+
+    /// Snapshot the live model into a checkpoint.
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        let mut ck = Checkpoint::default();
+        for (group, vg) in [("params", &self.sess.params),
+                            ("state", &self.sess.state),
+                            ("opt", &self.sess.opt)] {
+            for (name, (shape, data)) in vg.export()? {
+                ck.push(group, &name, shape, data);
+            }
+        }
+        Ok(ck)
+    }
+
+    /// Restore a checkpoint into the live session.
+    pub fn restore(&mut self, ck: &Checkpoint) -> Result<()> {
+        for (group, vg) in [("params", &mut self.sess.params),
+                            ("state", &mut self.sess.state),
+                            ("opt", &mut self.sess.opt)] {
+            for (name, entry) in ck.group(group) {
+                vg.set_f32(name, &entry.data)?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,144 @@
+//! Synthetic sequential-MNIST substitute (§5.3).
+//!
+//! Pixel-by-pixel MNIST tests 784-step temporal credit assignment. The
+//! substitute keeps exactly that structure: 10 procedurally generated
+//! 28×28 glyph classes (seeded blob templates), instances drawn with
+//! per-pixel noise and small random translations, scanned in scanline
+//! order — classes are not separable from single pixels, so the LSTM
+//! must integrate over the full sequence just as with real MNIST.
+
+use crate::util::Rng;
+
+pub const SIDE: usize = 28;
+pub const PIXELS: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+/// Procedural glyph dataset.
+pub struct GlyphSet {
+    templates: Vec<[f32; PIXELS]>,
+    noise: f32,
+    max_shift: i32,
+}
+
+impl GlyphSet {
+    /// Build the 10 class templates (deterministic in `seed`).
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut templates = Vec::with_capacity(CLASSES);
+        for _ in 0..CLASSES {
+            // random strokes: a handful of thick line segments per class
+            let mut img = [0.0f32; PIXELS];
+            let strokes = 3 + rng.below_usize(3);
+            for _ in 0..strokes {
+                let (x0, y0) = (rng.below_usize(SIDE) as f32, rng.below_usize(SIDE) as f32);
+                let (x1, y1) = (rng.below_usize(SIDE) as f32, rng.below_usize(SIDE) as f32);
+                let steps = 40;
+                for s in 0..=steps {
+                    let t = s as f32 / steps as f32;
+                    let x = x0 + (x1 - x0) * t;
+                    let y = y0 + (y1 - y0) * t;
+                    for dy in -1i32..=1 {
+                        for dx in -1i32..=1 {
+                            let xi = (x as i32 + dx).clamp(0, SIDE as i32 - 1) as usize;
+                            let yi = (y as i32 + dy).clamp(0, SIDE as i32 - 1) as usize;
+                            let w = 1.0 - 0.3 * ((dx * dx + dy * dy) as f32).sqrt();
+                            img[yi * SIDE + xi] = img[yi * SIDE + xi].max(w);
+                        }
+                    }
+                }
+            }
+            templates.push(img);
+        }
+        Self { templates, noise: 0.15, max_shift: 2 }
+    }
+
+    /// Sample one instance: (pixels scanline-order, label).
+    pub fn sample(&self, rng: &mut Rng) -> (Vec<f32>, usize) {
+        let label = rng.below_usize(CLASSES);
+        let t = &self.templates[label];
+        let dx = rng.below(2 * self.max_shift as u64 + 1) as i32 - self.max_shift;
+        let dy = rng.below(2 * self.max_shift as u64 + 1) as i32 - self.max_shift;
+        let mut img = vec![0.0f32; PIXELS];
+        for y in 0..SIDE as i32 {
+            for x in 0..SIDE as i32 {
+                let sx = x - dx;
+                let sy = y - dy;
+                let v = if (0..SIDE as i32).contains(&sx) && (0..SIDE as i32).contains(&sy) {
+                    t[(sy as usize) * SIDE + sx as usize]
+                } else {
+                    0.0
+                };
+                let noisy = v + self.noise * rng.normal_f32();
+                img[(y as usize) * SIDE + x as usize] = noisy.clamp(0.0, 1.0);
+            }
+        }
+        (img, label)
+    }
+
+    /// Batch in the artifact layout: x (T=784, B, 1) row-major f32,
+    /// y (B,) i32.
+    pub fn batch(&self, rng: &mut Rng, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        let mut x = vec![0.0f32; PIXELS * batch];
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            let (img, label) = self.sample(rng);
+            y[b] = label as i32;
+            for t in 0..PIXELS {
+                x[t * batch + b] = img[t];
+            }
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_templates() {
+        let a = GlyphSet::new(1);
+        let b = GlyphSet::new(1);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        assert_eq!(a.sample(&mut r1), b.sample(&mut r2));
+    }
+
+    #[test]
+    fn classes_are_distinct() {
+        let g = GlyphSet::new(2);
+        // mean template L2 distance between classes must be non-trivial
+        for i in 0..CLASSES {
+            for j in i + 1..CLASSES {
+                let d: f32 = g.templates[i]
+                    .iter()
+                    .zip(&g.templates[j])
+                    .map(|(a, b)| (a - b).powi(2))
+                    .sum();
+                assert!(d > 1.0, "classes {i},{j} nearly identical: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let g = GlyphSet::new(3);
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let (img, label) = g.sample(&mut rng);
+            assert!(label < CLASSES);
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+    }
+
+    #[test]
+    fn batch_layout_time_major() {
+        let g = GlyphSet::new(4);
+        let mut rng = Rng::new(9);
+        let (x, y) = g.batch(&mut rng, 3);
+        assert_eq!(x.len(), PIXELS * 3);
+        assert_eq!(y.len(), 3);
+        // every label valid
+        assert!(y.iter().all(|&l| (0..CLASSES as i32).contains(&l)));
+    }
+}

@@ -1,0 +1,13 @@
+//! Data pipelines: deterministic synthetic substitutes for the paper's
+//! corpora (DESIGN.md §3 documents each substitution) plus the batch
+//! iterators that feed the trainer in the artifacts' (T, B) layout.
+
+pub mod charlm;
+pub mod mnist;
+pub mod qa;
+pub mod wordlm;
+
+pub use charlm::{CharCorpus, CorpusSpec, LmBatcher};
+pub use mnist::GlyphSet;
+pub use qa::ClozeGen;
+pub use wordlm::WordCorpus;

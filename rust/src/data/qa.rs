@@ -1,0 +1,163 @@
+//! Synthetic cloze question-answering task (CNN-corpus substitute, §5.4).
+//!
+//! Hermann et al.'s CNN corpus is entity-anonymized cloze QA: documents
+//! mention entities by placeholder ids, and the query asks which entity
+//! fills a blank. The substitute generates exactly that structure:
+//! stories are sequences of (subject, relation, object) facts over
+//! anonymous entity tokens; the query restates one fact with the object
+//! replaced by a placeholder; the answer is the object's entity id.
+//! The Attentive Reader must locate the matching fact — the same
+//! attention behavior the paper's Table 5 exercises.
+
+use crate::util::Rng;
+
+/// Token-space layout (must match the `qa_*` artifact vocab of 120).
+pub const ENTITIES: usize = 30;
+pub const RELATIONS: usize = 20;
+pub const FILLERS: usize = 60;
+pub const VOCAB: usize = ENTITIES + RELATIONS + FILLERS + 10; // + specials
+
+pub const TOK_PLACEHOLDER: usize = ENTITIES + RELATIONS + FILLERS;
+pub const TOK_SEP: usize = TOK_PLACEHOLDER + 1;
+
+fn entity(i: usize) -> i32 {
+    i as i32
+}
+
+fn relation(i: usize) -> i32 {
+    (ENTITIES + i) as i32
+}
+
+fn filler(i: usize) -> i32 {
+    (ENTITIES + RELATIONS + i) as i32
+}
+
+/// One generated example.
+#[derive(Clone, Debug)]
+pub struct ClozeExample {
+    pub doc: Vec<i32>,
+    pub query: Vec<i32>,
+    pub answer: usize, // entity id in [0, ENTITIES)
+}
+
+/// Generator with fixed shapes (doc_len, query_len) matching the artifact.
+pub struct ClozeGen {
+    pub doc_len: usize,
+    pub query_len: usize,
+}
+
+impl ClozeGen {
+    pub fn new(doc_len: usize, query_len: usize) -> Self {
+        Self { doc_len, query_len }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> ClozeExample {
+        // facts: (subj, rel, obj); all distinct rels so the query is
+        // unambiguous.
+        let n_facts = (self.doc_len / 6).max(2).min(RELATIONS);
+        let mut rels: Vec<usize> = (0..RELATIONS).collect();
+        rng.shuffle(&mut rels);
+        let facts: Vec<(usize, usize, usize)> = (0..n_facts)
+            .map(|i| {
+                (rng.below_usize(ENTITIES), rels[i], rng.below_usize(ENTITIES))
+            })
+            .collect();
+        // story: "subj rel obj [filler...] SEP" per fact, padded w/ filler
+        let mut doc = Vec::with_capacity(self.doc_len);
+        for &(s, r, o) in &facts {
+            doc.push(entity(s));
+            doc.push(relation(r));
+            doc.push(entity(o));
+            doc.push(filler(rng.below_usize(FILLERS)));
+            doc.push(filler(rng.below_usize(FILLERS)));
+            doc.push(TOK_SEP as i32);
+            if doc.len() + 6 > self.doc_len {
+                break;
+            }
+        }
+        while doc.len() < self.doc_len {
+            doc.push(filler(rng.below_usize(FILLERS)));
+        }
+        doc.truncate(self.doc_len);
+        // pick a queried fact among those that made it into the doc
+        let kept = (self.doc_len / 6).min(facts.len()).max(1);
+        let &(s, r, o) = &facts[rng.below_usize(kept)];
+        let mut query = vec![entity(s), relation(r), TOK_PLACEHOLDER as i32];
+        while query.len() < self.query_len {
+            query.push(TOK_SEP as i32);
+        }
+        query.truncate(self.query_len);
+        ClozeExample { doc, query, answer: o }
+    }
+
+    /// Batch in artifact layout: doc (Td, B), query (Tq, B), y (B,).
+    pub fn batch(&self, rng: &mut Rng, batch: usize) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+        let mut doc = vec![0i32; self.doc_len * batch];
+        let mut query = vec![0i32; self.query_len * batch];
+        let mut y = vec![0i32; batch];
+        for b in 0..batch {
+            let ex = self.sample(rng);
+            y[b] = ex.answer as i32;
+            for t in 0..self.doc_len {
+                doc[t * batch + b] = ex.doc[t];
+            }
+            for t in 0..self.query_len {
+                query[t * batch + b] = ex.query[t];
+            }
+        }
+        (doc, query, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_fits_artifact() {
+        assert!(VOCAB <= 120, "VOCAB {VOCAB} exceeds artifact vocab");
+    }
+
+    #[test]
+    fn sample_is_well_formed() {
+        let g = ClozeGen::new(60, 10);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let ex = g.sample(&mut rng);
+            assert_eq!(ex.doc.len(), 60);
+            assert_eq!(ex.query.len(), 10);
+            assert!(ex.answer < ENTITIES);
+            assert!(ex.doc.iter().all(|&t| (t as usize) < VOCAB));
+            assert!(ex.query.iter().all(|&t| (t as usize) < VOCAB));
+            // the queried (subject, relation) pair must appear in the doc
+            // followed by the answer entity.
+            let (s, r) = (ex.query[0], ex.query[1]);
+            let found = ex.doc.windows(3).any(|w| {
+                w[0] == s && w[1] == r && w[2] == entity(ex.answer)
+            });
+            assert!(found, "answer fact missing from doc");
+        }
+    }
+
+    #[test]
+    fn answers_are_spread() {
+        let g = ClozeGen::new(60, 10);
+        let mut rng = Rng::new(2);
+        let mut seen = [false; ENTITIES];
+        for _ in 0..500 {
+            seen[g.sample(&mut rng).answer] = true;
+        }
+        let covered = seen.iter().filter(|&&s| s).count();
+        assert!(covered > ENTITIES / 2, "answer distribution degenerate");
+    }
+
+    #[test]
+    fn batch_layout() {
+        let g = ClozeGen::new(60, 10);
+        let mut rng = Rng::new(3);
+        let (doc, query, y) = g.batch(&mut rng, 4);
+        assert_eq!(doc.len(), 240);
+        assert_eq!(query.len(), 40);
+        assert_eq!(y.len(), 4);
+    }
+}

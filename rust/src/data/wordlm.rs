@@ -1,0 +1,101 @@
+//! Synthetic word-level corpus (Penn Treebank substitute).
+//!
+//! Word-PTB has a 10k vocabulary with Zipf-distributed unigrams and
+//! strong local (bigram) structure. The substitute: a 2k-vocabulary
+//! stream sampled from a mixture of a per-word bigram table and a Zipf
+//! unigram fallback — perplexity orderings across quantizers depend on
+//! that structure, not on the actual English tokens (DESIGN.md §3).
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct WordCorpusSpec {
+    pub vocab: usize,
+    pub train_len: usize,
+    pub valid_len: usize,
+    pub test_len: usize,
+    /// candidate successors per word in the bigram table.
+    pub fanout: usize,
+    /// probability of following the bigram table vs the Zipf fallback.
+    pub bigram_weight: f64,
+    pub seed: u64,
+}
+
+pub fn ptb_words_like() -> WordCorpusSpec {
+    WordCorpusSpec { vocab: 2000, train_len: 200_000, valid_len: 20_000,
+                     test_len: 20_000, fanout: 8, bigram_weight: 0.7,
+                     seed: 0xB0B }
+}
+
+pub struct WordCorpus {
+    pub vocab: usize,
+    pub train: Vec<u16>,
+    pub valid: Vec<u16>,
+    pub test: Vec<u16>,
+}
+
+impl WordCorpus {
+    pub fn synthetic(spec: &WordCorpusSpec) -> Self {
+        let mut rng = Rng::new(spec.seed);
+        let v = spec.vocab;
+        // Zipf weights w_i = 1/(i+1)^s with s ~ 1.
+        let zipf: Vec<f64> = (0..v).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        // bigram successors biased toward frequent words
+        let mut succ = vec![0u16; v * spec.fanout];
+        for s in succ.iter_mut() {
+            *s = rng.categorical(&zipf) as u16;
+        }
+        let mut wts = vec![0f64; spec.fanout];
+        for (i, w) in wts.iter_mut().enumerate() {
+            *w = 0.6f64.powi(i as i32).max(0.02);
+        }
+        let total = spec.train_len + spec.valid_len + spec.test_len;
+        let mut out = Vec::with_capacity(total);
+        let mut prev = 0usize;
+        let mut gen = rng.fork(7);
+        for _ in 0..total {
+            let next = if gen.bernoulli(spec.bigram_weight) {
+                succ[prev * spec.fanout + gen.categorical(&wts)] as usize
+            } else {
+                gen.categorical(&zipf)
+            };
+            out.push(next as u16);
+            prev = next;
+        }
+        Self {
+            vocab: v,
+            train: out[..spec.train_len].to_vec(),
+            valid: out[spec.train_len..spec.train_len + spec.valid_len].to_vec(),
+            test: out[spec.train_len + spec.valid_len..].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let spec = ptb_words_like();
+        let a = WordCorpus::synthetic(&spec);
+        let b = WordCorpus::synthetic(&spec);
+        assert_eq!(a.train, b.train);
+        assert!(a.train.iter().all(|&t| (t as usize) < spec.vocab));
+        assert_eq!(a.train.len(), spec.train_len);
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let c = WordCorpus::synthetic(&ptb_words_like());
+        let mut counts = vec![0u64; c.vocab];
+        for &w in &c.train {
+            counts[w as usize] += 1;
+        }
+        let head: u64 = counts[..20].iter().sum();
+        assert!(
+            head as f64 > 0.25 * c.train.len() as f64,
+            "head mass too small: {head}"
+        );
+    }
+}

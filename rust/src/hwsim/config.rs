@@ -1,0 +1,88 @@
+//! Accelerator configuration: the §6 design space.
+//!
+//! The paper implements Eq. 2 over the DaDianNao dataflow in TSMC 65 nm
+//! GP CMOS at 400 MHz, with 12-bit fixed-point activations, and compares
+//! three weight datapaths: 12-bit fixed point (full precision), binary
+//! (mux + accumulator) and ternary (mux + enable + accumulator).
+
+/// Weight datapath precision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// 12-bit fixed-point weights, real multipliers.
+    Fixed12,
+    /// {-1, +1} weights: the multiplier degenerates to a sign mux.
+    Binary,
+    /// {-1, 0, +1} weights: sign mux + zero-gating enable.
+    Ternary,
+}
+
+impl Precision {
+    pub fn bits_per_weight(self) -> f64 {
+        match self {
+            Precision::Fixed12 => 12.0,
+            Precision::Binary => 1.0,
+            Precision::Ternary => 2.0,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::Fixed12 => "Full-Precision",
+            Precision::Binary => "Binary",
+            Precision::Ternary => "Ternary",
+        }
+    }
+}
+
+/// One accelerator design point.
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    pub precision: Precision,
+    pub mac_units: usize,
+    pub freq_mhz: f64,
+    pub activation_bits: usize,
+    /// off-chip DRAM bandwidth available to the weight stream (GB/s).
+    pub dram_gbps: f64,
+}
+
+impl HwConfig {
+    /// The paper's low-power engine: 100 MAC units @ 400 MHz. The weight
+    /// stream rides DaDianNao's banked eDRAM (aggregate ~128 GB/s), so
+    /// the full-precision design is compute-bound at this scale — matching
+    /// the paper's Fig. 7 where speedup tracks the MAC-unit ratio.
+    pub fn low_power(precision: Precision) -> Self {
+        Self { precision, mac_units: 100, freq_mhz: 400.0,
+               activation_bits: 12, dram_gbps: 128.0 }
+    }
+
+    /// A bandwidth-starved variant (single-channel DDR): exposes the
+    /// memory-bound regime where the 12x weight-compression shows up
+    /// directly as speedup (used by the ablation bench).
+    pub fn low_power_ddr(precision: Precision) -> Self {
+        Self { dram_gbps: 25.6, ..Self::low_power(precision) }
+    }
+
+    /// Peak throughput in GOps/s (1 MAC = 2 ops, the paper's convention:
+    /// 100 MACs @ 400 MHz = 80 GOps/s).
+    pub fn peak_gops(&self) -> f64 {
+        self.mac_units as f64 * 2.0 * self.freq_mhz * 1e6 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_power_matches_table7_throughput() {
+        let c = HwConfig::low_power(Precision::Fixed12);
+        assert_eq!(c.peak_gops(), 80.0);
+    }
+
+    #[test]
+    fn precision_bits() {
+        assert_eq!(Precision::Fixed12.bits_per_weight(), 12.0);
+        assert_eq!(Precision::Binary.bits_per_weight(), 1.0);
+        assert_eq!(Precision::Ternary.bits_per_weight(), 2.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Cycle-level datapath simulation of one LSTM/GRU timestep on the
+//! DaDianNao-style MAC array (Appendix D / Fig. 7).
+//!
+//! The array processes the 8 recurrent matmuls of Eq. 2 gate-by-gate:
+//! output neurons are tiled across the MAC lanes; each lane accumulates
+//! its dot product serially over the input dimension, so a (d_in → n_out)
+//! matmul costs ceil(n_out / lanes) · d_in cycles plus a pipeline drain.
+//! Weights stream from DRAM once per timestep (RNN weights don't fit
+//! on-chip at the paper's sizes); the zero-mask of ternary weights gates
+//! the accumulate but not the stream (DaDianNao is dense — the paper
+//! cites Cambricon-style zero-skipping only as an optional extension).
+
+use super::config::HwConfig;
+use crate::quant::Cell;
+
+/// Simulation result for one recurrent timestep.
+#[derive(Clone, Debug)]
+pub struct CycleStats {
+    pub mac_cycles: u64,
+    pub drain_cycles: u64,
+    /// weight bytes streamed from DRAM this timestep.
+    pub dram_bytes: u64,
+    /// fraction of lane-cycles doing useful MACs.
+    pub utilization: f64,
+    /// activation function evaluations (sigmoid/tanh LUT lookups).
+    pub act_evals: u64,
+}
+
+impl CycleStats {
+    pub fn total_cycles(&self) -> u64 {
+        self.mac_cycles + self.drain_cycles
+    }
+
+    /// Wall-clock at the configured frequency.
+    pub fn time_us(&self, cfg: &HwConfig) -> f64 {
+        self.total_cycles() as f64 / (cfg.freq_mhz * 1e6) * 1e6
+    }
+
+    /// DRAM-side time for the weight stream.
+    pub fn dram_time_us(&self, cfg: &HwConfig) -> f64 {
+        self.dram_bytes as f64 / (cfg.dram_gbps * 1e9) * 1e6
+    }
+
+    /// Effective latency: compute and the weight stream overlap (double
+    /// buffering), so the step takes the max of the two.
+    pub fn latency_us(&self, cfg: &HwConfig) -> f64 {
+        self.time_us(cfg).max(self.dram_time_us(cfg))
+    }
+}
+
+/// Simulate one timestep of a stacked RNN on the array.
+///
+/// `d_in`: input width of the first layer; deeper layers consume `hidden`.
+pub fn simulate_timestep(cfg: &HwConfig, cell: Cell, d_in: usize,
+                         hidden: usize, layers: usize) -> CycleStats {
+    let lanes = cfg.mac_units as u64;
+    let gates = cell.gates() as u64;
+    let mut mac_cycles = 0u64;
+    let mut drain = 0u64;
+    let mut useful = 0u64;
+    let mut dram_bits = 0u64;
+    let mut act_evals = 0u64;
+    const PIPE_DEPTH: u64 = 4; // accumulate/round pipeline drain per pass
+
+    for l in 0..layers {
+        let din = if l == 0 { d_in } else { hidden } as u64;
+        let h = hidden as u64;
+        // two matmuls per gate group: W_x (din -> gates*h), W_h (h -> gates*h)
+        for contraction in [din, h] {
+            let n_out = gates * h;
+            let passes = n_out.div_ceil(lanes);
+            mac_cycles += passes * contraction;
+            drain += passes * PIPE_DEPTH;
+            useful += n_out * contraction;
+            dram_bits += (n_out * contraction) as u64
+                * cfg.precision.bits_per_weight() as u64;
+        }
+        // elementwise tail: gate nonlinearities + state update
+        act_evals += gates * h + h;
+    }
+    let issued = mac_cycles * lanes;
+    CycleStats {
+        mac_cycles,
+        drain_cycles: drain,
+        dram_bytes: dram_bits.div_ceil(8),
+        utilization: useful as f64 / issued.max(1) as f64,
+        act_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwsim::config::Precision;
+    use crate::quant::rnn_weight_params;
+
+    #[test]
+    fn mac_work_conserved() {
+        // lane-cycles * utilization == total MACs (= weight count).
+        let cfg = HwConfig::low_power(Precision::Fixed12);
+        let s = simulate_timestep(&cfg, Cell::Lstm, 50, 1000, 1);
+        let macs = (s.mac_cycles as f64 * cfg.mac_units as f64 * s.utilization)
+            .round() as usize;
+        assert_eq!(macs, rnn_weight_params(Cell::Lstm, 50, 1000, 1));
+    }
+
+    #[test]
+    fn dram_bytes_track_precision() {
+        let params = rnn_weight_params(Cell::Lstm, 50, 1000, 1) as u64;
+        let fp = simulate_timestep(&HwConfig::low_power(Precision::Fixed12),
+                                   Cell::Lstm, 50, 1000, 1);
+        let b = simulate_timestep(&HwConfig::low_power(Precision::Binary),
+                                  Cell::Lstm, 50, 1000, 1);
+        let t = simulate_timestep(&HwConfig::low_power(Precision::Ternary),
+                                  Cell::Lstm, 50, 1000, 1);
+        assert_eq!(fp.dram_bytes, params * 12 / 8);
+        assert_eq!(b.dram_bytes, params.div_ceil(8));
+        assert_eq!(t.dram_bytes, (params * 2).div_ceil(8));
+        // the §6 bandwidth claim: 12x binary, 6x ternary
+        assert_eq!(fp.dram_bytes / b.dram_bytes, 12);
+        assert_eq!(fp.dram_bytes / t.dram_bytes, 6);
+    }
+
+    #[test]
+    fn more_lanes_fewer_cycles() {
+        let lp = HwConfig::low_power(Precision::Binary);
+        let hs = HwConfig { mac_units: 1000, ..lp.clone() };
+        let a = simulate_timestep(&lp, Cell::Lstm, 50, 1000, 1);
+        let b = simulate_timestep(&hs, Cell::Lstm, 50, 1000, 1);
+        let speedup = a.total_cycles() as f64 / b.total_cycles() as f64;
+        assert!((speedup - 10.0).abs() < 0.5, "speedup {speedup}");
+    }
+
+    #[test]
+    fn utilization_high_for_large_layers() {
+        let cfg = HwConfig::low_power(Precision::Fixed12);
+        let s = simulate_timestep(&cfg, Cell::Lstm, 512, 512, 1);
+        assert!(s.utilization > 0.95, "util {}", s.utilization);
+    }
+
+    #[test]
+    fn gru_proportionally_cheaper() {
+        let cfg = HwConfig::low_power(Precision::Fixed12);
+        let l = simulate_timestep(&cfg, Cell::Lstm, 512, 512, 1);
+        let g = simulate_timestep(&cfg, Cell::Gru, 512, 512, 1);
+        let ratio = l.mac_cycles as f64 / g.mac_cycles as f64;
+        assert!((ratio - 4.0 / 3.0).abs() < 0.05, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,164 @@
+//! 65 nm component library + design-point synthesis (Table 7).
+//!
+//! Per-MAC area/power constants are calibrated to the paper's published
+//! low-power design points (TSMC 65 nm GP, 400 MHz, synthesized with
+//! Cadence Genus — Table 7): 100 full-precision MACs = 2.56 mm² / 336 mW;
+//! binary = 0.24 mm² / 37 mW; ternary = 0.42 mm² / 61 mW. The model
+//! treats the datapath as linear in the MAC count (the DaDianNao tile is
+//! an array of identical lanes; SRAM/control amortize into the per-lane
+//! constant), which reproduces the paper's high-speed rows to within a
+//! few percent and supports the design-space exploration of §6.
+
+use super::config::{HwConfig, Precision};
+
+/// Per-MAC-unit silicon cost at 400 MHz in 65 nm.
+#[derive(Clone, Copy, Debug)]
+pub struct MacCost {
+    pub area_mm2: f64,
+    pub power_mw: f64,
+}
+
+/// Calibrated component library (per MAC unit, amortized).
+pub fn mac_cost(precision: Precision) -> MacCost {
+    match precision {
+        // 2.56 mm² / 336 mW per 100 units
+        Precision::Fixed12 => MacCost { area_mm2: 0.0256, power_mw: 3.36 },
+        // 0.24 mm² / 37 mW per 100 units
+        Precision::Binary => MacCost { area_mm2: 0.0024, power_mw: 0.37 },
+        // 0.42 mm² / 61 mW per 100 units
+        Precision::Ternary => MacCost { area_mm2: 0.0042, power_mw: 0.61 },
+    }
+}
+
+/// Synthesized totals for a design point.
+#[derive(Clone, Debug)]
+pub struct Synthesis {
+    pub config: HwConfig,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub throughput_gops: f64,
+}
+
+/// "Synthesize" a design point from the component library.
+pub fn synthesize(config: &HwConfig) -> Synthesis {
+    let c = mac_cost(config.precision);
+    Synthesis {
+        area_mm2: c.area_mm2 * config.mac_units as f64,
+        power_mw: c.power_mw * config.mac_units as f64,
+        throughput_gops: config.peak_gops(),
+        config: config.clone(),
+    }
+}
+
+/// Budget dimension for the design-space explorer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Budget {
+    Area,
+    Power,
+    Both,
+}
+
+/// Principled design-point explorer: under the reference engine's budget,
+/// instantiate as many reduced-precision MAC units as fit (rounded down
+/// to blocks of 100 — the DaDianNao tile quantum).
+pub fn explore_design(precision: Precision, reference: &HwConfig,
+                      budget: Budget) -> HwConfig {
+    let b = synthesize(reference);
+    let c = mac_cost(precision);
+    let by_area = (b.area_mm2 / c.area_mm2) as usize;
+    let by_power = (b.power_mw / c.power_mw) as usize;
+    let n = match budget {
+        Budget::Area => by_area,
+        Budget::Power => by_power,
+        Budget::Both => by_area.min(by_power),
+    } / 100 * 100;
+    HwConfig { precision, mac_units: n.max(100), ..reference.clone() }
+}
+
+/// The paper's published high-speed design points (Table 7): 10x MAC
+/// units for binary, 5x for ternary. Note the paper's choices are not
+/// strictly budget-feasible under its own component costs (binary 1000
+/// units costs 347 mW > the 336 mW reference) — we reproduce the
+/// published configuration here and keep [`explore_design`] as the
+/// self-consistent explorer (the ablation bench shows both).
+pub fn high_speed_design(precision: Precision, reference: &HwConfig) -> HwConfig {
+    let n = match precision {
+        Precision::Fixed12 => reference.mac_units,
+        Precision::Binary => reference.mac_units * 10,
+        Precision::Ternary => reference.mac_units * 5,
+    };
+    HwConfig { precision, mac_units: n, ..reference.clone() }
+}
+
+/// Area/power saving factors of the low-power engine (§6: "up to 9× lower
+/// power and 10.6× lower silicon area").
+pub fn low_power_savings(precision: Precision) -> (f64, f64) {
+    let fp = mac_cost(Precision::Fixed12);
+    let q = mac_cost(precision);
+    (fp.area_mm2 / q.area_mm2, fp.power_mw / q.power_mw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_power_rows_match_table7() {
+        for (prec, area, power) in [
+            (Precision::Fixed12, 2.56, 336.0),
+            (Precision::Binary, 0.24, 37.0),
+            (Precision::Ternary, 0.42, 61.0),
+        ] {
+            let s = synthesize(&HwConfig::low_power(prec));
+            assert!((s.area_mm2 - area).abs() < 1e-9, "{prec:?} area");
+            assert!((s.power_mw - power).abs() < 1e-9, "{prec:?} power");
+            assert_eq!(s.throughput_gops, 80.0);
+        }
+    }
+
+    #[test]
+    fn high_speed_reproduces_mac_scaling() {
+        let fp = HwConfig::low_power(Precision::Fixed12);
+        // binary: paper instantiates 1000 units (10x)
+        let b = high_speed_design(Precision::Binary, &fp);
+        assert_eq!(b.mac_units, 1000);
+        // ternary: paper instantiates 500 units (5x)
+        let t = high_speed_design(Precision::Ternary, &fp);
+        assert_eq!(t.mac_units, 500);
+        // and full precision trivially stays at 100
+        let f = high_speed_design(Precision::Fixed12, &fp);
+        assert_eq!(f.mac_units, 100);
+    }
+
+    #[test]
+    fn explorer_budget_dimensions() {
+        let fp = HwConfig::low_power(Precision::Fixed12);
+        // area-bound: 2.56 / 0.0024 = 1066 -> 1000
+        assert_eq!(explore_design(Precision::Binary, &fp, Budget::Area).mac_units, 1000);
+        // power-bound: 336 / 0.37 = 908 -> 900
+        assert_eq!(explore_design(Precision::Binary, &fp, Budget::Power).mac_units, 900);
+        // both: min -> 900
+        assert_eq!(explore_design(Precision::Binary, &fp, Budget::Both).mac_units, 900);
+        // ternary both: min(609, 550) -> 500
+        assert_eq!(explore_design(Precision::Ternary, &fp, Budget::Both).mac_units, 500);
+    }
+
+    #[test]
+    fn high_speed_totals_near_paper() {
+        // paper: binary high-speed 2.54 mm² / 347 mW; ternary 2.16 / 302.
+        let fp = HwConfig::low_power(Precision::Fixed12);
+        let b = synthesize(&high_speed_design(Precision::Binary, &fp));
+        assert!((b.area_mm2 - 2.54).abs() / 2.54 < 0.08, "binary area {}", b.area_mm2);
+        assert!((b.power_mw - 347.0).abs() / 347.0 < 0.08, "binary power {}", b.power_mw);
+        let t = synthesize(&high_speed_design(Precision::Ternary, &fp));
+        assert!((t.area_mm2 - 2.16).abs() / 2.16 < 0.05, "ternary area {}", t.area_mm2);
+        assert!((t.power_mw - 302.0).abs() / 302.0 < 0.05, "ternary power {}", t.power_mw);
+    }
+
+    #[test]
+    fn savings_match_headline_claims() {
+        let (area_x, power_x) = low_power_savings(Precision::Binary);
+        assert!((area_x - 10.67).abs() < 0.1, "area saving {area_x}");
+        assert!((power_x - 9.08).abs() < 0.1, "power saving {power_x}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Hardware simulator for the paper's §6 accelerator (DaDianNao-derived
+//! MAC array with mux-based binary/ternary datapaths, TSMC 65 nm @ 400
+//! MHz).
+//!
+//! Three layers of model, each validated against the paper's published
+//! numbers in unit tests:
+//! * [`mac`] — per-unit area/power library calibrated to Table 7's
+//!   low-power rows; design-point synthesis and the iso-area/power
+//!   high-speed methodology.
+//! * [`datapath`] — cycle-level simulation of Eq. 2 on the lane array,
+//!   including DRAM weight streaming (the 12x bandwidth claim).
+//! * [`latency`] — per-task timestep latency/energy roll-ups (Fig. 7).
+
+pub mod config;
+pub mod datapath;
+pub mod latency;
+pub mod mac;
+
+pub use config::{HwConfig, Precision};
+pub use datapath::{simulate_timestep, CycleStats};
+pub use latency::{fig7_points, paper_workloads, timestep_energy_nj,
+                  timestep_latency, LatencyPoint, Workload};
+pub use mac::{explore_design, high_speed_design, low_power_savings, mac_cost,
+              synthesize, Budget, MacCost, Synthesis};

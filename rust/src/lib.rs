@@ -1,0 +1,16 @@
+//! rbtw — Learning Recurrent Binary/Ternary Weights (ICLR 2019).
+//!
+//! Three-layer reproduction: Pallas kernels (L1) and JAX models (L2) are
+//! AOT-lowered at build time to HLO text artifacts; this crate (L3) owns
+//! the runtime — training orchestration, serving, the bit-packed popcount
+//! inference engine, and the hardware (ASIC) simulator of the paper's §6.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hwsim;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,358 @@
+//! rbtw CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   list                      list available artifact bundles
+//!   train <artifact> [opts]   run a training job
+//!   eval <artifact> [opts]    evaluate a (trained or fresh) model
+//!   serve <artifact> [opts]   continuous-batching serving demo
+//!   hwsim [opts]              print the Table-7 hardware design points
+//!   pack <artifact> [opts]    export packed binary/ternary weights
+//!
+//! Argument parsing is hand-rolled (no clap in the offline vendor set).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use rbtw::config::{default_spec_for_task, Config};
+use rbtw::coordinator::{InferenceServer, Request, Split, Trainer};
+use rbtw::hwsim;
+use rbtw::model::export_packed;
+use rbtw::quant;
+use rbtw::runtime::{list_artifacts, ArtifactMeta, Engine};
+use rbtw::util::table::Table;
+use rbtw::util::Rng;
+
+/// Parsed CLI: positional args + --key value flags (+ bare --flags).
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = vec![];
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let next_is_value =
+                    argv.get(i + 1).map(|v| !v.starts_with("--")).unwrap_or(false);
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Self { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key}")))
+            .transpose()
+    }
+
+    fn get_f32(&self, key: &str) -> Result<Option<f32>> {
+        self.get(key)
+            .map(|v| v.parse::<f32>().with_context(|| format!("--{key}")))
+            .transpose()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_usage();
+        return ExitCode::FAILURE;
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd.as_str() {
+        "list" => cmd_list(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "hwsim" => cmd_hwsim(&args),
+        "pack" => cmd_pack(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "rbtw — Learning Recurrent Binary/Ternary Weights (ICLR 2019)\n\
+         usage: rbtw <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 list                        list artifact bundles\n\
+         \x20 train <artifact>            train (--steps N --lr X --config F\n\
+         \x20                             --verbose --checkpoint OUT)\n\
+         \x20 eval <artifact>             evaluate (--entry E --split S --batches N\n\
+         \x20                             --checkpoint IN)\n\
+         \x20 serve <artifact>            serving demo (--requests N --gen-len N\n\
+         \x20                             --prompt-len N)\n\
+         \x20 hwsim                       print Table-7 design points (--explore)\n\
+         \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
+         \n\
+         common options: --artifacts DIR (default ./artifacts)"
+    );
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let names = list_artifacts(&dir)?;
+    let mut t = Table::new(&["artifact", "task", "arch", "quant", "hidden",
+                             "entrypoints"]);
+    for name in names {
+        let meta = ArtifactMeta::load(&dir, &name)?;
+        let entries: Vec<&str> =
+            meta.entrypoints.keys().map(|s| s.as_str()).collect();
+        t.row(&[
+            name.clone(),
+            meta.task.clone(),
+            meta.model.str_at("arch").to_string(),
+            meta.quantizer().to_string(),
+            meta.hidden().to_string(),
+            entries.join(","),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn require_artifact(args: &Args) -> Result<String> {
+    args.positional
+        .first()
+        .cloned()
+        .context("missing <artifact> argument (see `rbtw list`)")
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let name = require_artifact(args)?;
+    let dir = artifacts_dir(args);
+    let engine = Engine::cpu()?;
+    let meta = ArtifactMeta::load(&dir, &name)?;
+    let mut spec = default_spec_for_task(&meta.task);
+    if let Some(path) = args.get("config") {
+        spec = Config::load(std::path::Path::new(path))?.train_spec(spec)?;
+    }
+    if let Some(steps) = args.get_usize("steps")? {
+        spec.steps = steps;
+    }
+    if let Some(lr) = args.get_f32("lr")? {
+        spec.lr = lr;
+    }
+    if args.has("verbose") {
+        spec.verbose = true;
+    }
+    let mut trainer = Trainer::new(&engine, &dir, &name, spec)?;
+    let report = trainer.run()?;
+    println!(
+        "{}: {} steps, final train loss {:.4}, valid {} {:.4}, test {} {:.4}",
+        report.name,
+        report.steps_run,
+        report.train_loss.last().unwrap_or(f64::NAN),
+        report.metric_name,
+        report.final_valid,
+        report.metric_name,
+        report.final_test
+    );
+    if let Some(out) = args.get("checkpoint") {
+        trainer.checkpoint()?.save(std::path::Path::new(out))?;
+        println!("checkpoint written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let name = require_artifact(args)?;
+    let dir = artifacts_dir(args);
+    let engine = Engine::cpu()?;
+    let meta = ArtifactMeta::load(&dir, &name)?;
+    let spec = default_spec_for_task(&meta.task);
+    let mut trainer = Trainer::new(&engine, &dir, &name, spec)?;
+    if let Some(ck) = args.get("checkpoint") {
+        let ck = rbtw::model::Checkpoint::load(std::path::Path::new(ck))?;
+        trainer.restore(&ck)?;
+    }
+    let entry = args.get("entry").unwrap_or("eval");
+    let split = match args.get("split").unwrap_or("test") {
+        "valid" => Split::Valid,
+        "test" => Split::Test,
+        other => bail!("bad --split {other}"),
+    };
+    let batches = args.get_usize("batches")?.unwrap_or(8);
+    let ev = trainer.evaluate_entry(entry, split, batches)?;
+    println!(
+        "{name} [{entry}]: loss {:.4} nats, {} {:.4}{}",
+        ev.loss,
+        trainer.data.metric_name(),
+        ev.metric,
+        ev.acc.map(|a| format!(", acc {:.2}%", a * 100.0)).unwrap_or_default()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let name = require_artifact(args)?;
+    let dir = artifacts_dir(args);
+    let engine = Engine::cpu()?;
+    let n_requests = args.get_usize("requests")?.unwrap_or(64);
+    let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
+    let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
+    let mut server = InferenceServer::open(&engine, &dir, &name, n_requests)?;
+    let meta = ArtifactMeta::load(&dir, &name)?;
+    let vocab = meta.vocab();
+    let mut rng = Rng::new(7);
+    for id in 0..n_requests as u64 {
+        server.submit(Request {
+            id,
+            prompt: (0..prompt_len).map(|_| rng.below(vocab as u64) as i32).collect(),
+            gen_len,
+            temperature: 0.8,
+        })?;
+    }
+    let t0 = std::time::Instant::now();
+    let responses = server.pump(1_000_000)?;
+    let wall = t0.elapsed();
+    let total_tokens: u64 = server.stats.tokens_processed;
+    let mut latencies: Vec<f64> = responses
+        .iter()
+        .map(|r| (r.queue_time + r.run_time).as_secs_f64() * 1e3)
+        .collect();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+    println!(
+        "served {} requests in {:.2}s | {:.0} tok/s | engine steps {} | \
+         latency p50 {p50:.1} ms p99 {p99:.1} ms | peak batch {}",
+        responses.len(),
+        wall.as_secs_f64(),
+        total_tokens as f64 / wall.as_secs_f64(),
+        server.stats.engine_steps,
+        server.stats.peak_active_slots,
+    );
+    Ok(())
+}
+
+fn cmd_hwsim(args: &Args) -> Result<()> {
+    use hwsim::{high_speed_design, synthesize, HwConfig, Precision};
+    let mut t = Table::new(&["design", "precision", "# MAC", "GOps/s",
+                             "area mm2", "power mW"]);
+    for prec in [Precision::Fixed12, Precision::Binary, Precision::Ternary] {
+        let lp = synthesize(&HwConfig::low_power(prec));
+        t.row(&[
+            "low-power".into(),
+            prec.label().into(),
+            lp.config.mac_units.to_string(),
+            format!("{:.0}", lp.throughput_gops),
+            format!("{:.2}", lp.area_mm2),
+            format!("{:.0}", lp.power_mw),
+        ]);
+    }
+    let fp = HwConfig::low_power(Precision::Fixed12);
+    for prec in [Precision::Fixed12, Precision::Binary, Precision::Ternary] {
+        let hs = synthesize(&high_speed_design(prec, &fp));
+        t.row(&[
+            "high-speed".into(),
+            prec.label().into(),
+            hs.config.mac_units.to_string(),
+            format!("{:.0}", hs.throughput_gops),
+            format!("{:.2}", hs.area_mm2),
+            format!("{:.0}", hs.power_mw),
+        ]);
+    }
+    t.print();
+    if args.has("explore") {
+        use hwsim::{explore_design, Budget};
+        println!("\nbudget-feasible design points (vs paper's published):");
+        let mut t2 = Table::new(&["precision", "budget", "# MAC"]);
+        for prec in [Precision::Binary, Precision::Ternary] {
+            for (label, b) in [("area", Budget::Area), ("power", Budget::Power),
+                               ("both", Budget::Both)] {
+                let d = explore_design(prec, &fp, b);
+                t2.row(&[prec.label().into(), label.into(),
+                         d.mac_units.to_string()]);
+            }
+        }
+        t2.print();
+    }
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    let name = require_artifact(args)?;
+    let dir = artifacts_dir(args);
+    let engine = Engine::cpu()?;
+    let meta = ArtifactMeta::load(&dir, &name)?;
+    let spec = default_spec_for_task(&meta.task);
+    let mut trainer = Trainer::new(&engine, &dir, &name, spec)?;
+    if let Some(ck) = args.get("checkpoint") {
+        let ck = rbtw::model::Checkpoint::load(std::path::Path::new(ck))?;
+        trainer.restore(&ck)?;
+    }
+    let packed = export_packed(&trainer.sess, 0xBEEF)?;
+    let mut t = Table::new(&["matrix", "dims", "packed bytes", "fp32 bytes",
+                             "saving"]);
+    let mut total_packed = 0usize;
+    let mut total_fp = 0usize;
+    for (nm, m) in &packed.matrices {
+        let (r, c) = m.dims();
+        let fp32 = r * c * 4;
+        total_packed += m.bytes();
+        total_fp += fp32;
+        t.row(&[
+            nm.clone(),
+            format!("{r}x{c}"),
+            m.bytes().to_string(),
+            fp32.to_string(),
+            format!("{:.1}x", fp32 as f64 / m.bytes() as f64),
+        ]);
+    }
+    t.print();
+    println!(
+        "total: {total_packed} B packed vs {total_fp} B fp32 ({:.1}x), \
+         vs 12-bit baseline {:.1}x",
+        total_fp as f64 / total_packed as f64,
+        quant::bandwidth_saving_vs_12bit(meta.bits_per_weight),
+    );
+    Ok(())
+}

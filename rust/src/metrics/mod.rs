@@ -1,0 +1,82 @@
+//! Task metrics: BPC / perplexity / accuracy conversions and loss-curve
+//! tracking for the learning-curve figures.
+
+/// Convert mean cross-entropy in nats to bits-per-character (Tables 1/2/6).
+pub fn bpc(loss_nats: f64) -> f64 {
+    loss_nats / std::f64::consts::LN_2
+}
+
+/// Convert mean cross-entropy in nats to word perplexity (Table 3).
+pub fn perplexity(loss_nats: f64) -> f64 {
+    loss_nats.exp()
+}
+
+/// A named series of (step, value) points — loss curves, valid BPC, etc.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: vec![] }
+    }
+
+    pub fn push(&mut self, step: u64, value: f64) {
+        self.points.push((step, value));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        self.points.iter().map(|&(_, v)| v).fold(None, |acc, v| {
+            Some(acc.map_or(v, |a: f64| a.min(v)))
+        })
+    }
+
+    /// Mean of the final `k` values — a smoothed convergence estimate.
+    pub fn tail_mean(&self, k: usize) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        Some(tail.iter().map(|&(_, v)| v).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Render as a compact "step:value" list for EXPERIMENTS.md.
+    pub fn render(&self, every: usize) -> String {
+        self.points
+            .iter()
+            .step_by(every.max(1))
+            .map(|(s, v)| format!("{s}:{v:.4}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert!((bpc(std::f64::consts::LN_2) - 1.0).abs() < 1e-12);
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-12);
+        assert!((perplexity((91.5f64).ln()) - 91.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_ops() {
+        let mut s = Series::new("loss");
+        for i in 0..10 {
+            s.push(i, 10.0 - i as f64);
+        }
+        assert_eq!(s.last(), Some(1.0));
+        assert_eq!(s.min(), Some(1.0));
+        assert!((s.tail_mean(2).unwrap() - 1.5).abs() < 1e-12);
+        assert!(s.render(5).contains("0:10.0000"));
+    }
+}

@@ -1,0 +1,183 @@
+//! Checkpoint format: a self-describing binary container for the live
+//! params/state/opt groups of a [`crate::runtime::Session`].
+//!
+//! Layout (little-endian):
+//!   magic "RBTW" | version u32 | n_entries u32
+//!   per entry: group_len u32 | group bytes | name_len u32 | name bytes |
+//!              rank u32 | dims u64* | data_len u64 | f32 data
+//! No serde offline — the codec is hand-rolled and round-trip tested.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"RBTW";
+const VERSION: u32 = 1;
+
+/// One named array with its group tag.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    pub group: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// In-memory checkpoint.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    pub entries: Vec<Entry>,
+}
+
+impl Checkpoint {
+    pub fn push(&mut self, group: &str, name: &str, shape: Vec<usize>,
+                data: Vec<f32>) {
+        self.entries.push(Entry {
+            group: group.to_string(),
+            name: name.to_string(),
+            shape,
+            data,
+        });
+    }
+
+    /// Entries of one group keyed by name.
+    pub fn group(&self, group: &str) -> BTreeMap<&str, &Entry> {
+        self.entries
+            .iter()
+            .filter(|e| e.group == group)
+            .map(|e| (e.name.as_str(), e))
+            .collect()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for e in &self.entries {
+            for s in [&e.group, &e.name] {
+                f.write_all(&(s.len() as u32).to_le_bytes())?;
+                f.write_all(s.as_bytes())?;
+            }
+            f.write_all(&(e.shape.len() as u32).to_le_bytes())?;
+            for &d in &e.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            f.write_all(&(e.data.len() as u64).to_le_bytes())?;
+            for &x in &e.data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a rbtw checkpoint");
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let group = read_string(&mut f)?;
+            let name = read_string(&mut f)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let len = read_u64(&mut f)? as usize;
+            let expect: usize = shape.iter().product::<usize>().max(1);
+            if len != expect {
+                bail!("corrupt checkpoint: {name} len {len} vs shape {shape:?}");
+            }
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            entries.push(Entry { group, name, shape, data });
+        }
+        Ok(Self { entries })
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_string<R: Read>(r: &mut R) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 1 << 20 {
+        bail!("implausible string length {len}");
+    }
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b).context("bad utf-8 in checkpoint")?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut c = Checkpoint::default();
+        c.push("params", "l0/wx", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        c.push("params", "l0/b", vec![4], vec![0.0, -1.0, 1.5, 2.5]);
+        c.push("state", "l0/rm_x", vec![4], vec![0.1; 4]);
+        c
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("rbtw_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, loaded);
+    }
+
+    #[test]
+    fn group_accessor() {
+        let c = sample();
+        let params = c.group("params");
+        assert_eq!(params.len(), 2);
+        assert!(params.contains_key("l0/wx"));
+        assert_eq!(c.group("state").len(), 1);
+        assert_eq!(c.group("nope").len(), 0);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("rbtw_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Export trained weights into the deployment representation: stochastic
+//! binary/ternary sampling of the shadow weights (Eq. 4–6, identical math
+//! to `python/compile/quantizers.py`) followed by bit-plane packing for
+//! the popcount engine — the "extracted weights" the paper ships to its
+//! accelerator.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::quant::{PackedBinary, PackedTernary};
+use crate::runtime::Session;
+use crate::util::Rng;
+
+/// One packed recurrent matrix.
+pub enum PackedMatrix {
+    Binary(PackedBinary),
+    Ternary(PackedTernary),
+    /// FP configs keep dense weights (baseline comparisons).
+    Dense { rows: usize, cols: usize, data: Vec<f32> },
+}
+
+impl PackedMatrix {
+    pub fn bytes(&self) -> usize {
+        match self {
+            PackedMatrix::Binary(b) => b.packed_bytes(),
+            PackedMatrix::Ternary(t) => t.packed_bytes(),
+            PackedMatrix::Dense { data, .. } => data.len() * 4,
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            PackedMatrix::Binary(b) => (b.rows, b.cols),
+            PackedMatrix::Ternary(t) => (t.rows, t.cols),
+            PackedMatrix::Dense { rows, cols, .. } => (*rows, *cols),
+        }
+    }
+}
+
+/// All recurrent matrices of a model, packed.
+pub struct PackedModel {
+    pub quantizer: String,
+    pub matrices: BTreeMap<String, PackedMatrix>,
+}
+
+impl PackedModel {
+    pub fn total_bytes(&self) -> usize {
+        self.matrices.values().map(|m| m.bytes()).sum()
+    }
+}
+
+/// Glorot bound for a (fan_in, fan_out) matrix — the paper's fixed alpha.
+/// Must match `quantizers.glorot_alpha` on the python side.
+pub fn glorot_alpha(fan_in: usize, fan_out: usize) -> f32 {
+    (6.0 / (fan_in + fan_out) as f64).sqrt() as f32
+}
+
+/// Stochastically quantize one shadow-weight matrix (Eq. 4–6).
+fn sample_quantized(quantizer: &str, w: &[f32], rows: usize, cols: usize,
+                    rng: &mut Rng) -> Result<PackedMatrix> {
+    let alpha = glorot_alpha(rows, cols);
+    match quantizer {
+        "bin" => {
+            let data: Vec<f32> = w
+                .iter()
+                .map(|&x| {
+                    let wn = (x / alpha).clamp(-1.0, 1.0);
+                    let p1 = (wn + 1.0) * 0.5;
+                    if rng.bernoulli(p1 as f64) { alpha } else { -alpha }
+                })
+                .collect();
+            Ok(PackedMatrix::Binary(PackedBinary::pack(&data, rows, cols, alpha)))
+        }
+        "ter" => {
+            let data: Vec<f32> = w
+                .iter()
+                .map(|&x| {
+                    let wn = (x / alpha).clamp(-1.0, 1.0);
+                    if rng.bernoulli(wn.abs() as f64) {
+                        alpha * wn.signum()
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            Ok(PackedMatrix::Ternary(PackedTernary::pack(&data, rows, cols, alpha)))
+        }
+        "fp" => Ok(PackedMatrix::Dense { rows, cols, data: w.to_vec() }),
+        other => bail!("no packed export for quantizer '{other}'"),
+    }
+}
+
+/// Export every recurrent matrix of a live session.
+pub fn export_packed(sess: &Session, seed: u64) -> Result<PackedModel> {
+    let quantizer = sess.meta.quantizer().to_string();
+    let rec_names: Vec<String> = sess
+        .meta
+        .footprint
+        .at("recurrent_names")
+        .as_arr()
+        .map(|a| a.iter().map(|x| x.as_str().unwrap().to_string()).collect())
+        .unwrap_or_default();
+    let mut rng = Rng::new(seed);
+    let mut matrices = BTreeMap::new();
+    for name in rec_names {
+        let idx = sess
+            .params
+            .index_of(&name)
+            .ok_or_else(|| anyhow::anyhow!("missing param {name}"))?;
+        let shape = &sess.params.shapes[idx];
+        anyhow::ensure!(shape.len() == 2, "{name} not a matrix");
+        let data = sess.params.get_f32(&name)?;
+        let m = sample_quantized(&quantizer, &data, shape[0], shape[1],
+                                 &mut rng.fork(matrices.len() as u64))?;
+        matrices.insert(name, m);
+    }
+    Ok(PackedModel { quantizer, matrices })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn glorot_matches_python() {
+        // python: math.sqrt(6/(96+384)) = 0.11180339887498948
+        let a = glorot_alpha(96, 384);
+        assert!((a - 0.111_803_4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn binary_sampling_probability() {
+        // w = 0 should sample +alpha half the time.
+        let mut rng = Rng::new(5);
+        let w = vec![0.0f32; 10_000];
+        let m = sample_quantized("bin", &w, 100, 100, &mut rng).unwrap();
+        if let PackedMatrix::Binary(b) = m {
+            let ones: usize = b.unpack().iter().filter(|&&x| x > 0.0).count();
+            let rate = ones as f64 / 10_000.0;
+            assert!((rate - 0.5).abs() < 0.03, "rate {rate}");
+        } else {
+            panic!("expected binary");
+        }
+    }
+
+    #[test]
+    fn ternary_zero_stays_zero() {
+        let mut rng = Rng::new(6);
+        let w = vec![0.0f32; 1000];
+        let m = sample_quantized("ter", &w, 100, 10, &mut rng).unwrap();
+        if let PackedMatrix::Ternary(t) = m {
+            assert_eq!(t.density(), 0.0);
+        } else {
+            panic!("expected ternary");
+        }
+    }
+
+    #[test]
+    fn saturated_weights_are_deterministic() {
+        let mut rng = Rng::new(7);
+        let alpha = glorot_alpha(10, 10);
+        let w = vec![alpha; 100]; // wn = +1 -> P(+1) = 1
+        let m = sample_quantized("bin", &w, 10, 10, &mut rng).unwrap();
+        if let PackedMatrix::Binary(b) = m {
+            assert!(b.unpack().iter().all(|&x| x > 0.0));
+        } else {
+            panic!();
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Model-state management: checkpoints and packed-weight export.
+
+pub mod checkpoint;
+pub mod export;
+
+pub use checkpoint::{Checkpoint, Entry};
+pub use export::{export_packed, PackedModel, PackedMatrix};

@@ -1,0 +1,316 @@
+//! Rust-native packed BN-LSTM cell — the deployment inference engine.
+//!
+//! This is the software twin of the paper's accelerator datapath: weights
+//! live as bit planes (1-2 bits each), the "multiplier" is a sign-select,
+//! and the gate tail runs in f32. It exists so the repo can demonstrate
+//! the §6 memory/speed win end-to-end on a CPU — the serving bench
+//! compares this path against the PJRT dense-f32 executable.
+//!
+//! One-hot (token) inputs exploit the same trick as the ASIC's weight
+//! SRAM addressing: the x-path matmul of a one-hot vector is a single
+//! packed-row gather, not a GEMV.
+
+use anyhow::{bail, Context, Result};
+
+use super::gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};
+use super::pack::{words_per_col, PackedBinary, PackedTernary};
+use crate::runtime::Session;
+
+/// Packed weight matrix, either precision.
+pub enum Packed {
+    Binary(PackedBinary),
+    Ternary(PackedTernary),
+}
+
+impl Packed {
+    pub fn rows(&self) -> usize {
+        match self {
+            Packed::Binary(b) => b.rows,
+            Packed::Ternary(t) => t.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Packed::Binary(b) => b.cols,
+            Packed::Ternary(t) => t.cols,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            Packed::Binary(b) => b.packed_bytes(),
+            Packed::Ternary(t) => t.packed_bytes(),
+        }
+    }
+
+    fn gemv(&self, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
+        match self {
+            Packed::Binary(b) => gemv_binary_lut(b, x, y, scratch),
+            Packed::Ternary(t) => gemv_ternary_lut(t, x, y, scratch),
+        }
+    }
+
+    /// y += row r of the matrix (the one-hot x-path).
+    fn add_row(&self, r: usize, y: &mut [f32]) {
+        match self {
+            Packed::Binary(b) => {
+                let wpc = words_per_col(b.rows);
+                let (w, bit) = (r / 64, r % 64);
+                for c in 0..b.cols {
+                    let sign = (b.sign[c * wpc + w] >> bit) & 1;
+                    y[c] += if sign == 1 { b.alpha } else { -b.alpha };
+                }
+            }
+            Packed::Ternary(t) => {
+                let wpc = words_per_col(t.rows);
+                let (w, bit) = (r / 64, r % 64);
+                for c in 0..t.cols {
+                    if (t.mask[c * wpc + w] >> bit) & 1 == 1 {
+                        let sign = (t.sign[c * wpc + w] >> bit) & 1;
+                        y[c] += if sign == 1 { t.alpha } else { -t.alpha };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The packed cell: quantized weights + folded BN statistics + bias.
+pub struct PackedLstmCell {
+    pub wx: Packed,
+    pub wh: Packed,
+    /// folded BN: pre = (x@wx)*scale_x + shift_x + (h@wh)*scale_h +
+    /// shift_h + bias; all (4H,).
+    pub scale_x: Vec<f32>,
+    pub shift_x: Vec<f32>,
+    pub scale_h: Vec<f32>,
+    pub shift_h: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub hidden: usize,
+    // scratch buffers (reused across steps; the hot loop allocates nothing)
+    xw: Vec<f32>,
+    hw: Vec<f32>,
+    lut: LutScratch,
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl PackedLstmCell {
+    pub fn new(wx: Packed, wh: Packed, scale_x: Vec<f32>, shift_x: Vec<f32>,
+               scale_h: Vec<f32>, shift_h: Vec<f32>, bias: Vec<f32>)
+               -> Result<Self> {
+        let n4 = wx.cols();
+        if wh.cols() != n4 || n4 % 4 != 0 {
+            bail!("gate width mismatch: wx {} wh {}", n4, wh.cols());
+        }
+        let hidden = n4 / 4;
+        if wh.rows() != hidden {
+            bail!("wh rows {} != hidden {hidden}", wh.rows());
+        }
+        for (nm, v) in [("scale_x", &scale_x), ("shift_x", &shift_x),
+                        ("scale_h", &scale_h), ("shift_h", &shift_h),
+                        ("bias", &bias)] {
+            if v.len() != n4 {
+                bail!("{nm} length {} != {n4}", v.len());
+            }
+        }
+        Ok(Self {
+            wx, wh, scale_x, shift_x, scale_h, shift_h, bias, hidden,
+            xw: vec![0.0; n4],
+            hw: vec![0.0; n4],
+            lut: LutScratch::default(),
+        })
+    }
+
+    /// Build from a live session's params/state (running BN statistics)
+    /// plus freshly sampled packed weights.
+    pub fn from_session(sess: &Session, seed: u64) -> Result<Self> {
+        use crate::model::export::export_packed;
+        use crate::model::PackedMatrix;
+        let model = export_packed(sess, seed)?;
+        let take = |name: &str| -> Result<Packed> {
+            match model.matrices.get(name) {
+                Some(PackedMatrix::Binary(b)) => Ok(Packed::Binary(b.clone())),
+                Some(PackedMatrix::Ternary(t)) => Ok(Packed::Ternary(t.clone())),
+                Some(PackedMatrix::Dense { .. }) => {
+                    bail!("fp artifact has no packed deployment path")
+                }
+                None => bail!("missing packed matrix {name}"),
+            }
+        };
+        let wx = take("l0/wx")?;
+        let wh = take("l0/wh")?;
+        let bias = sess.params.get_f32("l0/b")?;
+        let n4 = bias.len();
+        let fold = |phi: Vec<f32>, rm: Vec<f32>, rv: Vec<f32>| {
+            let mut scale = vec![0.0f32; n4];
+            let mut shift = vec![0.0f32; n4];
+            for i in 0..n4 {
+                scale[i] = phi[i] / (rv[i] + 1e-5).sqrt();
+                shift[i] = -rm[i] * scale[i];
+            }
+            (scale, shift)
+        };
+        let (scale_x, shift_x) = fold(
+            sess.params.get_f32("l0/phi_x").context("phi_x (BN model only)")?,
+            sess.state.get_f32("l0/rm_x")?,
+            sess.state.get_f32("l0/rv_x")?,
+        );
+        let (scale_h, shift_h) = fold(
+            sess.params.get_f32("l0/phi_h")?,
+            sess.state.get_f32("l0/rm_h")?,
+            sess.state.get_f32("l0/rv_h")?,
+        );
+        Self::new(wx, wh, scale_x, shift_x, scale_h, shift_h, bias)
+    }
+
+    /// One step with a token (one-hot) input. Gate order [i, f, g, o].
+    pub fn step_token(&mut self, token: usize, h: &mut [f32], c: &mut [f32]) {
+        debug_assert_eq!(h.len(), self.hidden);
+        self.xw.fill(0.0);
+        self.wx.add_row(token, &mut self.xw);
+        self.wh.gemv(h, &mut self.hw, &mut self.lut);
+        self.tail(h, c);
+    }
+
+    /// One step with a dense input vector.
+    pub fn step_dense(&mut self, x: &[f32], h: &mut [f32], c: &mut [f32]) {
+        self.wx.gemv(x, &mut self.xw, &mut self.lut);
+        self.wh.gemv(h, &mut self.hw, &mut self.lut);
+        self.tail(h, c);
+    }
+
+    fn tail(&mut self, h: &mut [f32], c: &mut [f32]) {
+        let hid = self.hidden;
+        for j in 0..4 * hid {
+            self.xw[j] = self.xw[j] * self.scale_x[j] + self.shift_x[j]
+                + self.hw[j] * self.scale_h[j] + self.shift_h[j]
+                + self.bias[j];
+        }
+        for k in 0..hid {
+            let i = sigmoid(self.xw[k]);
+            let f = sigmoid(self.xw[hid + k]);
+            let g = self.xw[2 * hid + k].tanh();
+            let o = sigmoid(self.xw[3 * hid + k]);
+            c[k] = f * c[k] + i * g;
+            h[k] = o * c[k].tanh();
+        }
+    }
+
+    /// Total packed weight bytes (the deployment footprint).
+    pub fn weight_bytes(&self) -> usize {
+        self.wx.bytes() + self.wh.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gemv_f32;
+    use crate::util::Rng;
+
+    fn mk_cell(vocab: usize, hid: usize, seed: u64) -> (PackedLstmCell, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let alpha = 0.11;
+        let wx_dense: Vec<f32> = (0..vocab * 4 * hid)
+            .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+            .collect();
+        let wh_dense: Vec<f32> = (0..hid * 4 * hid)
+            .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+            .collect();
+        let n4 = 4 * hid;
+        let cell = PackedLstmCell::new(
+            Packed::Ternary(PackedTernary::pack(&wx_dense, vocab, n4, alpha)),
+            Packed::Ternary(PackedTernary::pack(&wh_dense, hid, n4, alpha)),
+            vec![1.0; n4], vec![0.0; n4], vec![1.0; n4], vec![0.0; n4],
+            (0..n4).map(|_| rng.normal_f32() * 0.1).collect(),
+        )
+        .unwrap();
+        (cell, wx_dense, wh_dense)
+    }
+
+    /// dense f32 reference of the same cell math.
+    fn ref_step(wx: &[f32], wh: &[f32], bias: &[f32], vocab: usize, hid: usize,
+                token: usize, h: &mut Vec<f32>, c: &mut Vec<f32>) {
+        let n4 = 4 * hid;
+        let mut x = vec![0.0f32; vocab];
+        x[token] = 1.0;
+        let mut xw = vec![0.0; n4];
+        let mut hw = vec![0.0; n4];
+        gemv_f32(wx, vocab, n4, &x, &mut xw);
+        gemv_f32(wh, hid, n4, h, &mut hw);
+        let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
+        let mut hn = vec![0.0; hid];
+        for k in 0..hid {
+            let pre = |j: usize| xw[j] + hw[j] + bias[j];
+            let i = sig(pre(k));
+            let f = sig(pre(hid + k));
+            let g = pre(2 * hid + k).tanh();
+            let o = sig(pre(3 * hid + k));
+            c[k] = f * c[k] + i * g;
+            hn[k] = o * c[k].tanh();
+        }
+        *h = hn;
+    }
+
+    #[test]
+    fn matches_dense_reference_over_trajectory() {
+        let (mut cell, wx, wh, ) = mk_cell(50, 32, 9);
+        let bias = cell.bias.clone();
+        let mut h = vec![0.0f32; 32];
+        let mut c = vec![0.0f32; 32];
+        let mut hr = vec![0.0f32; 32];
+        let mut cr = vec![0.0f32; 32];
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let tok = rng.below_usize(50);
+            cell.step_token(tok, &mut h, &mut c);
+            ref_step(&wx, &wh, &bias, 50, 32, tok, &mut hr, &mut cr);
+            for k in 0..32 {
+                assert!((h[k] - hr[k]).abs() < 1e-4, "h[{k}]");
+                assert!((c[k] - cr[k]).abs() < 1e-4, "c[{k}]");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_and_token_paths_agree() {
+        let (mut cell, _, _) = mk_cell(30, 16, 13);
+        let mut h1 = vec![0.0f32; 16];
+        let mut c1 = vec![0.0f32; 16];
+        cell.step_token(7, &mut h1, &mut c1);
+        let (mut cell2, _, _) = mk_cell(30, 16, 13);
+        let mut x = vec![0.0f32; 30];
+        x[7] = 1.0;
+        let mut h2 = vec![0.0f32; 16];
+        let mut c2 = vec![0.0f32; 16];
+        cell2.step_dense(&x, &mut h2, &mut c2);
+        for k in 0..16 {
+            assert!((h1[k] - h2[k]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn state_stays_bounded() {
+        let (mut cell, _, _) = mk_cell(40, 24, 17);
+        let mut h = vec![0.0f32; 24];
+        let mut c = vec![0.0f32; 24];
+        let mut rng = Rng::new(19);
+        for _ in 0..500 {
+            cell.step_token(rng.below_usize(40), &mut h, &mut c);
+        }
+        assert!(h.iter().all(|v| v.abs() <= 1.0 && v.is_finite()));
+        assert!(c.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn footprint_is_packed() {
+        let (cell, _, _) = mk_cell(50, 32, 21);
+        // ternary: 2 bits/weight (+ padding) vs 4 bytes dense
+        let dense = (50 + 32) * 4 * 32 * 4;
+        assert!(cell.weight_bytes() * 8 < dense, "{}", cell.weight_bytes());
+    }
+}

@@ -1,0 +1,188 @@
+//! Multiplier-free GEMV over packed binary/ternary weights.
+//!
+//! The paper's §6 insight in CPU form: with weights in {-1, 0, +1}, a MAC
+//! unit degenerates to a multiplexer feeding an accumulator (select +x,
+//! -x or nothing). Here the mux is a sign/mask bit test and the win is the
+//! 16×/8× reduction in weight-memory traffic — GEMV at serving batch
+//! sizes is memory-bound, so the packed kernels beat the dense f32 GEMV
+//! by the bandwidth ratio, mirroring the paper's DRAM-bandwidth argument.
+//!
+//! All kernels compute `y[c] = alpha * Σ_r sel(w[r,c]) * x[r]` for
+//! matrices packed column-major by [`super::pack`].
+
+use super::pack::{words_per_col, PackedBinary, PackedTernary};
+
+/// Dense f32 GEMV reference: y = xᵀW for row-major W (rows, cols).
+/// This is the full-precision baseline every bench compares against.
+pub fn gemv_f32(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(x.len(), rows);
+    assert_eq!(y.len(), cols);
+    y.fill(0.0);
+    for r in 0..rows {
+        let xr = x[r];
+        let row = &w[r * cols..(r + 1) * cols];
+        for c in 0..cols {
+            y[c] += xr * row[c];
+        }
+    }
+}
+
+/// Binary GEMV: y[c] = alpha * (Σ_{sign=1} x_r − Σ_{sign=0} x_r).
+///
+/// Uses the identity Σ±x = 2·Σ_{set} x − Σx so only set bits are visited;
+/// the all-rows prefix sum is shared across columns.
+pub fn gemv_binary(w: &PackedBinary, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.rows);
+    assert_eq!(y.len(), w.cols);
+    let wpc = words_per_col(w.rows);
+    let total: f32 = x.iter().sum();
+    for c in 0..w.cols {
+        let col = &w.sign[c * wpc..(c + 1) * wpc];
+        let mut s = 0.0f32;
+        for (wi, &word) in col.iter().enumerate() {
+            let mut bits = word;
+            if wi == wpc - 1 && w.rows % 64 != 0 {
+                bits &= (1u64 << (w.rows % 64)) - 1;
+            }
+            let base = wi * 64;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                s += x[base + b];
+                bits &= bits - 1;
+            }
+        }
+        y[c] = w.alpha * (2.0 * s - total);
+    }
+}
+
+/// Ternary GEMV: y[c] = alpha * (Σ_{+} x_r − Σ_{−} x_r).
+pub fn gemv_ternary(w: &PackedTernary, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.rows);
+    assert_eq!(y.len(), w.cols);
+    let wpc = words_per_col(w.rows);
+    for c in 0..w.cols {
+        let sign = &w.sign[c * wpc..(c + 1) * wpc];
+        let mask = &w.mask[c * wpc..(c + 1) * wpc];
+        let mut acc = 0.0f32;
+        for wi in 0..wpc {
+            let mut m = mask[wi];
+            if wi == wpc - 1 && w.rows % 64 != 0 {
+                m &= (1u64 << (w.rows % 64)) - 1;
+            }
+            let pos = m & sign[wi];
+            let neg = m & !sign[wi];
+            let base = wi * 64;
+            let mut bits = pos;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                acc += x[base + b];
+                bits &= bits - 1;
+            }
+            bits = neg;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                acc -= x[base + b];
+                bits &= bits - 1;
+            }
+        }
+        y[c] = w.alpha * acc;
+    }
+}
+
+/// Batched variants: x (batch, rows) row-major → y (batch, cols).
+pub fn gemm_binary(w: &PackedBinary, x: &[f32], batch: usize, y: &mut [f32]) {
+    assert_eq!(x.len(), batch * w.rows);
+    assert_eq!(y.len(), batch * w.cols);
+    for b in 0..batch {
+        gemv_binary(w, &x[b * w.rows..(b + 1) * w.rows],
+                    &mut y[b * w.cols..(b + 1) * w.cols]);
+    }
+}
+
+pub fn gemm_ternary(w: &PackedTernary, x: &[f32], batch: usize, y: &mut [f32]) {
+    assert_eq!(x.len(), batch * w.rows);
+    assert_eq!(y.len(), batch * w.cols);
+    for b in 0..batch {
+        gemv_ternary(w, &x[b * w.rows..(b + 1) * w.rows],
+                     &mut y[b * w.cols..(b + 1) * w.cols]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_x(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn binary_matches_dense() {
+        let mut rng = Rng::new(3);
+        let (rows, cols, alpha) = (100, 37, 0.5f32);
+        let w: Vec<f32> = (0..rows * cols)
+            .map(|_| if rng.bernoulli(0.5) { alpha } else { -alpha })
+            .collect();
+        let packed = PackedBinary::pack(&w, rows, cols, alpha);
+        let x = rand_x(&mut rng, rows);
+        let mut y_dense = vec![0.0; cols];
+        let mut y_packed = vec![0.0; cols];
+        gemv_f32(&w, rows, cols, &x, &mut y_dense);
+        gemv_binary(&packed, &x, &mut y_packed);
+        for c in 0..cols {
+            assert!((y_dense[c] - y_packed[c]).abs() < 1e-3,
+                    "col {c}: {} vs {}", y_dense[c], y_packed[c]);
+        }
+    }
+
+    #[test]
+    fn ternary_matches_dense() {
+        let mut rng = Rng::new(4);
+        let (rows, cols, alpha) = (129, 12, 0.25f32);
+        let w: Vec<f32> = (0..rows * cols)
+            .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+            .collect();
+        let packed = PackedTernary::pack(&w, rows, cols, alpha);
+        let x = rand_x(&mut rng, rows);
+        let mut y_dense = vec![0.0; cols];
+        let mut y_packed = vec![0.0; cols];
+        gemv_f32(&w, rows, cols, &x, &mut y_dense);
+        gemv_ternary(&packed, &x, &mut y_packed);
+        for c in 0..cols {
+            assert!((y_dense[c] - y_packed[c]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn batch_equals_loop_of_gemv() {
+        let mut rng = Rng::new(5);
+        let (rows, cols, alpha, batch) = (64, 16, 1.0f32, 3);
+        let w: Vec<f32> = (0..rows * cols)
+            .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+            .collect();
+        let packed = PackedTernary::pack(&w, rows, cols, alpha);
+        let x = rand_x(&mut rng, batch * rows);
+        let mut y = vec![0.0; batch * cols];
+        gemm_ternary(&packed, &x, batch, &mut y);
+        for b in 0..batch {
+            let mut yb = vec![0.0; cols];
+            gemv_ternary(&packed, &x[b * rows..(b + 1) * rows], &mut yb);
+            assert_eq!(&y[b * cols..(b + 1) * cols], &yb[..]);
+        }
+    }
+
+    #[test]
+    fn padding_rows_ignored() {
+        // rows=65 forces a second word with 63 padding bits; garbage there
+        // must not affect results.
+        let (rows, cols, alpha) = (65, 2, 1.0f32);
+        let w = vec![alpha; rows * cols];
+        let packed = PackedBinary::pack(&w, rows, cols, alpha);
+        let x = vec![1.0f32; rows];
+        let mut y = vec![0.0; cols];
+        gemv_binary(&packed, &x, &mut y);
+        assert!((y[0] - rows as f32).abs() < 1e-4);
+    }
+}

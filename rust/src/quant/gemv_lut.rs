@@ -1,0 +1,188 @@
+//! LUT-accelerated multiplier-free GEMV (the §Perf-optimized hot path).
+//!
+//! The naive kernels in [`super::gemv`] visit one set bit at a time
+//! (`trailing_zeros` + scalar add), which costs ~1 dependent add per
+//! nonzero weight — slower than a vectorized dense f32 GEMV despite the
+//! 16x smaller weight stream. The classical fix (the same trick the
+//! paper's mux-array plays in silicon, lifted to SW): process input rows
+//! in groups of 8 and precompute the **subset-sum table**
+//!
+//! ```text
+//! S_g[p] = Σ_{i: bit i of p set} x[8g + i]        (256 entries)
+//! ```
+//!
+//! with one add per entry (S[p] = S[p & (p-1)] + x[lsb]). A column then
+//! consumes a whole 8-row group with ONE table lookup + add:
+//!
+//! ```text
+//! binary:  y[c] += 2*S_g[sign_byte] - group_total
+//! ternary: y[c] += S_g[pos_byte] - S_g[neg_byte]
+//! ```
+//!
+//! i.e. 1-2 adds per 8 weights instead of ~8, while streaming the packed
+//! planes exactly once. The group loop is outermost so each 1 KB table
+//! stays L1-hot across all columns.
+
+use super::pack::{words_per_col, PackedBinary, PackedTernary};
+
+/// Reusable scratch for the subset-sum tables (avoids per-call allocs in
+/// the serving hot loop).
+#[derive(Default)]
+pub struct LutScratch {
+    pub(crate) table: Vec<f32>,
+}
+
+#[inline]
+pub(crate) fn build_subset_sums(x: &[f32], base: usize, out: &mut [f32]) {
+    // out[p] = sum of x[base + i] over set bits i of p; x padded with 0.
+    out[0] = 0.0;
+    let get = |i: usize| -> f32 {
+        if base + i < x.len() {
+            x[base + i]
+        } else {
+            0.0
+        }
+    };
+    for p in 1..256usize {
+        let lsb = p.trailing_zeros() as usize;
+        out[p] = out[p & (p - 1)] + get(lsb);
+    }
+}
+
+/// LUT binary GEMV: y = xᵀW for a packed ±alpha matrix.
+pub fn gemv_binary_lut(w: &PackedBinary, x: &[f32], y: &mut [f32],
+                       scratch: &mut LutScratch) {
+    assert_eq!(x.len(), w.rows);
+    assert_eq!(y.len(), w.cols);
+    let wpc = words_per_col(w.rows);
+    let groups = w.rows.div_ceil(8);
+    let total: f32 = x.iter().sum();
+    // padding rows in the last group read sign bit 0 => contribute -alpha
+    // * x_pad with x_pad = 0, handled by zero-padding in the table.
+    for c in y.iter_mut() {
+        *c = -total; // start from "all bits clear" = -sum(x)
+    }
+    scratch.table.resize(256, 0.0);
+    let sign_bytes: &[u8] = bytemuck_cast(&w.sign);
+    for g in 0..groups {
+        build_subset_sums(x, g * 8, &mut scratch.table);
+        let t = &scratch.table;
+        // byte g of column c lives at c*wpc*8 + g (little-endian words)
+        for (c, yc) in y.iter_mut().enumerate() {
+            let b = sign_bytes[c * wpc * 8 + g];
+            *yc += 2.0 * t[b as usize];
+        }
+    }
+    for c in y.iter_mut() {
+        *c *= w.alpha;
+    }
+}
+
+/// LUT ternary GEMV: y = xᵀW for a packed {-alpha, 0, +alpha} matrix.
+pub fn gemv_ternary_lut(w: &PackedTernary, x: &[f32], y: &mut [f32],
+                        scratch: &mut LutScratch) {
+    assert_eq!(x.len(), w.rows);
+    assert_eq!(y.len(), w.cols);
+    let wpc = words_per_col(w.rows);
+    let groups = w.rows.div_ceil(8);
+    y.fill(0.0);
+    scratch.table.resize(256, 0.0);
+    let sign_bytes: &[u8] = bytemuck_cast(&w.sign);
+    let mask_bytes: &[u8] = bytemuck_cast(&w.mask);
+    for g in 0..groups {
+        build_subset_sums(x, g * 8, &mut scratch.table);
+        let t = &scratch.table;
+        for (c, yc) in y.iter_mut().enumerate() {
+            let idx = c * wpc * 8 + g;
+            let m = mask_bytes[idx];
+            let s = sign_bytes[idx];
+            let pos = m & s;
+            let neg = m & !s;
+            *yc += t[pos as usize] - t[neg as usize];
+        }
+    }
+    for c in y.iter_mut() {
+        *c *= w.alpha;
+    }
+}
+
+/// View a u64 slice as little-endian bytes (safe on all supported
+/// targets; this crate only builds for little-endian CPUs, asserted
+/// below).
+fn bytemuck_cast(words: &[u64]) -> &[u8] {
+    #[cfg(target_endian = "big")]
+    compile_error!("packed-plane byte views assume little-endian");
+    unsafe {
+        std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gemv::{gemv_binary, gemv_f32, gemv_ternary};
+    use crate::util::Rng;
+
+    #[test]
+    fn binary_lut_matches_naive_and_dense() {
+        let mut rng = Rng::new(31);
+        for (rows, cols) in [(64, 16), (100, 37), (129, 8), (1000, 40), (7, 3)] {
+            let alpha = 0.2f32;
+            let w: Vec<f32> = (0..rows * cols)
+                .map(|_| if rng.bernoulli(0.5) { alpha } else { -alpha })
+                .collect();
+            let x: Vec<f32> = (0..rows).map(|_| rng.normal_f32()).collect();
+            let packed = PackedBinary::pack(&w, rows, cols, alpha);
+            let mut y0 = vec![0.0; cols];
+            let mut y1 = vec![0.0; cols];
+            let mut y2 = vec![0.0; cols];
+            gemv_f32(&w, rows, cols, &x, &mut y0);
+            gemv_binary(&packed, &x, &mut y1);
+            let mut s = LutScratch::default();
+            gemv_binary_lut(&packed, &x, &mut y2, &mut s);
+            for c in 0..cols {
+                assert!((y0[c] - y2[c]).abs() < 1e-3 * (1.0 + y0[c].abs()),
+                        "({rows},{cols}) col {c}: dense {} lut {}", y0[c], y2[c]);
+                assert!((y1[c] - y2[c]).abs() < 1e-3 * (1.0 + y1[c].abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_lut_matches_naive_and_dense() {
+        let mut rng = Rng::new(33);
+        for (rows, cols) in [(64, 16), (100, 37), (129, 8), (513, 24), (3, 2)] {
+            let alpha = 0.15f32;
+            let w: Vec<f32> = (0..rows * cols)
+                .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+                .collect();
+            let x: Vec<f32> = (0..rows).map(|_| rng.normal_f32()).collect();
+            let packed = PackedTernary::pack(&w, rows, cols, alpha);
+            let mut y0 = vec![0.0; cols];
+            let mut y2 = vec![0.0; cols];
+            gemv_f32(&w, rows, cols, &x, &mut y0);
+            let mut s = LutScratch::default();
+            gemv_ternary_lut(&packed, &x, &mut y2, &mut s);
+            let mut y1 = vec![0.0; cols];
+            gemv_ternary(&packed, &x, &mut y1);
+            for c in 0..cols {
+                assert!((y0[c] - y2[c]).abs() < 1e-3 * (1.0 + y0[c].abs()),
+                        "({rows},{cols}) col {c}: dense {} lut {}", y0[c], y2[c]);
+                assert!((y1[c] - y2[c]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_in_last_group_is_zero() {
+        // rows=5: 3 padding bits in the byte; padded x reads as 0.
+        let alpha = 1.0f32;
+        let w = vec![alpha; 5 * 2];
+        let packed = PackedBinary::pack(&w, 5, 2, alpha);
+        let x = vec![1.0f32; 5];
+        let mut y = vec![0.0; 2];
+        let mut s = LutScratch::default();
+        gemv_binary_lut(&packed, &x, &mut y, &mut s);
+        assert!((y[0] - 5.0).abs() < 1e-4, "{y:?}");
+    }
+}

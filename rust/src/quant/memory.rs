@@ -1,0 +1,137 @@
+//! Memory-footprint accounting — regenerates every "Size" column of
+//! Tables 1–6 and the bandwidth-saving claims of §6.
+//!
+//! The paper counts only the recurrent weight matrices (the 8 LSTM / 6
+//! GRU input+recurrent matrices); biases, BN gains, embeddings and the
+//! softmax head are excluded (checked against the published numbers in
+//! the unit tests below: e.g. word-PTB small = 8·300·300·4 B = 2880 KB).
+
+/// Cell kind for parameter counting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cell {
+    Lstm,
+    Gru,
+}
+
+impl Cell {
+    pub fn gates(self) -> usize {
+        match self {
+            Cell::Lstm => 4,
+            Cell::Gru => 3,
+        }
+    }
+}
+
+/// Number of recurrent weights of one layer: W_x (d_in, g·h) + W_h (h, g·h).
+pub fn layer_weight_params(cell: Cell, d_in: usize, hidden: usize) -> usize {
+    cell.gates() * hidden * (d_in + hidden)
+}
+
+/// Recurrent weights of a (possibly stacked) RNN.
+/// `d_in` is the first layer's input width; higher layers take `hidden`.
+pub fn rnn_weight_params(cell: Cell, d_in: usize, hidden: usize,
+                         layers: usize) -> usize {
+    (0..layers)
+        .map(|l| layer_weight_params(cell, if l == 0 { d_in } else { hidden }, hidden))
+        .sum()
+}
+
+/// Bytes at a given bit width, rounding the total up to whole bytes.
+pub fn weight_bytes(params: usize, bits_per_weight: f64) -> u64 {
+    ((params as f64 * bits_per_weight) / 8.0).ceil() as u64
+}
+
+/// The paper's Size columns use decimal kilobytes (KByte = 1000 B): e.g.
+/// word-PTB small = 8·300·300·4 B = 2,880,000 B → "2880 KByte".
+pub fn paper_kbytes(bytes: u64) -> u64 {
+    bytes / 1000
+}
+
+/// Decimal megabytes for Tables 2/5.
+pub fn paper_mbytes(bytes: u64) -> f64 {
+    bytes as f64 / 1e6
+}
+
+/// Memory-saving factor vs the paper's 12-bit fixed-point baseline (§6:
+/// "up to 12× less memory bandwidth").
+pub fn bandwidth_saving_vs_12bit(bits_per_weight: f64) -> f64 {
+    12.0 / bits_per_weight
+}
+
+/// Operation count of one timestep (MACs over the recurrent matrices),
+/// matching the Operations columns of Tables 3/4. `ops_multiplier`
+/// reflects multi-plane schemes (Alternating k-bit → k×).
+pub fn step_ops(cell: Cell, d_in: usize, hidden: usize, layers: usize,
+                ops_multiplier: usize) -> u64 {
+    2 * rnn_weight_params(cell, d_in, hidden, layers) as u64
+        * ops_multiplier as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_ptb_small_matches_paper() {
+        // Table 3: small LSTM (h=300, emb 300): 2880 KByte full precision.
+        let params = rnn_weight_params(Cell::Lstm, 300, 300, 1);
+        assert_eq!(params, 8 * 300 * 300);
+        assert_eq!(paper_kbytes(weight_bytes(params, 32.0)), 2880);
+        // binary row: 90 KByte; ternary: 180 KByte
+        assert_eq!(paper_kbytes(weight_bytes(params, 1.0)), 90);
+        assert_eq!(paper_kbytes(weight_bytes(params, 2.0)), 180);
+    }
+
+    #[test]
+    fn word_ptb_medium_large_match_paper() {
+        // Zaremba's medium/large are 2-layer stacks (the paper's Size
+        // column confirms: 27040 KB = 8·650·650·2·4 B).
+        let m = rnn_weight_params(Cell::Lstm, 650, 650, 2);
+        assert_eq!(paper_kbytes(weight_bytes(m, 32.0)), 27040);
+        // NOTE: the paper's medium binary/ternary rows print 422/845 KB,
+        // which is a 1-layer count — inconsistent with its own 27040 KB
+        // fp row. We keep the 2-layer accounting consistently (845/1690).
+        assert_eq!(paper_kbytes(weight_bytes(m, 1.0)), 845);
+        let l = rnn_weight_params(Cell::Lstm, 1500, 1500, 2);
+        assert_eq!(paper_kbytes(weight_bytes(l, 32.0)), 144_000);
+        assert_eq!(paper_kbytes(weight_bytes(l, 1.0)), 4500);
+        assert_eq!(paper_kbytes(weight_bytes(l, 2.0)), 9000);
+    }
+
+    #[test]
+    fn char_ptb_matches_paper() {
+        // Table 1 PTB: LSTM h=1000, one-hot vocab 50 → 16800 KB fp32.
+        let params = rnn_weight_params(Cell::Lstm, 50, 1000, 1);
+        assert_eq!(params, 4 * 1000 * 1050);
+        assert_eq!(paper_kbytes(weight_bytes(params, 32.0)), 16_800);
+        // binary: paper 525 KB; ternary: 1050 KB
+        assert_eq!(paper_kbytes(weight_bytes(params, 1.0)), 525);
+        assert_eq!(paper_kbytes(weight_bytes(params, 2.0)), 1050);
+    }
+
+    #[test]
+    fn mnist_matches_paper() {
+        // Table 4: h=100, input 1 → 162 KB fp32, 5 KB binary, 10 KB ternary.
+        let params = rnn_weight_params(Cell::Lstm, 1, 100, 1);
+        assert_eq!(params, 4 * 100 * 101);
+        assert_eq!(paper_kbytes(weight_bytes(params, 32.0)), 161); // paper rounds to 162
+        assert_eq!(paper_kbytes(weight_bytes(params, 1.0)), 5);
+        assert_eq!(paper_kbytes(weight_bytes(params, 2.0)), 10);
+        // ops: 80.8 KOps per step; alternating 2-bit doubles it
+        assert_eq!(step_ops(Cell::Lstm, 1, 100, 1, 1), 80_800);
+        assert_eq!(step_ops(Cell::Lstm, 1, 100, 1, 2), 161_600);
+    }
+
+    #[test]
+    fn gru_has_three_quarters_of_lstm() {
+        let lstm = rnn_weight_params(Cell::Lstm, 64, 128, 1);
+        let gru = rnn_weight_params(Cell::Gru, 64, 128, 1);
+        assert_eq!(gru * 4, lstm * 3);
+    }
+
+    #[test]
+    fn bandwidth_saving() {
+        assert_eq!(bandwidth_saving_vs_12bit(1.0), 12.0);
+        assert_eq!(bandwidth_saving_vs_12bit(2.0), 6.0);
+    }
+}

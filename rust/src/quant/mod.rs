@@ -1,0 +1,18 @@
+//! Quantized-weight runtime: bit-plane packing, multiplier-free GEMV
+//! (the CPU realization of the paper's mux-based MAC units), and the
+//! memory-footprint accounting behind every Size column.
+
+pub mod cell;
+pub mod gemv;
+pub mod gemv_lut;
+pub mod memory;
+pub mod pack;
+pub mod planes;
+
+pub use cell::{Packed, PackedLstmCell};
+pub use gemv::{gemm_binary, gemm_ternary, gemv_binary, gemv_f32, gemv_ternary};
+pub use gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};
+pub use memory::{bandwidth_saving_vs_12bit, paper_kbytes, paper_mbytes,
+                 rnn_weight_params, step_ops, weight_bytes, Cell};
+pub use pack::{PackedBinary, PackedTernary};
+pub use planes::{gemv_ternary_planes, TernaryPlanes};

@@ -1,0 +1,188 @@
+//! Bit-plane packing of binary/ternary weight matrices.
+//!
+//! This is the storage format the paper's accelerator reads from DRAM:
+//! 1 bit per binary weight, 2 bits per ternary weight (a sign plane and a
+//! non-zero mask plane), versus 12-bit fixed point in the full-precision
+//! baseline — the source of the 12× memory/bandwidth saving of §6.
+//!
+//! Layout: matrices are (k, n) with the contraction dimension k packed
+//! along u64 words column-major — column j's plane occupies words
+//! `[j*wpc .. (j+1)*wpc)` with bit b of word w covering row `64*w + b`.
+//! This keeps a GEMV inner loop sequential in memory per output column.
+
+/// A packed binary matrix: values in {-alpha, +alpha}.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedBinary {
+    pub rows: usize,
+    pub cols: usize,
+    pub alpha: f32,
+    /// sign plane: bit set => +1, clear => -1; cols * words_per_col words.
+    pub sign: Vec<u64>,
+}
+
+/// A packed ternary matrix: values in {-alpha, 0, +alpha}.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTernary {
+    pub rows: usize,
+    pub cols: usize,
+    pub alpha: f32,
+    /// sign plane: bit set => positive (only meaningful where mask set).
+    pub sign: Vec<u64>,
+    /// mask plane: bit set => non-zero.
+    pub mask: Vec<u64>,
+}
+
+/// Words per packed column for `rows` entries.
+pub fn words_per_col(rows: usize) -> usize {
+    rows.div_ceil(64)
+}
+
+impl PackedBinary {
+    /// Pack a column-major-logical (rows, cols) f32 matrix whose entries
+    /// are ±alpha (or ±1 times alpha). `data` is row-major (rows × cols),
+    /// matching the artifact export layout.
+    pub fn pack(data: &[f32], rows: usize, cols: usize, alpha: f32) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let wpc = words_per_col(rows);
+        let mut sign = vec![0u64; cols * wpc];
+        for r in 0..rows {
+            for c in 0..cols {
+                if data[r * cols + c] > 0.0 {
+                    sign[c * wpc + r / 64] |= 1u64 << (r % 64);
+                }
+            }
+        }
+        Self { rows, cols, alpha, sign }
+    }
+
+    /// Unpack to a row-major f32 matrix (±alpha).
+    pub fn unpack(&self) -> Vec<f32> {
+        let wpc = words_per_col(self.rows);
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let bit = (self.sign[c * wpc + r / 64] >> (r % 64)) & 1;
+                out[r * self.cols + c] = if bit == 1 { self.alpha } else { -self.alpha };
+            }
+        }
+        out
+    }
+
+    /// Bytes occupied by the packed planes (the Size columns).
+    pub fn packed_bytes(&self) -> usize {
+        self.sign.len() * 8
+    }
+}
+
+impl PackedTernary {
+    /// Pack a row-major (rows, cols) f32 matrix with entries in
+    /// {-alpha, 0, +alpha}. Zero tolerance: |x| <= alpha/2 packs to 0 —
+    /// exact 0.0 from the quantizer always does.
+    pub fn pack(data: &[f32], rows: usize, cols: usize, alpha: f32) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let wpc = words_per_col(rows);
+        let mut sign = vec![0u64; cols * wpc];
+        let mut mask = vec![0u64; cols * wpc];
+        let half = alpha * 0.5;
+        for r in 0..rows {
+            for c in 0..cols {
+                let x = data[r * cols + c];
+                if x.abs() > half {
+                    mask[c * wpc + r / 64] |= 1u64 << (r % 64);
+                    if x > 0.0 {
+                        sign[c * wpc + r / 64] |= 1u64 << (r % 64);
+                    }
+                }
+            }
+        }
+        Self { rows, cols, alpha, sign, mask }
+    }
+
+    /// Unpack to a row-major f32 matrix.
+    pub fn unpack(&self) -> Vec<f32> {
+        let wpc = words_per_col(self.rows);
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let w = c * wpc + r / 64;
+                let b = r % 64;
+                if (self.mask[w] >> b) & 1 == 1 {
+                    out[r * self.cols + c] =
+                        if (self.sign[w] >> b) & 1 == 1 { self.alpha } else { -self.alpha };
+                }
+            }
+        }
+        out
+    }
+
+    pub fn packed_bytes(&self) -> usize {
+        (self.sign.len() + self.mask.len()) * 8
+    }
+
+    /// Fraction of non-zero weights (Fig. 1a reports the ternary weight
+    /// distribution being dominated by non-zeros).
+    pub fn density(&self) -> f64 {
+        let mut count = 0u64;
+        let wpc = words_per_col(self.rows);
+        for c in 0..self.cols {
+            for w in 0..wpc {
+                let mut word = self.mask[c * wpc + w];
+                // mask out padding bits in the last word
+                if w == wpc - 1 && self.rows % 64 != 0 {
+                    word &= (1u64 << (self.rows % 64)) - 1;
+                }
+                count += word.count_ones() as u64;
+            }
+        }
+        count as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn binary_roundtrip() {
+        let mut rng = Rng::new(1);
+        let (rows, cols) = (67, 13); // deliberately not multiples of 64
+        let alpha = 0.25;
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| if rng.bernoulli(0.5) { alpha } else { -alpha })
+            .collect();
+        let packed = PackedBinary::pack(&data, rows, cols, alpha);
+        assert_eq!(packed.unpack(), data);
+    }
+
+    #[test]
+    fn ternary_roundtrip() {
+        let mut rng = Rng::new(2);
+        let (rows, cols) = (130, 7);
+        let alpha = 0.1;
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| [0.0f32, alpha, -alpha][rng.below_usize(3)])
+            .collect();
+        let packed = PackedTernary::pack(&data, rows, cols, alpha);
+        assert_eq!(packed.unpack(), data);
+    }
+
+    #[test]
+    fn packed_sizes() {
+        let b = PackedBinary::pack(&vec![1.0; 64 * 4], 64, 4, 1.0);
+        assert_eq!(b.packed_bytes(), 4 * 8); // one word per column
+        let t = PackedTernary::pack(&vec![0.0; 64 * 4], 64, 4, 1.0);
+        assert_eq!(t.packed_bytes(), 2 * 4 * 8); // two planes
+    }
+
+    #[test]
+    fn ternary_density() {
+        let alpha = 1.0;
+        let mut data = vec![0.0f32; 100 * 3];
+        for c in &mut data[..150] {
+            *c = alpha;
+        }
+        let t = PackedTernary::pack(&data, 100, 3, alpha);
+        assert!((t.density() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,132 @@
+//! Ternary pos/neg plane representation — §Perf iteration 3.
+//!
+//! `PackedTernary` stores (sign, mask) planes; the LUT GEMV then needs
+//! two byte-ops per group to derive pos = mask&sign and neg = mask&!sign.
+//! Precomputing the pos/neg planes **once at pack time** removes those
+//! ops from the hot loop and halves the per-group plane reads to exactly
+//! the two bytes consumed — the layout the paper's accelerator would
+//! stream from DRAM anyway (a +1-selector plane and a −1-selector
+//! plane).
+
+use super::gemv_lut::LutScratch;
+use super::pack::{words_per_col, PackedTernary};
+
+/// Ternary matrix as two positive/negative selector planes.
+#[derive(Clone, Debug)]
+pub struct TernaryPlanes {
+    pub rows: usize,
+    pub cols: usize,
+    pub alpha: f32,
+    /// bit set => +alpha at that (row, col).
+    pub pos: Vec<u64>,
+    /// bit set => -alpha.
+    pub neg: Vec<u64>,
+}
+
+impl TernaryPlanes {
+    pub fn from_packed(p: &PackedTernary) -> Self {
+        let pos: Vec<u64> = p
+            .mask
+            .iter()
+            .zip(&p.sign)
+            .map(|(&m, &s)| m & s)
+            .collect();
+        let neg: Vec<u64> = p
+            .mask
+            .iter()
+            .zip(&p.sign)
+            .map(|(&m, &s)| m & !s)
+            .collect();
+        Self { rows: p.rows, cols: p.cols, alpha: p.alpha, pos, neg }
+    }
+
+    pub fn packed_bytes(&self) -> usize {
+        (self.pos.len() + self.neg.len()) * 8
+    }
+}
+
+fn plane_bytes(words: &[u64]) -> &[u8] {
+    #[cfg(target_endian = "big")]
+    compile_error!("plane byte views assume little-endian");
+    unsafe {
+        std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 8)
+    }
+}
+
+/// LUT GEMV over precomputed pos/neg planes (no byte-ops in the loop).
+pub fn gemv_ternary_planes(w: &TernaryPlanes, x: &[f32], y: &mut [f32],
+                           scratch: &mut LutScratch) {
+    assert_eq!(x.len(), w.rows);
+    assert_eq!(y.len(), w.cols);
+    let wpc = words_per_col(w.rows);
+    let groups = w.rows.div_ceil(8);
+    y.fill(0.0);
+    scratch.table.resize(256, 0.0);
+    let pos = plane_bytes(&w.pos);
+    let neg = plane_bytes(&w.neg);
+    for g in 0..groups {
+        super::gemv_lut::build_subset_sums(x, g * 8, &mut scratch.table);
+        let t = &scratch.table;
+        let stride = wpc * 8;
+        for (c, yc) in y.iter_mut().enumerate() {
+            let idx = c * stride + g;
+            *yc += t[pos[idx] as usize] - t[neg[idx] as usize];
+        }
+    }
+    for c in y.iter_mut() {
+        *c *= w.alpha;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{gemv_f32, PackedTernary};
+    use crate::util::Rng;
+
+    #[test]
+    fn planes_match_dense() {
+        let mut rng = Rng::new(41);
+        for (rows, cols) in [(64, 16), (100, 37), (513, 24), (5, 2)] {
+            let alpha = 0.2f32;
+            let w: Vec<f32> = (0..rows * cols)
+                .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+                .collect();
+            let x: Vec<f32> = (0..rows).map(|_| rng.normal_f32()).collect();
+            let packed = PackedTernary::pack(&w, rows, cols, alpha);
+            let planes = TernaryPlanes::from_packed(&packed);
+            let mut y0 = vec![0.0; cols];
+            let mut y1 = vec![0.0; cols];
+            gemv_f32(&w, rows, cols, &x, &mut y0);
+            let mut s = LutScratch::default();
+            gemv_ternary_planes(&planes, &x, &mut y1, &mut s);
+            for c in 0..cols {
+                assert!((y0[c] - y1[c]).abs() < 1e-3 * (1.0 + y0[c].abs()),
+                        "({rows},{cols}) col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn pos_neg_disjoint() {
+        let mut rng = Rng::new(43);
+        let w: Vec<f32> = (0..200 * 8)
+            .map(|_| [0.0, 1.0, -1.0][rng.below_usize(3)])
+            .collect();
+        let planes = TernaryPlanes::from_packed(
+            &PackedTernary::pack(&w, 200, 8, 1.0));
+        for (p, n) in planes.pos.iter().zip(&planes.neg) {
+            assert_eq!(p & n, 0, "pos/neg planes must be disjoint");
+        }
+    }
+
+    #[test]
+    fn same_bytes_as_sign_mask() {
+        let w = vec![1.0f32, -1.0, 0.0, 1.0];
+        let planes = TernaryPlanes::from_packed(
+            &PackedTernary::pack(&w, 4, 1, 1.0));
+        assert_eq!(planes.packed_bytes(), 16);
+        assert_eq!(planes.pos[0], 0b1001);
+        assert_eq!(planes.neg[0], 0b0010);
+    }
+}

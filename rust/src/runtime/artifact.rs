@@ -1,0 +1,323 @@
+//! Artifact metadata: the rust-side binding of `aot.py`'s meta.json.
+//!
+//! An artifact bundle is one experiment: a set of HLO-text entrypoints
+//! (train/eval/infer/...), the ordered input/output leaf specs for each,
+//! and the raw f32 `init.bin` holding initial parameter / BN-state /
+//! optimizer values in the exact order the executables expect.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Element dtype of one leaf (the AOT boundary only uses these three).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One input/output leaf of an entrypoint.
+#[derive(Clone, Debug)]
+pub struct LeafSpec {
+    /// Binding group: "params" | "state" | "opt" | data name | scalar name.
+    pub group: String,
+    /// Leaf name within the group (e.g. "l0/wx"); equals group for data.
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl LeafSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(LeafSpec {
+            group: j.get("group").and_then(|g| g.as_str()).unwrap_or("out").to_string(),
+            name: j.str_at("name").to_string(),
+            shape: j
+                .at("shape")
+                .as_arr()
+                .context("shape not an array")?
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect(),
+            dtype: DType::parse(j.str_at("dtype"))?,
+        })
+    }
+}
+
+/// One lowered executable: HLO file + leaf-ordered I/O binding.
+#[derive(Clone, Debug)]
+pub struct Entrypoint {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<LeafSpec>,
+    pub outputs: Vec<LeafSpec>,
+}
+
+impl Entrypoint {
+    /// Index of the first input leaf in `group`.
+    pub fn group_start(&self, group: &str) -> Option<usize> {
+        self.inputs.iter().position(|l| l.group == group)
+    }
+
+    /// Number of input leaves in `group`.
+    pub fn group_len(&self, group: &str) -> usize {
+        self.inputs.iter().filter(|l| l.group == group).count()
+    }
+
+    /// Index of a named input leaf.
+    pub fn input_index(&self, group: &str, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|l| l.group == group && l.name == name)
+    }
+
+    /// Index of a named output leaf.
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|l| l.name == name)
+    }
+}
+
+/// One `init.bin` segment (an initial value for a params/state/opt leaf).
+#[derive(Clone, Debug)]
+pub struct InitSegment {
+    pub group: String,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Parsed meta.json for one experiment.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub task: String,
+    pub model: Json,
+    pub train: Json,
+    pub paper: Json,
+    pub bits_per_weight: f64,
+    pub entrypoints: BTreeMap<String, Entrypoint>,
+    pub init_file: PathBuf,
+    pub init_total_bytes: usize,
+    pub init_segments: Vec<InitSegment>,
+    pub footprint: Json,
+}
+
+impl ArtifactMeta {
+    /// Load `<dir>/<name>.meta.json`.
+    pub fn load(dir: &Path, name: &str) -> Result<Self> {
+        let path = dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> Result<Self> {
+        let mut entrypoints = BTreeMap::new();
+        for (ename, ej) in j.at("entrypoints").as_obj().context("entrypoints")? {
+            let inputs = ej
+                .at("inputs")
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(LeafSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = ej
+                .at("outputs")
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(LeafSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            entrypoints.insert(
+                ename.clone(),
+                Entrypoint {
+                    name: ename.clone(),
+                    hlo_path: dir.join(ej.str_at("hlo")),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let init = j.at("init");
+        let init_segments = init
+            .at("segments")
+            .as_arr()
+            .context("segments")?
+            .iter()
+            .map(|s| {
+                Ok(InitSegment {
+                    group: s.str_at("group").to_string(),
+                    name: s.str_at("name").to_string(),
+                    shape: s
+                        .at("shape")
+                        .as_arr()
+                        .context("seg shape")?
+                        .iter()
+                        .map(|x| x.as_usize().unwrap())
+                        .collect(),
+                    offset: s.usize_at("offset"),
+                    nbytes: s.usize_at("nbytes"),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            name: j.str_at("name").to_string(),
+            task: j.str_at("task").to_string(),
+            model: j.at("model").clone(),
+            train: j.at("train").clone(),
+            paper: j.at("paper").clone(),
+            bits_per_weight: j.f64_at("bits_per_weight"),
+            entrypoints,
+            init_file: dir.join(init.str_at("file")),
+            init_total_bytes: init.usize_at("total_bytes"),
+            init_segments,
+            footprint: j.at("footprint").clone(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&Entrypoint> {
+        self.entrypoints
+            .get(name)
+            .with_context(|| format!("artifact {} has no entrypoint {name}", self.name))
+    }
+
+    /// Read `init.bin` and return the initial f32 values for every leaf of
+    /// `group`, keyed by name (sorted — matching executable input order).
+    pub fn init_values(&self, group: &str) -> Result<BTreeMap<String, Vec<f32>>> {
+        let raw = std::fs::read(&self.init_file)
+            .with_context(|| format!("reading {}", self.init_file.display()))?;
+        if raw.len() != self.init_total_bytes {
+            bail!(
+                "init.bin size mismatch: got {}, meta says {}",
+                raw.len(),
+                self.init_total_bytes
+            );
+        }
+        let mut out = BTreeMap::new();
+        for seg in self.init_segments.iter().filter(|s| s.group == group) {
+            let bytes = &raw[seg.offset..seg.offset + seg.nbytes];
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.insert(seg.name.clone(), vals);
+        }
+        Ok(out)
+    }
+
+    /// Model dimension helpers (panic on malformed meta — it is generated).
+    pub fn hidden(&self) -> usize {
+        self.model.usize_at("hidden")
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.model.usize_at("vocab")
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.train.usize_at("seq_len")
+    }
+
+    pub fn batch(&self) -> usize {
+        self.train.usize_at("batch")
+    }
+
+    pub fn quantizer(&self) -> &str {
+        self.model.str_at("quantizer")
+    }
+}
+
+/// List all artifact names in a directory (every `*.meta.json`).
+pub fn list_artifacts(dir: &Path) -> Result<Vec<String>> {
+    let mut names = vec![];
+    for entry in std::fs::read_dir(dir).with_context(|| format!("{}", dir.display()))? {
+        let name = entry?.file_name().to_string_lossy().to_string();
+        if let Some(stripped) = name.strip_suffix(".meta.json") {
+            names.push(stripped.to_string());
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_meta() -> Json {
+        Json::parse(
+            r#"{
+              "name": "toy", "task": "charlm",
+              "model": {"arch": "bnlstm", "quantizer": "ter", "vocab": 50,
+                        "hidden": 96},
+              "train": {"optimizer": "adam", "seq_len": 50, "batch": 32},
+              "paper": {"table": 1, "value": 1.39},
+              "bits_per_weight": 2,
+              "footprint": {"recurrent_params": 100},
+              "entrypoints": {
+                "eval": {"hlo": "toy_eval.hlo.txt",
+                  "inputs": [
+                    {"group":"params","name":"head/b","shape":[50],"dtype":"f32"},
+                    {"group":"params","name":"l0/wx","shape":[50,384],"dtype":"f32"},
+                    {"group":"x","name":"x","shape":[50,32],"dtype":"i32"},
+                    {"group":"seed","name":"seed","shape":[],"dtype":"i32"}],
+                  "outputs": [{"name":"out","shape":[],"dtype":"f32"}]}},
+              "init": {"file": "toy.init.bin", "total_bytes": 8,
+                "segments": [
+                  {"group":"params","name":"head/b","shape":[2],"dtype":"f32",
+                   "offset":0,"nbytes":8}]}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_meta() {
+        let m = ArtifactMeta::from_json(&sample_meta(), Path::new("/tmp")).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.hidden(), 96);
+        let e = m.entry("eval").unwrap();
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.group_len("params"), 2);
+        assert_eq!(e.input_index("x", "x"), Some(2));
+        assert_eq!(e.inputs[1].elements(), 50 * 384);
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn init_values_reads_segments() {
+        let dir = std::env::temp_dir().join("rbtw_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut bytes = vec![];
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        bytes.extend_from_slice(&(-2.0f32).to_le_bytes());
+        std::fs::write(dir.join("toy.init.bin"), &bytes).unwrap();
+        let m = ArtifactMeta::from_json(&sample_meta(), &dir).unwrap();
+        let vals = m.init_values("params").unwrap();
+        assert_eq!(vals["head/b"], vec![1.5, -2.0]);
+    }
+}

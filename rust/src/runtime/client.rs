@@ -1,0 +1,95 @@
+//! PJRT engine: loads HLO-text artifacts and compiles them once per
+//! entrypoint. Compiled executables are cached by HLO path.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifact::Entrypoint;
+
+/// Shared PJRT client + executable cache. Cheap to clone.
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<xla::PjRtClient>,
+    cache: Arc<Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>>,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client (the only backend on this image).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client: Arc::new(client), cache: Arc::new(Mutex::new(HashMap::new())) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text file (cached).
+    pub fn compile_hlo(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(key.clone(), exe.clone());
+        let ms = t0.elapsed().as_millis();
+        if ms > 500 {
+            eprintln!("[engine] compiled {key} in {ms} ms");
+        }
+        Ok(exe)
+    }
+
+    /// Compile an entrypoint into a bound executable.
+    pub fn load(&self, entry: &Entrypoint) -> Result<Executable> {
+        let exe = self.compile_hlo(&entry.hlo_path)?;
+        Ok(Executable { entry: entry.clone(), exe })
+    }
+}
+
+/// A compiled entrypoint with its I/O binding.
+pub struct Executable {
+    pub entry: Entrypoint,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl Executable {
+    /// Run with positional literal inputs; returns the decomposed output
+    /// leaves (the AOT side always lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let out = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.entry.name))?;
+        let mut lit = out[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let leaves = lit.decompose_tuple().context("untupling result")?;
+        anyhow::ensure!(
+            leaves.len() == self.entry.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.entry.name,
+            self.entry.outputs.len(),
+            leaves.len()
+        );
+        Ok(leaves)
+    }
+}

@@ -1,0 +1,272 @@
+//! Session: one experiment's runtime state — the compiled entrypoints
+//! plus the live parameter / BN-state / optimizer literals, updated in
+//! place by each train step. This is the only layer that touches XLA
+//! values; the coordinator above it deals in plain rust types.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::artifact::ArtifactMeta;
+use super::client::{Engine, Executable};
+use super::literal as lit;
+
+/// An ordered, named group of array leaves (params / state / opt).
+pub struct VarGroup {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub lits: Vec<Literal>,
+}
+
+impl VarGroup {
+    fn from_init(meta: &ArtifactMeta, group: &str) -> Result<Self> {
+        let values = meta.init_values(group)?;
+        let mut names = vec![];
+        let mut shapes = vec![];
+        let mut lits = vec![];
+        for seg in meta.init_segments.iter().filter(|s| s.group == group) {
+            let data = &values[&seg.name];
+            names.push(seg.name.clone());
+            shapes.push(seg.shape.clone());
+            lits.push(lit::f32_literal(data, &seg.shape)?);
+        }
+        Ok(Self { names, shapes, lits })
+    }
+
+    pub fn len(&self) -> usize {
+        self.lits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lits.is_empty()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.names.iter().position(|n| n == name)
+    }
+
+    /// Host copy of one leaf by name.
+    pub fn get_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let idx = self
+            .index_of(name)
+            .with_context(|| format!("no leaf named {name}"))?;
+        lit::to_f32_vec(&self.lits[idx])
+    }
+
+    /// Replace one leaf's value from host data (e.g. checkpoint restore).
+    pub fn set_f32(&mut self, name: &str, data: &[f32]) -> Result<()> {
+        let idx = self
+            .index_of(name)
+            .with_context(|| format!("no leaf named {name}"))?;
+        self.lits[idx] = lit::f32_literal(data, &self.shapes[idx])?;
+        Ok(())
+    }
+
+    /// Export all leaves to host (name -> (shape, values)).
+    pub fn export(&self) -> Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>> {
+        let mut out = BTreeMap::new();
+        for i in 0..self.len() {
+            out.insert(
+                self.names[i].clone(),
+                (self.shapes[i].clone(), lit::to_f32_vec(&self.lits[i])?),
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Live runtime session for one artifact bundle.
+pub struct Session {
+    pub meta: ArtifactMeta,
+    engine: Engine,
+    pub params: VarGroup,
+    pub state: VarGroup,
+    pub opt: VarGroup,
+}
+
+impl Session {
+    /// Open an experiment: parse meta, load init values.
+    /// Executables compile lazily on first use (engine-level cache).
+    pub fn open(engine: &Engine, artifacts_dir: &Path, name: &str) -> Result<Self> {
+        let meta = ArtifactMeta::load(artifacts_dir, name)?;
+        let params = VarGroup::from_init(&meta, "params")?;
+        let state = VarGroup::from_init(&meta, "state")?;
+        let opt = VarGroup::from_init(&meta, "opt")?;
+        Ok(Self { meta, engine: engine.clone(), params, state, opt })
+    }
+
+    /// Reset params/state/opt to their init values (fresh training run).
+    pub fn reset(&mut self) -> Result<()> {
+        self.params = VarGroup::from_init(&self.meta, "params")?;
+        self.state = VarGroup::from_init(&self.meta, "state")?;
+        self.opt = VarGroup::from_init(&self.meta, "opt")?;
+        Ok(())
+    }
+
+    pub fn exe(&self, entry: &str) -> Result<Executable> {
+        self.engine.load(self.meta.entry(entry)?)
+    }
+
+    fn collect_inputs<'a>(
+        &'a self,
+        entry: &str,
+        extra: &'a [(&str, &'a Literal)],
+    ) -> Result<Vec<&'a Literal>> {
+        let e = self.meta.entry(entry)?;
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(e.inputs.len());
+        let mut pi = 0usize;
+        let mut si = 0usize;
+        let mut oi = 0usize;
+        for leaf in &e.inputs {
+            match leaf.group.as_str() {
+                "params" => {
+                    anyhow::ensure!(self.params.names[pi] == leaf.name,
+                        "params order mismatch: {} vs {}", self.params.names[pi], leaf.name);
+                    inputs.push(&self.params.lits[pi]);
+                    pi += 1;
+                }
+                "state" => {
+                    anyhow::ensure!(self.state.names[si] == leaf.name,
+                        "state order mismatch");
+                    inputs.push(&self.state.lits[si]);
+                    si += 1;
+                }
+                "opt" => {
+                    anyhow::ensure!(self.opt.names[oi] == leaf.name,
+                        "opt order mismatch");
+                    inputs.push(&self.opt.lits[oi]);
+                    oi += 1;
+                }
+                other => {
+                    let found = extra
+                        .iter()
+                        .find(|(n, _)| *n == other)
+                        .with_context(|| format!("missing data input '{other}'"))?;
+                    inputs.push(found.1);
+                }
+            }
+        }
+        Ok(inputs)
+    }
+
+    /// One optimizer step. Returns the training loss (mean CE, nats).
+    ///
+    /// Output layout (train entrypoints): params* state* opt* loss [acc].
+    pub fn train_step(
+        &mut self,
+        x: &Literal,
+        y: &Literal,
+        seed: i32,
+        lr: f32,
+    ) -> Result<f32> {
+        let seed_l = lit::scalar_i32(seed)?;
+        let lr_l = lit::scalar_f32(lr)?;
+        let extra = [("x", x), ("y", y), ("seed", &seed_l), ("lr", &lr_l)];
+        let inputs = self.collect_inputs("train", &extra)?;
+        let exe = self.exe("train")?;
+        let outs = exe.run(&inputs)?;
+        self.absorb_train_outputs(outs)
+    }
+
+    /// QA variant: doc/query inputs; returns (loss, acc).
+    pub fn train_step_qa(
+        &mut self,
+        doc: &Literal,
+        query: &Literal,
+        y: &Literal,
+        seed: i32,
+        lr: f32,
+    ) -> Result<(f32, f32)> {
+        let seed_l = lit::scalar_i32(seed)?;
+        let lr_l = lit::scalar_f32(lr)?;
+        let extra = [("doc", doc), ("query", query), ("y", y),
+                     ("seed", &seed_l), ("lr", &lr_l)];
+        let inputs = self.collect_inputs("train", &extra)?;
+        let exe = self.exe("train")?;
+        let outs = exe.run(&inputs)?;
+        let n = outs.len();
+        let acc = lit::to_scalar_f32(&outs[n - 1])?;
+        let mut outs = outs;
+        outs.truncate(n - 1);
+        let loss = self.absorb_train_outputs(outs)?;
+        Ok((loss, acc))
+    }
+
+    /// Consume train outputs: update params/state/opt, return trailing loss.
+    fn absorb_train_outputs(&mut self, outs: Vec<Literal>) -> Result<f32> {
+        let p = self.params.len();
+        let s = self.state.len();
+        let o = self.opt.len();
+        if outs.len() != p + s + o + 1 {
+            bail!(
+                "train outputs: got {}, expected {}+{}+{}+1",
+                outs.len(), p, s, o
+            );
+        }
+        let mut it = outs.into_iter();
+        for i in 0..p {
+            self.params.lits[i] = it.next().unwrap();
+        }
+        for i in 0..s {
+            self.state.lits[i] = it.next().unwrap();
+        }
+        for i in 0..o {
+            self.opt.lits[i] = it.next().unwrap();
+        }
+        lit::to_scalar_f32(&it.next().unwrap())
+    }
+
+    /// Evaluation: returns the raw output scalars (loss [, acc]).
+    pub fn eval_step(
+        &self,
+        entry: &str,
+        data: &[(&str, &Literal)],
+        seed: i32,
+    ) -> Result<Vec<f32>> {
+        let seed_l = lit::scalar_i32(seed)?;
+        let mut extra: Vec<(&str, &Literal)> = data.to_vec();
+        extra.push(("seed", &seed_l));
+        let inputs = self.collect_inputs(entry, &extra)?;
+        let exe = self.exe(entry)?;
+        let outs = exe.run(&inputs)?;
+        outs.iter().map(lit::to_scalar_f32).collect()
+    }
+
+    /// Serving step (infer_* entrypoints): returns (logits, h, c) leaves.
+    pub fn infer_step(
+        &self,
+        entry: &str,
+        x: &Literal,
+        h: &Literal,
+        c: &Literal,
+        seed: i32,
+    ) -> Result<(Literal, Literal, Literal)> {
+        let seed_l = lit::scalar_i32(seed)?;
+        let extra = [("x", x), ("h", h), ("c", c), ("seed", &seed_l)];
+        let inputs = self.collect_inputs(entry, &extra)?;
+        let exe = self.exe(entry)?;
+        let mut outs = exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 3, "infer outputs != 3");
+        let c_out = outs.pop().unwrap();
+        let h_out = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        Ok((logits, h_out, c_out))
+    }
+
+    /// Gate statistics dump (Appendix A figures): returns the raw leaves
+    /// (i, f, o, g, i_pre, h), each (T, B, H) f32.
+    pub fn gate_stats(&self, x: &Literal, seed: i32) -> Result<Vec<(String, Vec<f32>)>> {
+        let seed_l = lit::scalar_i32(seed)?;
+        let extra = [("x", x), ("seed", &seed_l)];
+        let inputs = self.collect_inputs("gatestats", &extra)?;
+        let exe = self.exe("gatestats")?;
+        let outs = exe.run(&inputs)?;
+        let names = ["i", "f", "o", "g", "i_pre", "h"];
+        outs.iter()
+            .enumerate()
+            .map(|(k, l)| Ok((names[k].to_string(), lit::to_f32_vec(l)?)))
+            .collect()
+    }
+}

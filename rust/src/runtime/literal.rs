@@ -1,0 +1,102 @@
+//! Literal construction/extraction helpers over the `xla` crate.
+
+use anyhow::{bail, Result};
+use xla::{ElementType, Literal};
+
+use super::artifact::{DType, LeafSpec};
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let expect: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != expect {
+        bail!("f32_literal: {} values for shape {:?}", data.len(), shape);
+    }
+    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        shape,
+        &bytes,
+    )?)
+}
+
+/// Build an i32 literal of the given shape from a host slice.
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let expect: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != expect {
+        bail!("i32_literal: {} values for shape {:?}", data.len(), shape);
+    }
+    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        shape,
+        &bytes,
+    )?)
+}
+
+/// Scalar literals (rank 0).
+pub fn scalar_f32(x: f32) -> Result<Literal> {
+    f32_literal(&[x], &[])
+}
+
+pub fn scalar_i32(x: i32) -> Result<Literal> {
+    i32_literal(&[x], &[])
+}
+
+/// Build a zero literal for a leaf spec (used for optimizer bootstrap).
+pub fn zeros(spec: &LeafSpec) -> Result<Literal> {
+    match spec.dtype {
+        DType::F32 => f32_literal(&vec![0.0; spec.elements()], &spec.shape),
+        DType::I32 | DType::U32 => {
+            i32_literal(&vec![0; spec.elements()], &spec.shape)
+        }
+    }
+}
+
+/// Extract f32 data from a literal.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_f32_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = scalar_f32(2.5).unwrap();
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 2.5);
+        let li = scalar_i32(-7).unwrap();
+        assert_eq!(li.get_first_element::<i32>().unwrap(), -7);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_literal(&[1], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn zeros_matches_spec() {
+        let spec = LeafSpec {
+            group: "opt".into(),
+            name: "m/l0/wx".into(),
+            shape: vec![4, 8],
+            dtype: DType::F32,
+        };
+        let z = zeros(&spec).unwrap();
+        assert_eq!(z.element_count(), 32);
+        assert!(to_f32_vec(&z).unwrap().iter().all(|&x| x == 0.0));
+    }
+}

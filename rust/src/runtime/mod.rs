@@ -1,0 +1,17 @@
+//! Runtime layer: PJRT client, artifact metadata, literal marshalling and
+//! the per-experiment `Session`.
+//!
+//! Load path: `artifacts/<name>.meta.json` → [`artifact::ArtifactMeta`] →
+//! [`client::Engine::load`] compiles the HLO text (`HloModuleProto::
+//! from_text_file` → `XlaComputation` → PJRT compile) → [`executor::
+//! Session`] binds the live parameter literals and exposes typed step
+//! calls. Python is never involved at this point.
+
+pub mod artifact;
+pub mod client;
+pub mod executor;
+pub mod literal;
+
+pub use artifact::{list_artifacts, ArtifactMeta, DType, Entrypoint, LeafSpec};
+pub use client::{Engine, Executable};
+pub use executor::{Session, VarGroup};

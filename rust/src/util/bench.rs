@@ -1,0 +1,140 @@
+//! Wall-clock bench harness (no `criterion` offline): warmup + timed
+//! iterations with robust statistics, used by every `cargo bench` target.
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentiles;
+
+/// Result of one benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p05_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p05_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with automatic iteration-count calibration toward
+/// `target_time` of total measurement, after `warmup` of warm-up.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> Measurement {
+    bench_cfg(name, Duration::from_millis(300), Duration::from_secs(1), &mut f)
+}
+
+pub fn bench_cfg<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    target_time: Duration,
+    f: &mut F,
+) -> Measurement {
+    // Warm-up & single-shot estimate.
+    let w0 = Instant::now();
+    f();
+    let single = w0.elapsed().max(Duration::from_nanos(50));
+    let mut spent = single;
+    while spent < warmup {
+        let t = Instant::now();
+        f();
+        spent += t.elapsed();
+    }
+    // Choose a per-sample batch so each sample is >= ~1µs but we still get
+    // up to 100 samples in the target time.
+    let est_ns = single.as_nanos().max(50) as f64;
+    let samples = ((target_time.as_nanos() as f64 / est_ns) as usize).clamp(5, 100);
+    let batch = ((1_000.0 / est_ns).ceil() as usize).max(1);
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    let ps = percentiles(&times, &[0.05, 0.5, 0.95]);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Measurement {
+        name: name.to_string(),
+        iters: samples * batch,
+        mean_ns: mean,
+        median_ns: ps[1],
+        p05_ns: ps[0],
+        p95_ns: ps[2],
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Standard bench header matching `Measurement::report` columns.
+pub fn print_header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<40} {:>12} {:>12} {:>12}",
+        "benchmark", "median", "p05", "p95"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = bench_cfg(
+            "spin",
+            Duration::from_millis(5),
+            Duration::from_millis(50),
+            &mut || {
+                let mut acc = 0u64;
+                for i in 0..1000 {
+                    acc = acc.wrapping_add(black_box(i));
+                }
+                black_box(acc);
+            },
+        );
+        assert!(m.median_ns > 0.0);
+        assert!(m.p05_ns <= m.median_ns && m.median_ns <= m.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

@@ -1,0 +1,18 @@
+//! Zero-dependency substrate utilities.
+//!
+//! The offline build environment vendors only the `xla` crate's
+//! dependency closure, so the pieces a production service would normally
+//! pull from crates.io are implemented (and tested) here: a PRNG
+//! (`rng`), a JSON codec (`json`), summary statistics (`stats`), a table
+//! printer (`table`), a property-test harness (`prop`) and a wall-clock
+//! bench harness (`bench`).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;

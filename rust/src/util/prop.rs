@@ -1,0 +1,127 @@
+//! Mini property-testing harness (no `proptest` offline).
+//!
+//! `check` runs a property over N seeded random cases and, on failure,
+//! reports the failing seed so the case can be replayed exactly:
+//!
+//! ```ignore
+//! prop::check("pack roundtrip", 200, |g| {
+//!     let rows = g.usize_in(1, 64);
+//!     ...
+//!     prop::assert_that(cond, "message")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to each property invocation.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below_usize(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Random ternary vector in {-1, 0, +1}.
+    pub fn ternary_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| [-1.0f32, 0.0, 1.0][self.rng.below_usize(3)])
+            .collect()
+    }
+
+    /// Random binary vector in {-1, +1}.
+    pub fn binary_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| if self.rng.bernoulli(0.5) { 1.0f32 } else { -1.0 })
+            .collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Result of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn assert_that(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (test failure) on the first
+/// failing case, printing its seed for replay via `check_seeded`.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    let base = 0x5EED_0000u64;
+    for case in 0..cases {
+        let seed = base + case as u64;
+        let mut g = Gen { rng: Rng::new(seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seeded<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    let mut g = Gen { rng: Rng::new(seed), case: 0 };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            assert_that(a + b == b + a, "addition should commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_| assert_that(false, "nope"));
+    }
+
+    #[test]
+    fn generator_ranges() {
+        check("gen-ranges", 100, |g| {
+            let n = g.usize_in(3, 7);
+            assert_that((3..=7).contains(&n), format!("usize_in out of range: {n}"))?;
+            let v = g.ternary_vec(16);
+            assert_that(v.iter().all(|x| [-1.0, 0.0, 1.0].contains(x)),
+                        "ternary values")
+        });
+    }
+}

@@ -1,0 +1,66 @@
+//! Cross-module hwsim checks: the simulator's cycle counts, the memory
+//! accounting and the packed exports must tell one consistent story.
+
+use rbtw::hwsim::{fig7_points, paper_workloads, simulate_timestep,
+                  synthesize, HwConfig, Precision};
+use rbtw::quant::{rnn_weight_params, weight_bytes, Cell};
+
+#[test]
+fn simulator_dram_equals_memory_accounting() {
+    // the weight bytes streamed per timestep must equal quant::memory's
+    // per-precision footprint of the same model.
+    for w in paper_workloads() {
+        let params = rnn_weight_params(w.cell, w.d_in, w.hidden, w.layers);
+        for (prec, bits) in [(Precision::Fixed12, 12.0),
+                             (Precision::Binary, 1.0),
+                             (Precision::Ternary, 2.0)] {
+            let cfg = HwConfig::low_power(prec);
+            let stats = simulate_timestep(&cfg, w.cell, w.d_in, w.hidden, w.layers);
+            assert_eq!(stats.dram_bytes, weight_bytes(params, bits),
+                       "{} {:?}", w.name, prec);
+        }
+    }
+}
+
+#[test]
+fn table7_and_fig7_consistent() {
+    // Fig 7's latency ratios must match Table 7's throughput ratios for
+    // array-saturating workloads.
+    let w = &paper_workloads()[0]; // char-PTB, h=1000 saturates 1000 lanes
+    let (fp, b, _t) = fig7_points(w);
+    let fp_syn = synthesize(&HwConfig::low_power(Precision::Fixed12));
+    let b_syn = synthesize(&HwConfig {
+        mac_units: b.mac_units,
+        ..HwConfig::low_power(Precision::Binary)
+    });
+    let thr_ratio = b_syn.throughput_gops / fp_syn.throughput_gops;
+    let lat_ratio = fp.latency_us / b.latency_us;
+    assert!((thr_ratio - lat_ratio).abs() / thr_ratio < 0.1,
+            "throughput {thr_ratio} vs latency {lat_ratio}");
+}
+
+#[test]
+fn memory_bound_regime_caps_at_bandwidth_ratio() {
+    // on the bandwidth-starved config, binary's speedup approaches 12x
+    // (the compression ratio), not the MAC ratio.
+    let w = &paper_workloads()[0];
+    let fp = HwConfig::low_power_ddr(Precision::Fixed12);
+    let b = HwConfig { mac_units: 1000, ..HwConfig::low_power_ddr(Precision::Binary) };
+    let sfp = simulate_timestep(&fp, w.cell, w.d_in, w.hidden, w.layers);
+    let sb = simulate_timestep(&b, w.cell, w.d_in, w.hidden, w.layers);
+    let speedup = sfp.latency_us(&fp) / sb.latency_us(&b);
+    assert!(speedup > 10.0 && speedup <= 12.5, "speedup {speedup}");
+}
+
+#[test]
+fn utilization_never_exceeds_one() {
+    for w in paper_workloads() {
+        for lanes in [100usize, 500, 1000, 4000] {
+            let cfg = HwConfig { mac_units: lanes,
+                                 ..HwConfig::low_power(Precision::Binary) };
+            let s = simulate_timestep(&cfg, w.cell, w.d_in, w.hidden, w.layers);
+            assert!(s.utilization > 0.0 && s.utilization <= 1.0 + 1e-9,
+                    "{} lanes {lanes}: util {}", w.name, s.utilization);
+        }
+    }
+}

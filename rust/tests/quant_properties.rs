@@ -1,0 +1,119 @@
+//! Property tests over the quantized-weight substrate (mini prop harness;
+//! the environment vendors no proptest). Invariants:
+//! * pack/unpack round-trips for arbitrary shapes incl. non-word-aligned
+//! * popcount GEMV == dense GEMV for arbitrary ±1/0 matrices
+//! * packed size is exactly ceil(rows/64)*8 bytes per column per plane
+//! * ternary density equals the fraction of non-zeros
+
+use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, PackedBinary,
+                  PackedTernary};
+use rbtw::util::prop::{self, assert_that};
+
+#[test]
+fn prop_binary_pack_roundtrip() {
+    prop::check("binary pack roundtrip", 200, |g| {
+        let rows = g.usize_in(1, 200);
+        let cols = g.usize_in(1, 40);
+        let alpha = g.f32_in(0.01, 2.0);
+        let data: Vec<f32> = g
+            .binary_vec(rows * cols)
+            .iter()
+            .map(|x| x * alpha)
+            .collect();
+        let packed = PackedBinary::pack(&data, rows, cols, alpha);
+        assert_that(packed.unpack() == data, "roundtrip mismatch")
+    });
+}
+
+#[test]
+fn prop_ternary_pack_roundtrip() {
+    prop::check("ternary pack roundtrip", 200, |g| {
+        let rows = g.usize_in(1, 200);
+        let cols = g.usize_in(1, 40);
+        let alpha = g.f32_in(0.01, 2.0);
+        let data: Vec<f32> = g
+            .ternary_vec(rows * cols)
+            .iter()
+            .map(|x| x * alpha)
+            .collect();
+        let packed = PackedTernary::pack(&data, rows, cols, alpha);
+        assert_that(packed.unpack() == data, "roundtrip mismatch")
+    });
+}
+
+#[test]
+fn prop_binary_gemv_matches_dense() {
+    prop::check("binary gemv == dense", 100, |g| {
+        let rows = g.usize_in(1, 180);
+        let cols = g.usize_in(1, 24);
+        let alpha = g.f32_in(0.05, 1.0);
+        let w: Vec<f32> = g.binary_vec(rows * cols).iter().map(|x| x * alpha).collect();
+        let x = g.f32_vec(rows, -2.0, 2.0);
+        let packed = PackedBinary::pack(&w, rows, cols, alpha);
+        let mut yd = vec![0.0; cols];
+        let mut yp = vec![0.0; cols];
+        gemv_f32(&w, rows, cols, &x, &mut yd);
+        gemv_binary(&packed, &x, &mut yp);
+        for c in 0..cols {
+            // identical math up to f32 association differences
+            let tol = 1e-3 * (1.0 + yd[c].abs());
+            if (yd[c] - yp[c]).abs() > tol {
+                return Err(format!("col {c}: dense {} packed {}", yd[c], yp[c]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ternary_gemv_matches_dense() {
+    prop::check("ternary gemv == dense", 100, |g| {
+        let rows = g.usize_in(1, 180);
+        let cols = g.usize_in(1, 24);
+        let alpha = g.f32_in(0.05, 1.0);
+        let w: Vec<f32> = g.ternary_vec(rows * cols).iter().map(|x| x * alpha).collect();
+        let x = g.f32_vec(rows, -2.0, 2.0);
+        let packed = PackedTernary::pack(&w, rows, cols, alpha);
+        let mut yd = vec![0.0; cols];
+        let mut yp = vec![0.0; cols];
+        gemv_f32(&w, rows, cols, &x, &mut yd);
+        gemv_ternary(&packed, &x, &mut yp);
+        for c in 0..cols {
+            let tol = 1e-3 * (1.0 + yd[c].abs());
+            if (yd[c] - yp[c]).abs() > tol {
+                return Err(format!("col {c}: dense {} packed {}", yd[c], yp[c]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_bytes_formula() {
+    prop::check("packed size formula", 100, |g| {
+        let rows = g.usize_in(1, 500);
+        let cols = g.usize_in(1, 30);
+        let data = vec![1.0f32; rows * cols];
+        let b = PackedBinary::pack(&data, rows, cols, 1.0);
+        let words_per_col = rows.div_ceil(64);
+        assert_that(b.packed_bytes() == cols * words_per_col * 8,
+                    "binary size")?;
+        let t = PackedTernary::pack(&data, rows, cols, 1.0);
+        assert_that(t.packed_bytes() == 2 * cols * words_per_col * 8,
+                    "ternary size")
+    });
+}
+
+#[test]
+fn prop_ternary_density_counts_nonzeros() {
+    prop::check("density == nonzero fraction", 100, |g| {
+        let rows = g.usize_in(1, 150);
+        let cols = g.usize_in(1, 20);
+        let data = g.ternary_vec(rows * cols);
+        let nz = data.iter().filter(|&&x| x != 0.0).count();
+        let t = PackedTernary::pack(&data, rows, cols, 1.0);
+        let want = nz as f64 / (rows * cols) as f64;
+        assert_that((t.density() - want).abs() < 1e-9,
+                    format!("density {} vs {}", t.density(), want))
+    });
+}

@@ -1,0 +1,188 @@
+//! Integration tests: the full AOT bridge — load HLO text artifacts,
+//! compile on the PJRT CPU client, execute train/eval/infer steps, and
+//! check the numbers behave (loss finite and decreasing, shapes bound).
+//!
+//! Requires `make artifacts` (at least the char_ptb_ter / char_ptb_bc
+//! bundles) — skipped gracefully when artifacts are missing so plain
+//! `cargo test` works before the first artifact build.
+
+use std::path::PathBuf;
+
+use rbtw::runtime::{literal, ArtifactMeta, Engine, Session};
+use rbtw::util::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have(name: &str) -> bool {
+    artifacts_dir().join(format!("{name}.meta.json")).exists()
+}
+
+macro_rules! require_artifact {
+    ($name:expr) => {
+        if !have($name) {
+            eprintln!("skipping: artifact {} not built", $name);
+            return;
+        }
+    };
+}
+
+fn random_batch(rng: &mut Rng, seq: usize, batch: usize, vocab: usize)
+    -> (xla::Literal, xla::Literal)
+{
+    let xs: Vec<i32> = (0..seq * batch)
+        .map(|_| rng.below(vocab as u64) as i32)
+        .collect();
+    let ys: Vec<i32> = (0..seq * batch)
+        .map(|_| rng.below(vocab as u64) as i32)
+        .collect();
+    (
+        literal::i32_literal(&xs, &[seq, batch]).unwrap(),
+        literal::i32_literal(&ys, &[seq, batch]).unwrap(),
+    )
+}
+
+#[test]
+fn meta_loads_and_binds() {
+    require_artifact!("char_ptb_ter");
+    let meta = ArtifactMeta::load(&artifacts_dir(), "char_ptb_ter").unwrap();
+    assert_eq!(meta.task, "charlm");
+    assert_eq!(meta.quantizer(), "ter");
+    let train = meta.entry("train").unwrap();
+    // params + state + opt + x + y + seed + lr
+    assert_eq!(
+        train.inputs.len(),
+        train.group_len("params") + train.group_len("state")
+            + train.group_len("opt") + 4
+    );
+    // outputs mirror params/state/opt plus the loss scalar
+    assert_eq!(
+        train.outputs.len(),
+        train.group_len("params") + train.group_len("state")
+            + train.group_len("opt") + 1
+    );
+    // init.bin covers exactly the params/state/opt leaves
+    let init_names: Vec<_> = meta.init_segments.iter().map(|s| &s.name).collect();
+    for leaf in train.inputs.iter().filter(|l| {
+        matches!(l.group.as_str(), "params" | "state" | "opt")
+    }) {
+        assert!(init_names.contains(&&leaf.name), "{} missing init", leaf.name);
+    }
+}
+
+#[test]
+fn train_step_decreases_loss() {
+    require_artifact!("char_ptb_ter");
+    let engine = Engine::cpu().unwrap();
+    let mut sess = Session::open(&engine, &artifacts_dir(), "char_ptb_ter").unwrap();
+    let (seq, batch, vocab) = (sess.meta.seq_len(), sess.meta.batch(), sess.meta.vocab());
+    let mut rng = Rng::new(7);
+    // Fixed batch with a learnable mapping (y == x: copy the input token):
+    // loss must fall well below the uniform baseline within a few steps.
+    let (x, _) = random_batch(&mut rng, seq, batch, vocab);
+    let y = literal::i32_literal(&x.to_vec::<i32>().unwrap(), &[seq, batch]).unwrap();
+    let first = sess.train_step(&x, &y, 1, 2e-3).unwrap();
+    assert!(first.is_finite() && first > 0.0, "first loss {first}");
+    // uniform CE over vocab=50 is ln(50) ~ 3.91; the untrained model
+    // should start in that neighborhood.
+    assert!((first - (vocab as f32).ln()).abs() < 1.0, "first loss {first}");
+    let mut last = first;
+    for step in 2..=60 {
+        last = sess.train_step(&x, &y, step, 2e-3).unwrap();
+    }
+    assert!(
+        last < first - 0.4,
+        "loss did not decrease: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn eval_uses_running_stats_and_is_finite() {
+    require_artifact!("char_ptb_ter");
+    let engine = Engine::cpu().unwrap();
+    let sess = Session::open(&engine, &artifacts_dir(), "char_ptb_ter").unwrap();
+    let mut rng = Rng::new(9);
+    let (x, y) = random_batch(&mut rng, sess.meta.seq_len(), sess.meta.batch(),
+                              sess.meta.vocab());
+    let out = sess.eval_step("eval", &[("x", &x), ("y", &y)], 3).unwrap();
+    assert_eq!(out.len(), 1);
+    assert!(out[0].is_finite() && out[0] > 0.0);
+}
+
+#[test]
+fn stochastic_eval_varies_with_seed_for_ternary() {
+    require_artifact!("char_ptb_ter");
+    let engine = Engine::cpu().unwrap();
+    let sess = Session::open(&engine, &artifacts_dir(), "char_ptb_ter").unwrap();
+    let mut rng = Rng::new(11);
+    let (x, y) = random_batch(&mut rng, sess.meta.seq_len(), sess.meta.batch(),
+                              sess.meta.vocab());
+    let a = sess.eval_step("eval", &[("x", &x), ("y", &y)], 1).unwrap()[0];
+    let b = sess.eval_step("eval", &[("x", &x), ("y", &y)], 2).unwrap()[0];
+    let c = sess.eval_step("eval", &[("x", &x), ("y", &y)], 1).unwrap()[0];
+    assert_eq!(a, c, "same seed must reproduce exactly");
+    assert_ne!(a, b, "different quantization samples should differ");
+}
+
+#[test]
+fn infer_step_runs_pallas_cell() {
+    require_artifact!("char_ptb_ter");
+    let engine = Engine::cpu().unwrap();
+    let sess = Session::open(&engine, &artifacts_dir(), "char_ptb_ter").unwrap();
+    let vocab = sess.meta.vocab();
+    let hidden = sess.meta.hidden();
+    let mut x = vec![0.0f32; vocab];
+    x[7] = 1.0; // one-hot token 7
+    let xl = literal::f32_literal(&x, &[1, vocab]).unwrap();
+    let h = literal::f32_literal(&vec![0.0; hidden], &[1, hidden]).unwrap();
+    let c = literal::f32_literal(&vec![0.0; hidden], &[1, hidden]).unwrap();
+    let (logits, h2, c2) = sess.infer_step("infer_b1", &xl, &h, &c, 5).unwrap();
+    let lv = literal::to_f32_vec(&logits).unwrap();
+    assert_eq!(lv.len(), vocab);
+    assert!(lv.iter().all(|v| v.is_finite()));
+    let hv = literal::to_f32_vec(&h2).unwrap();
+    let cv = literal::to_f32_vec(&c2).unwrap();
+    assert_eq!(hv.len(), hidden);
+    assert_eq!(cv.len(), hidden);
+    // state must actually move
+    assert!(hv.iter().any(|v| v.abs() > 1e-6));
+}
+
+#[test]
+fn gate_stats_shapes() {
+    require_artifact!("char_ptb_bc");
+    let engine = Engine::cpu().unwrap();
+    let sess = Session::open(&engine, &artifacts_dir(), "char_ptb_bc").unwrap();
+    let (seq, batch, vocab) = (sess.meta.seq_len(), sess.meta.batch(), sess.meta.vocab());
+    let hidden = sess.meta.hidden();
+    let mut rng = Rng::new(3);
+    let (x, _) = random_batch(&mut rng, seq, batch, vocab);
+    let stats = sess.gate_stats(&x, 1).unwrap();
+    assert_eq!(stats.len(), 6);
+    for (name, values) in &stats {
+        assert_eq!(values.len(), seq * batch * hidden, "{name}");
+    }
+    // gates i, f, o are sigmoids — must lie in (0, 1)
+    for name in ["i", "f", "o"] {
+        let (_, v) = stats.iter().find(|(n, _)| n == name).unwrap();
+        assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)), "{name} out of range");
+    }
+}
+
+#[test]
+fn reset_restores_init() {
+    require_artifact!("char_ptb_ter");
+    let engine = Engine::cpu().unwrap();
+    let mut sess = Session::open(&engine, &artifacts_dir(), "char_ptb_ter").unwrap();
+    let before = sess.params.get_f32("l0/wh").unwrap();
+    let mut rng = Rng::new(5);
+    let (x, y) = random_batch(&mut rng, sess.meta.seq_len(), sess.meta.batch(),
+                              sess.meta.vocab());
+    sess.train_step(&x, &y, 1, 1e-2).unwrap();
+    let during = sess.params.get_f32("l0/wh").unwrap();
+    assert_ne!(before, during, "training must change weights");
+    sess.reset().unwrap();
+    let after = sess.params.get_f32("l0/wh").unwrap();
+    assert_eq!(before, after, "reset must restore init exactly");
+}
