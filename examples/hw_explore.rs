@@ -7,6 +7,9 @@
 //! design points, and shows where the compute-bound → memory-bound
 //! crossover falls as DRAM bandwidth shrinks.
 
+use std::time::Instant;
+
+use rbtw::engine::{self, BackendKind, InferBackend, ModelWeights};
 use rbtw::hwsim::{high_speed_design, paper_workloads, simulate_timestep,
                   synthesize, timestep_latency, HwConfig, Precision};
 use rbtw::util::table::Table;
@@ -60,4 +63,43 @@ fn main() {
                  (if du > cu { "memory" } else { "compute" }).into()]);
     }
     t3.print();
+
+    // the same workload on the software engine backends: the CPU
+    // realization of the mux-datapath, measured through the serving API.
+    println!("\n== software engine backends (measured, single stream, \
+              h={} ternary) ==", w.hidden);
+    let mut t4 = Table::new(&["backend", "us/step", "steps/s", "weights B"]);
+    let weights = ModelWeights::synthetic(w.d_in, w.hidden, "ter", 0xD0E);
+    for kind in BackendKind::all() {
+        let backend = match engine::from_weights(kind, &weights, 1, 5) {
+            Ok(b) => b,
+            Err(_) => {
+                t4.row(&[kind.label().into(), "-".into(),
+                         "needs artifact+PJRT".into(), "-".into()]);
+                continue;
+            }
+        };
+        let mut backend = backend;
+        let vocab = backend.vocab();
+        let mut logits = vec![0.0f32; vocab];
+        backend.reset_slot(0).unwrap();
+        let steps = 2_000usize;
+        let t0 = Instant::now();
+        for i in 0..steps {
+            backend
+                .step_batch(&[Some((i % vocab) as i32)], &mut logits)
+                .unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        t4.row(&[
+            kind.label().into(),
+            format!("{:.1}", dt / steps as f64 * 1e6),
+            format!("{:.0}", steps as f64 / dt),
+            backend.weight_bytes().to_string(),
+        ]);
+    }
+    t4.print();
+    println!("(compare the us/step orderings with the simulated design \
+              points above — both realize the paper's multiplier-free \
+              datapath, in silicon vs in SW)");
 }

@@ -1,71 +1,94 @@
-//! Serving example: batched request serving over the AOT Pallas-cell
-//! executable, with latency/throughput reporting — plus the packed
-//! popcount engine as the "ASIC-style" single-stream comparison.
+//! Serving example: the same continuous-batching server driven over
+//! every engine backend — dense PJRT executable vs the packed
+//! binary/ternary CPU engines — through one `InferBackend` interface.
 //!
-//!   cargo run --release --example serve_lm [n_requests]
+//!   cargo run --release --example serve_lm [-- --backend pjrt|packed|planes|all]
+//!       [--requests N] [--artifact NAME]
+//!
+//! With artifacts built (`make artifacts`) the chosen artifact's init
+//! weights are served; without them a synthetic ternary BN-LSTM stands
+//! in so the packed deployment path still runs end-to-end. The packed
+//! backends never construct a PJRT session.
 
 use std::path::PathBuf;
-use std::time::Instant;
 
-use rbtw::coordinator::{InferenceServer, Request};
-use rbtw::quant::PackedLstmCell;
-use rbtw::runtime::{Engine, Session};
+use rbtw::coordinator::{run_load, LoadSpec};
+use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
 use rbtw::util::stats::percentiles;
 use rbtw::util::table::Table;
-use rbtw::util::Rng;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
 
 fn main() -> anyhow::Result<()> {
-    let n_requests: usize = std::env::args().nth(1)
-        .and_then(|s| s.parse().ok()).unwrap_or(48);
-    let dir = PathBuf::from("artifacts");
-    let engine = Engine::cpu()?;
-    let mut rng = Rng::new(17);
-    let mut t = Table::new(&["artifact", "req", "tok/s", "p50 ms", "p99 ms",
-                             "peak batch"]);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = flag(&args, "--requests")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(48)
+        .max(1);
+    let artifact = flag(&args, "--artifact").unwrap_or("char_ptb_ter".into());
+    let backend_arg = flag(&args, "--backend").unwrap_or("all".into());
+    let kinds: Vec<BackendKind> = if backend_arg == "all" {
+        BackendKind::all().to_vec()
+    } else {
+        vec![BackendKind::parse(&backend_arg)?]
+    };
 
-    for artifact in ["char_ptb_fp", "char_ptb_bin", "char_ptb_ter"] {
-        let mut server = InferenceServer::open(&engine, &dir, artifact,
-                                               n_requests)?;
-        for id in 0..n_requests as u64 {
-            server.submit(Request {
-                id,
-                prompt: (0..12).map(|_| rng.below(50) as i32).collect(),
-                gen_len: 24,
-                temperature: 0.8,
-            })?;
-        }
-        let t0 = Instant::now();
-        let responses = server.pump(1_000_000)?;
-        let wall = t0.elapsed().as_secs_f64();
-        let lat: Vec<f64> = responses.iter()
+    let dir = PathBuf::from("artifacts");
+    let have_artifact = dir.join(format!("{artifact}.meta.json")).exists();
+    let synthetic = ModelWeights::synthetic(50, 128, "ter", 0xA11CE);
+    if !have_artifact {
+        println!("(artifact {artifact} not built — serving the synthetic \
+                  stand-in model {})\n", synthetic.name);
+    }
+
+    let mut t = Table::new(&["backend", "req", "tok/s", "p50 ms", "p99 ms",
+                             "peak batch", "weights B"]);
+    for kind in kinds {
+        let spec = BackendSpec { kind, slots: 16, sample_seed: 3 };
+        let backend = if have_artifact {
+            engine::open(&dir, &artifact, &spec)
+        } else {
+            engine::from_weights(kind, &synthetic, spec.slots, spec.sample_seed)
+        };
+        let backend = match backend {
+            Ok(b) => b,
+            Err(e) => {
+                println!("  {} unavailable: {e:#}", kind.label());
+                continue;
+            }
+        };
+        let weight_bytes = backend.weight_bytes();
+        let load = LoadSpec { n_requests, ..LoadSpec::default() };
+        let (responses, stats, wall) = match run_load(backend, &load) {
+            Ok(r) => r,
+            Err(e) => {
+                println!("  {} failed mid-serve: {e:#}", kind.label());
+                continue;
+            }
+        };
+        let lat: Vec<f64> = responses
+            .iter()
             .map(|r| (r.queue_time + r.run_time).as_secs_f64() * 1e3)
             .collect();
         let ps = percentiles(&lat, &[0.5, 0.99]);
         t.row(&[
-            artifact.into(),
+            kind.label().into(),
             responses.len().to_string(),
-            format!("{:.0}", server.stats.tokens_processed as f64 / wall),
+            format!("{:.0}", stats.tokens_processed as f64 / wall),
             format!("{:.1}", ps[0]),
             format!("{:.1}", ps[1]),
-            server.stats.peak_active_slots.to_string(),
+            stats.peak_active_slots.to_string(),
+            weight_bytes.to_string(),
         ]);
     }
-    println!("== PJRT continuous-batching server ==");
+    println!("== continuous-batching server, one InferBackend interface ==");
     t.print();
-
-    // single-stream ASIC-style path for the ternary model
-    let sess = Session::open(&engine, &dir, "char_ptb_ter")?;
-    let mut cell = PackedLstmCell::from_session(&sess, 3)?;
-    let mut h = vec![0.0f32; cell.hidden];
-    let mut c = vec![0.0f32; cell.hidden];
-    let t0 = Instant::now();
-    let n = 50_000;
-    for i in 0..n {
-        cell.step_token(i % 50, &mut h, &mut c);
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    println!("\n== packed popcount engine (single stream, ternary) ==");
-    println!("{:.0} steps/s, weight footprint {} B", n as f64 / dt,
-             cell.weight_bytes());
+    println!("\n(packed rows hold weights at 1-2 bits each — the paper's \
+              12x deployment memory saving; pjrt-dense needs a real PJRT \
+              build and compiled artifacts)");
     Ok(())
 }

@@ -1,17 +1,41 @@
 //! Figure 7 (Appendix D): per-timestep latency of the accelerator across
-//! the paper's tasks, full-precision vs binary vs ternary high-speed.
+//! the paper's tasks, full-precision vs binary vs ternary high-speed —
+//! plus the measured software `packed-planes` engine backend on the same
+//! workloads (the CPU realization of the same mux datapath).
 
 mod common;
 
-use rbtw::hwsim::{fig7_points, paper_workloads};
+use std::time::Instant;
+
+use rbtw::engine::{self, BackendKind, InferBackend, ModelWeights};
+use rbtw::hwsim::{fig7_points, paper_workloads, Workload};
 use rbtw::util::table::Table;
+
+/// Measured us/step of a packed SW backend on `w` (single stream).
+fn measured_sw_us(kind: BackendKind, w: &Workload) -> Option<f64> {
+    if w.layers != 1 {
+        return None; // the serving cell is single-layer
+    }
+    let weights = ModelWeights::synthetic(w.d_in.max(2), w.hidden, "ter", 0xF16);
+    let mut backend = engine::from_weights(kind, &weights, 1, 5).ok()?;
+    let vocab = backend.vocab();
+    let mut logits = vec![0.0f32; vocab];
+    backend.reset_slot(0).ok()?;
+    let steps = 30usize;
+    let t0 = Instant::now();
+    for i in 0..steps {
+        backend.step_batch(&[Some((i % vocab) as i32)], &mut logits).ok()?;
+    }
+    Some(t0.elapsed().as_secs_f64() / steps as f64 * 1e6)
+}
 
 fn main() {
     common::banner("Figure 7: accelerator timestep latency per task");
     let mut t = Table::new(&["task", "fp us", "binary us", "ternary us",
-                             "bin speedup", "ter speedup"]);
+                             "bin speedup", "ter speedup", "sw planes us"]);
     for w in paper_workloads() {
         let (fp, b, tr) = fig7_points(&w);
+        let sw = measured_sw_us(BackendKind::PackedPlanes, &w);
         t.row(&[
             w.name.into(),
             format!("{:.2}", fp.latency_us),
@@ -19,9 +43,11 @@ fn main() {
             format!("{:.2}", tr.latency_us),
             format!("{:.1}x", fp.latency_us / b.latency_us),
             format!("{:.1}x", fp.latency_us / tr.latency_us),
+            sw.map(|us| format!("{us:.1}")).unwrap_or_else(|| "-".into()),
         ]);
     }
     t.print();
     println!("(paper: binary up to 10x, ternary up to 5x; small layers \
-              underfill the wider arrays and gain less)");
+              underfill the wider arrays and gain less. The sw column is \
+              the measured packed-planes engine backend on this CPU.)");
 }

@@ -89,5 +89,21 @@ fn main() {
             tok = (tok + 7) % 50;
         });
         println!("{}  ({:.0} steps/s)", m.report(), 1e9 / m.median_ns);
+
+        // same cell in the pos/neg bit-plane layout (the PackedPlanes
+        // engine backend)
+        let mut cell_p = PackedLstmCell::new(
+            Packed::Ternary(PackedTernary::pack(&wx, vocab, n4, alpha)).to_planes(),
+            Packed::Ternary(PackedTernary::pack(&wh, hidden, n4, alpha)).to_planes(),
+            vec![1.0; n4], vec![0.0; n4], vec![1.0; n4], vec![0.0; n4],
+            vec![0.0; n4],
+        ).unwrap();
+        h.fill(0.0);
+        c.fill(0.0);
+        let m = bench(&format!("cell step (planes) h={hidden}"), || {
+            cell_p.step_token(tok, &mut h, &mut c);
+            tok = (tok + 7) % 50;
+        });
+        println!("{}  ({:.0} steps/s)", m.report(), 1e9 / m.median_ns);
     }
 }

@@ -1,0 +1,92 @@
+//! Serving smoke bench: every engine backend under the same
+//! continuous-batching load, reporting tokens/sec and resident weight
+//! bytes, and writing a `BENCH_serve_backends.json` row for tracking.
+//!
+//! Uses the `char_ptb_ter` artifact when built, otherwise a synthetic
+//! ternary BN-LSTM stand-in (the packed backends need no artifacts).
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use rbtw::coordinator::{run_load, LoadSpec};
+use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
+use rbtw::util::stats::percentiles;
+use rbtw::util::table::Table;
+use rbtw::util::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("serving backends: tokens/sec vs resident weight bytes");
+    let artifact = "char_ptb_ter";
+    let have = common::have(artifact);
+    let synthetic = ModelWeights::synthetic(50, 128, "ter", 0xBE);
+    let model_name = if have { artifact.to_string() } else { synthetic.name.clone() };
+    let n_requests = common::scaled(64);
+
+    let mut t = Table::new(&["backend", "req", "tok/s", "p50 ms", "p99 ms",
+                             "weights B"]);
+    let mut rows = vec![];
+    for kind in BackendKind::all() {
+        let spec = BackendSpec { kind, slots: 16, sample_seed: 3 };
+        let backend = if have {
+            engine::open(&common::artifacts_dir(), artifact, &spec)
+        } else {
+            engine::from_weights(kind, &synthetic, spec.slots, spec.sample_seed)
+        };
+        let backend = match backend {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("  [{}] skipped: {e:#}", kind.label());
+                continue;
+            }
+        };
+        let weight_bytes = backend.weight_bytes();
+        let load = LoadSpec { n_requests, prompt_len: 8, gen_len: 16,
+                              temperature: 0.7, seed: 23 };
+        let (responses, stats, wall) = match run_load(backend, &load) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("  [{}] failed mid-serve: {e:#}", kind.label());
+                continue;
+            }
+        };
+        let tok_s = stats.tokens_processed as f64 / wall;
+        let lat: Vec<f64> = responses
+            .iter()
+            .map(|r| (r.queue_time + r.run_time).as_secs_f64() * 1e3)
+            .collect();
+        let ps = percentiles(&lat, &[0.5, 0.99]);
+        t.row(&[
+            kind.label().into(),
+            responses.len().to_string(),
+            format!("{tok_s:.0}"),
+            format!("{:.2}", ps[0]),
+            format!("{:.2}", ps[1]),
+            weight_bytes.to_string(),
+        ]);
+        rows.push(obj(vec![
+            ("backend", Json::Str(kind.label().to_string())),
+            ("requests", Json::Num(responses.len() as f64)),
+            ("tokens_per_sec", Json::Num(tok_s)),
+            ("p50_ms", Json::Num(ps[0])),
+            ("p99_ms", Json::Num(ps[1])),
+            ("weight_bytes", Json::Num(weight_bytes as f64)),
+            ("engine_steps", Json::Num(stats.engine_steps as f64)),
+        ]));
+    }
+    t.print();
+
+    let report = obj(vec![
+        ("bench", Json::Str("serve_backends".into())),
+        ("model", Json::Str(model_name)),
+        ("artifact_mode", Json::Bool(have)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_serve_backends.json", format!("{report}\n"))?;
+    println!("\nwrote BENCH_serve_backends.json");
+    Ok(())
+}

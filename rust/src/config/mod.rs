@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{LrSchedule, TrainSpec};
+use crate::engine::{BackendKind, BackendSpec};
 
 /// One parsed scalar value.
 #[derive(Clone, Debug, PartialEq)]
@@ -131,6 +132,78 @@ impl Config {
     }
 }
 
+/// Serving configuration: which engine backend, how many decode slots,
+/// queue depth, and the deployment-weight sample seed. Parsed from a
+/// `[serve]` section; the packed deployment engine is the default.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSpec {
+    pub backend: BackendKind,
+    pub slots: usize,
+    pub queue_cap: usize,
+    pub sample_seed: u64,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        Self {
+            backend: BackendKind::PackedCpu,
+            slots: 16,
+            queue_cap: 256,
+            sample_seed: 0x5EED,
+        }
+    }
+}
+
+impl ServeSpec {
+    /// Valid decode-slot range (slots size per-slot state allocations);
+    /// shared by the `[serve]` config parser and the `--slots` CLI flag.
+    pub const SLOTS_RANGE: std::ops::RangeInclusive<usize> = 1..=4096;
+
+    /// The engine-layer spec for [`crate::engine::open`].
+    pub fn backend_spec(&self) -> BackendSpec {
+        BackendSpec {
+            kind: self.backend,
+            slots: self.slots,
+            sample_seed: self.sample_seed,
+        }
+    }
+}
+
+impl Config {
+    /// Build a ServeSpec from a `[serve]` section over `defaults`.
+    pub fn serve_spec(&self, defaults: ServeSpec) -> Result<ServeSpec> {
+        // slots/queue_cap size allocations, so reject nonsense instead of
+        // letting a negative value wrap through the usize cast.
+        let bounded = |v: &Value, name: &str, lo: i64, hi: i64| -> Result<usize> {
+            let x = v.as_i64().with_context(|| name.to_string())?;
+            if !(lo..=hi).contains(&x) {
+                bail!("[serve] {name} = {x} out of range [{lo}, {hi}]");
+            }
+            Ok(x as usize)
+        };
+        let mut spec = defaults;
+        if let Some(s) = self.sections.get("serve") {
+            if let Some(v) = s.get("backend") {
+                spec.backend = BackendKind::parse(v.as_str().context("backend")?)?;
+            }
+            if let Some(v) = s.get("slots") {
+                spec.slots = bounded(v, "slots",
+                                     *ServeSpec::SLOTS_RANGE.start() as i64,
+                                     *ServeSpec::SLOTS_RANGE.end() as i64)?;
+            }
+            if let Some(v) = s.get("queue_cap") {
+                spec.queue_cap = bounded(v, "queue_cap", 1, 1 << 20)?;
+            }
+            if let Some(v) = s.get("sample_seed") {
+                let x = v.as_i64().context("sample_seed")?;
+                anyhow::ensure!(x >= 0, "[serve] sample_seed must be >= 0");
+                spec.sample_seed = x as u64;
+            }
+        }
+        Ok(spec)
+    }
+}
+
 /// Task-default training presets (mirror Appendix C).
 pub fn default_spec_for_task(task: &str) -> TrainSpec {
     match task {
@@ -246,6 +319,37 @@ mod tests {
         assert!(Config::parse("[oops\n").is_err());
         assert!(Config::parse("keyonly\n").is_err());
         assert!(Config::parse("a = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn builds_serve_spec() {
+        let cfg = Config::parse(
+            "[serve]\nbackend = \"planes\"\nslots = 8\nqueue_cap = 32\n",
+        )
+        .unwrap();
+        let spec = cfg.serve_spec(ServeSpec::default()).unwrap();
+        assert_eq!(spec.backend, BackendKind::PackedPlanes);
+        assert_eq!(spec.slots, 8);
+        assert_eq!(spec.queue_cap, 32);
+        assert_eq!(spec.sample_seed, ServeSpec::default().sample_seed);
+        let bs = spec.backend_spec();
+        assert_eq!(bs.kind, BackendKind::PackedPlanes);
+        assert_eq!(bs.slots, 8);
+        // defaults make the packed deployment engine the serving path
+        assert_eq!(ServeSpec::default().backend, BackendKind::PackedCpu);
+        assert!(Config::parse("[serve]\nbackend = \"tpu\"\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        // out-of-range slot counts error instead of wrapping the cast
+        assert!(Config::parse("[serve]\nslots = -1\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nqueue_cap = 0\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub mod server;
 pub mod trainer;
 
-pub use server::{InferenceServer, Request, Response, ServerStats};
+pub use server::{run_load, InferenceServer, LoadSpec, Request, Response,
+                 ServerStats};
 pub use trainer::{EvalResult, LrSchedule, Split, TaskData, TrainReport,
                   TrainSpec, Trainer};

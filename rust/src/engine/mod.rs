@@ -1,0 +1,259 @@
+//! Backend-agnostic inference engine — the deployment serving layer.
+//!
+//! The paper's §6 claim (12× memory, ~10× inference speedup) is about
+//! *serving from packed binary/ternary weights*. This module makes that
+//! the first-class serving path: the coordinator's continuous-batching
+//! server drives an [`InferBackend`] trait object and never touches XLA
+//! values, so the multiplier-free packed engines and the dense PJRT
+//! executable are interchangeable behind one API.
+//!
+//! Backends (selected by [`BackendKind`], built by [`open`]):
+//! * [`PjrtDense`](pjrt::PjrtDense) — the dense-f32 AOT executable via a
+//!   PJRT `Session` (`infer_*` entrypoints). State crosses the host ↔
+//!   device boundary as literals each step.
+//! * [`PackedCpu`](packed::PackedBackend) — the rust-native
+//!   [`PackedLstmCell`](crate::quant::PackedLstmCell): LUT GEMV for the
+//!   recurrent matmul, single packed-row gather (`add_row`) for one-hot
+//!   token inputs. 1–2 bits/weight resident.
+//! * [`PackedPlanes`](packed::PackedBackend) — same cell over
+//!   precomputed pos/neg bit planes (no byte-ops in the GEMV inner
+//!   loop), the layout the paper's accelerator streams from DRAM.
+//!
+//! Each backend owns its decode-slot state (h, c) in its native layout;
+//! the server only passes tokens in and reads logits out. The packed
+//! backends therefore never rebuild per-step literals — state stays in
+//! two flat `f32` buffers.
+
+pub mod packed;
+pub mod pjrt;
+pub mod weights;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Engine;
+
+pub use packed::PackedBackend;
+pub use pjrt::PjrtDense;
+pub use weights::ModelWeights;
+
+/// Which inference engine serves a model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Dense-f32 AOT executable on the PJRT CPU client.
+    PjrtDense,
+    /// Rust-native packed cell: LUT GEMV + one-hot `add_row` fast path.
+    PackedCpu,
+    /// Packed cell over precomputed pos/neg bit planes (wide batches).
+    PackedPlanes,
+}
+
+impl BackendKind {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pjrt" | "dense" | "pjrt-dense" => BackendKind::PjrtDense,
+            "packed" | "cpu" | "packed-cpu" => BackendKind::PackedCpu,
+            "planes" | "packed-planes" => BackendKind::PackedPlanes,
+            other => bail!(
+                "unknown backend '{other}' (expected pjrt|packed|planes)"
+            ),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendKind::PjrtDense => "pjrt-dense",
+            BackendKind::PackedCpu => "packed-cpu",
+            BackendKind::PackedPlanes => "packed-planes",
+        }
+    }
+
+    /// All backends, packed (deployment) paths first.
+    pub fn all() -> [BackendKind; 3] {
+        [BackendKind::PackedCpu, BackendKind::PackedPlanes, BackendKind::PjrtDense]
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One decode engine the serving coordinator can drive.
+///
+/// A backend owns a fixed number of decode **slots**; each slot is one
+/// request's recurrent state (h, c), kept in whatever layout the backend
+/// computes in. The server advances all active slots one token per
+/// [`step_batch`](InferBackend::step_batch) call.
+pub trait InferBackend {
+    /// Which engine this is.
+    fn kind(&self) -> BackendKind;
+
+    /// Number of decode slots (the serving batch width).
+    fn slots(&self) -> usize;
+
+    /// Token vocabulary / logit width.
+    fn vocab(&self) -> usize;
+
+    /// Recurrent state width.
+    fn hidden(&self) -> usize;
+
+    /// Resident weight bytes — the deployment footprint the paper's Size
+    /// columns count (packed planes for the packed engines, dense f32
+    /// for PJRT).
+    fn weight_bytes(&self) -> usize;
+
+    /// Zero slot `slot`'s recurrent state (a fresh request stream).
+    fn reset_slot(&mut self, slot: usize) -> Result<()>;
+
+    /// Advance every active slot by one token. `tokens[i]` is `Some(t)`
+    /// for active slots and `None` for idle ones; `tokens.len()` must be
+    /// `slots()`. Writes each active slot's next-token logits into row
+    /// `i` of `logits` (row-major `(slots, vocab)`); idle rows are left
+    /// untouched.
+    fn step_batch(&mut self, tokens: &[Option<i32>], logits: &mut [f32])
+        -> Result<()>;
+}
+
+impl InferBackend for Box<dyn InferBackend> {
+    fn kind(&self) -> BackendKind {
+        (**self).kind()
+    }
+
+    fn slots(&self) -> usize {
+        (**self).slots()
+    }
+
+    fn vocab(&self) -> usize {
+        (**self).vocab()
+    }
+
+    fn hidden(&self) -> usize {
+        (**self).hidden()
+    }
+
+    fn weight_bytes(&self) -> usize {
+        (**self).weight_bytes()
+    }
+
+    fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        (**self).reset_slot(slot)
+    }
+
+    fn step_batch(&mut self, tokens: &[Option<i32>], logits: &mut [f32])
+        -> Result<()> {
+        (**self).step_batch(tokens, logits)
+    }
+}
+
+/// How to build a backend ([`open`] / [`open_with_engine`]).
+#[derive(Clone, Copy, Debug)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    /// Decode slots for the packed backends (PJRT is fixed by the
+    /// artifact's `infer_*` batch width).
+    pub slots: usize,
+    /// Seed for the one-time stochastic sampling of deployment weights
+    /// (Eq. 4–6) on the packed backends.
+    pub sample_seed: u64,
+}
+
+impl Default for BackendSpec {
+    fn default() -> Self {
+        Self { kind: BackendKind::PackedCpu, slots: 16, sample_seed: 0x5EED }
+    }
+}
+
+/// Open a backend over an artifact bundle.
+///
+/// The packed backends read the artifact's host-side init values (or a
+/// checkpoint applied by the caller via [`ModelWeights`]) and never
+/// construct a PJRT `Session`; `PjrtDense` creates its own CPU engine.
+pub fn open(artifacts_dir: &Path, artifact: &str, spec: &BackendSpec)
+    -> Result<Box<dyn InferBackend>> {
+    match spec.kind {
+        BackendKind::PjrtDense => {
+            let engine = Engine::cpu()?;
+            open_with_engine(&engine, artifacts_dir, artifact, spec)
+        }
+        BackendKind::PackedCpu | BackendKind::PackedPlanes => {
+            let w = ModelWeights::from_artifact(artifacts_dir, artifact)?;
+            from_weights(spec.kind, &w, spec.slots, spec.sample_seed)
+        }
+    }
+}
+
+/// Like [`open`] but reusing an existing PJRT engine for `PjrtDense`
+/// (packed backends ignore it).
+pub fn open_with_engine(engine: &Engine, artifacts_dir: &Path, artifact: &str,
+                        spec: &BackendSpec) -> Result<Box<dyn InferBackend>> {
+    match spec.kind {
+        BackendKind::PjrtDense => Ok(Box::new(PjrtDense::open(
+            engine, artifacts_dir, artifact)?)),
+        BackendKind::PackedCpu | BackendKind::PackedPlanes => {
+            let w = ModelWeights::from_artifact(artifacts_dir, artifact)?;
+            from_weights(spec.kind, &w, spec.slots, spec.sample_seed)
+        }
+    }
+}
+
+/// Build a packed backend from host-side weights (artifact, checkpoint,
+/// live session export, or [`ModelWeights::synthetic`]). Errors for
+/// `PjrtDense`, which needs a compiled artifact.
+pub fn from_weights(kind: BackendKind, weights: &ModelWeights, slots: usize,
+                    sample_seed: u64) -> Result<Box<dyn InferBackend>> {
+    match kind {
+        BackendKind::PjrtDense => {
+            bail!("PjrtDense cannot be built from host weights; use open()")
+        }
+        BackendKind::PackedCpu => Ok(Box::new(PackedBackend::from_weights(
+            weights, slots, sample_seed, false)?)),
+        BackendKind::PackedPlanes => Ok(Box::new(PackedBackend::from_weights(
+            weights, slots, sample_seed, true)?)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in BackendKind::all() {
+            assert_eq!(BackendKind::parse(k.label()).unwrap(), k);
+        }
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::PjrtDense);
+        assert_eq!(BackendKind::parse("packed").unwrap(), BackendKind::PackedCpu);
+        assert_eq!(BackendKind::parse("planes").unwrap(),
+                   BackendKind::PackedPlanes);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn from_weights_serves_synthetic_model() {
+        let w = ModelWeights::synthetic(20, 16, "ter", 7);
+        let mut b = from_weights(BackendKind::PackedCpu, &w, 4, 11).unwrap();
+        assert_eq!(b.slots(), 4);
+        assert_eq!(b.vocab(), 20);
+        assert_eq!(b.hidden(), 16);
+        assert!(b.weight_bytes() > 0);
+        let tokens = vec![Some(1), None, Some(3), None];
+        let mut logits = vec![0.0f32; 4 * 20];
+        b.reset_slot(0).unwrap();
+        b.reset_slot(2).unwrap();
+        b.step_batch(&tokens, &mut logits).unwrap();
+        // active rows produced finite logits; idle rows untouched (zero)
+        assert!(logits[..20].iter().all(|x| x.is_finite()));
+        assert!(logits[..20].iter().any(|&x| x != 0.0));
+        assert!(logits[20..40].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pjrt_needs_artifact() {
+        let w = ModelWeights::synthetic(10, 8, "ter", 1);
+        assert!(from_weights(BackendKind::PjrtDense, &w, 4, 1).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! The packed CPU serving backends — the paper's deployment story.
+//!
+//! One struct serves both [`BackendKind::PackedCpu`] (sign/mask LUT GEMV)
+//! and [`BackendKind::PackedPlanes`] (precomputed pos/neg bit planes):
+//! the layouts differ, the cell math is bit-identical (see
+//! `quant::planes`), so the backends are distinguished only by which
+//! [`Packed`](crate::quant::Packed) variant the cell carries.
+//!
+//! Slot state lives in two flat `(slots, hidden)` f32 buffers owned by
+//! the backend — no per-step literal marshalling, no XLA. A step over a
+//! token is one `add_row` gather (x-path), one packed GEMV (h-path), the
+//! folded-BN gate tail, and a dense f32 head GEMV for the logits. The
+//! resident weight footprint is 1–2 bits per recurrent weight — the 12×
+//! saving of §6 — plus the (small) dense head.
+
+use anyhow::Result;
+
+use super::weights::ModelWeights;
+use super::{BackendKind, InferBackend};
+use crate::quant::{gemv_f32, PackedLstmCell};
+
+/// Packed-cell backend (LUT or bit-plane layout; see module docs).
+pub struct PackedBackend {
+    kind: BackendKind,
+    cell: PackedLstmCell,
+    /// LM head, row-major (hidden, vocab) — kept dense f32 (the paper
+    /// quantizes only the recurrent matrices).
+    head_w: Vec<f32>,
+    head_b: Vec<f32>,
+    vocab: usize,
+    hidden: usize,
+    n_slots: usize,
+    /// Per-slot recurrent state, row-major (slots, hidden).
+    h: Vec<f32>,
+    c: Vec<f32>,
+}
+
+impl PackedBackend {
+    /// Build from host-side weights; `planes` selects the bit-plane
+    /// layout (`PackedPlanes`).
+    pub fn from_weights(weights: &ModelWeights, slots: usize, sample_seed: u64,
+                        planes: bool) -> Result<Self> {
+        anyhow::ensure!(slots > 0, "need at least one decode slot");
+        let (cell, head_w, head_b) = weights.build_cell(sample_seed, planes)?;
+        let (vocab, hidden) = (weights.vocab, weights.hidden);
+        Ok(Self {
+            kind: if planes { BackendKind::PackedPlanes } else { BackendKind::PackedCpu },
+            cell,
+            head_w,
+            head_b,
+            vocab,
+            hidden,
+            n_slots: slots,
+            h: vec![0.0; slots * hidden],
+            c: vec![0.0; slots * hidden],
+        })
+    }
+
+    /// The deployment cell (packed matrices + folded BN).
+    pub fn cell(&self) -> &PackedLstmCell {
+        &self.cell
+    }
+
+    /// Read-only view of one slot's hidden state.
+    pub fn slot_h(&self, slot: usize) -> &[f32] {
+        &self.h[slot * self.hidden..(slot + 1) * self.hidden]
+    }
+}
+
+impl InferBackend for PackedBackend {
+    fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    fn slots(&self) -> usize {
+        self.n_slots
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.cell.weight_bytes() + (self.head_w.len() + self.head_b.len()) * 4
+    }
+
+    fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        anyhow::ensure!(slot < self.n_slots, "slot {slot} out of range");
+        self.h[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
+        self.c[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
+        Ok(())
+    }
+
+    fn step_batch(&mut self, tokens: &[Option<i32>], logits: &mut [f32])
+        -> Result<()> {
+        anyhow::ensure!(tokens.len() == self.n_slots,
+                        "tokens length {} != slots {}", tokens.len(), self.n_slots);
+        anyhow::ensure!(logits.len() == self.n_slots * self.vocab,
+                        "logits buffer size mismatch");
+        // validate everything up front so a bad token can't leave the
+        // batch partially stepped
+        for tok in tokens.iter().flatten() {
+            anyhow::ensure!(*tok >= 0 && (*tok as usize) < self.vocab,
+                            "token {tok} out of vocab {}", self.vocab);
+        }
+        for (i, tok) in tokens.iter().enumerate() {
+            let Some(tok) = *tok else { continue };
+            let hs = &mut self.h[i * self.hidden..(i + 1) * self.hidden];
+            let cs = &mut self.c[i * self.hidden..(i + 1) * self.hidden];
+            self.cell.step_token(tok as usize, hs, cs);
+            let row = &mut logits[i * self.vocab..(i + 1) * self.vocab];
+            let hs = &self.h[i * self.hidden..(i + 1) * self.hidden];
+            gemv_f32(&self.head_w, self.hidden, self.vocab, hs, row);
+            for (l, b) in row.iter_mut().zip(&self.head_b) {
+                *l += b;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::weights::ModelWeights;
+
+    fn backend(planes: bool) -> PackedBackend {
+        let w = ModelWeights::synthetic(25, 16, "ter", 77);
+        PackedBackend::from_weights(&w, 3, 5, planes).unwrap()
+    }
+
+    #[test]
+    fn idle_slots_untouched_and_state_isolated() {
+        let mut b = backend(false);
+        let mut logits = vec![f32::NAN; 3 * 25];
+        logits[25..50].fill(0.5); // slot 1 idle — must stay 0.5
+        for s in [0, 2] {
+            b.reset_slot(s).unwrap();
+        }
+        b.step_batch(&[Some(4), None, Some(4)], &mut logits).unwrap();
+        assert!(logits[25..50].iter().all(|&x| x == 0.5));
+        // identical token + fresh state => identical rows
+        for k in 0..25 {
+            assert_eq!(logits[k].to_bits(), logits[50 + k].to_bits());
+        }
+        // diverge slot 2, slot 0 must not move
+        let h0: Vec<f32> = b.slot_h(0).to_vec();
+        b.step_batch(&[None, None, Some(9)], &mut logits).unwrap();
+        assert_eq!(h0, b.slot_h(0));
+    }
+
+    #[test]
+    fn reset_restores_fresh_stream() {
+        let mut b = backend(true);
+        let mut l1 = vec![0.0f32; 3 * 25];
+        b.reset_slot(0).unwrap();
+        b.step_batch(&[Some(7), None, None], &mut l1).unwrap();
+        let mut l2 = vec![0.0f32; 3 * 25];
+        b.step_batch(&[Some(7), None, None], &mut l2).unwrap();
+        assert_ne!(l1[..25], l2[..25], "state advanced, logits must differ");
+        b.reset_slot(0).unwrap();
+        let mut l3 = vec![0.0f32; 3 * 25];
+        b.step_batch(&[Some(7), None, None], &mut l3).unwrap();
+        assert_eq!(l1[..25], l3[..25]);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let mut b = backend(false);
+        let mut logits = vec![0.0f32; 3 * 25];
+        assert!(b.step_batch(&[Some(1)], &mut logits).is_err());
+        assert!(b.step_batch(&[Some(99), None, None], &mut logits).is_err());
+        assert!(b.reset_slot(5).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! The dense-f32 PJRT backend: wraps a runtime [`Session`]'s `infer_*`
+//! entrypoints behind [`InferBackend`].
+//!
+//! This is the full-precision comparison path (and the only path for
+//! `fp` artifacts): weights stay dense f32 inside the AOT executable,
+//! which re-samples stochastic deployment weights every step, and slot
+//! state must cross the host ↔ device boundary as literals each step —
+//! exactly the marshalling cost the packed backends avoid.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{BackendKind, InferBackend};
+use crate::runtime::{literal, Engine, Session};
+
+/// Dense serving over a compiled `infer_*` entrypoint.
+pub struct PjrtDense {
+    sess: Session,
+    entry: String,
+    n_slots: usize,
+    vocab: usize,
+    hidden: usize,
+    /// Per-slot state, row-major (slots, hidden) — rebuilt into literals
+    /// per step (inherent to the PJRT boundary).
+    h: Vec<f32>,
+    c: Vec<f32>,
+    seed_counter: i32,
+}
+
+impl PjrtDense {
+    /// Open over the widest `infer_*` entrypoint the artifact ships
+    /// (e.g. `infer_b16`), falling back to narrower batch variants.
+    pub fn open(engine: &Engine, artifacts_dir: &Path, artifact: &str)
+        -> Result<Self> {
+        let sess = Session::open(engine, artifacts_dir, artifact)?;
+        let entry = sess
+            .meta
+            .entrypoints
+            .values()
+            .filter(|e| e.name.starts_with("infer_"))
+            .max_by_key(|e| {
+                e.input_index("x", "x")
+                    .map(|i| e.inputs[i].shape.first().copied().unwrap_or(0))
+                    .unwrap_or(0)
+            })
+            .map(|e| e.name.clone())
+            .context("artifact lacks infer_* (serving) entrypoints")?;
+        let e = sess.meta.entry(&entry)?;
+        let x = &e.inputs[e
+            .input_index("x", "x")
+            .context("infer entrypoint lacks x input")?];
+        let n_slots = x.shape[0];
+        let vocab = x.shape[1];
+        let hidden = sess.meta.hidden();
+        Ok(Self {
+            sess,
+            entry,
+            n_slots,
+            vocab,
+            hidden,
+            h: vec![0.0; n_slots * hidden],
+            c: vec![0.0; n_slots * hidden],
+            seed_counter: 1,
+        })
+    }
+
+    /// The session (for checkpoint restore before serving).
+    pub fn session_mut(&mut self) -> &mut Session {
+        &mut self.sess
+    }
+}
+
+impl InferBackend for PjrtDense {
+    fn kind(&self) -> BackendKind {
+        BackendKind::PjrtDense
+    }
+
+    fn slots(&self) -> usize {
+        self.n_slots
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn weight_bytes(&self) -> usize {
+        // resident dense-f32 recurrent matrices (the paper's baseline
+        // Size column); BN vectors/bias/head are excluded on all
+        // backends' recurrent accounting but the head is counted to
+        // match the packed backends' resident total.
+        let mut bytes = 0usize;
+        for (name, shape) in self.sess.params.names.iter()
+            .zip(&self.sess.params.shapes) {
+            if name.ends_with("/wx") || name.ends_with("/wh")
+                || name.starts_with("head/") {
+                bytes += shape.iter().product::<usize>().max(1) * 4;
+            }
+        }
+        bytes
+    }
+
+    fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        anyhow::ensure!(slot < self.n_slots, "slot {slot} out of range");
+        self.h[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
+        self.c[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
+        Ok(())
+    }
+
+    fn step_batch(&mut self, tokens: &[Option<i32>], logits_out: &mut [f32])
+        -> Result<()> {
+        anyhow::ensure!(tokens.len() == self.n_slots,
+                        "tokens length {} != slots {}", tokens.len(), self.n_slots);
+        anyhow::ensure!(logits_out.len() == self.n_slots * self.vocab,
+                        "logits buffer size mismatch");
+        // one-hot input; idle slots feed an all-zero row
+        let mut x = vec![0.0f32; self.n_slots * self.vocab];
+        for (i, tok) in tokens.iter().enumerate() {
+            if let Some(t) = *tok {
+                anyhow::ensure!((t as usize) < self.vocab,
+                                "token {t} out of vocab {}", self.vocab);
+                x[i * self.vocab + t as usize] = 1.0;
+            }
+        }
+        let xl = literal::f32_literal(&x, &[self.n_slots, self.vocab])?;
+        let hl = literal::f32_literal(&self.h, &[self.n_slots, self.hidden])?;
+        let cl = literal::f32_literal(&self.c, &[self.n_slots, self.hidden])?;
+        self.seed_counter = self.seed_counter.wrapping_add(1);
+        let (logits, h2, c2) = self
+            .sess
+            .infer_step(&self.entry, &xl, &hl, &cl, self.seed_counter)?;
+        let h2 = literal::to_f32_vec(&h2)?;
+        let c2 = literal::to_f32_vec(&c2)?;
+        let logits = literal::to_f32_vec(&logits)?;
+        anyhow::ensure!(logits.len() == logits_out.len()
+                        && h2.len() == self.h.len() && c2.len() == self.c.len(),
+                        "executable output shape mismatch");
+        // Adopt new state/logits for ACTIVE slots only — idle slots'
+        // streams stay frozen, matching the packed backends' contract
+        // (the executable still stepped them over a zero input row).
+        for (i, tok) in tokens.iter().enumerate() {
+            if tok.is_some() {
+                let s = i * self.hidden..(i + 1) * self.hidden;
+                self.h[s.clone()].copy_from_slice(&h2[s.clone()]);
+                self.c[s.clone()].copy_from_slice(&c2[s]);
+                let r = i * self.vocab..(i + 1) * self.vocab;
+                logits_out[r.clone()].copy_from_slice(&logits[r]);
+            }
+        }
+        Ok(())
+    }
+}

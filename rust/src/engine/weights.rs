@@ -1,0 +1,338 @@
+//! Host-side model weights for the packed serving backends.
+//!
+//! [`ModelWeights`] is the deployment boundary: a plain map of named f32
+//! arrays (params + BN running statistics) that can come from an
+//! artifact's `init.bin` segments, a live training `Session`, a saved
+//! [`Checkpoint`], or a synthetic generator for benches/tests. Packed
+//! backends sample their 1–2-bit deployment weights from it once at open
+//! time (Eq. 4–6) and fold the BN statistics into per-gate scale/shift —
+//! no XLA values, no PJRT session.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::checkpoint::Checkpoint;
+use crate::model::export::{glorot_alpha, sample_quantized, PackedMatrix};
+use crate::quant::{Packed, PackedLstmCell};
+use crate::runtime::{ArtifactMeta, Session};
+use crate::util::Rng;
+
+/// Named f32 arrays: name -> (shape, values).
+pub type ArrayMap = BTreeMap<String, (Vec<usize>, Vec<f32>)>;
+
+/// Host-side view of one model's serving weights.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    /// Model/artifact name (reporting only).
+    pub name: String,
+    /// Quantizer id: "bin" | "ter" | "fp" | ...
+    pub quantizer: String,
+    /// Token vocabulary (= logit width for LM heads).
+    pub vocab: usize,
+    /// Recurrent state width.
+    pub hidden: usize,
+    /// Trainable parameters (shadow weights, biases, BN gains, head).
+    pub params: ArrayMap,
+    /// BN running statistics (rm_*/rv_*).
+    pub state: ArrayMap,
+}
+
+impl ModelWeights {
+    fn derive_dims(params: &ArrayMap) -> Result<(usize, usize)> {
+        let (wh_shape, _) = params
+            .get("l0/wh")
+            .context("weights lack l0/wh (not an RNN model?)")?;
+        anyhow::ensure!(wh_shape.len() == 2, "l0/wh is not a matrix");
+        let hidden = wh_shape[0];
+        let vocab = params
+            .get("head/b")
+            .map(|(_, v)| v.len())
+            .context("weights lack head/b (no output head)")?;
+        Ok((vocab, hidden))
+    }
+
+    /// Load from an artifact bundle's host-side init values. Reads
+    /// `meta.json` + `init.bin` only — no PJRT, no XLA. `init.bin` is
+    /// read once and each segment decoded straight into place (weights
+    /// can be MBs; no per-group re-read, no clones).
+    pub fn from_artifact(artifacts_dir: &Path, artifact: &str) -> Result<Self> {
+        let meta = ArtifactMeta::load(artifacts_dir, artifact)?;
+        let raw = std::fs::read(&meta.init_file)
+            .with_context(|| format!("reading {}", meta.init_file.display()))?;
+        anyhow::ensure!(raw.len() == meta.init_total_bytes,
+                        "init.bin size mismatch: got {}, meta says {}",
+                        raw.len(), meta.init_total_bytes);
+        let mut params = ArrayMap::new();
+        let mut state = ArrayMap::new();
+        for seg in &meta.init_segments {
+            let out = match seg.group.as_str() {
+                "params" => &mut params,
+                "state" => &mut state,
+                _ => continue, // opt state is not a serving input
+            };
+            let bytes = &raw[seg.offset..seg.offset + seg.nbytes];
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.insert(seg.name.clone(), (seg.shape.clone(), vals));
+        }
+        let (vocab, hidden) = Self::derive_dims(&params)?;
+        Ok(Self {
+            name: artifact.to_string(),
+            quantizer: meta.quantizer().to_string(),
+            vocab,
+            hidden,
+            params,
+            state,
+        })
+    }
+
+    /// Snapshot a live session's current (trained) values.
+    pub fn from_session(sess: &Session) -> Result<Self> {
+        let params = sess.params.export()?;
+        let state = sess.state.export()?;
+        let (vocab, hidden) = Self::derive_dims(&params)?;
+        Ok(Self {
+            name: sess.meta.name.clone(),
+            quantizer: sess.meta.quantizer().to_string(),
+            vocab,
+            hidden,
+            params,
+            state,
+        })
+    }
+
+    /// Overlay a checkpoint's params/state entries (trained values over
+    /// artifact init values).
+    pub fn apply_checkpoint(&mut self, ck: &Checkpoint) {
+        for e in &ck.entries {
+            let map = match e.group.as_str() {
+                "params" => &mut self.params,
+                "state" => &mut self.state,
+                _ => continue,
+            };
+            map.insert(e.name.clone(), (e.shape.clone(), e.data.clone()));
+        }
+    }
+
+    /// A random single-layer BN-LSTM LM for benches/tests: shadow weights
+    /// uniform within the Glorot bound, BN gains 0.1 (Cooijmans init),
+    /// slightly-off-nominal running statistics so the fold is exercised.
+    pub fn synthetic(vocab: usize, hidden: usize, quantizer: &str, seed: u64)
+        -> Self {
+        let mut rng = Rng::new(seed);
+        let n4 = 4 * hidden;
+        let mat = |rows: usize, cols: usize, scale: f32, rng: &mut Rng| {
+            (0..rows * cols)
+                .map(|_| scale * rng.range_f64(-1.0, 1.0) as f32)
+                .collect::<Vec<f32>>()
+        };
+        let mut params = ArrayMap::new();
+        let mut state = ArrayMap::new();
+        let ax = glorot_alpha(vocab, n4);
+        let ah = glorot_alpha(hidden, n4);
+        params.insert("l0/wx".into(), (vec![vocab, n4], mat(vocab, n4, ax, &mut rng)));
+        params.insert("l0/wh".into(), (vec![hidden, n4], mat(hidden, n4, ah, &mut rng)));
+        let mut bias = vec![0.0f32; n4];
+        bias[hidden..2 * hidden].fill(1.0); // forget-gate init
+        params.insert("l0/b".into(), (vec![n4], bias));
+        params.insert("l0/phi_x".into(), (vec![n4], vec![0.1; n4]));
+        params.insert("l0/phi_h".into(), (vec![n4], vec![0.1; n4]));
+        for nm in ["l0/rm_x", "l0/rm_h"] {
+            let v = (0..n4).map(|_| 0.05 * rng.normal_f32()).collect();
+            state.insert(nm.into(), (vec![n4], v));
+        }
+        for nm in ["l0/rv_x", "l0/rv_h"] {
+            let v = (0..n4).map(|_| 1.0 + 0.2 * rng.next_f32()).collect();
+            state.insert(nm.into(), (vec![n4], v));
+        }
+        let aw = glorot_alpha(hidden, vocab);
+        params.insert("head/w".into(),
+                      (vec![hidden, vocab], mat(hidden, vocab, aw, &mut rng)));
+        params.insert("head/b".into(),
+                      (vec![vocab], mat(vocab, 1, 0.05, &mut rng)));
+        Self {
+            name: format!("synthetic_{quantizer}_v{vocab}_h{hidden}"),
+            quantizer: quantizer.to_string(),
+            vocab,
+            hidden,
+            params,
+            state,
+        }
+    }
+
+    /// A named parameter (shape, values).
+    pub fn param(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        let (s, v) = self
+            .params
+            .get(name)
+            .with_context(|| format!("missing parameter {name}"))?;
+        Ok((s.as_slice(), v.as_slice()))
+    }
+
+    /// Fold BN inference statistics into an affine (scale, shift):
+    /// `scale = phi / sqrt(rv + eps)`, `shift = -rm * scale`. Identity
+    /// when the model has no BN (vanilla LSTM baselines).
+    fn fold_bn(&self, phi: &str, rm: &str, rv: &str, n4: usize)
+        -> Result<(Vec<f32>, Vec<f32>)> {
+        let Some((_, phi)) = self.params.get(phi) else {
+            return Ok((vec![1.0; n4], vec![0.0; n4]));
+        };
+        let (_, rm) = self
+            .state
+            .get(rm)
+            .with_context(|| format!("BN model lacks running mean {rm}"))?;
+        let (_, rv) = self
+            .state
+            .get(rv)
+            .with_context(|| format!("BN model lacks running var {rv}"))?;
+        anyhow::ensure!(phi.len() == n4 && rm.len() == n4 && rv.len() == n4,
+                        "BN stat length mismatch (want {n4})");
+        let mut scale = vec![0.0f32; n4];
+        let mut shift = vec![0.0f32; n4];
+        for i in 0..n4 {
+            scale[i] = phi[i] / (rv[i] + 1e-5).sqrt();
+            shift[i] = -rm[i] * scale[i];
+        }
+        Ok((scale, shift))
+    }
+
+    /// Build the packed deployment cell + LM head for these weights.
+    ///
+    /// Samples the binary/ternary deployment weights once with
+    /// `sample_seed` (same fork order as [`crate::model::export_packed`]),
+    /// folds BN, and optionally converts ternary matrices to the pos/neg
+    /// bit-plane layout. Returns `(cell, head_w, head_b)` with `head_w`
+    /// row-major `(hidden, vocab)`.
+    pub fn build_cell(&self, sample_seed: u64, planes: bool)
+        -> Result<(PackedLstmCell, Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(
+            self.quantizer == "bin" || self.quantizer == "ter",
+            "packed backends need a binary/ternary quantizer, got '{}' \
+             (the fp baseline serves via the pjrt-dense backend)",
+            self.quantizer
+        );
+        anyhow::ensure!(
+            !self.params.contains_key("emb/emb"),
+            "embedding-input models cannot serve one-hot tokens packed"
+        );
+        anyhow::ensure!(
+            !self.params.contains_key("l1/wh"),
+            "multi-layer models are not supported on the packed backends \
+             yet (the cell serves layer 0 only); use the pjrt-dense backend"
+        );
+        let (wx_shape, wx_data) = self.param("l0/wx")?;
+        let (wh_shape, wh_data) = self.param("l0/wh")?;
+        anyhow::ensure!(wx_shape.len() == 2 && wh_shape.len() == 2,
+                        "recurrent weights are not matrices");
+        let n4 = wx_shape[1];
+        anyhow::ensure!(
+            n4 == 4 * wh_shape[0],
+            "packed serving supports the 4-gate LSTM cell only \
+             (wx cols {} vs wh rows {}; GRU/3-gate models serve via \
+             pjrt-dense)", n4, wh_shape[0]
+        );
+        let hidden = n4 / 4;
+        anyhow::ensure!(hidden == self.hidden && wh_shape[0] == hidden
+                        && wh_shape[1] == n4,
+                        "inconsistent recurrent shapes: wx {wx_shape:?} wh {wh_shape:?}");
+        anyhow::ensure!(wx_shape[0] == self.vocab,
+                        "wx rows {} != vocab {} (token serving needs a \
+                         one-hot input layer)", wx_shape[0], self.vocab);
+
+        let mut rng = Rng::new(sample_seed);
+        let mut sample = |w: &[f32], rows: usize, cols: usize, label: u64|
+            -> Result<Packed> {
+            match sample_quantized(&self.quantizer, w, rows, cols,
+                                   &mut rng.fork(label))? {
+                PackedMatrix::Binary(b) => Ok(Packed::Binary(b)),
+                PackedMatrix::Ternary(t) => Ok(Packed::Ternary(t)),
+                PackedMatrix::Dense { .. } => {
+                    bail!("dense export has no packed serving path")
+                }
+            }
+        };
+        // Same sampling order as `export_packed`: it walks the meta's
+        // recurrent_names, which aot.py emits sorted — "l0/wh" before
+        // "l0/wx" — forking the rng per matrix in that sequence. Keeping
+        // the order identical makes a `rbtw pack`/`from_session` export
+        // and an engine open with the same seed draw the same sample.
+        let mut wh = sample(wh_data, hidden, n4, 0)?;
+        let mut wx = sample(wx_data, self.vocab, n4, 1)?;
+        if planes {
+            wx = wx.to_planes();
+            wh = wh.to_planes();
+        }
+
+        let (scale_x, shift_x) = self.fold_bn("l0/phi_x", "l0/rm_x", "l0/rv_x", n4)?;
+        let (scale_h, shift_h) = self.fold_bn("l0/phi_h", "l0/rm_h", "l0/rv_h", n4)?;
+        let (_, bias) = self.param("l0/b")?;
+        let cell = PackedLstmCell::new(wx, wh, scale_x, shift_x, scale_h,
+                                       shift_h, bias.to_vec())?;
+
+        let (hw_shape, head_w) = self.param("head/w")?;
+        anyhow::ensure!(hw_shape.len() == 2 && hw_shape[0] == hidden
+                        && hw_shape[1] == self.vocab,
+                        "head/w shape {hw_shape:?} != ({hidden}, {})", self.vocab);
+        let (_, head_b) = self.param("head/b")?;
+        anyhow::ensure!(head_b.len() == self.vocab, "head/b length mismatch");
+        Ok((cell, head_w.to_vec(), head_b.to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_builds_both_layouts() {
+        for q in ["bin", "ter"] {
+            let w = ModelWeights::synthetic(30, 12, q, 3);
+            assert_eq!(w.vocab, 30);
+            assert_eq!(w.hidden, 12);
+            let (cell, head_w, head_b) = w.build_cell(5, false).unwrap();
+            assert_eq!(cell.hidden, 12);
+            assert_eq!(head_w.len(), 12 * 30);
+            assert_eq!(head_b.len(), 30);
+            let (cell_p, _, _) = w.build_cell(5, true).unwrap();
+            // planes conversion changes layout, not footprint semantics:
+            // ternary stays 2 bits/weight, binary 1 bit/weight.
+            assert_eq!(cell.weight_bytes(), cell_p.weight_bytes());
+        }
+    }
+
+    #[test]
+    fn fp_quantizer_rejected() {
+        let w = ModelWeights::synthetic(10, 8, "fp", 1);
+        assert!(w.build_cell(1, false).is_err());
+    }
+
+    #[test]
+    fn bn_fold_matches_formula() {
+        let w = ModelWeights::synthetic(10, 8, "ter", 9);
+        let n4 = 32;
+        let (scale, shift) = w.fold_bn("l0/phi_x", "l0/rm_x", "l0/rv_x", n4).unwrap();
+        let phi = &w.params["l0/phi_x"].1;
+        let rm = &w.state["l0/rm_x"].1;
+        let rv = &w.state["l0/rv_x"].1;
+        for i in 0..n4 {
+            let s = phi[i] / (rv[i] + 1e-5).sqrt();
+            assert!((scale[i] - s).abs() < 1e-7);
+            assert!((shift[i] + rm[i] * s).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn checkpoint_overlays_values() {
+        let mut w = ModelWeights::synthetic(10, 8, "ter", 2);
+        let mut ck = Checkpoint::default();
+        ck.push("params", "head/b", vec![10], vec![2.0; 10]);
+        ck.push("opt", "m/l0/wx", vec![1], vec![0.0]);
+        w.apply_checkpoint(&ck);
+        assert_eq!(w.params["head/b"].1, vec![2.0; 10]);
+        assert!(!w.params.contains_key("m/l0/wx"));
+    }
+}

@@ -4,10 +4,36 @@
 //! AOT-lowered at build time to HLO text artifacts; this crate (L3) owns
 //! the runtime — training orchestration, serving, the bit-packed popcount
 //! inference engine, and the hardware (ASIC) simulator of the paper's §6.
+//!
+//! # Serving: the engine layer
+//!
+//! Deployment inference goes through [`engine`]: the continuous-batching
+//! [`coordinator::InferenceServer`] drives an [`engine::InferBackend`]
+//! trait object, so the dense PJRT executable and the multiplier-free
+//! packed engines are interchangeable:
+//!
+//! ```ignore
+//! use rbtw::engine::{open, BackendKind, BackendSpec};
+//! use rbtw::coordinator::InferenceServer;
+//!
+//! // serve from 2-bit packed ternary weights — no PJRT session built
+//! let spec = BackendSpec { kind: BackendKind::PackedCpu, ..Default::default() };
+//! let backend = open(std::path::Path::new("artifacts"), "char_ptb_ter", &spec)?;
+//! let mut server = InferenceServer::with_backend(backend, 256);
+//! ```
+//!
+//! Backends: [`engine::BackendKind::PjrtDense`] (dense f32 via the AOT
+//! `infer_*` executables), [`engine::BackendKind::PackedCpu`] (LUT GEMV +
+//! one-hot row gather over sign/mask planes) and
+//! [`engine::BackendKind::PackedPlanes`] (precomputed pos/neg bit
+//! planes). The packed backends hold slot state in flat f32 buffers and
+//! resident weights at 1–2 bits each — the paper's 12× memory claim,
+//! measurable via [`engine::InferBackend::weight_bytes`].
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod hwsim;
 pub mod metrics;
 pub mod model;

@@ -16,8 +16,9 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use rbtw::config::{default_spec_for_task, Config};
+use rbtw::config::{default_spec_for_task, Config, ServeSpec};
 use rbtw::coordinator::{InferenceServer, Request, Split, Trainer};
+use rbtw::engine::{self, BackendKind, InferBackend};
 use rbtw::hwsim;
 use rbtw::model::export_packed;
 use rbtw::quant;
@@ -127,8 +128,9 @@ fn print_usage() {
          \x20                             --verbose --checkpoint OUT)\n\
          \x20 eval <artifact>             evaluate (--entry E --split S --batches N\n\
          \x20                             --checkpoint IN)\n\
-         \x20 serve <artifact>            serving demo (--requests N --gen-len N\n\
-         \x20                             --prompt-len N)\n\
+         \x20 serve <artifact>            serving demo (--backend pjrt|packed|planes\n\
+         \x20                             --requests N --gen-len N --prompt-len N\n\
+         \x20                             --slots N --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
          \n\
@@ -234,13 +236,33 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let name = require_artifact(args)?;
     let dir = artifacts_dir(args);
-    let engine = Engine::cpu()?;
+    let mut spec = ServeSpec::default();
+    if let Some(path) = args.get("config") {
+        spec = Config::load(std::path::Path::new(path))?.serve_spec(spec)?;
+    }
+    if let Some(b) = args.get("backend") {
+        spec.backend = BackendKind::parse(b)?;
+    }
+    if let Some(s) = args.get_usize("slots")? {
+        anyhow::ensure!(ServeSpec::SLOTS_RANGE.contains(&s),
+                        "--slots {s} out of range [{}, {}]",
+                        ServeSpec::SLOTS_RANGE.start(),
+                        ServeSpec::SLOTS_RANGE.end());
+        spec.slots = s;
+    }
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
-    let mut server = InferenceServer::open(&engine, &dir, &name, n_requests)?;
-    let meta = ArtifactMeta::load(&dir, &name)?;
-    let vocab = meta.vocab();
+    let backend = engine::open(&dir, &name, &spec.backend_spec())?;
+    println!(
+        "backend {} | {} slots | {} B resident weights",
+        backend.kind().label(),
+        backend.slots(),
+        backend.weight_bytes()
+    );
+    let vocab = backend.vocab();
+    let mut server =
+        InferenceServer::with_backend(backend, spec.queue_cap.max(n_requests));
     let mut rng = Rng::new(7);
     for id in 0..n_requests as u64 {
         server.submit(Request {

@@ -57,8 +57,12 @@ pub fn glorot_alpha(fan_in: usize, fan_out: usize) -> f32 {
 }
 
 /// Stochastically quantize one shadow-weight matrix (Eq. 4–6).
-fn sample_quantized(quantizer: &str, w: &[f32], rows: usize, cols: usize,
-                    rng: &mut Rng) -> Result<PackedMatrix> {
+///
+/// Public so the serving engine can sample deployment weights directly
+/// from host-side shadow values (artifact init segments or a checkpoint)
+/// without a live `Session`.
+pub fn sample_quantized(quantizer: &str, w: &[f32], rows: usize, cols: usize,
+                        rng: &mut Rng) -> Result<PackedMatrix> {
     let alpha = glorot_alpha(rows, cols);
     match quantizer {
         "bin" => {

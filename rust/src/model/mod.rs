@@ -4,4 +4,4 @@ pub mod checkpoint;
 pub mod export;
 
 pub use checkpoint::{Checkpoint, Entry};
-pub use export::{export_packed, PackedModel, PackedMatrix};
+pub use export::{export_packed, sample_quantized, PackedModel, PackedMatrix};

@@ -14,12 +14,16 @@ use anyhow::{bail, Context, Result};
 
 use super::gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};
 use super::pack::{words_per_col, PackedBinary, PackedTernary};
+use super::planes::{gemv_ternary_planes, TernaryPlanes};
 use crate::runtime::Session;
 
-/// Packed weight matrix, either precision.
+/// Packed weight matrix, any precision/layout the engine serves from.
 pub enum Packed {
     Binary(PackedBinary),
     Ternary(PackedTernary),
+    /// Ternary as precomputed pos/neg selector planes (the wide-batch
+    /// GEMV layout; see [`super::planes`]).
+    Planes(TernaryPlanes),
 }
 
 impl Packed {
@@ -27,6 +31,7 @@ impl Packed {
         match self {
             Packed::Binary(b) => b.rows,
             Packed::Ternary(t) => t.rows,
+            Packed::Planes(p) => p.rows,
         }
     }
 
@@ -34,6 +39,7 @@ impl Packed {
         match self {
             Packed::Binary(b) => b.cols,
             Packed::Ternary(t) => t.cols,
+            Packed::Planes(p) => p.cols,
         }
     }
 
@@ -41,18 +47,32 @@ impl Packed {
         match self {
             Packed::Binary(b) => b.packed_bytes(),
             Packed::Ternary(t) => t.packed_bytes(),
+            Packed::Planes(p) => p.packed_bytes(),
         }
     }
 
-    fn gemv(&self, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
+    /// Convert to the bit-plane GEMV layout. Binary matrices stay as-is
+    /// (the binary LUT GEMV already streams one plane byte per group).
+    pub fn to_planes(self) -> Packed {
+        match self {
+            Packed::Ternary(t) => Packed::Planes(TernaryPlanes::from_packed(&t)),
+            other => other,
+        }
+    }
+
+    /// Multiplier-free GEMV: y = xᵀW (LUT kernels; y is overwritten).
+    pub fn gemv(&self, x: &[f32], y: &mut [f32], scratch: &mut LutScratch) {
         match self {
             Packed::Binary(b) => gemv_binary_lut(b, x, y, scratch),
             Packed::Ternary(t) => gemv_ternary_lut(t, x, y, scratch),
+            Packed::Planes(p) => gemv_ternary_planes(p, x, y, scratch),
         }
     }
 
-    /// y += row r of the matrix (the one-hot x-path).
-    fn add_row(&self, r: usize, y: &mut [f32]) {
+    /// y += row r of the matrix (the one-hot x-path: a one-hot GEMV is a
+    /// single packed-row gather, exactly the accelerator's weight-SRAM
+    /// addressing trick).
+    pub fn add_row(&self, r: usize, y: &mut [f32]) {
         match self {
             Packed::Binary(b) => {
                 let wpc = words_per_col(b.rows);
@@ -69,6 +89,18 @@ impl Packed {
                     if (t.mask[c * wpc + w] >> bit) & 1 == 1 {
                         let sign = (t.sign[c * wpc + w] >> bit) & 1;
                         y[c] += if sign == 1 { t.alpha } else { -t.alpha };
+                    }
+                }
+            }
+            Packed::Planes(p) => {
+                let wpc = words_per_col(p.rows);
+                let (w, bit) = (r / 64, r % 64);
+                for c in 0..p.cols {
+                    let idx = c * wpc + w;
+                    if (p.pos[idx] >> bit) & 1 == 1 {
+                        y[c] += p.alpha;
+                    } else if (p.neg[idx] >> bit) & 1 == 1 {
+                        y[c] -= p.alpha;
                     }
                 }
             }
@@ -304,6 +336,34 @@ mod tests {
         }
         assert!(h.iter().all(|v| v.abs() <= 1.0 && v.is_finite()));
         assert!(c.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn planes_cell_matches_lut_cell_bitwise() {
+        // the PackedPlanes engine backend relies on the plane GEMV being
+        // bit-identical to the LUT GEMV (same table, same add order).
+        let (mut lut_cell, wx, wh) = mk_cell(40, 24, 23);
+        let alpha = 0.11;
+        let n4 = 4 * 24;
+        let mut planes_cell = PackedLstmCell::new(
+            Packed::Ternary(PackedTernary::pack(&wx, 40, n4, alpha)).to_planes(),
+            Packed::Ternary(PackedTernary::pack(&wh, 24, n4, alpha)).to_planes(),
+            vec![1.0; n4], vec![0.0; n4], vec![1.0; n4], vec![0.0; n4],
+            lut_cell.bias.clone(),
+        )
+        .unwrap();
+        let (mut h1, mut c1) = (vec![0.0f32; 24], vec![0.0f32; 24]);
+        let (mut h2, mut c2) = (vec![0.0f32; 24], vec![0.0f32; 24]);
+        let mut rng = Rng::new(29);
+        for _ in 0..30 {
+            let tok = rng.below_usize(40);
+            lut_cell.step_token(tok, &mut h1, &mut c1);
+            planes_cell.step_token(tok, &mut h2, &mut c2);
+            for k in 0..24 {
+                assert_eq!(h1[k].to_bits(), h2[k].to_bits(), "h[{k}]");
+                assert_eq!(c1[k].to_bits(), c2[k].to_bits(), "c[{k}]");
+            }
+        }
     }
 
     #[test]

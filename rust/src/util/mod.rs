@@ -1,8 +1,9 @@
 //! Zero-dependency substrate utilities.
 //!
-//! The offline build environment vendors only the `xla` crate's
-//! dependency closure, so the pieces a production service would normally
-//! pull from crates.io are implemented (and tested) here: a PRNG
+//! The offline build vendors only two path crates (`vendor/anyhow`,
+//! `vendor/xla` — see the root Cargo.toml), so the pieces a production
+//! service would normally pull from crates.io are implemented (and
+//! tested) here: a PRNG
 //! (`rng`), a JSON codec (`json`), summary statistics (`stats`), a table
 //! printer (`table`), a property-test harness (`prop`) and a wall-clock
 //! bench harness (`bench`).

@@ -1,0 +1,267 @@
+//! Cross-backend equivalence: the same checkpoint (weights + sample
+//! seed) must produce the same logits on every engine backend.
+//!
+//! * `PackedCpu` vs `PackedPlanes`: **bit-for-bit** — the plane GEMV is
+//!   the same subset-sum table walk as the LUT GEMV, just over
+//!   precomputed pos/neg planes.
+//! * `PackedCpu` vs a dense-f32 reference of the identical sampled
+//!   weights (what the PJRT executable computes for a fixed sample):
+//!   within float tolerance.
+//! * vs the real `PjrtDense` backend when artifacts + a PJRT build are
+//!   present (skipped gracefully otherwise): statistically close —
+//!   PjrtDense re-samples stochastic deployment weights every step, so
+//!   only a loose distributional bound holds.
+
+use std::path::PathBuf;
+
+use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights,
+                   PackedBackend};
+use rbtw::quant::{gemv_f32, Packed};
+use rbtw::util::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// A deterministic mixed active/idle token schedule for `slots` slots.
+fn schedule(slots: usize, steps: usize, vocab: usize, seed: u64)
+    -> Vec<Vec<Option<i32>>> {
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|step| {
+            (0..slots)
+                .map(|s| {
+                    // slot s joins at step s and stays; slot 1 idles on
+                    // every third step to exercise holes in the batch.
+                    if step < s || (s == 1 && step % 3 == 0) {
+                        None
+                    } else {
+                        Some(rng.below(vocab as u64) as i32)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Drive a backend over the schedule; returns logits of every active
+/// (step, slot) in order.
+fn drive(backend: &mut dyn InferBackend, sched: &[Vec<Option<i32>>])
+    -> Vec<f32> {
+    let (slots, vocab) = (backend.slots(), backend.vocab());
+    for s in 0..slots {
+        backend.reset_slot(s).unwrap();
+    }
+    let mut logits = vec![0.0f32; slots * vocab];
+    let mut out = vec![];
+    for tokens in sched {
+        backend.step_batch(tokens, &mut logits).unwrap();
+        for (s, t) in tokens.iter().enumerate() {
+            if t.is_some() {
+                out.extend_from_slice(&logits[s * vocab..(s + 1) * vocab]);
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn packed_cpu_and_planes_agree_bit_for_bit() {
+    for quantizer in ["bin", "ter"] {
+        let w = ModelWeights::synthetic(40, 24, quantizer, 0xE0);
+        let sched = schedule(4, 25, 40, 1);
+        let mut cpu =
+            engine::from_weights(BackendKind::PackedCpu, &w, 4, 7).unwrap();
+        let mut planes =
+            engine::from_weights(BackendKind::PackedPlanes, &w, 4, 7).unwrap();
+        let a = drive(&mut *cpu, &sched);
+        let b = drive(&mut *planes, &sched);
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "[{quantizer}] logit {i}: {x} vs {y}");
+        }
+    }
+}
+
+/// Dense-f32 single-stream reference of the identical sampled weights.
+struct DenseRef {
+    wx: Vec<f32>,
+    wh: Vec<f32>,
+    scale_x: Vec<f32>,
+    shift_x: Vec<f32>,
+    scale_h: Vec<f32>,
+    shift_h: Vec<f32>,
+    bias: Vec<f32>,
+    head_w: Vec<f32>,
+    head_b: Vec<f32>,
+    vocab: usize,
+    hidden: usize,
+    h: Vec<f32>,
+    c: Vec<f32>,
+}
+
+impl DenseRef {
+    fn from_backend(b: &PackedBackend, w: &ModelWeights) -> Self {
+        let cell = b.cell();
+        let unpack = |p: &Packed| -> Vec<f32> {
+            match p {
+                Packed::Binary(m) => m.unpack(),
+                Packed::Ternary(m) => m.unpack(),
+                Packed::Planes(_) => panic!("use the LUT backend here"),
+            }
+        };
+        let (_, head_w) = w.param("head/w").unwrap();
+        let (_, head_b) = w.param("head/b").unwrap();
+        Self {
+            wx: unpack(&cell.wx),
+            wh: unpack(&cell.wh),
+            scale_x: cell.scale_x.clone(),
+            shift_x: cell.shift_x.clone(),
+            scale_h: cell.scale_h.clone(),
+            shift_h: cell.shift_h.clone(),
+            bias: cell.bias.clone(),
+            head_w: head_w.to_vec(),
+            head_b: head_b.to_vec(),
+            vocab: w.vocab,
+            hidden: w.hidden,
+            h: vec![0.0; w.hidden],
+            c: vec![0.0; w.hidden],
+        }
+    }
+
+    fn step(&mut self, token: usize) -> Vec<f32> {
+        let (hid, n4) = (self.hidden, 4 * self.hidden);
+        let mut x = vec![0.0f32; self.vocab];
+        x[token] = 1.0;
+        let mut xw = vec![0.0f32; n4];
+        let mut hw = vec![0.0f32; n4];
+        gemv_f32(&self.wx, self.vocab, n4, &x, &mut xw);
+        gemv_f32(&self.wh, hid, n4, &self.h, &mut hw);
+        let sig = |v: f32| 1.0 / (1.0 + (-v).exp());
+        let pre: Vec<f32> = (0..n4)
+            .map(|j| {
+                xw[j] * self.scale_x[j] + self.shift_x[j]
+                    + hw[j] * self.scale_h[j] + self.shift_h[j] + self.bias[j]
+            })
+            .collect();
+        for k in 0..hid {
+            let i = sig(pre[k]);
+            let f = sig(pre[hid + k]);
+            let g = pre[2 * hid + k].tanh();
+            let o = sig(pre[3 * hid + k]);
+            self.c[k] = f * self.c[k] + i * g;
+            self.h[k] = o * self.c[k].tanh();
+        }
+        let mut logits = vec![0.0f32; self.vocab];
+        gemv_f32(&self.head_w, hid, self.vocab, &self.h, &mut logits);
+        for (l, b) in logits.iter_mut().zip(&self.head_b) {
+            *l += b;
+        }
+        logits
+    }
+}
+
+#[test]
+fn packed_backend_matches_dense_reference() {
+    for quantizer in ["bin", "ter"] {
+        let w = ModelWeights::synthetic(30, 20, quantizer, 0xD1);
+        let backend = PackedBackend::from_weights(&w, 1, 9, false).unwrap();
+        let mut dense = DenseRef::from_backend(&backend, &w);
+        let mut backend = backend;
+        backend.reset_slot(0).unwrap();
+        let mut logits = vec![0.0f32; 30];
+        let mut rng = Rng::new(5);
+        for _ in 0..40 {
+            let tok = rng.below(30) as i32;
+            backend.step_batch(&[Some(tok)], &mut logits).unwrap();
+            let want = dense.step(tok as usize);
+            for v in 0..30 {
+                let err = (logits[v] - want[v]).abs();
+                assert!(err < 1e-3 * (1.0 + want[v].abs()),
+                        "[{quantizer}] logit {v}: packed {} dense {}",
+                        logits[v], want[v]);
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_dense_agrees_when_available() {
+    // Needs compiled artifacts AND a real PJRT build (the offline xla
+    // stub cannot execute HLO) — skip gracefully without them.
+    let artifact = "char_ptb_ter";
+    if !artifacts_dir().join(format!("{artifact}.meta.json")).exists() {
+        eprintln!("skipping: artifact {artifact} not built");
+        return;
+    }
+    let spec = BackendSpec { kind: BackendKind::PjrtDense, slots: 16,
+                             sample_seed: 3 };
+    let pjrt_engine = match rbtw::runtime::Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping: no PJRT engine: {e:#}");
+            return;
+        }
+    };
+    let mut pjrt = match engine::open_with_engine(&pjrt_engine,
+                                                  &artifacts_dir(), artifact,
+                                                  &spec) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("skipping: pjrt backend unavailable: {e:#}");
+            return;
+        }
+    };
+    let vocab = pjrt.vocab();
+    let slots = pjrt.slots();
+    let mut logits = vec![0.0f32; slots * vocab];
+    let mut tokens = vec![None; slots];
+    tokens[0] = Some(1);
+    // PjrtDense re-samples its stochastic deployment weights every step,
+    // so a single draw is noisy; average several fresh-state steps on the
+    // same token to estimate the expected logits, then demand the packed
+    // backend's (single, fixed) sample track them: positive correlation
+    // and a mean gap well under the logit range. An unrelated checkpoint
+    // gives ~zero correlation and fails.
+    let trials = 8;
+    let mut avg = vec![0.0f64; vocab];
+    for _ in 0..trials {
+        pjrt.reset_slot(0).unwrap();
+        if let Err(e) = pjrt.step_batch(&tokens, &mut logits) {
+            eprintln!("skipping: PJRT execution unavailable: {e:#}");
+            return;
+        }
+        for v in 0..vocab {
+            avg[v] += logits[v] as f64 / trials as f64;
+        }
+    }
+    // same weights on the packed backend
+    let w = ModelWeights::from_artifact(&artifacts_dir(), artifact).unwrap();
+    let mut packed = engine::from_weights(BackendKind::PackedCpu, &w, 1, 3).unwrap();
+    packed.reset_slot(0).unwrap();
+    let mut plogits = vec![0.0f32; vocab];
+    packed.step_batch(&[Some(1)], &mut plogits).unwrap();
+
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let p64: Vec<f64> = plogits.iter().map(|&x| x as f64).collect();
+    let (ma, mb) = (mean(&avg), mean(&p64));
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    let mut mean_abs = 0.0;
+    for v in 0..vocab {
+        cov += (avg[v] - ma) * (p64[v] - mb);
+        va += (avg[v] - ma).powi(2);
+        vb += (p64[v] - mb).powi(2);
+        mean_abs += (avg[v] - p64[v]).abs() / vocab as f64;
+    }
+    let corr = cov / (va.sqrt() * vb.sqrt()).max(1e-12);
+    let range = avg.iter().cloned().fold(f64::MIN, f64::max)
+        - avg.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(corr > 0.3,
+            "packed vs pjrt logits uncorrelated: corr {corr:.3}");
+    assert!(mean_abs < 0.35 * range + 0.1,
+            "packed vs pjrt logits diverge: mean abs diff {mean_abs:.4}, \
+             logit range {range:.4}");
+}

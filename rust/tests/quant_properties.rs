@@ -4,9 +4,11 @@
 //! * popcount GEMV == dense GEMV for arbitrary ±1/0 matrices
 //! * packed size is exactly ceil(rows/64)*8 bytes per column per plane
 //! * ternary density equals the fraction of non-zeros
+//! * the one-hot fast path `Packed::add_row(r, y)` equals a GEMV against
+//!   the one-hot basis vector e_r, for every packing layout
 
-use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, PackedBinary,
-                  PackedTernary};
+use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, LutScratch, Packed,
+                  PackedBinary, PackedTernary};
 use rbtw::util::prop::{self, assert_that};
 
 #[test]
@@ -101,6 +103,49 @@ fn prop_packed_bytes_formula() {
         let t = PackedTernary::pack(&data, rows, cols, 1.0);
         assert_that(t.packed_bytes() == 2 * cols * words_per_col * 8,
                     "ternary size")
+    });
+}
+
+#[test]
+fn prop_add_row_equals_gemv_of_basis_vector() {
+    // The serving engines' one-hot token path: adding packed row r must
+    // equal the full GEMV against e_r — for binary and ternary packings
+    // and the ternary pos/neg plane layout, bit-for-bit (both sides are
+    // exact ±alpha/0 values).
+    prop::check("add_row == gemv(e_r)", 150, |g| {
+        let rows = g.usize_in(1, 200);
+        let cols = g.usize_in(1, 30);
+        let alpha = g.f32_in(0.05, 1.0);
+        let r = g.usize_in(0, rows - 1);
+        let binary = g.bool();
+        let data: Vec<f32> = if binary {
+            g.binary_vec(rows * cols).iter().map(|x| x * alpha).collect()
+        } else {
+            g.ternary_vec(rows * cols).iter().map(|x| x * alpha).collect()
+        };
+        let mut e_r = vec![0.0f32; rows];
+        e_r[r] = 1.0;
+        let packings: Vec<Packed> = if binary {
+            vec![Packed::Binary(PackedBinary::pack(&data, rows, cols, alpha))]
+        } else {
+            let t = PackedTernary::pack(&data, rows, cols, alpha);
+            vec![Packed::Ternary(t.clone()), Packed::Ternary(t).to_planes()]
+        };
+        let mut scratch = LutScratch::default();
+        for (pi, p) in packings.iter().enumerate() {
+            let mut y_row = vec![0.0f32; cols];
+            p.add_row(r, &mut y_row);
+            let mut y_gemv = vec![0.0f32; cols];
+            p.gemv(&e_r, &mut y_gemv, &mut scratch);
+            for c in 0..cols {
+                assert_that(
+                    y_row[c].to_bits() == y_gemv[c].to_bits(),
+                    format!("packing {pi} col {c}: add_row {} gemv {}",
+                            y_row[c], y_gemv[c]),
+                )?;
+            }
+        }
+        Ok(())
     });
 }
 

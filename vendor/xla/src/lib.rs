@@ -1,0 +1,256 @@
+//! Offline stub of the `xla` (xla-rs) bindings used by `rbtw::runtime`.
+//!
+//! The container has no libxla/PJRT shared objects, so this crate keeps
+//! the crate graph buildable and the *host-side* half of the API fully
+//! functional: [`Literal`] really stores typed array data (create,
+//! `to_vec`, `get_first_element`, `element_count` all work), which is
+//! enough for artifact init-value loading, checkpointing and the packed
+//! deployment engine — everything except running compiled HLO.
+//!
+//! The *device-side* half (PJRT compile/execute) returns a descriptive
+//! error at the first `compile` call. The `rbtw::engine` packed backends
+//! never reach it; only the `PjrtDense` backend and the train/eval paths
+//! need a real PJRT build.
+
+use std::fmt;
+
+/// Error type for stubbed XLA operations.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "PJRT unavailable: built against the offline xla stub \
+                        (packed engine backends remain fully functional)";
+
+/// Element dtype of a literal (the subset the AOT boundary uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+impl ElementType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Host types that can view literal data.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn from_le(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn from_le(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+impl NativeType for u32 {
+    const TY: ElementType = ElementType::U32;
+    fn from_le(b: [u8; 4]) -> Self {
+        u32::from_le_bytes(b)
+    }
+}
+
+/// A host-side typed array. Fully functional in the stub.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        untyped_data: &[u8],
+    ) -> Result<Literal> {
+        let elements: usize = dims.iter().product::<usize>().max(1);
+        if untyped_data.len() != elements * ty.size_bytes() {
+            return Err(Error::new(format!(
+                "literal data size {} does not match shape {:?} ({} bytes expected)",
+                untyped_data.len(),
+                dims,
+                elements * ty.size_bytes()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.to_vec(), data: untyped_data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product::<usize>().max(1)
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::new(format!(
+                "literal type mismatch: stored {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::new("empty literal"))
+    }
+
+    /// Split a tuple literal into its leaves. The stub never constructs
+    /// tuples (they only come back from PJRT execution), so this errors.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Parsed HLO module text. The stub records the source path and verifies
+/// the file is readable so missing artifacts fail with a precise error.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        match std::fs::metadata(path) {
+            Ok(_) => Ok(HloModuleProto { path: path.to_string() }),
+            Err(e) => Err(Error::new(format!("reading HLO text {path}: {e}"))),
+        }
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    pub path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// PJRT client handle. Creation succeeds (cheap) so artifact metadata and
+/// init values can be loaded; compilation is where the stub stops.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (xla stub, no PJRT)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Compiled executable handle (never actually constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+/// Device buffer handle (never actually constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u8> = [1.0f32, -2.5, 3.0].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data)
+            .unwrap();
+        assert_eq!(lit.element_count(), 3);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.0]);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let data = 7i32.to_le_bytes().to_vec();
+        let lit = Literal::create_from_shape_and_untyped_data(ElementType::S32, &[], &data)
+            .unwrap();
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 7);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0u8; 4])
+            .is_err());
+    }
+
+    #[test]
+    fn pjrt_is_stubbed() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { path: "x".into() };
+        assert!(client.compile(&comp).is_err());
+    }
+}
