@@ -8,8 +8,34 @@ cd "$(dirname "$0")"
 echo "== cargo build --release =="
 cargo build --release
 
+# The main test pass doubles as the first equivalence run: the
+# seed_matrix test in engine_equivalence drives packed-cpu/packed-planes
+# x per-slot/batched over ≥3 seeds, asserts bit-for-bit logits, and
+# writes a digest of the logit stream when RBTW_EQUIV_DIGEST is set.
 echo "== cargo test -q =="
-cargo test -q
+mkdir -p target
+rm -f target/equiv_digest_a.txt target/equiv_digest_b.txt
+RBTW_EQUIV_DIGEST=target/equiv_digest_a.txt cargo test -q
+
+# Second equivalence run: re-drive the seed matrix and fail on any
+# run-to-run drift — nondeterminism in a serving path is a bug even
+# when each run is internally consistent.
+echo "== cross-backend equivalence (seed matrix, run 2, determinism) =="
+RBTW_EQUIV_DIGEST=target/equiv_digest_b.txt \
+    cargo test -q --test engine_equivalence
+for f in target/equiv_digest_a.txt target/equiv_digest_b.txt; do
+    if [ ! -s "$f" ]; then
+        echo "FAIL: $f missing or empty (seed-matrix test did not write it)"
+        exit 1
+    fi
+done
+if ! cmp -s target/equiv_digest_a.txt target/equiv_digest_b.txt; then
+    echo "FAIL: equivalence digests differ between runs (nondeterminism):"
+    diff target/equiv_digest_a.txt target/equiv_digest_b.txt || true
+    exit 1
+fi
+echo "equivalence digests stable across runs:"
+cat target/equiv_digest_a.txt
 
 # The seed code predates rustfmt; keep the check advisory unless
 # RBTW_CI_STRICT_FMT=1 (flip once the tree is formatted).

@@ -9,7 +9,7 @@
 
 use std::time::Instant;
 
-use rbtw::engine::{self, BackendKind, InferBackend, ModelWeights};
+use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
 use rbtw::hwsim::{high_speed_design, paper_workloads, simulate_timestep,
                   synthesize, timestep_latency, HwConfig, Precision};
 use rbtw::util::table::Table;
@@ -71,7 +71,8 @@ fn main() {
     let mut t4 = Table::new(&["backend", "us/step", "steps/s", "weights B"]);
     let weights = ModelWeights::synthetic(w.d_in, w.hidden, "ter", 0xD0E);
     for kind in BackendKind::all() {
-        let backend = match engine::from_weights(kind, &weights, 1, 5) {
+        let backend = match engine::from_weights(
+            &weights, &BackendSpec::with(kind, 1, 5)) {
             Ok(b) => b,
             Err(_) => {
                 t4.row(&[kind.label().into(), "-".into(),

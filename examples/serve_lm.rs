@@ -3,7 +3,12 @@
 //! binary/ternary CPU engines — through one `InferBackend` interface.
 //!
 //!   cargo run --release --example serve_lm [-- --backend pjrt|packed|planes|all]
-//!       [--requests N] [--artifact NAME]
+//!       [--requests N] [--artifact NAME] [--per-slot]
+//!
+//! `--per-slot` steps the packed backends through the per-slot GEMV
+//! reference path instead of the default batched plane-streaming GEMM
+//! (one weight stream per step for all active slots); logits are
+//! bit-identical either way, only tokens/sec changes.
 //!
 //! With artifacts built (`make artifacts`) the chosen artifact's init
 //! weights are served; without them a synthetic ternary BN-LSTM stands
@@ -31,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         .max(1);
     let artifact = flag(&args, "--artifact").unwrap_or("char_ptb_ter".into());
     let backend_arg = flag(&args, "--backend").unwrap_or("all".into());
+    let per_slot = args.iter().any(|a| a == "--per-slot");
     let kinds: Vec<BackendKind> = if backend_arg == "all" {
         BackendKind::all().to_vec()
     } else {
@@ -45,14 +51,17 @@ fn main() -> anyhow::Result<()> {
                   stand-in model {})\n", synthetic.name);
     }
 
-    let mut t = Table::new(&["backend", "req", "tok/s", "p50 ms", "p99 ms",
-                             "peak batch", "weights B"]);
+    let mut t = Table::new(&["backend", "gemm", "req", "tok/s", "p50 ms",
+                             "p99 ms", "peak batch", "weights B"]);
     for kind in kinds {
-        let spec = BackendSpec { kind, slots: 16, sample_seed: 3 };
+        let mut spec = BackendSpec::with(kind, 16, 3);
+        if per_slot {
+            spec = spec.per_slot();
+        }
         let backend = if have_artifact {
             engine::open(&dir, &artifact, &spec)
         } else {
-            engine::from_weights(kind, &synthetic, spec.slots, spec.sample_seed)
+            engine::from_weights(&synthetic, &spec)
         };
         let backend = match backend {
             Ok(b) => b,
@@ -75,8 +84,18 @@ fn main() -> anyhow::Result<()> {
             .map(|r| (r.queue_time + r.run_time).as_secs_f64() * 1e3)
             .collect();
         let ps = percentiles(&lat, &[0.5, 0.99]);
+        // PjrtDense batches natively inside the executable; the
+        // batch-gemm flag only selects a path on the packed backends.
+        let gemm_label = if kind == BackendKind::PjrtDense {
+            "native"
+        } else if per_slot {
+            "per-slot"
+        } else {
+            "batched"
+        };
         t.row(&[
             kind.label().into(),
+            gemm_label.into(),
             responses.len().to_string(),
             format!("{:.0}", stats.tokens_processed as f64 / wall),
             format!("{:.1}", ps[0]),

@@ -7,7 +7,7 @@ mod common;
 
 use std::time::Instant;
 
-use rbtw::engine::{self, BackendKind, InferBackend, ModelWeights};
+use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
 use rbtw::hwsim::{fig7_points, paper_workloads, Workload};
 use rbtw::util::table::Table;
 
@@ -17,7 +17,8 @@ fn measured_sw_us(kind: BackendKind, w: &Workload) -> Option<f64> {
         return None; // the serving cell is single-layer
     }
     let weights = ModelWeights::synthetic(w.d_in.max(2), w.hidden, "ter", 0xF16);
-    let mut backend = engine::from_weights(kind, &weights, 1, 5).ok()?;
+    let mut backend =
+        engine::from_weights(&weights, &BackendSpec::with(kind, 1, 5)).ok()?;
     let vocab = backend.vocab();
     let mut logits = vec![0.0f32; vocab];
     backend.reset_slot(0).ok()?;

@@ -141,6 +141,10 @@ pub struct ServeSpec {
     pub slots: usize,
     pub queue_cap: usize,
     pub sample_seed: u64,
+    /// Batched plane-streaming GEMM (one weight stream per engine step
+    /// for all active slots) vs the per-slot GEMV reference path. Both
+    /// produce bit-identical logits.
+    pub batch_gemm: bool,
 }
 
 impl Default for ServeSpec {
@@ -150,6 +154,7 @@ impl Default for ServeSpec {
             slots: 16,
             queue_cap: 256,
             sample_seed: 0x5EED,
+            batch_gemm: true,
         }
     }
 }
@@ -165,6 +170,7 @@ impl ServeSpec {
             kind: self.backend,
             slots: self.slots,
             sample_seed: self.sample_seed,
+            batch_gemm: self.batch_gemm,
         }
     }
 }
@@ -198,6 +204,9 @@ impl Config {
                 let x = v.as_i64().context("sample_seed")?;
                 anyhow::ensure!(x >= 0, "[serve] sample_seed must be >= 0");
                 spec.sample_seed = x as u64;
+            }
+            if let Some(v) = s.get("batch_gemm") {
+                spec.batch_gemm = v.as_bool().context("batch_gemm")?;
             }
         }
         Ok(spec)
@@ -324,7 +333,8 @@ mod tests {
     #[test]
     fn builds_serve_spec() {
         let cfg = Config::parse(
-            "[serve]\nbackend = \"planes\"\nslots = 8\nqueue_cap = 32\n",
+            "[serve]\nbackend = \"planes\"\nslots = 8\nqueue_cap = 32\n\
+             batch_gemm = false\n",
         )
         .unwrap();
         let spec = cfg.serve_spec(ServeSpec::default()).unwrap();
@@ -332,11 +342,19 @@ mod tests {
         assert_eq!(spec.slots, 8);
         assert_eq!(spec.queue_cap, 32);
         assert_eq!(spec.sample_seed, ServeSpec::default().sample_seed);
+        assert!(!spec.batch_gemm);
         let bs = spec.backend_spec();
         assert_eq!(bs.kind, BackendKind::PackedPlanes);
         assert_eq!(bs.slots, 8);
-        // defaults make the packed deployment engine the serving path
+        assert!(!bs.batch_gemm);
+        // defaults make the packed deployment engine the serving path,
+        // stepped through the batched plane-streaming GEMM
         assert_eq!(ServeSpec::default().backend, BackendKind::PackedCpu);
+        assert!(ServeSpec::default().batch_gemm);
+        assert!(Config::parse("[serve]\nbatch_gemm = 1\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
         assert!(Config::parse("[serve]\nbackend = \"tpu\"\n")
             .unwrap()
             .serve_spec(ServeSpec::default())

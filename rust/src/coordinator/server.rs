@@ -16,6 +16,15 @@
 //! f32 buffers on the packed engines (zero marshalling per step),
 //! per-step literals on the PJRT path. The server deals only in tokens
 //! and logits.
+//!
+//! On the packed backends' batched-GEMM path (the default — see
+//! [`crate::engine::BackendSpec::batch_gemm`]), each engine step streams
+//! every packed weight word once for ALL active slots, so filling slots
+//! through continuous batching raises tokens/sec at nearly constant
+//! weight-memory traffic — the serving-side realization of the paper's
+//! §6 bandwidth argument. Requests joining or leaving slots mid-decode
+//! never perturb other slots' logits (bit-for-bit; see
+//! `rust/tests/server_integration.rs`).
 
 use std::collections::VecDeque;
 use std::path::Path;
@@ -316,7 +325,7 @@ fn sample_token(logits: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{from_weights, BackendKind, ModelWeights};
+    use crate::engine::{from_weights, BackendKind, BackendSpec, ModelWeights};
 
     #[test]
     fn greedy_sampling_picks_argmax() {
@@ -344,7 +353,8 @@ mod tests {
 
     fn packed_server(slots: usize, queue_cap: usize) -> InferenceServer {
         let w = ModelWeights::synthetic(20, 16, "ter", 41);
-        let backend = from_weights(BackendKind::PackedCpu, &w, slots, 9).unwrap();
+        let backend = from_weights(
+            &w, &BackendSpec::with(BackendKind::PackedCpu, slots, 9)).unwrap();
         InferenceServer::with_backend(backend, queue_cap)
     }
 

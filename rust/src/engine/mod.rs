@@ -23,6 +23,25 @@
 //! the server only passes tokens in and reads logits out. The packed
 //! backends therefore never rebuild per-step literals — state stays in
 //! two flat `f32` buffers.
+//!
+//! ## Batched plane streaming
+//!
+//! The packed backends step a batch two ways, selected by
+//! [`BackendSpec::batch_gemm`]:
+//! * **batched** (default): active slots' (h, c) rows are gathered into
+//!   contiguous blocks, the four gate matmuls run as one batched GEMM
+//!   per matrix — each packed weight word streamed **once per engine
+//!   step** and fanned out to every active slot's accumulator (the
+//!   paper's §6 accelerator datapath; serving throughput is bound by
+//!   the single weight stream, not slots × weights) — and results are
+//!   scattered back. The token x-path is a batched one-hot gather.
+//! * **per-slot** (`batch_gemm = false`): one LUT GEMV per active slot,
+//!   re-streaming the weight planes per slot. The reference path; also
+//!   marginally faster for a single stream.
+//!
+//! Both paths produce bit-identical logits (`rust/tests/
+//! quant_properties.rs` proves it under random slot-activity masks), so
+//! the flag is purely a throughput choice.
 
 pub mod packed;
 pub mod pjrt;
@@ -159,11 +178,31 @@ pub struct BackendSpec {
     /// Seed for the one-time stochastic sampling of deployment weights
     /// (Eq. 4–6) on the packed backends.
     pub sample_seed: u64,
+    /// Step all active slots through one batched GEMM per gate matrix
+    /// (one weight stream per step) instead of one GEMV per slot. Both
+    /// paths are bit-identical; this is a throughput knob. Ignored by
+    /// `PjrtDense` (the executable batches natively).
+    pub batch_gemm: bool,
 }
 
 impl Default for BackendSpec {
     fn default() -> Self {
-        Self { kind: BackendKind::PackedCpu, slots: 16, sample_seed: 0x5EED }
+        Self { kind: BackendKind::PackedCpu, slots: 16, sample_seed: 0x5EED,
+               batch_gemm: true }
+    }
+}
+
+impl BackendSpec {
+    /// Shorthand for the common (kind, slots, seed) spec with the
+    /// default batched-GEMM path.
+    pub fn with(kind: BackendKind, slots: usize, sample_seed: u64) -> Self {
+        Self { kind, slots, sample_seed, ..Self::default() }
+    }
+
+    /// Switch to the per-slot GEMV reference path.
+    pub fn per_slot(mut self) -> Self {
+        self.batch_gemm = false;
+        self
     }
 }
 
@@ -181,7 +220,7 @@ pub fn open(artifacts_dir: &Path, artifact: &str, spec: &BackendSpec)
         }
         BackendKind::PackedCpu | BackendKind::PackedPlanes => {
             let w = ModelWeights::from_artifact(artifacts_dir, artifact)?;
-            from_weights(spec.kind, &w, spec.slots, spec.sample_seed)
+            from_weights(&w, spec)
         }
     }
 }
@@ -195,7 +234,7 @@ pub fn open_with_engine(engine: &Engine, artifacts_dir: &Path, artifact: &str,
             engine, artifacts_dir, artifact)?)),
         BackendKind::PackedCpu | BackendKind::PackedPlanes => {
             let w = ModelWeights::from_artifact(artifacts_dir, artifact)?;
-            from_weights(spec.kind, &w, spec.slots, spec.sample_seed)
+            from_weights(&w, spec)
         }
     }
 }
@@ -203,16 +242,15 @@ pub fn open_with_engine(engine: &Engine, artifacts_dir: &Path, artifact: &str,
 /// Build a packed backend from host-side weights (artifact, checkpoint,
 /// live session export, or [`ModelWeights::synthetic`]). Errors for
 /// `PjrtDense`, which needs a compiled artifact.
-pub fn from_weights(kind: BackendKind, weights: &ModelWeights, slots: usize,
-                    sample_seed: u64) -> Result<Box<dyn InferBackend>> {
-    match kind {
+pub fn from_weights(weights: &ModelWeights, spec: &BackendSpec)
+    -> Result<Box<dyn InferBackend>> {
+    match spec.kind {
         BackendKind::PjrtDense => {
             bail!("PjrtDense cannot be built from host weights; use open()")
         }
-        BackendKind::PackedCpu => Ok(Box::new(PackedBackend::from_weights(
-            weights, slots, sample_seed, false)?)),
-        BackendKind::PackedPlanes => Ok(Box::new(PackedBackend::from_weights(
-            weights, slots, sample_seed, true)?)),
+        BackendKind::PackedCpu | BackendKind::PackedPlanes => {
+            Ok(Box::new(PackedBackend::from_weights(weights, spec)?))
+        }
     }
 }
 
@@ -235,7 +273,8 @@ mod tests {
     #[test]
     fn from_weights_serves_synthetic_model() {
         let w = ModelWeights::synthetic(20, 16, "ter", 7);
-        let mut b = from_weights(BackendKind::PackedCpu, &w, 4, 11).unwrap();
+        let mut b = from_weights(
+            &w, &BackendSpec::with(BackendKind::PackedCpu, 4, 11)).unwrap();
         assert_eq!(b.slots(), 4);
         assert_eq!(b.vocab(), 20);
         assert_eq!(b.hidden(), 16);
@@ -254,6 +293,15 @@ mod tests {
     #[test]
     fn pjrt_needs_artifact() {
         let w = ModelWeights::synthetic(10, 8, "ter", 1);
-        assert!(from_weights(BackendKind::PjrtDense, &w, 4, 1).is_err());
+        assert!(from_weights(
+            &w, &BackendSpec::with(BackendKind::PjrtDense, 4, 1)).is_err());
+    }
+
+    #[test]
+    fn spec_helpers_toggle_paths() {
+        let spec = BackendSpec::with(BackendKind::PackedPlanes, 8, 2);
+        assert!(spec.batch_gemm, "batched GEMM is the default serving path");
+        assert!(!spec.per_slot().batch_gemm);
+        assert!(BackendSpec::default().batch_gemm);
     }
 }

@@ -7,16 +7,30 @@
 //! [`Packed`](crate::quant::Packed) variant the cell carries.
 //!
 //! Slot state lives in two flat `(slots, hidden)` f32 buffers owned by
-//! the backend — no per-step literal marshalling, no XLA. A step over a
-//! token is one `add_row` gather (x-path), one packed GEMV (h-path), the
-//! folded-BN gate tail, and a dense f32 head GEMV for the logits. The
-//! resident weight footprint is 1–2 bits per recurrent weight — the 12×
-//! saving of §6 — plus the (small) dense head.
+//! the backend — no per-step literal marshalling, no XLA.
+//!
+//! A step runs one of two bit-identical paths
+//! ([`BackendSpec::batch_gemm`]):
+//! * **batched** (default): active slots' (h, c) rows are gathered into
+//!   contiguous blocks, every gate matmul runs as ONE batched GEMM that
+//!   streams each packed weight word once for the whole batch
+//!   (`quant::gemm`), the token x-path is a batched one-hot gather, and
+//!   results scatter back to their slots. Engine-step weight traffic is
+//!   constant in the number of active slots — the §6 accelerator
+//!   argument in software.
+//! * **per-slot**: one `add_row` gather + one packed GEMV per active
+//!   slot (the original reference path; weight traffic scales with
+//!   slots).
+//!
+//! Either way the gate tail is folded-BN f32 and the LM head a dense f32
+//! GEMV per active slot. The resident weight footprint is 1–2 bits per
+//! recurrent weight — the 12× saving of §6 — plus the (small) dense
+//! head.
 
 use anyhow::Result;
 
 use super::weights::ModelWeights;
-use super::{BackendKind, InferBackend};
+use super::{BackendKind, BackendSpec, InferBackend};
 use crate::quant::{gemv_f32, PackedLstmCell};
 
 /// Packed-cell backend (LUT or bit-plane layout; see module docs).
@@ -30,29 +44,50 @@ pub struct PackedBackend {
     vocab: usize,
     hidden: usize,
     n_slots: usize,
+    /// Batched-GEMM vs per-slot-GEMV stepping (bit-identical results).
+    batch_gemm: bool,
     /// Per-slot recurrent state, row-major (slots, hidden).
     h: Vec<f32>,
     c: Vec<f32>,
+    // batched-step scratch: active slot ids, their tokens, and the
+    // gathered contiguous (active, hidden) state blocks
+    active: Vec<usize>,
+    toks: Vec<usize>,
+    hb: Vec<f32>,
+    cb: Vec<f32>,
 }
 
 impl PackedBackend {
-    /// Build from host-side weights; `planes` selects the bit-plane
-    /// layout (`PackedPlanes`).
-    pub fn from_weights(weights: &ModelWeights, slots: usize, sample_seed: u64,
-                        planes: bool) -> Result<Self> {
-        anyhow::ensure!(slots > 0, "need at least one decode slot");
-        let (cell, head_w, head_b) = weights.build_cell(sample_seed, planes)?;
+    /// Build from host-side weights per `spec` (`spec.kind` selects the
+    /// sign/mask or bit-plane layout; `PjrtDense` is rejected).
+    pub fn from_weights(weights: &ModelWeights, spec: &BackendSpec)
+        -> Result<Self> {
+        let planes = match spec.kind {
+            BackendKind::PackedCpu => false,
+            BackendKind::PackedPlanes => true,
+            BackendKind::PjrtDense => {
+                anyhow::bail!("PjrtDense is not a packed backend; use open()")
+            }
+        };
+        anyhow::ensure!(spec.slots > 0, "need at least one decode slot");
+        let (cell, head_w, head_b) =
+            weights.build_cell(spec.sample_seed, planes)?;
         let (vocab, hidden) = (weights.vocab, weights.hidden);
         Ok(Self {
-            kind: if planes { BackendKind::PackedPlanes } else { BackendKind::PackedCpu },
+            kind: spec.kind,
             cell,
             head_w,
             head_b,
             vocab,
             hidden,
-            n_slots: slots,
-            h: vec![0.0; slots * hidden],
-            c: vec![0.0; slots * hidden],
+            n_slots: spec.slots,
+            batch_gemm: spec.batch_gemm,
+            h: vec![0.0; spec.slots * hidden],
+            c: vec![0.0; spec.slots * hidden],
+            active: vec![],
+            toks: vec![],
+            hb: vec![],
+            cb: vec![],
         })
     }
 
@@ -61,9 +96,75 @@ impl PackedBackend {
         &self.cell
     }
 
+    /// Whether steps run the batched-GEMM path.
+    pub fn batch_gemm(&self) -> bool {
+        self.batch_gemm
+    }
+
     /// Read-only view of one slot's hidden state.
     pub fn slot_h(&self, slot: usize) -> &[f32] {
         &self.h[slot * self.hidden..(slot + 1) * self.hidden]
+    }
+
+    /// Dense f32 head over slot `i`'s (updated) hidden state.
+    fn head_into(&self, i: usize, logits: &mut [f32]) {
+        let row = &mut logits[i * self.vocab..(i + 1) * self.vocab];
+        let hs = &self.h[i * self.hidden..(i + 1) * self.hidden];
+        gemv_f32(&self.head_w, self.hidden, self.vocab, hs, row);
+        for (l, b) in row.iter_mut().zip(&self.head_b) {
+            *l += b;
+        }
+    }
+
+    /// Reference path: one gather + one GEMV per active slot.
+    fn step_per_slot(&mut self, tokens: &[Option<i32>], logits: &mut [f32]) {
+        for (i, tok) in tokens.iter().enumerate() {
+            let Some(tok) = *tok else { continue };
+            let hs = &mut self.h[i * self.hidden..(i + 1) * self.hidden];
+            let cs = &mut self.c[i * self.hidden..(i + 1) * self.hidden];
+            self.cell.step_token(tok as usize, hs, cs);
+            self.head_into(i, logits);
+        }
+    }
+
+    /// Batched path: gather active (h, c) rows, one GEMM per gate
+    /// matrix (single weight stream for the whole batch), scatter back.
+    fn step_batched(&mut self, tokens: &[Option<i32>], logits: &mut [f32]) {
+        self.active.clear();
+        self.toks.clear();
+        for (i, tok) in tokens.iter().enumerate() {
+            if let Some(t) = *tok {
+                self.active.push(i);
+                self.toks.push(t as usize);
+            }
+        }
+        let nb = self.active.len();
+        if nb == 0 {
+            return;
+        }
+        let hid = self.hidden;
+        if self.hb.len() < nb * hid {
+            self.hb.resize(nb * hid, 0.0);
+            self.cb.resize(nb * hid, 0.0);
+        }
+        for (j, &i) in self.active.iter().enumerate() {
+            self.hb[j * hid..(j + 1) * hid]
+                .copy_from_slice(&self.h[i * hid..(i + 1) * hid]);
+            self.cb[j * hid..(j + 1) * hid]
+                .copy_from_slice(&self.c[i * hid..(i + 1) * hid]);
+        }
+        self.cell.step_tokens(&self.toks, &mut self.hb[..nb * hid],
+                              &mut self.cb[..nb * hid]);
+        for (j, &i) in self.active.iter().enumerate() {
+            self.h[i * hid..(i + 1) * hid]
+                .copy_from_slice(&self.hb[j * hid..(j + 1) * hid]);
+            self.c[i * hid..(i + 1) * hid]
+                .copy_from_slice(&self.cb[j * hid..(j + 1) * hid]);
+        }
+        for idx in 0..nb {
+            let i = self.active[idx];
+            self.head_into(i, logits);
+        }
     }
 }
 
@@ -89,7 +190,8 @@ impl InferBackend for PackedBackend {
     }
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
-        anyhow::ensure!(slot < self.n_slots, "slot {slot} out of range");
+        anyhow::ensure!(slot < self.n_slots,
+                        "slot {slot} out of range ({} slots)", self.n_slots);
         self.h[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
         self.c[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
         Ok(())
@@ -107,17 +209,10 @@ impl InferBackend for PackedBackend {
             anyhow::ensure!(*tok >= 0 && (*tok as usize) < self.vocab,
                             "token {tok} out of vocab {}", self.vocab);
         }
-        for (i, tok) in tokens.iter().enumerate() {
-            let Some(tok) = *tok else { continue };
-            let hs = &mut self.h[i * self.hidden..(i + 1) * self.hidden];
-            let cs = &mut self.c[i * self.hidden..(i + 1) * self.hidden];
-            self.cell.step_token(tok as usize, hs, cs);
-            let row = &mut logits[i * self.vocab..(i + 1) * self.vocab];
-            let hs = &self.h[i * self.hidden..(i + 1) * self.hidden];
-            gemv_f32(&self.head_w, self.hidden, self.vocab, hs, row);
-            for (l, b) in row.iter_mut().zip(&self.head_b) {
-                *l += b;
-            }
+        if self.batch_gemm {
+            self.step_batched(tokens, logits);
+        } else {
+            self.step_per_slot(tokens, logits);
         }
         Ok(())
     }
@@ -129,28 +224,38 @@ mod tests {
     use crate::engine::weights::ModelWeights;
 
     fn backend(planes: bool) -> PackedBackend {
+        backend_with(planes, true)
+    }
+
+    fn backend_with(planes: bool, batch_gemm: bool) -> PackedBackend {
         let w = ModelWeights::synthetic(25, 16, "ter", 77);
-        PackedBackend::from_weights(&w, 3, 5, planes).unwrap()
+        let kind = if planes { BackendKind::PackedPlanes }
+                   else { BackendKind::PackedCpu };
+        let mut spec = BackendSpec::with(kind, 3, 5);
+        spec.batch_gemm = batch_gemm;
+        PackedBackend::from_weights(&w, &spec).unwrap()
     }
 
     #[test]
     fn idle_slots_untouched_and_state_isolated() {
-        let mut b = backend(false);
-        let mut logits = vec![f32::NAN; 3 * 25];
-        logits[25..50].fill(0.5); // slot 1 idle — must stay 0.5
-        for s in [0, 2] {
-            b.reset_slot(s).unwrap();
+        for batch_gemm in [false, true] {
+            let mut b = backend_with(false, batch_gemm);
+            let mut logits = vec![f32::NAN; 3 * 25];
+            logits[25..50].fill(0.5); // slot 1 idle — must stay 0.5
+            for s in [0, 2] {
+                b.reset_slot(s).unwrap();
+            }
+            b.step_batch(&[Some(4), None, Some(4)], &mut logits).unwrap();
+            assert!(logits[25..50].iter().all(|&x| x == 0.5));
+            // identical token + fresh state => identical rows
+            for k in 0..25 {
+                assert_eq!(logits[k].to_bits(), logits[50 + k].to_bits());
+            }
+            // diverge slot 2, slot 0 must not move
+            let h0: Vec<f32> = b.slot_h(0).to_vec();
+            b.step_batch(&[None, None, Some(9)], &mut logits).unwrap();
+            assert_eq!(h0, b.slot_h(0));
         }
-        b.step_batch(&[Some(4), None, Some(4)], &mut logits).unwrap();
-        assert!(logits[25..50].iter().all(|&x| x == 0.5));
-        // identical token + fresh state => identical rows
-        for k in 0..25 {
-            assert_eq!(logits[k].to_bits(), logits[50 + k].to_bits());
-        }
-        // diverge slot 2, slot 0 must not move
-        let h0: Vec<f32> = b.slot_h(0).to_vec();
-        b.step_batch(&[None, None, Some(9)], &mut logits).unwrap();
-        assert_eq!(h0, b.slot_h(0));
     }
 
     #[test]
@@ -169,11 +274,43 @@ mod tests {
     }
 
     #[test]
+    fn batched_and_per_slot_paths_agree_bitwise() {
+        for planes in [false, true] {
+            let mut a = backend_with(planes, false);
+            let mut b = backend_with(planes, true);
+            assert!(!a.batch_gemm() && b.batch_gemm());
+            for s in 0..3 {
+                a.reset_slot(s).unwrap();
+                b.reset_slot(s).unwrap();
+            }
+            let schedule: &[[Option<i32>; 3]] = &[
+                [Some(4), None, Some(9)],
+                [Some(1), Some(2), Some(3)],
+                [None, None, None],
+                [None, Some(8), None],
+                [Some(0), Some(24), Some(12)],
+            ];
+            for toks in schedule {
+                let mut la = vec![0.0f32; 3 * 25];
+                let mut lb = vec![0.0f32; 3 * 25];
+                a.step_batch(toks, &mut la).unwrap();
+                b.step_batch(toks, &mut lb).unwrap();
+                for (x, y) in la.iter().zip(&lb) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "planes={planes}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn rejects_bad_inputs() {
-        let mut b = backend(false);
-        let mut logits = vec![0.0f32; 3 * 25];
-        assert!(b.step_batch(&[Some(1)], &mut logits).is_err());
-        assert!(b.step_batch(&[Some(99), None, None], &mut logits).is_err());
-        assert!(b.reset_slot(5).is_err());
+        for batch_gemm in [false, true] {
+            let mut b = backend_with(false, batch_gemm);
+            let mut logits = vec![0.0f32; 3 * 25];
+            assert!(b.step_batch(&[Some(1)], &mut logits).is_err());
+            assert!(b.step_batch(&[Some(99), None, None], &mut logits).is_err());
+            assert!(b.step_batch(&[Some(-1), None, None], &mut logits).is_err());
+            assert!(b.reset_slot(5).is_err());
+        }
     }
 }

@@ -117,12 +117,17 @@ impl InferBackend for PjrtDense {
                         "tokens length {} != slots {}", tokens.len(), self.n_slots);
         anyhow::ensure!(logits_out.len() == self.n_slots * self.vocab,
                         "logits buffer size mismatch");
+        // validate every token before building the input so a bad one
+        // can't leave the batch partially stepped (same contract as the
+        // packed backends)
+        for tok in tokens.iter().flatten() {
+            anyhow::ensure!(*tok >= 0 && (*tok as usize) < self.vocab,
+                            "token {tok} out of vocab {}", self.vocab);
+        }
         // one-hot input; idle slots feed an all-zero row
         let mut x = vec![0.0f32; self.n_slots * self.vocab];
         for (i, tok) in tokens.iter().enumerate() {
             if let Some(t) = *tok {
-                anyhow::ensure!((t as usize) < self.vocab,
-                                "token {t} out of vocab {}", self.vocab);
                 x[i * self.vocab + t as usize] = 1.0;
             }
         }

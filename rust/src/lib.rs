@@ -28,7 +28,10 @@
 //! [`engine::BackendKind::PackedPlanes`] (precomputed pos/neg bit
 //! planes). The packed backends hold slot state in flat f32 buffers and
 //! resident weights at 1–2 bits each — the paper's 12× memory claim,
-//! measurable via [`engine::InferBackend::weight_bytes`].
+//! measurable via [`engine::InferBackend::weight_bytes`] — and by
+//! default step every active decode slot through one batched GEMM per
+//! gate matrix (a single weight stream per engine step; see
+//! [`quant::gemm`] and [`engine::BackendSpec::batch_gemm`]).
 
 pub mod config;
 pub mod coordinator;

@@ -130,7 +130,8 @@ fn print_usage() {
          \x20                             --checkpoint IN)\n\
          \x20 serve <artifact>            serving demo (--backend pjrt|packed|planes\n\
          \x20                             --requests N --gen-len N --prompt-len N\n\
-         \x20                             --slots N --config F)\n\
+         \x20                             --slots N --batch-gemm true|false\n\
+         \x20                             --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
          \n\
@@ -250,14 +251,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         ServeSpec::SLOTS_RANGE.end());
         spec.slots = s;
     }
+    if let Some(v) = args.get("batch-gemm") {
+        spec.batch_gemm = match v {
+            "true" => true,
+            "false" => false,
+            other => bail!("--batch-gemm takes true|false, got '{other}'"),
+        };
+    }
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
     let backend = engine::open(&dir, &name, &spec.backend_spec())?;
     println!(
-        "backend {} | {} slots | {} B resident weights",
+        "backend {} | {} slots | {} gemm | {} B resident weights",
         backend.kind().label(),
         backend.slots(),
+        if spec.batch_gemm { "batched" } else { "per-slot" },
         backend.weight_bytes()
     );
     let vocab = backend.vocab();

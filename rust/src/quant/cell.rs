@@ -12,6 +12,8 @@
 
 use anyhow::{bail, Context, Result};
 
+use super::gemm::{gemm_binary_lut, gemm_ternary_lut, gemm_ternary_planes,
+                  GemmScratch};
 use super::gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};
 use super::pack::{words_per_col, PackedBinary, PackedTernary};
 use super::planes::{gemv_ternary_planes, TernaryPlanes};
@@ -69,6 +71,33 @@ impl Packed {
         }
     }
 
+    /// Batched multiplier-free GEMM: Y = X·W for X row-major
+    /// `(batch, rows)`, Y row-major `(batch, cols)` (overwritten). Each
+    /// packed weight word is streamed **once** for all batch rows; every
+    /// output row is bit-identical to [`Packed::gemv`] on that row (see
+    /// [`super::gemm`]).
+    pub fn gemm(&self, x: &[f32], batch: usize, y: &mut [f32],
+                scratch: &mut GemmScratch) {
+        match self {
+            Packed::Binary(b) => gemm_binary_lut(b, x, batch, y, scratch),
+            Packed::Ternary(t) => gemm_ternary_lut(t, x, batch, y, scratch),
+            Packed::Planes(p) => gemm_ternary_planes(p, x, batch, y, scratch),
+        }
+    }
+
+    /// Batched one-hot gather: row `rows[b]` of the matrix into row `b`
+    /// of the `(rows.len(), cols)` output block (overwritten) — the
+    /// token x-path of a whole decode batch as `rows.len()` packed-row
+    /// gathers, no GEMM at all.
+    pub fn gather_rows(&self, rows: &[usize], y: &mut [f32]) {
+        let cols = self.cols();
+        debug_assert_eq!(y.len(), rows.len() * cols);
+        y.fill(0.0);
+        for (b, &r) in rows.iter().enumerate() {
+            self.add_row(r, &mut y[b * cols..(b + 1) * cols]);
+        }
+    }
+
     /// y += row r of the matrix (the one-hot x-path: a one-hot GEMV is a
     /// single packed-row gather, exactly the accelerator's weight-SRAM
     /// addressing trick).
@@ -120,10 +149,14 @@ pub struct PackedLstmCell {
     pub shift_h: Vec<f32>,
     pub bias: Vec<f32>,
     pub hidden: usize,
-    // scratch buffers (reused across steps; the hot loop allocates nothing)
+    // scratch buffers (reused across steps; the hot loop allocates nothing
+    // once the widest batch has been seen)
     xw: Vec<f32>,
     hw: Vec<f32>,
     lut: LutScratch,
+    xw_b: Vec<f32>,
+    hw_b: Vec<f32>,
+    gemm: GemmScratch,
 }
 
 fn sigmoid(x: f32) -> f32 {
@@ -154,6 +187,9 @@ impl PackedLstmCell {
             xw: vec![0.0; n4],
             hw: vec![0.0; n4],
             lut: LutScratch::default(),
+            xw_b: vec![],
+            hw_b: vec![],
+            gemm: GemmScratch::default(),
         })
     }
 
@@ -215,26 +251,69 @@ impl PackedLstmCell {
         self.tail(h, c);
     }
 
+    /// One step for a whole batch of token streams at once — the batched
+    /// serving path. `h`/`c` are row-major `(tokens.len(), hidden)`
+    /// blocks holding the *active* slots' state, updated in place.
+    ///
+    /// The x-path is a batched one-hot gather (one packed-row gather per
+    /// stream), the h-path a single batched GEMM that streams the packed
+    /// `wh` planes once for every stream, and the gate tail runs per row.
+    /// Each row's result is bit-identical to [`Self::step_token`] on
+    /// that stream alone.
+    pub fn step_tokens(&mut self, tokens: &[usize], h: &mut [f32],
+                       c: &mut [f32]) {
+        let batch = tokens.len();
+        if batch == 0 {
+            return;
+        }
+        let n4 = 4 * self.hidden;
+        debug_assert_eq!(h.len(), batch * self.hidden);
+        debug_assert_eq!(c.len(), batch * self.hidden);
+        if self.xw_b.len() < batch * n4 {
+            self.xw_b.resize(batch * n4, 0.0);
+            self.hw_b.resize(batch * n4, 0.0);
+        }
+        self.wx.gather_rows(tokens, &mut self.xw_b[..batch * n4]);
+        self.wh.gemm(h, batch, &mut self.hw_b[..batch * n4], &mut self.gemm);
+        for b in 0..batch {
+            gate_tail(&mut self.xw_b[b * n4..(b + 1) * n4],
+                      &self.hw_b[b * n4..(b + 1) * n4],
+                      &self.scale_x, &self.shift_x,
+                      &self.scale_h, &self.shift_h, &self.bias, self.hidden,
+                      &mut h[b * self.hidden..(b + 1) * self.hidden],
+                      &mut c[b * self.hidden..(b + 1) * self.hidden]);
+        }
+    }
+
     fn tail(&mut self, h: &mut [f32], c: &mut [f32]) {
-        let hid = self.hidden;
-        for j in 0..4 * hid {
-            self.xw[j] = self.xw[j] * self.scale_x[j] + self.shift_x[j]
-                + self.hw[j] * self.scale_h[j] + self.shift_h[j]
-                + self.bias[j];
-        }
-        for k in 0..hid {
-            let i = sigmoid(self.xw[k]);
-            let f = sigmoid(self.xw[hid + k]);
-            let g = self.xw[2 * hid + k].tanh();
-            let o = sigmoid(self.xw[3 * hid + k]);
-            c[k] = f * c[k] + i * g;
-            h[k] = o * c[k].tanh();
-        }
+        gate_tail(&mut self.xw, &self.hw, &self.scale_x, &self.shift_x,
+                  &self.scale_h, &self.shift_h, &self.bias, self.hidden, h, c);
     }
 
     /// Total packed weight bytes (the deployment footprint).
     pub fn weight_bytes(&self) -> usize {
         self.wx.bytes() + self.wh.bytes()
+    }
+}
+
+/// The folded-BN gate tail over one stream's preactivations: identical
+/// op sequence whether the stream was stepped alone or in a batch.
+#[allow(clippy::too_many_arguments)]
+fn gate_tail(xw: &mut [f32], hw: &[f32], scale_x: &[f32], shift_x: &[f32],
+             scale_h: &[f32], shift_h: &[f32], bias: &[f32], hid: usize,
+             h: &mut [f32], c: &mut [f32]) {
+    for j in 0..4 * hid {
+        xw[j] = xw[j] * scale_x[j] + shift_x[j]
+            + hw[j] * scale_h[j] + shift_h[j]
+            + bias[j];
+    }
+    for k in 0..hid {
+        let i = sigmoid(xw[k]);
+        let f = sigmoid(xw[hid + k]);
+        let g = xw[2 * hid + k].tanh();
+        let o = sigmoid(xw[3 * hid + k]);
+        c[k] = f * c[k] + i * g;
+        h[k] = o * c[k].tanh();
     }
 }
 
@@ -362,6 +441,57 @@ mod tests {
             for k in 0..24 {
                 assert_eq!(h1[k].to_bits(), h2[k].to_bits(), "h[{k}]");
                 assert_eq!(c1[k].to_bits(), c2[k].to_bits(), "c[{k}]");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_step_matches_per_stream_bitwise() {
+        // two cells with identical weights: one stepped per stream, one
+        // stepped through the batched path — trajectories must not
+        // diverge by a single bit, for every packing layout.
+        for planes in [false, true] {
+            let (mut a, wx, wh) = mk_cell(30, 20, 31);
+            let n4 = 4 * 20;
+            let mk = |d: &[f32], rows: usize| {
+                let p = Packed::Ternary(PackedTernary::pack(d, rows, n4, 0.11));
+                if planes { p.to_planes() } else { p }
+            };
+            let mut b = PackedLstmCell::new(
+                mk(&wx, 30), mk(&wh, 20),
+                vec![1.0; n4], vec![0.0; n4], vec![1.0; n4], vec![0.0; n4],
+                a.bias.clone(),
+            )
+            .unwrap();
+            if planes {
+                a = PackedLstmCell::new(
+                    mk(&wx, 30), mk(&wh, 20),
+                    vec![1.0; n4], vec![0.0; n4], vec![1.0; n4], vec![0.0; n4],
+                    b.bias.clone(),
+                )
+                .unwrap();
+            }
+            let batch = 5;
+            let mut hs = vec![vec![0.0f32; 20]; batch];
+            let mut cs = vec![vec![0.0f32; 20]; batch];
+            let mut hb = vec![0.0f32; batch * 20];
+            let mut cb = vec![0.0f32; batch * 20];
+            let mut rng = Rng::new(37);
+            for _ in 0..12 {
+                let toks: Vec<usize> =
+                    (0..batch).map(|_| rng.below_usize(30)).collect();
+                for (s, &t) in toks.iter().enumerate() {
+                    a.step_token(t, &mut hs[s], &mut cs[s]);
+                }
+                b.step_tokens(&toks, &mut hb, &mut cb);
+                for s in 0..batch {
+                    for k in 0..20 {
+                        assert_eq!(hs[s][k].to_bits(), hb[s * 20 + k].to_bits(),
+                                   "planes={planes} h[{s}][{k}]");
+                        assert_eq!(cs[s][k].to_bits(), cb[s * 20 + k].to_bits(),
+                                   "planes={planes} c[{s}][{k}]");
+                    }
+                }
             }
         }
     }

@@ -1,0 +1,295 @@
+//! Batched multiplier-free GEMM: one weight stream per step, all decode
+//! slots — the software twin of the paper's §6 accelerator datapath,
+//! where each 1–2-bit weight plane is streamed from DRAM **once** per
+//! timestep and fans out to a whole array of accumulators.
+//!
+//! The per-slot LUT GEMV ([`super::gemv_lut`]) re-streams the packed
+//! planes once per decode slot, so serving-batch weight traffic grows
+//! linearly with slots. These kernels compute `Y = X·W` for an
+//! `(batch, rows)` activation block and read each plane byte exactly
+//! once, updating every slot's accumulator from it:
+//!
+//! * subset-sum tables are built **transposed** `(256, batch)` so that
+//!   for a fixed table index `p` the `batch` values are contiguous;
+//! * the accumulator block is kept column-major `(cols, batch)` during
+//!   accumulation, making the per-column update
+//!   `acc[c][0..batch] += T[pos] - T[neg]` a pair of contiguous
+//!   vectorizable slice ops instead of `batch` scattered scalar walks;
+//! * the final alpha fold transposes back into the row-major
+//!   `(batch, cols)` output the cell consumes.
+//!
+//! **Bit-exactness contract:** every kernel here performs, per output
+//! element, the *identical* sequence of f32 operations as its per-slot
+//! counterpart (`gemv_binary_lut` / `gemv_ternary_lut` /
+//! `gemv_ternary_planes`): same subset-sum recurrence, same group order,
+//! same `t[pos] - t[neg]` (or `2·t[sign] − Σx`) accumulation, same final
+//! alpha multiply. Batched serving therefore produces logits that match
+//! the per-slot reference path bit for bit — enforced by
+//! `rust/tests/quant_properties.rs`.
+
+use super::gemv_lut::le_bytes;
+use super::pack::{words_per_col, PackedBinary, PackedTernary};
+use super::planes::TernaryPlanes;
+
+/// Reusable scratch for the batched kernels (the serving hot loop
+/// allocates nothing after the first step at a given width).
+#[derive(Default)]
+pub struct GemmScratch {
+    /// Transposed subset-sum tables `(256, batch)`: `tables[p*batch + b]`.
+    tables: Vec<f32>,
+    /// One group's activation tile, transposed `(8, batch)`.
+    xt: Vec<f32>,
+    /// Column-major accumulator `(cols, batch)`.
+    acc: Vec<f32>,
+    /// Per-row activation sums (binary kernel only).
+    totals: Vec<f32>,
+}
+
+impl GemmScratch {
+    fn resize(&mut self, batch: usize, cols: usize) {
+        self.tables.resize(256 * batch, 0.0);
+        self.xt.resize(8 * batch, 0.0);
+        self.acc.resize(cols * batch, 0.0);
+        self.totals.resize(batch, 0.0);
+    }
+}
+
+/// Transpose group `g`'s 8 input rows of the `(batch, rows)` block into
+/// an `(8, batch)` tile, zero-padding rows past `rows` (identical to the
+/// zero-padding the per-slot table build applies).
+fn gather_tile(x: &[f32], rows: usize, batch: usize, g: usize, xt: &mut [f32]) {
+    for i in 0..8 {
+        let r = g * 8 + i;
+        let row = &mut xt[i * batch..(i + 1) * batch];
+        if r < rows {
+            for (b, v) in row.iter_mut().enumerate() {
+                *v = x[b * rows + r];
+            }
+        } else {
+            row.fill(0.0);
+        }
+    }
+}
+
+/// Fold the column-major accumulator back into the row-major `(batch,
+/// cols)` output with the trailing alpha multiply — the one epilogue all
+/// three kernels share, kept in one place so the bit-exactness contract
+/// can't drift between layouts.
+fn fold_out(acc: &[f32], cols: usize, batch: usize, alpha: f32,
+            y: &mut [f32]) {
+    for c in 0..cols {
+        for b in 0..batch {
+            y[b * cols + c] = acc[c * batch + b] * alpha;
+        }
+    }
+}
+
+/// Batched subset-sum tables over a transposed `(8, batch)` tile:
+/// `tables[p*batch + b] = Σ_{i: bit i of p} xt[i*batch + b]`, built with
+/// the same `S[p] = S[p & (p-1)] + x[lsb]` recurrence as the scalar
+/// [`super::gemv_lut::build_subset_sums`] — so every entry is bitwise
+/// identical to the per-slot table for that slot's input.
+fn build_subset_sums_batch(xt: &[f32], batch: usize, tables: &mut [f32]) {
+    tables[..batch].fill(0.0);
+    for p in 1..256usize {
+        let lsb = p.trailing_zeros() as usize;
+        let q = p & (p - 1);
+        for b in 0..batch {
+            tables[p * batch + b] = tables[q * batch + b] + xt[lsb * batch + b];
+        }
+    }
+}
+
+/// Batched LUT binary GEMM: `Y = X·W` for a packed ±alpha matrix,
+/// `X` row-major `(batch, rows)`, `Y` row-major `(batch, cols)`.
+/// Streams each sign-plane byte once for all `batch` rows; per-row math
+/// is bit-identical to [`super::gemv_lut::gemv_binary_lut`].
+pub fn gemm_binary_lut(w: &PackedBinary, x: &[f32], batch: usize,
+                       y: &mut [f32], scratch: &mut GemmScratch) {
+    assert_eq!(x.len(), batch * w.rows);
+    assert_eq!(y.len(), batch * w.cols);
+    if batch == 0 {
+        return;
+    }
+    let wpc = words_per_col(w.rows);
+    let groups = w.rows.div_ceil(8);
+    let stride = wpc * 8;
+    scratch.resize(batch, w.cols);
+    // per-row prefix sum, same summation order as the per-slot kernel
+    for b in 0..batch {
+        scratch.totals[b] = x[b * w.rows..(b + 1) * w.rows].iter().sum();
+    }
+    for c in 0..w.cols {
+        for b in 0..batch {
+            scratch.acc[c * batch + b] = -scratch.totals[b];
+        }
+    }
+    let sign = le_bytes(&w.sign);
+    for g in 0..groups {
+        gather_tile(x, w.rows, batch, g, &mut scratch.xt);
+        build_subset_sums_batch(&scratch.xt, batch, &mut scratch.tables);
+        let t = &scratch.tables;
+        for c in 0..w.cols {
+            let ts = &t[sign[c * stride + g] as usize * batch..][..batch];
+            let a = &mut scratch.acc[c * batch..(c + 1) * batch];
+            for b in 0..batch {
+                a[b] += 2.0 * ts[b];
+            }
+        }
+    }
+    fold_out(&scratch.acc, w.cols, batch, w.alpha, y);
+}
+
+/// Batched LUT ternary GEMM over the sign/mask packing; per-row math is
+/// bit-identical to [`super::gemv_lut::gemv_ternary_lut`].
+pub fn gemm_ternary_lut(w: &PackedTernary, x: &[f32], batch: usize,
+                        y: &mut [f32], scratch: &mut GemmScratch) {
+    assert_eq!(x.len(), batch * w.rows);
+    assert_eq!(y.len(), batch * w.cols);
+    if batch == 0 {
+        return;
+    }
+    let wpc = words_per_col(w.rows);
+    let groups = w.rows.div_ceil(8);
+    let stride = wpc * 8;
+    scratch.resize(batch, w.cols);
+    scratch.acc[..w.cols * batch].fill(0.0);
+    let sign = le_bytes(&w.sign);
+    let mask = le_bytes(&w.mask);
+    for g in 0..groups {
+        gather_tile(x, w.rows, batch, g, &mut scratch.xt);
+        build_subset_sums_batch(&scratch.xt, batch, &mut scratch.tables);
+        let t = &scratch.tables;
+        for c in 0..w.cols {
+            let idx = c * stride + g;
+            let (m, s) = (mask[idx], sign[idx]);
+            let tp = &t[(m & s) as usize * batch..][..batch];
+            let tn = &t[(m & !s) as usize * batch..][..batch];
+            let a = &mut scratch.acc[c * batch..(c + 1) * batch];
+            for b in 0..batch {
+                a[b] += tp[b] - tn[b];
+            }
+        }
+    }
+    fold_out(&scratch.acc, w.cols, batch, w.alpha, y);
+}
+
+/// Batched GEMM over precomputed pos/neg selector planes — the
+/// wide-batch layout of [`super::planes`], and the closest software
+/// analogue of the accelerator: two selector-plane bytes are read per
+/// (group, column) **for the whole batch**, with no byte-ops in the
+/// loop. Per-row math is bit-identical to
+/// [`super::planes::gemv_ternary_planes`].
+pub fn gemm_ternary_planes(w: &TernaryPlanes, x: &[f32], batch: usize,
+                           y: &mut [f32], scratch: &mut GemmScratch) {
+    assert_eq!(x.len(), batch * w.rows);
+    assert_eq!(y.len(), batch * w.cols);
+    if batch == 0 {
+        return;
+    }
+    let wpc = words_per_col(w.rows);
+    let groups = w.rows.div_ceil(8);
+    let stride = wpc * 8;
+    scratch.resize(batch, w.cols);
+    scratch.acc[..w.cols * batch].fill(0.0);
+    let pos = le_bytes(&w.pos);
+    let neg = le_bytes(&w.neg);
+    for g in 0..groups {
+        gather_tile(x, w.rows, batch, g, &mut scratch.xt);
+        build_subset_sums_batch(&scratch.xt, batch, &mut scratch.tables);
+        let t = &scratch.tables;
+        for c in 0..w.cols {
+            let idx = c * stride + g;
+            let tp = &t[pos[idx] as usize * batch..][..batch];
+            let tn = &t[neg[idx] as usize * batch..][..batch];
+            let a = &mut scratch.acc[c * batch..(c + 1) * batch];
+            for b in 0..batch {
+                a[b] += tp[b] - tn[b];
+            }
+        }
+    }
+    fold_out(&scratch.acc, w.cols, batch, w.alpha, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};
+    use crate::quant::planes::gemv_ternary_planes;
+    use crate::util::Rng;
+
+    fn rand_ternary(rng: &mut Rng, n: usize, alpha: f32) -> Vec<f32> {
+        (0..n).map(|_| [0.0, alpha, -alpha][rng.below_usize(3)]).collect()
+    }
+
+    #[test]
+    fn batched_binary_matches_per_slot_bitwise() {
+        let mut rng = Rng::new(51);
+        for (rows, cols, batch) in [(64, 16, 4), (100, 37, 1), (7, 3, 5),
+                                    (129, 8, 16), (65, 12, 3)] {
+            let alpha = 0.2f32;
+            let w: Vec<f32> = (0..rows * cols)
+                .map(|_| if rng.bernoulli(0.5) { alpha } else { -alpha })
+                .collect();
+            let packed = PackedBinary::pack(&w, rows, cols, alpha);
+            let x: Vec<f32> = (0..batch * rows).map(|_| rng.normal_f32()).collect();
+            let mut y = vec![0.0f32; batch * cols];
+            let mut s = GemmScratch::default();
+            gemm_binary_lut(&packed, &x, batch, &mut y, &mut s);
+            let mut ls = LutScratch::default();
+            for b in 0..batch {
+                let mut yb = vec![0.0f32; cols];
+                gemv_binary_lut(&packed, &x[b * rows..(b + 1) * rows], &mut yb,
+                                &mut ls);
+                for c in 0..cols {
+                    assert_eq!(y[b * cols + c].to_bits(), yb[c].to_bits(),
+                               "({rows},{cols}) b {b} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_ternary_matches_per_slot_bitwise() {
+        let mut rng = Rng::new(53);
+        for (rows, cols, batch) in [(64, 16, 4), (100, 37, 2), (5, 2, 7),
+                                    (513, 24, 8)] {
+            let alpha = 0.15f32;
+            let w = rand_ternary(&mut rng, rows * cols, alpha);
+            let packed = PackedTernary::pack(&w, rows, cols, alpha);
+            let planes = TernaryPlanes::from_packed(&packed);
+            let x: Vec<f32> = (0..batch * rows).map(|_| rng.normal_f32()).collect();
+            let mut y_lut = vec![0.0f32; batch * cols];
+            let mut y_pl = vec![0.0f32; batch * cols];
+            let mut s = GemmScratch::default();
+            gemm_ternary_lut(&packed, &x, batch, &mut y_lut, &mut s);
+            gemm_ternary_planes(&planes, &x, batch, &mut y_pl, &mut s);
+            let mut ls = LutScratch::default();
+            for b in 0..batch {
+                let xb = &x[b * rows..(b + 1) * rows];
+                let mut y1 = vec![0.0f32; cols];
+                gemv_ternary_lut(&packed, xb, &mut y1, &mut ls);
+                let mut y2 = vec![0.0f32; cols];
+                gemv_ternary_planes(&planes, xb, &mut y2, &mut ls);
+                for c in 0..cols {
+                    assert_eq!(y_lut[b * cols + c].to_bits(), y1[c].to_bits(),
+                               "lut ({rows},{cols}) b {b} col {c}");
+                    assert_eq!(y_pl[b * cols + c].to_bits(), y2[c].to_bits(),
+                               "planes ({rows},{cols}) b {b} col {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_batch_is_a_noop() {
+        let w = PackedTernary::pack(&[1.0f32, -1.0, 0.0, 1.0], 4, 1, 1.0);
+        let planes = TernaryPlanes::from_packed(&w);
+        let mut s = GemmScratch::default();
+        let mut y: Vec<f32> = vec![];
+        gemm_ternary_lut(&w, &[], 0, &mut y, &mut s);
+        gemm_ternary_planes(&planes, &[], 0, &mut y, &mut s);
+        let b = PackedBinary::pack(&[1.0f32, -1.0, 1.0, 1.0], 4, 1, 1.0);
+        gemm_binary_lut(&b, &[], 0, &mut y, &mut s);
+    }
+}

@@ -63,7 +63,7 @@ pub fn gemv_binary_lut(w: &PackedBinary, x: &[f32], y: &mut [f32],
         *c = -total; // start from "all bits clear" = -sum(x)
     }
     scratch.table.resize(256, 0.0);
-    let sign_bytes: &[u8] = bytemuck_cast(&w.sign);
+    let sign_bytes: &[u8] = le_bytes(&w.sign);
     for g in 0..groups {
         build_subset_sums(x, g * 8, &mut scratch.table);
         let t = &scratch.table;
@@ -87,8 +87,8 @@ pub fn gemv_ternary_lut(w: &PackedTernary, x: &[f32], y: &mut [f32],
     let groups = w.rows.div_ceil(8);
     y.fill(0.0);
     scratch.table.resize(256, 0.0);
-    let sign_bytes: &[u8] = bytemuck_cast(&w.sign);
-    let mask_bytes: &[u8] = bytemuck_cast(&w.mask);
+    let sign_bytes: &[u8] = le_bytes(&w.sign);
+    let mask_bytes: &[u8] = le_bytes(&w.mask);
     for g in 0..groups {
         build_subset_sums(x, g * 8, &mut scratch.table);
         let t = &scratch.table;
@@ -108,8 +108,9 @@ pub fn gemv_ternary_lut(w: &PackedTernary, x: &[f32], y: &mut [f32],
 
 /// View a u64 slice as little-endian bytes (safe on all supported
 /// targets; this crate only builds for little-endian CPUs, asserted
-/// below).
-fn bytemuck_cast(words: &[u64]) -> &[u8] {
+/// below). Shared by the per-slot LUT kernels here, the plane GEMV in
+/// [`super::planes`], and the batched GEMM kernels in [`super::gemm`].
+pub(crate) fn le_bytes(words: &[u64]) -> &[u8] {
     #[cfg(target_endian = "big")]
     compile_error!("packed-plane byte views assume little-endian");
     unsafe {

@@ -1,8 +1,9 @@
-//! Quantized-weight runtime: bit-plane packing, multiplier-free GEMV
-//! (the CPU realization of the paper's mux-based MAC units), and the
-//! memory-footprint accounting behind every Size column.
+//! Quantized-weight runtime: bit-plane packing, multiplier-free GEMV /
+//! batched GEMM (the CPU realization of the paper's mux-based MAC
+//! units), and the memory-footprint accounting behind every Size column.
 
 pub mod cell;
+pub mod gemm;
 pub mod gemv;
 pub mod gemv_lut;
 pub mod memory;
@@ -10,6 +11,8 @@ pub mod pack;
 pub mod planes;
 
 pub use cell::{Packed, PackedLstmCell};
+pub use gemm::{gemm_binary_lut, gemm_ternary_lut, gemm_ternary_planes,
+               GemmScratch};
 pub use gemv::{gemm_binary, gemm_ternary, gemv_binary, gemv_f32, gemv_ternary};
 pub use gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};
 pub use memory::{bandwidth_saving_vs_12bit, paper_kbytes, paper_mbytes,

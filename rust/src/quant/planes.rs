@@ -1,4 +1,5 @@
-//! Ternary pos/neg plane representation — §Perf iteration 3.
+//! Ternary pos/neg plane representation — §Perf iteration 3, and the
+//! substrate of the batched plane-streaming GEMM.
 //!
 //! `PackedTernary` stores (sign, mask) planes; the LUT GEMV then needs
 //! two byte-ops per group to derive pos = mask&sign and neg = mask&!sign.
@@ -7,8 +8,24 @@
 //! the two bytes consumed — the layout the paper's accelerator would
 //! stream from DRAM anyway (a +1-selector plane and a −1-selector
 //! plane).
+//!
+//! Two kernels consume this layout:
+//! * [`gemv_ternary_planes`] — the per-slot path: one activation vector,
+//!   the full plane pair streamed per call. Lowest latency for a single
+//!   stream; weight traffic scales linearly with concurrent slots.
+//! * [`super::gemm::gemm_ternary_planes`] — the batched path: an
+//!   `(active_slots, in)` activation block, each plane byte read **once
+//!   per step** and fanned out to every slot's accumulator (the paper's
+//!   §6 datapath, where serving throughput is bound by the one weight
+//!   stream, not by slots × weights). Wins from ~2 slots up; at 1 slot
+//!   the per-slot path is marginally faster because the batched kernel
+//!   pays a tile-transpose per 8-row group.
+//!
+//! Both walk bit-identical f32 op sequences per output element, so the
+//! serving backends can switch between them per `BackendSpec` without
+//! changing a single logit bit.
 
-use super::gemv_lut::LutScratch;
+use super::gemv_lut::{le_bytes, LutScratch};
 use super::pack::{words_per_col, PackedTernary};
 
 /// Ternary matrix as two positive/negative selector planes.
@@ -45,14 +62,6 @@ impl TernaryPlanes {
     }
 }
 
-fn plane_bytes(words: &[u64]) -> &[u8] {
-    #[cfg(target_endian = "big")]
-    compile_error!("plane byte views assume little-endian");
-    unsafe {
-        std::slice::from_raw_parts(words.as_ptr() as *const u8, words.len() * 8)
-    }
-}
-
 /// LUT GEMV over precomputed pos/neg planes (no byte-ops in the loop).
 pub fn gemv_ternary_planes(w: &TernaryPlanes, x: &[f32], y: &mut [f32],
                            scratch: &mut LutScratch) {
@@ -62,8 +71,8 @@ pub fn gemv_ternary_planes(w: &TernaryPlanes, x: &[f32], y: &mut [f32],
     let groups = w.rows.div_ceil(8);
     y.fill(0.0);
     scratch.table.resize(256, 0.0);
-    let pos = plane_bytes(&w.pos);
-    let neg = plane_bytes(&w.neg);
+    let pos = le_bytes(&w.pos);
+    let neg = le_bytes(&w.neg);
     for g in 0..groups {
         super::gemv_lut::build_subset_sums(x, g * 8, &mut scratch.table);
         let t = &scratch.table;

@@ -11,6 +11,9 @@
 //!   present (skipped gracefully otherwise): statistically close —
 //!   PjrtDense re-samples stochastic deployment weights every step, so
 //!   only a loose distributional bound holds.
+//! * seed-matrix suite: packed-cpu/packed-planes × per-slot/batched
+//!   GEMM, all bit-for-bit, with an FNV digest per seed that `ci.sh`
+//!   compares across two runs to catch nondeterminism.
 
 use std::path::PathBuf;
 
@@ -70,10 +73,10 @@ fn packed_cpu_and_planes_agree_bit_for_bit() {
     for quantizer in ["bin", "ter"] {
         let w = ModelWeights::synthetic(40, 24, quantizer, 0xE0);
         let sched = schedule(4, 25, 40, 1);
-        let mut cpu =
-            engine::from_weights(BackendKind::PackedCpu, &w, 4, 7).unwrap();
-        let mut planes =
-            engine::from_weights(BackendKind::PackedPlanes, &w, 4, 7).unwrap();
+        let mut cpu = engine::from_weights(
+            &w, &BackendSpec::with(BackendKind::PackedCpu, 4, 7)).unwrap();
+        let mut planes = engine::from_weights(
+            &w, &BackendSpec::with(BackendKind::PackedPlanes, 4, 7)).unwrap();
         let a = drive(&mut *cpu, &sched);
         let b = drive(&mut *planes, &sched);
         assert_eq!(a.len(), b.len());
@@ -81,6 +84,66 @@ fn packed_cpu_and_planes_agree_bit_for_bit() {
             assert_eq!(x.to_bits(), y.to_bits(),
                        "[{quantizer}] logit {i}: {x} vs {y}");
         }
+    }
+}
+
+/// The full cross-backend × cross-path equivalence matrix for one seed:
+/// packed-cpu / packed-planes, each stepped per-slot and batched, over
+/// a mixed active/idle schedule — all four logit streams must agree bit
+/// for bit. Returns an FNV-1a digest of the (single, shared) stream so
+/// repeated runs can be compared for nondeterminism.
+fn equivalence_digest(seed: u64) -> u64 {
+    let vocab = 30 + (seed as usize % 7);
+    let hidden = 17 + (seed as usize % 5); // never a multiple of 64
+    let quantizer = if seed % 2 == 0 { "ter" } else { "bin" };
+    let w = ModelWeights::synthetic(vocab, hidden, quantizer, seed);
+    let sched = schedule(5, 20, vocab, seed ^ 0x9E37);
+    let mut streams = vec![];
+    for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+        for batched in [false, true] {
+            let mut spec = BackendSpec::with(kind, 5, seed ^ 3);
+            spec.batch_gemm = batched;
+            let mut b = engine::from_weights(&w, &spec).unwrap();
+            streams.push(drive(&mut *b, &sched));
+        }
+    }
+    let first = &streams[0];
+    for (si, s) in streams.iter().enumerate().skip(1) {
+        assert_eq!(s.len(), first.len(), "seed {seed} config {si}");
+        for (i, (x, y)) in first.iter().zip(s).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "seed {seed} config {si} logit {i}: {x} vs {y}");
+        }
+    }
+    let mut hash = 0xcbf29ce484222325u64;
+    for v in first {
+        for byte in v.to_bits().to_le_bytes() {
+            hash ^= byte as u64;
+            hash = hash.wrapping_mul(0x100000001b3);
+        }
+    }
+    hash
+}
+
+/// Seed-matrix equivalence + determinism hook. `ci.sh` runs this test
+/// twice with `RBTW_EQUIV_DIGEST` pointing at two files and diffs them:
+/// any run-to-run nondeterminism in the packed serving paths changes
+/// the digest and fails CI.
+#[test]
+fn seed_matrix_equivalence_is_deterministic() {
+    let seeds: [u64; 4] = [0xA1, 0xB2, 0xC3, 0xD4];
+    let digests: Vec<u64> = seeds.iter().map(|&s| equivalence_digest(s)).collect();
+    // within-process determinism: the same seed must reproduce exactly
+    assert_eq!(equivalence_digest(seeds[0]), digests[0],
+               "same-seed replay diverged within one process");
+    if let Ok(path) = std::env::var("RBTW_EQUIV_DIGEST") {
+        let lines: Vec<String> = seeds
+            .iter()
+            .zip(&digests)
+            .map(|(s, d)| format!("{s:#x}:{d:016x}"))
+            .collect();
+        std::fs::write(&path, lines.join("\n") + "\n")
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
     }
 }
 
@@ -166,7 +229,8 @@ impl DenseRef {
 fn packed_backend_matches_dense_reference() {
     for quantizer in ["bin", "ter"] {
         let w = ModelWeights::synthetic(30, 20, quantizer, 0xD1);
-        let backend = PackedBackend::from_weights(&w, 1, 9, false).unwrap();
+        let backend = PackedBackend::from_weights(
+            &w, &BackendSpec::with(BackendKind::PackedCpu, 1, 9)).unwrap();
         let mut dense = DenseRef::from_backend(&backend, &w);
         let mut backend = backend;
         backend.reset_slot(0).unwrap();
@@ -195,8 +259,7 @@ fn pjrt_dense_agrees_when_available() {
         eprintln!("skipping: artifact {artifact} not built");
         return;
     }
-    let spec = BackendSpec { kind: BackendKind::PjrtDense, slots: 16,
-                             sample_seed: 3 };
+    let spec = BackendSpec::with(BackendKind::PjrtDense, 16, 3);
     let pjrt_engine = match rbtw::runtime::Engine::cpu() {
         Ok(e) => e,
         Err(e) => {
@@ -238,7 +301,8 @@ fn pjrt_dense_agrees_when_available() {
     }
     // same weights on the packed backend
     let w = ModelWeights::from_artifact(&artifacts_dir(), artifact).unwrap();
-    let mut packed = engine::from_weights(BackendKind::PackedCpu, &w, 1, 3).unwrap();
+    let mut packed = engine::from_weights(
+        &w, &BackendSpec::with(BackendKind::PackedCpu, 1, 3)).unwrap();
     packed.reset_slot(0).unwrap();
     let mut plogits = vec![0.0f32; vocab];
     packed.step_batch(&[Some(1)], &mut plogits).unwrap();

@@ -1,0 +1,97 @@
+//! `InferBackend` error-path contract: malformed serving inputs must
+//! come back as `Err`, never a panic, and must not corrupt slot state —
+//! on every packed backend layout and both stepping paths. (PjrtDense
+//! enforces the same contract but needs a compiled artifact to even
+//! construct; its checks live in the shared `ensure!` guards exercised
+//! here through the packed backends.)
+
+use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
+
+const VOCAB: usize = 21;
+const HIDDEN: usize = 12;
+const SLOTS: usize = 3;
+
+fn backends() -> Vec<Box<dyn InferBackend>> {
+    let w = ModelWeights::synthetic(VOCAB, HIDDEN, "ter", 0xE44);
+    let mut out: Vec<Box<dyn InferBackend>> = vec![];
+    for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+        for batched in [false, true] {
+            let mut spec = BackendSpec::with(kind, SLOTS, 5);
+            spec.batch_gemm = batched;
+            out.push(engine::from_weights(&w, &spec).unwrap());
+        }
+    }
+    out
+}
+
+#[test]
+fn step_batch_rejects_wrong_token_count() {
+    for mut b in backends() {
+        let mut logits = vec![0.0f32; SLOTS * VOCAB];
+        assert!(b.step_batch(&[], &mut logits).is_err(), "{}", b.kind());
+        assert!(b.step_batch(&[Some(1)], &mut logits).is_err());
+        assert!(b
+            .step_batch(&[Some(1), None, None, Some(2)], &mut logits)
+            .is_err());
+    }
+}
+
+#[test]
+fn step_batch_rejects_out_of_range_tokens() {
+    for mut b in backends() {
+        let mut logits = vec![0.0f32; SLOTS * VOCAB];
+        for bad in [VOCAB as i32, i32::MAX, -1, i32::MIN] {
+            assert!(
+                b.step_batch(&[Some(bad), None, None], &mut logits).is_err(),
+                "{} token {bad} must be rejected", b.kind()
+            );
+        }
+    }
+}
+
+#[test]
+fn step_batch_rejects_wrong_logits_size() {
+    for mut b in backends() {
+        let mut small = vec![0.0f32; SLOTS * VOCAB - 1];
+        assert!(b.step_batch(&[Some(1), None, None], &mut small).is_err());
+        let mut big = vec![0.0f32; SLOTS * VOCAB + 1];
+        assert!(b.step_batch(&[Some(1), None, None], &mut big).is_err());
+    }
+}
+
+#[test]
+fn reset_slot_rejects_out_of_range() {
+    for mut b in backends() {
+        assert!(b.reset_slot(SLOTS).is_err(), "{}", b.kind());
+        assert!(b.reset_slot(usize::MAX).is_err());
+        for s in 0..SLOTS {
+            assert!(b.reset_slot(s).is_ok());
+        }
+    }
+}
+
+#[test]
+fn failed_step_leaves_state_untouched() {
+    // a bad token anywhere in the batch must fail BEFORE any slot is
+    // advanced: afterwards, a valid step must produce exactly what a
+    // fresh backend produces.
+    for (mut poked, mut fresh) in backends().into_iter().zip(backends()) {
+        for s in 0..SLOTS {
+            poked.reset_slot(s).unwrap();
+            fresh.reset_slot(s).unwrap();
+        }
+        let mut logits = vec![0.0f32; SLOTS * VOCAB];
+        // slot 0 valid, slot 2 out of range: nothing may advance
+        assert!(poked
+            .step_batch(&[Some(1), None, Some(VOCAB as i32)], &mut logits)
+            .is_err());
+        let mut a = vec![0.0f32; SLOTS * VOCAB];
+        let mut b = vec![0.0f32; SLOTS * VOCAB];
+        poked.step_batch(&[Some(1), None, Some(2)], &mut a).unwrap();
+        fresh.step_batch(&[Some(1), None, Some(2)], &mut b).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(),
+                       "{} state advanced on a failed step", poked.kind());
+        }
+    }
+}

@@ -6,9 +6,16 @@
 //! * ternary density equals the fraction of non-zeros
 //! * the one-hot fast path `Packed::add_row(r, y)` equals a GEMV against
 //!   the one-hot basis vector e_r, for every packing layout
+//! * the batched plane-streaming GEMM (`Packed::gemm`) equals the
+//!   per-slot GEMV **bit for bit** across binary/ternary/planes
+//!   packings, arbitrary batch widths, and non-word-aligned dims
+//! * the packed serving backend's batched step equals the per-slot step
+//!   bit for bit under random slot-activity masks (incl. all-idle and
+//!   single-slot batches)
 
-use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, LutScratch, Packed,
-                  PackedBinary, PackedTernary};
+use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
+use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, GemmScratch,
+                  LutScratch, Packed, PackedBinary, PackedTernary};
 use rbtw::util::prop::{self, assert_that};
 
 #[test]
@@ -142,6 +149,104 @@ fn prop_add_row_equals_gemv_of_basis_vector() {
                     y_row[c].to_bits() == y_gemv[c].to_bits(),
                     format!("packing {pi} col {c}: add_row {} gemv {}",
                             y_row[c], y_gemv[c]),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batched_gemm_equals_per_slot_gemv() {
+    // The tentpole invariant: streaming each packed weight word once for
+    // a whole (batch, rows) activation block must reproduce the per-slot
+    // GEMV bit for bit — per packing layout, for any batch width
+    // (including 1) and non-multiple-of-64/8 dimensions.
+    prop::check("batched gemm == per-slot gemv", 120, |g| {
+        let rows = g.usize_in(1, 170);
+        let cols = g.usize_in(1, 28);
+        let batch = g.usize_in(1, 7);
+        let alpha = g.f32_in(0.05, 1.0);
+        let layout = g.usize_in(0, 2); // 0=binary, 1=ternary, 2=planes
+        let data: Vec<f32> = if layout == 0 {
+            g.binary_vec(rows * cols).iter().map(|x| x * alpha).collect()
+        } else {
+            g.ternary_vec(rows * cols).iter().map(|x| x * alpha).collect()
+        };
+        let packed = match layout {
+            0 => Packed::Binary(PackedBinary::pack(&data, rows, cols, alpha)),
+            1 => Packed::Ternary(PackedTernary::pack(&data, rows, cols, alpha)),
+            _ => Packed::Ternary(PackedTernary::pack(&data, rows, cols, alpha))
+                .to_planes(),
+        };
+        let x = g.f32_vec(batch * rows, -2.0, 2.0);
+        let mut y = vec![0.0f32; batch * cols];
+        let mut gs = GemmScratch::default();
+        packed.gemm(&x, batch, &mut y, &mut gs);
+        let mut ls = LutScratch::default();
+        for b in 0..batch {
+            let mut yb = vec![0.0f32; cols];
+            packed.gemv(&x[b * rows..(b + 1) * rows], &mut yb, &mut ls);
+            for c in 0..cols {
+                assert_that(
+                    y[b * cols + c].to_bits() == yb[c].to_bits(),
+                    format!("layout {layout} ({rows},{cols}) batch row {b} \
+                             col {c}: gemm {} gemv {}", y[b * cols + c], yb[c]),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_backend_batched_step_equals_per_slot_under_masks() {
+    // End-to-end over the serving backend: random slot-activity masks
+    // (holes, all-idle steps, single-slot backends) must give identical
+    // logits on the batched-GEMM and per-slot-GEMV paths — bit for bit,
+    // including untouched idle rows.
+    prop::check("backend batched == per-slot", 25, |g| {
+        let vocab = g.usize_in(6, 26);
+        let hidden = g.usize_in(3, 18); // keeps rows non-word-aligned
+        let slots = g.usize_in(1, 6);
+        let steps = g.usize_in(2, 10);
+        let quantizer = if g.bool() { "ter" } else { "bin" };
+        let kind = if g.bool() { BackendKind::PackedPlanes }
+                   else { BackendKind::PackedCpu };
+        let seed = 0x700 + g.case as u64;
+        let w = ModelWeights::synthetic(vocab, hidden, quantizer, seed);
+        let spec = BackendSpec::with(kind, slots, seed ^ 1);
+        let mut batched = engine::from_weights(&w, &spec)
+            .map_err(|e| format!("build batched: {e:#}"))?;
+        let mut per_slot = engine::from_weights(&w, &spec.per_slot())
+            .map_err(|e| format!("build per-slot: {e:#}"))?;
+        for s in 0..slots {
+            batched.reset_slot(s).map_err(|e| e.to_string())?;
+            per_slot.reset_slot(s).map_err(|e| e.to_string())?;
+        }
+        for step in 0..steps {
+            let tokens: Vec<Option<i32>> = (0..slots)
+                .map(|_| {
+                    // step 1 is forced all-idle to cover the empty batch
+                    if step == 1 || g.bool() {
+                        None
+                    } else {
+                        Some(g.usize_in(0, vocab - 1) as i32)
+                    }
+                })
+                .collect();
+            let mut la = vec![0.0f32; slots * vocab];
+            let mut lb = vec![0.0f32; slots * vocab];
+            batched.step_batch(&tokens, &mut la)
+                .map_err(|e| format!("batched step: {e:#}"))?;
+            per_slot.step_batch(&tokens, &mut lb)
+                .map_err(|e| format!("per-slot step: {e:#}"))?;
+            for (i, (x, y)) in la.iter().zip(&lb).enumerate() {
+                assert_that(
+                    x.to_bits() == y.to_bits(),
+                    format!("{} {quantizer} slots {slots} step {step} \
+                             logit {i}: batched {x} per-slot {y}",
+                            kind.label()),
                 )?;
             }
         }

@@ -1,10 +1,14 @@
-//! Continuous-batching server over a real artifact: every request
-//! completes exactly once, slots refill, backpressure engages, scoring
-//! is deterministic for fixed seeds.
+//! Continuous-batching server: every request completes exactly once,
+//! slots refill, backpressure engages, scoring is deterministic for
+//! fixed seeds — over a real artifact when built, and over the packed
+//! backends (no artifact needed) for the slot-churn equivalence suite:
+//! requests joining/leaving slots mid-decode on the batched-GEMM path
+//! must see exactly the logits a fresh single-slot run sees.
 
 use std::path::PathBuf;
 
 use rbtw::coordinator::{InferenceServer, Request};
+use rbtw::engine::{self, BackendKind, BackendSpec, ModelWeights};
 use rbtw::runtime::Engine;
 use rbtw::util::Rng;
 
@@ -105,6 +109,69 @@ fn backpressure_rejects_when_queue_full() {
     server.pump(10_000).unwrap();
     let retry = Request { id: 100, prompt: vec![1], gen_len: 1, temperature: 0.0 };
     assert!(server.submit(retry).is_ok());
+}
+
+/// Slot churn on the batched path: a 4-slot server fed requests with
+/// staggered prompt/generation lengths (so slots free and refill
+/// mid-decode, and the active-slot set changes shape every few steps)
+/// must produce, for every request, exactly the greedy continuation and
+/// prompt log-prob that the same request gets alone on a fresh
+/// single-slot per-slot-GEMV server. Greedy decoding and the scoring
+/// log-prob are pure functions of the logits, so equality here means
+/// the batched gather/GEMM/scatter never leaked state across slots or
+/// perturbed a logit bit while the batch composition churned.
+#[test]
+fn churn_on_batched_path_matches_fresh_single_slot_runs() {
+    let vocab = 24;
+    let weights = ModelWeights::synthetic(vocab, 16, "ter", 0xC5A);
+    let mk_requests = || -> Vec<Request> {
+        let mut rng = Rng::new(71);
+        (0..14u64)
+            .map(|id| Request {
+                id,
+                // uneven lengths force constant join/leave churn
+                prompt: (0..1 + (id as usize % 4))
+                    .map(|_| rng.below(vocab as u64) as i32)
+                    .collect(),
+                gen_len: 1 + (id as usize * 3) % 7,
+                temperature: 0.0, // greedy: rng-free, logit-determined
+            })
+            .collect()
+    };
+    for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+        let backend =
+            engine::from_weights(&weights, &BackendSpec::with(kind, 4, 9))
+                .unwrap();
+        let mut server = InferenceServer::with_backend(backend, 64);
+        for r in mk_requests() {
+            server.submit(r).unwrap();
+        }
+        let mut churned = server.pump(10_000).unwrap();
+        churned.sort_by_key(|r| r.id);
+        assert_eq!(churned.len(), 14);
+        assert_eq!(server.stats.peak_active_slots, 4,
+                   "churn test must actually batch");
+
+        for (req, got) in mk_requests().into_iter().zip(&churned) {
+            // reference: the request alone, single slot, per-slot GEMV
+            let spec = BackendSpec::with(kind, 1, 9).per_slot();
+            let backend = engine::from_weights(&weights, &spec).unwrap();
+            let mut solo = InferenceServer::with_backend(backend, 4);
+            let want_gen = req.gen_len;
+            solo.submit(req).unwrap();
+            let want = solo.pump(10_000).unwrap();
+            assert_eq!(want.len(), 1);
+            assert_eq!(got.id, want[0].id);
+            assert_eq!(got.generated, want[0].generated,
+                       "[{}] req {} greedy tokens diverged under churn",
+                       kind.label(), got.id);
+            assert_eq!(got.generated.len(), want_gen);
+            assert_eq!(got.prompt_logprob.to_bits(),
+                       want[0].prompt_logprob.to_bits(),
+                       "[{}] req {} prompt log-prob diverged under churn",
+                       kind.label(), got.id);
+        }
+    }
 }
 
 #[test]
