@@ -12,16 +12,19 @@ cargo build --release
 # seed_matrix test in engine_equivalence drives packed-cpu/packed-planes
 # x per-slot/batched over ≥3 seeds, asserts bit-for-bit logits, and
 # writes a digest of the logit stream when RBTW_EQUIV_DIGEST is set.
-echo "== cargo test -q =="
+# RBTW_THREADS=1 pins the batched configs to the fully inline path.
+echo "== cargo test -q (equivalence run 1: threads=1) =="
 mkdir -p target
 rm -f target/equiv_digest_a.txt target/equiv_digest_b.txt
-RBTW_EQUIV_DIGEST=target/equiv_digest_a.txt cargo test -q
+RBTW_EQUIV_DIGEST=target/equiv_digest_a.txt RBTW_THREADS=1 cargo test -q
 
-# Second equivalence run: re-drive the seed matrix and fail on any
-# run-to-run drift — nondeterminism in a serving path is a bug even
-# when each run is internally consistent.
-echo "== cross-backend equivalence (seed matrix, run 2, determinism) =="
-RBTW_EQUIV_DIGEST=target/equiv_digest_b.txt \
+# Second equivalence run re-drives the seed matrix with the batched
+# configs sharded across 4 worker threads. One cmp then catches BOTH
+# failure modes: run-to-run nondeterminism AND any thread-count leak
+# into the logits — either is a serving bug even when each run is
+# internally consistent.
+echo "== cross-backend equivalence (run 2: threads=4, determinism + thread invariance) =="
+RBTW_EQUIV_DIGEST=target/equiv_digest_b.txt RBTW_THREADS=4 \
     cargo test -q --test engine_equivalence
 for f in target/equiv_digest_a.txt target/equiv_digest_b.txt; do
     if [ ! -s "$f" ]; then
@@ -30,11 +33,12 @@ for f in target/equiv_digest_a.txt target/equiv_digest_b.txt; do
     fi
 done
 if ! cmp -s target/equiv_digest_a.txt target/equiv_digest_b.txt; then
-    echo "FAIL: equivalence digests differ between runs (nondeterminism):"
+    echo "FAIL: equivalence digests differ between threads=1 and threads=4 runs"
+    echo "      (nondeterminism or thread-count-dependent logits):"
     diff target/equiv_digest_a.txt target/equiv_digest_b.txt || true
     exit 1
 fi
-echo "equivalence digests stable across runs:"
+echo "equivalence digests stable across runs and thread counts (1 vs 4):"
 cat target/equiv_digest_a.txt
 
 # The seed code predates rustfmt; keep the check advisory unless

@@ -3,12 +3,14 @@
 //! binary/ternary CPU engines — through one `InferBackend` interface.
 //!
 //!   cargo run --release --example serve_lm [-- --backend pjrt|packed|planes|all]
-//!       [--requests N] [--artifact NAME] [--per-slot]
+//!       [--requests N] [--artifact NAME] [--per-slot] [--threads N]
 //!
 //! `--per-slot` steps the packed backends through the per-slot GEMV
-//! reference path instead of the default batched plane-streaming GEMM
-//! (one weight stream per step for all active slots); logits are
-//! bit-identical either way, only tokens/sec changes.
+//! reference path instead of the default batched SIMD-tiled GEMM (one
+//! weight stream per step for all active slots); `--threads N` pins the
+//! batched path's worker-pool size (0 = one per core, the default).
+//! Logits are bit-identical for every path and thread count, only
+//! tokens/sec changes.
 //!
 //! With artifacts built (`make artifacts`) the chosen artifact's init
 //! weights are served; without them a synthetic ternary BN-LSTM stands
@@ -37,6 +39,11 @@ fn main() -> anyhow::Result<()> {
     let artifact = flag(&args, "--artifact").unwrap_or("char_ptb_ter".into());
     let backend_arg = flag(&args, "--backend").unwrap_or("all".into());
     let per_slot = args.iter().any(|a| a == "--per-slot");
+    let threads: usize = match flag(&args, "--threads") {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!(
+            "--threads takes a non-negative integer (0 = auto), got '{s}'"))?,
+        None => 0,
+    };
     let kinds: Vec<BackendKind> = if backend_arg == "all" {
         BackendKind::all().to_vec()
     } else {
@@ -51,10 +58,10 @@ fn main() -> anyhow::Result<()> {
                   stand-in model {})\n", synthetic.name);
     }
 
-    let mut t = Table::new(&["backend", "gemm", "req", "tok/s", "p50 ms",
-                             "p99 ms", "peak batch", "weights B"]);
+    let mut t = Table::new(&["backend", "gemm", "thr", "req", "tok/s",
+                             "p50 ms", "p99 ms", "peak batch", "weights B"]);
     for kind in kinds {
-        let mut spec = BackendSpec::with(kind, 16, 3);
+        let mut spec = BackendSpec::with(kind, 16, 3).with_threads(threads);
         if per_slot {
             spec = spec.per_slot();
         }
@@ -93,9 +100,15 @@ fn main() -> anyhow::Result<()> {
         } else {
             "batched"
         };
+        let thr_label = if kind == BackendKind::PjrtDense || per_slot {
+            "-".to_string()
+        } else {
+            spec.threads_resolved().to_string()
+        };
         t.row(&[
             kind.label().into(),
             gemm_label.into(),
+            thr_label,
             responses.len().to_string(),
             format!("{:.0}", stats.tokens_processed as f64 / wall),
             format!("{:.1}", ps[0]),

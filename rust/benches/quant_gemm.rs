@@ -1,0 +1,139 @@
+//! Kernel microbench for the SIMD-tiled batch-blocked GEMM: each packed
+//! layout (binary LUT, ternary LUT, ternary pos/neg planes) timed
+//! against the per-slot LUT-GEMV loop it replaces, across batch widths
+//! that straddle the 8-lane tile (1, 7, 8, 9, 64). Writes
+//! `BENCH_gemm_kernels.json` so the kernel-level numbers are tracked
+//! independently of the end-to-end serving bench.
+//!
+//! The interesting columns: at batch 1 the tiled kernel must hold the
+//! per-slot GEMV's pace (one mostly-dead tile, same instruction count
+//! per column); from ~8 slots up it pulls away because each packed
+//! plane byte is streamed once per tile instead of once per slot.
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use rbtw::quant::{gemm_binary_lut, gemm_ternary_lut, gemm_ternary_planes,
+                  gemv_binary_lut, gemv_ternary_lut, gemv_ternary_planes,
+                  GemmScratch, LutScratch, PackedBinary, PackedTernary,
+                  TernaryPlanes};
+use rbtw::util::bench::{bench, black_box};
+use rbtw::util::table::Table;
+use rbtw::util::{Json, Rng};
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect::<BTreeMap<_, _>>())
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("quant GEMM kernels: SIMD-tiled batched vs per-slot GEMV");
+    let mut rng = Rng::new(0x6E44);
+    let hidden = 512usize; // wh-shaped: (hidden, 4*hidden)
+    let (rows, cols) = (hidden, 4 * hidden);
+    let alpha = 0.1f32;
+    let tern_dense: Vec<f32> = (0..rows * cols)
+        .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+        .collect();
+    let bin_dense: Vec<f32> = tern_dense
+        .iter()
+        .map(|&v| if v >= 0.0 { alpha } else { -alpha })
+        .collect();
+    let tern = PackedTernary::pack(&tern_dense, rows, cols, alpha);
+    let planes = TernaryPlanes::from_packed(&tern);
+    let bin = PackedBinary::pack(&bin_dense, rows, cols, alpha);
+
+    let mut t = Table::new(&["kernel", "batch", "ns/call", "ns/row",
+                             "vs per-slot"]);
+    let mut json_rows = vec![];
+    for batch in [1usize, 7, 8, 9, 64] {
+        let x: Vec<f32> = (0..batch * rows).map(|_| rng.normal_f32()).collect();
+        let mut y = vec![0.0f32; batch * cols];
+        let mut gs = GemmScratch::default();
+        let mut ls = LutScratch::default();
+
+        // (label, per-slot reference ns, tiled ns) per layout
+        let mut record = |label: &str, per_slot_ns: f64, tiled_ns: f64,
+                          t: &mut Table, json_rows: &mut Vec<Json>| {
+            let speedup = per_slot_ns / tiled_ns.max(1e-9);
+            t.row(&[
+                label.into(),
+                batch.to_string(),
+                format!("{tiled_ns:.0}"),
+                format!("{:.0}", tiled_ns / batch as f64),
+                format!("{speedup:.2}x"),
+            ]);
+            json_rows.push(obj(vec![
+                ("kernel", Json::Str(label.to_string())),
+                ("rows", Json::Num(rows as f64)),
+                ("cols", Json::Num(cols as f64)),
+                ("batch", Json::Num(batch as f64)),
+                ("ns_per_call", Json::Num(tiled_ns)),
+                ("ns_per_row", Json::Num(tiled_ns / batch as f64)),
+                ("per_slot_ns_per_call", Json::Num(per_slot_ns)),
+                ("speedup_vs_per_slot", Json::Num(speedup)),
+            ]));
+        };
+
+        let m = bench(&format!("per-slot ternary LUT GEMV x{batch}"), || {
+            for b in 0..batch {
+                let (y_row, x_row) = (&mut y[b * cols..(b + 1) * cols],
+                                      &x[b * rows..(b + 1) * rows]);
+                gemv_ternary_lut(black_box(&tern), black_box(x_row), y_row,
+                                 &mut ls);
+            }
+        });
+        let ref_tern = m.median_ns;
+        let m = bench(&format!("tiled ternary LUT GEMM x{batch}"), || {
+            gemm_ternary_lut(black_box(&tern), black_box(&x), batch, &mut y,
+                             &mut gs);
+        });
+        record("ternary-lut", ref_tern, m.median_ns, &mut t, &mut json_rows);
+
+        let m = bench(&format!("per-slot plane GEMV x{batch}"), || {
+            for b in 0..batch {
+                let (y_row, x_row) = (&mut y[b * cols..(b + 1) * cols],
+                                      &x[b * rows..(b + 1) * rows]);
+                gemv_ternary_planes(black_box(&planes), black_box(x_row),
+                                    y_row, &mut ls);
+            }
+        });
+        let ref_pl = m.median_ns;
+        let m = bench(&format!("tiled plane GEMM x{batch}"), || {
+            gemm_ternary_planes(black_box(&planes), black_box(&x), batch,
+                                &mut y, &mut gs);
+        });
+        record("ternary-planes", ref_pl, m.median_ns, &mut t, &mut json_rows);
+
+        let m = bench(&format!("per-slot binary LUT GEMV x{batch}"), || {
+            for b in 0..batch {
+                let (y_row, x_row) = (&mut y[b * cols..(b + 1) * cols],
+                                      &x[b * rows..(b + 1) * rows]);
+                gemv_binary_lut(black_box(&bin), black_box(x_row), y_row,
+                                &mut ls);
+            }
+        });
+        let ref_bin = m.median_ns;
+        let m = bench(&format!("tiled binary LUT GEMM x{batch}"), || {
+            gemm_binary_lut(black_box(&bin), black_box(&x), batch, &mut y,
+                            &mut gs);
+        });
+        record("binary-lut", ref_bin, m.median_ns, &mut t, &mut json_rows);
+    }
+    t.print();
+    println!("(per-slot column re-streams the packed planes once per batch \
+              row; the tiled column streams them once per 8-lane tile)");
+
+    let report = obj(vec![
+        ("bench", Json::Str("quant_gemm".into())),
+        ("rows", Json::Num(rows as f64)),
+        ("cols", Json::Num(cols as f64)),
+        ("kernels", Json::Arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_gemm_kernels.json", format!("{report}\n"))?;
+    println!("\nwrote BENCH_gemm_kernels.json");
+    Ok(())
+}

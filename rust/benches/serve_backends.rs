@@ -1,9 +1,10 @@
 //! Serving bench: every engine backend under the same continuous-
-//! batching load, plus a decode-slot sweep of the two packed stepping
-//! paths — per-slot GEMV (weight stream per slot) vs batched
-//! plane-streaming GEMM (one weight stream per step for all slots).
-//! Reports tokens/sec and resident weight bytes and writes a
-//! `BENCH_serve_backends.json` row for tracking.
+//! batching load, plus a decode-slot × worker-thread sweep of the two
+//! packed stepping paths — per-slot GEMV (weight stream per slot) vs
+//! the SIMD-tiled batched GEMM (one weight stream per step for all
+//! slots) sharded across threads {1, 2, 4, max}. Reports tokens/sec and
+//! resident weight bytes and writes a `BENCH_serve_backends.json` row
+//! for tracking.
 //!
 //! Uses the `char_ptb_ter` artifact when built, otherwise a synthetic
 //! ternary BN-LSTM stand-in (the packed backends need no artifacts). The
@@ -85,70 +86,94 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // --- decode-slot sweep: per-slot GEMV vs batched GEMM -------------
+    // --- decode-slot × thread sweep: per-slot GEMV vs tiled GEMM ------
     // A wider recurrent matrix (h=768 → wh is 768x3072) puts the bench
     // in the weight-stream-bound regime; at small hidden widths both
-    // paths are tail-bound and the sweep says nothing.
-    println!("\n== slot sweep: per-slot GEMV vs batched plane-streaming \
-              GEMM (synthetic ternary, h=768) ==");
+    // paths are tail-bound and the sweep says nothing. The per-slot
+    // reference is measured once per (backend, slots) — it has no
+    // thread pool; the tiled batched path is swept over worker threads
+    // {1, 2, 4, max-core} (deduped), each shard streaming its own
+    // column range of the packed planes.
+    println!("\n== slot x thread sweep: per-slot GEMV vs SIMD-tiled \
+              batched GEMM (synthetic ternary, h=768) ==");
     let sweep_model = ModelWeights::synthetic(50, 768, "ter", 0xBE5);
-    let mut ts = Table::new(&["backend", "slots", "per-slot tok/s",
-                              "batched tok/s", "speedup"]);
+    let mut thread_counts = vec![1usize, 2, 4, rbtw::engine::ThreadPool::available()];
+    thread_counts.sort_unstable();
+    thread_counts.dedup();
+    let mut ts = Table::new(&["backend", "slots", "threads", "per-slot tok/s",
+                              "batched tok/s", "vs per-slot", "vs 1-thread"]);
     let mut sweep = vec![];
     for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
         for slots in [1usize, 4, 16, 64] {
             let reqs = common::scaled(4 * slots).max(slots);
             let load = LoadSpec { n_requests: reqs, prompt_len: 4, gen_len: 12,
                                   temperature: 0.7, seed: 31 };
-            let mut tok_s = [0.0f64; 2]; // [per-slot, batched]
-            let mut ok = true;
-            for (pi, batched) in [(0usize, false), (1usize, true)] {
-                let mut spec = BackendSpec::with(kind, slots, 3);
-                spec.batch_gemm = batched;
-                let backend = match engine::from_weights(&sweep_model, &spec) {
+            let run_spec = |spec: &BackendSpec| -> Option<f64> {
+                let backend = match engine::from_weights(&sweep_model, spec) {
                     Ok(b) => b,
                     Err(e) => {
-                        eprintln!("  [{} x{slots}] skipped: {e:#}", kind.label());
-                        ok = false;
-                        break;
+                        eprintln!("  [{} x{slots}] skipped: {e:#}",
+                                  kind.label());
+                        return None;
                     }
                 };
                 match run_load(backend, &load) {
                     Ok((_, stats, wall)) => {
-                        tok_s[pi] = stats.tokens_processed as f64 / wall;
+                        Some(stats.tokens_processed as f64 / wall)
                     }
                     Err(e) => {
-                        eprintln!("  [{} x{slots}] failed: {e:#}", kind.label());
-                        ok = false;
-                        break;
+                        eprintln!("  [{} x{slots}] failed: {e:#}",
+                                  kind.label());
+                        None
                     }
                 }
+            };
+            let per_slot_spec =
+                BackendSpec::with(kind, slots, 3).per_slot().with_threads(1);
+            let Some(per_slot_tps) = run_spec(&per_slot_spec) else { continue };
+            // None until the threads=1 leg has actually been measured —
+            // a failed 1-thread run must yield "-", not a garbage ratio
+            let mut t1_tps: Option<f64> = None;
+            for &threads in &thread_counts {
+                let spec = BackendSpec::with(kind, slots, 3)
+                    .with_threads(threads);
+                let Some(tps) = run_spec(&spec) else { continue };
+                if threads == 1 {
+                    t1_tps = Some(tps);
+                }
+                let vs_per_slot = tps / per_slot_tps.max(1e-9);
+                let vs_t1 = t1_tps.map(|t1| tps / t1.max(1e-9));
+                ts.row(&[
+                    kind.label().into(),
+                    slots.to_string(),
+                    threads.to_string(),
+                    format!("{per_slot_tps:.0}"),
+                    format!("{tps:.0}"),
+                    format!("{vs_per_slot:.2}x"),
+                    vs_t1.map(|v| format!("{v:.2}x"))
+                        .unwrap_or_else(|| "-".into()),
+                ]);
+                let mut fields = vec![
+                    ("backend", Json::Str(kind.label().to_string())),
+                    ("slots", Json::Num(slots as f64)),
+                    ("threads", Json::Num(threads as f64)),
+                    ("requests", Json::Num(reqs as f64)),
+                    ("per_slot_tokens_per_sec", Json::Num(per_slot_tps)),
+                    ("batched_tokens_per_sec", Json::Num(tps)),
+                    ("batched_speedup", Json::Num(vs_per_slot)),
+                ];
+                if let Some(v) = vs_t1 {
+                    fields.push(("speedup_vs_one_thread", Json::Num(v)));
+                }
+                sweep.push(obj(fields));
             }
-            if !ok {
-                continue;
-            }
-            let speedup = tok_s[1] / tok_s[0].max(1e-9);
-            ts.row(&[
-                kind.label().into(),
-                slots.to_string(),
-                format!("{:.0}", tok_s[0]),
-                format!("{:.0}", tok_s[1]),
-                format!("{speedup:.2}x"),
-            ]);
-            sweep.push(obj(vec![
-                ("backend", Json::Str(kind.label().to_string())),
-                ("slots", Json::Num(slots as f64)),
-                ("requests", Json::Num(reqs as f64)),
-                ("per_slot_tokens_per_sec", Json::Num(tok_s[0])),
-                ("batched_tokens_per_sec", Json::Num(tok_s[1])),
-                ("batched_speedup", Json::Num(speedup)),
-            ]));
         }
     }
     ts.print();
-    println!("(one weight stream per engine step: the batched column's \
-              advantage grows with slots while its weight traffic stays \
-              constant — the paper's §6 bandwidth argument, measured)");
+    println!("(one weight stream per engine step, sharded by output column: \
+              the batched column's advantage grows with slots at constant \
+              weight traffic — §6's bandwidth argument — and the thread \
+              column scales it across cores at bit-identical logits)");
 
     let report = obj(vec![
         ("bench", Json::Str("serve_backends".into())),
@@ -156,6 +181,8 @@ fn main() -> anyhow::Result<()> {
         ("artifact_mode", Json::Bool(have)),
         ("rows", Json::Arr(rows)),
         ("sweep_model", Json::Str(sweep_model.name.clone())),
+        ("available_threads",
+         Json::Num(rbtw::engine::ThreadPool::available() as f64)),
         ("sweep", Json::Arr(sweep)),
     ]);
     std::fs::write("BENCH_serve_backends.json", format!("{report}\n"))?;

@@ -141,10 +141,14 @@ pub struct ServeSpec {
     pub slots: usize,
     pub queue_cap: usize,
     pub sample_seed: u64,
-    /// Batched plane-streaming GEMM (one weight stream per engine step
-    /// for all active slots) vs the per-slot GEMV reference path. Both
-    /// produce bit-identical logits.
+    /// Batched plane-streaming GEMM (one weight stream for all active
+    /// slots, SIMD-tiled and sharded across the engine thread pool) vs
+    /// the per-slot GEMV reference path. Both produce bit-identical
+    /// logits.
     pub batch_gemm: bool,
+    /// Worker threads for the batched packed path (0 = auto: one per
+    /// available core). Logits are bit-identical for every value.
+    pub threads: usize,
 }
 
 impl Default for ServeSpec {
@@ -155,6 +159,7 @@ impl Default for ServeSpec {
             queue_cap: 256,
             sample_seed: 0x5EED,
             batch_gemm: true,
+            threads: 0,
         }
     }
 }
@@ -164,6 +169,11 @@ impl ServeSpec {
     /// shared by the `[serve]` config parser and the `--slots` CLI flag.
     pub const SLOTS_RANGE: std::ops::RangeInclusive<usize> = 1..=4096;
 
+    /// Valid worker-thread range (0 = auto); shared by the `[serve]`
+    /// config parser and the `--threads` CLI flag.
+    pub const THREADS_RANGE: std::ops::RangeInclusive<usize> =
+        0..=BackendSpec::MAX_THREADS;
+
     /// The engine-layer spec for [`crate::engine::open`].
     pub fn backend_spec(&self) -> BackendSpec {
         BackendSpec {
@@ -171,6 +181,7 @@ impl ServeSpec {
             slots: self.slots,
             sample_seed: self.sample_seed,
             batch_gemm: self.batch_gemm,
+            threads: self.threads,
         }
     }
 }
@@ -207,6 +218,11 @@ impl Config {
             }
             if let Some(v) = s.get("batch_gemm") {
                 spec.batch_gemm = v.as_bool().context("batch_gemm")?;
+            }
+            if let Some(v) = s.get("threads") {
+                spec.threads = bounded(v, "threads",
+                                       *ServeSpec::THREADS_RANGE.start() as i64,
+                                       *ServeSpec::THREADS_RANGE.end() as i64)?;
             }
         }
         Ok(spec)
@@ -334,7 +350,7 @@ mod tests {
     fn builds_serve_spec() {
         let cfg = Config::parse(
             "[serve]\nbackend = \"planes\"\nslots = 8\nqueue_cap = 32\n\
-             batch_gemm = false\n",
+             batch_gemm = false\nthreads = 3\n",
         )
         .unwrap();
         let spec = cfg.serve_spec(ServeSpec::default()).unwrap();
@@ -343,10 +359,14 @@ mod tests {
         assert_eq!(spec.queue_cap, 32);
         assert_eq!(spec.sample_seed, ServeSpec::default().sample_seed);
         assert!(!spec.batch_gemm);
+        assert_eq!(spec.threads, 3);
         let bs = spec.backend_spec();
         assert_eq!(bs.kind, BackendKind::PackedPlanes);
         assert_eq!(bs.slots, 8);
         assert!(!bs.batch_gemm);
+        assert_eq!(bs.threads, 3);
+        // threads defaults to 0 = auto (one worker per available core)
+        assert_eq!(ServeSpec::default().threads, 0);
         // defaults make the packed deployment engine the serving path,
         // stepped through the batched plane-streaming GEMM
         assert_eq!(ServeSpec::default().backend, BackendKind::PackedCpu);
@@ -361,6 +381,14 @@ mod tests {
             .is_err());
         // out-of-range slot counts error instead of wrapping the cast
         assert!(Config::parse("[serve]\nslots = -1\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nthreads = -2\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nthreads = 100000\n")
             .unwrap()
             .serve_spec(ServeSpec::default())
             .is_err());

@@ -42,9 +42,32 @@
 //! Both paths produce bit-identical logits (`rust/tests/
 //! quant_properties.rs` proves it under random slot-activity masks), so
 //! the flag is purely a throughput choice.
+//!
+//! ## SIMD tiles and the slot-group thread pool
+//!
+//! The batched path is SIMD-tiled and multi-threaded:
+//! * the GEMM kernels (`quant::gemm`) block the batch into 8-lane
+//!   [`F32x8`](crate::quant::F32x8) tiles with lane-major subset-sum
+//!   tables, so every per-(group, column) update is a fixed-width
+//!   vector op (non-multiple-of-8 batches end in a masked tail tile);
+//! * each engine step fans three sharded stages across a persistent
+//!   [`ThreadPool`] of [`BackendSpec::threads`] workers: the gate
+//!   GEMM's output **columns**, the folded-BN gate tail's **rows**, and
+//!   the LM-head projection's vocab **columns**. Each GEMM shard
+//!   streams only its own columns' packed plane bytes, so plane traffic
+//!   stays one pass per shard.
+//!
+//! Determinism across thread counts is structural, not statistical:
+//! shards own disjoint output elements and a column's f32 op sequence
+//! never depends on which shard (or how many) computes it, so logits
+//! are bit-identical for every `threads` value — enforced by
+//! `rust/tests/quant_properties.rs` and by `ci.sh`, which diffs the
+//! seed-matrix equivalence digest across a threads=1 and a threads=4
+//! run.
 
 pub mod packed;
 pub mod pjrt;
+pub mod pool;
 pub mod weights;
 
 use std::path::Path;
@@ -55,6 +78,7 @@ use crate::runtime::Engine;
 
 pub use packed::PackedBackend;
 pub use pjrt::PjrtDense;
+pub use pool::ThreadPool;
 pub use weights::ModelWeights;
 
 /// Which inference engine serves a model.
@@ -183,18 +207,29 @@ pub struct BackendSpec {
     /// paths are bit-identical; this is a throughput knob. Ignored by
     /// `PjrtDense` (the executable batches natively).
     pub batch_gemm: bool,
+    /// Worker threads for the batched packed path (0 = auto: one per
+    /// available core). Gate-GEMM output columns, gate-tail rows and
+    /// the LM-head projection are sharded across a persistent
+    /// [`ThreadPool`]; logits are bit-identical for every value.
+    /// `threads = 1` runs fully inline (no workers spawned). Ignored by
+    /// the per-slot reference path and by `PjrtDense`.
+    pub threads: usize,
 }
 
 impl Default for BackendSpec {
     fn default() -> Self {
         Self { kind: BackendKind::PackedCpu, slots: 16, sample_seed: 0x5EED,
-               batch_gemm: true }
+               batch_gemm: true, threads: 0 }
     }
 }
 
 impl BackendSpec {
+    /// Hard cap on explicit thread counts (spawning more workers than
+    /// this is a config error, not a throughput choice).
+    pub const MAX_THREADS: usize = 1024;
+
     /// Shorthand for the common (kind, slots, seed) spec with the
-    /// default batched-GEMM path.
+    /// default batched-GEMM path and auto thread count.
     pub fn with(kind: BackendKind, slots: usize, sample_seed: u64) -> Self {
         Self { kind, slots, sample_seed, ..Self::default() }
     }
@@ -203,6 +238,26 @@ impl BackendSpec {
     pub fn per_slot(mut self) -> Self {
         self.batch_gemm = false;
         self
+    }
+
+    /// Pin the worker-thread count (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The concrete thread count this spec resolves to (auto → one per
+    /// available core, and never 0). Explicit values pass through
+    /// unclamped: range enforcement is the constructors' job
+    /// ([`PackedBackend::from_weights`] rejects counts above
+    /// [`Self::MAX_THREADS`], as do the `[serve]` parser and the CLI),
+    /// so an out-of-range spec errors instead of being silently capped.
+    pub fn threads_resolved(&self) -> usize {
+        if self.threads == 0 {
+            ThreadPool::available()
+        } else {
+            self.threads
+        }
     }
 }
 
@@ -303,5 +358,34 @@ mod tests {
         assert!(spec.batch_gemm, "batched GEMM is the default serving path");
         assert!(!spec.per_slot().batch_gemm);
         assert!(BackendSpec::default().batch_gemm);
+        // threads: 0 = auto resolves to available parallelism; explicit
+        // values pass through untouched (range policing belongs to the
+        // constructors, which reject > MAX_THREADS — see packed.rs)
+        assert_eq!(BackendSpec::default().threads, 0);
+        assert_eq!(spec.threads_resolved(), ThreadPool::available());
+        assert_eq!(spec.with_threads(3).threads, 3);
+        assert_eq!(spec.with_threads(3).threads_resolved(), 3);
+        assert!(spec.threads_resolved() >= 1);
+    }
+
+    #[test]
+    fn threaded_backend_serves_and_matches_single_thread() {
+        let w = ModelWeights::synthetic(18, 10, "ter", 3);
+        let spec = BackendSpec::with(BackendKind::PackedPlanes, 3, 5);
+        let mut one = from_weights(&w, &spec.with_threads(1)).unwrap();
+        let mut four = from_weights(&w, &spec.with_threads(4)).unwrap();
+        for s in 0..3 {
+            one.reset_slot(s).unwrap();
+            four.reset_slot(s).unwrap();
+        }
+        let mut la = vec![0.0f32; 3 * 18];
+        let mut lb = vec![0.0f32; 3 * 18];
+        for toks in [[Some(1), None, Some(2)], [Some(3), Some(4), None]] {
+            one.step_batch(&toks, &mut la).unwrap();
+            four.step_batch(&toks, &mut lb).unwrap();
+            for (x, y) in la.iter().zip(&lb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 }

@@ -12,26 +12,38 @@
 //! A step runs one of two bit-identical paths
 //! ([`BackendSpec::batch_gemm`]):
 //! * **batched** (default): active slots' (h, c) rows are gathered into
-//!   contiguous blocks, every gate matmul runs as ONE batched GEMM that
-//!   streams each packed weight word once for the whole batch
-//!   (`quant::gemm`), the token x-path is a batched one-hot gather, and
-//!   results scatter back to their slots. Engine-step weight traffic is
-//!   constant in the number of active slots — the §6 accelerator
-//!   argument in software.
+//!   contiguous blocks and the step fans out over the backend's
+//!   persistent [`ThreadPool`] in three sharded stages:
+//!   1. the recurrent gate GEMM, **output columns** sharded — every
+//!      worker streams only its column range of the packed planes
+//!      through the SIMD-tiled kernels (`quant::gemm`), so each plane
+//!      byte is read once per worker shard per step, not once per slot;
+//!   2. the folded-BN gate tail, **active rows** sharded (each row's
+//!      transcendentals are independent);
+//!   3. the dense LM head, **vocab columns** sharded, written straight
+//!      into the active slots' logit rows.
+//!   The token x-path stays a batched one-hot gather (it is a copy, not
+//!   a matmul). Slots whose token is `None` take part in **nothing**:
+//!   no gather, no GEMM lane, no scatter, and their logit rows are
+//!   never written or zeroed.
 //! * **per-slot**: one `add_row` gather + one packed GEMV per active
-//!   slot (the original reference path; weight traffic scales with
-//!   slots).
+//!   slot (the original single-threaded reference path; weight traffic
+//!   scales with slots).
 //!
-//! Either way the gate tail is folded-BN f32 and the LM head a dense f32
-//! GEMV per active slot. The resident weight footprint is 1–2 bits per
-//! recurrent weight — the 12× saving of §6 — plus the (small) dense
-//! head.
+//! Shards own disjoint output elements and each element's f32 op
+//! sequence is independent of the shard split, so the two paths — and
+//! every thread count on the batched path — produce bit-identical
+//! logits (`rust/tests/quant_properties.rs`). The resident weight
+//! footprint is 1–2 bits per recurrent weight — the 12× saving of §6 —
+//! plus the (small) dense head.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
+use super::pool::{shard_range, ThreadPool};
 use super::weights::ModelWeights;
 use super::{BackendKind, BackendSpec, InferBackend};
-use crate::quant::{gemv_f32, PackedLstmCell};
+use crate::quant::gemm::gemm_f32_bias_cols;
+use crate::quant::{gemv_f32, GemmScratch, PackedLstmCell, SharedOut};
 
 /// Packed-cell backend (LUT or bit-plane layout; see module docs).
 pub struct PackedBackend {
@@ -49,12 +61,19 @@ pub struct PackedBackend {
     /// Per-slot recurrent state, row-major (slots, hidden).
     h: Vec<f32>,
     c: Vec<f32>,
-    // batched-step scratch: active slot ids, their tokens, and the
-    // gathered contiguous (active, hidden) state blocks
+    /// Persistent slot-group worker pool for the batched path.
+    pool: ThreadPool,
+    /// One GEMM scratch per pool thread (column shards never share).
+    gemm_scratch: Vec<GemmScratch>,
+    // batched-step scratch: active slot ids, their tokens, the gathered
+    // contiguous (active, hidden) state blocks, and the (active, 4H)
+    // preactivation blocks. All grow-only.
     active: Vec<usize>,
     toks: Vec<usize>,
     hb: Vec<f32>,
     cb: Vec<f32>,
+    xw_b: Vec<f32>,
+    hw_b: Vec<f32>,
 }
 
 impl PackedBackend {
@@ -70,6 +89,15 @@ impl PackedBackend {
             }
         };
         anyhow::ensure!(spec.slots > 0, "need at least one decode slot");
+        anyhow::ensure!(spec.threads <= BackendSpec::MAX_THREADS,
+                        "threads {} out of range [0, {}]", spec.threads,
+                        BackendSpec::MAX_THREADS);
+        // the per-slot reference path never dispatches shards; don't
+        // hold idle worker threads for it
+        let threads = if spec.batch_gemm { spec.threads_resolved() } else { 1 };
+        let pool = ThreadPool::new(threads)
+            .with_context(|| format!("spawning the {threads}-thread engine \
+                                      worker pool"))?;
         let (cell, head_w, head_b) =
             weights.build_cell(spec.sample_seed, planes)?;
         let (vocab, hidden) = (weights.vocab, weights.hidden);
@@ -84,10 +112,15 @@ impl PackedBackend {
             batch_gemm: spec.batch_gemm,
             h: vec![0.0; spec.slots * hidden],
             c: vec![0.0; spec.slots * hidden],
+            pool,
+            gemm_scratch: (0..threads).map(|_| GemmScratch::default())
+                .collect(),
             active: vec![],
             toks: vec![],
             hb: vec![],
             cb: vec![],
+            xw_b: vec![],
+            hw_b: vec![],
         })
     }
 
@@ -99,6 +132,11 @@ impl PackedBackend {
     /// Whether steps run the batched-GEMM path.
     pub fn batch_gemm(&self) -> bool {
         self.batch_gemm
+    }
+
+    /// Threads the batched path shards across (1 = fully inline).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Read-only view of one slot's hidden state.
@@ -127,8 +165,10 @@ impl PackedBackend {
         }
     }
 
-    /// Batched path: gather active (h, c) rows, one GEMM per gate
-    /// matrix (single weight stream for the whole batch), scatter back.
+    /// Batched path: gather active (h, c) rows, then three pool-sharded
+    /// stages (gate GEMM by columns, gate tail by rows, LM head by vocab
+    /// columns), then scatter back. Idle slots take part in nothing —
+    /// in particular their logit rows are never written.
     fn step_batched(&mut self, tokens: &[Option<i32>], logits: &mut [f32]) {
         self.active.clear();
         self.toks.clear();
@@ -143,9 +183,15 @@ impl PackedBackend {
             return;
         }
         let hid = self.hidden;
+        let n4 = 4 * hid;
+        // grow-only scratch (steady state after the widest batch)
         if self.hb.len() < nb * hid {
             self.hb.resize(nb * hid, 0.0);
             self.cb.resize(nb * hid, 0.0);
+        }
+        if self.xw_b.len() < nb * n4 {
+            self.xw_b.resize(nb * n4, 0.0);
+            self.hw_b.resize(nb * n4, 0.0);
         }
         for (j, &i) in self.active.iter().enumerate() {
             self.hb[j * hid..(j + 1) * hid]
@@ -153,17 +199,87 @@ impl PackedBackend {
             self.cb[j * hid..(j + 1) * hid]
                 .copy_from_slice(&self.c[i * hid..(i + 1) * hid]);
         }
-        self.cell.step_tokens(&self.toks, &mut self.hb[..nb * hid],
-                              &mut self.cb[..nb * hid]);
+        // x-path: batched one-hot gather (one packed-row gather per
+        // stream; a copy, so not worth a dispatch)
+        self.cell.wx.gather_rows(&self.toks, &mut self.xw_b[..nb * n4]);
+        // stage 1 — recurrent gate GEMM, output columns sharded: each
+        // worker streams only its columns' packed planes (one plane
+        // pass per shard per step). Every shard re-gathers the tile and
+        // rebuilds the 256-entry subset-sum tables, so shards are kept
+        // at >= 64 columns each — below that the duplicated table
+        // builds outweigh the extra parallelism.
+        {
+            let shards = self.pool.threads().min(n4 / 64).max(1);
+            let out = SharedOut::new(&mut self.hw_b[..nb * n4]);
+            let wh = &self.cell.wh;
+            let hb = &self.hb[..nb * hid];
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(shards);
+            for (si, scratch) in
+                self.gemm_scratch[..shards].iter_mut().enumerate()
+            {
+                let (c0, c1) = shard_range(n4, shards, si);
+                jobs.push(Box::new(move || {
+                    // SAFETY: shards cover disjoint column ranges of
+                    // hw_b, which is untouched until `run` returns (it
+                    // blocks until every shard completed).
+                    unsafe { wh.gemm_cols(hb, nb, c0, c1, out, scratch) };
+                }));
+            }
+            self.pool.run(jobs);
+        }
+        // stage 2 — folded-BN gate tail, active rows sharded (disjoint
+        // row chunks, so plain split borrows suffice)
+        {
+            let shards = self.pool.threads().min(nb).max(1);
+            let rows_per = nb.div_ceil(shards);
+            let cell = &self.cell;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(shards);
+            for (((xw_s, hw_s), h_s), c_s) in self.xw_b[..nb * n4]
+                .chunks_mut(rows_per * n4)
+                .zip(self.hw_b[..nb * n4].chunks(rows_per * n4))
+                .zip(self.hb[..nb * hid].chunks_mut(rows_per * hid))
+                .zip(self.cb[..nb * hid].chunks_mut(rows_per * hid))
+            {
+                jobs.push(Box::new(move || {
+                    cell.gate_tail_rows(xw_s, hw_s, h_s, c_s);
+                }));
+            }
+            self.pool.run(jobs);
+        }
+        // scatter the updated (h, c) back to their slots
         for (j, &i) in self.active.iter().enumerate() {
             self.h[i * hid..(i + 1) * hid]
                 .copy_from_slice(&self.hb[j * hid..(j + 1) * hid]);
             self.c[i * hid..(i + 1) * hid]
                 .copy_from_slice(&self.cb[j * hid..(j + 1) * hid]);
         }
-        for idx in 0..nb {
-            let i = self.active[idx];
-            self.head_into(i, logits);
+        // stage 3 — dense LM head, vocab columns sharded, written
+        // straight into the ACTIVE slots' logit rows (idle rows are
+        // never zeroed, scattered over, or otherwise touched)
+        {
+            let shards = self.pool.threads().min(self.vocab).max(1);
+            let out = SharedOut::new(logits);
+            let head_w = &self.head_w[..];
+            let head_b = &self.head_b[..];
+            let hb = &self.hb[..nb * hid];
+            let active = &self.active[..];
+            let vocab = self.vocab;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(shards);
+            for si in 0..shards {
+                let (v0, v1) = shard_range(vocab, shards, si);
+                jobs.push(Box::new(move || {
+                    // SAFETY: shards cover disjoint vocab column ranges
+                    // of `logits`, which outlives `run` (it blocks).
+                    unsafe {
+                        gemm_f32_bias_cols(head_w, hid, vocab, hb, head_b,
+                                           active, v0, v1, out);
+                    }
+                }));
+            }
+            self.pool.run(jobs);
         }
     }
 }
@@ -224,29 +340,35 @@ mod tests {
     use crate::engine::weights::ModelWeights;
 
     fn backend(planes: bool) -> PackedBackend {
-        backend_with(planes, true)
+        backend_with(planes, true, 0)
     }
 
-    fn backend_with(planes: bool, batch_gemm: bool) -> PackedBackend {
+    fn backend_with(planes: bool, batch_gemm: bool, threads: usize)
+        -> PackedBackend {
         let w = ModelWeights::synthetic(25, 16, "ter", 77);
         let kind = if planes { BackendKind::PackedPlanes }
                    else { BackendKind::PackedCpu };
-        let mut spec = BackendSpec::with(kind, 3, 5);
+        let mut spec = BackendSpec::with(kind, 3, 5).with_threads(threads);
         spec.batch_gemm = batch_gemm;
         PackedBackend::from_weights(&w, &spec).unwrap()
     }
 
     #[test]
     fn idle_slots_untouched_and_state_isolated() {
-        for batch_gemm in [false, true] {
-            let mut b = backend_with(false, batch_gemm);
+        // every (path, thread-count) combination must leave idle slots'
+        // logit rows and state bit-untouched
+        for (batch_gemm, threads) in
+            [(false, 1), (true, 1), (true, 2), (true, 5)]
+        {
+            let mut b = backend_with(false, batch_gemm, threads);
             let mut logits = vec![f32::NAN; 3 * 25];
             logits[25..50].fill(0.5); // slot 1 idle — must stay 0.5
             for s in [0, 2] {
                 b.reset_slot(s).unwrap();
             }
             b.step_batch(&[Some(4), None, Some(4)], &mut logits).unwrap();
-            assert!(logits[25..50].iter().all(|&x| x == 0.5));
+            assert!(logits[25..50].iter().all(|&x| x == 0.5),
+                    "threads {threads}: idle logit row touched");
             // identical token + fresh state => identical rows
             for k in 0..25 {
                 assert_eq!(logits[k].to_bits(), logits[50 + k].to_bits());
@@ -276,27 +398,31 @@ mod tests {
     #[test]
     fn batched_and_per_slot_paths_agree_bitwise() {
         for planes in [false, true] {
-            let mut a = backend_with(planes, false);
-            let mut b = backend_with(planes, true);
-            assert!(!a.batch_gemm() && b.batch_gemm());
-            for s in 0..3 {
-                a.reset_slot(s).unwrap();
-                b.reset_slot(s).unwrap();
-            }
-            let schedule: &[[Option<i32>; 3]] = &[
-                [Some(4), None, Some(9)],
-                [Some(1), Some(2), Some(3)],
-                [None, None, None],
-                [None, Some(8), None],
-                [Some(0), Some(24), Some(12)],
-            ];
-            for toks in schedule {
-                let mut la = vec![0.0f32; 3 * 25];
-                let mut lb = vec![0.0f32; 3 * 25];
-                a.step_batch(toks, &mut la).unwrap();
-                b.step_batch(toks, &mut lb).unwrap();
-                for (x, y) in la.iter().zip(&lb) {
-                    assert_eq!(x.to_bits(), y.to_bits(), "planes={planes}");
+            for threads in [1usize, 3] {
+                let mut a = backend_with(planes, false, 1);
+                let mut b = backend_with(planes, true, threads);
+                assert!(!a.batch_gemm() && b.batch_gemm());
+                assert_eq!(b.threads(), threads);
+                for s in 0..3 {
+                    a.reset_slot(s).unwrap();
+                    b.reset_slot(s).unwrap();
+                }
+                let schedule: &[[Option<i32>; 3]] = &[
+                    [Some(4), None, Some(9)],
+                    [Some(1), Some(2), Some(3)],
+                    [None, None, None],
+                    [None, Some(8), None],
+                    [Some(0), Some(24), Some(12)],
+                ];
+                for toks in schedule {
+                    let mut la = vec![0.0f32; 3 * 25];
+                    let mut lb = vec![0.0f32; 3 * 25];
+                    a.step_batch(toks, &mut la).unwrap();
+                    b.step_batch(toks, &mut lb).unwrap();
+                    for (x, y) in la.iter().zip(&lb) {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "planes={planes} threads={threads}");
+                    }
                 }
             }
         }
@@ -305,12 +431,17 @@ mod tests {
     #[test]
     fn rejects_bad_inputs() {
         for batch_gemm in [false, true] {
-            let mut b = backend_with(false, batch_gemm);
+            let mut b = backend_with(false, batch_gemm, 0);
             let mut logits = vec![0.0f32; 3 * 25];
             assert!(b.step_batch(&[Some(1)], &mut logits).is_err());
             assert!(b.step_batch(&[Some(99), None, None], &mut logits).is_err());
             assert!(b.step_batch(&[Some(-1), None, None], &mut logits).is_err());
             assert!(b.reset_slot(5).is_err());
         }
+        // explicit thread counts beyond the cap are config errors
+        let w = ModelWeights::synthetic(25, 16, "ter", 77);
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 3, 5)
+            .with_threads(BackendSpec::MAX_THREADS + 1);
+        assert!(PackedBackend::from_weights(&w, &spec).is_err());
     }
 }

@@ -1,0 +1,319 @@
+//! Persistent worker-thread pool for the packed serving engine.
+//!
+//! The batched packed step has three data-parallel stages per token —
+//! the gate GEMM's output columns, the folded-BN gate tail's rows, and
+//! the LM-head projection's vocab columns. This pool fans those shards
+//! out across long-lived workers (plain `std::thread` + mpsc channels —
+//! no rayon, no crates) so one engine step uses every core instead of
+//! one.
+//!
+//! Design points:
+//! * **Persistent**: workers are spawned once per backend and live until
+//!   the pool drops; the per-step dispatch cost is one channel send +
+//!   one completion receive per shard, not a thread spawn.
+//! * **Caller participates**: a pool of `threads = N` spawns `N − 1`
+//!   workers; [`ThreadPool::run`] executes the calling thread's share
+//!   inline, so `threads = 1` is exactly the single-threaded code path
+//!   (no channels, no synchronization, no worker thread at all).
+//! * **Scoped without `'static`**: jobs borrow the caller's stack
+//!   (weight planes, scratch buffers, output tiles). `run` erases the
+//!   borrow lifetime to ship jobs over the channel, then **blocks until
+//!   every job has reported completion** before returning — the same
+//!   contract `std::thread::scope` enforces structurally (and the unit
+//!   tests check this pool against a `std::thread::scope` reference).
+//! * **Deterministic by construction**: the pool adds no ordering of its
+//!   own — callers hand it shards that own disjoint output elements, so
+//!   scheduling order cannot influence any result bit. Bit-identical
+//!   logits across thread counts are enforced by
+//!   `rust/tests/quant_properties.rs` and the `ci.sh` twice-run digest
+//!   (threads=1 vs threads=4).
+//! * Worker panics are caught, forwarded, and re-raised on the calling
+//!   thread (a poisoned shard must fail the step, not deadlock it).
+//!
+//! One pool supports one dispatching thread at a time (the engine
+//! worker); `run` is `&self` but completion accounting assumes callers
+//! do not overlap `run` calls from several threads.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased shard of work (see [`ThreadPool::run`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Exit,
+}
+
+/// Persistent worker pool; see the module docs.
+pub struct ThreadPool {
+    /// One job channel per worker (`threads - 1` of them).
+    txs: Vec<Sender<Msg>>,
+    /// Completion events (`true` = job ran to completion, `false` =
+    /// job panicked) from all workers.
+    done_rx: Receiver<bool>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// A pool that runs shards on `threads` threads total (the calling
+    /// thread plus `threads - 1` spawned workers). `threads` is clamped
+    /// to at least 1; `new(1)` spawns nothing and runs everything
+    /// inline. Spawn failure (OS thread limits) is an `Err`, not a
+    /// panic — a thread count is config input. Workers already spawned
+    /// when a later spawn fails see their job channel close and exit.
+    pub fn new(threads: usize) -> std::io::Result<Self> {
+        let threads = threads.max(1);
+        let (done_tx, done_rx) = channel();
+        let mut txs = Vec::with_capacity(threads - 1);
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 0..threads - 1 {
+            let (tx, rx) = channel::<Msg>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("rbtw-shard-{w}"))
+                .spawn(move || worker_loop(rx, done))?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(Self { txs, done_rx, handles, threads })
+    }
+
+    /// Total threads that execute shards (callers size their shard count
+    /// to this).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The machine's available parallelism (the `threads = 0` / "auto"
+    /// resolution used by `BackendSpec`).
+    pub fn available() -> usize {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    }
+
+    /// Run every job to completion, distributing them round-robin over
+    /// the workers and the calling thread, then block until all have
+    /// finished. Panics if any job panicked.
+    ///
+    /// Jobs may borrow the caller's stack (`'scope`): the borrow is
+    /// erased to cross the channel, which is sound because this function
+    /// does not return until every erased job has reported completion —
+    /// no job can outlive the borrows it captured.
+    pub fn run<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let workers = self.txs.len();
+        if workers == 0 || jobs.len() == 1 {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let lanes = workers + 1; // workers + the calling thread
+        let mut inline = Vec::new();
+        let mut sent = 0usize;
+        for (i, job) in jobs.into_iter().enumerate() {
+            let lane = i % lanes;
+            if lane == workers {
+                inline.push(job);
+            } else {
+                // SAFETY: lifetime erasure only — same layout fat
+                // pointer. The job cannot outlive 'scope because we
+                // block on its completion event below before returning.
+                let job: Job = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                };
+                if self.txs[lane].send(Msg::Run(job)).is_err() {
+                    // A worker died mid-dispatch (cannot happen by
+                    // construction — jobs run under catch_unwind — but
+                    // the barrier must hold anyway): drain every job
+                    // already sent so no erased borrow outlives this
+                    // call, THEN fail loudly.
+                    for _ in 0..sent {
+                        if self.done_rx.recv().is_err() {
+                            break; // all workers gone, nothing in flight
+                        }
+                    }
+                    panic!("a pool worker died during shard dispatch");
+                }
+                sent += 1;
+            }
+        }
+        // Inline jobs run under catch_unwind so that a panicking shard
+        // cannot unwind past the completion barrier below: every sent
+        // job MUST be drained before returning (or re-panicking), both
+        // to keep the borrow-erasure sound and to keep the completion
+        // channel free of stale events for the next `run`.
+        let mut ok = true;
+        for job in inline {
+            ok &= std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(job)).is_ok();
+        }
+        for _ in 0..sent {
+            match self.done_rx.recv() {
+                Ok(done_ok) => ok &= done_ok,
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            panic!("a pool shard panicked while running a sharded job");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Exit);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Msg>, done: Sender<bool>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Run(job) => {
+                let ok = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(job)).is_ok();
+                if done.send(ok).is_err() {
+                    break; // pool gone; nothing left to report to
+                }
+            }
+            Msg::Exit => break,
+        }
+    }
+}
+
+/// Split `n` items into `shards` near-equal contiguous ranges; returns
+/// shard `i`'s `[start, end)`. The first `n % shards` shards are one
+/// longer, so every item is covered exactly once and shard sizes differ
+/// by at most 1.
+pub fn shard_range(n: usize, shards: usize, i: usize) -> (usize, usize) {
+    debug_assert!(shards > 0 && i < shards);
+    let base = n / shards;
+    let rem = n % shards;
+    let start = i * base + i.min(rem);
+    let len = base + usize::from(i < rem);
+    (start, start + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn increment_sharded(pool: &ThreadPool, data: &mut [u64], shards: usize) {
+        let chunk = data.len().div_ceil(shards).max(1);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for head in data.chunks_mut(chunk) {
+            jobs.push(Box::new(move || {
+                for v in head {
+                    *v += 1;
+                }
+            }));
+        }
+        pool.run(jobs);
+    }
+
+    #[test]
+    fn runs_jobs_and_is_reusable() {
+        let pool = ThreadPool::new(4).unwrap();
+        assert_eq!(pool.threads(), 4);
+        let mut data = vec![0u64; 37];
+        for round in 1..=3u64 {
+            increment_sharded(&pool, &mut data, 4);
+            assert!(data.iter().all(|&v| v == round), "round {round}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1).unwrap();
+        assert_eq!(pool.threads(), 1);
+        assert!(pool.txs.is_empty(), "threads=1 must spawn no workers");
+        let mut data = vec![0u64; 5];
+        increment_sharded(&pool, &mut data, 3);
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn matches_scoped_threads_reference() {
+        // The pool must compute exactly what structurally-scoped threads
+        // compute over the same disjoint shards.
+        let n = 1000usize;
+        let chunk = 217usize; // deliberately uneven: 4 full + 1 ragged
+        let mut via_pool: Vec<u64> = (0..n as u64).collect();
+        let mut via_scope = via_pool.clone();
+        let pool = ThreadPool::new(3).unwrap();
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for head in via_pool.chunks_mut(chunk) {
+                jobs.push(Box::new(move || {
+                    for v in head.iter_mut() {
+                        *v = v.wrapping_mul(31).wrapping_add(7);
+                    }
+                }));
+            }
+            pool.run(jobs);
+        }
+        std::thread::scope(|scope| {
+            for head in via_scope.chunks_mut(chunk) {
+                scope.spawn(move || {
+                    for v in head.iter_mut() {
+                        *v = v.wrapping_mul(31).wrapping_add(7);
+                    }
+                });
+            }
+        });
+        assert_eq!(via_pool, via_scope);
+    }
+
+    #[test]
+    fn propagates_worker_panics() {
+        let pool = ThreadPool::new(3).unwrap();
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("shard failure")),
+                Box::new(|| {}),
+            ];
+            pool.run(jobs);
+        }));
+        assert!(boom.is_err(), "worker panic must surface to the caller");
+        // and the pool must still be usable afterwards
+        let mut data = vec![0u64; 8];
+        increment_sharded(&pool, &mut data, 3);
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn shard_ranges_partition_exactly() {
+        for n in [0usize, 1, 2, 7, 8, 64, 100, 3072] {
+            for shards in [1usize, 2, 3, 4, 7, 16] {
+                let mut next = 0usize;
+                let mut sizes = vec![];
+                for i in 0..shards {
+                    let (s0, s1) = shard_range(n, shards, i);
+                    assert_eq!(s0, next, "gap at shard {i} (n={n}, {shards})");
+                    assert!(s1 >= s0);
+                    sizes.push(s1 - s0);
+                    next = s1;
+                }
+                assert_eq!(next, n, "n={n} shards={shards} not covered");
+                let (lo, hi) = (sizes.iter().min().unwrap(),
+                                sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "unbalanced shards: {sizes:?}");
+            }
+        }
+    }
+}

@@ -31,7 +31,11 @@
 //! measurable via [`engine::InferBackend::weight_bytes`] — and by
 //! default step every active decode slot through one batched GEMM per
 //! gate matrix (a single weight stream per engine step; see
-//! [`quant::gemm`] and [`engine::BackendSpec::batch_gemm`]).
+//! [`quant::gemm`] and [`engine::BackendSpec::batch_gemm`]). The
+//! batched path is SIMD-tiled (8-lane [`quant::F32x8`] batch blocks)
+//! and sharded by output column across a persistent worker pool
+//! ([`engine::ThreadPool`], sized by [`engine::BackendSpec::threads`]);
+//! logits are bit-identical for every thread count.
 
 pub mod config;
 pub mod coordinator;

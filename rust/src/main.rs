@@ -131,6 +131,7 @@ fn print_usage() {
          \x20 serve <artifact>            serving demo (--backend pjrt|packed|planes\n\
          \x20                             --requests N --gen-len N --prompt-len N\n\
          \x20                             --slots N --batch-gemm true|false\n\
+         \x20                             --threads N (0 = one per core)\n\
          \x20                             --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
@@ -258,12 +259,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             other => bail!("--batch-gemm takes true|false, got '{other}'"),
         };
     }
+    if let Some(t) = args.get_usize("threads")? {
+        anyhow::ensure!(ServeSpec::THREADS_RANGE.contains(&t),
+                        "--threads {t} out of range [{}, {}] (0 = auto)",
+                        ServeSpec::THREADS_RANGE.start(),
+                        ServeSpec::THREADS_RANGE.end());
+        spec.threads = t;
+    }
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
-    let backend = engine::open(&dir, &name, &spec.backend_spec())?;
+    let backend_spec = spec.backend_spec();
+    let backend = engine::open(&dir, &name, &backend_spec)?;
+    // only the batched packed path shards across the pool; per-slot and
+    // pjrt-dense never spawn workers, so don't report a thread count
+    let thr_label = if spec.batch_gemm && backend.kind() != BackendKind::PjrtDense {
+        backend_spec.threads_resolved().to_string()
+    } else {
+        "-".to_string()
+    };
     println!(
-        "backend {} | {} slots | {} gemm | {} B resident weights",
+        "backend {} | {} slots | {} gemm | {thr_label} threads | {} B resident weights",
         backend.kind().label(),
         backend.slots(),
         if spec.batch_gemm { "batched" } else { "per-slot" },

@@ -12,9 +12,11 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::gemm::{gemm_binary_lut, gemm_ternary_lut, gemm_ternary_planes,
-                  GemmScratch};
+use super::gemm::{gemm_binary_lut, gemm_binary_lut_cols, gemm_ternary_lut,
+                  gemm_ternary_lut_cols, gemm_ternary_planes,
+                  gemm_ternary_planes_cols, GemmScratch};
 use super::gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};
+use super::simd::SharedOut;
 use super::pack::{words_per_col, PackedBinary, PackedTernary};
 use super::planes::{gemv_ternary_planes, TernaryPlanes};
 use crate::runtime::Session;
@@ -82,6 +84,34 @@ impl Packed {
             Packed::Binary(b) => gemm_binary_lut(b, x, batch, y, scratch),
             Packed::Ternary(t) => gemm_ternary_lut(t, x, batch, y, scratch),
             Packed::Planes(p) => gemm_ternary_planes(p, x, batch, y, scratch),
+        }
+    }
+
+    /// Column shard `[c0, c1)` of [`Packed::gemm`], streaming only those
+    /// columns' packed plane bytes — the unit of work the engine's
+    /// thread pool fans out. A column's math never depends on which
+    /// shard computes it, so any shard split reassembles the one-shard
+    /// result bit for bit.
+    ///
+    /// # Safety
+    /// `out` must view a live row-major `(batch, cols())` buffer, and no
+    /// concurrent shard may overlap this one's column range.
+    pub unsafe fn gemm_cols(&self, x: &[f32], batch: usize, c0: usize,
+                            c1: usize, out: SharedOut,
+                            scratch: &mut GemmScratch) {
+        // SAFETY: forwarded from this function's contract.
+        unsafe {
+            match self {
+                Packed::Binary(b) => {
+                    gemm_binary_lut_cols(b, x, batch, c0, c1, out, scratch)
+                }
+                Packed::Ternary(t) => {
+                    gemm_ternary_lut_cols(t, x, batch, c0, c1, out, scratch)
+                }
+                Packed::Planes(p) => {
+                    gemm_ternary_planes_cols(p, x, batch, c0, c1, out, scratch)
+                }
+            }
         }
     }
 
@@ -251,15 +281,25 @@ impl PackedLstmCell {
         self.tail(h, c);
     }
 
-    /// One step for a whole batch of token streams at once — the batched
-    /// serving path. `h`/`c` are row-major `(tokens.len(), hidden)`
-    /// blocks holding the *active* slots' state, updated in place.
+    /// One step for a whole batch of token streams at once, on this
+    /// cell's own scratch. `h`/`c` are row-major `(tokens.len(),
+    /// hidden)` blocks holding the *active* slots' state, updated in
+    /// place.
     ///
     /// The x-path is a batched one-hot gather (one packed-row gather per
     /// stream), the h-path a single batched GEMM that streams the packed
     /// `wh` planes once for every stream, and the gate tail runs per row.
     /// Each row's result is bit-identical to [`Self::step_token`] on
     /// that stream alone.
+    ///
+    /// The serving engine does **not** call this: `PackedBackend`
+    /// re-assembles the same gather → [`Packed::gemm_cols`] →
+    /// [`Self::gate_tail_rows`] sequence with pool-sharded stages and
+    /// its own buffers. Both assemblies are anchored to the same
+    /// reference — each is tested bit-identical to [`Self::step_token`]
+    /// per stream — so they cannot silently diverge; this method remains
+    /// the single-scratch library API (and the engine-free way to test
+    /// the batched kernels through the cell).
     pub fn step_tokens(&mut self, tokens: &[usize], h: &mut [f32],
                        c: &mut [f32]) {
         let batch = tokens.len();
@@ -275,19 +315,44 @@ impl PackedLstmCell {
         }
         self.wx.gather_rows(tokens, &mut self.xw_b[..batch * n4]);
         self.wh.gemm(h, batch, &mut self.hw_b[..batch * n4], &mut self.gemm);
-        for b in 0..batch {
-            gate_tail(&mut self.xw_b[b * n4..(b + 1) * n4],
-                      &self.hw_b[b * n4..(b + 1) * n4],
-                      &self.scale_x, &self.shift_x,
-                      &self.scale_h, &self.shift_h, &self.bias, self.hidden,
-                      &mut h[b * self.hidden..(b + 1) * self.hidden],
-                      &mut c[b * self.hidden..(b + 1) * self.hidden]);
-        }
+        // one tail implementation for this path and the engine's sharded
+        // path; the take/put-back frees the field borrow for the &self
+        // call and is just two pointer swaps
+        let mut xw_b = std::mem::take(&mut self.xw_b);
+        self.gate_tail_rows(&mut xw_b[..batch * n4],
+                            &self.hw_b[..batch * n4], h, c);
+        self.xw_b = xw_b;
     }
 
     fn tail(&mut self, h: &mut [f32], c: &mut [f32]) {
         gate_tail(&mut self.xw, &self.hw, &self.scale_x, &self.shift_x,
                   &self.scale_h, &self.shift_h, &self.bias, self.hidden, h, c);
+    }
+
+    /// Folded-BN gate tail over a row-major block of streams: `xw` is a
+    /// `(rows, 4H)` preactivation block (consumed in place), `hw` its
+    /// recurrent counterpart, `h`/`c` the matching `(rows, H)` state
+    /// rows, updated in place. Row count is inferred from `xw.len()`.
+    ///
+    /// Each row is independent and walks the identical op sequence as
+    /// [`Self::step_token`]'s tail, so the engine can shard rows across
+    /// worker threads without changing a single state bit.
+    pub fn gate_tail_rows(&self, xw: &mut [f32], hw: &[f32], h: &mut [f32],
+                          c: &mut [f32]) {
+        let n4 = 4 * self.hidden;
+        debug_assert_eq!(xw.len() % n4, 0);
+        let rows = xw.len() / n4;
+        debug_assert_eq!(hw.len(), rows * n4);
+        debug_assert_eq!(h.len(), rows * self.hidden);
+        debug_assert_eq!(c.len(), rows * self.hidden);
+        for b in 0..rows {
+            gate_tail(&mut xw[b * n4..(b + 1) * n4],
+                      &hw[b * n4..(b + 1) * n4],
+                      &self.scale_x, &self.shift_x,
+                      &self.scale_h, &self.shift_h, &self.bias, self.hidden,
+                      &mut h[b * self.hidden..(b + 1) * self.hidden],
+                      &mut c[b * self.hidden..(b + 1) * self.hidden]);
+        }
     }
 
     /// Total packed weight bytes (the deployment footprint).

@@ -1,109 +1,155 @@
-//! Batched multiplier-free GEMM: one weight stream per step, all decode
-//! slots — the software twin of the paper's §6 accelerator datapath,
-//! where each 1–2-bit weight plane is streamed from DRAM **once** per
-//! timestep and fans out to a whole array of accumulators.
+//! SIMD-tiled, batch-blocked multiplier-free GEMM: one weight stream per
+//! step, all decode slots — the software twin of the paper's §6
+//! accelerator datapath, where each 1–2-bit weight plane is streamed
+//! from DRAM **once** per timestep and fans out to a whole array of
+//! accumulators.
 //!
 //! The per-slot LUT GEMV ([`super::gemv_lut`]) re-streams the packed
 //! planes once per decode slot, so serving-batch weight traffic grows
 //! linearly with slots. These kernels compute `Y = X·W` for an
-//! `(batch, rows)` activation block and read each plane byte exactly
-//! once, updating every slot's accumulator from it:
+//! `(batch, rows)` activation block and read each plane byte once per
+//! **lane tile**, updating 8 slots' accumulators from it:
 //!
-//! * subset-sum tables are built **transposed** `(256, batch)` so that
-//!   for a fixed table index `p` the `batch` values are contiguous;
-//! * the accumulator block is kept column-major `(cols, batch)` during
-//!   accumulation, making the per-column update
-//!   `acc[c][0..batch] += T[pos] - T[neg]` a pair of contiguous
-//!   vectorizable slice ops instead of `batch` scattered scalar walks;
-//! * the final alpha fold transposes back into the row-major
-//!   `(batch, cols)` output the cell consumes.
+//! ## Tile layout
+//!
+//! * the batch dimension is blocked into **lane tiles of 8** rows
+//!   ([`F32x8`]); a non-multiple-of-8 batch ends in a *masked tail
+//!   tile* whose dead lanes carry zero activations and are simply never
+//!   folded into the output;
+//! * subset-sum tables are built **lane-major**: `tables[p]` is one
+//!   `F32x8` holding index `p`'s subset sum for all 8 lanes, built with
+//!   255 8-wide vector adds via the same `S[p] = S[p & (p-1)] + x[lsb]`
+//!   recurrence as the scalar [`super::gemv_lut::build_subset_sums`];
+//! * the accumulator is one `F32x8` per output column, so the
+//!   per-(group, column) update `acc[c] += T[pos] - T[neg]` is two
+//!   8-wide vector ops — no dynamic-length inner loop at any batch
+//!   size;
+//! * the fold-out epilogue multiplies by alpha lane-wise and scatters
+//!   only the **live** lanes into the row-major `(batch, cols)` output.
+//!
+//! ## Column sharding
+//!
+//! Every kernel also comes as a `*_cols` variant computing only columns
+//! `[c0, c1)` and writing through a [`SharedOut`] handle. Shards of
+//! disjoint column ranges may run concurrently (the engine's thread
+//! pool does exactly that — see `crate::engine::pool`): each shard
+//! streams only **its own columns'** packed plane bytes, so plane
+//! traffic stays one pass per shard, and since a column's math never
+//! depends on which shard computes it, results are bit-identical for
+//! every shard split and thread count.
 //!
 //! **Bit-exactness contract:** every kernel here performs, per output
 //! element, the *identical* sequence of f32 operations as its per-slot
 //! counterpart (`gemv_binary_lut` / `gemv_ternary_lut` /
 //! `gemv_ternary_planes`): same subset-sum recurrence, same group order,
 //! same `t[pos] - t[neg]` (or `2·t[sign] − Σx`) accumulation, same final
-//! alpha multiply. Batched serving therefore produces logits that match
-//! the per-slot reference path bit for bit — enforced by
-//! `rust/tests/quant_properties.rs`.
+//! alpha multiply — each applied lane-wise ([`F32x8`] ops are pure
+//! lane-wise IEEE f32). Batched serving therefore produces logits that
+//! match the per-slot reference path bit for bit — enforced by
+//! `rust/tests/quant_properties.rs` across batches {1, 7, 8, 9, 64}.
 
 use super::gemv_lut::le_bytes;
 use super::pack::{words_per_col, PackedBinary, PackedTernary};
 use super::planes::TernaryPlanes;
+use super::simd::{F32x8, SharedOut, LANES};
 
 /// Reusable scratch for the batched kernels (the serving hot loop
 /// allocates nothing after the first step at a given width).
+///
+/// All buffers are **grow-only**: stepping a smaller batch (or a
+/// narrower column shard) after a larger one never shrinks a buffer, so
+/// alternating batch sizes — the normal shape of continuous-batching
+/// load — cannot trigger shrink-then-regrow reallocation churn. The
+/// `scratch_capacity_is_stable_across_alternating_batches` test pins
+/// this down.
 #[derive(Default)]
 pub struct GemmScratch {
-    /// Transposed subset-sum tables `(256, batch)`: `tables[p*batch + b]`.
-    tables: Vec<f32>,
-    /// One group's activation tile, transposed `(8, batch)`.
-    xt: Vec<f32>,
-    /// Column-major accumulator `(cols, batch)`.
-    acc: Vec<f32>,
-    /// Per-row activation sums (binary kernel only).
+    /// Lane-major subset-sum tables: 256 `F32x8` entries, rebuilt per
+    /// (lane tile, 8-row group).
+    tables: Vec<F32x8>,
+    /// One group's activation tile, lane-major `(8 rows, 8 lanes)`.
+    xt: Vec<F32x8>,
+    /// One `F32x8` accumulator per sharded output column.
+    acc: Vec<F32x8>,
+    /// Per-batch-row activation sums (binary kernel only).
     totals: Vec<f32>,
 }
 
 impl GemmScratch {
-    fn resize(&mut self, batch: usize, cols: usize) {
-        self.tables.resize(256 * batch, 0.0);
-        self.xt.resize(8 * batch, 0.0);
-        self.acc.resize(cols * batch, 0.0);
-        self.totals.resize(batch, 0.0);
+    /// Grow (never shrink) to serve `ncols` sharded columns at `batch`.
+    fn ensure(&mut self, ncols: usize, batch: usize) {
+        if self.tables.len() < 256 {
+            self.tables.resize(256, F32x8::ZERO);
+        }
+        if self.xt.len() < LANES {
+            self.xt.resize(LANES, F32x8::ZERO);
+        }
+        if self.acc.len() < ncols {
+            self.acc.resize(ncols, F32x8::ZERO);
+        }
+        if self.totals.len() < batch {
+            self.totals.resize(batch, 0.0);
+        }
     }
 }
 
-/// Transpose group `g`'s 8 input rows of the `(batch, rows)` block into
-/// an `(8, batch)` tile, zero-padding rows past `rows` (identical to the
-/// zero-padding the per-slot table build applies).
-fn gather_tile(x: &[f32], rows: usize, batch: usize, g: usize, xt: &mut [f32]) {
-    for i in 0..8 {
-        let r = g * 8 + i;
-        let row = &mut xt[i * batch..(i + 1) * batch];
+/// Transpose group `g`'s 8 input rows × the tile's batch rows of the
+/// row-major `(batch, rows)` block into a lane-major `(8, 8)` tile.
+/// Matrix rows past `rows` and lanes past the live batch read 0 — the
+/// masked tail tile; zero-padding matches what the per-slot table build
+/// applies to the last row group.
+fn gather_tile(x: &[f32], rows: usize, b0: usize, lanes: usize, g: usize,
+               xt: &mut [F32x8]) {
+    for i in 0..LANES {
+        let r = g * LANES + i;
+        let mut t = [0.0f32; LANES];
         if r < rows {
-            for (b, v) in row.iter_mut().enumerate() {
-                *v = x[b * rows + r];
+            for (l, v) in t[..lanes].iter_mut().enumerate() {
+                *v = x[(b0 + l) * rows + r];
             }
-        } else {
-            row.fill(0.0);
         }
+        xt[i] = F32x8(t);
     }
 }
 
-/// Fold the column-major accumulator back into the row-major `(batch,
-/// cols)` output with the trailing alpha multiply — the one epilogue all
-/// three kernels share, kept in one place so the bit-exactness contract
-/// can't drift between layouts.
-fn fold_out(acc: &[f32], cols: usize, batch: usize, alpha: f32,
-            y: &mut [f32]) {
-    for c in 0..cols {
-        for b in 0..batch {
-            y[b * cols + c] = acc[c * batch + b] * alpha;
-        }
-    }
-}
-
-/// Batched subset-sum tables over a transposed `(8, batch)` tile:
-/// `tables[p*batch + b] = Σ_{i: bit i of p} xt[i*batch + b]`, built with
-/// the same `S[p] = S[p & (p-1)] + x[lsb]` recurrence as the scalar
-/// [`super::gemv_lut::build_subset_sums`] — so every entry is bitwise
-/// identical to the per-slot table for that slot's input.
-fn build_subset_sums_batch(xt: &[f32], batch: usize, tables: &mut [f32]) {
-    tables[..batch].fill(0.0);
+/// Lane-major subset-sum tables over one `(8, 8)` tile:
+/// `tables[p].lane(l) = Σ_{i: bit i of p} xt[i].lane(l)`, built with the
+/// same `S[p] = S[p & (p-1)] + x[lsb]` recurrence as the scalar
+/// [`super::gemv_lut::build_subset_sums`] — so every lane's entry is
+/// bitwise identical to the per-slot table for that slot's input.
+fn build_subset_sums_tile(xt: &[F32x8], tables: &mut [F32x8]) {
+    tables[0] = F32x8::ZERO;
     for p in 1..256usize {
         let lsb = p.trailing_zeros() as usize;
-        let q = p & (p - 1);
-        for b in 0..batch {
-            tables[p * batch + b] = tables[q * batch + b] + xt[lsb * batch + b];
+        tables[p] = tables[p & (p - 1)] + xt[lsb];
+    }
+}
+
+/// Fold one lane tile's accumulators into the row-major `(batch, cols)`
+/// output with the trailing alpha multiply — the one epilogue all three
+/// kernels share, kept in one place so the bit-exactness contract can't
+/// drift between layouts. Only the `lanes` live lanes are written; dead
+/// tail lanes (and idle columns outside `[c0, c0+acc.len())`) are never
+/// touched.
+///
+/// # Safety
+/// The caller owns columns `[c0, c0 + acc.len())` of `out`, which views
+/// a live row-major `(batch, cols)` buffer with `b0 + lanes <= batch`.
+#[inline]
+unsafe fn fold_tile(acc: &[F32x8], alpha: F32x8, b0: usize, lanes: usize,
+                    c0: usize, cols: usize, out: SharedOut) {
+    for (ci, a) in acc.iter().enumerate() {
+        let v = *a * alpha;
+        for l in 0..lanes {
+            unsafe { out.write((b0 + l) * cols + c0 + ci, v.lane(l)) };
         }
     }
 }
 
 /// Batched LUT binary GEMM: `Y = X·W` for a packed ±alpha matrix,
-/// `X` row-major `(batch, rows)`, `Y` row-major `(batch, cols)`.
-/// Streams each sign-plane byte once for all `batch` rows; per-row math
-/// is bit-identical to [`super::gemv_lut::gemv_binary_lut`].
+/// `X` row-major `(batch, rows)`, `Y` row-major `(batch, cols)`
+/// (overwritten). Per-row math is bit-identical to
+/// [`super::gemv_lut::gemv_binary_lut`].
 pub fn gemm_binary_lut(w: &PackedBinary, x: &[f32], batch: usize,
                        y: &mut [f32], scratch: &mut GemmScratch) {
     assert_eq!(x.len(), batch * w.rows);
@@ -111,33 +157,63 @@ pub fn gemm_binary_lut(w: &PackedBinary, x: &[f32], batch: usize,
     if batch == 0 {
         return;
     }
+    let out = SharedOut::new(y);
+    // SAFETY: one shard covering every column of `y`, which stays
+    // borrowed (and otherwise untouched) for the duration of the call.
+    unsafe { gemm_binary_lut_cols(w, x, batch, 0, w.cols, out, scratch) }
+}
+
+/// Column shard `[c0, c1)` of [`gemm_binary_lut`]. Streams only those
+/// columns' sign-plane bytes.
+///
+/// # Safety
+/// `out` must view a live row-major `(batch, w.cols)` buffer, and no
+/// concurrent shard may overlap this one's column range.
+pub unsafe fn gemm_binary_lut_cols(w: &PackedBinary, x: &[f32], batch: usize,
+                                   c0: usize, c1: usize, out: SharedOut,
+                                   scratch: &mut GemmScratch) {
+    debug_assert_eq!(x.len(), batch * w.rows);
+    debug_assert_eq!(out.len(), batch * w.cols);
+    debug_assert!(c0 <= c1 && c1 <= w.cols);
+    if batch == 0 || c0 == c1 {
+        return;
+    }
     let wpc = words_per_col(w.rows);
-    let groups = w.rows.div_ceil(8);
     let stride = wpc * 8;
-    scratch.resize(batch, w.cols);
+    let groups = w.rows.div_ceil(8);
+    let ncols = c1 - c0;
+    scratch.ensure(ncols, batch);
+    let GemmScratch { tables, xt, acc, totals } = scratch;
     // per-row prefix sum, same summation order as the per-slot kernel
     for b in 0..batch {
-        scratch.totals[b] = x[b * w.rows..(b + 1) * w.rows].iter().sum();
-    }
-    for c in 0..w.cols {
-        for b in 0..batch {
-            scratch.acc[c * batch + b] = -scratch.totals[b];
-        }
+        totals[b] = x[b * w.rows..(b + 1) * w.rows].iter().sum();
     }
     let sign = le_bytes(&w.sign);
-    for g in 0..groups {
-        gather_tile(x, w.rows, batch, g, &mut scratch.xt);
-        build_subset_sums_batch(&scratch.xt, batch, &mut scratch.tables);
-        let t = &scratch.tables;
-        for c in 0..w.cols {
-            let ts = &t[sign[c * stride + g] as usize * batch..][..batch];
-            let a = &mut scratch.acc[c * batch..(c + 1) * batch];
-            for b in 0..batch {
-                a[b] += 2.0 * ts[b];
+    let two = F32x8::splat(2.0);
+    let alpha = F32x8::splat(w.alpha);
+    for b0 in (0..batch).step_by(LANES) {
+        let lanes = (batch - b0).min(LANES);
+        // start from "all sign bits clear" = -Σx per live lane; dead
+        // tail lanes run on zeros and are masked out at fold time
+        let mut init = [0.0f32; LANES];
+        for (l, v) in init[..lanes].iter_mut().enumerate() {
+            *v = -totals[b0 + l];
+        }
+        let init = F32x8(init);
+        for a in acc[..ncols].iter_mut() {
+            *a = init;
+        }
+        for g in 0..groups {
+            gather_tile(x, w.rows, b0, lanes, g, xt);
+            build_subset_sums_tile(xt, tables);
+            for (ci, a) in acc[..ncols].iter_mut().enumerate() {
+                let t = tables[sign[(c0 + ci) * stride + g] as usize];
+                *a = *a + two * t;
             }
         }
+        // SAFETY: forwarded from this function's contract.
+        unsafe { fold_tile(&acc[..ncols], alpha, b0, lanes, c0, w.cols, out) };
     }
-    fold_out(&scratch.acc, w.cols, batch, w.alpha, y);
 }
 
 /// Batched LUT ternary GEMM over the sign/mask packing; per-row math is
@@ -149,35 +225,57 @@ pub fn gemm_ternary_lut(w: &PackedTernary, x: &[f32], batch: usize,
     if batch == 0 {
         return;
     }
+    let out = SharedOut::new(y);
+    // SAFETY: one shard covering every column of `y` (see above).
+    unsafe { gemm_ternary_lut_cols(w, x, batch, 0, w.cols, out, scratch) }
+}
+
+/// Column shard `[c0, c1)` of [`gemm_ternary_lut`].
+///
+/// # Safety
+/// Same contract as [`gemm_binary_lut_cols`].
+pub unsafe fn gemm_ternary_lut_cols(w: &PackedTernary, x: &[f32],
+                                    batch: usize, c0: usize, c1: usize,
+                                    out: SharedOut,
+                                    scratch: &mut GemmScratch) {
+    debug_assert_eq!(x.len(), batch * w.rows);
+    debug_assert_eq!(out.len(), batch * w.cols);
+    debug_assert!(c0 <= c1 && c1 <= w.cols);
+    if batch == 0 || c0 == c1 {
+        return;
+    }
     let wpc = words_per_col(w.rows);
-    let groups = w.rows.div_ceil(8);
     let stride = wpc * 8;
-    scratch.resize(batch, w.cols);
-    scratch.acc[..w.cols * batch].fill(0.0);
+    let groups = w.rows.div_ceil(8);
+    let ncols = c1 - c0;
+    scratch.ensure(ncols, batch);
+    let GemmScratch { tables, xt, acc, .. } = scratch;
     let sign = le_bytes(&w.sign);
     let mask = le_bytes(&w.mask);
-    for g in 0..groups {
-        gather_tile(x, w.rows, batch, g, &mut scratch.xt);
-        build_subset_sums_batch(&scratch.xt, batch, &mut scratch.tables);
-        let t = &scratch.tables;
-        for c in 0..w.cols {
-            let idx = c * stride + g;
-            let (m, s) = (mask[idx], sign[idx]);
-            let tp = &t[(m & s) as usize * batch..][..batch];
-            let tn = &t[(m & !s) as usize * batch..][..batch];
-            let a = &mut scratch.acc[c * batch..(c + 1) * batch];
-            for b in 0..batch {
-                a[b] += tp[b] - tn[b];
+    let alpha = F32x8::splat(w.alpha);
+    for b0 in (0..batch).step_by(LANES) {
+        let lanes = (batch - b0).min(LANES);
+        acc[..ncols].fill(F32x8::ZERO);
+        for g in 0..groups {
+            gather_tile(x, w.rows, b0, lanes, g, xt);
+            build_subset_sums_tile(xt, tables);
+            for (ci, a) in acc[..ncols].iter_mut().enumerate() {
+                let idx = (c0 + ci) * stride + g;
+                let (m, s) = (mask[idx], sign[idx]);
+                let tp = tables[(m & s) as usize];
+                let tn = tables[(m & !s) as usize];
+                *a = *a + (tp - tn);
             }
         }
+        // SAFETY: forwarded from this function's contract.
+        unsafe { fold_tile(&acc[..ncols], alpha, b0, lanes, c0, w.cols, out) };
     }
-    fold_out(&scratch.acc, w.cols, batch, w.alpha, y);
 }
 
 /// Batched GEMM over precomputed pos/neg selector planes — the
 /// wide-batch layout of [`super::planes`], and the closest software
 /// analogue of the accelerator: two selector-plane bytes are read per
-/// (group, column) **for the whole batch**, with no byte-ops in the
+/// (group, column) **for a whole lane tile**, with no byte-ops in the
 /// loop. Per-row math is bit-identical to
 /// [`super::planes::gemv_ternary_planes`].
 pub fn gemm_ternary_planes(w: &TernaryPlanes, x: &[f32], batch: usize,
@@ -187,28 +285,100 @@ pub fn gemm_ternary_planes(w: &TernaryPlanes, x: &[f32], batch: usize,
     if batch == 0 {
         return;
     }
+    let out = SharedOut::new(y);
+    // SAFETY: one shard covering every column of `y` (see above).
+    unsafe { gemm_ternary_planes_cols(w, x, batch, 0, w.cols, out, scratch) }
+}
+
+/// Column shard `[c0, c1)` of [`gemm_ternary_planes`].
+///
+/// # Safety
+/// Same contract as [`gemm_binary_lut_cols`].
+pub unsafe fn gemm_ternary_planes_cols(w: &TernaryPlanes, x: &[f32],
+                                       batch: usize, c0: usize, c1: usize,
+                                       out: SharedOut,
+                                       scratch: &mut GemmScratch) {
+    debug_assert_eq!(x.len(), batch * w.rows);
+    debug_assert_eq!(out.len(), batch * w.cols);
+    debug_assert!(c0 <= c1 && c1 <= w.cols);
+    if batch == 0 || c0 == c1 {
+        return;
+    }
     let wpc = words_per_col(w.rows);
-    let groups = w.rows.div_ceil(8);
     let stride = wpc * 8;
-    scratch.resize(batch, w.cols);
-    scratch.acc[..w.cols * batch].fill(0.0);
+    let groups = w.rows.div_ceil(8);
+    let ncols = c1 - c0;
+    scratch.ensure(ncols, batch);
+    let GemmScratch { tables, xt, acc, .. } = scratch;
     let pos = le_bytes(&w.pos);
     let neg = le_bytes(&w.neg);
-    for g in 0..groups {
-        gather_tile(x, w.rows, batch, g, &mut scratch.xt);
-        build_subset_sums_batch(&scratch.xt, batch, &mut scratch.tables);
-        let t = &scratch.tables;
-        for c in 0..w.cols {
-            let idx = c * stride + g;
-            let tp = &t[pos[idx] as usize * batch..][..batch];
-            let tn = &t[neg[idx] as usize * batch..][..batch];
-            let a = &mut scratch.acc[c * batch..(c + 1) * batch];
-            for b in 0..batch {
-                a[b] += tp[b] - tn[b];
+    let alpha = F32x8::splat(w.alpha);
+    for b0 in (0..batch).step_by(LANES) {
+        let lanes = (batch - b0).min(LANES);
+        acc[..ncols].fill(F32x8::ZERO);
+        for g in 0..groups {
+            gather_tile(x, w.rows, b0, lanes, g, xt);
+            build_subset_sums_tile(xt, tables);
+            for (ci, a) in acc[..ncols].iter_mut().enumerate() {
+                let idx = (c0 + ci) * stride + g;
+                let tp = tables[pos[idx] as usize];
+                let tn = tables[neg[idx] as usize];
+                *a = *a + (tp - tn);
             }
         }
+        // SAFETY: forwarded from this function's contract.
+        unsafe { fold_tile(&acc[..ncols], alpha, b0, lanes, c0, w.cols, out) };
     }
-    fold_out(&scratch.acc, w.cols, batch, w.alpha, y);
+}
+
+/// Column shard of the dense-f32 `Y = X·W + bias` the LM head runs over
+/// the gathered active rows: for each row `j` of the `(batch, rows)`
+/// block `x`, writes `out[row_of[j]*cols + c] = Σ_r x[j,r]·w[r,c] +
+/// bias[c]` for `c` in `[c0, c1)`. `row_of` maps block rows to output
+/// rows, so callers can scatter straight into active slots' logit rows
+/// and never touch idle rows. Per-element f32 op sequence (ascending-`r`
+/// accumulation from 0, then one bias add) is identical to
+/// [`super::gemv::gemv_f32`] + a bias loop — the per-slot reference
+/// head path — so results are bit-identical for every shard split.
+///
+/// # Safety
+/// `out` must view a live buffer of at least `(max(row_of)+1) * cols`
+/// elements, and no concurrent shard may overlap this one's column
+/// range.
+pub unsafe fn gemm_f32_bias_cols(w: &[f32], rows: usize, cols: usize,
+                                 x: &[f32], bias: &[f32], row_of: &[usize],
+                                 c0: usize, c1: usize, out: SharedOut) {
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(x.len(), row_of.len() * rows);
+    debug_assert_eq!(bias.len(), cols);
+    debug_assert!(c0 <= c1 && c1 <= cols);
+    // Column blocks with an r-outer inner loop, so `w` is read in
+    // contiguous runs (the streaming access pattern of `gemv_f32`, not
+    // a stride-`cols` column walk). Per element this is still the same
+    // ascending-r accumulation from 0.0 — the independent per-column
+    // sums don't care which loop is outermost — so the bit-exactness
+    // contract is unchanged.
+    const BLK: usize = 64;
+    let mut acc = [0.0f32; BLK];
+    for (j, &orow) in row_of.iter().enumerate() {
+        let xr = &x[j * rows..(j + 1) * rows];
+        let mut c = c0;
+        while c < c1 {
+            let n = (c1 - c).min(BLK);
+            acc[..n].fill(0.0);
+            for (r, &xv) in xr.iter().enumerate() {
+                let wrow = &w[r * cols + c..r * cols + c + n];
+                for (a, &wv) in acc[..n].iter_mut().zip(wrow) {
+                    *a += xv * wv;
+                }
+            }
+            for (k, &a) in acc[..n].iter().enumerate() {
+                // SAFETY: forwarded from this function's contract.
+                unsafe { out.write(orow * cols + c + k, a + bias[c + k]) };
+            }
+            c += n;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -225,8 +395,12 @@ mod tests {
     #[test]
     fn batched_binary_matches_per_slot_bitwise() {
         let mut rng = Rng::new(51);
+        // batches straddle the 8-lane tile: 1 (mostly-dead tile), 7
+        // (masked tail only), 8 (exactly one tile), 9 (tile + 1-lane
+        // tail), 16 and 64 (multiple full tiles)
         for (rows, cols, batch) in [(64, 16, 4), (100, 37, 1), (7, 3, 5),
-                                    (129, 8, 16), (65, 12, 3)] {
+                                    (129, 8, 16), (65, 12, 3), (64, 16, 7),
+                                    (100, 37, 8), (65, 12, 9), (33, 20, 64)] {
             let alpha = 0.2f32;
             let w: Vec<f32> = (0..rows * cols)
                 .map(|_| if rng.bernoulli(0.5) { alpha } else { -alpha })
@@ -253,7 +427,7 @@ mod tests {
     fn batched_ternary_matches_per_slot_bitwise() {
         let mut rng = Rng::new(53);
         for (rows, cols, batch) in [(64, 16, 4), (100, 37, 2), (5, 2, 7),
-                                    (513, 24, 8)] {
+                                    (513, 24, 8), (64, 16, 9), (37, 11, 64)] {
             let alpha = 0.15f32;
             let w = rand_ternary(&mut rng, rows * cols, alpha);
             let packed = PackedTernary::pack(&w, rows, cols, alpha);
@@ -278,6 +452,108 @@ mod tests {
                                "planes ({rows},{cols}) b {b} col {c}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn column_shards_reassemble_the_full_gemm() {
+        // Any column split must reproduce the one-shard result exactly —
+        // the invariant that makes thread-count irrelevant to logits.
+        let mut rng = Rng::new(57);
+        let (rows, cols, batch) = (70, 29, 11);
+        let alpha = 0.15f32;
+        let w = rand_ternary(&mut rng, rows * cols, alpha);
+        let packed = PackedTernary::pack(&w, rows, cols, alpha);
+        let planes = TernaryPlanes::from_packed(&packed);
+        let x: Vec<f32> = (0..batch * rows).map(|_| rng.normal_f32()).collect();
+        let mut s = GemmScratch::default();
+        let mut whole = vec![0.0f32; batch * cols];
+        gemm_ternary_planes(&planes, &x, batch, &mut whole, &mut s);
+        for splits in [vec![0, 29], vec![0, 1, 29], vec![0, 7, 13, 28, 29]] {
+            let mut sharded = vec![f32::NAN; batch * cols];
+            {
+                let out = SharedOut::new(&mut sharded);
+                for pair in splits.windows(2) {
+                    // SAFETY: shards cover disjoint [c0, c1) ranges and
+                    // `sharded` outlives them (sequential here).
+                    unsafe {
+                        gemm_ternary_planes_cols(&planes, &x, batch, pair[0],
+                                                 pair[1], out, &mut s);
+                    }
+                }
+            }
+            for (i, (a, b)) in whole.iter().zip(&sharded).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "splits {splits:?} elt {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_capacity_is_stable_across_alternating_batches() {
+        // Continuous batching alternates batch widths every step; the
+        // scratch must reach steady state after the widest batch and
+        // never shrink-then-regrow (no allocator traffic in the hot
+        // loop).
+        let mut rng = Rng::new(59);
+        let (rows, cols) = (48, 24);
+        let alpha = 0.1f32;
+        let w = rand_ternary(&mut rng, rows * cols, alpha);
+        let packed = PackedTernary::pack(&w, rows, cols, alpha);
+        let mut s = GemmScratch::default();
+        let run = |s: &mut GemmScratch, batch: usize, rng: &mut Rng| {
+            let x: Vec<f32> = (0..batch * rows).map(|_| rng.normal_f32()).collect();
+            let mut y = vec![0.0f32; batch * cols];
+            gemm_ternary_lut(&packed, &x, batch, &mut y, s);
+        };
+        run(&mut s, 64, &mut rng); // widest batch first: steady state
+        let caps = (s.tables.capacity(), s.xt.capacity(), s.acc.capacity(),
+                    s.totals.capacity());
+        let ptrs = (s.tables.as_ptr(), s.acc.as_ptr(), s.totals.as_ptr());
+        let lens = (s.tables.len(), s.xt.len(), s.acc.len(), s.totals.len());
+        for batch in [1usize, 9, 64, 3, 64, 8, 1, 64] {
+            run(&mut s, batch, &mut rng);
+            assert_eq!((s.tables.capacity(), s.xt.capacity(), s.acc.capacity(),
+                        s.totals.capacity()), caps,
+                       "capacity changed at batch {batch}");
+            assert_eq!((s.tables.as_ptr(), s.acc.as_ptr(), s.totals.as_ptr()),
+                       ptrs, "buffer reallocated at batch {batch}");
+            assert_eq!((s.tables.len(), s.xt.len(), s.acc.len(),
+                        s.totals.len()), lens,
+                       "len shrank at batch {batch} (grow-only violated)");
+        }
+    }
+
+    #[test]
+    fn dense_bias_cols_match_gemv_reference() {
+        use crate::quant::gemv_f32;
+        let mut rng = Rng::new(61);
+        let (rows, cols, batch) = (23, 17, 5);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal_f32()).collect();
+        let bias: Vec<f32> = (0..cols).map(|_| rng.normal_f32()).collect();
+        let x: Vec<f32> = (0..batch * rows).map(|_| rng.normal_f32()).collect();
+        // scatter rows 0..batch into output rows 2*j of a wider buffer
+        let row_of: Vec<usize> = (0..batch).map(|j| 2 * j).collect();
+        let mut y = vec![f32::NAN; 2 * batch * cols];
+        {
+            let out = SharedOut::new(&mut y);
+            // SAFETY: disjoint shards, buffer outlives them.
+            unsafe {
+                gemm_f32_bias_cols(&w, rows, cols, &x, &bias, &row_of, 0, 9, out);
+                gemm_f32_bias_cols(&w, rows, cols, &x, &bias, &row_of, 9, cols,
+                                   out);
+            }
+        }
+        for j in 0..batch {
+            let mut want = vec![0.0f32; cols];
+            gemv_f32(&w, rows, cols, &x[j * rows..(j + 1) * rows], &mut want);
+            for c in 0..cols {
+                let got = y[2 * j * cols + c];
+                assert_eq!(got.to_bits(), (want[c] + bias[c]).to_bits(),
+                           "row {j} col {c}");
+            }
+            // the in-between rows were never written
+            assert!(y[(2 * j + 1) * cols..(2 * j + 2) * cols]
+                        .iter().all(|v| v.is_nan()));
         }
     }
 

@@ -9,10 +9,12 @@ pub mod gemv_lut;
 pub mod memory;
 pub mod pack;
 pub mod planes;
+pub mod simd;
 
 pub use cell::{Packed, PackedLstmCell};
 pub use gemm::{gemm_binary_lut, gemm_ternary_lut, gemm_ternary_planes,
                GemmScratch};
+pub use simd::{F32x8, SharedOut};
 pub use gemv::{gemm_binary, gemm_ternary, gemv_binary, gemv_f32, gemv_ternary};
 pub use gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};
 pub use memory::{bandwidth_saving_vs_12bit, paper_kbytes, paper_mbytes,

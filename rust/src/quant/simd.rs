@@ -1,0 +1,176 @@
+//! Portable 8-lane f32 SIMD tile type for the batch-blocked GEMM kernels.
+//!
+//! The batched plane-streaming kernels in [`super::gemm`] process decode
+//! slots in **lane tiles of 8**: one [`F32x8`] holds the same scalar for
+//! 8 consecutive batch rows, so the per-(group, column) update
+//! `acc += T[pos] - T[neg]` is a pair of 8-wide vector ops instead of a
+//! dynamic-length scalar loop. The type is a plain 32-byte-aligned
+//! `[f32; 8]` newtype with `#[inline(always)]` element-wise operators —
+//! no nightly `std::simd`, no intrinsics, no crates: fixed-count loops
+//! over an aligned 8-array are the one shape LLVM reliably lowers to
+//! full-width vector instructions (AVX on x86-64, NEON pairs on
+//! aarch64) at `opt-level=3` on stable.
+//!
+//! **Bit-exactness:** every operator is a lane-wise IEEE-754 f32 op, so
+//! lane `l` of a vector expression computes exactly the scalar f32
+//! expression on lane `l`'s inputs — vectorizing across the batch
+//! dimension cannot change a single result bit. This is what lets the
+//! tiled kernels keep the per-slot-GEMV bit-exactness contract of
+//! [`super::gemm`].
+
+/// Lane count of [`F32x8`] — the batch-block width of the tiled kernels.
+pub const LANES: usize = 8;
+
+/// 8 f32 lanes, 32-byte aligned (one AVX register / two NEON registers).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C, align(32))]
+pub struct F32x8(pub [f32; LANES]);
+
+impl F32x8 {
+    pub const ZERO: F32x8 = F32x8([0.0; LANES]);
+
+    #[inline(always)]
+    pub fn splat(v: f32) -> Self {
+        F32x8([v; LANES])
+    }
+
+    /// Lane `l`'s scalar value.
+    #[inline(always)]
+    pub fn lane(self, l: usize) -> f32 {
+        self.0[l]
+    }
+}
+
+impl std::ops::Add for F32x8 {
+    type Output = F32x8;
+
+    #[inline(always)]
+    fn add(self, rhs: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for i in 0..LANES {
+            r[i] += rhs.0[i];
+        }
+        F32x8(r)
+    }
+}
+
+impl std::ops::Sub for F32x8 {
+    type Output = F32x8;
+
+    #[inline(always)]
+    fn sub(self, rhs: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for i in 0..LANES {
+            r[i] -= rhs.0[i];
+        }
+        F32x8(r)
+    }
+}
+
+impl std::ops::Mul for F32x8 {
+    type Output = F32x8;
+
+    #[inline(always)]
+    fn mul(self, rhs: F32x8) -> F32x8 {
+        let mut r = self.0;
+        for i in 0..LANES {
+            r[i] *= rhs.0[i];
+        }
+        F32x8(r)
+    }
+}
+
+/// Shared handle to an output buffer that several column shards write
+/// concurrently (each shard owns a disjoint set of element indices, so
+/// there is never a two-writer race on any element).
+///
+/// Rust's reference rules cannot express "N mutable views of one slice
+/// with element-disjoint write sets that are not contiguous ranges" —
+/// column shards of a row-major `(batch, cols)` buffer write strided,
+/// interleaved elements. This wrapper confines the necessary raw-pointer
+/// writes to one audited `unsafe` site; everything else in the kernels
+/// stays safe code.
+#[derive(Clone, Copy, Debug)]
+pub struct SharedOut {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: SharedOut is only a pointer + length; sending or sharing it is
+// harmless. All writes go through the `unsafe fn write` below, whose
+// contract (disjoint indices per concurrent writer, buffer outlives the
+// writers) is discharged by the dispatching caller.
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
+
+impl SharedOut {
+    /// View `y` as a shard-writable output. The borrow ends when this
+    /// call returns; the *caller* must keep `y` alive and untouched (no
+    /// reads, no other writers outside the shard contract) until every
+    /// shard holding the handle has finished.
+    pub fn new(y: &mut [f32]) -> Self {
+        Self { ptr: y.as_mut_ptr(), len: y.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write element `i`.
+    ///
+    /// # Safety
+    /// `i < self.len()`, the underlying buffer is still live, and no
+    /// other thread writes or reads element `i` concurrently.
+    #[inline(always)]
+    pub unsafe fn write(self, i: usize, v: f32) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = v }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanewise_ops_match_scalar() {
+        let a = F32x8([1.0, -2.5, 0.0, 3.25, -0.5, 7.0, 1e-3, -1e3]);
+        let b = F32x8([0.5, 2.5, -1.0, 0.25, 0.5, -7.0, 1e-3, 1e3]);
+        let sum = a + b;
+        let diff = a - b;
+        let prod = a * b;
+        for l in 0..LANES {
+            assert_eq!(sum.lane(l).to_bits(), (a.0[l] + b.0[l]).to_bits());
+            assert_eq!(diff.lane(l).to_bits(), (a.0[l] - b.0[l]).to_bits());
+            assert_eq!(prod.lane(l).to_bits(), (a.0[l] * b.0[l]).to_bits());
+        }
+        assert_eq!(F32x8::splat(2.0).0, [2.0; LANES]);
+        assert_eq!(F32x8::ZERO.0, [0.0; LANES]);
+    }
+
+    #[test]
+    fn alignment_is_32_bytes() {
+        assert_eq!(std::mem::align_of::<F32x8>(), 32);
+        assert_eq!(std::mem::size_of::<F32x8>(), 32);
+    }
+
+    #[test]
+    fn shared_out_writes_land() {
+        let mut y = vec![0.0f32; 6];
+        let out = SharedOut::new(&mut y);
+        assert_eq!(out.len(), 6);
+        assert!(!out.is_empty());
+        // SAFETY: single-threaded, indices in range, `y` outlives the use.
+        unsafe {
+            out.write(0, 1.5);
+            out.write(5, -2.0);
+        }
+        assert_eq!(y[0], 1.5);
+        assert_eq!(y[5], -2.0);
+        assert_eq!(y[2], 0.0);
+    }
+}

@@ -13,7 +13,12 @@
 //!   only a loose distributional bound holds.
 //! * seed-matrix suite: packed-cpu/packed-planes × per-slot/batched
 //!   GEMM, all bit-for-bit, with an FNV digest per seed that `ci.sh`
-//!   compares across two runs to catch nondeterminism.
+//!   compares across two runs to catch nondeterminism. The batched
+//!   configs honor `RBTW_THREADS` (worker threads for the sharded
+//!   SIMD-tiled path; default 1), and `ci.sh` runs the suite once with
+//!   `RBTW_THREADS=1` and once with `RBTW_THREADS=4`: a digest mismatch
+//!   means thread count leaked into the logits — a serving bug even if
+//!   each run is internally consistent.
 
 use std::path::PathBuf;
 
@@ -87,11 +92,27 @@ fn packed_cpu_and_planes_agree_bit_for_bit() {
     }
 }
 
+/// Worker-thread count for the batched configs of the seed matrix
+/// (`RBTW_THREADS`, default 1). The digest must be identical for every
+/// value — `ci.sh` enforces it across a 1-thread and a 4-thread run.
+fn digest_threads() -> usize {
+    match std::env::var("RBTW_THREADS") {
+        // a present-but-unparsable value must FAIL, not silently fall
+        // back to 1 — that would turn ci.sh's threads=1-vs-threads=4
+        // digest comparison into a vacuous 1-vs-1 pass
+        Ok(s) => s.parse().unwrap_or_else(|_| {
+            panic!("RBTW_THREADS must be a positive integer, got '{s}'")
+        }),
+        Err(_) => 1,
+    }
+}
+
 /// The full cross-backend × cross-path equivalence matrix for one seed:
 /// packed-cpu / packed-planes, each stepped per-slot and batched, over
 /// a mixed active/idle schedule — all four logit streams must agree bit
 /// for bit. Returns an FNV-1a digest of the (single, shared) stream so
-/// repeated runs can be compared for nondeterminism.
+/// repeated runs can be compared for nondeterminism (and, across
+/// different `RBTW_THREADS` values, for thread-count invariance).
 fn equivalence_digest(seed: u64) -> u64 {
     let vocab = 30 + (seed as usize % 7);
     let hidden = 17 + (seed as usize % 5); // never a multiple of 64
@@ -101,7 +122,8 @@ fn equivalence_digest(seed: u64) -> u64 {
     let mut streams = vec![];
     for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
         for batched in [false, true] {
-            let mut spec = BackendSpec::with(kind, 5, seed ^ 3);
+            let mut spec = BackendSpec::with(kind, 5, seed ^ 3)
+                .with_threads(digest_threads());
             spec.batch_gemm = batched;
             let mut b = engine::from_weights(&w, &spec).unwrap();
             streams.push(drive(&mut *b, &sched));

@@ -6,12 +6,16 @@
 //! * ternary density equals the fraction of non-zeros
 //! * the one-hot fast path `Packed::add_row(r, y)` equals a GEMV against
 //!   the one-hot basis vector e_r, for every packing layout
-//! * the batched plane-streaming GEMM (`Packed::gemm`) equals the
-//!   per-slot GEMV **bit for bit** across binary/ternary/planes
-//!   packings, arbitrary batch widths, and non-word-aligned dims
+//! * the SIMD-tiled batched GEMM (`Packed::gemm`) equals the per-slot
+//!   GEMV **bit for bit** across binary/ternary/planes packings, batch
+//!   widths straddling the 8-lane tile ({1, 7, 8, 9, 64} plus random),
+//!   and non-word-aligned dims
 //! * the packed serving backend's batched step equals the per-slot step
 //!   bit for bit under random slot-activity masks (incl. all-idle and
 //!   single-slot batches)
+//! * the thread pool is invisible in the logits: `threads = N` equals
+//!   `threads = 1` bit for bit under random slot-activity masks, for
+//!   every packing layout
 
 use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
 use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, GemmScratch,
@@ -158,14 +162,16 @@ fn prop_add_row_equals_gemv_of_basis_vector() {
 
 #[test]
 fn prop_batched_gemm_equals_per_slot_gemv() {
-    // The tentpole invariant: streaming each packed weight word once for
-    // a whole (batch, rows) activation block must reproduce the per-slot
-    // GEMV bit for bit — per packing layout, for any batch width
-    // (including 1) and non-multiple-of-64/8 dimensions.
+    // The tentpole invariant: streaming each packed weight word once per
+    // 8-lane tile of a (batch, rows) activation block must reproduce the
+    // per-slot GEMV bit for bit — per packing layout, for batch widths
+    // straddling the tile (1 = mostly-dead tile, 7 = masked tail only,
+    // 8 = exactly one tile, 9 = tile + 1-lane tail, 64 = 8 full tiles)
+    // plus small random widths, and non-multiple-of-64/8 dimensions.
     prop::check("batched gemm == per-slot gemv", 120, |g| {
         let rows = g.usize_in(1, 170);
         let cols = g.usize_in(1, 28);
-        let batch = g.usize_in(1, 7);
+        let batch = [1, 7, 8, 9, 64, g.usize_in(1, 7)][g.usize_in(0, 5)];
         let alpha = g.f32_in(0.05, 1.0);
         let layout = g.usize_in(0, 2); // 0=binary, 1=ternary, 2=planes
         let data: Vec<f32> = if layout == 0 {
@@ -247,6 +253,65 @@ fn prop_backend_batched_step_equals_per_slot_under_masks() {
                     format!("{} {quantizer} slots {slots} step {step} \
                              logit {i}: batched {x} per-slot {y}",
                             kind.label()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_backend_threads_bit_identical() {
+    // The slot-group thread pool must be invisible in the logits:
+    // sharding the gate GEMM's columns, the gate tail's rows and the
+    // LM head across N workers produces the same bits as the fully
+    // inline threads=1 path, under random slot-activity masks.
+    prop::check("threads=N == threads=1", 20, |g| {
+        let vocab = g.usize_in(6, 26);
+        // up to 4H = 160 gate columns: wide enough that the GEMM stage
+        // actually splits into >1 concurrent column shard (>= 64 cols
+        // per shard) in a good fraction of cases, while small widths
+        // keep rows non-word-aligned
+        let hidden = g.usize_in(3, 40);
+        let slots = g.usize_in(1, 6);
+        let steps = g.usize_in(2, 8);
+        let threads = g.usize_in(2, 5);
+        let quantizer = if g.bool() { "ter" } else { "bin" };
+        let kind = if g.bool() { BackendKind::PackedPlanes }
+                   else { BackendKind::PackedCpu };
+        let seed = 0x9100 + g.case as u64;
+        let w = ModelWeights::synthetic(vocab, hidden, quantizer, seed);
+        let spec = BackendSpec::with(kind, slots, seed ^ 1);
+        let mut one = engine::from_weights(&w, &spec.with_threads(1))
+            .map_err(|e| format!("build threads=1: {e:#}"))?;
+        let mut many = engine::from_weights(&w, &spec.with_threads(threads))
+            .map_err(|e| format!("build threads={threads}: {e:#}"))?;
+        for s in 0..slots {
+            one.reset_slot(s).map_err(|e| e.to_string())?;
+            many.reset_slot(s).map_err(|e| e.to_string())?;
+        }
+        for step in 0..steps {
+            let tokens: Vec<Option<i32>> = (0..slots)
+                .map(|_| {
+                    if g.bool() {
+                        None
+                    } else {
+                        Some(g.usize_in(0, vocab - 1) as i32)
+                    }
+                })
+                .collect();
+            let mut la = vec![0.0f32; slots * vocab];
+            let mut lb = vec![0.0f32; slots * vocab];
+            one.step_batch(&tokens, &mut la)
+                .map_err(|e| format!("threads=1 step: {e:#}"))?;
+            many.step_batch(&tokens, &mut lb)
+                .map_err(|e| format!("threads={threads} step: {e:#}"))?;
+            for (i, (x, y)) in la.iter().zip(&lb).enumerate() {
+                assert_that(
+                    x.to_bits() == y.to_bits(),
+                    format!("{} {quantizer} slots {slots} threads {threads} \
+                             step {step} logit {i}: 1-thread {x} \
+                             N-thread {y}", kind.label()),
                 )?;
             }
         }
