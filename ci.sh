@@ -41,6 +41,33 @@ fi
 echo "equivalence digests stable across runs and thread counts (1 vs 4):"
 cat target/equiv_digest_a.txt
 
+# Cluster determinism: the identical greedy request set served through a
+# 1-shard and a 2-shard ServingCluster must digest identically (the test
+# also asserts each digest equals the single-InferenceServer reference
+# in-process). A mismatch means shard count or routing leaked into the
+# responses — a serving bug even when each run is self-consistent.
+echo "== cluster determinism (shards=1 vs shards=2 response digests) =="
+rm -f target/cluster_digest_1.txt target/cluster_digest_2.txt
+# (filtered to the digest test — the rest of the suite already ran in
+# the main cargo test pass above)
+RBTW_CLUSTER_DIGEST=target/cluster_digest_1.txt RBTW_CLUSTER_SHARDS=1 \
+    cargo test -q --test cluster_integration cluster_digest_is_shard_invariant
+RBTW_CLUSTER_DIGEST=target/cluster_digest_2.txt RBTW_CLUSTER_SHARDS=2 \
+    cargo test -q --test cluster_integration cluster_digest_is_shard_invariant
+for f in target/cluster_digest_1.txt target/cluster_digest_2.txt; do
+    if [ ! -s "$f" ]; then
+        echo "FAIL: $f missing or empty (cluster digest test did not write it)"
+        exit 1
+    fi
+done
+if ! cmp -s target/cluster_digest_1.txt target/cluster_digest_2.txt; then
+    echo "FAIL: cluster response digests differ between shards=1 and shards=2"
+    diff target/cluster_digest_1.txt target/cluster_digest_2.txt || true
+    exit 1
+fi
+echo "cluster digests identical across shard counts (1 vs 2):"
+cat target/cluster_digest_1.txt
+
 # The seed code predates rustfmt; keep the check advisory unless
 # RBTW_CI_STRICT_FMT=1 (flip once the tree is formatted).
 if cargo fmt --version >/dev/null 2>&1; then

@@ -1,9 +1,11 @@
 //! Serving example: the same continuous-batching server driven over
 //! every engine backend — dense PJRT executable vs the packed
-//! binary/ternary CPU engines — through one `InferBackend` interface.
+//! binary/ternary CPU engines — through one `InferBackend` interface,
+//! plus the sharded serving cluster over one shared weight set.
 //!
 //!   cargo run --release --example serve_lm [-- --backend pjrt|packed|planes|all]
 //!       [--requests N] [--artifact NAME] [--per-slot] [--threads N]
+//!       [--shards N] [--policy least-loaded|round-robin]
 //!
 //! `--per-slot` steps the packed backends through the per-slot GEMV
 //! reference path instead of the default batched SIMD-tiled GEMM (one
@@ -12,6 +14,13 @@
 //! Logits are bit-identical for every path and thread count, only
 //! tokens/sec changes.
 //!
+//! `--shards N` (default 1) additionally serves the packed kinds
+//! through a `ServingCluster`: N engine shards — each its own
+//! continuous-batching server on its own thread — fed by one async
+//! router over ONE shared copy of the packed planes. Greedy responses
+//! are bit-identical to the single server; resident weight bytes stay
+//! constant as shards grow.
+//!
 //! With artifacts built (`make artifacts`) the chosen artifact's init
 //! weights are served; without them a synthetic ternary BN-LSTM stands
 //! in so the packed deployment path still runs end-to-end. The packed
@@ -19,9 +28,10 @@
 
 use std::path::PathBuf;
 
+use rbtw::cluster::{run_cluster_load, RoutePolicy};
 use rbtw::coordinator::{run_load, LoadSpec};
-use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
-use rbtw::util::stats::percentiles;
+use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend,
+                   ModelWeights, SharedModel};
 use rbtw::util::table::Table;
 
 fn flag(args: &[String], name: &str) -> Option<String> {
@@ -44,6 +54,15 @@ fn main() -> anyhow::Result<()> {
             "--threads takes a non-negative integer (0 = auto), got '{s}'"))?,
         None => 0,
     };
+    let shards: usize = match flag(&args, "--shards") {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!(
+            "--shards takes a positive integer, got '{s}'"))?,
+        None => 1,
+    };
+    let policy = match flag(&args, "--policy") {
+        Some(p) => RoutePolicy::parse(&p)?,
+        None => RoutePolicy::LeastLoaded,
+    };
     let kinds: Vec<BackendKind> = if backend_arg == "all" {
         BackendKind::all().to_vec()
     } else {
@@ -59,8 +78,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     let mut t = Table::new(&["backend", "gemm", "thr", "req", "tok/s",
-                             "p50 ms", "p99 ms", "peak batch", "weights B"]);
-    for kind in kinds {
+                             "p50 ms", "p95 ms", "p99 ms", "weights B"]);
+    for kind in kinds.iter().copied() {
         let mut spec = BackendSpec::with(kind, 16, 3).with_threads(threads);
         if per_slot {
             spec = spec.per_slot();
@@ -79,18 +98,13 @@ fn main() -> anyhow::Result<()> {
         };
         let weight_bytes = backend.weight_bytes();
         let load = LoadSpec { n_requests, ..LoadSpec::default() };
-        let (responses, stats, wall) = match run_load(backend, &load) {
+        let report = match run_load(backend, &load) {
             Ok(r) => r,
             Err(e) => {
                 println!("  {} failed mid-serve: {e:#}", kind.label());
                 continue;
             }
         };
-        let lat: Vec<f64> = responses
-            .iter()
-            .map(|r| (r.queue_time + r.run_time).as_secs_f64() * 1e3)
-            .collect();
-        let ps = percentiles(&lat, &[0.5, 0.99]);
         // PjrtDense batches natively inside the executable; the
         // batch-gemm flag only selects a path on the packed backends.
         let gemm_label = if kind == BackendKind::PjrtDense {
@@ -109,11 +123,11 @@ fn main() -> anyhow::Result<()> {
             kind.label().into(),
             gemm_label.into(),
             thr_label,
-            responses.len().to_string(),
-            format!("{:.0}", stats.tokens_processed as f64 / wall),
-            format!("{:.1}", ps[0]),
-            format!("{:.1}", ps[1]),
-            stats.peak_active_slots.to_string(),
+            report.responses.len().to_string(),
+            format!("{:.0}", report.tokens_per_sec()),
+            format!("{:.1}", report.total.p50_ms),
+            format!("{:.1}", report.total.p95_ms),
+            format!("{:.1}", report.total.p99_ms),
             weight_bytes.to_string(),
         ]);
     }
@@ -122,5 +136,49 @@ fn main() -> anyhow::Result<()> {
     println!("\n(packed rows hold weights at 1-2 bits each — the paper's \
               12x deployment memory saving; pjrt-dense needs a real PJRT \
               build and compiled artifacts)");
+
+    if shards > 1 {
+        println!("\n== serving cluster: {shards} shards, {policy} routing, \
+                  one shared weight set ==");
+        let mut ct = Table::new(&["backend", "shards", "req", "tok/s",
+                                  "p50 ms", "p95 ms", "p99 ms",
+                                  "weights B (resident)"]);
+        for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+            if !kinds.contains(&kind) {
+                continue;
+            }
+            let spec = BackendSpec::with(kind, 16, 3)
+                .with_threads(threads)
+                .with_shards(shards);
+            let shared = if have_artifact {
+                let w = ModelWeights::from_artifact(&dir, &artifact)?;
+                SharedModel::prepare(&w, kind, spec.sample_seed)?
+            } else {
+                SharedModel::prepare(&synthetic, kind, spec.sample_seed)?
+            };
+            let load = LoadSpec { n_requests, ..LoadSpec::default() };
+            let report = match run_cluster_load(&shared, &spec, policy,
+                                                load.n_requests, &load) {
+                Ok(r) => r,
+                Err(e) => {
+                    println!("  {} cluster failed: {e:#}", kind.label());
+                    continue;
+                }
+            };
+            ct.row(&[
+                kind.label().into(),
+                shards.to_string(),
+                report.stats.completed.to_string(),
+                format!("{:.0}", report.tokens_per_sec()),
+                format!("{:.1}", report.stats.total.p50_ms),
+                format!("{:.1}", report.stats.total.p95_ms),
+                format!("{:.1}", report.stats.total.p99_ms),
+                shared.weight_bytes().to_string(),
+            ]);
+        }
+        ct.print();
+        println!("\n(every shard aliases the same Arc-backed plane bytes: \
+                  the resident column does not grow with shards)");
+    }
     Ok(())
 }

@@ -17,7 +17,6 @@ use std::collections::BTreeMap;
 
 use rbtw::coordinator::{run_load, LoadSpec};
 use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
-use rbtw::util::stats::percentiles;
 use rbtw::util::table::Table;
 use rbtw::util::Json;
 
@@ -33,8 +32,8 @@ fn main() -> anyhow::Result<()> {
     let model_name = if have { artifact.to_string() } else { synthetic.name.clone() };
     let n_requests = common::scaled(64);
 
-    let mut t = Table::new(&["backend", "req", "tok/s", "p50 ms", "p99 ms",
-                             "weights B"]);
+    let mut t = Table::new(&["backend", "req", "tok/s", "p50 ms", "p95 ms",
+                             "p99 ms", "weights B"]);
     let mut rows = vec![];
     for kind in BackendKind::all() {
         let spec = BackendSpec::with(kind, 16, 3);
@@ -53,35 +52,36 @@ fn main() -> anyhow::Result<()> {
         let weight_bytes = backend.weight_bytes();
         let load = LoadSpec { n_requests, prompt_len: 8, gen_len: 16,
                               temperature: 0.7, seed: 23 };
-        let (responses, stats, wall) = match run_load(backend, &load) {
+        let report = match run_load(backend, &load) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("  [{}] failed mid-serve: {e:#}", kind.label());
                 continue;
             }
         };
-        let tok_s = stats.tokens_processed as f64 / wall;
-        let lat: Vec<f64> = responses
-            .iter()
-            .map(|r| (r.queue_time + r.run_time).as_secs_f64() * 1e3)
-            .collect();
-        let ps = percentiles(&lat, &[0.5, 0.99]);
+        let tok_s = report.tokens_per_sec();
         t.row(&[
             kind.label().into(),
-            responses.len().to_string(),
+            report.responses.len().to_string(),
             format!("{tok_s:.0}"),
-            format!("{:.2}", ps[0]),
-            format!("{:.2}", ps[1]),
+            format!("{:.2}", report.total.p50_ms),
+            format!("{:.2}", report.total.p95_ms),
+            format!("{:.2}", report.total.p99_ms),
             weight_bytes.to_string(),
         ]);
         rows.push(obj(vec![
             ("backend", Json::Str(kind.label().to_string())),
-            ("requests", Json::Num(responses.len() as f64)),
+            ("requests", Json::Num(report.responses.len() as f64)),
             ("tokens_per_sec", Json::Num(tok_s)),
-            ("p50_ms", Json::Num(ps[0])),
-            ("p99_ms", Json::Num(ps[1])),
+            ("p50_ms", Json::Num(report.total.p50_ms)),
+            ("p95_ms", Json::Num(report.total.p95_ms)),
+            ("p99_ms", Json::Num(report.total.p99_ms)),
+            ("queue_p50_ms", Json::Num(report.queue.p50_ms)),
+            ("queue_p99_ms", Json::Num(report.queue.p99_ms)),
+            ("run_p50_ms", Json::Num(report.run.p50_ms)),
+            ("run_p99_ms", Json::Num(report.run.p99_ms)),
             ("weight_bytes", Json::Num(weight_bytes as f64)),
-            ("engine_steps", Json::Num(stats.engine_steps as f64)),
+            ("engine_steps", Json::Num(report.stats.engine_steps as f64)),
         ]));
     }
     t.print();
@@ -118,9 +118,7 @@ fn main() -> anyhow::Result<()> {
                     }
                 };
                 match run_load(backend, &load) {
-                    Ok((_, stats, wall)) => {
-                        Some(stats.tokens_processed as f64 / wall)
-                    }
+                    Ok(report) => Some(report.tokens_per_sec()),
                     Err(e) => {
                         eprintln!("  [{} x{slots}] failed: {e:#}",
                                   kind.label());

@@ -1,0 +1,193 @@
+//! Cluster serving bench: the sharded `ServingCluster` under one
+//! continuous-batching load, swept over shards {1, 2, 4} × per-shard
+//! slots {4, 16, 64}. Reports whole-cluster and per-shard tokens/sec,
+//! p50/p95/p99 latency and — the point of the exercise — the resident
+//! packed weight bytes, which stay CONSTANT as shards grow: every shard
+//! aliases the one `Arc`-backed plane allocation, so horizontal
+//! scale-out adds slot state, never weight memory (the multi-engine
+//! extension of the paper's §6 12× memory saving).
+//!
+//! Two gates enforce this, and they do different jobs: the LIVE-fleet
+//! `plane_owners == 1 + shards` check on every config is the actual
+//! duplication detector (a regression that copied plane bytes per shard
+//! would leave the shared model as sole owner and fail it); the
+//! constant-resident-bytes check at the end pins the per-model
+//! accounting that the owners gate makes truthful. Writes
+//! `BENCH_serve_cluster.json`.
+//!
+//! Uses the `char_ptb_ter` artifact when built, otherwise a synthetic
+//! ternary BN-LSTM stand-in (h=256 so the recurrent matmul dominates).
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use rbtw::cluster::{RoutePolicy, ServingCluster};
+use rbtw::coordinator::LoadSpec;
+use rbtw::engine::{BackendKind, BackendSpec, ModelWeights, SharedModel};
+use rbtw::util::table::Table;
+use rbtw::util::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect::<BTreeMap<_, _>>())
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("serving cluster: shards x slots over ONE shared weight set");
+    let artifact = "char_ptb_ter";
+    let have = common::have(artifact);
+    let synthetic = ModelWeights::synthetic(50, 256, "ter", 0xC1057);
+    let weights = if have {
+        ModelWeights::from_artifact(&common::artifacts_dir(), artifact)?
+    } else {
+        synthetic
+    };
+    let model_name = weights.name.clone();
+
+    let shard_counts = [1usize, 2, 4];
+    let slot_counts = [4usize, 16, 64];
+    let policy = RoutePolicy::LeastLoaded;
+
+    let mut t = Table::new(&["backend", "shards", "slots/shard", "req",
+                             "tok/s", "vs 1 shard", "p50 ms", "p95 ms",
+                             "p99 ms", "weights B (resident)"]);
+    let mut rows = vec![];
+    let mut resident_seen: BTreeMap<&'static str, Vec<usize>> = BTreeMap::new();
+    for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+        // prepare ONCE per kind: the whole sweep serves from this one
+        // packed weight set
+        let shared = SharedModel::prepare(&weights, kind, 3)?;
+        let before_owners = shared.plane_owners();
+        anyhow::ensure!(before_owners == 1,
+                        "fresh shared model must be sole plane owner");
+        for &slots in &slot_counts {
+            let reqs = common::scaled(4 * slots).max(2 * slots);
+            let load = LoadSpec { n_requests: reqs, prompt_len: 4,
+                                  gen_len: 12, temperature: 0.7, seed: 31 };
+            let mut one_shard_tps: Option<f64> = None;
+            for &shards in &shard_counts {
+                let spec = BackendSpec::with(kind, slots, 3)
+                    .with_shards(shards);
+                let mut cluster = match ServingCluster::new(
+                    &shared, &spec, load.n_requests.max(1), policy) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        eprintln!("  [{} {shards}x{slots}] failed: {e:#}",
+                                  kind.label());
+                        continue;
+                    }
+                };
+                // live-fleet duplication detector: exactly the template
+                // + one ALIASING cell per running shard. If from_shared
+                // ever regressed to copying plane bytes, the count
+                // would stay 1 and this gate — not the (per-model, so
+                // necessarily constant) resident column below — fails.
+                anyhow::ensure!(shared.plane_owners() == 1 + shards,
+                                "{} {shards}x{slots}: expected 1+{shards} \
+                                 plane owners, got {}", kind.label(),
+                                shared.plane_owners());
+                let vocab = cluster.vocab();
+                let report = {
+                    let mut failed = false;
+                    for req in load.requests(vocab) {
+                        if let Err(e) = cluster.submit(req) {
+                            eprintln!("  [{} {shards}x{slots}] submit: {e:#}",
+                                      kind.label());
+                            failed = true;
+                            break;
+                        }
+                    }
+                    if failed {
+                        continue;
+                    }
+                    match cluster.drain() {
+                        Ok(r) => r,
+                        Err(e) => {
+                            eprintln!("  [{} {shards}x{slots}] drain: {e:#}",
+                                      kind.label());
+                            continue;
+                        }
+                    }
+                };
+                // drained cluster: every shard cell died with it,
+                // leaving the template as sole owner again — no leak
+                anyhow::ensure!(shared.plane_owners() == 1,
+                                "shard cells must not outlive the cluster");
+                let tps = report.tokens_per_sec();
+                if shards == 1 {
+                    one_shard_tps = Some(tps);
+                }
+                let vs1 = one_shard_tps.map(|t1| tps / t1.max(1e-9));
+                let resident = shared.weight_bytes();
+                resident_seen.entry(kind.label()).or_default().push(resident);
+                let s = &report.stats;
+                t.row(&[
+                    kind.label().into(),
+                    shards.to_string(),
+                    slots.to_string(),
+                    s.completed.to_string(),
+                    format!("{tps:.0}"),
+                    vs1.map(|v| format!("{v:.2}x"))
+                        .unwrap_or_else(|| "-".into()),
+                    format!("{:.2}", s.total.p50_ms),
+                    format!("{:.2}", s.total.p95_ms),
+                    format!("{:.2}", s.total.p99_ms),
+                    resident.to_string(),
+                ]);
+                let shard_tps: Vec<Json> = s.shards
+                    .iter()
+                    .map(|sh| Json::Num(sh.tokens_per_sec))
+                    .collect();
+                let mut fields = vec![
+                    ("backend", Json::Str(kind.label().to_string())),
+                    ("shards", Json::Num(shards as f64)),
+                    ("slots_per_shard", Json::Num(slots as f64)),
+                    ("requests", Json::Num(s.completed as f64)),
+                    ("policy", Json::Str(policy.label().to_string())),
+                    ("tokens_per_sec", Json::Num(tps)),
+                    ("per_shard_tokens_per_sec", Json::Arr(shard_tps)),
+                    ("p50_ms", Json::Num(s.total.p50_ms)),
+                    ("p95_ms", Json::Num(s.total.p95_ms)),
+                    ("p99_ms", Json::Num(s.total.p99_ms)),
+                    ("queue_p99_ms", Json::Num(s.queue.p99_ms)),
+                    ("run_p99_ms", Json::Num(s.run.p99_ms)),
+                    ("engine_steps", Json::Num(s.engine_steps as f64)),
+                    ("weight_bytes_resident", Json::Num(resident as f64)),
+                ];
+                if let Some(v) = vs1 {
+                    fields.push(("speedup_vs_one_shard", Json::Num(v)));
+                }
+                rows.push(obj(fields));
+            }
+        }
+    }
+    t.print();
+
+    // the acceptance gate: resident weight bytes constant per kind
+    // (the kinds themselves may differ — sign/mask vs pos/neg layouts),
+    // i.e. every config of a kind reports the identical footprint.
+    let constant = resident_seen
+        .values()
+        .all(|seen| seen.windows(2).all(|w| w[0] == w[1]));
+    anyhow::ensure!(constant,
+                    "resident weight bytes varied across the shard sweep: \
+                     {resident_seen:?}");
+    println!("\nresident packed weight bytes constant across shards \
+              {shard_counts:?} x slots {slot_counts:?} — scale-out adds \
+              engines, not weight memory");
+
+    let report = obj(vec![
+        ("bench", Json::Str("serve_cluster".into())),
+        ("model", Json::Str(model_name)),
+        ("artifact_mode", Json::Bool(have)),
+        ("policy", Json::Str(policy.label().to_string())),
+        ("weight_bytes_constant", Json::Bool(constant)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_serve_cluster.json", format!("{report}\n"))?;
+    println!("wrote BENCH_serve_cluster.json");
+    Ok(())
+}

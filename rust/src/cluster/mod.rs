@@ -1,0 +1,628 @@
+//! Sharded serving cluster: one shared packed weight set, N engine-shard
+//! workers, one async router.
+//!
+//! This is the "beyond one box" rung of the ROADMAP: the paper's §6
+//! argument makes the weight stream the scarce resource, and PR 2/3
+//! exploited that *within* one engine (one weight stream per step for
+//! all decode slots, sharded across a thread pool). A single engine
+//! worker thread is still the ceiling, though — this module scales out
+//! by running **N whole engines** ([`crate::coordinator::InferenceServer`]
+//! shards, each with its own decode loop on its own thread, its own
+//! slots and its own GEMM thread pool) behind one front door.
+//!
+//! ## Shared-plane ownership
+//!
+//! Naively, N engines would mean N copies of the weights — multiplying
+//! back exactly the 12× memory the paper saves. Instead the cluster owns
+//! ONE [`SharedModel`](crate::engine::SharedModel): the binary/ternary
+//! deployment weights are sampled, packed and BN-folded once, and every
+//! shard's cell is a clone that aliases the same `Arc`-backed plane
+//! allocations (see [`crate::quant::pack`]). Growing the cluster adds
+//! slot state and scratch — tens of KB — never plane bytes;
+//! `rust/tests/cluster_integration.rs` pins this down with
+//! `Arc::strong_count` and pointer-identity assertions, and the
+//! `serve_cluster` bench reports constant resident weight bytes across
+//! shard counts.
+//!
+//! ## Architecture
+//!
+//! * **Front door**: clients [`ServingCluster::submit`] into a bounded
+//!   MPMC queue ([`BoundedQueue`]); a full queue fails fast
+//!   (backpressure), a draining cluster rejects new work but completes
+//!   everything accepted.
+//! * **Router**: one async thread pops the front queue and dispatches to
+//!   per-shard bounded inboxes under a pluggable [`RoutePolicy`] —
+//!   `least-loaded` (default: argmin of in-flight requests) or
+//!   `round-robin`. A full inbox blocks the router, propagating
+//!   pressure back to the front door instead of buffering unboundedly.
+//! * **Shard workers**: each owns an `InferenceServer` over a
+//!   [`from_shared`] backend and runs the continuous-batching loop —
+//!   admit from inbox, step all active slots, emit completions. The
+//!   single-server code path IS the 1-shard special case; the cluster
+//!   adds routing around it, never a second decode loop.
+//! * **Completions**: per-shard channels merge into one response stream
+//!   (`mpsc` sender clones); [`ServingCluster::drain`] closes the front
+//!   door, lets every accepted request finish, joins all threads and
+//!   returns the merged responses plus [`ClusterStats`] (per-shard and
+//!   whole-cluster tokens/sec, p50/p95/p99 latency).
+//!
+//! ## Why shard outputs are bit-identical to a single server
+//!
+//! A request's trajectory depends only on (a) the packed weights and
+//! (b) its own token stream: its slot state is zeroed on admission, the
+//! batched/threaded kernels are bit-identical to the per-slot reference
+//! for every batch composition and thread count (PR 2/3 invariants), and
+//! greedy sampling plus the prompt log-prob are pure functions of the
+//! logits. Routing therefore only decides *where* and *when* a request
+//! runs, never *what* it computes: for a greedy request set, a cluster
+//! with any shard count and either policy produces bit-identical
+//! generated tokens and prompt log-probs to one `InferenceServer` —
+//! enforced by `cluster_integration.rs` and the `ci.sh` shards=1 vs
+//! shards=2 digest diff. (At temperature > 0, sampled tokens depend on
+//! each server's rng stream and therefore on scheduling; equivalence is
+//! a greedy-decoding guarantee.)
+
+mod queue;
+mod stats;
+
+pub use queue::{BoundedQueue, PushRefused};
+pub use stats::{ClusterStats, ShardStats};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{latency_breakdown, validate_request,
+                         InferenceServer, LoadSpec, Request, Response,
+                         ServerStats};
+use crate::engine::{from_shared, BackendSpec, SharedModel, ThreadPool};
+
+/// How the router assigns requests to engine shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Dispatch to the shard with the fewest in-flight requests
+    /// (routed minus completed); ties go to the lowest shard id.
+    LeastLoaded,
+    /// Dispatch strictly in rotation, ignoring load.
+    RoundRobin,
+}
+
+impl RoutePolicy {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "least-loaded" | "least_loaded" | "ll" => RoutePolicy::LeastLoaded,
+            "round-robin" | "round_robin" | "rr" => RoutePolicy::RoundRobin,
+            other => anyhow::bail!(
+                "unknown routing policy '{other}' \
+                 (expected least-loaded|round-robin)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RoutePolicy::LeastLoaded => "least-loaded",
+            RoutePolicy::RoundRobin => "round-robin",
+        }
+    }
+
+    pub fn all() -> [RoutePolicy; 2] {
+        [RoutePolicy::LeastLoaded, RoutePolicy::RoundRobin]
+    }
+}
+
+impl Default for RoutePolicy {
+    fn default() -> Self {
+        RoutePolicy::LeastLoaded
+    }
+}
+
+impl std::fmt::Display for RoutePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// A completed request, tagged with the shard that served it.
+#[derive(Clone, Debug)]
+pub struct ClusterResponse {
+    pub shard: usize,
+    pub response: Response,
+}
+
+/// Everything a drained cluster run produced.
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    /// Merged response stream (arrival order; sort by id to compare).
+    pub responses: Vec<ClusterResponse>,
+    pub stats: ClusterStats,
+}
+
+impl ClusterReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.stats.tokens_per_sec
+    }
+}
+
+type Routed = (Request, Instant);
+
+/// The sharded serving cluster; see the module docs.
+pub struct ServingCluster {
+    front: Arc<BoundedQueue<Routed>>,
+    router: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<ServerStats>>,
+    routed: Arc<Vec<AtomicU64>>,
+    done_rx: mpsc::Receiver<ClusterResponse>,
+    vocab: usize,
+    n_shards: usize,
+    slots_per_shard: usize,
+    weight_bytes: usize,
+    policy: RoutePolicy,
+    submitted: u64,
+    started: Instant,
+}
+
+impl ServingCluster {
+    /// Build `spec.shards` engine shards over `shared` (each
+    /// [`from_shared`] — zero-copy on the plane bytes) and start the
+    /// router + worker threads. `queue_cap` bounds the front door.
+    ///
+    /// With `spec.threads = 0` (auto), the machine's per-core GEMM
+    /// worker budget is divided across the shards (`available / shards`
+    /// workers each, min 1) so scaling out shards doesn't oversubscribe
+    /// the CPU; an explicit thread count applies to every shard
+    /// unchanged.
+    pub fn new(shared: &SharedModel, spec: &BackendSpec, queue_cap: usize,
+               policy: RoutePolicy) -> Result<Self> {
+        let shards = spec.shards;
+        anyhow::ensure!(shards >= 1, "need at least one engine shard");
+        anyhow::ensure!(shards <= BackendSpec::MAX_SHARDS,
+                        "shards {} out of range [1, {}]", shards,
+                        BackendSpec::MAX_SHARDS);
+        // auto thread budget (threads = 0) is divided across shards:
+        // every shard owning a full one-pool-worker-per-core would
+        // oversubscribe the machine shards-fold and the sweep would
+        // measure contention, not scaling. Explicit counts pass
+        // through untouched — oversubscription then is the
+        // operator's stated choice.
+        let mut shard_spec = *spec;
+        if spec.batch_gemm && spec.threads == 0 {
+            shard_spec.threads = (ThreadPool::available() / shards).max(1);
+        }
+        // build every shard engine up front so a bad spec fails before
+        // any thread exists
+        let mut servers = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let backend = from_shared(shared, &shard_spec)?;
+            servers.push(InferenceServer::with_backend(backend,
+                                                       spec.slots.max(1)));
+        }
+        let front: Arc<BoundedQueue<Routed>> =
+            Arc::new(BoundedQueue::new(queue_cap));
+        let loads: Arc<Vec<AtomicU64>> =
+            Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect());
+        let routed: Arc<Vec<AtomicU64>> =
+            Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect());
+        let (done_tx, done_rx) = mpsc::channel();
+        let mut inboxes: Vec<Arc<BoundedQueue<Routed>>> =
+            Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for (shard, server) in servers.into_iter().enumerate() {
+            // small bounded inbox: enough lookahead to refill slots
+            // without stalling, small enough that backpressure reaches
+            // the router (and through it, the front door) quickly
+            let inbox = Arc::new(BoundedQueue::new((2 * spec.slots).max(2)));
+            inboxes.push(inbox.clone());
+            let loads_w = loads.clone();
+            let done = done_tx.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("rbtw-cluster-shard-{shard}"))
+                .spawn(move || shard_worker(shard, server, inbox, loads_w,
+                                            done));
+            match spawned {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    for ib in &inboxes {
+                        ib.close();
+                    }
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return Err(e).context("spawning a cluster shard worker");
+                }
+            }
+        }
+        // the workers hold the only senders: the merged stream closes
+        // exactly when the last worker exits
+        drop(done_tx);
+        let router = {
+            let front_r = front.clone();
+            let loads_r = loads.clone();
+            let routed_r = routed.clone();
+            let inboxes_r = inboxes.clone();
+            let spawned = std::thread::Builder::new()
+                .name("rbtw-cluster-router".to_string())
+                .spawn(move || router_loop(front_r, inboxes_r, loads_r,
+                                           routed_r, policy));
+            match spawned {
+                Ok(h) => h,
+                Err(e) => {
+                    front.close();
+                    for ib in &inboxes {
+                        ib.close();
+                    }
+                    for h in workers {
+                        let _ = h.join();
+                    }
+                    return Err(e).context("spawning the cluster router");
+                }
+            }
+        };
+        Ok(Self {
+            front,
+            router: Some(router),
+            workers,
+            routed,
+            done_rx,
+            vocab: shared.vocab(),
+            n_shards: shards,
+            slots_per_shard: spec.slots.max(1),
+            weight_bytes: shared.weight_bytes(),
+            policy,
+            submitted: 0,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn slots_per_shard(&self) -> usize {
+        self.slots_per_shard
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.policy
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Resident serving bytes — the ONE shared copy of packed planes +
+    /// dense head. Constant in the shard count by construction.
+    pub fn weight_bytes(&self) -> usize {
+        self.weight_bytes
+    }
+
+    /// Front-door queue capacity (the fail-fast backpressure boundary).
+    pub fn queue_capacity(&self) -> usize {
+        self.front.capacity()
+    }
+
+    /// Requests waiting at the front door (not yet routed to a shard).
+    pub fn pending(&self) -> usize {
+        self.front.len()
+    }
+
+    /// Requests accepted so far.
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Enqueue a request at the front door. Fails fast — without
+    /// touching any shard — when the bounded queue is full
+    /// (backpressure) or the cluster is draining. Validation runs here,
+    /// through the same [`validate_request`] the shard servers apply,
+    /// so a cluster-accepted request can never be one a shard rejects.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        validate_request(&req, self.vocab)?;
+        match self.front.try_push((req, Instant::now())) {
+            Ok(()) => {
+                self.submitted += 1;
+                Ok(())
+            }
+            Err((_, PushRefused::Full)) => anyhow::bail!(
+                "cluster queue full ({} pending)", self.front.len()),
+            Err((_, PushRefused::Closed)) => anyhow::bail!(
+                "cluster is draining; no new requests accepted"),
+        }
+    }
+
+    /// Non-blocking read of the merged response stream. Responses taken
+    /// here (streaming mode) are not repeated in [`Self::drain`]'s
+    /// report.
+    pub fn try_recv(&self) -> Option<ClusterResponse> {
+        self.done_rx.try_recv().ok()
+    }
+
+    /// Graceful shutdown: stop intake, let every accepted request finish
+    /// (router drains the front queue, shards drain their inboxes and
+    /// slots), join all threads, and return the merged responses plus
+    /// aggregated [`ClusterStats`].
+    ///
+    /// The latency percentiles summarize the responses returned by THIS
+    /// call; responses already consumed via [`Self::try_recv`] are
+    /// excluded from them (the per-shard counters and throughput totals
+    /// still cover every request). Streaming consumers who need full
+    /// latency percentiles should summarize their own stream.
+    pub fn drain(mut self) -> Result<ClusterReport> {
+        self.front.close();
+        // the recv loop ends when the last worker exits and drops its
+        // sender — i.e. exactly when all accepted work has completed
+        let mut responses = vec![];
+        while let Ok(r) = self.done_rx.recv() {
+            responses.push(r);
+        }
+        if let Some(h) = self.router.take() {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("cluster router panicked"))?;
+        }
+        let mut shard_servers = vec![];
+        let mut panicked = vec![];
+        for (i, h) in self.workers.drain(..).enumerate() {
+            match h.join() {
+                Ok(s) => shard_servers.push(s),
+                Err(_) => panicked.push(i),
+            }
+        }
+        anyhow::ensure!(panicked.is_empty(),
+                        "cluster shard worker(s) {panicked:?} panicked");
+        let wall_s = self.started.elapsed().as_secs_f64();
+        let (queue, run, total) =
+            latency_breakdown(responses.iter().map(|r| &r.response));
+        let mut stats = ClusterStats { wall_s, queue, run, total,
+                                       ..ClusterStats::default() };
+        for (i, server) in shard_servers.into_iter().enumerate() {
+            stats.completed += server.completed;
+            stats.tokens_processed += server.tokens_processed;
+            stats.engine_steps += server.engine_steps;
+            stats.shards.push(ShardStats {
+                shard: i,
+                routed: self.routed[i].load(Ordering::SeqCst),
+                tokens_per_sec: server.tokens_processed as f64
+                    / wall_s.max(1e-12),
+                server,
+            });
+        }
+        stats.tokens_per_sec =
+            stats.tokens_processed as f64 / wall_s.max(1e-12);
+        Ok(ClusterReport { responses, stats })
+    }
+}
+
+impl Drop for ServingCluster {
+    /// Dropping without [`Self::drain`] still shuts down gracefully:
+    /// close the front door and wait for the fleet (accepted work
+    /// completes; its responses are discarded with the channel).
+    fn drop(&mut self) {
+        self.front.close();
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn router_loop(front: Arc<BoundedQueue<Routed>>,
+               inboxes: Vec<Arc<BoundedQueue<Routed>>>,
+               loads: Arc<Vec<AtomicU64>>, routed: Arc<Vec<AtomicU64>>,
+               policy: RoutePolicy) {
+    let mut rr = 0usize;
+    while let Some(item) = front.pop_wait() {
+        let shard = match policy {
+            RoutePolicy::RoundRobin => {
+                let s = rr % inboxes.len();
+                rr += 1;
+                s
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0usize;
+                let mut best_load = u64::MAX;
+                for (i, l) in loads.iter().enumerate() {
+                    let v = l.load(Ordering::SeqCst);
+                    if v < best_load {
+                        best = i;
+                        best_load = v;
+                    }
+                }
+                best
+            }
+        };
+        loads[shard].fetch_add(1, Ordering::SeqCst);
+        routed[shard].fetch_add(1, Ordering::SeqCst);
+        // a full inbox blocks here — pressure propagates to the front
+        // door, which is where submit() fails fast
+        if inboxes[shard].push_wait(item).is_err() {
+            // inbox closed under us: either teardown, or the shard
+            // worker died (its exit guard closes its inbox so this
+            // router can never block on a dead shard). The request is
+            // shed; a dead worker additionally surfaces as an error
+            // from drain()'s join.
+            loads[shard].fetch_sub(1, Ordering::SeqCst);
+            routed[shard].fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+    // front closed and fully routed: signal every shard to finish + exit
+    for inbox in &inboxes {
+        inbox.close();
+    }
+}
+
+/// Closes a shard's inbox when its worker exits — HOWEVER it exits. A
+/// panicking worker must not leave an open inbox behind: the router
+/// would eventually block forever in `push_wait` on it, never close the
+/// other shards' inboxes, and wedge the whole cluster (drain() and Drop
+/// included). With the guard, the router's push simply fails, the other
+/// shards drain normally, and the panic surfaces from drain()'s join.
+struct InboxCloser(Arc<BoundedQueue<Routed>>);
+
+impl Drop for InboxCloser {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// One engine shard: the continuous-batching loop over this shard's
+/// private `InferenceServer`, fed from its bounded inbox. Exits when the
+/// inbox is closed AND every admitted request has completed.
+fn shard_worker(shard: usize, mut server: InferenceServer,
+                inbox: Arc<BoundedQueue<Routed>>,
+                loads: Arc<Vec<AtomicU64>>,
+                done: mpsc::Sender<ClusterResponse>) -> ServerStats {
+    let _closer = InboxCloser(inbox.clone());
+    loop {
+        // top up the admission queue without blocking while there is
+        // runnable work
+        while server.pending() < server.queue_capacity() {
+            match inbox.try_pop() {
+                Some((req, t0)) => server
+                    .submit_at(req, t0)
+                    .expect("cluster-validated request rejected by shard"),
+                None => break,
+            }
+        }
+        if server.pending() == 0 && server.active() == 0 {
+            // idle: block for work, or exit once the inbox is closed
+            // and drained
+            match inbox.pop_wait() {
+                Some((req, t0)) => {
+                    server
+                        .submit_at(req, t0)
+                        .expect("cluster-validated request rejected by shard");
+                    continue;
+                }
+                None => break,
+            }
+        }
+        server.step().expect("engine step failed on a validated batch");
+        while let Ok(resp) = server.done_rx.try_recv() {
+            loads[shard].fetch_sub(1, Ordering::SeqCst);
+            // a gone collector is not an error mid-teardown; keep
+            // stepping so accepted work still runs to completion
+            let _ = done.send(ClusterResponse { shard, response: resp });
+        }
+    }
+    server.stats.clone()
+}
+
+/// Drive `load` through a fresh cluster over `shared` — the cluster twin
+/// of [`crate::coordinator::run_load`]. Uses [`LoadSpec::requests`], so
+/// the request set is byte-identical to the single-server harness for
+/// the same spec (the basis of the shards=N equivalence checks).
+/// `queue_cap` sizes the front door; the whole load is submitted up
+/// front, so pass at least `load.n_requests` (it is clamped up to that)
+/// unless the point is to exercise rejection.
+pub fn run_cluster_load(shared: &SharedModel, spec: &BackendSpec,
+                        policy: RoutePolicy, queue_cap: usize,
+                        load: &LoadSpec) -> Result<ClusterReport> {
+    let mut cluster = ServingCluster::new(
+        shared, spec, queue_cap.max(load.n_requests).max(1), policy)?;
+    for req in load.requests(cluster.vocab()) {
+        cluster.submit(req)?;
+    }
+    cluster.drain()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{BackendKind, ModelWeights};
+
+    fn shared_model() -> SharedModel {
+        let w = ModelWeights::synthetic(20, 12, "ter", 0xC1);
+        SharedModel::prepare(&w, BackendKind::PackedCpu, 7).unwrap()
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in RoutePolicy::all() {
+            assert_eq!(RoutePolicy::parse(p.label()).unwrap(), p);
+        }
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("ll").unwrap(),
+                   RoutePolicy::LeastLoaded);
+        assert_eq!(RoutePolicy::default(), RoutePolicy::LeastLoaded);
+        assert!(RoutePolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn serves_and_drains_all_requests() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 3, 7)
+            .with_shards(2);
+        let mut cluster =
+            ServingCluster::new(&shared, &spec, 32, RoutePolicy::LeastLoaded)
+                .unwrap();
+        assert_eq!(cluster.shards(), 2);
+        assert_eq!(cluster.weight_bytes(), shared.weight_bytes());
+        for id in 0..10u64 {
+            cluster.submit(Request {
+                id,
+                prompt: vec![(id % 20) as i32, 3],
+                gen_len: 3,
+                temperature: 0.0,
+            }).unwrap();
+        }
+        let report = cluster.drain().unwrap();
+        assert_eq!(report.responses.len(), 10);
+        let mut ids: Vec<u64> =
+            report.responses.iter().map(|r| r.response.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 10, "every request completed exactly once");
+        assert_eq!(report.stats.completed, 10);
+        let routed_total: u64 =
+            report.stats.shards.iter().map(|s| s.routed).sum();
+        assert_eq!(routed_total, 10, "router accounted every request");
+        assert_eq!(report.stats.shards.len(), 2);
+        assert_eq!(report.stats.total.n, 10);
+        assert!(report.stats.tokens_per_sec > 0.0);
+        for r in &report.responses {
+            assert!(r.shard < 2);
+            assert_eq!(r.response.generated.len(), 3);
+            assert!(r.response.prompt_logprob <= 0.0);
+        }
+    }
+
+    #[test]
+    fn submit_validates_before_routing() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7);
+        let mut cluster =
+            ServingCluster::new(&shared, &spec, 8, RoutePolicy::RoundRobin)
+                .unwrap();
+        assert!(cluster.submit(Request { id: 1, prompt: vec![],
+                                         gen_len: 1, temperature: 0.0 })
+            .is_err());
+        assert!(cluster.submit(Request { id: 2, prompt: vec![99],
+                                         gen_len: 1, temperature: 0.0 })
+            .is_err());
+        assert_eq!(cluster.submitted(), 0);
+        let report = cluster.drain().unwrap();
+        assert!(report.responses.is_empty());
+        assert_eq!(report.stats.completed, 0);
+    }
+
+    #[test]
+    fn rejects_bad_shard_counts() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7)
+            .with_shards(0);
+        assert!(ServingCluster::new(&shared, &spec, 8,
+                                    RoutePolicy::LeastLoaded).is_err());
+        let spec = spec.with_shards(BackendSpec::MAX_SHARDS + 1);
+        assert!(ServingCluster::new(&shared, &spec, 8,
+                                    RoutePolicy::LeastLoaded).is_err());
+        // kind mismatch between spec and shared model is a config error
+        let spec = BackendSpec::with(BackendKind::PackedPlanes, 2, 7);
+        assert!(ServingCluster::new(&shared, &spec, 8,
+                                    RoutePolicy::LeastLoaded).is_err());
+    }
+}

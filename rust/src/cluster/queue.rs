@@ -1,0 +1,207 @@
+//! Bounded MPMC queue — the cluster's front door and per-shard inboxes.
+//!
+//! Plain `Mutex<VecDeque>` + two `Condvar`s (no crates, matching the
+//! repo's offline constraint): any number of producers and consumers,
+//! fail-fast [`BoundedQueue::try_push`] for the backpressure boundary,
+//! blocking [`BoundedQueue::push_wait`] for the router (so a full shard
+//! inbox propagates pressure back to the front door instead of buffering
+//! unboundedly), blocking [`BoundedQueue::pop_wait`] for idle workers,
+//! and [`BoundedQueue::close`] for graceful drain: a closed queue
+//! rejects new items but still hands out everything already queued, so
+//! shutdown never drops accepted work.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a non-blocking push was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushRefused {
+    /// At capacity — the backpressure signal; retry later or shed load.
+    Full,
+    /// Draining/shut down — no new work is accepted.
+    Closed,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer multi-consumer queue; see the module docs.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `cap` items (`cap` is clamped to >= 1).
+    pub fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Fail-fast enqueue: refuses (returning the item) when full or
+    /// closed, never blocks. The backpressure boundary.
+    pub fn try_push(&self, item: T) -> Result<(), (T, PushRefused)> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err((item, PushRefused::Closed));
+        }
+        if s.items.len() >= self.cap {
+            return Err((item, PushRefused::Full));
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking enqueue: waits for space; returns the item back only if
+    /// the queue closes while waiting (or was already closed).
+    pub fn push_wait(&self, item: T) -> Result<(), T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(item);
+            }
+            if s.items.len() < self.cap {
+                s.items.push_back(item);
+                drop(s);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            s = self.not_full.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking dequeue.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        let item = s.items.pop_front();
+        drop(s);
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Blocking dequeue: waits for an item; `None` only once the queue
+    /// is closed AND fully drained (the worker-exit signal).
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: new pushes fail, queued items still drain,
+    /// every blocked waiter wakes. Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bounded_fifo_with_fail_fast_overflow() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.capacity(), 2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err((3, PushRefused::Full)));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        q.try_push(3).unwrap();
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn close_drains_then_signals_exit() {
+        let q = BoundedQueue::new(4);
+        q.try_push("a").unwrap();
+        q.close();
+        assert_eq!(q.try_push("b"), Err(("b", PushRefused::Closed)));
+        assert!(q.push_wait("c").is_err());
+        // queued work still comes out; then the exit signal
+        assert_eq!(q.pop_wait(), Some("a"));
+        assert_eq!(q.pop_wait(), None);
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn cross_thread_producers_and_consumers() {
+        let q = Arc::new(BoundedQueue::new(3));
+        let n = 200u64;
+        let producers: Vec<_> = (0..2)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..n {
+                        q.push_wait(p * n + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = vec![];
+                    while let Some(v) = q.pop_wait() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let want: Vec<u64> = (0..2 * n).collect();
+        assert_eq!(all, want, "every item delivered exactly once");
+    }
+}

@@ -1,0 +1,48 @@
+//! Aggregated cluster telemetry: per-shard serving counters plus
+//! whole-cluster throughput and latency percentiles.
+
+use crate::coordinator::ServerStats;
+use crate::util::stats::LatencySummary;
+
+/// One shard worker's contribution to a cluster run.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Requests the router dispatched to this shard (policy-dependent).
+    pub routed: u64,
+    /// The shard's own continuous-batching counters.
+    pub server: ServerStats,
+    /// This shard's token throughput over the cluster wall time.
+    pub tokens_per_sec: f64,
+}
+
+/// Whole-cluster counters + latency percentiles for one serving run.
+///
+/// Totals are sums over shards; `tokens_per_sec` is total tokens over
+/// the one shared wall clock (shards run concurrently, so per-shard
+/// rates add). The latency summaries cover the full path — front-door
+/// queue + shard inbox + shard admission queue (`queue`), slot
+/// residency (`run`) and their sum (`total`).
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    pub shards: Vec<ShardStats>,
+    pub completed: u64,
+    pub tokens_processed: u64,
+    pub engine_steps: u64,
+    pub wall_s: f64,
+    pub tokens_per_sec: f64,
+    pub queue: LatencySummary,
+    pub run: LatencySummary,
+    pub total: LatencySummary,
+}
+
+impl ClusterStats {
+    /// Largest routed-count imbalance between any two shards (0 =
+    /// perfectly even; round-robin keeps this <= 1 by construction).
+    pub fn routing_imbalance(&self) -> u64 {
+        let routed = self.shards.iter().map(|s| s.routed);
+        let hi = routed.clone().max().unwrap_or(0);
+        let lo = routed.min().unwrap_or(0);
+        hi - lo
+    }
+}

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::RoutePolicy;
 use crate::coordinator::{LrSchedule, TrainSpec};
 use crate::engine::{BackendKind, BackendSpec};
 
@@ -149,6 +150,13 @@ pub struct ServeSpec {
     /// Worker threads for the batched packed path (0 = auto: one per
     /// available core). Logits are bit-identical for every value.
     pub threads: usize,
+    /// Engine shards for cluster serving: how many independent engine
+    /// workers serve from ONE shared packed weight set (packed backends
+    /// only; `pjrt-dense` cannot shard). Greedy responses are
+    /// bit-identical for every value.
+    pub shards: usize,
+    /// How the cluster router assigns requests to shards.
+    pub policy: RoutePolicy,
 }
 
 impl Default for ServeSpec {
@@ -160,6 +168,8 @@ impl Default for ServeSpec {
             sample_seed: 0x5EED,
             batch_gemm: true,
             threads: 0,
+            shards: 1,
+            policy: RoutePolicy::LeastLoaded,
         }
     }
 }
@@ -174,6 +184,11 @@ impl ServeSpec {
     pub const THREADS_RANGE: std::ops::RangeInclusive<usize> =
         0..=BackendSpec::MAX_THREADS;
 
+    /// Valid cluster shard range; shared by the `[serve]` config parser
+    /// and the `--shards` CLI flag.
+    pub const SHARDS_RANGE: std::ops::RangeInclusive<usize> =
+        1..=BackendSpec::MAX_SHARDS;
+
     /// The engine-layer spec for [`crate::engine::open`].
     pub fn backend_spec(&self) -> BackendSpec {
         BackendSpec {
@@ -182,6 +197,7 @@ impl ServeSpec {
             sample_seed: self.sample_seed,
             batch_gemm: self.batch_gemm,
             threads: self.threads,
+            shards: self.shards,
         }
     }
 }
@@ -223,6 +239,14 @@ impl Config {
                 spec.threads = bounded(v, "threads",
                                        *ServeSpec::THREADS_RANGE.start() as i64,
                                        *ServeSpec::THREADS_RANGE.end() as i64)?;
+            }
+            if let Some(v) = s.get("shards") {
+                spec.shards = bounded(v, "shards",
+                                      *ServeSpec::SHARDS_RANGE.start() as i64,
+                                      *ServeSpec::SHARDS_RANGE.end() as i64)?;
+            }
+            if let Some(v) = s.get("policy") {
+                spec.policy = RoutePolicy::parse(v.as_str().context("policy")?)?;
             }
         }
         Ok(spec)
@@ -350,7 +374,8 @@ mod tests {
     fn builds_serve_spec() {
         let cfg = Config::parse(
             "[serve]\nbackend = \"planes\"\nslots = 8\nqueue_cap = 32\n\
-             batch_gemm = false\nthreads = 3\n",
+             batch_gemm = false\nthreads = 3\nshards = 4\n\
+             policy = \"round-robin\"\n",
         )
         .unwrap();
         let spec = cfg.serve_spec(ServeSpec::default()).unwrap();
@@ -360,11 +385,29 @@ mod tests {
         assert_eq!(spec.sample_seed, ServeSpec::default().sample_seed);
         assert!(!spec.batch_gemm);
         assert_eq!(spec.threads, 3);
+        assert_eq!(spec.shards, 4);
+        assert_eq!(spec.policy, RoutePolicy::RoundRobin);
         let bs = spec.backend_spec();
         assert_eq!(bs.kind, BackendKind::PackedPlanes);
         assert_eq!(bs.slots, 8);
         assert!(!bs.batch_gemm);
         assert_eq!(bs.threads, 3);
+        assert_eq!(bs.shards, 4);
+        // cluster defaults: one shard (the plain server), least-loaded
+        assert_eq!(ServeSpec::default().shards, 1);
+        assert_eq!(ServeSpec::default().policy, RoutePolicy::LeastLoaded);
+        assert!(Config::parse("[serve]\nshards = 0\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nshards = 100000\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\npolicy = \"random\"\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
         // threads defaults to 0 = auto (one worker per available core)
         assert_eq!(ServeSpec::default().threads, 0);
         // defaults make the packed deployment engine the serving path,

@@ -5,7 +5,8 @@
 pub mod server;
 pub mod trainer;
 
-pub use server::{run_load, InferenceServer, LoadSpec, Request, Response,
+pub use server::{latency_breakdown, run_load, validate_request,
+                 InferenceServer, LoadReport, LoadSpec, Request, Response,
                  ServerStats};
 pub use trainer::{EvalResult, LrSchedule, Split, TaskData, TrainReport,
                   TrainSpec, Trainer};

@@ -35,6 +35,7 @@ use anyhow::Result;
 
 use crate::engine::{InferBackend, PjrtDense};
 use crate::runtime::Engine;
+use crate::util::stats::LatencySummary;
 use crate::util::Rng;
 
 /// A generation/scoring request.
@@ -82,9 +83,12 @@ struct Slot {
 }
 
 /// The in-process serving engine. Drive it with [`InferenceServer::pump`]
-/// (bench/test mode) or wrap it in a thread.
+/// (bench/test mode) or wrap it in a thread — the sharded cluster
+/// ([`crate::cluster::ServingCluster`]) runs one of these per shard, so
+/// this continuous-batching loop exists exactly once and a 1-shard
+/// cluster is the plain server.
 pub struct InferenceServer {
-    backend: Box<dyn InferBackend>,
+    backend: Box<dyn InferBackend + Send>,
     slots: Vec<Option<Slot>>,
     queue: VecDeque<(Request, Instant)>,
     queue_cap: usize,
@@ -100,8 +104,8 @@ pub struct InferenceServer {
 
 impl InferenceServer {
     /// Serve over any backend (see [`crate::engine::open`]).
-    pub fn with_backend(backend: Box<dyn InferBackend>, queue_cap: usize)
-        -> Self {
+    pub fn with_backend(backend: Box<dyn InferBackend + Send>,
+                        queue_cap: usize) -> Self {
         let n_slots = backend.slots();
         let vocab = backend.vocab();
         let (done_tx, done_rx) = mpsc::channel();
@@ -138,18 +142,32 @@ impl InferenceServer {
     }
 
     /// Enqueue a request; fails when the queue is full (backpressure).
+    /// A rejected submit changes nothing: queue, slots and backend state
+    /// are exactly as before the call.
     pub fn submit(&mut self, req: Request) -> Result<()> {
+        self.submit_at(req, Instant::now())
+    }
+
+    /// Like [`Self::submit`], with the queue-entry timestamp supplied by
+    /// the caller. The cluster router uses this so a response's
+    /// `queue_time` covers the whole path — cluster front door + shard
+    /// inbox + this server's queue — not just the last hop.
+    pub fn submit_at(&mut self, req: Request, submitted: Instant)
+        -> Result<()> {
         anyhow::ensure!(self.queue.len() < self.queue_cap,
                         "queue full ({} pending)", self.queue.len());
-        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
-        anyhow::ensure!(req.prompt.iter().all(|&t| t >= 0 && (t as usize) < self.vocab),
-                        "prompt token out of vocab");
-        self.queue.push_back((req, Instant::now()));
+        validate_request(&req, self.vocab)?;
+        self.queue.push_back((req, submitted));
         Ok(())
     }
 
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// The admission queue's capacity (backpressure boundary).
+    pub fn queue_capacity(&self) -> usize {
+        self.queue_cap
     }
 
     pub fn active(&self) -> usize {
@@ -275,28 +293,98 @@ impl Default for LoadSpec {
     }
 }
 
-/// Drive `load` through a fresh server over `backend`; returns the
-/// responses, final server stats and the serving wall time in seconds.
-pub fn run_load(backend: Box<dyn InferBackend>, load: &LoadSpec)
-    -> Result<(Vec<Response>, ServerStats, f64)> {
+impl LoadSpec {
+    /// Materialize the request set (seeded random prompts). Shared by
+    /// [`run_load`], the cluster harness
+    /// ([`crate::cluster::run_cluster_load`]) and the determinism tests,
+    /// so "the same load" means byte-identical requests everywhere.
+    pub fn requests(&self, vocab: usize) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.n_requests as u64)
+            .map(|id| Request {
+                id,
+                prompt: (0..self.prompt_len.max(1))
+                    .map(|_| rng.below(vocab as u64) as i32)
+                    .collect(),
+                gen_len: self.gen_len,
+                temperature: self.temperature,
+            })
+            .collect()
+    }
+}
+
+/// What a load run produced: responses, server counters, wall time and
+/// the per-request latency breakdown (queue wait vs run time vs total),
+/// summarized as p50/p95/p99 percentiles.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub responses: Vec<Response>,
+    pub stats: ServerStats,
+    pub wall_s: f64,
+    pub queue: LatencySummary,
+    pub run: LatencySummary,
+    pub total: LatencySummary,
+}
+
+impl LoadReport {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.stats.tokens_processed as f64 / self.wall_s.max(1e-12)
+    }
+}
+
+/// Per-request latency summaries (queue, run, total = queue + run) in
+/// milliseconds. Generic over any response iterator so the cluster's
+/// drain can summarize its tagged responses without cloning them; this
+/// is the ONE definition of the breakdown — single-server and cluster
+/// reports cannot drift.
+pub fn latency_breakdown<'a, I>(responses: I)
+    -> (LatencySummary, LatencySummary, LatencySummary)
+where
+    I: IntoIterator<Item = &'a Response>,
+{
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    let mut queue = vec![];
+    let mut run = vec![];
+    let mut total = vec![];
+    for r in responses {
+        let q = ms(r.queue_time);
+        let t = ms(r.run_time);
+        queue.push(q);
+        run.push(t);
+        total.push(q + t);
+    }
+    (LatencySummary::from_ms(&queue), LatencySummary::from_ms(&run),
+     LatencySummary::from_ms(&total))
+}
+
+/// Drive `load` through a fresh server over `backend`; returns the full
+/// [`LoadReport`] (responses, stats, wall time, latency percentiles).
+pub fn run_load(backend: Box<dyn InferBackend + Send>, load: &LoadSpec)
+    -> Result<LoadReport> {
     let vocab = backend.vocab();
     let mut server =
         InferenceServer::with_backend(backend, load.n_requests.max(1));
-    let mut rng = Rng::new(load.seed);
-    for id in 0..load.n_requests as u64 {
-        server.submit(Request {
-            id,
-            prompt: (0..load.prompt_len.max(1))
-                .map(|_| rng.below(vocab as u64) as i32)
-                .collect(),
-            gen_len: load.gen_len,
-            temperature: load.temperature,
-        })?;
+    for req in load.requests(vocab) {
+        server.submit(req)?;
     }
     let t0 = Instant::now();
     let responses = server.pump(1_000_000)?;
-    let wall = t0.elapsed().as_secs_f64();
-    Ok((responses, server.stats.clone(), wall))
+    let wall_s = t0.elapsed().as_secs_f64();
+    let (queue, run, total) = latency_breakdown(&responses);
+    Ok(LoadReport { responses, stats: server.stats.clone(), wall_s,
+                    queue, run, total })
+}
+
+/// The one request-admission validator, shared by [`InferenceServer`]
+/// and the cluster front door ([`crate::cluster::ServingCluster`]) —
+/// whatever the cluster accepts, a shard server must accept too, so the
+/// check must not be able to drift between the two layers.
+pub fn validate_request(req: &Request, vocab: usize) -> Result<()> {
+    anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+    anyhow::ensure!(
+        req.prompt.iter().all(|&t| t >= 0 && (t as usize) < vocab),
+        "prompt token out of vocab");
+    Ok(())
 }
 
 fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
@@ -307,10 +395,14 @@ fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
 
 fn sample_token(logits: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
     if temperature <= 0.0 {
+        // total_cmp, not partial_cmp().unwrap(): a NaN logit must not
+        // panic the engine worker mid-serve (it sorts above every finite
+        // value, so a poisoned row degrades to a bad token, not a dead
+        // shard).
         return logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as i32)
             .unwrap_or(0);
     }
@@ -332,6 +424,25 @@ mod tests {
         let mut rng = Rng::new(1);
         let logits = [0.1f32, 2.0, -1.0, 0.5];
         assert_eq!(sample_token(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn greedy_sampling_survives_nan_logits() {
+        // regression: partial_cmp().unwrap() panicked the engine worker
+        // on any NaN logit; total_cmp must keep serving.
+        let mut rng = Rng::new(7);
+        for logits in [
+            vec![0.1f32, f32::NAN, 0.5],
+            vec![f32::NAN; 4],
+            vec![-f32::NAN, 1.0, f32::NEG_INFINITY],
+        ] {
+            let t = sample_token(&logits, 0.0, &mut rng);
+            assert!((0..logits.len() as i32).contains(&t),
+                    "argmax out of range for {logits:?}: {t}");
+        }
+        // NaN-free rows are unaffected by the comparator swap
+        assert_eq!(sample_token(&[-1.0, 3.0, f32::NEG_INFINITY, 2.9], 0.0,
+                                &mut rng), 1);
     }
 
     #[test]
@@ -406,6 +517,29 @@ mod tests {
                                         temperature: 0.0 }).is_err());
         let responses = server.pump(1000).unwrap();
         assert_eq!(responses.len(), 2);
+    }
+
+    #[test]
+    fn run_load_reports_latency_percentiles() {
+        let w = ModelWeights::synthetic(20, 16, "ter", 41);
+        let backend = from_weights(
+            &w, &BackendSpec::with(BackendKind::PackedCpu, 4, 9)).unwrap();
+        let load = LoadSpec { n_requests: 12, prompt_len: 3, gen_len: 4,
+                              temperature: 0.0, seed: 5 };
+        let report = run_load(backend, &load).unwrap();
+        assert_eq!(report.responses.len(), 12);
+        assert_eq!(report.total.n, 12);
+        assert!(report.tokens_per_sec() > 0.0);
+        assert!(report.total.p50_ms <= report.total.p95_ms);
+        assert!(report.total.p95_ms <= report.total.p99_ms);
+        assert!(report.total.p99_ms <= report.total.max_ms);
+        // queue + run bound total per the breakdown definition
+        assert!(report.total.max_ms + 1e-9
+                >= report.run.p50_ms.max(report.queue.p50_ms));
+        // the request generator is the shared one: same spec, same set
+        let again = load.requests(20);
+        assert_eq!(again.len(), 12);
+        assert_eq!(again[3].prompt, load.requests(20)[3].prompt);
     }
 
     #[test]

@@ -64,10 +64,23 @@
 //! `rust/tests/quant_properties.rs` and by `ci.sh`, which diffs the
 //! seed-matrix equivalence digest across a threads=1 and a threads=4
 //! run.
+//!
+//! ## Shared weights and cluster shards
+//!
+//! [`SharedModel`] prepares a model's packed serving weights once
+//! (sample → pack → BN-fold) and hands out zero-copy engine shards via
+//! [`from_shared`]: the packed plane words are `Arc`-backed, so every
+//! shard aliases ONE resident allocation — the multi-engine realization
+//! of the paper's 12× memory saving. [`BackendSpec::shards`] sizes the
+//! fleet; [`crate::cluster::ServingCluster`] runs it (N engine worker
+//! threads behind one bounded front door). All factory functions return
+//! `Box<dyn InferBackend + Send>` so backends can move onto those
+//! worker threads.
 
 pub mod packed;
 pub mod pjrt;
 pub mod pool;
+pub mod shared;
 pub mod weights;
 
 use std::path::Path;
@@ -79,6 +92,7 @@ use crate::runtime::Engine;
 pub use packed::PackedBackend;
 pub use pjrt::PjrtDense;
 pub use pool::ThreadPool;
+pub use shared::SharedModel;
 pub use weights::ModelWeights;
 
 /// Which inference engine serves a model.
@@ -161,7 +175,7 @@ pub trait InferBackend {
         -> Result<()>;
 }
 
-impl InferBackend for Box<dyn InferBackend> {
+impl<B: InferBackend + ?Sized> InferBackend for Box<B> {
     fn kind(&self) -> BackendKind {
         (**self).kind()
     }
@@ -214,12 +228,21 @@ pub struct BackendSpec {
     /// `threads = 1` runs fully inline (no workers spawned). Ignored by
     /// the per-slot reference path and by `PjrtDense`.
     pub threads: usize,
+    /// Engine shards for cluster serving ([`crate::cluster`]): how many
+    /// independent engine workers (each with its own slots, thread pool
+    /// and decode loop) serve from ONE shared packed weight set. A
+    /// single backend built by [`open`]/[`from_weights`] ignores this —
+    /// it is always one shard; [`crate::cluster::ServingCluster`] reads
+    /// it to size the fleet. Responses are bit-identical for every
+    /// value (greedy loads): sharding moves requests between engines,
+    /// never changes a logit.
+    pub shards: usize,
 }
 
 impl Default for BackendSpec {
     fn default() -> Self {
         Self { kind: BackendKind::PackedCpu, slots: 16, sample_seed: 0x5EED,
-               batch_gemm: true, threads: 0 }
+               batch_gemm: true, threads: 0, shards: 1 }
     }
 }
 
@@ -227,6 +250,10 @@ impl BackendSpec {
     /// Hard cap on explicit thread counts (spawning more workers than
     /// this is a config error, not a throughput choice).
     pub const MAX_THREADS: usize = 1024;
+
+    /// Hard cap on cluster shard counts (each shard owns an engine
+    /// thread + slot state; more than this is a config error).
+    pub const MAX_SHARDS: usize = 256;
 
     /// Shorthand for the common (kind, slots, seed) spec with the
     /// default batched-GEMM path and auto thread count.
@@ -243,6 +270,14 @@ impl BackendSpec {
     /// Pin the worker-thread count (0 = auto).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Set the cluster shard count (used by
+    /// [`crate::cluster::ServingCluster`]; single backends are always
+    /// one shard).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
         self
     }
 
@@ -266,8 +301,11 @@ impl BackendSpec {
 /// The packed backends read the artifact's host-side init values (or a
 /// checkpoint applied by the caller via [`ModelWeights`]) and never
 /// construct a PJRT `Session`; `PjrtDense` creates its own CPU engine.
+///
+/// Backends are `Send`: the cluster layer moves them onto shard worker
+/// threads.
 pub fn open(artifacts_dir: &Path, artifact: &str, spec: &BackendSpec)
-    -> Result<Box<dyn InferBackend>> {
+    -> Result<Box<dyn InferBackend + Send>> {
     match spec.kind {
         BackendKind::PjrtDense => {
             let engine = Engine::cpu()?;
@@ -283,7 +321,8 @@ pub fn open(artifacts_dir: &Path, artifact: &str, spec: &BackendSpec)
 /// Like [`open`] but reusing an existing PJRT engine for `PjrtDense`
 /// (packed backends ignore it).
 pub fn open_with_engine(engine: &Engine, artifacts_dir: &Path, artifact: &str,
-                        spec: &BackendSpec) -> Result<Box<dyn InferBackend>> {
+                        spec: &BackendSpec)
+    -> Result<Box<dyn InferBackend + Send>> {
     match spec.kind {
         BackendKind::PjrtDense => Ok(Box::new(PjrtDense::open(
             engine, artifacts_dir, artifact)?)),
@@ -298,7 +337,7 @@ pub fn open_with_engine(engine: &Engine, artifacts_dir: &Path, artifact: &str,
 /// live session export, or [`ModelWeights::synthetic`]). Errors for
 /// `PjrtDense`, which needs a compiled artifact.
 pub fn from_weights(weights: &ModelWeights, spec: &BackendSpec)
-    -> Result<Box<dyn InferBackend>> {
+    -> Result<Box<dyn InferBackend + Send>> {
     match spec.kind {
         BackendKind::PjrtDense => {
             bail!("PjrtDense cannot be built from host weights; use open()")
@@ -307,6 +346,15 @@ pub fn from_weights(weights: &ModelWeights, spec: &BackendSpec)
             Ok(Box::new(PackedBackend::from_weights(weights, spec)?))
         }
     }
+}
+
+/// Build one engine shard over an already-prepared [`SharedModel`]:
+/// zero-copy on the packed planes (every shard aliases the shared
+/// `Arc`-backed allocations). The cluster fan-out path; `spec.kind`
+/// must match the shared model's layout.
+pub fn from_shared(shared: &SharedModel, spec: &BackendSpec)
+    -> Result<Box<dyn InferBackend + Send>> {
+    Ok(Box::new(PackedBackend::from_shared(shared, spec)?))
 }
 
 #[cfg(test)]
@@ -366,6 +414,10 @@ mod tests {
         assert_eq!(spec.with_threads(3).threads, 3);
         assert_eq!(spec.with_threads(3).threads_resolved(), 3);
         assert!(spec.threads_resolved() >= 1);
+        // single backends are one shard by default; the cluster layer
+        // reads the knob
+        assert_eq!(BackendSpec::default().shards, 1);
+        assert_eq!(spec.with_shards(4).shards, 4);
     }
 
     #[test]

@@ -37,9 +37,12 @@
 //! footprint is 1–2 bits per recurrent weight — the 12× saving of §6 —
 //! plus the (small) dense head.
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
 use super::pool::{shard_range, ThreadPool};
+use super::shared::SharedModel;
 use super::weights::ModelWeights;
 use super::{BackendKind, BackendSpec, InferBackend};
 use crate::quant::gemm::gemm_f32_bias_cols;
@@ -50,9 +53,10 @@ pub struct PackedBackend {
     kind: BackendKind,
     cell: PackedLstmCell,
     /// LM head, row-major (hidden, vocab) — kept dense f32 (the paper
-    /// quantizes only the recurrent matrices).
-    head_w: Vec<f32>,
-    head_b: Vec<f32>,
+    /// quantizes only the recurrent matrices). `Arc`-shared: backends
+    /// built from one [`SharedModel`] alias a single head allocation.
+    head_w: Arc<[f32]>,
+    head_b: Arc<[f32]>,
     vocab: usize,
     hidden: usize,
     n_slots: usize,
@@ -79,15 +83,31 @@ pub struct PackedBackend {
 impl PackedBackend {
     /// Build from host-side weights per `spec` (`spec.kind` selects the
     /// sign/mask or bit-plane layout; `PjrtDense` is rejected).
+    ///
+    /// One-engine convenience over the shared path: prepares a private
+    /// [`SharedModel`] and builds the single shard from it, so the
+    /// sample/pack/BN-fold pipeline exists once.
     pub fn from_weights(weights: &ModelWeights, spec: &BackendSpec)
         -> Result<Self> {
-        let planes = match spec.kind {
-            BackendKind::PackedCpu => false,
-            BackendKind::PackedPlanes => true,
-            BackendKind::PjrtDense => {
-                anyhow::bail!("PjrtDense is not a packed backend; use open()")
-            }
-        };
+        let shared = SharedModel::prepare(weights, spec.kind,
+                                          spec.sample_seed)?;
+        Self::from_shared(&shared, spec)
+    }
+
+    /// Build one engine shard over an already-prepared [`SharedModel`]:
+    /// zero-copy on the weights (the cell clone aliases the shared
+    /// `Arc`-backed planes; only per-shard slot state and scratch are
+    /// allocated). This is the cluster fan-out path.
+    pub fn from_shared(shared: &SharedModel, spec: &BackendSpec)
+        -> Result<Self> {
+        anyhow::ensure!(spec.kind == shared.kind(),
+                        "spec kind {} != shared model kind {}",
+                        spec.kind.label(), shared.kind().label());
+        anyhow::ensure!(spec.sample_seed == shared.sample_seed(),
+                        "spec sample_seed {} != shared model sample_seed {} \
+                         (the shared weights were already sampled; a \
+                         mismatched spec would silently serve a different \
+                         draw)", spec.sample_seed, shared.sample_seed());
         anyhow::ensure!(spec.slots > 0, "need at least one decode slot");
         anyhow::ensure!(spec.threads <= BackendSpec::MAX_THREADS,
                         "threads {} out of range [0, {}]", spec.threads,
@@ -98,9 +118,9 @@ impl PackedBackend {
         let pool = ThreadPool::new(threads)
             .with_context(|| format!("spawning the {threads}-thread engine \
                                       worker pool"))?;
-        let (cell, head_w, head_b) =
-            weights.build_cell(spec.sample_seed, planes)?;
-        let (vocab, hidden) = (weights.vocab, weights.hidden);
+        let cell = shared.share_cell();
+        let (head_w, head_b) = shared.share_head();
+        let (vocab, hidden) = (shared.vocab(), shared.hidden());
         Ok(Self {
             kind: spec.kind,
             cell,
@@ -149,7 +169,7 @@ impl PackedBackend {
         let row = &mut logits[i * self.vocab..(i + 1) * self.vocab];
         let hs = &self.h[i * self.hidden..(i + 1) * self.hidden];
         gemv_f32(&self.head_w, self.hidden, self.vocab, hs, row);
-        for (l, b) in row.iter_mut().zip(&self.head_b) {
+        for (l, b) in row.iter_mut().zip(self.head_b.iter()) {
             *l += b;
         }
     }

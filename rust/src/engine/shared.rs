@@ -1,0 +1,183 @@
+//! Shared packed serving weights — sample/pack once, serve from many
+//! engines.
+//!
+//! [`SharedModel`] is the cluster-scale answer to the question "who owns
+//! the plane bytes?": it samples the binary/ternary deployment weights
+//! (Eq. 4–6) and folds BN exactly once, producing a template
+//! [`PackedLstmCell`] plus an `Arc`-backed dense LM head. Every backend
+//! built from it ([`PackedBackend::from_shared`]) clones the template —
+//! and because the packed plane words themselves live behind `Arc` (see
+//! [`crate::quant::pack`]), that clone is a refcount bump, not a byte
+//! copy. N shard engines therefore hold ONE resident copy of the packed
+//! weights: growing a serving cluster adds slot state and scratch, never
+//! plane bytes, so the paper's 12× memory saving survives horizontal
+//! scale-out instead of being multiplied back by replication.
+//!
+//! The sharing is observable, not aspirational: [`SharedModel`] exposes
+//! the template cell so tests can assert pointer identity and
+//! `Arc::strong_count` across shards (`rust/tests/cluster_integration.rs`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::weights::ModelWeights;
+use super::BackendKind;
+use crate::quant::PackedLstmCell;
+
+/// One model's packed serving weights, prepared once and cheaply
+/// shareable across any number of engine shards.
+pub struct SharedModel {
+    kind: BackendKind,
+    sample_seed: u64,
+    name: String,
+    quantizer: String,
+    vocab: usize,
+    hidden: usize,
+    /// Template cell: packed matrices (Arc-backed planes) + folded BN.
+    cell: PackedLstmCell,
+    /// Dense LM head, row-major (hidden, vocab), shared across shards.
+    head_w: Arc<[f32]>,
+    head_b: Arc<[f32]>,
+}
+
+impl SharedModel {
+    /// Sample, pack and BN-fold `weights` once for `kind`
+    /// (`PackedCpu` = sign/mask LUT layout, `PackedPlanes` = pos/neg bit
+    /// planes; `PjrtDense` has no packed representation and errors).
+    ///
+    /// Uses the same sampling order and seed semantics as
+    /// [`ModelWeights::build_cell`], so a 1-shard cluster over a
+    /// `SharedModel` serves bit-identically to a backend built directly
+    /// via [`crate::engine::from_weights`] with the same spec.
+    pub fn prepare(weights: &ModelWeights, kind: BackendKind, sample_seed: u64)
+        -> Result<Self> {
+        let planes = match kind {
+            BackendKind::PackedCpu => false,
+            BackendKind::PackedPlanes => true,
+            BackendKind::PjrtDense => anyhow::bail!(
+                "PjrtDense serves from a compiled executable, not shared \
+                 packed planes; use a packed backend kind"),
+        };
+        let (cell, head_w, head_b) = weights.build_cell(sample_seed, planes)?;
+        Ok(Self {
+            kind,
+            sample_seed,
+            name: weights.name.clone(),
+            quantizer: weights.quantizer.clone(),
+            vocab: weights.vocab,
+            hidden: weights.hidden,
+            cell,
+            head_w: head_w.into(),
+            head_b: head_b.into(),
+        })
+    }
+
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    pub fn sample_seed(&self) -> u64 {
+        self.sample_seed
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn quantizer(&self) -> &str {
+        &self.quantizer
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// The template cell (for plane identity/refcount assertions).
+    pub fn cell(&self) -> &PackedLstmCell {
+        &self.cell
+    }
+
+    /// A per-shard cell: aliases this model's plane allocations, owns
+    /// fresh scratch.
+    pub(crate) fn share_cell(&self) -> PackedLstmCell {
+        self.cell.clone()
+    }
+
+    /// Shared handles to the dense LM head.
+    pub(crate) fn share_head(&self) -> (Arc<[f32]>, Arc<[f32]>) {
+        (self.head_w.clone(), self.head_b.clone())
+    }
+
+    /// Resident serving bytes — packed planes + dense head, counted
+    /// ONCE no matter how many shards serve from this model.
+    pub fn weight_bytes(&self) -> usize {
+        self.cell.weight_bytes()
+            + (self.head_w.len() + self.head_b.len()) * 4
+    }
+
+    /// Live owners of the recurrent plane allocation: 1 (this template)
+    /// + one per shard cell currently alive.
+    pub fn plane_owners(&self) -> usize {
+        self.cell.wh.plane_owners()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{BackendSpec, InferBackend, PackedBackend};
+
+    #[test]
+    fn prepare_rejects_pjrt() {
+        let w = ModelWeights::synthetic(10, 8, "ter", 1);
+        assert!(SharedModel::prepare(&w, BackendKind::PjrtDense, 1).is_err());
+    }
+
+    #[test]
+    fn shards_alias_one_plane_allocation() {
+        let w = ModelWeights::synthetic(20, 12, "ter", 5);
+        for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+            let shared = SharedModel::prepare(&w, kind, 9).unwrap();
+            assert_eq!(shared.plane_owners(), 1);
+            let spec = BackendSpec::with(kind, 2, 9);
+            let a = PackedBackend::from_shared(&shared, &spec).unwrap();
+            let b = PackedBackend::from_shared(&shared, &spec).unwrap();
+            assert_eq!(shared.plane_owners(), 3, "template + 2 shards");
+            assert_eq!(a.cell().wh.plane_ptr(), shared.cell().wh.plane_ptr());
+            assert_eq!(b.cell().wx.plane_ptr(), shared.cell().wx.plane_ptr());
+            // resident accounting is per model, not per shard
+            assert_eq!(shared.weight_bytes(), a.weight_bytes());
+            drop(a);
+            drop(b);
+            assert_eq!(shared.plane_owners(), 1);
+        }
+    }
+
+    #[test]
+    fn shared_and_direct_backends_match_bitwise() {
+        let w = ModelWeights::synthetic(22, 14, "bin", 31);
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 13);
+        let shared = SharedModel::prepare(&w, spec.kind, spec.sample_seed)
+            .unwrap();
+        let mut direct = crate::engine::from_weights(&w, &spec).unwrap();
+        let mut shard = crate::engine::from_shared(&shared, &spec).unwrap();
+        for s in 0..2 {
+            direct.reset_slot(s).unwrap();
+            shard.reset_slot(s).unwrap();
+        }
+        let mut la = vec![0.0f32; 2 * 22];
+        let mut lb = vec![0.0f32; 2 * 22];
+        for toks in [[Some(1), Some(2)], [Some(3), None], [Some(0), Some(21)]] {
+            direct.step_batch(&toks, &mut la).unwrap();
+            shard.step_batch(&toks, &mut lb).unwrap();
+            for (x, y) in la.iter().zip(&lb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

@@ -36,7 +36,20 @@
 //! and sharded by output column across a persistent worker pool
 //! ([`engine::ThreadPool`], sized by [`engine::BackendSpec::threads`]);
 //! logits are bit-identical for every thread count.
+//!
+//! # Cluster serving
+//!
+//! Beyond one engine, [`cluster::ServingCluster`] runs N engine shards —
+//! each a full continuous-batching `InferenceServer` on its own thread —
+//! over ONE shared packed weight set ([`engine::SharedModel`]; the plane
+//! bytes are `Arc`-backed, so shards alias a single resident
+//! allocation). A bounded MPMC front door plus an async router
+//! (least-loaded or round-robin, [`cluster::RoutePolicy`]) feed the
+//! shards; completions merge into one response stream. Greedy cluster
+//! responses are bit-identical to the single server for every shard
+//! count and policy.
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -16,9 +16,12 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
+use rbtw::cluster::{run_cluster_load, RoutePolicy};
 use rbtw::config::{default_spec_for_task, Config, ServeSpec};
-use rbtw::coordinator::{InferenceServer, Request, Split, Trainer};
-use rbtw::engine::{self, BackendKind, InferBackend};
+use rbtw::coordinator::{latency_breakdown, InferenceServer, LoadSpec,
+                        Request, Split, Trainer};
+use rbtw::engine::{self, BackendKind, InferBackend, ModelWeights,
+                   SharedModel};
 use rbtw::hwsim;
 use rbtw::model::export_packed;
 use rbtw::quant;
@@ -132,6 +135,9 @@ fn print_usage() {
          \x20                             --requests N --gen-len N --prompt-len N\n\
          \x20                             --slots N --batch-gemm true|false\n\
          \x20                             --threads N (0 = one per core)\n\
+         \x20                             --shards N (engine shards over one\n\
+         \x20                             shared weight set; packed only)\n\
+         \x20                             --policy least-loaded|round-robin\n\
          \x20                             --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
@@ -266,23 +272,67 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         ServeSpec::THREADS_RANGE.end());
         spec.threads = t;
     }
+    if let Some(s) = args.get_usize("shards")? {
+        anyhow::ensure!(ServeSpec::SHARDS_RANGE.contains(&s),
+                        "--shards {s} out of range [{}, {}]",
+                        ServeSpec::SHARDS_RANGE.start(),
+                        ServeSpec::SHARDS_RANGE.end());
+        spec.shards = s;
+    }
+    if let Some(p) = args.get("policy") {
+        spec.policy = RoutePolicy::parse(p)?;
+    }
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
     let backend_spec = spec.backend_spec();
+
+    if spec.backend != BackendKind::PjrtDense {
+        // the packed deployment path serves through the cluster; one
+        // shard is the plain continuous-batching server
+        let weights = ModelWeights::from_artifact(&dir, &name)?;
+        let shared =
+            SharedModel::prepare(&weights, spec.backend, spec.sample_seed)?;
+        println!(
+            "cluster: {} shard(s) x {} slots | {} routing | {} gemm | \
+             {} B resident packed weights (shared across shards)",
+            spec.shards,
+            spec.slots,
+            spec.policy.label(),
+            if spec.batch_gemm { "batched" } else { "per-slot" },
+            shared.weight_bytes(),
+        );
+        let load = LoadSpec { n_requests, prompt_len, gen_len,
+                              temperature: 0.8, seed: 7 };
+        let report = run_cluster_load(&shared, &backend_spec, spec.policy,
+                                      spec.queue_cap, &load)?;
+        let s = &report.stats;
+        for sh in &s.shards {
+            println!(
+                "  shard {}: routed {:>4} | completed {:>4} | steps {:>6} | \
+                 {:.0} tok/s | peak batch {}",
+                sh.shard, sh.routed, sh.server.completed,
+                sh.server.engine_steps, sh.tokens_per_sec,
+                sh.server.peak_active_slots,
+            );
+        }
+        println!(
+            "served {} requests in {:.2}s | {:.0} tok/s | engine steps {} | \
+             latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms",
+            s.completed, s.wall_s, s.tokens_per_sec, s.engine_steps,
+            s.total.p50_ms, s.total.p95_ms, s.total.p99_ms,
+        );
+        return Ok(());
+    }
+
+    anyhow::ensure!(spec.shards == 1,
+                    "pjrt-dense cannot shard: the weights live inside the \
+                     compiled executable (use --backend packed|planes)");
     let backend = engine::open(&dir, &name, &backend_spec)?;
-    // only the batched packed path shards across the pool; per-slot and
-    // pjrt-dense never spawn workers, so don't report a thread count
-    let thr_label = if spec.batch_gemm && backend.kind() != BackendKind::PjrtDense {
-        backend_spec.threads_resolved().to_string()
-    } else {
-        "-".to_string()
-    };
     println!(
-        "backend {} | {} slots | {} gemm | {thr_label} threads | {} B resident weights",
+        "backend {} | {} slots | native gemm | {} B resident weights",
         backend.kind().label(),
         backend.slots(),
-        if spec.batch_gemm { "batched" } else { "per-slot" },
         backend.weight_bytes()
     );
     let vocab = backend.vocab();
@@ -301,20 +351,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let responses = server.pump(1_000_000)?;
     let wall = t0.elapsed();
     let total_tokens: u64 = server.stats.tokens_processed;
-    let mut latencies: Vec<f64> = responses
-        .iter()
-        .map(|r| (r.queue_time + r.run_time).as_secs_f64() * 1e3)
-        .collect();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let p50 = latencies[latencies.len() / 2];
-    let p99 = latencies[(latencies.len() * 99 / 100).min(latencies.len() - 1)];
+    let (_, _, total) = latency_breakdown(&responses);
     println!(
         "served {} requests in {:.2}s | {:.0} tok/s | engine steps {} | \
-         latency p50 {p50:.1} ms p99 {p99:.1} ms | peak batch {}",
+         latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | peak batch {}",
         responses.len(),
         wall.as_secs_f64(),
         total_tokens as f64 / wall.as_secs_f64(),
         server.stats.engine_steps,
+        total.p50_ms,
+        total.p95_ms,
+        total.p99_ms,
         server.stats.peak_active_slots,
     );
     Ok(())

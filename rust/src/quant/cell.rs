@@ -22,6 +22,13 @@ use super::planes::{gemv_ternary_planes, TernaryPlanes};
 use crate::runtime::Session;
 
 /// Packed weight matrix, any precision/layout the engine serves from.
+///
+/// Cloning is cheap by design: every layout stores its plane words
+/// behind `Arc`, so a clone bumps a refcount instead of copying bytes —
+/// the mechanism the sharded serving cluster uses to run N engines over
+/// one resident weight set ([`Packed::plane_ptr`] /
+/// [`Packed::plane_owners`] let tests assert it).
+#[derive(Clone)]
 pub enum Packed {
     Binary(PackedBinary),
     Ternary(PackedTernary),
@@ -52,6 +59,26 @@ impl Packed {
             Packed::Binary(b) => b.packed_bytes(),
             Packed::Ternary(t) => t.packed_bytes(),
             Packed::Planes(p) => p.packed_bytes(),
+        }
+    }
+
+    /// Address of the primary plane allocation (sign plane for the LUT
+    /// layouts, pos plane for bit planes) — identical across shared
+    /// clones.
+    pub fn plane_ptr(&self) -> *const u64 {
+        match self {
+            Packed::Binary(b) => b.plane_ptr(),
+            Packed::Ternary(t) => t.plane_ptr(),
+            Packed::Planes(p) => p.plane_ptr(),
+        }
+    }
+
+    /// Live owners of the primary plane allocation (1 = unshared).
+    pub fn plane_owners(&self) -> usize {
+        match self {
+            Packed::Binary(b) => b.plane_owners(),
+            Packed::Ternary(t) => t.plane_owners(),
+            Packed::Planes(p) => p.plane_owners(),
         }
     }
 
@@ -191,6 +218,32 @@ pub struct PackedLstmCell {
 
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
+}
+
+impl Clone for PackedLstmCell {
+    /// Cheap clone for shard fan-out: the packed matrices alias the
+    /// source's `Arc`-backed plane allocations (no weight bytes copied),
+    /// the small folded-BN vectors are copied, and the scratch buffers
+    /// start fresh — each clone steps independently on its own scratch.
+    fn clone(&self) -> Self {
+        let n4 = 4 * self.hidden;
+        Self {
+            wx: self.wx.clone(),
+            wh: self.wh.clone(),
+            scale_x: self.scale_x.clone(),
+            shift_x: self.shift_x.clone(),
+            scale_h: self.scale_h.clone(),
+            shift_h: self.shift_h.clone(),
+            bias: self.bias.clone(),
+            hidden: self.hidden,
+            xw: vec![0.0; n4],
+            hw: vec![0.0; n4],
+            lut: LutScratch::default(),
+            xw_b: vec![],
+            hw_b: vec![],
+            gemm: GemmScratch::default(),
+        }
+    }
 }
 
 impl PackedLstmCell {
@@ -559,6 +612,31 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn cloned_cell_shares_planes_and_matches_bitwise() {
+        let (mut a, _, _) = mk_cell(30, 16, 57);
+        let mut b = a.clone();
+        // the clone aliases the source's plane allocations...
+        assert_eq!(a.wh.plane_ptr(), b.wh.plane_ptr());
+        assert_eq!(a.wx.plane_ptr(), b.wx.plane_ptr());
+        assert_eq!(a.wh.plane_owners(), 2);
+        // ...and walks the identical op sequence on its own scratch
+        let (mut ha, mut ca) = (vec![0.0f32; 16], vec![0.0f32; 16]);
+        let (mut hb, mut cb) = (vec![0.0f32; 16], vec![0.0f32; 16]);
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            let tok = rng.below_usize(30);
+            a.step_token(tok, &mut ha, &mut ca);
+            b.step_token(tok, &mut hb, &mut cb);
+            for k in 0..16 {
+                assert_eq!(ha[k].to_bits(), hb[k].to_bits());
+                assert_eq!(ca[k].to_bits(), cb[k].to_bits());
+            }
+        }
+        drop(b);
+        assert_eq!(a.wh.plane_owners(), 1);
     }
 
     #[test]

@@ -9,6 +9,15 @@
 //! along u64 words column-major — column j's plane occupies words
 //! `[j*wpc .. (j+1)*wpc)` with bit b of word w covering row `64*w + b`.
 //! This keeps a GEMV inner loop sequential in memory per output column.
+//!
+//! Plane words live behind `Arc<[u64]>`: a packed matrix is immutable
+//! after packing, so clones are reference bumps, never byte copies. This
+//! is what lets N serving shards (see `crate::cluster`) serve from ONE
+//! resident copy of the planes — the paper's 12× memory saving must not
+//! be multiplied back by replication. `plane_ptr`/`plane_owners` expose
+//! the shared allocation for identity/refcount assertions.
+
+use std::sync::Arc;
 
 /// A packed binary matrix: values in {-alpha, +alpha}.
 #[derive(Clone, Debug, PartialEq)]
@@ -17,7 +26,8 @@ pub struct PackedBinary {
     pub cols: usize,
     pub alpha: f32,
     /// sign plane: bit set => +1, clear => -1; cols * words_per_col words.
-    pub sign: Vec<u64>,
+    /// Shared: clones alias the same allocation.
+    pub sign: Arc<[u64]>,
 }
 
 /// A packed ternary matrix: values in {-alpha, 0, +alpha}.
@@ -27,9 +37,10 @@ pub struct PackedTernary {
     pub cols: usize,
     pub alpha: f32,
     /// sign plane: bit set => positive (only meaningful where mask set).
-    pub sign: Vec<u64>,
-    /// mask plane: bit set => non-zero.
-    pub mask: Vec<u64>,
+    /// Shared: clones alias the same allocation.
+    pub sign: Arc<[u64]>,
+    /// mask plane: bit set => non-zero. Shared like `sign`.
+    pub mask: Arc<[u64]>,
 }
 
 /// Words per packed column for `rows` entries.
@@ -52,7 +63,7 @@ impl PackedBinary {
                 }
             }
         }
-        Self { rows, cols, alpha, sign }
+        Self { rows, cols, alpha, sign: sign.into() }
     }
 
     /// Unpack to a row-major f32 matrix (±alpha).
@@ -71,6 +82,17 @@ impl PackedBinary {
     /// Bytes occupied by the packed planes (the Size columns).
     pub fn packed_bytes(&self) -> usize {
         self.sign.len() * 8
+    }
+
+    /// Address of the sign-plane allocation — identical across shared
+    /// clones (pointer-identity proof that no plane bytes were copied).
+    pub fn plane_ptr(&self) -> *const u64 {
+        self.sign.as_ptr()
+    }
+
+    /// Live owners of the sign-plane allocation (1 = unshared).
+    pub fn plane_owners(&self) -> usize {
+        Arc::strong_count(&self.sign)
     }
 }
 
@@ -95,7 +117,7 @@ impl PackedTernary {
                 }
             }
         }
-        Self { rows, cols, alpha, sign, mask }
+        Self { rows, cols, alpha, sign: sign.into(), mask: mask.into() }
     }
 
     /// Unpack to a row-major f32 matrix.
@@ -117,6 +139,17 @@ impl PackedTernary {
 
     pub fn packed_bytes(&self) -> usize {
         (self.sign.len() + self.mask.len()) * 8
+    }
+
+    /// Address of the sign-plane allocation — identical across shared
+    /// clones (the mask plane travels with it; both are `Arc`-backed).
+    pub fn plane_ptr(&self) -> *const u64 {
+        self.sign.as_ptr()
+    }
+
+    /// Live owners of the sign-plane allocation (1 = unshared).
+    pub fn plane_owners(&self) -> usize {
+        Arc::strong_count(&self.sign)
     }
 
     /// Fraction of non-zero weights (Fig. 1a reports the ternary weight
@@ -173,6 +206,20 @@ mod tests {
         assert_eq!(b.packed_bytes(), 4 * 8); // one word per column
         let t = PackedTernary::pack(&vec![0.0; 64 * 4], 64, 4, 1.0);
         assert_eq!(t.packed_bytes(), 2 * 4 * 8); // two planes
+    }
+
+    #[test]
+    fn clones_share_plane_allocations() {
+        let b = PackedBinary::pack(&vec![1.0; 64 * 4], 64, 4, 1.0);
+        let b2 = b.clone();
+        assert_eq!(b.plane_ptr(), b2.plane_ptr());
+        assert_eq!(b.plane_owners(), 2);
+        let t = PackedTernary::pack(&vec![0.0; 64 * 4], 64, 4, 1.0);
+        let t2 = t.clone();
+        assert_eq!(t.plane_ptr(), t2.plane_ptr());
+        assert_eq!(t2.plane_owners(), 2);
+        drop(t2);
+        assert_eq!(t.plane_owners(), 1);
     }
 
     #[test]

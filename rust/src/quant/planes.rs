@@ -25,19 +25,25 @@
 //! serving backends can switch between them per `BackendSpec` without
 //! changing a single logit bit.
 
+use std::sync::Arc;
+
 use super::gemv_lut::{le_bytes, LutScratch};
 use super::pack::{words_per_col, PackedTernary};
 
 /// Ternary matrix as two positive/negative selector planes.
+///
+/// Like the sign/mask layout, the planes are `Arc`-backed and immutable
+/// after construction: clones alias the same allocation, so N serving
+/// shards hold one resident copy of the plane bytes.
 #[derive(Clone, Debug)]
 pub struct TernaryPlanes {
     pub rows: usize,
     pub cols: usize,
     pub alpha: f32,
-    /// bit set => +alpha at that (row, col).
-    pub pos: Vec<u64>,
-    /// bit set => -alpha.
-    pub neg: Vec<u64>,
+    /// bit set => +alpha at that (row, col). Shared across clones.
+    pub pos: Arc<[u64]>,
+    /// bit set => -alpha. Shared like `pos`.
+    pub neg: Arc<[u64]>,
 }
 
 impl TernaryPlanes {
@@ -45,20 +51,32 @@ impl TernaryPlanes {
         let pos: Vec<u64> = p
             .mask
             .iter()
-            .zip(&p.sign)
+            .zip(p.sign.iter())
             .map(|(&m, &s)| m & s)
             .collect();
         let neg: Vec<u64> = p
             .mask
             .iter()
-            .zip(&p.sign)
+            .zip(p.sign.iter())
             .map(|(&m, &s)| m & !s)
             .collect();
-        Self { rows: p.rows, cols: p.cols, alpha: p.alpha, pos, neg }
+        Self { rows: p.rows, cols: p.cols, alpha: p.alpha,
+               pos: pos.into(), neg: neg.into() }
     }
 
     pub fn packed_bytes(&self) -> usize {
         (self.pos.len() + self.neg.len()) * 8
+    }
+
+    /// Address of the pos-plane allocation — identical across shared
+    /// clones (the neg plane travels with it).
+    pub fn plane_ptr(&self) -> *const u64 {
+        self.pos.as_ptr()
+    }
+
+    /// Live owners of the pos-plane allocation (1 = unshared).
+    pub fn plane_owners(&self) -> usize {
+        Arc::strong_count(&self.pos)
     }
 }
 
@@ -124,7 +142,7 @@ mod tests {
             .collect();
         let planes = TernaryPlanes::from_packed(
             &PackedTernary::pack(&w, 200, 8, 1.0));
-        for (p, n) in planes.pos.iter().zip(&planes.neg) {
+        for (p, n) in planes.pos.iter().zip(planes.neg.iter()) {
             assert_eq!(p & n, 0, "pos/neg planes must be disjoint");
         }
     }

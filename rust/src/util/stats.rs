@@ -74,6 +74,37 @@ pub fn percentiles(samples: &[f64], qs: &[f64]) -> Vec<f64> {
     qs.iter().map(|&q| percentile(&s, q)).collect()
 }
 
+/// Latency sample summary in milliseconds — the serving percentiles the
+/// load harness and the cluster report (p50/p95/p99 via
+/// [`percentiles`]). `n = 0` (no samples) is all-zero, not a panic, so
+/// empty loads report cleanly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    pub fn from_ms(samples: &[f64]) -> Self {
+        if samples.is_empty() {
+            return Self::default();
+        }
+        let ps = percentiles(samples, &[0.5, 0.95, 0.99, 1.0]);
+        Self {
+            n: samples.len(),
+            mean_ms: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50_ms: ps[0],
+            p95_ms: ps[1],
+            p99_ms: ps[2],
+            max_ms: ps[3],
+        }
+    }
+}
+
 /// Fixed-range histogram used for the density figures (Appendix A, Fig 1).
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -153,6 +184,21 @@ mod tests {
         assert_eq!(percentile(&s, 0.0), 1.0);
         assert_eq!(percentile(&s, 1.0), 4.0);
         assert!((percentile(&s, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_summary_orders_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencySummary::from_ms(&samples);
+        assert_eq!(s.n, 100);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert!(s.p50_ms <= s.p95_ms && s.p95_ms <= s.p99_ms
+                && s.p99_ms <= s.max_ms);
+        assert_eq!(s.max_ms, 100.0);
+        // empty input reports zeros instead of panicking
+        let z = LatencySummary::from_ms(&[]);
+        assert_eq!(z.n, 0);
+        assert_eq!(z.max_ms, 0.0);
     }
 
     #[test]

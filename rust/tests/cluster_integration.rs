@@ -1,0 +1,296 @@
+//! Sharded-cluster integration: the `ServingCluster` must be an exact
+//! semantic refinement of the single `InferenceServer` —
+//!
+//! * **Cluster equivalence**: for a fixed greedy request set, shards ∈
+//!   {1, 2, 4} × both routing policies produce bit-identical generated
+//!   tokens and prompt log-probs to the single-server reference.
+//!   Routing decides where/when a request runs, never what it computes.
+//! * **One resident weight copy**: plane bytes are allocated once per
+//!   model — asserted via `Arc::strong_count` (template + one owner per
+//!   live shard cell) and plane pointer identity, never once per shard.
+//! * **Backpressure**: `submit` on a full bounded front queue fails
+//!   fast without corrupting cluster state; every accepted request
+//!   still completes exactly once.
+//! * **Digest hook**: `ci.sh` runs `cluster_digest_is_shard_invariant`
+//!   with `RBTW_CLUSTER_SHARDS=1` and `=2`, each writing an FNV digest
+//!   of the greedy response stream to `RBTW_CLUSTER_DIGEST`, and diffs
+//!   the two files — any shard-count leak into the responses (or
+//!   run-to-run nondeterminism) fails CI.
+
+use rbtw::cluster::{run_cluster_load, RoutePolicy, ServingCluster};
+use rbtw::coordinator::{InferenceServer, LoadSpec, Request, Response};
+use rbtw::engine::{self, BackendKind, BackendSpec, ModelWeights, SharedModel};
+
+#[path = "digest.rs"]
+mod digest;
+
+/// Staggered greedy request set: uneven prompt/gen lengths force slots
+/// to free and refill mid-decode on every shard (continuous-batching
+/// churn), which is exactly the regime equivalence must survive.
+fn staggered_requests(vocab: usize, n: usize) -> Vec<Request> {
+    (0..n as u64)
+        .map(|id| Request {
+            id,
+            prompt: (0..1 + (id as usize % 4))
+                .map(|k| ((id as usize * 7 + k * 3) % vocab) as i32)
+                .collect(),
+            gen_len: 1 + (id as usize * 5) % 7,
+            temperature: 0.0, // greedy: rng-free, logit-determined
+        })
+        .collect()
+}
+
+/// The single-server reference for a request set, sorted by id.
+fn single_server_reference(weights: &ModelWeights, spec: &BackendSpec,
+                           reqs: &[Request]) -> Vec<Response> {
+    let backend = engine::from_weights(weights, spec).unwrap();
+    let mut server = InferenceServer::with_backend(backend, reqs.len().max(1));
+    for r in reqs {
+        server.submit(r.clone()).unwrap();
+    }
+    let mut out = server.pump(1_000_000).unwrap();
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+fn assert_same_responses(label: &str, got: &[Response], want: &[Response]) {
+    assert_eq!(got.len(), want.len(), "[{label}] response count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.id, w.id, "[{label}] response order");
+        assert_eq!(g.generated, w.generated,
+                   "[{label}] req {} greedy tokens diverged", g.id);
+        assert_eq!(g.prompt_logprob.to_bits(), w.prompt_logprob.to_bits(),
+                   "[{label}] req {} prompt log-prob diverged", g.id);
+    }
+}
+
+#[test]
+fn cluster_matches_single_server_for_every_shard_count_and_policy() {
+    for (kind, quant) in [(BackendKind::PackedCpu, "ter"),
+                          (BackendKind::PackedPlanes, "ter"),
+                          (BackendKind::PackedCpu, "bin")] {
+        let weights = ModelWeights::synthetic(26, 18, quant, 0x5A1);
+        let spec = BackendSpec::with(kind, 4, 9);
+        let reqs = staggered_requests(26, 14);
+        let want = single_server_reference(&weights, &spec, &reqs);
+        let shared = SharedModel::prepare(&weights, kind, 9).unwrap();
+        for shards in [1usize, 2, 4] {
+            for policy in RoutePolicy::all() {
+                let label = format!("{} {quant} shards={shards} {policy}",
+                                    kind.label());
+                let mut cluster = ServingCluster::new(
+                    &shared, &spec.with_shards(shards), 64, policy).unwrap();
+                for r in &reqs {
+                    cluster.submit(r.clone()).unwrap();
+                }
+                let report = cluster.drain().unwrap();
+                let mut got: Vec<Response> = report
+                    .responses
+                    .iter()
+                    .map(|r| r.response.clone())
+                    .collect();
+                got.sort_by_key(|r| r.id);
+                assert_same_responses(&label, &got, &want);
+                assert_eq!(report.stats.completed, reqs.len() as u64,
+                           "[{label}]");
+                let routed: u64 =
+                    report.stats.shards.iter().map(|s| s.routed).sum();
+                assert_eq!(routed, reqs.len() as u64, "[{label}] routing");
+            }
+        }
+    }
+}
+
+#[test]
+fn plane_bytes_allocated_once_per_model_not_per_shard() {
+    let weights = ModelWeights::synthetic(24, 16, "ter", 0x9D);
+    for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+        let shared = SharedModel::prepare(&weights, kind, 5).unwrap();
+        assert_eq!(shared.plane_owners(), 1, "fresh model: sole owner");
+        let base = shared.weight_bytes();
+        let wh_ptr = shared.cell().wh.plane_ptr();
+        let wx_ptr = shared.cell().wx.plane_ptr();
+        for shards in [1usize, 2, 4] {
+            let spec = BackendSpec::with(kind, 3, 5).with_shards(shards);
+            let cluster = ServingCluster::new(&shared, &spec, 8,
+                                              RoutePolicy::LeastLoaded)
+                .unwrap();
+            // one owner per live shard cell + the template, regardless
+            // of how many engines are serving — pointer identity plus
+            // refcount prove zero plane bytes were copied
+            assert_eq!(shared.plane_owners(), 1 + shards,
+                       "{} shards={shards}", kind.label());
+            assert_eq!(shared.cell().wh.plane_ptr(), wh_ptr);
+            assert_eq!(shared.cell().wx.plane_ptr(), wx_ptr);
+            // resident accounting is per model and constant in shards
+            assert_eq!(cluster.weight_bytes(), base);
+            drop(cluster);
+            assert_eq!(shared.plane_owners(), 1,
+                       "shard cells must die with the cluster");
+        }
+    }
+}
+
+#[test]
+fn cluster_backpressure_fails_fast_without_corrupting_state() {
+    let weights = ModelWeights::synthetic(20, 12, "ter", 0xF00);
+    let shared =
+        SharedModel::prepare(&weights, BackendKind::PackedCpu, 3).unwrap();
+    // tiny front door + single busy shard: the absorbable in-flight set
+    // (front 2 + inbox 2 + admission 1 + slot 1) is far below the offer
+    let spec = BackendSpec::with(BackendKind::PackedCpu, 1, 3);
+    let mut cluster =
+        ServingCluster::new(&shared, &spec, 2, RoutePolicy::LeastLoaded)
+            .unwrap();
+    assert_eq!(cluster.queue_capacity(), 2);
+    let mut accepted = vec![];
+    let mut rejections = 0u32;
+    for id in 0..40u64 {
+        let req = Request { id, prompt: vec![(id % 20) as i32],
+                            gen_len: 256, temperature: 0.0 };
+        match cluster.submit(req) {
+            Ok(()) => accepted.push(id),
+            Err(e) => {
+                rejections += 1;
+                let msg = format!("{e:#}");
+                assert!(msg.contains("full"), "unexpected error: {msg}");
+            }
+        }
+    }
+    assert!(rejections > 0,
+            "40 long requests against a depth-~6 pipeline must trip the \
+             bounded queue");
+    assert_eq!(cluster.submitted(), accepted.len() as u64);
+    // the rejected submits corrupted nothing: every accepted request
+    // completes exactly once, none of the rejected ones appear
+    let report = cluster.drain().unwrap();
+    let mut ids: Vec<u64> =
+        report.responses.iter().map(|r| r.response.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, accepted, "accepted set served exactly once");
+    for r in &report.responses {
+        assert_eq!(r.response.generated.len(), 256);
+    }
+}
+
+#[test]
+fn round_robin_routes_evenly() {
+    let weights = ModelWeights::synthetic(20, 12, "ter", 0xAB);
+    let shared =
+        SharedModel::prepare(&weights, BackendKind::PackedPlanes, 3).unwrap();
+    let spec = BackendSpec::with(BackendKind::PackedPlanes, 2, 3)
+        .with_shards(4);
+    let mut cluster =
+        ServingCluster::new(&shared, &spec, 32, RoutePolicy::RoundRobin)
+            .unwrap();
+    for id in 0..12u64 {
+        cluster.submit(Request { id, prompt: vec![1, 2], gen_len: 2,
+                                 temperature: 0.0 }).unwrap();
+    }
+    let report = cluster.drain().unwrap();
+    assert_eq!(report.stats.completed, 12);
+    for s in &report.stats.shards {
+        assert_eq!(s.routed, 3,
+                   "round-robin must rotate strictly: shard {} got {}",
+                   s.shard, s.routed);
+    }
+    assert_eq!(report.stats.routing_imbalance(), 0);
+}
+
+#[test]
+fn dropping_a_live_cluster_shuts_down_gracefully() {
+    let weights = ModelWeights::synthetic(20, 12, "ter", 0x77);
+    let shared =
+        SharedModel::prepare(&weights, BackendKind::PackedCpu, 3).unwrap();
+    let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 3).with_shards(2);
+    let mut cluster =
+        ServingCluster::new(&shared, &spec, 16, RoutePolicy::LeastLoaded)
+            .unwrap();
+    for id in 0..6u64 {
+        cluster.submit(Request { id, prompt: vec![3], gen_len: 4,
+                                 temperature: 0.0 }).unwrap();
+    }
+    // no drain: Drop must close the front door, let accepted work
+    // finish, and join the fleet without hanging this test
+    drop(cluster);
+    // shard cells died with the cluster — the shared planes are whole
+    assert_eq!(shared.plane_owners(), 1);
+}
+
+/// Worker-shard count for the digest run (`RBTW_CLUSTER_SHARDS`,
+/// default 2 so a plain `cargo test` exercises a real multi-shard
+/// cluster). `ci.sh` runs 1 and 2 and diffs the digest files.
+fn digest_shards() -> usize {
+    match std::env::var("RBTW_CLUSTER_SHARDS") {
+        // a present-but-invalid value (unparsable OR zero) must FAIL,
+        // not silently fall back — that would turn ci.sh's comparison
+        // into a vacuous pass
+        Ok(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => panic!(
+                "RBTW_CLUSTER_SHARDS must be a positive integer, got '{s}'"),
+        },
+        Err(_) => 2,
+    }
+}
+
+/// FNV-1a over the id-sorted greedy response stream: ids, generated
+/// tokens, prompt log-prob bits. Everything scheduling could corrupt,
+/// nothing it may legitimately change (shard tags, timings).
+fn digest_responses(mut responses: Vec<Response>) -> u64 {
+    responses.sort_by_key(|r| r.id);
+    let mut hash = digest::FNV_OFFSET;
+    for r in &responses {
+        digest::feed(&mut hash, &r.id.to_le_bytes());
+        for t in &r.generated {
+            digest::feed(&mut hash, &t.to_le_bytes());
+        }
+        digest::feed(&mut hash, &r.prompt_logprob.to_bits().to_le_bytes());
+    }
+    hash
+}
+
+/// The ci.sh determinism hook: a fixed greedy load through a cluster
+/// with `RBTW_CLUSTER_SHARDS` shards must digest identically to the
+/// single-server reference (asserted in-process), and identically
+/// across shard counts and runs (asserted by ci.sh's file diff via
+/// `RBTW_CLUSTER_DIGEST`).
+#[test]
+fn cluster_digest_is_shard_invariant() {
+    let shards = digest_shards();
+    let weights = ModelWeights::synthetic(30, 20, "ter", 0xD16);
+    let spec = BackendSpec::with(BackendKind::PackedPlanes, 4, 11)
+        .with_shards(shards);
+    let load = LoadSpec { n_requests: 20, prompt_len: 5, gen_len: 8,
+                          temperature: 0.0, seed: 0x1CE };
+    // reference: the identical request set through one InferenceServer
+    let reqs = load.requests(30);
+    let want = single_server_reference(&weights, &spec, &reqs);
+    let want_digest = digest_responses(want);
+    // cluster run (both policies must land on the same digest)
+    let shared = SharedModel::prepare(&weights, spec.kind, 11).unwrap();
+    let mut digests = vec![];
+    for policy in RoutePolicy::all() {
+        let report = run_cluster_load(&shared, &spec, policy,
+                                      load.n_requests, &load).unwrap();
+        let got: Vec<Response> = report
+            .responses
+            .iter()
+            .map(|r| r.response.clone())
+            .collect();
+        digests.push(digest_responses(got));
+    }
+    for (i, d) in digests.iter().enumerate() {
+        assert_eq!(*d, want_digest,
+                   "shards={shards} policy #{i}: cluster digest diverged \
+                    from the single-server reference");
+    }
+    if let Ok(path) = std::env::var("RBTW_CLUSTER_DIGEST") {
+        // write the CLUSTER run's digest, not the reference: the
+        // reference is shard-count-independent by construction, so
+        // writing it would make ci.sh's shards=1-vs-2 cmp vacuous
+        let line = format!("greedy:{:016x}\n", digests[0]);
+        std::fs::write(&path, line)
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    }
+}

@@ -1,0 +1,19 @@
+//! Shared FNV-1a helper for the ci.sh digest tests.
+//!
+//! Included via `#[path = "digest.rs"] mod digest;` by both
+//! `engine_equivalence.rs` and `cluster_integration.rs` (it is NOT a
+//! test target of its own — only the files listed in Cargo.toml are),
+//! so every digest file ci.sh compares is produced by one hash
+//! implementation that cannot drift between suites.
+#![allow(dead_code)]
+
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Fold `bytes` into `hash` (FNV-1a byte order).
+pub fn feed(hash: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *hash ^= b as u64;
+        *hash = hash.wrapping_mul(FNV_PRIME);
+    }
+}

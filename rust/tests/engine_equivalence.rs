@@ -27,6 +27,9 @@ use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights,
 use rbtw::quant::{gemv_f32, Packed};
 use rbtw::util::Rng;
 
+#[path = "digest.rs"]
+mod digest;
+
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
@@ -137,12 +140,9 @@ fn equivalence_digest(seed: u64) -> u64 {
                        "seed {seed} config {si} logit {i}: {x} vs {y}");
         }
     }
-    let mut hash = 0xcbf29ce484222325u64;
+    let mut hash = digest::FNV_OFFSET;
     for v in first {
-        for byte in v.to_bits().to_le_bytes() {
-            hash ^= byte as u64;
-            hash = hash.wrapping_mul(0x100000001b3);
-        }
+        digest::feed(&mut hash, &v.to_bits().to_le_bytes());
     }
     hash
 }

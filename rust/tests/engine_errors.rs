@@ -11,9 +11,9 @@ const VOCAB: usize = 21;
 const HIDDEN: usize = 12;
 const SLOTS: usize = 3;
 
-fn backends() -> Vec<Box<dyn InferBackend>> {
+fn backends() -> Vec<Box<dyn InferBackend + Send>> {
     let w = ModelWeights::synthetic(VOCAB, HIDDEN, "ter", 0xE44);
-    let mut out: Vec<Box<dyn InferBackend>> = vec![];
+    let mut out: Vec<Box<dyn InferBackend + Send>> = vec![];
     for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
         for batched in [false, true] {
             let mut spec = BackendSpec::with(kind, SLOTS, 5);

@@ -174,6 +174,82 @@ fn churn_on_batched_path_matches_fresh_single_slot_runs() {
     }
 }
 
+/// Backpressure on the packed path, beyond "submit errors": a rejected
+/// submit on a FULL bounded queue must leave the server's queue, slots
+/// and backend state bit-untouched. The pressured server (queue cap 2,
+/// rejections interleaved with steps) must produce exactly the greedy
+/// responses of an unpressured reference run — `run_load` sizes its
+/// queue to `n_requests`, so this path is exercised nowhere else.
+#[test]
+fn backpressure_rejection_leaves_packed_server_state_intact() {
+    let weights = ModelWeights::synthetic(24, 16, "ter", 0xBEE);
+    let mk_req = |id: u64| Request {
+        id,
+        prompt: vec![(id % 24) as i32, 5, (id % 7) as i32],
+        gen_len: 3,
+        temperature: 0.0,
+    };
+    for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+        let spec = BackendSpec::with(kind, 2, 9);
+        // reference: same six requests, queue never fills
+        let reference = {
+            let backend = engine::from_weights(&weights, &spec).unwrap();
+            let mut server = InferenceServer::with_backend(backend, 64);
+            for id in 0..6 {
+                server.submit(mk_req(id)).unwrap();
+            }
+            let mut r = server.pump(10_000).unwrap();
+            r.sort_by_key(|x| x.id);
+            r
+        };
+        // pressured: queue cap 2 forces rejections mid-serve
+        let backend = engine::from_weights(&weights, &spec).unwrap();
+        let mut server = InferenceServer::with_backend(backend, 2);
+        let mut out = vec![];
+        let mut rejections = 0u32;
+        let mut next = 0u64;
+        let mut guard = 0u32;
+        while next < 6 {
+            guard += 1;
+            assert!(guard < 10_000, "backpressure loop wedged");
+            match server.submit(mk_req(next)) {
+                Ok(()) => next += 1,
+                Err(_) => {
+                    rejections += 1;
+                    // the queue really is at capacity, and the failed
+                    // submit lost nothing
+                    assert_eq!(server.pending(), server.queue_capacity());
+                    server.step().unwrap();
+                    while let Ok(r) = server.done_rx.try_recv() {
+                        out.push(r);
+                    }
+                }
+            }
+        }
+        assert!(rejections > 0,
+                "[{}] cap-2 queue with 6 requests must reject", kind.label());
+        out.extend(server.pump(10_000).unwrap());
+        out.sort_by_key(|x| x.id);
+        assert_eq!(out.len(), 6, "[{}] all accepted requests complete",
+                   kind.label());
+        for (got, want) in out.iter().zip(&reference) {
+            assert_eq!(got.id, want.id);
+            assert_eq!(got.generated, want.generated,
+                       "[{}] req {} tokens corrupted by backpressure",
+                       kind.label(), got.id);
+            assert_eq!(got.prompt_logprob.to_bits(),
+                       want.prompt_logprob.to_bits(),
+                       "[{}] req {} log-prob corrupted by backpressure",
+                       kind.label(), got.id);
+        }
+        // and the server still accepts + serves new work afterwards
+        server.submit(mk_req(99)).unwrap();
+        let tail = server.pump(10_000).unwrap();
+        assert_eq!(tail.len(), 1);
+        assert_eq!(tail[0].id, 99);
+    }
+}
+
 #[test]
 fn invalid_requests_rejected() {
     require_artifact!("char_ptb_ter");
