@@ -10,19 +10,21 @@ cargo build --release
 
 # The main test pass doubles as the first equivalence run: the
 # seed_matrix test in engine_equivalence drives packed-cpu/packed-planes
-# x per-slot/batched over ≥3 seeds, asserts bit-for-bit logits, and
-# writes a digest of the logit stream when RBTW_EQUIV_DIGEST is set.
+# x per-slot/batched x {lstm, gru} x layers {1, 2}, asserts bit-for-bit
+# logits per config, and writes a digest of the logit streams when
+# RBTW_EQUIV_DIGEST is set (one line per arch x depth config).
 # RBTW_THREADS=1 pins the batched configs to the fully inline path.
 echo "== cargo test -q (equivalence run 1: threads=1) =="
 mkdir -p target
 rm -f target/equiv_digest_a.txt target/equiv_digest_b.txt
 RBTW_EQUIV_DIGEST=target/equiv_digest_a.txt RBTW_THREADS=1 cargo test -q
 
-# Second equivalence run re-drives the seed matrix with the batched
-# configs sharded across 4 worker threads. One cmp then catches BOTH
-# failure modes: run-to-run nondeterminism AND any thread-count leak
-# into the logits — either is a serving bug even when each run is
-# internally consistent.
+# Second equivalence run re-drives the seed matrix (all four
+# arch x depth configs) with the batched configs sharded across 4
+# worker threads. One cmp then catches BOTH failure modes: run-to-run
+# nondeterminism AND any thread-count leak into the logits — for
+# shallow LSTMs, stacked LSTMs and GRUs alike — either is a serving
+# bug even when each run is internally consistent.
 echo "== cross-backend equivalence (run 2: threads=4, determinism + thread invariance) =="
 RBTW_EQUIV_DIGEST=target/equiv_digest_b.txt RBTW_THREADS=4 \
     cargo test -q --test engine_equivalence
@@ -42,10 +44,12 @@ echo "equivalence digests stable across runs and thread counts (1 vs 4):"
 cat target/equiv_digest_a.txt
 
 # Cluster determinism: the identical greedy request set served through a
-# 1-shard and a 2-shard ServingCluster must digest identically (the test
-# also asserts each digest equals the single-InferenceServer reference
-# in-process). A mismatch means shard count or routing leaked into the
-# responses — a serving bug even when each run is self-consistent.
+# 1-shard and a 2-shard ServingCluster (over a 2-layer packed GRU, so
+# the stacked/GRU path is the one being digested) must digest
+# identically (the test also asserts each digest equals the
+# single-InferenceServer reference in-process). A mismatch means shard
+# count or routing leaked into the responses — a serving bug even when
+# each run is self-consistent.
 echo "== cluster determinism (shards=1 vs shards=2 response digests) =="
 rm -f target/cluster_digest_1.txt target/cluster_digest_2.txt
 # (filtered to the digest test — the rest of the suite already ran in

@@ -6,13 +6,17 @@
 //!   cargo run --release --example serve_lm [-- --backend pjrt|packed|planes|all]
 //!       [--requests N] [--artifact NAME] [--per-slot] [--threads N]
 //!       [--shards N] [--policy least-loaded|round-robin]
+//!       [--arch lstm|gru] [--layers N]
 //!
 //! `--per-slot` steps the packed backends through the per-slot GEMV
 //! reference path instead of the default batched SIMD-tiled GEMM (one
 //! weight stream per step for all active slots); `--threads N` pins the
 //! batched path's worker-pool size (0 = one per core, the default).
 //! Logits are bit-identical for every path and thread count, only
-//! tokens/sec changes.
+//! tokens/sec changes. `--arch`/`--layers` pick the synthetic stand-in
+//! model's cell architecture and stack depth (artifacts carry their
+//! own shape), so deep LSTM and GRU packed serving run end-to-end
+//! offline.
 //!
 //! `--shards N` (default 1) additionally serves the packed kinds
 //! through a `ServingCluster`: N engine shards — each its own
@@ -30,7 +34,7 @@ use std::path::PathBuf;
 
 use rbtw::cluster::{run_cluster_load, RoutePolicy};
 use rbtw::coordinator::{run_load, LoadSpec};
-use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend,
+use rbtw::engine::{self, BackendKind, BackendSpec, CellArch, InferBackend,
                    ModelWeights, SharedModel};
 use rbtw::util::table::Table;
 
@@ -63,6 +67,19 @@ fn main() -> anyhow::Result<()> {
         Some(p) => RoutePolicy::parse(&p)?,
         None => RoutePolicy::LeastLoaded,
     };
+    let arch = match flag(&args, "--arch") {
+        Some(a) => CellArch::parse(&a)?,
+        None => CellArch::Lstm,
+    };
+    let layers: usize = match flag(&args, "--layers") {
+        Some(s) => match s.parse() {
+            Ok(n) if (1..=BackendSpec::MAX_LAYERS).contains(&n) => n,
+            _ => anyhow::bail!(
+                "--layers takes an integer in [1, {}], got '{s}'",
+                BackendSpec::MAX_LAYERS),
+        },
+        None => 1,
+    };
     let kinds: Vec<BackendKind> = if backend_arg == "all" {
         BackendKind::all().to_vec()
     } else {
@@ -71,16 +88,20 @@ fn main() -> anyhow::Result<()> {
 
     let dir = PathBuf::from("artifacts");
     let have_artifact = dir.join(format!("{artifact}.meta.json")).exists();
-    let synthetic = ModelWeights::synthetic(50, 128, "ter", 0xA11CE);
+    let synthetic =
+        ModelWeights::synthetic_arch(50, 128, arch, layers, "ter", 0xA11CE);
     if !have_artifact {
         println!("(artifact {artifact} not built — serving the synthetic \
-                  stand-in model {})\n", synthetic.name);
+                  stand-in model {}: {} x{} layer(s))\n",
+                 synthetic.name, arch.label(), layers);
     }
 
     let mut t = Table::new(&["backend", "gemm", "thr", "req", "tok/s",
                              "p50 ms", "p95 ms", "p99 ms", "weights B"]);
     for kind in kinds.iter().copied() {
-        let mut spec = BackendSpec::with(kind, 16, 3).with_threads(threads);
+        let mut spec = BackendSpec::with(kind, 16, 3)
+            .with_threads(threads)
+            .with_arch(arch, layers);
         if per_slot {
             spec = spec.per_slot();
         }
@@ -149,7 +170,8 @@ fn main() -> anyhow::Result<()> {
             }
             let spec = BackendSpec::with(kind, 16, 3)
                 .with_threads(threads)
-                .with_shards(shards);
+                .with_shards(shards)
+                .with_arch(arch, layers);
             let shared = if have_artifact {
                 let w = ModelWeights::from_artifact(&dir, &artifact)?;
                 SharedModel::prepare(&w, kind, spec.sample_seed)?

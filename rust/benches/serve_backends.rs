@@ -16,7 +16,8 @@ mod common;
 use std::collections::BTreeMap;
 
 use rbtw::coordinator::{run_load, LoadSpec};
-use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
+use rbtw::engine::{self, BackendKind, BackendSpec, CellArch, InferBackend,
+                   ModelWeights};
 use rbtw::util::table::Table;
 use rbtw::util::Json;
 
@@ -86,99 +87,122 @@ fn main() -> anyhow::Result<()> {
     }
     t.print();
 
-    // --- decode-slot × thread sweep: per-slot GEMV vs tiled GEMM ------
+    // --- layer × slot × thread sweep: per-slot GEMV vs tiled GEMM -----
     // A wider recurrent matrix (h=768 → wh is 768x3072) puts the bench
     // in the weight-stream-bound regime; at small hidden widths both
     // paths are tail-bound and the sweep says nothing. The per-slot
-    // reference is measured once per (backend, slots) — it has no
-    // thread pool; the tiled batched path is swept over worker threads
-    // {1, 2, 4, max-core} (deduped), each shard streaming its own
-    // column range of the packed planes.
-    println!("\n== slot x thread sweep: per-slot GEMV vs SIMD-tiled \
-              batched GEMM (synthetic ternary, h=768) ==");
-    let sweep_model = ModelWeights::synthetic(50, 768, "ter", 0xBE5);
+    // reference is measured once per (backend, layers, slots) — it has
+    // no thread pool; the tiled batched path is swept over worker
+    // threads {1, 2, 4, max-core} (deduped), each shard streaming its
+    // own column range of the packed planes. The layers {1, 2} axis
+    // measures the recurrent-stack path: a 2-layer step streams twice
+    // the plane bytes (plus the dense inter-layer x-GEMM), still once
+    // per step for all slots.
+    println!("\n== layer x slot x thread sweep: per-slot GEMV vs SIMD-tiled \
+              batched GEMM (synthetic ternary LSTM, h=768) ==");
+    let layer_counts = [1usize, 2];
+    let sweep_models: Vec<ModelWeights> = layer_counts
+        .iter()
+        .map(|&layers| ModelWeights::synthetic_arch(
+            50, 768, CellArch::Lstm, layers, "ter", 0xBE5))
+        .collect();
     let mut thread_counts = vec![1usize, 2, 4, rbtw::engine::ThreadPool::available()];
     thread_counts.sort_unstable();
     thread_counts.dedup();
-    let mut ts = Table::new(&["backend", "slots", "threads", "per-slot tok/s",
-                              "batched tok/s", "vs per-slot", "vs 1-thread"]);
+    let mut ts = Table::new(&["backend", "layers", "slots", "threads",
+                              "per-slot tok/s", "batched tok/s",
+                              "vs per-slot", "vs 1-thread"]);
     let mut sweep = vec![];
     for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
-        for slots in [1usize, 4, 16, 64] {
-            let reqs = common::scaled(4 * slots).max(slots);
-            let load = LoadSpec { n_requests: reqs, prompt_len: 4, gen_len: 12,
-                                  temperature: 0.7, seed: 31 };
-            let run_spec = |spec: &BackendSpec| -> Option<f64> {
-                let backend = match engine::from_weights(&sweep_model, spec) {
-                    Ok(b) => b,
-                    Err(e) => {
-                        eprintln!("  [{} x{slots}] skipped: {e:#}",
-                                  kind.label());
-                        return None;
+        for (li, &layers) in layer_counts.iter().enumerate() {
+            let sweep_model = &sweep_models[li];
+            for slots in [1usize, 4, 16, 64] {
+                let reqs = common::scaled(4 * slots).max(slots);
+                let load = LoadSpec { n_requests: reqs, prompt_len: 4,
+                                      gen_len: 12, temperature: 0.7,
+                                      seed: 31 };
+                let run_spec = |spec: &BackendSpec| -> Option<f64> {
+                    let backend = match engine::from_weights(sweep_model,
+                                                             spec) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            eprintln!("  [{} L{layers} x{slots}] skipped: \
+                                       {e:#}", kind.label());
+                            return None;
+                        }
+                    };
+                    match run_load(backend, &load) {
+                        Ok(report) => Some(report.tokens_per_sec()),
+                        Err(e) => {
+                            eprintln!("  [{} L{layers} x{slots}] failed: \
+                                       {e:#}", kind.label());
+                            None
+                        }
                     }
                 };
-                match run_load(backend, &load) {
-                    Ok(report) => Some(report.tokens_per_sec()),
-                    Err(e) => {
-                        eprintln!("  [{} x{slots}] failed: {e:#}",
-                                  kind.label());
-                        None
+                let base = BackendSpec::with(kind, slots, 3)
+                    .with_arch(CellArch::Lstm, layers);
+                let per_slot_spec = base.per_slot().with_threads(1);
+                let Some(per_slot_tps) = run_spec(&per_slot_spec) else {
+                    continue;
+                };
+                // None until the threads=1 leg has actually been
+                // measured — a failed 1-thread run must yield "-", not
+                // a garbage ratio
+                let mut t1_tps: Option<f64> = None;
+                for &threads in &thread_counts {
+                    let spec = base.with_threads(threads);
+                    let Some(tps) = run_spec(&spec) else { continue };
+                    if threads == 1 {
+                        t1_tps = Some(tps);
                     }
+                    let vs_per_slot = tps / per_slot_tps.max(1e-9);
+                    let vs_t1 = t1_tps.map(|t1| tps / t1.max(1e-9));
+                    ts.row(&[
+                        kind.label().into(),
+                        layers.to_string(),
+                        slots.to_string(),
+                        threads.to_string(),
+                        format!("{per_slot_tps:.0}"),
+                        format!("{tps:.0}"),
+                        format!("{vs_per_slot:.2}x"),
+                        vs_t1.map(|v| format!("{v:.2}x"))
+                            .unwrap_or_else(|| "-".into()),
+                    ]);
+                    let mut fields = vec![
+                        ("backend", Json::Str(kind.label().to_string())),
+                        ("layers", Json::Num(layers as f64)),
+                        ("slots", Json::Num(slots as f64)),
+                        ("threads", Json::Num(threads as f64)),
+                        ("requests", Json::Num(reqs as f64)),
+                        ("per_slot_tokens_per_sec", Json::Num(per_slot_tps)),
+                        ("batched_tokens_per_sec", Json::Num(tps)),
+                        ("batched_speedup", Json::Num(vs_per_slot)),
+                    ];
+                    if let Some(v) = vs_t1 {
+                        fields.push(("speedup_vs_one_thread", Json::Num(v)));
+                    }
+                    sweep.push(obj(fields));
                 }
-            };
-            let per_slot_spec =
-                BackendSpec::with(kind, slots, 3).per_slot().with_threads(1);
-            let Some(per_slot_tps) = run_spec(&per_slot_spec) else { continue };
-            // None until the threads=1 leg has actually been measured —
-            // a failed 1-thread run must yield "-", not a garbage ratio
-            let mut t1_tps: Option<f64> = None;
-            for &threads in &thread_counts {
-                let spec = BackendSpec::with(kind, slots, 3)
-                    .with_threads(threads);
-                let Some(tps) = run_spec(&spec) else { continue };
-                if threads == 1 {
-                    t1_tps = Some(tps);
-                }
-                let vs_per_slot = tps / per_slot_tps.max(1e-9);
-                let vs_t1 = t1_tps.map(|t1| tps / t1.max(1e-9));
-                ts.row(&[
-                    kind.label().into(),
-                    slots.to_string(),
-                    threads.to_string(),
-                    format!("{per_slot_tps:.0}"),
-                    format!("{tps:.0}"),
-                    format!("{vs_per_slot:.2}x"),
-                    vs_t1.map(|v| format!("{v:.2}x"))
-                        .unwrap_or_else(|| "-".into()),
-                ]);
-                let mut fields = vec![
-                    ("backend", Json::Str(kind.label().to_string())),
-                    ("slots", Json::Num(slots as f64)),
-                    ("threads", Json::Num(threads as f64)),
-                    ("requests", Json::Num(reqs as f64)),
-                    ("per_slot_tokens_per_sec", Json::Num(per_slot_tps)),
-                    ("batched_tokens_per_sec", Json::Num(tps)),
-                    ("batched_speedup", Json::Num(vs_per_slot)),
-                ];
-                if let Some(v) = vs_t1 {
-                    fields.push(("speedup_vs_one_thread", Json::Num(v)));
-                }
-                sweep.push(obj(fields));
             }
         }
     }
     ts.print();
     println!("(one weight stream per engine step, sharded by output column: \
               the batched column's advantage grows with slots at constant \
-              weight traffic — §6's bandwidth argument — and the thread \
-              column scales it across cores at bit-identical logits)");
+              weight traffic — §6's bandwidth argument — the thread column \
+              scales it across cores at bit-identical logits, and the \
+              layers column stacks it depth-wise)");
 
     let report = obj(vec![
         ("bench", Json::Str("serve_backends".into())),
         ("model", Json::Str(model_name)),
         ("artifact_mode", Json::Bool(have)),
         ("rows", Json::Arr(rows)),
-        ("sweep_model", Json::Str(sweep_model.name.clone())),
+        ("sweep_model", Json::Str(sweep_models[0].name.clone())),
+        ("sweep_layer_counts",
+         Json::Arr(layer_counts.iter().map(|&l| Json::Num(l as f64))
+             .collect())),
         ("available_threads",
          Json::Num(rbtw::engine::ThreadPool::available() as f64)),
         ("sweep", Json::Arr(sweep)),

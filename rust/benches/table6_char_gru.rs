@@ -1,9 +1,17 @@
 //! Table 6: char-level BPC with (BN-)GRUs on the three corpora —
-//! the paper's architecture-generality check.
+//! the paper's architecture-generality check — plus the GRU *serving*
+//! half: the packed backends now stack GRU cells natively
+//! (`PackedGruCell` behind the `RecurrentCell` trait), so this bench
+//! also drives a synthetic BN-GRU through both packed engine layouts at
+//! layers {1, 2} and reports tokens/sec against the resident packed
+//! bytes. The deeper {lstm, gru} × layers × slots × threads sweep lives
+//! in `serve_backends` (→ `BENCH_serve_backends.json`).
 
 mod common;
 
-use rbtw::coordinator::LrSchedule;
+use rbtw::coordinator::{run_load, LoadSpec, LrSchedule};
+use rbtw::engine::{self, BackendKind, BackendSpec, CellArch, InferBackend,
+                   ModelWeights};
 use rbtw::quant::{paper_kbytes, rnn_weight_params, weight_bytes, Cell};
 use rbtw::runtime::Engine;
 use rbtw::util::table::Table;
@@ -37,5 +45,57 @@ fn main() -> anyhow::Result<()> {
         }
         t.print();
     }
+
+    // --- packed GRU serving: the deployment half of Table 6 ----------
+    // Synthetic BN-GRU (char-PTB shape: vocab 50) through both packed
+    // backend layouts, 1- and 2-layer stacks, under the shared
+    // continuous-batching load harness. The ternary GRU holds 2 bits
+    // per recurrent weight resident — the same §6 saving the LSTM
+    // tables demonstrate, now on the 3-gate cell.
+    println!("\n== packed GRU serving (synthetic BN-GRU, vocab 50, h=256) ==");
+    let mut st = Table::new(&["backend", "layers", "req", "tok/s", "p50 ms",
+                              "p99 ms", "weights B"]);
+    for layers in [1usize, 2] {
+        let weights = ModelWeights::synthetic_arch(
+            50, 256, CellArch::Gru, layers, "ter", 0x6B0 + layers as u64);
+        for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+            let spec = BackendSpec::with(kind, 16, 3)
+                .with_arch(CellArch::Gru, layers);
+            let backend = match engine::from_weights(&weights, &spec) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("  [{} L{layers}] skipped: {e:#}",
+                              kind.label());
+                    continue;
+                }
+            };
+            let resident = backend.weight_bytes();
+            let load = LoadSpec { n_requests: common::scaled(48),
+                                  prompt_len: 8, gen_len: 16,
+                                  temperature: 0.7, seed: 19 };
+            let report = match run_load(backend, &load) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("  [{} L{layers}] failed mid-serve: {e:#}",
+                              kind.label());
+                    continue;
+                }
+            };
+            st.row(&[
+                kind.label().into(),
+                layers.to_string(),
+                report.responses.len().to_string(),
+                format!("{:.0}", report.tokens_per_sec()),
+                format!("{:.2}", report.total.p50_ms),
+                format!("{:.2}", report.total.p99_ms),
+                resident.to_string(),
+            ]);
+        }
+    }
+    st.print();
+    println!("(3-gate GRU stacks serve through the same RecurrentCell \
+              trait + batched plane-streaming GEMM as the LSTM path; \
+              the slot/thread/layer sweep with JSON output runs in the \
+              serve_backends bench)");
     Ok(())
 }

@@ -97,8 +97,8 @@ impl RoutePolicy {
             "least-loaded" | "least_loaded" | "ll" => RoutePolicy::LeastLoaded,
             "round-robin" | "round_robin" | "rr" => RoutePolicy::RoundRobin,
             other => anyhow::bail!(
-                "unknown routing policy '{other}' \
-                 (expected least-loaded|round-robin)"),
+                "unknown routing policy '{other}' (accepted: least-loaded | \
+                 least_loaded | ll, round-robin | round_robin | rr)"),
         })
     }
 
@@ -550,6 +550,16 @@ mod tests {
                    RoutePolicy::LeastLoaded);
         assert_eq!(RoutePolicy::default(), RoutePolicy::LeastLoaded);
         assert!(RoutePolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn policy_parse_error_lists_every_accepted_spelling() {
+        let err = format!("{:#}", RoutePolicy::parse("random").unwrap_err());
+        for spelling in ["least-loaded", "least_loaded", "ll",
+                         "round-robin", "round_robin", "rr"] {
+            assert!(err.contains(spelling),
+                    "parse error must list '{spelling}': {err}");
+        }
     }
 
     #[test]

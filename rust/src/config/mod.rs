@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::RoutePolicy;
 use crate::coordinator::{LrSchedule, TrainSpec};
-use crate::engine::{BackendKind, BackendSpec};
+use crate::engine::{BackendKind, BackendSpec, CellArch};
 
 /// One parsed scalar value.
 #[derive(Clone, Debug, PartialEq)]
@@ -157,6 +157,12 @@ pub struct ServeSpec {
     pub shards: usize,
     /// How the cluster router assigns requests to shards.
     pub policy: RoutePolicy,
+    /// Recurrent cell architecture (`"lstm"` | `"gru"`) for
+    /// model-synthesis targets (e.g. `serve synthetic`); real artifacts
+    /// carry their own shape.
+    pub arch: CellArch,
+    /// Stacked recurrent layers for model-synthesis targets.
+    pub layers: usize,
 }
 
 impl Default for ServeSpec {
@@ -170,6 +176,8 @@ impl Default for ServeSpec {
             threads: 0,
             shards: 1,
             policy: RoutePolicy::LeastLoaded,
+            arch: CellArch::Lstm,
+            layers: 1,
         }
     }
 }
@@ -189,6 +197,11 @@ impl ServeSpec {
     pub const SHARDS_RANGE: std::ops::RangeInclusive<usize> =
         1..=BackendSpec::MAX_SHARDS;
 
+    /// Valid stacked-layer range; shared by the `[serve]` config parser
+    /// and the `--layers` CLI flag.
+    pub const LAYERS_RANGE: std::ops::RangeInclusive<usize> =
+        1..=BackendSpec::MAX_LAYERS;
+
     /// The engine-layer spec for [`crate::engine::open`].
     pub fn backend_spec(&self) -> BackendSpec {
         BackendSpec {
@@ -198,6 +211,8 @@ impl ServeSpec {
             batch_gemm: self.batch_gemm,
             threads: self.threads,
             shards: self.shards,
+            arch: self.arch,
+            layers: self.layers,
         }
     }
 }
@@ -247,6 +262,14 @@ impl Config {
             }
             if let Some(v) = s.get("policy") {
                 spec.policy = RoutePolicy::parse(v.as_str().context("policy")?)?;
+            }
+            if let Some(v) = s.get("arch") {
+                spec.arch = CellArch::parse(v.as_str().context("arch")?)?;
+            }
+            if let Some(v) = s.get("layers") {
+                spec.layers = bounded(v, "layers",
+                                      *ServeSpec::LAYERS_RANGE.start() as i64,
+                                      *ServeSpec::LAYERS_RANGE.end() as i64)?;
             }
         }
         Ok(spec)
@@ -375,7 +398,7 @@ mod tests {
         let cfg = Config::parse(
             "[serve]\nbackend = \"planes\"\nslots = 8\nqueue_cap = 32\n\
              batch_gemm = false\nthreads = 3\nshards = 4\n\
-             policy = \"round-robin\"\n",
+             policy = \"round-robin\"\narch = \"gru\"\nlayers = 2\n",
         )
         .unwrap();
         let spec = cfg.serve_spec(ServeSpec::default()).unwrap();
@@ -387,12 +410,32 @@ mod tests {
         assert_eq!(spec.threads, 3);
         assert_eq!(spec.shards, 4);
         assert_eq!(spec.policy, RoutePolicy::RoundRobin);
+        assert_eq!(spec.arch, CellArch::Gru);
+        assert_eq!(spec.layers, 2);
         let bs = spec.backend_spec();
         assert_eq!(bs.kind, BackendKind::PackedPlanes);
         assert_eq!(bs.slots, 8);
         assert!(!bs.batch_gemm);
         assert_eq!(bs.threads, 3);
         assert_eq!(bs.shards, 4);
+        assert_eq!(bs.arch, CellArch::Gru);
+        assert_eq!(bs.layers, 2);
+        // arch/layers default to the historical 1-layer LSTM and reject
+        // nonsense values
+        assert_eq!(ServeSpec::default().arch, CellArch::Lstm);
+        assert_eq!(ServeSpec::default().layers, 1);
+        assert!(Config::parse("[serve]\narch = \"rnn\"\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nlayers = 0\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nlayers = 1000\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
         // cluster defaults: one shard (the plain server), least-loaded
         assert_eq!(ServeSpec::default().shards, 1);
         assert_eq!(ServeSpec::default().policy, RoutePolicy::LeastLoaded);

@@ -12,17 +12,28 @@
 //!   PJRT `Session` (`infer_*` entrypoints). State crosses the host ↔
 //!   device boundary as literals each step.
 //! * [`PackedCpu`](packed::PackedBackend) — the rust-native
-//!   [`PackedLstmCell`](crate::quant::PackedLstmCell): LUT GEMV for the
-//!   recurrent matmul, single packed-row gather (`add_row`) for one-hot
+//!   [`PackedStack`](crate::quant::PackedStack): LUT GEMV for the
+//!   recurrent matmuls, single packed-row gather (`add_row`) for one-hot
 //!   token inputs. 1–2 bits/weight resident.
-//! * [`PackedPlanes`](packed::PackedBackend) — same cell over
+//! * [`PackedPlanes`](packed::PackedBackend) — same stack over
 //!   precomputed pos/neg bit planes (no byte-ops in the GEMV inner
 //!   loop), the layout the paper's accelerator streams from DRAM.
 //!
-//! Each backend owns its decode-slot state (h, c) in its native layout;
-//! the server only passes tokens in and reads logits out. The packed
-//! backends therefore never rebuild per-step literals — state stays in
-//! two flat `f32` buffers.
+//! ## Recurrent stacks: any cell, any depth
+//!
+//! The packed backends serve a [`PackedStack`](crate::quant::PackedStack)
+//! of [`RecurrentCell`](crate::quant::RecurrentCell) layers — LSTM or
+//! GRU ([`CellArch`]), 1..N deep. [`ModelWeights`] derives the arch and
+//! layer count from its own shapes and `build_stack` packs every layer;
+//! nothing here is hardwired to one cell or one layer. Stack
+//! construction: layer 0 consumes tokens through the one-hot gather,
+//! each layer `l ≥ 1` consumes the previous layer's h block through the
+//! same batched GEMM kernels, the LM head reads the last layer's h.
+//!
+//! Each backend owns its decode-slot state in the cells' native layout
+//! (one flat `f32` buffer per layer; `[h | c]` rows for LSTM, `[h]` for
+//! GRU); the server only passes tokens in and reads logits out. The
+//! packed backends therefore never rebuild per-step literals.
 //!
 //! ## Batched plane streaming
 //!
@@ -95,6 +106,8 @@ pub use pool::ThreadPool;
 pub use shared::SharedModel;
 pub use weights::ModelWeights;
 
+pub use crate::quant::{CellArch, PackedStack, RecurrentCell};
+
 /// Which inference engine serves a model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
@@ -114,7 +127,8 @@ impl BackendKind {
             "packed" | "cpu" | "packed-cpu" => BackendKind::PackedCpu,
             "planes" | "packed-planes" => BackendKind::PackedPlanes,
             other => bail!(
-                "unknown backend '{other}' (expected pjrt|packed|planes)"
+                "unknown backend '{other}' (accepted: pjrt-dense | pjrt | \
+                 dense, packed-cpu | packed | cpu, packed-planes | planes)"
             ),
         })
     }
@@ -237,12 +251,22 @@ pub struct BackendSpec {
     /// value (greedy loads): sharding moves requests between engines,
     /// never changes a logit.
     pub shards: usize,
+    /// Recurrent cell architecture of the model this spec expects to
+    /// serve. Real weights ([`ModelWeights`]) are authoritative about
+    /// their own shape — backends derive arch/depth from them — so this
+    /// knob is consumed by the sites that *synthesize* a model (the
+    /// `serve` CLI's `synthetic` target, `serve_lm`, benches).
+    pub arch: CellArch,
+    /// Stacked recurrent layers for synthesized models (same caveat as
+    /// [`BackendSpec::arch`]).
+    pub layers: usize,
 }
 
 impl Default for BackendSpec {
     fn default() -> Self {
         Self { kind: BackendKind::PackedCpu, slots: 16, sample_seed: 0x5EED,
-               batch_gemm: true, threads: 0, shards: 1 }
+               batch_gemm: true, threads: 0, shards: 1,
+               arch: CellArch::Lstm, layers: 1 }
     }
 }
 
@@ -254,6 +278,10 @@ impl BackendSpec {
     /// Hard cap on cluster shard counts (each shard owns an engine
     /// thread + slot state; more than this is a config error).
     pub const MAX_SHARDS: usize = 256;
+
+    /// Hard cap on stacked layers (a synthesized model deeper than this
+    /// is a config error, not a model).
+    pub const MAX_LAYERS: usize = 64;
 
     /// Shorthand for the common (kind, slots, seed) spec with the
     /// default batched-GEMM path and auto thread count.
@@ -278,6 +306,13 @@ impl BackendSpec {
     /// one shard).
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shards = shards;
+        self
+    }
+
+    /// Set the cell architecture and depth for model-synthesis sites.
+    pub fn with_arch(mut self, arch: CellArch, layers: usize) -> Self {
+        self.arch = arch;
+        self.layers = layers;
         self
     }
 
@@ -374,6 +409,16 @@ mod tests {
     }
 
     #[test]
+    fn kind_parse_error_lists_every_accepted_spelling() {
+        let err = format!("{:#}", BackendKind::parse("tpu").unwrap_err());
+        for spelling in ["pjrt-dense", "pjrt", "dense", "packed-cpu",
+                         "packed", "cpu", "packed-planes", "planes"] {
+            assert!(err.contains(spelling),
+                    "parse error must list '{spelling}': {err}");
+        }
+    }
+
+    #[test]
     fn from_weights_serves_synthetic_model() {
         let w = ModelWeights::synthetic(20, 16, "ter", 7);
         let mut b = from_weights(
@@ -418,6 +463,34 @@ mod tests {
         // reads the knob
         assert_eq!(BackendSpec::default().shards, 1);
         assert_eq!(spec.with_shards(4).shards, 4);
+        // model-synthesis knobs default to the historical shape
+        assert_eq!(BackendSpec::default().arch, CellArch::Lstm);
+        assert_eq!(BackendSpec::default().layers, 1);
+        let deep = spec.with_arch(CellArch::Gru, 2);
+        assert_eq!(deep.arch, CellArch::Gru);
+        assert_eq!(deep.layers, 2);
+    }
+
+    #[test]
+    fn from_weights_serves_deep_and_gru_models() {
+        for (arch, layers) in [(CellArch::Lstm, 2), (CellArch::Gru, 1),
+                               (CellArch::Gru, 3)] {
+            let w = ModelWeights::synthetic_arch(20, 12, arch, layers,
+                                                 "ter", 7);
+            for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+                let mut b = from_weights(
+                    &w, &BackendSpec::with(kind, 2, 11)).unwrap();
+                assert_eq!(b.vocab(), 20);
+                assert_eq!(b.hidden(), 12);
+                b.reset_slot(0).unwrap();
+                let mut logits = vec![0.0f32; 2 * 20];
+                b.step_batch(&[Some(3), None], &mut logits).unwrap();
+                assert!(logits[..20].iter().all(|x| x.is_finite()));
+                assert!(logits[..20].iter().any(|&x| x != 0.0),
+                        "{} x{layers} {} produced all-zero logits",
+                        arch.label(), kind.label());
+            }
+        }
     }
 
     #[test]

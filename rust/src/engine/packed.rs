@@ -4,38 +4,41 @@
 //! and [`BackendKind::PackedPlanes`] (precomputed pos/neg bit planes):
 //! the layouts differ, the cell math is bit-identical (see
 //! `quant::planes`), so the backends are distinguished only by which
-//! [`Packed`](crate::quant::Packed) variant the cell carries.
+//! [`Packed`](crate::quant::Packed) variant the cells carry.
 //!
-//! Slot state lives in two flat `(slots, hidden)` f32 buffers owned by
-//! the backend — no per-step literal marshalling, no XLA.
+//! The backend drives a [`PackedStack`] — any [`CellArch`] (LSTM/GRU) at
+//! any depth. Slot state lives in one flat `(slots, state_width)` f32
+//! buffer **per layer**, owned by the backend — no per-step literal
+//! marshalling, no XLA.
 //!
 //! A step runs one of two bit-identical paths
 //! ([`BackendSpec::batch_gemm`]):
-//! * **batched** (default): active slots' (h, c) rows are gathered into
-//!   contiguous blocks and the step fans out over the backend's
-//!   persistent [`ThreadPool`] in three sharded stages:
-//!   1. the recurrent gate GEMM, **output columns** sharded — every
+//! * **batched** (default): active slots' state rows are gathered into
+//!   contiguous per-layer blocks and each layer fans out over the
+//!   backend's persistent [`ThreadPool`] in sharded stages:
+//!   1. the x-path — layer 0 is a batched one-hot gather (a copy, not a
+//!      matmul); every layer `l ≥ 1` runs the previous layer's h block
+//!      through its packed `wx` as a column-sharded GEMM;
+//!   2. the recurrent gate GEMM, **output columns** sharded — every
 //!      worker streams only its column range of the packed planes
 //!      through the SIMD-tiled kernels (`quant::gemm`), so each plane
 //!      byte is read once per worker shard per step, not once per slot;
-//!   2. the folded-BN gate tail, **active rows** sharded (each row's
+//!   3. the folded-BN gate tail, **active rows** sharded (each row's
 //!      transcendentals are independent);
-//!   3. the dense LM head, **vocab columns** sharded, written straight
-//!      into the active slots' logit rows.
-//!   The token x-path stays a batched one-hot gather (it is a copy, not
-//!   a matmul). Slots whose token is `None` take part in **nothing**:
-//!   no gather, no GEMM lane, no scatter, and their logit rows are
-//!   never written or zeroed.
-//! * **per-slot**: one `add_row` gather + one packed GEMV per active
-//!   slot (the original single-threaded reference path; weight traffic
-//!   scales with slots).
+//!   and finally the dense LM head over the last layer's h, **vocab
+//!   columns** sharded, written straight into the active slots' logit
+//!   rows. Slots whose token is `None` take part in **nothing**: no
+//!   gather, no GEMM lane, no scatter, and their logit rows are never
+//!   written or zeroed.
+//! * **per-slot**: one gather/GEMV chain per active slot through the
+//!   stack's per-slot reference path (weight traffic scales with slots).
 //!
 //! Shards own disjoint output elements and each element's f32 op
 //! sequence is independent of the shard split, so the two paths — and
 //! every thread count on the batched path — produce bit-identical
-//! logits (`rust/tests/quant_properties.rs`). The resident weight
-//! footprint is 1–2 bits per recurrent weight — the 12× saving of §6 —
-//! plus the (small) dense head.
+//! logits for every arch × depth (`rust/tests/quant_properties.rs`).
+//! The resident weight footprint is 1–2 bits per recurrent weight — the
+//! 12× saving of §6 — plus the (small) dense head.
 
 use std::sync::Arc;
 
@@ -46,12 +49,40 @@ use super::shared::SharedModel;
 use super::weights::ModelWeights;
 use super::{BackendKind, BackendSpec, InferBackend};
 use crate::quant::gemm::gemm_f32_bias_cols;
-use crate::quant::{gemv_f32, GemmScratch, PackedLstmCell, SharedOut};
+use crate::quant::{gemv_f32, GemmScratch, Packed, PackedStack,
+                   RecurrentCell, SharedOut};
 
-/// Packed-cell backend (LUT or bit-plane layout; see module docs).
+/// Column-shard one packed GEMM (`out = x·w`) across the pool: each
+/// shard streams only its own columns' packed plane bytes through the
+/// SIMD-tiled kernels. Shards are kept at >= 64 columns each — every
+/// shard re-gathers the activation tile and rebuilds the 256-entry
+/// subset-sum tables, so below that the duplicated table builds
+/// outweigh the extra parallelism. One definition for the x-path and
+/// recurrent dispatches, so the sharding heuristic and safety contract
+/// cannot drift between them.
+fn pooled_gemm_cols(pool: &ThreadPool, scratches: &mut [GemmScratch],
+                    w: &Packed, x: &[f32], batch: usize, out_buf: &mut [f32]) {
+    let cols = w.cols();
+    let shards = pool.threads().min(cols / 64).max(1);
+    let out = SharedOut::new(out_buf);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(shards);
+    for (si, scratch) in scratches[..shards].iter_mut().enumerate() {
+        let (c0, c1) = shard_range(cols, shards, si);
+        jobs.push(Box::new(move || {
+            // SAFETY: shards cover disjoint column ranges of `out_buf`,
+            // which is untouched until `run` returns (it blocks until
+            // every shard completed).
+            unsafe { w.gemm_cols(x, batch, c0, c1, out, scratch) };
+        }));
+    }
+    pool.run(jobs);
+}
+
+/// Packed-stack backend (LUT or bit-plane layout; see module docs).
 pub struct PackedBackend {
     kind: BackendKind,
-    cell: PackedLstmCell,
+    stack: PackedStack,
     /// LM head, row-major (hidden, vocab) — kept dense f32 (the paper
     /// quantizes only the recurrent matrices). `Arc`-shared: backends
     /// built from one [`SharedModel`] alias a single head allocation.
@@ -62,22 +93,26 @@ pub struct PackedBackend {
     n_slots: usize,
     /// Batched-GEMM vs per-slot-GEMV stepping (bit-identical results).
     batch_gemm: bool,
-    /// Per-slot recurrent state, row-major (slots, hidden).
-    h: Vec<f32>,
-    c: Vec<f32>,
+    /// Per-layer slot state: `states[l]` is row-major
+    /// `(slots, layer l state_width)`.
+    states: Vec<Vec<f32>>,
     /// Persistent slot-group worker pool for the batched path.
     pool: ThreadPool,
     /// One GEMM scratch per pool thread (column shards never share).
     gemm_scratch: Vec<GemmScratch>,
-    // batched-step scratch: active slot ids, their tokens, the gathered
-    // contiguous (active, hidden) state blocks, and the (active, 4H)
+    // batched-step scratch: active slot ids, their tokens, per-layer
+    // gathered contiguous (active, state_width) blocks, the layer-input
+    // h block, the pre-step h block, and the (active, gate_width)
     // preactivation blocks. All grow-only.
     active: Vec<usize>,
     toks: Vec<usize>,
-    hb: Vec<f32>,
-    cb: Vec<f32>,
+    sb: Vec<Vec<f32>>,
+    xin: Vec<f32>,
+    hin: Vec<f32>,
     xw_b: Vec<f32>,
     hw_b: Vec<f32>,
+    /// per-slot path scratch: one layer-output h vector.
+    x_slot: Vec<f32>,
 }
 
 impl PackedBackend {
@@ -95,9 +130,9 @@ impl PackedBackend {
     }
 
     /// Build one engine shard over an already-prepared [`SharedModel`]:
-    /// zero-copy on the weights (the cell clone aliases the shared
-    /// `Arc`-backed planes; only per-shard slot state and scratch are
-    /// allocated). This is the cluster fan-out path.
+    /// zero-copy on the weights (the stack clone aliases the shared
+    /// `Arc`-backed planes of every layer; only per-shard slot state and
+    /// scratch are allocated). This is the cluster fan-out path.
     pub fn from_shared(shared: &SharedModel, spec: &BackendSpec)
         -> Result<Self> {
         anyhow::ensure!(spec.kind == shared.kind(),
@@ -118,35 +153,40 @@ impl PackedBackend {
         let pool = ThreadPool::new(threads)
             .with_context(|| format!("spawning the {threads}-thread engine \
                                       worker pool"))?;
-        let cell = shared.share_cell();
+        let stack = shared.share_stack();
         let (head_w, head_b) = shared.share_head();
         let (vocab, hidden) = (shared.vocab(), shared.hidden());
+        let states: Vec<Vec<f32>> = (0..stack.layers())
+            .map(|l| vec![0.0f32; spec.slots * stack.layer(l).state_width()])
+            .collect();
+        let sb: Vec<Vec<f32>> = (0..stack.layers()).map(|_| vec![]).collect();
         Ok(Self {
             kind: spec.kind,
-            cell,
+            stack,
             head_w,
             head_b,
             vocab,
             hidden,
             n_slots: spec.slots,
             batch_gemm: spec.batch_gemm,
-            h: vec![0.0; spec.slots * hidden],
-            c: vec![0.0; spec.slots * hidden],
+            states,
             pool,
             gemm_scratch: (0..threads).map(|_| GemmScratch::default())
                 .collect(),
             active: vec![],
             toks: vec![],
-            hb: vec![],
-            cb: vec![],
+            sb,
+            xin: vec![],
+            hin: vec![],
             xw_b: vec![],
             hw_b: vec![],
+            x_slot: vec![],
         })
     }
 
-    /// The deployment cell (packed matrices + folded BN).
-    pub fn cell(&self) -> &PackedLstmCell {
-        &self.cell
+    /// The deployment stack (packed matrices + folded BN per layer).
+    pub fn stack(&self) -> &PackedStack {
+        &self.stack
     }
 
     /// Whether steps run the batched-GEMM path.
@@ -159,35 +199,55 @@ impl PackedBackend {
         self.pool.threads()
     }
 
-    /// Read-only view of one slot's hidden state.
+    /// Read-only view of one slot's final-layer hidden state (the LM
+    /// head input).
     pub fn slot_h(&self, slot: usize) -> &[f32] {
-        &self.h[slot * self.hidden..(slot + 1) * self.hidden]
+        let last = self.stack.layers() - 1;
+        let sw = self.stack.layer(last).state_width();
+        &self.states[last][slot * sw..slot * sw + self.hidden]
     }
 
-    /// Dense f32 head over slot `i`'s (updated) hidden state.
+    /// Dense f32 head over slot `i`'s (updated) final-layer hidden
+    /// state.
     fn head_into(&self, i: usize, logits: &mut [f32]) {
         let row = &mut logits[i * self.vocab..(i + 1) * self.vocab];
-        let hs = &self.h[i * self.hidden..(i + 1) * self.hidden];
+        let last = self.stack.layers() - 1;
+        let sw = self.stack.layer(last).state_width();
+        let hs = &self.states[last][i * sw..i * sw + self.hidden];
         gemv_f32(&self.head_w, self.hidden, self.vocab, hs, row);
         for (l, b) in row.iter_mut().zip(self.head_b.iter()) {
             *l += b;
         }
     }
 
-    /// Reference path: one gather + one GEMV per active slot.
+    /// Reference path: one gather/GEMV chain per active slot through
+    /// every layer.
     fn step_per_slot(&mut self, tokens: &[Option<i32>], logits: &mut [f32]) {
+        let hid = self.hidden;
         for (i, tok) in tokens.iter().enumerate() {
             let Some(tok) = *tok else { continue };
-            let hs = &mut self.h[i * self.hidden..(i + 1) * self.hidden];
-            let cs = &mut self.c[i * self.hidden..(i + 1) * self.hidden];
-            self.cell.step_token(tok as usize, hs, cs);
+            let mut x = std::mem::take(&mut self.x_slot);
+            for l in 0..self.stack.layers() {
+                let cell = self.stack.layer_mut(l);
+                let sw = cell.state_width();
+                let st = &mut self.states[l][i * sw..(i + 1) * sw];
+                if l == 0 {
+                    cell.step_token_slot(tok as usize, st);
+                } else {
+                    cell.step_dense_slot(&x, st);
+                }
+                x.clear();
+                x.extend_from_slice(&st[..hid]);
+            }
+            self.x_slot = x;
             self.head_into(i, logits);
         }
     }
 
-    /// Batched path: gather active (h, c) rows, then three pool-sharded
-    /// stages (gate GEMM by columns, gate tail by rows, LM head by vocab
-    /// columns), then scatter back. Idle slots take part in nothing —
+    /// Batched path: gather active state rows per layer, then per layer
+    /// three pool-sharded stages (x-path GEMM for layers ≥ 1, recurrent
+    /// gate GEMM by columns, gate tail by rows), the LM head by vocab
+    /// columns, then scatter back. Idle slots take part in nothing —
     /// in particular their logit rows are never written.
     fn step_batched(&mut self, tokens: &[Option<i32>], logits: &mut [f32]) {
         self.active.clear();
@@ -203,87 +263,107 @@ impl PackedBackend {
             return;
         }
         let hid = self.hidden;
-        let n4 = 4 * hid;
+        let layers = self.stack.layers();
+        let gw_max = self.stack.max_gate_width();
         // grow-only scratch (steady state after the widest batch)
-        if self.hb.len() < nb * hid {
-            self.hb.resize(nb * hid, 0.0);
-            self.cb.resize(nb * hid, 0.0);
+        if self.xw_b.len() < nb * gw_max {
+            self.xw_b.resize(nb * gw_max, 0.0);
+            self.hw_b.resize(nb * gw_max, 0.0);
         }
-        if self.xw_b.len() < nb * n4 {
-            self.xw_b.resize(nb * n4, 0.0);
-            self.hw_b.resize(nb * n4, 0.0);
+        if self.xin.len() < nb * hid {
+            self.xin.resize(nb * hid, 0.0);
+            self.hin.resize(nb * hid, 0.0);
         }
-        for (j, &i) in self.active.iter().enumerate() {
-            self.hb[j * hid..(j + 1) * hid]
-                .copy_from_slice(&self.h[i * hid..(i + 1) * hid]);
-            self.cb[j * hid..(j + 1) * hid]
-                .copy_from_slice(&self.c[i * hid..(i + 1) * hid]);
-        }
-        // x-path: batched one-hot gather (one packed-row gather per
-        // stream; a copy, so not worth a dispatch)
-        self.cell.wx.gather_rows(&self.toks, &mut self.xw_b[..nb * n4]);
-        // stage 1 — recurrent gate GEMM, output columns sharded: each
-        // worker streams only its columns' packed planes (one plane
-        // pass per shard per step). Every shard re-gathers the tile and
-        // rebuilds the 256-entry subset-sum tables, so shards are kept
-        // at >= 64 columns each — below that the duplicated table
-        // builds outweigh the extra parallelism.
-        {
-            let shards = self.pool.threads().min(n4 / 64).max(1);
-            let out = SharedOut::new(&mut self.hw_b[..nb * n4]);
-            let wh = &self.cell.wh;
-            let hb = &self.hb[..nb * hid];
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(shards);
-            for (si, scratch) in
-                self.gemm_scratch[..shards].iter_mut().enumerate()
-            {
-                let (c0, c1) = shard_range(n4, shards, si);
-                jobs.push(Box::new(move || {
-                    // SAFETY: shards cover disjoint column ranges of
-                    // hw_b, which is untouched until `run` returns (it
-                    // blocks until every shard completed).
-                    unsafe { wh.gemm_cols(hb, nb, c0, c1, out, scratch) };
-                }));
+        // gather the active slots' state rows, per layer
+        for l in 0..layers {
+            let sw = self.stack.layer(l).state_width();
+            if self.sb[l].len() < nb * sw {
+                self.sb[l].resize(nb * sw, 0.0);
             }
-            self.pool.run(jobs);
-        }
-        // stage 2 — folded-BN gate tail, active rows sharded (disjoint
-        // row chunks, so plain split borrows suffice)
-        {
-            let shards = self.pool.threads().min(nb).max(1);
-            let rows_per = nb.div_ceil(shards);
-            let cell = &self.cell;
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(shards);
-            for (((xw_s, hw_s), h_s), c_s) in self.xw_b[..nb * n4]
-                .chunks_mut(rows_per * n4)
-                .zip(self.hw_b[..nb * n4].chunks(rows_per * n4))
-                .zip(self.hb[..nb * hid].chunks_mut(rows_per * hid))
-                .zip(self.cb[..nb * hid].chunks_mut(rows_per * hid))
-            {
-                jobs.push(Box::new(move || {
-                    cell.gate_tail_rows(xw_s, hw_s, h_s, c_s);
-                }));
+            for (j, &i) in self.active.iter().enumerate() {
+                self.sb[l][j * sw..(j + 1) * sw]
+                    .copy_from_slice(&self.states[l][i * sw..(i + 1) * sw]);
             }
-            self.pool.run(jobs);
         }
-        // scatter the updated (h, c) back to their slots
-        for (j, &i) in self.active.iter().enumerate() {
-            self.h[i * hid..(i + 1) * hid]
-                .copy_from_slice(&self.hb[j * hid..(j + 1) * hid]);
-            self.c[i * hid..(i + 1) * hid]
-                .copy_from_slice(&self.cb[j * hid..(j + 1) * hid]);
+        for l in 0..layers {
+            let cell = self.stack.layer(l);
+            let gw = cell.gate_width();
+            let sw = cell.state_width();
+            // x-path. Layer 0: batched one-hot gather (one packed-row
+            // gather per stream; a copy, so not worth a dispatch).
+            // Layers >= 1: previous layer's h block through wx as a
+            // column-sharded GEMM — the same plane-streaming kernels as
+            // the recurrent path.
+            if l == 0 {
+                cell.wx().gather_rows(&self.toks, &mut self.xw_b[..nb * gw]);
+            } else {
+                pooled_gemm_cols(&self.pool, &mut self.gemm_scratch,
+                                 cell.wx(), &self.xin[..nb * hid], nb,
+                                 &mut self.xw_b[..nb * gw]);
+            }
+            // recurrent gate GEMM, output columns sharded (one plane
+            // pass per shard per step — see `pooled_gemm_cols`)
+            {
+                // the layer's pre-step h rows, contiguous: state rows
+                // lead with h for every cell arch, so when the state
+                // row IS the h row (GRU) the gathered block is already
+                // the GEMM input — no copy
+                let hin: &[f32] = if sw == hid {
+                    &self.sb[l][..nb * hid]
+                } else {
+                    for j in 0..nb {
+                        self.hin[j * hid..(j + 1) * hid].copy_from_slice(
+                            &self.sb[l][j * sw..j * sw + hid]);
+                    }
+                    &self.hin[..nb * hid]
+                };
+                pooled_gemm_cols(&self.pool, &mut self.gemm_scratch,
+                                 cell.wh(), hin, nb,
+                                 &mut self.hw_b[..nb * gw]);
+            }
+            // folded-BN gate tail, active rows sharded (disjoint row
+            // chunks, so plain split borrows suffice)
+            {
+                let shards = self.pool.threads().min(nb).max(1);
+                let rows_per = nb.div_ceil(shards);
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(shards);
+                for ((xw_s, hw_s), st_s) in self.xw_b[..nb * gw]
+                    .chunks_mut(rows_per * gw)
+                    .zip(self.hw_b[..nb * gw].chunks(rows_per * gw))
+                    .zip(self.sb[l][..nb * sw].chunks_mut(rows_per * sw))
+                {
+                    jobs.push(Box::new(move || {
+                        cell.gate_tail_rows(xw_s, hw_s, st_s);
+                    }));
+                }
+                self.pool.run(jobs);
+            }
+            // this layer's output h becomes the next layer's dense
+            // input (and, after the last layer, the LM head input)
+            for j in 0..nb {
+                self.xin[j * hid..(j + 1) * hid]
+                    .copy_from_slice(&self.sb[l][j * sw..j * sw + hid]);
+            }
         }
-        // stage 3 — dense LM head, vocab columns sharded, written
-        // straight into the ACTIVE slots' logit rows (idle rows are
-        // never zeroed, scattered over, or otherwise touched)
+        // scatter the updated state rows back to their slots
+        for l in 0..layers {
+            let sw = self.stack.layer(l).state_width();
+            for (j, &i) in self.active.iter().enumerate() {
+                self.states[l][i * sw..(i + 1) * sw]
+                    .copy_from_slice(&self.sb[l][j * sw..(j + 1) * sw]);
+            }
+        }
+        // dense LM head over the last layer's h block, vocab columns
+        // sharded, written straight into the ACTIVE slots' logit rows
+        // (idle rows are never zeroed, scattered over, or otherwise
+        // touched)
         {
             let shards = self.pool.threads().min(self.vocab).max(1);
             let out = SharedOut::new(logits);
             let head_w = &self.head_w[..];
             let head_b = &self.head_b[..];
-            let hb = &self.hb[..nb * hid];
+            let hb = &self.xin[..nb * hid];
             let active = &self.active[..];
             let vocab = self.vocab;
             let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
@@ -322,14 +402,17 @@ impl InferBackend for PackedBackend {
     }
 
     fn weight_bytes(&self) -> usize {
-        self.cell.weight_bytes() + (self.head_w.len() + self.head_b.len()) * 4
+        self.stack.weight_bytes()
+            + (self.head_w.len() + self.head_b.len()) * 4
     }
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
         anyhow::ensure!(slot < self.n_slots,
                         "slot {slot} out of range ({} slots)", self.n_slots);
-        self.h[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
-        self.c[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
+        for (l, state) in self.states.iter_mut().enumerate() {
+            let sw = self.stack.layer(l).state_width();
+            state[slot * sw..(slot + 1) * sw].fill(0.0);
+        }
         Ok(())
     }
 
@@ -358,6 +441,7 @@ impl InferBackend for PackedBackend {
 mod tests {
     use super::*;
     use crate::engine::weights::ModelWeights;
+    use crate::quant::CellArch;
 
     fn backend(planes: bool) -> PackedBackend {
         backend_with(planes, true, 0)
@@ -442,6 +526,48 @@ mod tests {
                     for (x, y) in la.iter().zip(&lb) {
                         assert_eq!(x.to_bits(), y.to_bits(),
                                    "planes={planes} threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deep_and_gru_stacks_agree_across_paths_bitwise() {
+        // the tentpole invariant at the backend level: for every arch ×
+        // depth, the pooled batched path equals the per-slot reference
+        // chain bit for bit, idle holes included
+        for (arch, layers) in [(CellArch::Lstm, 2), (CellArch::Lstm, 3),
+                               (CellArch::Gru, 1), (CellArch::Gru, 3)] {
+            for planes in [false, true] {
+                let w = ModelWeights::synthetic_arch(
+                    19, 12, arch, layers, "ter", 0x88);
+                let kind = if planes { BackendKind::PackedPlanes }
+                           else { BackendKind::PackedCpu };
+                let spec = BackendSpec::with(kind, 3, 7);
+                let mut a = PackedBackend::from_weights(
+                    &w, &spec.per_slot()).unwrap();
+                let mut b = PackedBackend::from_weights(
+                    &w, &spec.with_threads(3)).unwrap();
+                for s in 0..3 {
+                    a.reset_slot(s).unwrap();
+                    b.reset_slot(s).unwrap();
+                }
+                let schedule: &[[Option<i32>; 3]] = &[
+                    [Some(4), None, Some(9)],
+                    [Some(1), Some(2), Some(3)],
+                    [None, Some(8), None],
+                    [Some(0), Some(18), Some(12)],
+                ];
+                for toks in schedule {
+                    let mut la = vec![0.0f32; 3 * 19];
+                    let mut lb = vec![0.0f32; 3 * 19];
+                    a.step_batch(toks, &mut la).unwrap();
+                    b.step_batch(toks, &mut lb).unwrap();
+                    for (x, y) in la.iter().zip(&lb) {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "{} x{layers} planes={planes}",
+                                   arch.label());
                     }
                 }
             }

@@ -3,18 +3,20 @@
 //!
 //! [`SharedModel`] is the cluster-scale answer to the question "who owns
 //! the plane bytes?": it samples the binary/ternary deployment weights
-//! (Eq. 4–6) and folds BN exactly once, producing a template
-//! [`PackedLstmCell`] plus an `Arc`-backed dense LM head. Every backend
-//! built from it ([`PackedBackend::from_shared`]) clones the template —
-//! and because the packed plane words themselves live behind `Arc` (see
-//! [`crate::quant::pack`]), that clone is a refcount bump, not a byte
-//! copy. N shard engines therefore hold ONE resident copy of the packed
-//! weights: growing a serving cluster adds slot state and scratch, never
-//! plane bytes, so the paper's 12× memory saving survives horizontal
-//! scale-out instead of being multiplied back by replication.
+//! (Eq. 4–6) and folds BN exactly once — for **every layer** of the
+//! model — producing a template [`PackedStack`] plus an `Arc`-backed
+//! dense LM head. Every backend built from it
+//! ([`PackedBackend::from_shared`]) clones the template — and because
+//! the packed plane words themselves live behind `Arc` (see
+//! [`crate::quant::pack`]), that clone is a refcount bump per layer, not
+//! a byte copy. N shard engines therefore hold ONE resident copy of the
+//! packed weights regardless of cell arch or depth: growing a serving
+//! cluster adds slot state and scratch, never plane bytes, so the
+//! paper's 12× memory saving survives horizontal scale-out instead of
+//! being multiplied back by replication.
 //!
 //! The sharing is observable, not aspirational: [`SharedModel`] exposes
-//! the template cell so tests can assert pointer identity and
+//! the template stack so tests can assert pointer identity and
 //! `Arc::strong_count` across shards (`rust/tests/cluster_integration.rs`).
 
 use std::sync::Arc;
@@ -23,7 +25,7 @@ use anyhow::Result;
 
 use super::weights::ModelWeights;
 use super::BackendKind;
-use crate::quant::PackedLstmCell;
+use crate::quant::{CellArch, PackedStack, RecurrentCell};
 
 /// One model's packed serving weights, prepared once and cheaply
 /// shareable across any number of engine shards.
@@ -34,8 +36,9 @@ pub struct SharedModel {
     quantizer: String,
     vocab: usize,
     hidden: usize,
-    /// Template cell: packed matrices (Arc-backed planes) + folded BN.
-    cell: PackedLstmCell,
+    /// Template stack: packed matrices (Arc-backed planes) + folded BN
+    /// for every layer.
+    stack: PackedStack,
     /// Dense LM head, row-major (hidden, vocab), shared across shards.
     head_w: Arc<[f32]>,
     head_b: Arc<[f32]>,
@@ -47,7 +50,7 @@ impl SharedModel {
     /// planes; `PjrtDense` has no packed representation and errors).
     ///
     /// Uses the same sampling order and seed semantics as
-    /// [`ModelWeights::build_cell`], so a 1-shard cluster over a
+    /// [`ModelWeights::build_stack`], so a 1-shard cluster over a
     /// `SharedModel` serves bit-identically to a backend built directly
     /// via [`crate::engine::from_weights`] with the same spec.
     pub fn prepare(weights: &ModelWeights, kind: BackendKind, sample_seed: u64)
@@ -59,7 +62,7 @@ impl SharedModel {
                 "PjrtDense serves from a compiled executable, not shared \
                  packed planes; use a packed backend kind"),
         };
-        let (cell, head_w, head_b) = weights.build_cell(sample_seed, planes)?;
+        let (stack, head_w, head_b) = weights.build_stack(sample_seed, planes)?;
         Ok(Self {
             kind,
             sample_seed,
@@ -67,7 +70,7 @@ impl SharedModel {
             quantizer: weights.quantizer.clone(),
             vocab: weights.vocab,
             hidden: weights.hidden,
-            cell,
+            stack,
             head_w: head_w.into(),
             head_b: head_b.into(),
         })
@@ -97,15 +100,25 @@ impl SharedModel {
         self.hidden
     }
 
-    /// The template cell (for plane identity/refcount assertions).
-    pub fn cell(&self) -> &PackedLstmCell {
-        &self.cell
+    /// Recurrent cell architecture of the template stack.
+    pub fn arch(&self) -> CellArch {
+        self.stack.arch()
     }
 
-    /// A per-shard cell: aliases this model's plane allocations, owns
-    /// fresh scratch.
-    pub(crate) fn share_cell(&self) -> PackedLstmCell {
-        self.cell.clone()
+    /// Stacked recurrent layers.
+    pub fn layers(&self) -> usize {
+        self.stack.layers()
+    }
+
+    /// The template stack (for plane identity/refcount assertions).
+    pub fn stack(&self) -> &PackedStack {
+        &self.stack
+    }
+
+    /// A per-shard stack: aliases this model's plane allocations for
+    /// every layer, owns fresh scratch.
+    pub(crate) fn share_stack(&self) -> PackedStack {
+        self.stack.clone()
     }
 
     /// Shared handles to the dense LM head.
@@ -113,17 +126,17 @@ impl SharedModel {
         (self.head_w.clone(), self.head_b.clone())
     }
 
-    /// Resident serving bytes — packed planes + dense head, counted
-    /// ONCE no matter how many shards serve from this model.
+    /// Resident serving bytes — packed planes (all layers) + dense head,
+    /// counted ONCE no matter how many shards serve from this model.
     pub fn weight_bytes(&self) -> usize {
-        self.cell.weight_bytes()
+        self.stack.weight_bytes()
             + (self.head_w.len() + self.head_b.len()) * 4
     }
 
-    /// Live owners of the recurrent plane allocation: 1 (this template)
-    /// + one per shard cell currently alive.
+    /// Live owners of layer 0's recurrent plane allocation: 1 (this
+    /// template) + one per shard stack currently alive.
     pub fn plane_owners(&self) -> usize {
-        self.cell.wh.plane_owners()
+        self.stack.layer(0).wh().plane_owners()
     }
 }
 
@@ -140,21 +153,33 @@ mod tests {
 
     #[test]
     fn shards_alias_one_plane_allocation() {
-        let w = ModelWeights::synthetic(20, 12, "ter", 5);
-        for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
-            let shared = SharedModel::prepare(&w, kind, 9).unwrap();
-            assert_eq!(shared.plane_owners(), 1);
-            let spec = BackendSpec::with(kind, 2, 9);
-            let a = PackedBackend::from_shared(&shared, &spec).unwrap();
-            let b = PackedBackend::from_shared(&shared, &spec).unwrap();
-            assert_eq!(shared.plane_owners(), 3, "template + 2 shards");
-            assert_eq!(a.cell().wh.plane_ptr(), shared.cell().wh.plane_ptr());
-            assert_eq!(b.cell().wx.plane_ptr(), shared.cell().wx.plane_ptr());
-            // resident accounting is per model, not per shard
-            assert_eq!(shared.weight_bytes(), a.weight_bytes());
-            drop(a);
-            drop(b);
-            assert_eq!(shared.plane_owners(), 1);
+        // every arch × depth shares the same way: one resident plane
+        // set per model, refcounts track live shard stacks
+        for (arch, layers) in [(CellArch::Lstm, 1), (CellArch::Lstm, 2),
+                               (CellArch::Gru, 2)] {
+            let w = ModelWeights::synthetic_arch(20, 12, arch, layers,
+                                                 "ter", 5);
+            for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+                let shared = SharedModel::prepare(&w, kind, 9).unwrap();
+                assert_eq!(shared.plane_owners(), 1);
+                assert_eq!(shared.arch(), arch);
+                assert_eq!(shared.layers(), layers);
+                let spec = BackendSpec::with(kind, 2, 9);
+                let a = PackedBackend::from_shared(&shared, &spec).unwrap();
+                let b = PackedBackend::from_shared(&shared, &spec).unwrap();
+                assert_eq!(shared.plane_owners(), 3, "template + 2 shards");
+                for l in 0..layers {
+                    assert_eq!(a.stack().layer(l).wh().plane_ptr(),
+                               shared.stack().layer(l).wh().plane_ptr());
+                    assert_eq!(b.stack().layer(l).wx().plane_ptr(),
+                               shared.stack().layer(l).wx().plane_ptr());
+                }
+                // resident accounting is per model, not per shard
+                assert_eq!(shared.weight_bytes(), a.weight_bytes());
+                drop(a);
+                drop(b);
+                assert_eq!(shared.plane_owners(), 1);
+            }
         }
     }
 

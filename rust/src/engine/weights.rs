@@ -3,10 +3,17 @@
 //! [`ModelWeights`] is the deployment boundary: a plain map of named f32
 //! arrays (params + BN running statistics) that can come from an
 //! artifact's `init.bin` segments, a live training `Session`, a saved
-//! [`Checkpoint`], or a synthetic generator for benches/tests. Packed
-//! backends sample their 1–2-bit deployment weights from it once at open
-//! time (Eq. 4–6) and fold the BN statistics into per-gate scale/shift —
-//! no XLA values, no PJRT session.
+//! [`Checkpoint`], or a synthetic generator for benches/tests. It knows
+//! its own shape — [`CellArch`] (LSTM or GRU) and layer count are
+//! derived from the `l{N}/wh` shapes — and packed backends sample their
+//! 1–2-bit deployment weights from it once at open time (Eq. 4–6),
+//! folding the BN statistics into per-gate scale/shift per layer — no
+//! XLA values, no PJRT session.
+//!
+//! [`ModelWeights::build_stack`] is the packing entrypoint: it validates
+//! every layer's shapes up front ([`ModelWeights::validate`], one error
+//! naming every mismatched parameter), then samples/packs/BN-folds all
+//! layers bottom-up into a [`PackedStack`].
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -15,7 +22,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::checkpoint::Checkpoint;
 use crate::model::export::{glorot_alpha, sample_quantized, PackedMatrix};
-use crate::quant::{Packed, PackedLstmCell};
+use crate::quant::{CellArch, Packed, PackedGruCell, PackedLstmCell,
+                   PackedStack, RecurrentCell};
 use crate::runtime::{ArtifactMeta, Session};
 use crate::util::Rng;
 
@@ -33,6 +41,11 @@ pub struct ModelWeights {
     pub vocab: usize,
     /// Recurrent state width.
     pub hidden: usize,
+    /// Recurrent cell architecture (derived from the gate-matrix
+    /// shapes: `wh` cols / rows = 4 for LSTM, 3 for GRU).
+    pub arch: CellArch,
+    /// Stacked recurrent layers (`l0/..` through `l{layers-1}/..`).
+    pub layers: usize,
     /// Trainable parameters (shadow weights, biases, BN gains, head).
     pub params: ArrayMap,
     /// BN running statistics (rm_*/rv_*).
@@ -40,17 +53,30 @@ pub struct ModelWeights {
 }
 
 impl ModelWeights {
-    fn derive_dims(params: &ArrayMap) -> Result<(usize, usize)> {
-        let (wh_shape, _) = params
-            .get("l0/wh")
-            .context("weights lack l0/wh (not an RNN model?)")?;
+    fn derive_dims(params: &ArrayMap)
+        -> Result<(usize, usize, CellArch, usize)> {
+        let mut layers = 0;
+        while params.contains_key(&format!("l{layers}/wh")) {
+            layers += 1;
+        }
+        anyhow::ensure!(layers >= 1,
+                        "weights lack l0/wh (not an RNN model?)");
+        let (wh_shape, _) = params.get("l0/wh").context("weights lack l0/wh")?;
         anyhow::ensure!(wh_shape.len() == 2, "l0/wh is not a matrix");
         let hidden = wh_shape[0];
+        anyhow::ensure!(hidden > 0 && wh_shape[1] % hidden == 0,
+                        "l0/wh shape {wh_shape:?} is not (H, gates*H)");
+        let arch = match wh_shape[1] / hidden {
+            4 => CellArch::Lstm,
+            3 => CellArch::Gru,
+            g => bail!("l0/wh shape {wh_shape:?} implies {g} gates \
+                        (supported: 4 = lstm, 3 = gru)"),
+        };
         let vocab = params
             .get("head/b")
             .map(|(_, v)| v.len())
             .context("weights lack head/b (no output head)")?;
-        Ok((vocab, hidden))
+        Ok((vocab, hidden, arch, layers))
     }
 
     /// Load from an artifact bundle's host-side init values. Reads
@@ -79,12 +105,14 @@ impl ModelWeights {
                 .collect();
             out.insert(seg.name.clone(), (seg.shape.clone(), vals));
         }
-        let (vocab, hidden) = Self::derive_dims(&params)?;
+        let (vocab, hidden, arch, layers) = Self::derive_dims(&params)?;
         Ok(Self {
             name: artifact.to_string(),
             quantizer: meta.quantizer().to_string(),
             vocab,
             hidden,
+            arch,
+            layers,
             params,
             state,
         })
@@ -94,12 +122,14 @@ impl ModelWeights {
     pub fn from_session(sess: &Session) -> Result<Self> {
         let params = sess.params.export()?;
         let state = sess.state.export()?;
-        let (vocab, hidden) = Self::derive_dims(&params)?;
+        let (vocab, hidden, arch, layers) = Self::derive_dims(&params)?;
         Ok(Self {
             name: sess.meta.name.clone(),
             quantizer: sess.meta.quantizer().to_string(),
             vocab,
             hidden,
+            arch,
+            layers,
             params,
             state,
         })
@@ -118,13 +148,25 @@ impl ModelWeights {
         }
     }
 
-    /// A random single-layer BN-LSTM LM for benches/tests: shadow weights
-    /// uniform within the Glorot bound, BN gains 0.1 (Cooijmans init),
-    /// slightly-off-nominal running statistics so the fold is exercised.
+    /// A random single-layer BN-LSTM LM for benches/tests (the
+    /// historical default shape); see [`ModelWeights::synthetic_arch`]
+    /// for stacked and GRU models.
     pub fn synthetic(vocab: usize, hidden: usize, quantizer: &str, seed: u64)
         -> Self {
+        Self::synthetic_arch(vocab, hidden, CellArch::Lstm, 1, quantizer, seed)
+    }
+
+    /// A random `layers`-deep BN-`arch` LM for benches/tests: shadow
+    /// weights uniform within the Glorot bound, BN gains 0.1 (Cooijmans
+    /// init), slightly-off-nominal running statistics so the fold is
+    /// exercised. Layer 0 consumes one-hot tokens (`vocab` input rows);
+    /// layers ≥ 1 consume the previous layer's h (`hidden` rows). The
+    /// LSTM forget gate / GRU update gate starts at bias 1.
+    pub fn synthetic_arch(vocab: usize, hidden: usize, arch: CellArch,
+                          layers: usize, quantizer: &str, seed: u64) -> Self {
+        assert!(layers >= 1, "a model needs at least one layer");
         let mut rng = Rng::new(seed);
-        let n4 = 4 * hidden;
+        let gw = arch.gates() * hidden;
         let mat = |rows: usize, cols: usize, scale: f32, rng: &mut Rng| {
             (0..rows * cols)
                 .map(|_| scale * rng.range_f64(-1.0, 1.0) as f32)
@@ -132,33 +174,49 @@ impl ModelWeights {
         };
         let mut params = ArrayMap::new();
         let mut state = ArrayMap::new();
-        let ax = glorot_alpha(vocab, n4);
-        let ah = glorot_alpha(hidden, n4);
-        params.insert("l0/wx".into(), (vec![vocab, n4], mat(vocab, n4, ax, &mut rng)));
-        params.insert("l0/wh".into(), (vec![hidden, n4], mat(hidden, n4, ah, &mut rng)));
-        let mut bias = vec![0.0f32; n4];
-        bias[hidden..2 * hidden].fill(1.0); // forget-gate init
-        params.insert("l0/b".into(), (vec![n4], bias));
-        params.insert("l0/phi_x".into(), (vec![n4], vec![0.1; n4]));
-        params.insert("l0/phi_h".into(), (vec![n4], vec![0.1; n4]));
-        for nm in ["l0/rm_x", "l0/rm_h"] {
-            let v = (0..n4).map(|_| 0.05 * rng.normal_f32()).collect();
-            state.insert(nm.into(), (vec![n4], v));
-        }
-        for nm in ["l0/rv_x", "l0/rv_h"] {
-            let v = (0..n4).map(|_| 1.0 + 0.2 * rng.next_f32()).collect();
-            state.insert(nm.into(), (vec![n4], v));
+        for l in 0..layers {
+            let d_in = if l == 0 { vocab } else { hidden };
+            let ax = glorot_alpha(d_in, gw);
+            let ah = glorot_alpha(hidden, gw);
+            params.insert(format!("l{l}/wx"),
+                          (vec![d_in, gw], mat(d_in, gw, ax, &mut rng)));
+            params.insert(format!("l{l}/wh"),
+                          (vec![hidden, gw], mat(hidden, gw, ah, &mut rng)));
+            let mut bias = vec![0.0f32; gw];
+            // gate slot 1 is the LSTM forget gate ([i,f,g,o]) and the
+            // GRU update gate ([r,z,n]): both start at 1 so fresh
+            // streams carry state
+            bias[hidden..2 * hidden].fill(1.0);
+            params.insert(format!("l{l}/b"), (vec![gw], bias));
+            params.insert(format!("l{l}/phi_x"), (vec![gw], vec![0.1; gw]));
+            params.insert(format!("l{l}/phi_h"), (vec![gw], vec![0.1; gw]));
+            for nm in ["rm_x", "rm_h"] {
+                let v = (0..gw).map(|_| 0.05 * rng.normal_f32()).collect();
+                state.insert(format!("l{l}/{nm}"), (vec![gw], v));
+            }
+            for nm in ["rv_x", "rv_h"] {
+                let v = (0..gw).map(|_| 1.0 + 0.2 * rng.next_f32()).collect();
+                state.insert(format!("l{l}/{nm}"), (vec![gw], v));
+            }
         }
         let aw = glorot_alpha(hidden, vocab);
         params.insert("head/w".into(),
                       (vec![hidden, vocab], mat(hidden, vocab, aw, &mut rng)));
         params.insert("head/b".into(),
                       (vec![vocab], mat(vocab, 1, 0.05, &mut rng)));
+        let name = if arch == CellArch::Lstm && layers == 1 {
+            format!("synthetic_{quantizer}_v{vocab}_h{hidden}")
+        } else {
+            format!("synthetic_{quantizer}_{}x{layers}_v{vocab}_h{hidden}",
+                    arch.label())
+        };
         Self {
-            name: format!("synthetic_{quantizer}_v{vocab}_h{hidden}"),
+            name,
             quantizer: quantizer.to_string(),
             vocab,
             hidden,
+            arch,
+            layers,
             params,
             state,
         }
@@ -175,11 +233,11 @@ impl ModelWeights {
 
     /// Fold BN inference statistics into an affine (scale, shift):
     /// `scale = phi / sqrt(rv + eps)`, `shift = -rm * scale`. Identity
-    /// when the model has no BN (vanilla LSTM baselines).
-    fn fold_bn(&self, phi: &str, rm: &str, rv: &str, n4: usize)
+    /// when the model has no BN (vanilla baselines).
+    fn fold_bn(&self, phi: &str, rm: &str, rv: &str, gw: usize)
         -> Result<(Vec<f32>, Vec<f32>)> {
         let Some((_, phi)) = self.params.get(phi) else {
-            return Ok((vec![1.0; n4], vec![0.0; n4]));
+            return Ok((vec![1.0; gw], vec![0.0; gw]));
         };
         let (_, rm) = self
             .state
@@ -189,26 +247,111 @@ impl ModelWeights {
             .state
             .get(rv)
             .with_context(|| format!("BN model lacks running var {rv}"))?;
-        anyhow::ensure!(phi.len() == n4 && rm.len() == n4 && rv.len() == n4,
-                        "BN stat length mismatch (want {n4})");
-        let mut scale = vec![0.0f32; n4];
-        let mut shift = vec![0.0f32; n4];
-        for i in 0..n4 {
+        anyhow::ensure!(phi.len() == gw && rm.len() == gw && rv.len() == gw,
+                        "BN stat length mismatch (want {gw})");
+        let mut scale = vec![0.0f32; gw];
+        let mut shift = vec![0.0f32; gw];
+        for i in 0..gw {
             scale[i] = phi[i] / (rv[i] + 1e-5).sqrt();
             shift[i] = -rm[i] * scale[i];
         }
         Ok((scale, shift))
     }
 
-    /// Build the packed deployment cell + LM head for these weights.
+    /// Validate every layer's parameter shapes against the derived
+    /// (arch, layers, vocab, hidden) geometry BEFORE any packing starts.
+    ///
+    /// This is the single shape gate for the packing pipeline: instead
+    /// of failing one mismatch at a time mid-build, it collects **every**
+    /// problem — parameter name, expected shape, got shape (or
+    /// "missing") — across all layers plus the head, and reports them in
+    /// one error. BN stats are only required for layers that declare a
+    /// BN gain (`phi_*`); vanilla baselines pass without them.
+    pub fn validate(&self) -> Result<()> {
+        let gw = self.arch.gates() * self.hidden;
+        let mut problems: Vec<String> = vec![];
+        {
+            let mut check = |map: &ArrayMap, name: String, want: Vec<usize>| {
+                match map.get(&name) {
+                    None => problems.push(format!(
+                        "{name}: missing (expected shape {want:?})")),
+                    Some((shape, data)) => {
+                        if *shape != want {
+                            problems.push(format!(
+                                "{name}: expected shape {want:?}, got {shape:?}"));
+                        } else if data.len() != want.iter().product::<usize>() {
+                            problems.push(format!(
+                                "{name}: shape {want:?} but {} values",
+                                data.len()));
+                        }
+                    }
+                }
+            };
+            for l in 0..self.layers {
+                let d_in = if l == 0 { self.vocab } else { self.hidden };
+                check(&self.params, format!("l{l}/wx"), vec![d_in, gw]);
+                check(&self.params, format!("l{l}/wh"),
+                      vec![self.hidden, gw]);
+                check(&self.params, format!("l{l}/b"), vec![gw]);
+                // each BN side is independent: a declared gain needs its
+                // running stats, but x-only / h-only BN is legal (the
+                // missing side folds to identity)
+                if self.params.contains_key(&format!("l{l}/phi_x")) {
+                    check(&self.params, format!("l{l}/phi_x"), vec![gw]);
+                    check(&self.state, format!("l{l}/rm_x"), vec![gw]);
+                    check(&self.state, format!("l{l}/rv_x"), vec![gw]);
+                }
+                if self.params.contains_key(&format!("l{l}/phi_h")) {
+                    check(&self.params, format!("l{l}/phi_h"), vec![gw]);
+                    check(&self.state, format!("l{l}/rm_h"), vec![gw]);
+                    check(&self.state, format!("l{l}/rv_h"), vec![gw]);
+                }
+            }
+            check(&self.params, "head/w".to_string(),
+                  vec![self.hidden, self.vocab]);
+            check(&self.params, "head/b".to_string(), vec![self.vocab]);
+        }
+        // no orphan layers beyond the derived stack: layer count comes
+        // from contiguous l{N}/wh numbering, so a model with a gap (l0,
+        // l1, l3) must fail loudly here, not silently serve a truncated
+        // stack with l3's weights dropped
+        for name in self.params.keys() {
+            if let Some(rest) = name.strip_prefix('l') {
+                if let Some((idx, _)) = rest.split_once('/') {
+                    if let Ok(idx) = idx.parse::<usize>() {
+                        if idx >= self.layers {
+                            problems.push(format!(
+                                "{name}: layer {idx} is beyond the \
+                                 {}-layer stack (layers are counted by \
+                                 contiguous l0../wh — is a layer's wh \
+                                 missing?)", self.layers));
+                        }
+                    }
+                }
+            }
+        }
+        if problems.is_empty() {
+            Ok(())
+        } else {
+            bail!("weight validation failed for {} ({} x{} layers, vocab \
+                   {}, hidden {}):\n  {}",
+                  self.name, self.arch.label(), self.layers, self.vocab,
+                  self.hidden, problems.join("\n  "))
+        }
+    }
+
+    /// Build the packed deployment stack + LM head for these weights.
     ///
     /// Samples the binary/ternary deployment weights once with
-    /// `sample_seed` (same fork order as [`crate::model::export_packed`]),
-    /// folds BN, and optionally converts ternary matrices to the pos/neg
-    /// bit-plane layout. Returns `(cell, head_w, head_b)` with `head_w`
-    /// row-major `(hidden, vocab)`.
-    pub fn build_cell(&self, sample_seed: u64, planes: bool)
-        -> Result<(PackedLstmCell, Vec<f32>, Vec<f32>)> {
+    /// `sample_seed` (same fork order as [`crate::model::export_packed`]:
+    /// matrices in sorted-name order — `l0/wh`, `l0/wx`, `l1/wh`, … —
+    /// one rng fork per matrix), folds BN per layer, and optionally
+    /// converts ternary matrices to the pos/neg bit-plane layout.
+    /// Returns `(stack, head_w, head_b)` with `head_w` row-major
+    /// `(hidden, vocab)`. Works for any [`CellArch`] × layer depth the
+    /// weights declare.
+    pub fn build_stack(&self, sample_seed: u64, planes: bool)
+        -> Result<(PackedStack, Vec<f32>, Vec<f32>)> {
         anyhow::ensure!(
             self.quantizer == "bin" || self.quantizer == "ter",
             "packed backends need a binary/ternary quantizer, got '{}' \
@@ -219,33 +362,14 @@ impl ModelWeights {
             !self.params.contains_key("emb/emb"),
             "embedding-input models cannot serve one-hot tokens packed"
         );
-        anyhow::ensure!(
-            !self.params.contains_key("l1/wh"),
-            "multi-layer models are not supported on the packed backends \
-             yet (the cell serves layer 0 only); use the pjrt-dense backend"
-        );
-        let (wx_shape, wx_data) = self.param("l0/wx")?;
-        let (wh_shape, wh_data) = self.param("l0/wh")?;
-        anyhow::ensure!(wx_shape.len() == 2 && wh_shape.len() == 2,
-                        "recurrent weights are not matrices");
-        let n4 = wx_shape[1];
-        anyhow::ensure!(
-            n4 == 4 * wh_shape[0],
-            "packed serving supports the 4-gate LSTM cell only \
-             (wx cols {} vs wh rows {}; GRU/3-gate models serve via \
-             pjrt-dense)", n4, wh_shape[0]
-        );
-        let hidden = n4 / 4;
-        anyhow::ensure!(hidden == self.hidden && wh_shape[0] == hidden
-                        && wh_shape[1] == n4,
-                        "inconsistent recurrent shapes: wx {wx_shape:?} wh {wh_shape:?}");
-        anyhow::ensure!(wx_shape[0] == self.vocab,
-                        "wx rows {} != vocab {} (token serving needs a \
-                         one-hot input layer)", wx_shape[0], self.vocab);
+        // one shape gate for the whole pipeline: everything below can
+        // index shapes without re-checking them
+        self.validate()?;
 
+        let gw = self.arch.gates() * self.hidden;
         let mut rng = Rng::new(sample_seed);
-        let mut sample = |w: &[f32], rows: usize, cols: usize, label: u64|
-            -> Result<Packed> {
+        let sample = |w: &[f32], rows: usize, cols: usize,
+                      rng: &mut Rng, label: u64| -> Result<Packed> {
             match sample_quantized(&self.quantizer, w, rows, cols,
                                    &mut rng.fork(label))? {
                 PackedMatrix::Binary(b) => Ok(Packed::Binary(b)),
@@ -255,31 +379,58 @@ impl ModelWeights {
                 }
             }
         };
-        // Same sampling order as `export_packed`: it walks the meta's
-        // recurrent_names, which aot.py emits sorted — "l0/wh" before
-        // "l0/wx" — forking the rng per matrix in that sequence. Keeping
-        // the order identical makes a `rbtw pack`/`from_session` export
-        // and an engine open with the same seed draw the same sample.
-        let mut wh = sample(wh_data, hidden, n4, 0)?;
-        let mut wx = sample(wx_data, self.vocab, n4, 1)?;
-        if planes {
-            wx = wx.to_planes();
-            wh = wh.to_planes();
+        // Sample in exactly `export_packed`'s sequence: it walks the
+        // meta's recurrent_names, which aot.py emits SORTED
+        // (lexicographic: "l0/wh" < "l0/wx" < "l1/wh" …, and "l10/wh" <
+        // "l2/wh" at depth ≥ 10), forking the rng once per matrix in
+        // that order. `Rng::fork` advances the parent rng, so both the
+        // fork LABEL and the fork CALL ORDER must match — hence all
+        // matrices are drawn here, sorted-name first, before any cell
+        // is assembled. A `rbtw pack`/`from_session` export and an
+        // engine open with the same seed then draw the same sample at
+        // any depth.
+        let mut rec_names: Vec<String> = (0..self.layers)
+            .flat_map(|l| [format!("l{l}/wh"), format!("l{l}/wx")])
+            .collect();
+        rec_names.sort();
+        let mut sampled: BTreeMap<String, Packed> = BTreeMap::new();
+        for (label, name) in rec_names.iter().enumerate() {
+            let (shape, data) = self.param(name)?;
+            let m = sample(data, shape[0], shape[1], &mut rng,
+                           label as u64)?;
+            sampled.insert(name.clone(), m);
         }
+        let mut cells: Vec<Box<dyn RecurrentCell>> =
+            Vec::with_capacity(self.layers);
+        for l in 0..self.layers {
+            let mut wh = sampled.remove(&format!("l{l}/wh")).unwrap();
+            let mut wx = sampled.remove(&format!("l{l}/wx")).unwrap();
+            if planes {
+                wx = wx.to_planes();
+                wh = wh.to_planes();
+            }
+            let (scale_x, shift_x) = self.fold_bn(
+                &format!("l{l}/phi_x"), &format!("l{l}/rm_x"),
+                &format!("l{l}/rv_x"), gw)?;
+            let (scale_h, shift_h) = self.fold_bn(
+                &format!("l{l}/phi_h"), &format!("l{l}/rm_h"),
+                &format!("l{l}/rv_h"), gw)?;
+            let (_, bias) = self.param(&format!("l{l}/b"))?;
+            let cell: Box<dyn RecurrentCell> = match self.arch {
+                CellArch::Lstm => Box::new(PackedLstmCell::new(
+                    wx, wh, scale_x, shift_x, scale_h, shift_h,
+                    bias.to_vec())?),
+                CellArch::Gru => Box::new(PackedGruCell::new(
+                    wx, wh, scale_x, shift_x, scale_h, shift_h,
+                    bias.to_vec())?),
+            };
+            cells.push(cell);
+        }
+        let stack = PackedStack::new(cells)?;
 
-        let (scale_x, shift_x) = self.fold_bn("l0/phi_x", "l0/rm_x", "l0/rv_x", n4)?;
-        let (scale_h, shift_h) = self.fold_bn("l0/phi_h", "l0/rm_h", "l0/rv_h", n4)?;
-        let (_, bias) = self.param("l0/b")?;
-        let cell = PackedLstmCell::new(wx, wh, scale_x, shift_x, scale_h,
-                                       shift_h, bias.to_vec())?;
-
-        let (hw_shape, head_w) = self.param("head/w")?;
-        anyhow::ensure!(hw_shape.len() == 2 && hw_shape[0] == hidden
-                        && hw_shape[1] == self.vocab,
-                        "head/w shape {hw_shape:?} != ({hidden}, {})", self.vocab);
+        let (_, head_w) = self.param("head/w")?;
         let (_, head_b) = self.param("head/b")?;
-        anyhow::ensure!(head_b.len() == self.vocab, "head/b length mismatch");
-        Ok((cell, head_w.to_vec(), head_b.to_vec()))
+        Ok((stack, head_w.to_vec(), head_b.to_vec()))
     }
 }
 
@@ -293,21 +444,141 @@ mod tests {
             let w = ModelWeights::synthetic(30, 12, q, 3);
             assert_eq!(w.vocab, 30);
             assert_eq!(w.hidden, 12);
-            let (cell, head_w, head_b) = w.build_cell(5, false).unwrap();
-            assert_eq!(cell.hidden, 12);
+            assert_eq!(w.arch, CellArch::Lstm);
+            assert_eq!(w.layers, 1);
+            let (stack, head_w, head_b) = w.build_stack(5, false).unwrap();
+            assert_eq!(stack.hidden(), 12);
+            assert_eq!(stack.layers(), 1);
             assert_eq!(head_w.len(), 12 * 30);
             assert_eq!(head_b.len(), 30);
-            let (cell_p, _, _) = w.build_cell(5, true).unwrap();
+            let (stack_p, _, _) = w.build_stack(5, true).unwrap();
             // planes conversion changes layout, not footprint semantics:
             // ternary stays 2 bits/weight, binary 1 bit/weight.
-            assert_eq!(cell.weight_bytes(), cell_p.weight_bytes());
+            assert_eq!(stack.weight_bytes(), stack_p.weight_bytes());
+        }
+    }
+
+    #[test]
+    fn synthetic_emits_every_arch_and_depth() {
+        for arch in CellArch::all() {
+            for layers in [1usize, 2, 3] {
+                let w = ModelWeights::synthetic_arch(
+                    22, 10, arch, layers, "ter", 7);
+                assert_eq!(w.arch, arch);
+                assert_eq!(w.layers, layers);
+                w.validate().unwrap();
+                let (stack, _, _) = w.build_stack(3, false).unwrap();
+                assert_eq!(stack.layers(), layers);
+                assert_eq!(stack.arch(), arch);
+                assert_eq!(stack.hidden(), 10);
+                assert_eq!(stack.input_rows(), 22);
+                let per_layer_state = match arch {
+                    CellArch::Lstm => 20,
+                    CellArch::Gru => 10,
+                };
+                assert_eq!(stack.state_width(), layers * per_layer_state);
+            }
         }
     }
 
     #[test]
     fn fp_quantizer_rejected() {
         let w = ModelWeights::synthetic(10, 8, "fp", 1);
-        assert!(w.build_cell(1, false).is_err());
+        assert!(w.build_stack(1, false).is_err());
+    }
+
+    #[test]
+    fn validate_reports_every_problem_with_shapes() {
+        let mut w = ModelWeights::synthetic_arch(
+            12, 6, CellArch::Gru, 2, "ter", 5);
+        w.validate().unwrap();
+        // break three things at once: wrong wx shape on layer 1,
+        // missing l1/b, wrong head/b length
+        let (_, vals) = w.params["l1/wx"].clone();
+        w.params.insert("l1/wx".into(), (vec![6, 17], vals));
+        w.params.remove("l1/b");
+        w.params.insert("head/b".into(), (vec![3], vec![0.0; 3]));
+        // (vocab was derived at construction and stays 12, so the
+        // shrunken head/b is a reported mismatch, not a new geometry)
+        let err = format!("{:#}", w.validate().unwrap_err());
+        assert!(err.contains("l1/wx"), "{err}");
+        assert!(err.contains("[6, 18]"), "expected shape missing: {err}");
+        assert!(err.contains("[6, 17]"), "got shape missing: {err}");
+        assert!(err.contains("l1/b") && err.contains("missing"), "{err}");
+        assert!(err.contains("head/b"), "{err}");
+        // build_stack runs the same gate before packing anything
+        assert!(w.build_stack(1, false).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_orphan_layer_params() {
+        // a gap in layer numbering derives a shorter stack — the
+        // stranded upper layer must fail validation, not vanish
+        let mut w = ModelWeights::synthetic_arch(
+            12, 6, CellArch::Lstm, 2, "ter", 3);
+        let wh = w.params["l1/wh"].clone();
+        w.params.insert("l3/wh".into(), wh);
+        assert_eq!(w.layers, 2, "this instance derived 2 layers");
+        let err = format!("{:#}", w.validate().unwrap_err());
+        assert!(err.contains("l3/wh"), "orphan layer not flagged: {err}");
+        assert!(w.build_stack(1, false).is_err());
+    }
+
+    #[test]
+    fn validate_allows_one_sided_bn() {
+        // x-only / h-only BN is legal (the missing side folds to
+        // identity) — but a declared gain without its running stats is
+        // flagged up front, not mid-build
+        let mut w = ModelWeights::synthetic(10, 4, "ter", 5);
+        w.params.remove("l0/phi_x");
+        w.state.remove("l0/rm_x");
+        w.state.remove("l0/rv_x");
+        w.validate().unwrap();
+        let (stack, _, _) = w.build_stack(1, false).unwrap();
+        assert_eq!(stack.layers(), 1);
+        w.state.remove("l0/rm_h");
+        let err = format!("{:#}", w.validate().unwrap_err());
+        assert!(err.contains("l0/rm_h"), "{err}");
+    }
+
+    #[test]
+    fn multi_layer_and_gru_models_build() {
+        // the old "multi-layer models are not supported" error path is
+        // gone: deep LSTMs and GRUs pack end-to-end
+        let deep = ModelWeights::synthetic_arch(
+            20, 8, CellArch::Lstm, 3, "ter", 11);
+        let (stack, _, _) = deep.build_stack(2, false).unwrap();
+        assert_eq!(stack.layers(), 3);
+        let gru = ModelWeights::synthetic_arch(
+            20, 8, CellArch::Gru, 2, "bin", 13);
+        let (stack, _, _) = gru.build_stack(2, true).unwrap();
+        assert_eq!(stack.arch(), CellArch::Gru);
+        assert_eq!(stack.layers(), 2);
+    }
+
+    #[test]
+    fn layer0_sampling_matches_single_layer_build() {
+        // stacking must not disturb layer 0's deployment sample: the
+        // first layer of a deep model and the only layer of a shallow
+        // model with identical l0 params draw the same packed planes.
+        let one = ModelWeights::synthetic(18, 8, "ter", 42);
+        let mut two = ModelWeights::synthetic_arch(
+            18, 8, CellArch::Lstm, 2, "ter", 42);
+        for key in ["l0/wx", "l0/wh", "l0/b", "l0/phi_x", "l0/phi_h"] {
+            two.params.insert(key.into(), one.params[key].clone());
+        }
+        for key in ["l0/rm_x", "l0/rv_x", "l0/rm_h", "l0/rv_h"] {
+            two.state.insert(key.into(), one.state[key].clone());
+        }
+        let (s1, _, _) = one.build_stack(9, false).unwrap();
+        let (s2, _, _) = two.build_stack(9, false).unwrap();
+        let (a, b) = (s1.layer(0), s2.layer(0));
+        match (a.wh(), b.wh()) {
+            (Packed::Ternary(x), Packed::Ternary(y)) => {
+                assert_eq!(x.unpack(), y.unpack());
+            }
+            _ => panic!("expected ternary layer-0 planes"),
+        }
     }
 
     #[test]

@@ -26,16 +26,22 @@
 //! `infer_*` executables), [`engine::BackendKind::PackedCpu`] (LUT GEMV +
 //! one-hot row gather over sign/mask planes) and
 //! [`engine::BackendKind::PackedPlanes`] (precomputed pos/neg bit
-//! planes). The packed backends hold slot state in flat f32 buffers and
-//! resident weights at 1–2 bits each — the paper's 12× memory claim,
-//! measurable via [`engine::InferBackend::weight_bytes`] — and by
-//! default step every active decode slot through one batched GEMM per
-//! gate matrix (a single weight stream per engine step; see
-//! [`quant::gemm`] and [`engine::BackendSpec::batch_gemm`]). The
-//! batched path is SIMD-tiled (8-lane [`quant::F32x8`] batch blocks)
-//! and sharded by output column across a persistent worker pool
+//! planes). The packed backends serve a [`quant::PackedStack`] of
+//! [`quant::RecurrentCell`] layers — LSTM or GRU
+//! ([`quant::CellArch`]), any depth; the paper's stacked-LM (Tables
+//! 2–3) and GRU (Table 6) configurations run on the same packed
+//! substrate as the single-layer LSTM. Slot state lives in flat f32
+//! buffers and resident weights at 1–2 bits each — the paper's 12×
+//! memory claim, measurable via
+//! [`engine::InferBackend::weight_bytes`] — and by default every
+//! active decode slot steps through one batched GEMM per gate matrix
+//! (a single weight stream per engine step; see [`quant::gemm`] and
+//! [`engine::BackendSpec::batch_gemm`]). The batched path is
+//! SIMD-tiled (8-lane [`quant::F32x8`] batch blocks) and sharded by
+//! output column across a persistent worker pool
 //! ([`engine::ThreadPool`], sized by [`engine::BackendSpec::threads`]);
-//! logits are bit-identical for every thread count.
+//! logits are bit-identical for every thread count, cell arch and
+//! stack depth.
 //!
 //! # Cluster serving
 //!

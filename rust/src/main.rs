@@ -20,7 +20,7 @@ use rbtw::cluster::{run_cluster_load, RoutePolicy};
 use rbtw::config::{default_spec_for_task, Config, ServeSpec};
 use rbtw::coordinator::{latency_breakdown, InferenceServer, LoadSpec,
                         Request, Split, Trainer};
-use rbtw::engine::{self, BackendKind, InferBackend, ModelWeights,
+use rbtw::engine::{self, BackendKind, CellArch, InferBackend, ModelWeights,
                    SharedModel};
 use rbtw::hwsim;
 use rbtw::model::export_packed;
@@ -138,6 +138,9 @@ fn print_usage() {
          \x20                             --shards N (engine shards over one\n\
          \x20                             shared weight set; packed only)\n\
          \x20                             --policy least-loaded|round-robin\n\
+         \x20                             --arch lstm|gru --layers N\n\
+         \x20                             (<artifact> = 'synthetic' serves a\n\
+         \x20                             generated model of that shape)\n\
          \x20                             --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
@@ -282,6 +285,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(p) = args.get("policy") {
         spec.policy = RoutePolicy::parse(p)?;
     }
+    if let Some(a) = args.get("arch") {
+        spec.arch = CellArch::parse(a)?;
+    }
+    if let Some(l) = args.get_usize("layers")? {
+        anyhow::ensure!(ServeSpec::LAYERS_RANGE.contains(&l),
+                        "--layers {l} out of range [{}, {}]",
+                        ServeSpec::LAYERS_RANGE.start(),
+                        ServeSpec::LAYERS_RANGE.end());
+        spec.layers = l;
+    }
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
@@ -289,13 +302,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     if spec.backend != BackendKind::PjrtDense {
         // the packed deployment path serves through the cluster; one
-        // shard is the plain continuous-batching server
-        let weights = ModelWeights::from_artifact(&dir, &name)?;
+        // shard is the plain continuous-batching server. The 'synthetic'
+        // target generates a model of the requested --arch/--layers
+        // shape so deep/GRU serving can be demoed without artifacts.
+        let weights = if name == "synthetic" {
+            ModelWeights::synthetic_arch(50, 128, spec.arch, spec.layers,
+                                         "ter", 0xBE)
+        } else {
+            ModelWeights::from_artifact(&dir, &name)?
+        };
         let shared =
             SharedModel::prepare(&weights, spec.backend, spec.sample_seed)?;
         println!(
-            "cluster: {} shard(s) x {} slots | {} routing | {} gemm | \
+            "model {}: {} x{} layer(s), vocab {}, hidden {}\n\
+             cluster: {} shard(s) x {} slots | {} routing | {} gemm | \
              {} B resident packed weights (shared across shards)",
+            shared.name(),
+            shared.arch().label(),
+            shared.layers(),
+            shared.vocab(),
+            shared.hidden(),
             spec.shards,
             spec.slots,
             spec.policy.label(),
@@ -328,6 +354,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     anyhow::ensure!(spec.shards == 1,
                     "pjrt-dense cannot shard: the weights live inside the \
                      compiled executable (use --backend packed|planes)");
+    anyhow::ensure!(name != "synthetic",
+                    "the 'synthetic' target has no compiled artifact; serve \
+                     it on a packed backend (--backend packed|planes)");
     let backend = engine::open(&dir, &name, &backend_spec)?;
     println!(
         "backend {} | {} slots | native gemm | {} B resident weights",

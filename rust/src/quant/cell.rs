@@ -1,4 +1,4 @@
-//! Rust-native packed BN-LSTM cell — the deployment inference engine.
+//! Rust-native packed recurrent cells — the deployment inference engine.
 //!
 //! This is the software twin of the paper's accelerator datapath: weights
 //! live as bit planes (1-2 bits each), the "multiplier" is a sign-select,
@@ -9,6 +9,40 @@
 //! One-hot (token) inputs exploit the same trick as the ASIC's weight
 //! SRAM addressing: the x-path matmul of a one-hot vector is a single
 //! packed-row gather, not a GEMV.
+//!
+//! # The recurrent-stack API
+//!
+//! The paper evaluates binary/ternary weights on *stacked* LSTMs
+//! (Tables 2–3) and on GRUs (Table 6), so the serving substrate is
+//! cell-agnostic and depth-agnostic:
+//!
+//! * [`RecurrentCell`] is the one-layer contract. A cell owns its packed
+//!   matrices and folded BN, declares a **per-slot state layout** (a flat
+//!   row of [`RecurrentCell::state_width`] f32s whose first
+//!   [`RecurrentCell::hidden`] entries are always the output h), and
+//!   steps either per slot ([`RecurrentCell::step_token_slot`] /
+//!   [`RecurrentCell::step_dense_slot`] — the bit-exactness reference) or
+//!   batched ([`RecurrentCell::step_tokens`] /
+//!   [`RecurrentCell::step_batch`] — one weight stream per step for all
+//!   slots, via `quant::gemm`).
+//! * [`PackedLstmCell`] implements it with state `[h | c]`
+//!   (`state_width = 2H`, gate width `4H`, gate order `[i, f, g, o]`).
+//! * [`PackedGruCell`] implements it with state `[h]`
+//!   (`state_width = H`, gate width `3H`, gate order `[r, z, n]`; the
+//!   reset gate multiplies the *recurrent* candidate contribution, the
+//!   cuDNN convention).
+//! * [`PackedStack`] chains N layers: layer 0 consumes tokens through
+//!   the one-hot gather, every layer `l ≥ 1` consumes the previous
+//!   layer's h block through the dense batched GEMM. A stack's
+//!   concatenated per-slot state row is the layers' state rows in order.
+//!
+//! The serving engine (`crate::engine::packed`) does not call the
+//! batched stack step directly: it re-assembles the same
+//! gather/[`Packed::gemm_cols`]/[`RecurrentCell::gate_tail_rows`]
+//! sequence per layer with pool-sharded stages and its own buffers. Both
+//! assemblies are anchored to the same per-slot reference — each is
+//! tested bit-identical to the per-slot step per stream — so they cannot
+//! silently diverge.
 
 use anyhow::{bail, Context, Result};
 
@@ -20,6 +54,62 @@ use super::simd::SharedOut;
 use super::pack::{words_per_col, PackedBinary, PackedTernary};
 use super::planes::{gemv_ternary_planes, TernaryPlanes};
 use crate::runtime::Session;
+
+/// Which recurrent cell architecture a model stacks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CellArch {
+    /// 4-gate LSTM (gate order `[i, f, g, o]`, state `[h | c]`).
+    Lstm,
+    /// 3-gate GRU (gate order `[r, z, n]`, state `[h]`).
+    Gru,
+}
+
+impl CellArch {
+    /// Gates per cell — the factor between `hidden` and the packed gate
+    /// matrices' column width.
+    pub fn gates(self) -> usize {
+        match self {
+            CellArch::Lstm => 4,
+            CellArch::Gru => 3,
+        }
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lstm" => CellArch::Lstm,
+            "gru" => CellArch::Gru,
+            other => bail!("unknown cell arch '{other}' (accepted: lstm, gru)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CellArch::Lstm => "lstm",
+            CellArch::Gru => "gru",
+        }
+    }
+
+    pub fn all() -> [CellArch; 2] {
+        [CellArch::Lstm, CellArch::Gru]
+    }
+}
+
+impl std::fmt::Display for CellArch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Borrowed view of a cell's folded-BN gate parameters (all
+/// `gate_width()` long), for dense-reference tests and reporting.
+pub struct GateParams<'a> {
+    pub scale_x: &'a [f32],
+    pub shift_x: &'a [f32],
+    pub scale_h: &'a [f32],
+    pub shift_h: &'a [f32],
+    pub bias: &'a [f32],
+}
 
 /// Packed weight matrix, any precision/layout the engine serves from.
 ///
@@ -194,7 +284,96 @@ impl Packed {
     }
 }
 
-/// The packed cell: quantized weights + folded BN statistics + bias.
+/// One packed recurrent layer the serving engine can step.
+///
+/// ## State layout contract
+///
+/// A cell's per-slot recurrent state is a flat row of
+/// [`Self::state_width`] f32s whose **first [`Self::hidden`] entries are
+/// the output h** — the stack and the engine read h at offset 0 without
+/// knowing the cell kind. `PackedLstmCell` lays out `[h | c]` (width
+/// `2H`); `PackedGruCell` is `[h]` (width `H`). A zeroed state row is
+/// the fresh-stream state for every implementation.
+///
+/// ## Bit-exactness contract
+///
+/// For any token/input sequence, [`Self::step_tokens`] /
+/// [`Self::step_batch`] over a `(batch, state_width)` block must update
+/// every row **bit-identically** to [`Self::step_token_slot`] /
+/// [`Self::step_dense_slot`] on that row alone: the batched kernels
+/// (`super::gemm`) are bit-exact per row versus the per-slot GEMVs, and
+/// [`Self::gate_tail_rows`] walks each row through the identical f32 op
+/// sequence as the per-slot tail. `rust/tests/quant_properties.rs`
+/// enforces this per implementation; the serving engine's pool-sharded
+/// re-assembly of the same stages inherits it.
+///
+/// `Send + Sync` supertraits: cells are moved onto cluster shard worker
+/// threads and borrowed by GEMM thread-pool shards.
+pub trait RecurrentCell: Send + Sync {
+    /// Which architecture this layer is.
+    fn arch(&self) -> CellArch;
+
+    /// Recurrent output width H.
+    fn hidden(&self) -> usize;
+
+    /// Input rows of the x-path matrix (vocab for a token layer 0,
+    /// `hidden` for stacked layers).
+    fn input_rows(&self) -> usize;
+
+    /// Gate matrix column width (`gates() * hidden`).
+    fn gate_width(&self) -> usize;
+
+    /// f32s of per-slot recurrent state (see the state layout contract).
+    fn state_width(&self) -> usize;
+
+    /// The packed x-path matrix `(input_rows, gate_width)`.
+    fn wx(&self) -> &Packed;
+
+    /// The packed recurrent matrix `(hidden, gate_width)`.
+    fn wh(&self) -> &Packed;
+
+    /// Folded-BN gate parameters (scale/shift/bias views).
+    fn gate_params(&self) -> GateParams<'_>;
+
+    /// Total packed weight bytes (the deployment footprint).
+    fn weight_bytes(&self) -> usize;
+
+    /// Per-slot reference step with a token (one-hot) input. `state` is
+    /// one slot's state row.
+    fn step_token_slot(&mut self, token: usize, state: &mut [f32]);
+
+    /// Per-slot reference step with a dense input vector of
+    /// `input_rows` f32s.
+    fn step_dense_slot(&mut self, x: &[f32], state: &mut [f32]);
+
+    /// Batched token step on this cell's own scratch: `state` is a
+    /// row-major `(tokens.len(), state_width)` block, updated in place.
+    /// The x-path is a batched one-hot gather, the h-path one batched
+    /// GEMM streaming the packed `wh` planes once for every stream.
+    fn step_tokens(&mut self, tokens: &[usize], state: &mut [f32]);
+
+    /// Batched dense step: `x` is row-major `(batch, input_rows)` —
+    /// the previous layer's h block when stacked — and `state` a
+    /// `(batch, state_width)` block updated in place.
+    fn step_batch(&mut self, x: &[f32], batch: usize, state: &mut [f32]);
+
+    /// Folded-BN gate tail over a row-major block of streams: `xw` is a
+    /// `(rows, gate_width)` x-side preactivation block (consumed in
+    /// place), `hw` its recurrent counterpart, `state` the matching
+    /// `(rows, state_width)` state rows, updated in place. Row count is
+    /// inferred from `xw.len()`.
+    ///
+    /// Each row is independent and walks the identical op sequence as
+    /// the per-slot tail, so the engine can shard rows across worker
+    /// threads without changing a single state bit.
+    fn gate_tail_rows(&self, xw: &mut [f32], hw: &[f32], state: &mut [f32]);
+
+    /// Cheap clone for shard fan-out: aliases the `Arc`-backed plane
+    /// allocations, owns fresh scratch.
+    fn clone_cell(&self) -> Box<dyn RecurrentCell>;
+}
+
+/// The packed LSTM cell: quantized weights + folded BN statistics + bias.
 pub struct PackedLstmCell {
     pub wx: Packed,
     pub wh: Packed,
@@ -213,6 +392,7 @@ pub struct PackedLstmCell {
     lut: LutScratch,
     xw_b: Vec<f32>,
     hw_b: Vec<f32>,
+    hb: Vec<f32>,
     gemm: GemmScratch,
 }
 
@@ -241,6 +421,7 @@ impl Clone for PackedLstmCell {
             lut: LutScratch::default(),
             xw_b: vec![],
             hw_b: vec![],
+            hb: vec![],
             gemm: GemmScratch::default(),
         }
     }
@@ -272,6 +453,7 @@ impl PackedLstmCell {
             lut: LutScratch::default(),
             xw_b: vec![],
             hw_b: vec![],
+            hb: vec![],
             gemm: GemmScratch::default(),
         })
     }
@@ -318,7 +500,10 @@ impl PackedLstmCell {
         Self::new(wx, wh, scale_x, shift_x, scale_h, shift_h, bias)
     }
 
-    /// One step with a token (one-hot) input. Gate order [i, f, g, o].
+    /// One step with a token (one-hot) input over split h/c slices.
+    /// Gate order [i, f, g, o]. (The trait's state-row API is
+    /// [`RecurrentCell::step_token_slot`]; this is the LSTM-native
+    /// convenience the trainer demo and benches use.)
     pub fn step_token(&mut self, token: usize, h: &mut [f32], c: &mut [f32]) {
         debug_assert_eq!(h.len(), self.hidden);
         self.xw.fill(0.0);
@@ -327,85 +512,17 @@ impl PackedLstmCell {
         self.tail(h, c);
     }
 
-    /// One step with a dense input vector.
+    /// One step with a dense input vector over split h/c slices.
     pub fn step_dense(&mut self, x: &[f32], h: &mut [f32], c: &mut [f32]) {
         self.wx.gemv(x, &mut self.xw, &mut self.lut);
         self.wh.gemv(h, &mut self.hw, &mut self.lut);
         self.tail(h, c);
     }
 
-    /// One step for a whole batch of token streams at once, on this
-    /// cell's own scratch. `h`/`c` are row-major `(tokens.len(),
-    /// hidden)` blocks holding the *active* slots' state, updated in
-    /// place.
-    ///
-    /// The x-path is a batched one-hot gather (one packed-row gather per
-    /// stream), the h-path a single batched GEMM that streams the packed
-    /// `wh` planes once for every stream, and the gate tail runs per row.
-    /// Each row's result is bit-identical to [`Self::step_token`] on
-    /// that stream alone.
-    ///
-    /// The serving engine does **not** call this: `PackedBackend`
-    /// re-assembles the same gather → [`Packed::gemm_cols`] →
-    /// [`Self::gate_tail_rows`] sequence with pool-sharded stages and
-    /// its own buffers. Both assemblies are anchored to the same
-    /// reference — each is tested bit-identical to [`Self::step_token`]
-    /// per stream — so they cannot silently diverge; this method remains
-    /// the single-scratch library API (and the engine-free way to test
-    /// the batched kernels through the cell).
-    pub fn step_tokens(&mut self, tokens: &[usize], h: &mut [f32],
-                       c: &mut [f32]) {
-        let batch = tokens.len();
-        if batch == 0 {
-            return;
-        }
-        let n4 = 4 * self.hidden;
-        debug_assert_eq!(h.len(), batch * self.hidden);
-        debug_assert_eq!(c.len(), batch * self.hidden);
-        if self.xw_b.len() < batch * n4 {
-            self.xw_b.resize(batch * n4, 0.0);
-            self.hw_b.resize(batch * n4, 0.0);
-        }
-        self.wx.gather_rows(tokens, &mut self.xw_b[..batch * n4]);
-        self.wh.gemm(h, batch, &mut self.hw_b[..batch * n4], &mut self.gemm);
-        // one tail implementation for this path and the engine's sharded
-        // path; the take/put-back frees the field borrow for the &self
-        // call and is just two pointer swaps
-        let mut xw_b = std::mem::take(&mut self.xw_b);
-        self.gate_tail_rows(&mut xw_b[..batch * n4],
-                            &self.hw_b[..batch * n4], h, c);
-        self.xw_b = xw_b;
-    }
-
     fn tail(&mut self, h: &mut [f32], c: &mut [f32]) {
-        gate_tail(&mut self.xw, &self.hw, &self.scale_x, &self.shift_x,
-                  &self.scale_h, &self.shift_h, &self.bias, self.hidden, h, c);
-    }
-
-    /// Folded-BN gate tail over a row-major block of streams: `xw` is a
-    /// `(rows, 4H)` preactivation block (consumed in place), `hw` its
-    /// recurrent counterpart, `h`/`c` the matching `(rows, H)` state
-    /// rows, updated in place. Row count is inferred from `xw.len()`.
-    ///
-    /// Each row is independent and walks the identical op sequence as
-    /// [`Self::step_token`]'s tail, so the engine can shard rows across
-    /// worker threads without changing a single state bit.
-    pub fn gate_tail_rows(&self, xw: &mut [f32], hw: &[f32], h: &mut [f32],
-                          c: &mut [f32]) {
-        let n4 = 4 * self.hidden;
-        debug_assert_eq!(xw.len() % n4, 0);
-        let rows = xw.len() / n4;
-        debug_assert_eq!(hw.len(), rows * n4);
-        debug_assert_eq!(h.len(), rows * self.hidden);
-        debug_assert_eq!(c.len(), rows * self.hidden);
-        for b in 0..rows {
-            gate_tail(&mut xw[b * n4..(b + 1) * n4],
-                      &hw[b * n4..(b + 1) * n4],
-                      &self.scale_x, &self.shift_x,
-                      &self.scale_h, &self.shift_h, &self.bias, self.hidden,
-                      &mut h[b * self.hidden..(b + 1) * self.hidden],
-                      &mut c[b * self.hidden..(b + 1) * self.hidden]);
-        }
+        lstm_gate_tail(&mut self.xw, &self.hw, &self.scale_x, &self.shift_x,
+                       &self.scale_h, &self.shift_h, &self.bias, self.hidden,
+                       h, c);
     }
 
     /// Total packed weight bytes (the deployment footprint).
@@ -414,12 +531,549 @@ impl PackedLstmCell {
     }
 }
 
-/// The folded-BN gate tail over one stream's preactivations: identical
-/// op sequence whether the stream was stepped alone or in a batch.
+impl RecurrentCell for PackedLstmCell {
+    fn arch(&self) -> CellArch {
+        CellArch::Lstm
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn input_rows(&self) -> usize {
+        self.wx.rows()
+    }
+
+    fn gate_width(&self) -> usize {
+        4 * self.hidden
+    }
+
+    fn state_width(&self) -> usize {
+        2 * self.hidden
+    }
+
+    fn wx(&self) -> &Packed {
+        &self.wx
+    }
+
+    fn wh(&self) -> &Packed {
+        &self.wh
+    }
+
+    fn gate_params(&self) -> GateParams<'_> {
+        GateParams {
+            scale_x: &self.scale_x,
+            shift_x: &self.shift_x,
+            scale_h: &self.scale_h,
+            shift_h: &self.shift_h,
+            bias: &self.bias,
+        }
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.wx.bytes() + self.wh.bytes()
+    }
+
+    fn step_token_slot(&mut self, token: usize, state: &mut [f32]) {
+        debug_assert_eq!(state.len(), 2 * self.hidden);
+        let (h, c) = state.split_at_mut(self.hidden);
+        self.step_token(token, h, c);
+    }
+
+    fn step_dense_slot(&mut self, x: &[f32], state: &mut [f32]) {
+        debug_assert_eq!(state.len(), 2 * self.hidden);
+        let (h, c) = state.split_at_mut(self.hidden);
+        self.step_dense(x, h, c);
+    }
+
+    fn step_tokens(&mut self, tokens: &[usize], state: &mut [f32]) {
+        let batch = tokens.len();
+        if batch == 0 {
+            return;
+        }
+        let hid = self.hidden;
+        let n4 = 4 * hid;
+        let sw = 2 * hid;
+        debug_assert_eq!(state.len(), batch * sw);
+        if self.xw_b.len() < batch * n4 {
+            self.xw_b.resize(batch * n4, 0.0);
+            self.hw_b.resize(batch * n4, 0.0);
+        }
+        if self.hb.len() < batch * hid {
+            self.hb.resize(batch * hid, 0.0);
+        }
+        self.wx.gather_rows(tokens, &mut self.xw_b[..batch * n4]);
+        // contiguous h block for the batched GEMM (state rows are [h|c])
+        for b in 0..batch {
+            self.hb[b * hid..(b + 1) * hid]
+                .copy_from_slice(&state[b * sw..b * sw + hid]);
+        }
+        self.wh.gemm(&self.hb[..batch * hid], batch,
+                     &mut self.hw_b[..batch * n4], &mut self.gemm);
+        // one tail implementation for this path and the engine's sharded
+        // path; the take/put-back frees the field borrow for the &self
+        // call and is just two pointer swaps
+        let mut xw_b = std::mem::take(&mut self.xw_b);
+        self.gate_tail_rows(&mut xw_b[..batch * n4],
+                            &self.hw_b[..batch * n4], state);
+        self.xw_b = xw_b;
+    }
+
+    fn step_batch(&mut self, x: &[f32], batch: usize, state: &mut [f32]) {
+        if batch == 0 {
+            return;
+        }
+        let hid = self.hidden;
+        let n4 = 4 * hid;
+        let sw = 2 * hid;
+        debug_assert_eq!(x.len(), batch * self.wx.rows());
+        debug_assert_eq!(state.len(), batch * sw);
+        if self.xw_b.len() < batch * n4 {
+            self.xw_b.resize(batch * n4, 0.0);
+            self.hw_b.resize(batch * n4, 0.0);
+        }
+        if self.hb.len() < batch * hid {
+            self.hb.resize(batch * hid, 0.0);
+        }
+        self.wx.gemm(x, batch, &mut self.xw_b[..batch * n4], &mut self.gemm);
+        for b in 0..batch {
+            self.hb[b * hid..(b + 1) * hid]
+                .copy_from_slice(&state[b * sw..b * sw + hid]);
+        }
+        self.wh.gemm(&self.hb[..batch * hid], batch,
+                     &mut self.hw_b[..batch * n4], &mut self.gemm);
+        let mut xw_b = std::mem::take(&mut self.xw_b);
+        self.gate_tail_rows(&mut xw_b[..batch * n4],
+                            &self.hw_b[..batch * n4], state);
+        self.xw_b = xw_b;
+    }
+
+    fn gate_tail_rows(&self, xw: &mut [f32], hw: &[f32], state: &mut [f32]) {
+        let hid = self.hidden;
+        let n4 = 4 * hid;
+        let sw = 2 * hid;
+        debug_assert_eq!(xw.len() % n4, 0);
+        let rows = xw.len() / n4;
+        debug_assert_eq!(hw.len(), rows * n4);
+        debug_assert_eq!(state.len(), rows * sw);
+        for b in 0..rows {
+            let (h, c) = state[b * sw..(b + 1) * sw].split_at_mut(hid);
+            lstm_gate_tail(&mut xw[b * n4..(b + 1) * n4],
+                           &hw[b * n4..(b + 1) * n4],
+                           &self.scale_x, &self.shift_x,
+                           &self.scale_h, &self.shift_h, &self.bias, hid,
+                           h, c);
+        }
+    }
+
+    fn clone_cell(&self) -> Box<dyn RecurrentCell> {
+        Box::new(self.clone())
+    }
+}
+
+/// The packed GRU cell (Table 6): 3 gates `[r, z, n]`, state `[h]`.
+///
+/// Update rule (reset gate applied to the recurrent candidate
+/// contribution, the cuDNN convention):
+/// ```text
+/// r = σ(bnx(x@wx)_r + bnh(h@wh)_r + b_r)
+/// z = σ(bnx(x@wx)_z + bnh(h@wh)_z + b_z)
+/// n = tanh(bnx(x@wx)_n + b_n + r ⊙ bnh(h@wh)_n)
+/// h' = (1 − z) ⊙ n + z ⊙ h
+/// ```
+/// where `bnx(v) = v*scale_x + shift_x` (folded BN; identity for non-BN
+/// models) and `bnh` likewise.
+pub struct PackedGruCell {
+    pub wx: Packed,
+    pub wh: Packed,
+    pub scale_x: Vec<f32>,
+    pub shift_x: Vec<f32>,
+    pub scale_h: Vec<f32>,
+    pub shift_h: Vec<f32>,
+    pub bias: Vec<f32>,
+    pub hidden: usize,
+    xw: Vec<f32>,
+    hw: Vec<f32>,
+    lut: LutScratch,
+    xw_b: Vec<f32>,
+    hw_b: Vec<f32>,
+    gemm: GemmScratch,
+}
+
+impl Clone for PackedGruCell {
+    /// Cheap clone: aliased `Arc`-backed planes, fresh scratch (same
+    /// contract as [`PackedLstmCell::clone`]).
+    fn clone(&self) -> Self {
+        let n3 = 3 * self.hidden;
+        Self {
+            wx: self.wx.clone(),
+            wh: self.wh.clone(),
+            scale_x: self.scale_x.clone(),
+            shift_x: self.shift_x.clone(),
+            scale_h: self.scale_h.clone(),
+            shift_h: self.shift_h.clone(),
+            bias: self.bias.clone(),
+            hidden: self.hidden,
+            xw: vec![0.0; n3],
+            hw: vec![0.0; n3],
+            lut: LutScratch::default(),
+            xw_b: vec![],
+            hw_b: vec![],
+            gemm: GemmScratch::default(),
+        }
+    }
+}
+
+impl PackedGruCell {
+    pub fn new(wx: Packed, wh: Packed, scale_x: Vec<f32>, shift_x: Vec<f32>,
+               scale_h: Vec<f32>, shift_h: Vec<f32>, bias: Vec<f32>)
+               -> Result<Self> {
+        let n3 = wx.cols();
+        if wh.cols() != n3 || n3 % 3 != 0 {
+            bail!("gate width mismatch: wx {} wh {}", n3, wh.cols());
+        }
+        let hidden = n3 / 3;
+        if wh.rows() != hidden {
+            bail!("wh rows {} != hidden {hidden}", wh.rows());
+        }
+        for (nm, v) in [("scale_x", &scale_x), ("shift_x", &shift_x),
+                        ("scale_h", &scale_h), ("shift_h", &shift_h),
+                        ("bias", &bias)] {
+            if v.len() != n3 {
+                bail!("{nm} length {} != {n3}", v.len());
+            }
+        }
+        Ok(Self {
+            wx, wh, scale_x, shift_x, scale_h, shift_h, bias, hidden,
+            xw: vec![0.0; n3],
+            hw: vec![0.0; n3],
+            lut: LutScratch::default(),
+            xw_b: vec![],
+            hw_b: vec![],
+            gemm: GemmScratch::default(),
+        })
+    }
+
+    fn tail(&mut self, h: &mut [f32]) {
+        gru_gate_tail(&mut self.xw, &self.hw, &self.scale_x, &self.shift_x,
+                      &self.scale_h, &self.shift_h, &self.bias, self.hidden,
+                      h);
+    }
+}
+
+impl RecurrentCell for PackedGruCell {
+    fn arch(&self) -> CellArch {
+        CellArch::Gru
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn input_rows(&self) -> usize {
+        self.wx.rows()
+    }
+
+    fn gate_width(&self) -> usize {
+        3 * self.hidden
+    }
+
+    fn state_width(&self) -> usize {
+        self.hidden
+    }
+
+    fn wx(&self) -> &Packed {
+        &self.wx
+    }
+
+    fn wh(&self) -> &Packed {
+        &self.wh
+    }
+
+    fn gate_params(&self) -> GateParams<'_> {
+        GateParams {
+            scale_x: &self.scale_x,
+            shift_x: &self.shift_x,
+            scale_h: &self.scale_h,
+            shift_h: &self.shift_h,
+            bias: &self.bias,
+        }
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.wx.bytes() + self.wh.bytes()
+    }
+
+    fn step_token_slot(&mut self, token: usize, state: &mut [f32]) {
+        debug_assert_eq!(state.len(), self.hidden);
+        self.xw.fill(0.0);
+        self.wx.add_row(token, &mut self.xw);
+        self.wh.gemv(state, &mut self.hw, &mut self.lut);
+        self.tail(state);
+    }
+
+    fn step_dense_slot(&mut self, x: &[f32], state: &mut [f32]) {
+        debug_assert_eq!(state.len(), self.hidden);
+        self.wx.gemv(x, &mut self.xw, &mut self.lut);
+        self.wh.gemv(state, &mut self.hw, &mut self.lut);
+        self.tail(state);
+    }
+
+    fn step_tokens(&mut self, tokens: &[usize], state: &mut [f32]) {
+        let batch = tokens.len();
+        if batch == 0 {
+            return;
+        }
+        let hid = self.hidden;
+        let n3 = 3 * hid;
+        debug_assert_eq!(state.len(), batch * hid);
+        if self.xw_b.len() < batch * n3 {
+            self.xw_b.resize(batch * n3, 0.0);
+            self.hw_b.resize(batch * n3, 0.0);
+        }
+        self.wx.gather_rows(tokens, &mut self.xw_b[..batch * n3]);
+        // the GRU state row IS the h row, so the state block is already
+        // the contiguous (batch, hidden) GEMM input
+        self.wh.gemm(&state[..batch * hid], batch,
+                     &mut self.hw_b[..batch * n3], &mut self.gemm);
+        let mut xw_b = std::mem::take(&mut self.xw_b);
+        self.gate_tail_rows(&mut xw_b[..batch * n3],
+                            &self.hw_b[..batch * n3], state);
+        self.xw_b = xw_b;
+    }
+
+    fn step_batch(&mut self, x: &[f32], batch: usize, state: &mut [f32]) {
+        if batch == 0 {
+            return;
+        }
+        let hid = self.hidden;
+        let n3 = 3 * hid;
+        debug_assert_eq!(x.len(), batch * self.wx.rows());
+        debug_assert_eq!(state.len(), batch * hid);
+        if self.xw_b.len() < batch * n3 {
+            self.xw_b.resize(batch * n3, 0.0);
+            self.hw_b.resize(batch * n3, 0.0);
+        }
+        self.wx.gemm(x, batch, &mut self.xw_b[..batch * n3], &mut self.gemm);
+        self.wh.gemm(&state[..batch * hid], batch,
+                     &mut self.hw_b[..batch * n3], &mut self.gemm);
+        let mut xw_b = std::mem::take(&mut self.xw_b);
+        self.gate_tail_rows(&mut xw_b[..batch * n3],
+                            &self.hw_b[..batch * n3], state);
+        self.xw_b = xw_b;
+    }
+
+    fn gate_tail_rows(&self, xw: &mut [f32], hw: &[f32], state: &mut [f32]) {
+        let hid = self.hidden;
+        let n3 = 3 * hid;
+        debug_assert_eq!(xw.len() % n3, 0);
+        let rows = xw.len() / n3;
+        debug_assert_eq!(hw.len(), rows * n3);
+        debug_assert_eq!(state.len(), rows * hid);
+        for b in 0..rows {
+            gru_gate_tail(&mut xw[b * n3..(b + 1) * n3],
+                          &hw[b * n3..(b + 1) * n3],
+                          &self.scale_x, &self.shift_x,
+                          &self.scale_h, &self.shift_h, &self.bias, hid,
+                          &mut state[b * hid..(b + 1) * hid]);
+        }
+    }
+
+    fn clone_cell(&self) -> Box<dyn RecurrentCell> {
+        Box::new(self.clone())
+    }
+}
+
+/// A depth-agnostic stack of packed recurrent layers.
+///
+/// Layer 0 consumes tokens (one-hot gather x-path); every layer `l ≥ 1`
+/// consumes the previous layer's h block as a dense input. All layers
+/// share one hidden width (enforced by [`PackedStack::new`]); cells may
+/// mix architectures in principle, though models built by
+/// `ModelWeights::build_stack` are homogeneous.
+///
+/// A stack's per-slot state row is the concatenation of its layers'
+/// state rows in layer order ([`PackedStack::state_width`] f32s); a
+/// zeroed row is the fresh-stream state. [`PackedStack::final_h`] reads
+/// the last layer's h (the LM-head input) out of such a row.
+///
+/// Cloning aliases every layer's `Arc`-backed planes (fresh scratch) —
+/// the cluster's zero-copy shard fan-out works for any depth.
+pub struct PackedStack {
+    layers: Vec<Box<dyn RecurrentCell>>,
+    hidden: usize,
+    // scratch for the library step paths (the engine shards its own)
+    x: Vec<f32>,
+    sb: Vec<f32>,
+}
+
+impl Clone for PackedStack {
+    fn clone(&self) -> Self {
+        Self {
+            layers: self.layers.iter().map(|c| c.clone_cell()).collect(),
+            hidden: self.hidden,
+            x: vec![],
+            sb: vec![],
+        }
+    }
+}
+
+impl PackedStack {
+    /// Chain `layers` (already built bottom-up). Every layer must share
+    /// layer 0's hidden width, and each layer `l ≥ 1` must consume
+    /// exactly `hidden` dense inputs (the previous layer's h).
+    pub fn new(layers: Vec<Box<dyn RecurrentCell>>) -> Result<Self> {
+        anyhow::ensure!(!layers.is_empty(),
+                        "a recurrent stack needs at least one layer");
+        let hidden = layers[0].hidden();
+        for (l, cell) in layers.iter().enumerate() {
+            anyhow::ensure!(cell.hidden() == hidden,
+                            "layer {l} hidden {} != layer 0 hidden {hidden}",
+                            cell.hidden());
+            if l > 0 {
+                anyhow::ensure!(
+                    cell.input_rows() == hidden,
+                    "layer {l} consumes {} dense inputs, want hidden \
+                     {hidden} (upper layers read the previous layer's h)",
+                    cell.input_rows());
+            }
+        }
+        Ok(Self { layers, hidden, x: vec![], sb: vec![] })
+    }
+
+    /// Number of layers.
+    pub fn layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Layer `l` (read-only; the engine's pool-sharded stages go through
+    /// this plus [`RecurrentCell::wx`]/[`RecurrentCell::wh`]/
+    /// [`RecurrentCell::gate_tail_rows`]).
+    pub fn layer(&self, l: usize) -> &dyn RecurrentCell {
+        &*self.layers[l]
+    }
+
+    /// Layer `l`, mutable (per-slot stepping uses the cell's scratch).
+    pub fn layer_mut(&mut self, l: usize) -> &mut dyn RecurrentCell {
+        &mut *self.layers[l]
+    }
+
+    /// Layer 0's architecture (stacks built by `build_stack` are
+    /// homogeneous).
+    pub fn arch(&self) -> CellArch {
+        self.layers[0].arch()
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// Layer 0's x-path rows (the token vocabulary for LM stacks).
+    pub fn input_rows(&self) -> usize {
+        self.layers[0].input_rows()
+    }
+
+    /// f32s of one slot's concatenated state row.
+    pub fn state_width(&self) -> usize {
+        self.layers.iter().map(|c| c.state_width()).sum()
+    }
+
+    /// Widest gate matrix across layers (engine scratch sizing).
+    pub fn max_gate_width(&self) -> usize {
+        self.layers.iter().map(|c| c.gate_width()).max().unwrap_or(0)
+    }
+
+    /// Total packed weight bytes across all layers.
+    pub fn weight_bytes(&self) -> usize {
+        self.layers.iter().map(|c| c.weight_bytes()).sum()
+    }
+
+    /// The last layer's h inside a concatenated state row — the LM-head
+    /// input after a step.
+    pub fn final_h<'a>(&self, state: &'a [f32]) -> &'a [f32] {
+        let last = self.layers.last().unwrap();
+        let off = self.state_width() - last.state_width();
+        &state[off..off + self.hidden]
+    }
+
+    /// Per-slot reference step: advance one stream by one token through
+    /// every layer. `state` is the slot's concatenated state row,
+    /// updated in place.
+    pub fn step_token(&mut self, token: usize, state: &mut [f32]) {
+        debug_assert_eq!(state.len(), self.state_width());
+        let hid = self.hidden;
+        let mut x = std::mem::take(&mut self.x);
+        let mut off = 0;
+        for (l, cell) in self.layers.iter_mut().enumerate() {
+            let sw = cell.state_width();
+            let st = &mut state[off..off + sw];
+            if l == 0 {
+                cell.step_token_slot(token, st);
+            } else {
+                cell.step_dense_slot(&x, st);
+            }
+            x.clear();
+            x.extend_from_slice(&st[..hid]);
+            off += sw;
+        }
+        self.x = x;
+    }
+
+    /// Batched step: advance `tokens.len()` streams at once. `state` is
+    /// row-major `(tokens.len(), state_width)`, updated in place. Each
+    /// row's trajectory is bit-identical to [`PackedStack::step_token`]
+    /// on that stream alone (per-layer contract of [`RecurrentCell`]).
+    pub fn step_tokens(&mut self, tokens: &[usize], state: &mut [f32]) {
+        let batch = tokens.len();
+        if batch == 0 {
+            return;
+        }
+        let total = self.state_width();
+        debug_assert_eq!(state.len(), batch * total);
+        let hid = self.hidden;
+        let mut x = std::mem::take(&mut self.x);
+        let mut sb = std::mem::take(&mut self.sb);
+        if x.len() < batch * hid {
+            x.resize(batch * hid, 0.0);
+        }
+        let mut off = 0;
+        for (l, cell) in self.layers.iter_mut().enumerate() {
+            let sw = cell.state_width();
+            if sb.len() < batch * sw {
+                sb.resize(batch * sw, 0.0);
+            }
+            // de-interleave this layer's state rows into a contiguous
+            // (batch, sw) block (copies don't change any computed bit)
+            for b in 0..batch {
+                sb[b * sw..(b + 1) * sw].copy_from_slice(
+                    &state[b * total + off..b * total + off + sw]);
+            }
+            if l == 0 {
+                cell.step_tokens(tokens, &mut sb[..batch * sw]);
+            } else {
+                cell.step_batch(&x[..batch * hid], batch,
+                                &mut sb[..batch * sw]);
+            }
+            for b in 0..batch {
+                state[b * total + off..b * total + off + sw]
+                    .copy_from_slice(&sb[b * sw..(b + 1) * sw]);
+                x[b * hid..(b + 1) * hid]
+                    .copy_from_slice(&sb[b * sw..b * sw + hid]);
+            }
+            off += sw;
+        }
+        self.x = x;
+        self.sb = sb;
+    }
+}
+
+/// The folded-BN LSTM gate tail over one stream's preactivations:
+/// identical op sequence whether the stream was stepped alone or in a
+/// batch.
 #[allow(clippy::too_many_arguments)]
-fn gate_tail(xw: &mut [f32], hw: &[f32], scale_x: &[f32], shift_x: &[f32],
-             scale_h: &[f32], shift_h: &[f32], bias: &[f32], hid: usize,
-             h: &mut [f32], c: &mut [f32]) {
+fn lstm_gate_tail(xw: &mut [f32], hw: &[f32], scale_x: &[f32],
+                  shift_x: &[f32], scale_h: &[f32], shift_h: &[f32],
+                  bias: &[f32], hid: usize, h: &mut [f32], c: &mut [f32]) {
     for j in 0..4 * hid {
         xw[j] = xw[j] * scale_x[j] + shift_x[j]
             + hw[j] * scale_h[j] + shift_h[j]
@@ -432,6 +1086,29 @@ fn gate_tail(xw: &mut [f32], hw: &[f32], scale_x: &[f32], shift_x: &[f32],
         let o = sigmoid(xw[3 * hid + k]);
         c[k] = f * c[k] + i * g;
         h[k] = o * c[k].tanh();
+    }
+}
+
+/// The folded-BN GRU gate tail over one stream's preactivations. Gate
+/// order [r, z, n]; the reset gate scales the BN'd recurrent candidate
+/// contribution. Fixed op order per element — bit-identical whether the
+/// stream was stepped alone or in a batch.
+#[allow(clippy::too_many_arguments)]
+fn gru_gate_tail(xw: &mut [f32], hw: &[f32], scale_x: &[f32],
+                 shift_x: &[f32], scale_h: &[f32], shift_h: &[f32],
+                 bias: &[f32], hid: usize, h: &mut [f32]) {
+    for j in 0..3 * hid {
+        xw[j] = xw[j] * scale_x[j] + shift_x[j] + bias[j];
+    }
+    for j in 0..2 * hid {
+        xw[j] += hw[j] * scale_h[j] + shift_h[j];
+    }
+    for k in 0..hid {
+        let r = sigmoid(xw[k]);
+        let z = sigmoid(xw[hid + k]);
+        let hn = hw[2 * hid + k] * scale_h[2 * hid + k] + shift_h[2 * hid + k];
+        let n = (xw[2 * hid + k] + r * hn).tanh();
+        h[k] = (1.0 - z) * n + z * h[k];
     }
 }
 
@@ -461,7 +1138,28 @@ mod tests {
         (cell, wx_dense, wh_dense)
     }
 
-    /// dense f32 reference of the same cell math.
+    fn mk_gru(input: usize, hid: usize, seed: u64)
+        -> (PackedGruCell, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let alpha = 0.13;
+        let n3 = 3 * hid;
+        let wx_dense: Vec<f32> = (0..input * n3)
+            .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+            .collect();
+        let wh_dense: Vec<f32> = (0..hid * n3)
+            .map(|_| [0.0, alpha, -alpha][rng.below_usize(3)])
+            .collect();
+        let cell = PackedGruCell::new(
+            Packed::Ternary(PackedTernary::pack(&wx_dense, input, n3, alpha)),
+            Packed::Ternary(PackedTernary::pack(&wh_dense, hid, n3, alpha)),
+            vec![1.0; n3], vec![0.0; n3], vec![1.0; n3], vec![0.0; n3],
+            (0..n3).map(|_| rng.normal_f32() * 0.1).collect(),
+        )
+        .unwrap();
+        (cell, wx_dense, wh_dense)
+    }
+
+    /// dense f32 reference of the same LSTM cell math.
     fn ref_step(wx: &[f32], wh: &[f32], bias: &[f32], vocab: usize, hid: usize,
                 token: usize, h: &mut Vec<f32>, c: &mut Vec<f32>) {
         let n4 = 4 * hid;
@@ -485,6 +1183,38 @@ mod tests {
         *h = hn;
     }
 
+    /// dense f32 reference of the GRU cell math (identity BN).
+    fn ref_gru_step(wx: &[f32], wh: &[f32], bias: &[f32], vocab: usize,
+                    hid: usize, token: usize, h: &mut [f32]) {
+        let n3 = 3 * hid;
+        let mut x = vec![0.0f32; vocab];
+        x[token] = 1.0;
+        let mut xw = vec![0.0; n3];
+        let mut hw = vec![0.0; n3];
+        gemv_f32(wx, vocab, n3, &x, &mut xw);
+        gemv_f32(wh, hid, n3, h, &mut hw);
+        let sig = |x: f32| 1.0 / (1.0 + (-x).exp());
+        for k in 0..hid {
+            let r = sig(xw[k] + hw[k] + bias[k]);
+            let z = sig(xw[hid + k] + hw[hid + k] + bias[hid + k]);
+            let n = (xw[2 * hid + k] + bias[2 * hid + k]
+                     + r * hw[2 * hid + k]).tanh();
+            h[k] = (1.0 - z) * n + z * h[k];
+        }
+    }
+
+    #[test]
+    fn arch_parse_roundtrip_and_error_lists_accepted() {
+        for a in CellArch::all() {
+            assert_eq!(CellArch::parse(a.label()).unwrap(), a);
+        }
+        assert_eq!(CellArch::Lstm.gates(), 4);
+        assert_eq!(CellArch::Gru.gates(), 3);
+        let err = format!("{:#}", CellArch::parse("rnn").unwrap_err());
+        assert!(err.contains("lstm") && err.contains("gru"),
+                "arch parse error must list accepted values: {err}");
+    }
+
     #[test]
     fn matches_dense_reference_over_trajectory() {
         let (mut cell, wx, wh, ) = mk_cell(50, 32, 9);
@@ -506,6 +1236,27 @@ mod tests {
     }
 
     #[test]
+    fn gru_matches_dense_reference_over_trajectory() {
+        let (mut cell, wx, wh) = mk_gru(40, 24, 15);
+        let bias = cell.bias.clone();
+        let mut state = vec![0.0f32; 24];
+        let mut hr = vec![0.0f32; 24];
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let tok = rng.below_usize(40);
+            cell.step_token_slot(tok, &mut state);
+            ref_gru_step(&wx, &wh, &bias, 40, 24, tok, &mut hr);
+            for k in 0..24 {
+                assert!((state[k] - hr[k]).abs() < 1e-4,
+                        "h[{k}]: {} vs {}", state[k], hr[k]);
+            }
+        }
+        // a GRU trajectory stays bounded (h is a convex mix of tanh
+        // outputs and its past self)
+        assert!(state.iter().all(|v| v.abs() <= 1.0 && v.is_finite()));
+    }
+
+    #[test]
     fn dense_and_token_paths_agree() {
         let (mut cell, _, _) = mk_cell(30, 16, 13);
         let mut h1 = vec![0.0f32; 16];
@@ -519,6 +1270,21 @@ mod tests {
         cell2.step_dense(&x, &mut h2, &mut c2);
         for k in 0..16 {
             assert!((h1[k] - h2[k]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gru_dense_and_token_paths_agree() {
+        let (mut a, _, _) = mk_gru(30, 16, 17);
+        let (mut b, _, _) = mk_gru(30, 16, 17);
+        let mut s1 = vec![0.0f32; 16];
+        let mut s2 = vec![0.0f32; 16];
+        a.step_token_slot(7, &mut s1);
+        let mut x = vec![0.0f32; 30];
+        x[7] = 1.0;
+        b.step_dense_slot(&x, &mut s2);
+        for k in 0..16 {
+            assert_eq!(s1[k].to_bits(), s2[k].to_bits(), "h[{k}]");
         }
     }
 
@@ -565,53 +1331,182 @@ mod tests {
 
     #[test]
     fn batched_step_matches_per_stream_bitwise() {
-        // two cells with identical weights: one stepped per stream, one
-        // stepped through the batched path — trajectories must not
-        // diverge by a single bit, for every packing layout.
+        // two cells with identical weights: one stepped per stream
+        // (trait per-slot reference), one stepped through the batched
+        // path — trajectories must not diverge by a single bit, for
+        // every packing layout.
         for planes in [false, true] {
-            let (mut a, wx, wh) = mk_cell(30, 20, 31);
+            let (a0, wx, wh) = mk_cell(30, 20, 31);
             let n4 = 4 * 20;
+            let sw = 2 * 20;
             let mk = |d: &[f32], rows: usize| {
                 let p = Packed::Ternary(PackedTernary::pack(d, rows, n4, 0.11));
                 if planes { p.to_planes() } else { p }
             };
-            let mut b = PackedLstmCell::new(
+            let mut a = PackedLstmCell::new(
                 mk(&wx, 30), mk(&wh, 20),
                 vec![1.0; n4], vec![0.0; n4], vec![1.0; n4], vec![0.0; n4],
-                a.bias.clone(),
+                a0.bias.clone(),
             )
             .unwrap();
-            if planes {
-                a = PackedLstmCell::new(
-                    mk(&wx, 30), mk(&wh, 20),
-                    vec![1.0; n4], vec![0.0; n4], vec![1.0; n4], vec![0.0; n4],
-                    b.bias.clone(),
-                )
-                .unwrap();
-            }
+            let mut b = a.clone();
             let batch = 5;
-            let mut hs = vec![vec![0.0f32; 20]; batch];
-            let mut cs = vec![vec![0.0f32; 20]; batch];
-            let mut hb = vec![0.0f32; batch * 20];
-            let mut cb = vec![0.0f32; batch * 20];
+            let mut ss = vec![vec![0.0f32; sw]; batch];
+            let mut sb = vec![0.0f32; batch * sw];
             let mut rng = Rng::new(37);
             for _ in 0..12 {
                 let toks: Vec<usize> =
                     (0..batch).map(|_| rng.below_usize(30)).collect();
                 for (s, &t) in toks.iter().enumerate() {
-                    a.step_token(t, &mut hs[s], &mut cs[s]);
+                    a.step_token_slot(t, &mut ss[s]);
                 }
-                b.step_tokens(&toks, &mut hb, &mut cb);
+                b.step_tokens(&toks, &mut sb);
                 for s in 0..batch {
-                    for k in 0..20 {
-                        assert_eq!(hs[s][k].to_bits(), hb[s * 20 + k].to_bits(),
-                                   "planes={planes} h[{s}][{k}]");
-                        assert_eq!(cs[s][k].to_bits(), cb[s * 20 + k].to_bits(),
-                                   "planes={planes} c[{s}][{k}]");
+                    for k in 0..sw {
+                        assert_eq!(ss[s][k].to_bits(),
+                                   sb[s * sw + k].to_bits(),
+                                   "planes={planes} state[{s}][{k}]");
                     }
                 }
             }
         }
+    }
+
+    #[test]
+    fn gru_batched_step_matches_per_stream_bitwise() {
+        for planes in [false, true] {
+            let (a0, wx, wh) = mk_gru(28, 20, 41);
+            let n3 = 3 * 20;
+            let mk = |d: &[f32], rows: usize| {
+                let p = Packed::Ternary(PackedTernary::pack(d, rows, n3, 0.13));
+                if planes { p.to_planes() } else { p }
+            };
+            let mut a = PackedGruCell::new(
+                mk(&wx, 28), mk(&wh, 20),
+                vec![1.0; n3], vec![0.0; n3], vec![1.0; n3], vec![0.0; n3],
+                a0.bias.clone(),
+            )
+            .unwrap();
+            let mut b = a.clone();
+            let batch = 5;
+            let mut ss = vec![vec![0.0f32; 20]; batch];
+            let mut sb = vec![0.0f32; batch * 20];
+            let mut rng = Rng::new(43);
+            for _ in 0..12 {
+                let toks: Vec<usize> =
+                    (0..batch).map(|_| rng.below_usize(28)).collect();
+                for (s, &t) in toks.iter().enumerate() {
+                    a.step_token_slot(t, &mut ss[s]);
+                }
+                b.step_tokens(&toks, &mut sb);
+                for s in 0..batch {
+                    for k in 0..20 {
+                        assert_eq!(ss[s][k].to_bits(),
+                                   sb[s * 20 + k].to_bits(),
+                                   "planes={planes} h[{s}][{k}]");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stack_chains_layers_and_matches_manual_chain_bitwise() {
+        // a 2-layer stack must be exactly "layer 0, then layer 1 fed
+        // layer 0's h" — per slot and batched, to the bit.
+        for gru in [false, true] {
+            let (l0, l1): (Box<dyn RecurrentCell>, Box<dyn RecurrentCell>) =
+                if gru {
+                    (Box::new(mk_gru(26, 18, 51).0),
+                     Box::new(mk_gru(18, 18, 53).0))
+                } else {
+                    (Box::new(mk_cell(26, 18, 51).0),
+                     Box::new(mk_cell(18, 18, 53).0))
+                };
+            let mut m0 = l0.clone_cell();
+            let mut m1 = l1.clone_cell();
+            let mut stack = PackedStack::new(vec![l0, l1]).unwrap();
+            assert_eq!(stack.layers(), 2);
+            assert_eq!(stack.hidden(), 18);
+            let sw0 = m0.state_width();
+            let sw1 = m1.state_width();
+            assert_eq!(stack.state_width(), sw0 + sw1);
+            let mut state = vec![0.0f32; sw0 + sw1];
+            let mut s0 = vec![0.0f32; sw0];
+            let mut s1 = vec![0.0f32; sw1];
+            let mut rng = Rng::new(57);
+            for _ in 0..10 {
+                let tok = rng.below_usize(26);
+                stack.step_token(tok, &mut state);
+                m0.step_token_slot(tok, &mut s0);
+                let h0: Vec<f32> = s0[..18].to_vec();
+                m1.step_dense_slot(&h0, &mut s1);
+                for k in 0..sw0 {
+                    assert_eq!(state[k].to_bits(), s0[k].to_bits(),
+                               "gru={gru} layer0 state[{k}]");
+                }
+                for k in 0..sw1 {
+                    assert_eq!(state[sw0 + k].to_bits(), s1[k].to_bits(),
+                               "gru={gru} layer1 state[{k}]");
+                }
+                assert_eq!(stack.final_h(&state), &s1[..18]);
+            }
+        }
+    }
+
+    #[test]
+    fn stack_batched_matches_per_slot_bitwise() {
+        for gru in [false, true] {
+            let mk_stack = || -> PackedStack {
+                let layers: Vec<Box<dyn RecurrentCell>> = if gru {
+                    vec![Box::new(mk_gru(24, 14, 61).0),
+                         Box::new(mk_gru(14, 14, 63).0)]
+                } else {
+                    vec![Box::new(mk_cell(24, 14, 61).0),
+                         Box::new(mk_cell(14, 14, 63).0)]
+                };
+                PackedStack::new(layers).unwrap()
+            };
+            let mut per_slot = mk_stack();
+            let mut batched = mk_stack();
+            let total = per_slot.state_width();
+            let batch = 4;
+            let mut ss = vec![vec![0.0f32; total]; batch];
+            let mut sb = vec![0.0f32; batch * total];
+            let mut rng = Rng::new(67);
+            for _ in 0..8 {
+                let toks: Vec<usize> =
+                    (0..batch).map(|_| rng.below_usize(24)).collect();
+                for (s, &t) in toks.iter().enumerate() {
+                    per_slot.step_token(t, &mut ss[s]);
+                }
+                batched.step_tokens(&toks, &mut sb);
+                for s in 0..batch {
+                    for k in 0..total {
+                        assert_eq!(ss[s][k].to_bits(),
+                                   sb[s * total + k].to_bits(),
+                                   "gru={gru} state[{s}][{k}]");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stack_rejects_mismatched_layers() {
+        // hidden mismatch between layers
+        let bad = PackedStack::new(vec![
+            Box::new(mk_cell(20, 12, 71).0) as Box<dyn RecurrentCell>,
+            Box::new(mk_cell(12, 16, 73).0),
+        ]);
+        assert!(bad.is_err());
+        // layer 1 input width != hidden
+        let bad = PackedStack::new(vec![
+            Box::new(mk_cell(20, 12, 71).0) as Box<dyn RecurrentCell>,
+            Box::new(mk_cell(20, 12, 73).0),
+        ]);
+        assert!(bad.is_err());
+        assert!(PackedStack::new(vec![]).is_err());
     }
 
     #[test]
@@ -640,10 +1535,33 @@ mod tests {
     }
 
     #[test]
+    fn cloned_stack_shares_planes_for_every_layer() {
+        let stack = PackedStack::new(vec![
+            Box::new(mk_gru(20, 12, 81).0) as Box<dyn RecurrentCell>,
+            Box::new(mk_gru(12, 12, 83).0),
+        ])
+        .unwrap();
+        let copy = stack.clone();
+        for l in 0..2 {
+            assert_eq!(stack.layer(l).wh().plane_ptr(),
+                       copy.layer(l).wh().plane_ptr());
+            assert_eq!(stack.layer(l).wx().plane_ptr(),
+                       copy.layer(l).wx().plane_ptr());
+            assert_eq!(stack.layer(l).wh().plane_owners(), 2);
+        }
+        assert_eq!(copy.weight_bytes(), stack.weight_bytes());
+        drop(copy);
+        assert_eq!(stack.layer(0).wh().plane_owners(), 1);
+    }
+
+    #[test]
     fn footprint_is_packed() {
         let (cell, _, _) = mk_cell(50, 32, 21);
         // ternary: 2 bits/weight (+ padding) vs 4 bytes dense
         let dense = (50 + 32) * 4 * 32 * 4;
         assert!(cell.weight_bytes() * 8 < dense, "{}", cell.weight_bytes());
+        let (gru, _, _) = mk_gru(50, 32, 21);
+        let dense_gru = (50 + 32) * 3 * 32 * 4;
+        assert!(RecurrentCell::weight_bytes(&gru) * 8 < dense_gru);
     }
 }

@@ -6,21 +6,10 @@
 //! softmax head are excluded (checked against the published numbers in
 //! the unit tests below: e.g. word-PTB small = 8·300·300·4 B = 2880 KB).
 
-/// Cell kind for parameter counting.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Cell {
-    Lstm,
-    Gru,
-}
-
-impl Cell {
-    pub fn gates(self) -> usize {
-        match self {
-            Cell::Lstm => 4,
-            Cell::Gru => 3,
-        }
-    }
-}
+/// Cell kind for parameter counting — the same [`CellArch`] the serving
+/// stack dispatches on ([`super::cell`]), so accounting and serving can
+/// never disagree about gate counts.
+pub type Cell = super::cell::CellArch;
 
 /// Number of recurrent weights of one layer: W_x (d_in, g·h) + W_h (h, g·h).
 pub fn layer_weight_params(cell: Cell, d_in: usize, hidden: usize) -> usize {

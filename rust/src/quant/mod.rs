@@ -11,7 +11,8 @@ pub mod pack;
 pub mod planes;
 pub mod simd;
 
-pub use cell::{Packed, PackedLstmCell};
+pub use cell::{CellArch, GateParams, Packed, PackedGruCell, PackedLstmCell,
+               PackedStack, RecurrentCell};
 pub use gemm::{gemm_binary_lut, gemm_ternary_lut, gemm_ternary_planes,
                GemmScratch};
 pub use simd::{F32x8, SharedOut};

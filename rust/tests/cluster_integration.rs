@@ -2,9 +2,11 @@
 //! semantic refinement of the single `InferenceServer` —
 //!
 //! * **Cluster equivalence**: for a fixed greedy request set, shards ∈
-//!   {1, 2, 4} × both routing policies produce bit-identical generated
-//!   tokens and prompt log-probs to the single-server reference.
-//!   Routing decides where/when a request runs, never what it computes.
+//!   {1, 2, 4} × both routing policies × `{lstm, gru}` × layers
+//!   `{1, 2}` produce bit-identical generated tokens and prompt
+//!   log-probs to the single-server reference. Routing decides
+//!   where/when a request runs, never what it computes — for any cell
+//!   arch at any depth.
 //! * **One resident weight copy**: plane bytes are allocated once per
 //!   model — asserted via `Arc::strong_count` (template + one owner per
 //!   live shard cell) and plane pointer identity, never once per shard.
@@ -19,7 +21,8 @@
 
 use rbtw::cluster::{run_cluster_load, RoutePolicy, ServingCluster};
 use rbtw::coordinator::{InferenceServer, LoadSpec, Request, Response};
-use rbtw::engine::{self, BackendKind, BackendSpec, ModelWeights, SharedModel};
+use rbtw::engine::{self, BackendKind, BackendSpec, CellArch, ModelWeights,
+                   RecurrentCell, SharedModel};
 
 #[path = "digest.rs"]
 mod digest;
@@ -66,18 +69,25 @@ fn assert_same_responses(label: &str, got: &[Response], want: &[Response]) {
 
 #[test]
 fn cluster_matches_single_server_for_every_shard_count_and_policy() {
-    for (kind, quant) in [(BackendKind::PackedCpu, "ter"),
-                          (BackendKind::PackedPlanes, "ter"),
-                          (BackendKind::PackedCpu, "bin")] {
-        let weights = ModelWeights::synthetic(26, 18, quant, 0x5A1);
-        let spec = BackendSpec::with(kind, 4, 9);
+    for (kind, quant, arch, layers) in [
+        (BackendKind::PackedCpu, "ter", CellArch::Lstm, 1),
+        (BackendKind::PackedPlanes, "ter", CellArch::Lstm, 2),
+        (BackendKind::PackedCpu, "bin", CellArch::Gru, 1),
+        (BackendKind::PackedPlanes, "ter", CellArch::Gru, 2),
+    ] {
+        let weights = ModelWeights::synthetic_arch(26, 18, arch, layers,
+                                                   quant, 0x5A1);
+        let spec = BackendSpec::with(kind, 4, 9).with_arch(arch, layers);
         let reqs = staggered_requests(26, 14);
         let want = single_server_reference(&weights, &spec, &reqs);
         let shared = SharedModel::prepare(&weights, kind, 9).unwrap();
+        assert_eq!(shared.arch(), arch);
+        assert_eq!(shared.layers(), layers);
         for shards in [1usize, 2, 4] {
             for policy in RoutePolicy::all() {
-                let label = format!("{} {quant} shards={shards} {policy}",
-                                    kind.label());
+                let label = format!("{} {quant} {} x{layers} \
+                                     shards={shards} {policy}",
+                                    kind.label(), arch.label());
                 let mut cluster = ServingCluster::new(
                     &shared, &spec.with_shards(shards), 64, policy).unwrap();
                 for r in &reqs {
@@ -103,30 +113,40 @@ fn cluster_matches_single_server_for_every_shard_count_and_policy() {
 
 #[test]
 fn plane_bytes_allocated_once_per_model_not_per_shard() {
-    let weights = ModelWeights::synthetic(24, 16, "ter", 0x9D);
+    // a 2-layer GRU: sharing must hold per layer, not just for layer 0
+    let weights = ModelWeights::synthetic_arch(24, 16, CellArch::Gru, 2,
+                                               "ter", 0x9D);
     for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
         let shared = SharedModel::prepare(&weights, kind, 5).unwrap();
         assert_eq!(shared.plane_owners(), 1, "fresh model: sole owner");
         let base = shared.weight_bytes();
-        let wh_ptr = shared.cell().wh.plane_ptr();
-        let wx_ptr = shared.cell().wx.plane_ptr();
+        let plane_ptrs: Vec<(*const u64, *const u64)> = (0..2)
+            .map(|l| (shared.stack().layer(l).wh().plane_ptr(),
+                      shared.stack().layer(l).wx().plane_ptr()))
+            .collect();
         for shards in [1usize, 2, 4] {
             let spec = BackendSpec::with(kind, 3, 5).with_shards(shards);
             let cluster = ServingCluster::new(&shared, &spec, 8,
                                               RoutePolicy::LeastLoaded)
                 .unwrap();
-            // one owner per live shard cell + the template, regardless
+            // one owner per live shard stack + the template, regardless
             // of how many engines are serving — pointer identity plus
-            // refcount prove zero plane bytes were copied
-            assert_eq!(shared.plane_owners(), 1 + shards,
-                       "{} shards={shards}", kind.label());
-            assert_eq!(shared.cell().wh.plane_ptr(), wh_ptr);
-            assert_eq!(shared.cell().wx.plane_ptr(), wx_ptr);
+            // refcount prove zero plane bytes were copied, for EVERY
+            // layer
+            for l in 0..2 {
+                assert_eq!(shared.stack().layer(l).wh().plane_owners(),
+                           1 + shards, "{} layer {l} shards={shards}",
+                           kind.label());
+                assert_eq!(shared.stack().layer(l).wh().plane_ptr(),
+                           plane_ptrs[l].0);
+                assert_eq!(shared.stack().layer(l).wx().plane_ptr(),
+                           plane_ptrs[l].1);
+            }
             // resident accounting is per model and constant in shards
             assert_eq!(cluster.weight_bytes(), base);
             drop(cluster);
             assert_eq!(shared.plane_owners(), 1,
-                       "shard cells must die with the cluster");
+                       "shard stacks must die with the cluster");
         }
     }
 }
@@ -258,9 +278,13 @@ fn digest_responses(mut responses: Vec<Response>) -> u64 {
 #[test]
 fn cluster_digest_is_shard_invariant() {
     let shards = digest_shards();
-    let weights = ModelWeights::synthetic(30, 20, "ter", 0xD16);
+    // a 2-layer GRU model: the ci.sh shards=1-vs-2 digest diff now also
+    // covers the stacked/GRU serving path end to end
+    let weights = ModelWeights::synthetic_arch(30, 20, CellArch::Gru, 2,
+                                               "ter", 0xD16);
     let spec = BackendSpec::with(BackendKind::PackedPlanes, 4, 11)
-        .with_shards(shards);
+        .with_shards(shards)
+        .with_arch(CellArch::Gru, 2);
     let load = LoadSpec { n_requests: 20, prompt_len: 5, gen_len: 8,
                           temperature: 0.0, seed: 0x1CE };
     // reference: the identical request set through one InferenceServer

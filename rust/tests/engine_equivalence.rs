@@ -12,19 +12,20 @@
 //!   PjrtDense re-samples stochastic deployment weights every step, so
 //!   only a loose distributional bound holds.
 //! * seed-matrix suite: packed-cpu/packed-planes × per-slot/batched
-//!   GEMM, all bit-for-bit, with an FNV digest per seed that `ci.sh`
-//!   compares across two runs to catch nondeterminism. The batched
-//!   configs honor `RBTW_THREADS` (worker threads for the sharded
-//!   SIMD-tiled path; default 1), and `ci.sh` runs the suite once with
-//!   `RBTW_THREADS=1` and once with `RBTW_THREADS=4`: a digest mismatch
-//!   means thread count leaked into the logits — a serving bug even if
-//!   each run is internally consistent.
+//!   GEMM × `{lstm, gru}` × layers `{1, 2}`, all bit-for-bit, with an
+//!   FNV digest per seed that `ci.sh` compares across two runs to catch
+//!   nondeterminism. The batched configs honor `RBTW_THREADS` (worker
+//!   threads for the sharded SIMD-tiled path; default 1), and `ci.sh`
+//!   runs the suite once with `RBTW_THREADS=1` and once with
+//!   `RBTW_THREADS=4`: a digest mismatch means thread count leaked into
+//!   the logits — a serving bug even if each run is internally
+//!   consistent.
 
 use std::path::PathBuf;
 
-use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights,
-                   PackedBackend};
-use rbtw::quant::{gemv_f32, Packed};
+use rbtw::engine::{self, BackendKind, BackendSpec, CellArch, InferBackend,
+                   ModelWeights, PackedBackend};
+use rbtw::quant::{gemv_f32, Packed, RecurrentCell};
 use rbtw::util::Rng;
 
 #[path = "digest.rs"]
@@ -110,23 +111,26 @@ fn digest_threads() -> usize {
     }
 }
 
-/// The full cross-backend × cross-path equivalence matrix for one seed:
-/// packed-cpu / packed-planes, each stepped per-slot and batched, over
-/// a mixed active/idle schedule — all four logit streams must agree bit
-/// for bit. Returns an FNV-1a digest of the (single, shared) stream so
-/// repeated runs can be compared for nondeterminism (and, across
-/// different `RBTW_THREADS` values, for thread-count invariance).
-fn equivalence_digest(seed: u64) -> u64 {
+/// The full cross-backend × cross-path equivalence matrix for one
+/// (seed, arch, layers) config: packed-cpu / packed-planes, each
+/// stepped per-slot and batched, over a mixed active/idle schedule —
+/// all four logit streams must agree bit for bit. Returns an FNV-1a
+/// digest of the (single, shared) stream so repeated runs can be
+/// compared for nondeterminism (and, across different `RBTW_THREADS`
+/// values, for thread-count invariance).
+fn equivalence_digest(seed: u64, arch: CellArch, layers: usize) -> u64 {
     let vocab = 30 + (seed as usize % 7);
     let hidden = 17 + (seed as usize % 5); // never a multiple of 64
     let quantizer = if seed % 2 == 0 { "ter" } else { "bin" };
-    let w = ModelWeights::synthetic(vocab, hidden, quantizer, seed);
+    let w = ModelWeights::synthetic_arch(vocab, hidden, arch, layers,
+                                         quantizer, seed);
     let sched = schedule(5, 20, vocab, seed ^ 0x9E37);
     let mut streams = vec![];
     for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
         for batched in [false, true] {
             let mut spec = BackendSpec::with(kind, 5, seed ^ 3)
-                .with_threads(digest_threads());
+                .with_threads(digest_threads())
+                .with_arch(arch, layers);
             spec.batch_gemm = batched;
             let mut b = engine::from_weights(&w, &spec).unwrap();
             streams.push(drive(&mut *b, &sched));
@@ -134,10 +138,12 @@ fn equivalence_digest(seed: u64) -> u64 {
     }
     let first = &streams[0];
     for (si, s) in streams.iter().enumerate().skip(1) {
-        assert_eq!(s.len(), first.len(), "seed {seed} config {si}");
+        assert_eq!(s.len(), first.len(),
+                   "seed {seed} {} x{layers} config {si}", arch.label());
         for (i, (x, y)) in first.iter().zip(s).enumerate() {
             assert_eq!(x.to_bits(), y.to_bits(),
-                       "seed {seed} config {si} logit {i}: {x} vs {y}");
+                       "seed {seed} {} x{layers} config {si} logit {i}: \
+                        {x} vs {y}", arch.label());
         }
     }
     let mut hash = digest::FNV_OFFSET;
@@ -147,22 +153,32 @@ fn equivalence_digest(seed: u64) -> u64 {
     hash
 }
 
-/// Seed-matrix equivalence + determinism hook. `ci.sh` runs this test
-/// twice with `RBTW_EQUIV_DIGEST` pointing at two files and diffs them:
-/// any run-to-run nondeterminism in the packed serving paths changes
-/// the digest and fails CI.
+/// Seed-matrix equivalence + determinism hook over
+/// `{lstm, gru} × layers {1, 2}`. `ci.sh` runs this test twice with
+/// `RBTW_EQUIV_DIGEST` pointing at two files and diffs them: any
+/// run-to-run nondeterminism in the packed serving paths — shallow or
+/// stacked, LSTM or GRU — changes the digest and fails CI.
 #[test]
 fn seed_matrix_equivalence_is_deterministic() {
-    let seeds: [u64; 4] = [0xA1, 0xB2, 0xC3, 0xD4];
-    let digests: Vec<u64> = seeds.iter().map(|&s| equivalence_digest(s)).collect();
-    // within-process determinism: the same seed must reproduce exactly
-    assert_eq!(equivalence_digest(seeds[0]), digests[0],
+    let configs: [(u64, CellArch, usize); 4] = [
+        (0xA1, CellArch::Lstm, 1),
+        (0xB2, CellArch::Gru, 1),
+        (0xC3, CellArch::Lstm, 2),
+        (0xD4, CellArch::Gru, 2),
+    ];
+    let digests: Vec<u64> = configs
+        .iter()
+        .map(|&(s, a, l)| equivalence_digest(s, a, l))
+        .collect();
+    // within-process determinism: the same config must reproduce exactly
+    let (s0, a0, l0) = configs[0];
+    assert_eq!(equivalence_digest(s0, a0, l0), digests[0],
                "same-seed replay diverged within one process");
     if let Ok(path) = std::env::var("RBTW_EQUIV_DIGEST") {
-        let lines: Vec<String> = seeds
+        let lines: Vec<String> = configs
             .iter()
             .zip(&digests)
-            .map(|(s, d)| format!("{s:#x}:{d:016x}"))
+            .map(|((s, a, l), d)| format!("{s:#x}:{}x{l}:{d:016x}", a.label()))
             .collect();
         std::fs::write(&path, lines.join("\n") + "\n")
             .unwrap_or_else(|e| panic!("writing {path}: {e}"));
@@ -188,7 +204,8 @@ struct DenseRef {
 
 impl DenseRef {
     fn from_backend(b: &PackedBackend, w: &ModelWeights) -> Self {
-        let cell = b.cell();
+        // single-layer LSTM reference: layer 0 of the served stack
+        let cell = b.stack().layer(0);
         let unpack = |p: &Packed| -> Vec<f32> {
             match p {
                 Packed::Binary(m) => m.unpack(),
@@ -196,16 +213,17 @@ impl DenseRef {
                 Packed::Planes(_) => panic!("use the LUT backend here"),
             }
         };
+        let gp = cell.gate_params();
         let (_, head_w) = w.param("head/w").unwrap();
         let (_, head_b) = w.param("head/b").unwrap();
         Self {
-            wx: unpack(&cell.wx),
-            wh: unpack(&cell.wh),
-            scale_x: cell.scale_x.clone(),
-            shift_x: cell.shift_x.clone(),
-            scale_h: cell.scale_h.clone(),
-            shift_h: cell.shift_h.clone(),
-            bias: cell.bias.clone(),
+            wx: unpack(cell.wx()),
+            wh: unpack(cell.wh()),
+            scale_x: gp.scale_x.to_vec(),
+            shift_x: gp.shift_x.to_vec(),
+            scale_h: gp.scale_h.to_vec(),
+            shift_h: gp.shift_h.to_vec(),
+            bias: gp.bias.to_vec(),
             head_w: head_w.to_vec(),
             head_b: head_b.to_vec(),
             vocab: w.vocab,

@@ -12,15 +12,60 @@
 //!   and non-word-aligned dims
 //! * the packed serving backend's batched step equals the per-slot step
 //!   bit for bit under random slot-activity masks (incl. all-idle and
-//!   single-slot batches)
+//!   single-slot batches) — for `{lstm, gru} × layers {1, 2}`
 //! * the thread pool is invisible in the logits: `threads = N` equals
 //!   `threads = 1` bit for bit under random slot-activity masks, for
-//!   every packing layout
+//!   every packing layout, arch and depth
+//! * a 2-layer `PackedStack` equals manually chaining two single-layer
+//!   cells (layer 0 token step, layer 1 dense step on layer 0's h) —
+//!   bit for bit, per arch and packing layout
+//! * the GRU batched `step_tokens` equals its per-slot GEMV reference
+//!   (`step_token_slot`) bit for bit
 
 use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
-use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, GemmScratch,
-                  LutScratch, Packed, PackedBinary, PackedTernary};
+use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, CellArch, GemmScratch,
+                  LutScratch, Packed, PackedBinary, PackedGruCell,
+                  PackedLstmCell, PackedStack, PackedTernary, RecurrentCell};
 use rbtw::util::prop::{self, assert_that};
+use rbtw::util::prop::Gen;
+
+/// A random packed cell of `arch` with `input` x-path rows, identity BN
+/// and a small random bias — ternary or (for LSTM) binary per `layout`:
+/// 0 = binary (LSTM only), 1 = ternary LUT, 2 = ternary planes.
+fn random_cell(g: &mut Gen, arch: CellArch, input: usize, hid: usize,
+               layout: usize) -> Box<dyn RecurrentCell> {
+    let gw = arch.gates() * hid;
+    let alpha = g.f32_in(0.05, 0.5);
+    let pack = |data: &[f32], rows: usize| -> Packed {
+        match layout {
+            0 => Packed::Binary(PackedBinary::pack(data, rows, gw, alpha)),
+            1 => Packed::Ternary(PackedTernary::pack(data, rows, gw, alpha)),
+            _ => Packed::Ternary(PackedTernary::pack(data, rows, gw, alpha))
+                .to_planes(),
+        }
+    };
+    let wx_dense: Vec<f32> = if layout == 0 {
+        g.binary_vec(input * gw).iter().map(|x| x * alpha).collect()
+    } else {
+        g.ternary_vec(input * gw).iter().map(|x| x * alpha).collect()
+    };
+    let wh_dense: Vec<f32> = if layout == 0 {
+        g.binary_vec(hid * gw).iter().map(|x| x * alpha).collect()
+    } else {
+        g.ternary_vec(hid * gw).iter().map(|x| x * alpha).collect()
+    };
+    let bias = g.f32_vec(gw, -0.2, 0.2);
+    match arch {
+        CellArch::Lstm => Box::new(PackedLstmCell::new(
+            pack(&wx_dense, input), pack(&wh_dense, hid),
+            vec![1.0; gw], vec![0.0; gw], vec![1.0; gw], vec![0.0; gw],
+            bias).unwrap()),
+        CellArch::Gru => Box::new(PackedGruCell::new(
+            pack(&wx_dense, input), pack(&wh_dense, hid),
+            vec![1.0; gw], vec![0.0; gw], vec![1.0; gw], vec![0.0; gw],
+            bias).unwrap()),
+    }
+}
 
 #[test]
 fn prop_binary_pack_roundtrip() {
@@ -206,11 +251,101 @@ fn prop_batched_gemm_equals_per_slot_gemv() {
 }
 
 #[test]
+fn prop_two_layer_stack_equals_manual_chain_bitwise() {
+    // The stack contract: a 2-layer PackedStack is EXACTLY "step layer
+    // 0 on the token, then step layer 1 on layer 0's fresh h" — per
+    // arch, per packing layout, per slot and batched, to the bit.
+    prop::check("2-layer stack == manual chain", 40, |g| {
+        let vocab = g.usize_in(4, 30);
+        let hid = g.usize_in(2, 16);
+        let arch = if g.bool() { CellArch::Lstm } else { CellArch::Gru };
+        let layout = if arch == CellArch::Lstm { g.usize_in(0, 2) }
+                     else { g.usize_in(1, 2) };
+        let steps = g.usize_in(2, 8);
+        let l0 = random_cell(g, arch, vocab, hid, layout);
+        let l1 = random_cell(g, arch, hid, hid, layout);
+        let mut m0 = l0.clone_cell();
+        let mut m1 = l1.clone_cell();
+        let sw = m0.state_width();
+        let mut stack = PackedStack::new(vec![l0, l1])
+            .map_err(|e| format!("stack build: {e:#}"))?;
+        let mut batched = stack.clone();
+        let total = stack.state_width();
+        let mut state = vec![0.0f32; total];
+        let mut bstate = vec![0.0f32; total];
+        let mut s0 = vec![0.0f32; sw];
+        let mut s1 = vec![0.0f32; sw];
+        for _ in 0..steps {
+            let tok = g.usize_in(0, vocab - 1);
+            stack.step_token(tok, &mut state);
+            batched.step_tokens(&[tok], &mut bstate);
+            m0.step_token_slot(tok, &mut s0);
+            let h0: Vec<f32> = s0[..hid].to_vec();
+            m1.step_dense_slot(&h0, &mut s1);
+            for k in 0..sw {
+                assert_that(
+                    state[k].to_bits() == s0[k].to_bits(),
+                    format!("{arch} layout {layout} layer0 state[{k}]: \
+                             stack {} manual {}", state[k], s0[k]))?;
+                assert_that(
+                    state[sw + k].to_bits() == s1[k].to_bits(),
+                    format!("{arch} layout {layout} layer1 state[{k}]: \
+                             stack {} manual {}", state[sw + k], s1[k]))?;
+            }
+            for k in 0..total {
+                assert_that(
+                    bstate[k].to_bits() == state[k].to_bits(),
+                    format!("{arch} layout {layout} batched state[{k}]"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gru_batched_step_tokens_equals_per_slot_reference() {
+    // The GRU twin of the LSTM tentpole invariant: one weight stream
+    // per step for all streams must reproduce the per-slot GEMV
+    // reference bit for bit, for batch widths straddling the 8-lane
+    // tile and both ternary layouts.
+    prop::check("gru batched == per-slot", 40, |g| {
+        let vocab = g.usize_in(4, 30);
+        let hid = g.usize_in(2, 20);
+        let layout = g.usize_in(1, 2);
+        let batch = [1, 7, 8, 9, g.usize_in(1, 6)][g.usize_in(0, 4)];
+        let steps = g.usize_in(2, 6);
+        let cell = random_cell(g, CellArch::Gru, vocab, hid, layout);
+        let mut per_slot = cell.clone_cell();
+        let mut batched = cell.clone_cell();
+        let mut ss = vec![vec![0.0f32; hid]; batch];
+        let mut sb = vec![0.0f32; batch * hid];
+        for _ in 0..steps {
+            let toks: Vec<usize> =
+                (0..batch).map(|_| g.usize_in(0, vocab - 1)).collect();
+            for (s, &t) in toks.iter().enumerate() {
+                per_slot.step_token_slot(t, &mut ss[s]);
+            }
+            batched.step_tokens(&toks, &mut sb);
+            for s in 0..batch {
+                for k in 0..hid {
+                    assert_that(
+                        ss[s][k].to_bits() == sb[s * hid + k].to_bits(),
+                        format!("layout {layout} batch {batch} h[{s}][{k}]: \
+                                 per-slot {} batched {}",
+                                ss[s][k], sb[s * hid + k]))?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_backend_batched_step_equals_per_slot_under_masks() {
     // End-to-end over the serving backend: random slot-activity masks
     // (holes, all-idle steps, single-slot backends) must give identical
     // logits on the batched-GEMM and per-slot-GEMV paths — bit for bit,
-    // including untouched idle rows.
+    // including untouched idle rows — for every arch × depth.
     prop::check("backend batched == per-slot", 25, |g| {
         let vocab = g.usize_in(6, 26);
         let hidden = g.usize_in(3, 18); // keeps rows non-word-aligned
@@ -219,9 +354,13 @@ fn prop_backend_batched_step_equals_per_slot_under_masks() {
         let quantizer = if g.bool() { "ter" } else { "bin" };
         let kind = if g.bool() { BackendKind::PackedPlanes }
                    else { BackendKind::PackedCpu };
+        let arch = if g.bool() { CellArch::Lstm } else { CellArch::Gru };
+        let layers = g.usize_in(1, 2);
         let seed = 0x700 + g.case as u64;
-        let w = ModelWeights::synthetic(vocab, hidden, quantizer, seed);
-        let spec = BackendSpec::with(kind, slots, seed ^ 1);
+        let w = ModelWeights::synthetic_arch(vocab, hidden, arch, layers,
+                                             quantizer, seed);
+        let spec = BackendSpec::with(kind, slots, seed ^ 1)
+            .with_arch(arch, layers);
         let mut batched = engine::from_weights(&w, &spec)
             .map_err(|e| format!("build batched: {e:#}"))?;
         let mut per_slot = engine::from_weights(&w, &spec.per_slot())
@@ -279,9 +418,13 @@ fn prop_backend_threads_bit_identical() {
         let quantizer = if g.bool() { "ter" } else { "bin" };
         let kind = if g.bool() { BackendKind::PackedPlanes }
                    else { BackendKind::PackedCpu };
+        let arch = if g.bool() { CellArch::Lstm } else { CellArch::Gru };
+        let layers = g.usize_in(1, 2);
         let seed = 0x9100 + g.case as u64;
-        let w = ModelWeights::synthetic(vocab, hidden, quantizer, seed);
-        let spec = BackendSpec::with(kind, slots, seed ^ 1);
+        let w = ModelWeights::synthetic_arch(vocab, hidden, arch, layers,
+                                             quantizer, seed);
+        let spec = BackendSpec::with(kind, slots, seed ^ 1)
+            .with_arch(arch, layers);
         let mut one = engine::from_weights(&w, &spec.with_threads(1))
             .map_err(|e| format!("build threads=1: {e:#}"))?;
         let mut many = engine::from_weights(&w, &spec.with_threads(threads))
