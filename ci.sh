@@ -72,6 +72,59 @@ fi
 echo "cluster digests identical across shard counts (1 vs 2):"
 cat target/cluster_digest_1.txt
 
+# Front-door smoke: a real `rbtw serve --listen` process on an ephemeral
+# loopback port, driven by the netclient example over TCP, must produce a
+# greedy digest BIT-IDENTICAL to the same load served in-process (no
+# sockets). The wire carries prompt log-probs as raw f64 bits, so one
+# flipped token or mantissa bit anywhere in the framing/pump path splits
+# the digests. `--drain` ends the server gracefully; a hung server trips
+# the timeout.
+echo "== front door smoke (wire digest vs in-process digest) =="
+cargo build --release --example netclient
+rm -f target/frontdoor_server.log
+./target/release/rbtw serve synthetic --listen 127.0.0.1:0 \
+    --shards 2 --slots 4 > target/frontdoor_server.log < /dev/null &
+SRV=$!
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/^listening on //p' target/frontdoor_server.log | head -n1)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SRV" 2>/dev/null; then
+        echo "FAIL: serve --listen exited before binding:"
+        cat target/frontdoor_server.log
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "FAIL: serve --listen never printed its address:"
+    cat target/frontdoor_server.log
+    kill "$SRV" 2>/dev/null || true
+    exit 1
+fi
+WIRE_OUT=$(timeout 120 ./target/release/examples/netclient \
+    --connect "$ADDR" --drain)
+if ! wait "$SRV"; then
+    echo "FAIL: serve --listen exited non-zero after drain:"
+    cat target/frontdoor_server.log
+    exit 1
+fi
+LOCAL_OUT=$(timeout 120 ./target/release/examples/netclient --local \
+    --shards 2 --slots 4)
+WIRE_DIGEST=$(printf '%s\n' "$WIRE_OUT" | sed -n 's/^greedy://p')
+LOCAL_DIGEST=$(printf '%s\n' "$LOCAL_OUT" | sed -n 's/^greedy://p')
+if [ -z "$WIRE_DIGEST" ] || [ -z "$LOCAL_DIGEST" ]; then
+    echo "FAIL: netclient did not print a greedy digest"
+    printf 'wire:\n%s\nlocal:\n%s\n' "$WIRE_OUT" "$LOCAL_OUT"
+    exit 1
+fi
+if [ "$WIRE_DIGEST" != "$LOCAL_DIGEST" ]; then
+    echo "FAIL: wire digest $WIRE_DIGEST != in-process digest $LOCAL_DIGEST"
+    echo "      (the TCP front door perturbed a greedy response)"
+    exit 1
+fi
+echo "front-door digest identical over TCP and in-process: $WIRE_DIGEST"
+
 # The seed code predates rustfmt; keep the check advisory unless
 # RBTW_CI_STRICT_FMT=1 (flip once the tree is formatted).
 if cargo fmt --version >/dev/null 2>&1; then

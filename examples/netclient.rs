@@ -1,0 +1,155 @@
+//! Front-door wire client vs in-process reference — the digest gate.
+//!
+//!   # terminal 1: serve the synthetic model over TCP
+//!   cargo run --release -- serve synthetic --listen 127.0.0.1:4250 \
+//!       --shards 2 --slots 4 < /dev/null
+//!
+//!   # terminal 2: drive the same greedy load over the socket
+//!   cargo run --release --example netclient -- --connect 127.0.0.1:4250
+//!
+//!   # reference: the identical load served in-process (no sockets)
+//!   cargo run --release --example netclient -- --local
+//!
+//! Both modes build the SAME deterministic greedy load
+//! (`LoadSpec::requests`, temperature 0) against the SAME model
+//! (`ModelWeights::synthetic_serving`, the shape `rbtw serve synthetic`
+//! builds) and print one `greedy:<fnv1a64>` digest over the id-sorted
+//! responses — ids, generated tokens, and the raw f64 bits of each
+//! prompt log-prob. The wire carries the log-prob as bits
+//! (`done ... <logprob_bits>`), so if serving over TCP perturbs a
+//! single token or a single mantissa bit anywhere, the two digests
+//! split. `ci.sh` runs both and compares.
+//!
+//! `--drain` additionally asks the server to drain and shut down after
+//! the load completes (what ci.sh uses to end the smoke server).
+
+use rbtw::cluster::run_cluster_load;
+use rbtw::config::ServeSpec;
+use rbtw::coordinator::LoadSpec;
+use rbtw::engine::{BackendSpec, CellArch, ModelWeights, SharedModel};
+use rbtw::frontdoor::{FrontDoorClient, WireOutcome};
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn feed(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// One digest shape for both transports: (id, tokens, logprob bits)
+/// per response, sorted by id.
+fn digest(mut rows: Vec<(u64, Vec<i32>, u64)>) -> u64 {
+    rows.sort_by_key(|r| r.0);
+    let mut h = FNV_OFFSET;
+    for (id, tokens, logprob_bits) in rows {
+        feed(&mut h, &id.to_le_bytes());
+        for t in tokens {
+            feed(&mut h, &t.to_le_bytes());
+        }
+        feed(&mut h, &logprob_bits.to_le_bytes());
+    }
+    h
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn usize_flag(args: &[String], name: &str, default: usize)
+    -> anyhow::Result<usize> {
+    match flag(args, name) {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!(
+            "{name} takes a non-negative integer, got '{s}'")),
+        None => Ok(default),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let connect = flag(&args, "--connect");
+    let local = args.iter().any(|a| a == "--local");
+    anyhow::ensure!(connect.is_some() != local,
+                    "pick exactly one mode: --connect HOST:PORT or --local");
+    let n_requests = usize_flag(&args, "--requests", 24)?.max(1);
+    let prompt_len = usize_flag(&args, "--prompt-len", 8)?.max(1);
+    let gen_len = usize_flag(&args, "--gen-len", 12)?.max(1);
+    let window = usize_flag(&args, "--window", 32)?.max(1);
+    let shards = usize_flag(&args, "--shards", 2)?.max(1);
+    let slots = usize_flag(&args, "--slots", 4)?.max(1);
+    let arch = match flag(&args, "--arch") {
+        Some(a) => CellArch::parse(&a)?,
+        None => CellArch::Lstm,
+    };
+    let layers = usize_flag(&args, "--layers", 1)?
+        .clamp(1, BackendSpec::MAX_LAYERS);
+    let drain = args.iter().any(|a| a == "--drain");
+
+    // identical greedy load for both transports: temperature 0 makes
+    // every response a pure function of model + prompt
+    let weights = ModelWeights::synthetic_serving(arch, layers);
+    let load = LoadSpec {
+        n_requests,
+        prompt_len,
+        gen_len,
+        temperature: 0.0,
+        seed: 0xD007,
+    };
+    let requests = load.requests(weights.vocab);
+
+    let rows: Vec<(u64, Vec<i32>, u64)> = if let Some(addr) = connect {
+        let mut client = FrontDoorClient::connect(&addr)?;
+        client.ping()?;
+        let t0 = std::time::Instant::now();
+        let outcomes = client.run_greedy(&requests, window)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mut rows = Vec::with_capacity(outcomes.len());
+        for o in outcomes {
+            match o {
+                WireOutcome::Done(r) => {
+                    rows.push((r.id, r.tokens, r.logprob_bits));
+                }
+                WireOutcome::Busy(id) => anyhow::bail!(
+                    "request {id} refused: server overloaded (busy)"),
+                WireOutcome::Closing(id) => anyhow::bail!(
+                    "request {id} refused: server draining"),
+                WireOutcome::Failed { id, msg } => anyhow::bail!(
+                    "request {id} failed: {msg}"),
+            }
+        }
+        let tokens: usize = rows.iter().map(|r| r.1.len()).sum();
+        println!("wire: {} responses over {addr} in {wall:.2}s \
+                  ({:.0} tok/s end-to-end)",
+                 rows.len(), tokens as f64 / wall);
+        if drain {
+            let ack = client.drain_server()?;
+            println!("server ack: {ack}");
+        }
+        rows
+    } else {
+        let mut sspec = ServeSpec::default();
+        sspec.arch = arch;
+        sspec.layers = layers;
+        sspec.shards = shards;
+        sspec.slots = slots;
+        let shared =
+            SharedModel::prepare(&weights, sspec.backend, sspec.sample_seed)?;
+        let report = run_cluster_load(&shared, &sspec.backend_spec(),
+                                      sspec.policy, sspec.queue_cap, &load)?;
+        println!("local: {} responses in-process ({:.0} tok/s)",
+                 report.responses.len(), report.tokens_per_sec());
+        report.responses.into_iter()
+            .map(|cr| (cr.response.id, cr.response.generated,
+                       cr.response.prompt_logprob.to_bits()))
+            .collect()
+    };
+
+    anyhow::ensure!(rows.len() == n_requests,
+                    "expected {n_requests} responses, got {}", rows.len());
+    println!("greedy:{:016x}", digest(rows));
+    Ok(())
+}

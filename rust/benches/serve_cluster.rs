@@ -1,30 +1,36 @@
 //! Cluster serving bench: the sharded `ServingCluster` under one
 //! continuous-batching load, swept over shards {1, 2, 4} × per-shard
-//! slots {4, 16, 64}. Reports whole-cluster and per-shard tokens/sec,
-//! p50/p95/p99 latency and — the point of the exercise — the resident
-//! packed weight bytes, which stay CONSTANT as shards grow: every shard
-//! aliases the one `Arc`-backed plane allocation, so horizontal
-//! scale-out adds slot state, never weight memory (the multi-engine
-//! extension of the paper's §6 12× memory saving).
+//! slots {4, 16, 64} — plus an arch × depth axis (GRU, stacked layers)
+//! over the same cluster substrate. Reports whole-cluster and per-shard
+//! tokens/sec, p50/p95/p99 latency and — the point of the exercise —
+//! the resident packed weight bytes, which stay CONSTANT as shards
+//! grow: every shard aliases the one `Arc`-backed plane allocation, so
+//! horizontal scale-out adds slot state, never weight memory (the
+//! multi-engine extension of the paper's §6 12× memory saving).
 //!
 //! Two gates enforce this, and they do different jobs: the LIVE-fleet
-//! `plane_owners == 1 + shards` check on every config is the actual
-//! duplication detector (a regression that copied plane bytes per shard
-//! would leave the shared model as sole owner and fail it); the
-//! constant-resident-bytes check at the end pins the per-model
-//! accounting that the owners gate makes truthful. Writes
+//! `plane_owners == 2 + shards` check on every config is the actual
+//! duplication detector (template + the cluster's own handle for
+//! `add_shard` + one ALIASING cell per running shard; a regression that
+//! copied plane bytes per shard would leave the count at 2 and fail
+//! it); the constant-resident-bytes check at the end pins the per-model
+//! accounting that the owners gate makes truthful — per model, so per
+//! (arch, layers) group on the arch axis. Writes
 //! `BENCH_serve_cluster.json`.
 //!
 //! Uses the `char_ptb_ter` artifact when built, otherwise a synthetic
-//! ternary BN-LSTM stand-in (h=256 so the recurrent matmul dominates).
+//! ternary BN-LSTM stand-in (h=256 so the recurrent matmul dominates);
+//! the arch axis always runs synthetic models (artifacts carry their
+//! own shape).
 
 mod common;
 
 use std::collections::BTreeMap;
 
-use rbtw::cluster::{RoutePolicy, ServingCluster};
+use rbtw::cluster::{ClusterReport, RoutePolicy, ServingCluster};
 use rbtw::coordinator::LoadSpec;
-use rbtw::engine::{BackendKind, BackendSpec, ModelWeights, SharedModel};
+use rbtw::engine::{BackendKind, BackendSpec, CellArch, ModelWeights,
+                   SharedModel};
 use rbtw::util::table::Table;
 use rbtw::util::Json;
 
@@ -33,6 +39,32 @@ fn obj(entries: Vec<(&str, Json)>) -> Json {
         .into_iter()
         .map(|(k, v)| (k.to_string(), v))
         .collect::<BTreeMap<_, _>>())
+}
+
+/// One swept config: build a cluster over `shared`, serve `load`, gate
+/// the live plane-owner count, and return the drained report.
+fn run_config(shared: &SharedModel, spec: &BackendSpec, policy: RoutePolicy,
+              load: &LoadSpec, label: &str) -> anyhow::Result<ClusterReport> {
+    let mut cluster =
+        ServingCluster::new(shared, spec, load.n_requests.max(1), policy)?;
+    // live-fleet duplication detector: the template + the cluster's own
+    // model handle (kept so add_shard can build engines later) + one
+    // ALIASING cell per running shard. If from_shared ever regressed to
+    // copying plane bytes, the count would stay 2 and this gate — not
+    // the (per-model, so necessarily constant) resident column — fails.
+    anyhow::ensure!(shared.plane_owners() == 2 + spec.shards,
+                    "{label}: expected 2+{} plane owners, got {}",
+                    spec.shards, shared.plane_owners());
+    let vocab = cluster.vocab();
+    for req in load.requests(vocab) {
+        cluster.submit(req)?;
+    }
+    let report = cluster.drain()?;
+    // drained cluster: its model handle and every shard cell died with
+    // it, leaving the template as sole owner again — no leak
+    anyhow::ensure!(shared.plane_owners() == 1,
+                    "shard cells must not outlive the cluster");
+    Ok(report)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -51,18 +83,21 @@ fn main() -> anyhow::Result<()> {
     let slot_counts = [4usize, 16, 64];
     let policy = RoutePolicy::LeastLoaded;
 
-    let mut t = Table::new(&["backend", "shards", "slots/shard", "req",
-                             "tok/s", "vs 1 shard", "p50 ms", "p95 ms",
-                             "p99 ms", "weights B (resident)"]);
+    let mut t = Table::new(&["backend", "arch", "shards", "slots/shard",
+                             "req", "tok/s", "vs 1 shard", "p50 ms",
+                             "p95 ms", "p99 ms", "weights B (resident)"]);
     let mut rows = vec![];
-    let mut resident_seen: BTreeMap<&'static str, Vec<usize>> = BTreeMap::new();
+    // resident bytes must be constant within each (kind, arch, layers)
+    // group — the kinds/models themselves may differ
+    let mut resident_seen: BTreeMap<String, Vec<usize>> = BTreeMap::new();
     for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
         // prepare ONCE per kind: the whole sweep serves from this one
         // packed weight set
         let shared = SharedModel::prepare(&weights, kind, 3)?;
-        let before_owners = shared.plane_owners();
-        anyhow::ensure!(before_owners == 1,
+        anyhow::ensure!(shared.plane_owners() == 1,
                         "fresh shared model must be sole plane owner");
+        let arch_label = format!("{}x{}", shared.arch().label(),
+                                 shared.layers());
         for &slots in &slot_counts {
             let reqs = common::scaled(4 * slots).max(2 * slots);
             let load = LoadSpec { n_requests: reqs, prompt_len: 4,
@@ -71,61 +106,29 @@ fn main() -> anyhow::Result<()> {
             for &shards in &shard_counts {
                 let spec = BackendSpec::with(kind, slots, 3)
                     .with_shards(shards);
-                let mut cluster = match ServingCluster::new(
-                    &shared, &spec, load.n_requests.max(1), policy) {
-                    Ok(c) => c,
+                let label = format!("{} {shards}x{slots}", kind.label());
+                let report = match run_config(&shared, &spec, policy, &load,
+                                              &label) {
+                    Ok(r) => r,
                     Err(e) => {
-                        eprintln!("  [{} {shards}x{slots}] failed: {e:#}",
-                                  kind.label());
+                        eprintln!("  [{label}] failed: {e:#}");
                         continue;
                     }
                 };
-                // live-fleet duplication detector: exactly the template
-                // + one ALIASING cell per running shard. If from_shared
-                // ever regressed to copying plane bytes, the count
-                // would stay 1 and this gate — not the (per-model, so
-                // necessarily constant) resident column below — fails.
-                anyhow::ensure!(shared.plane_owners() == 1 + shards,
-                                "{} {shards}x{slots}: expected 1+{shards} \
-                                 plane owners, got {}", kind.label(),
-                                shared.plane_owners());
-                let vocab = cluster.vocab();
-                let report = {
-                    let mut failed = false;
-                    for req in load.requests(vocab) {
-                        if let Err(e) = cluster.submit(req) {
-                            eprintln!("  [{} {shards}x{slots}] submit: {e:#}",
-                                      kind.label());
-                            failed = true;
-                            break;
-                        }
-                    }
-                    if failed {
-                        continue;
-                    }
-                    match cluster.drain() {
-                        Ok(r) => r,
-                        Err(e) => {
-                            eprintln!("  [{} {shards}x{slots}] drain: {e:#}",
-                                      kind.label());
-                            continue;
-                        }
-                    }
-                };
-                // drained cluster: every shard cell died with it,
-                // leaving the template as sole owner again — no leak
-                anyhow::ensure!(shared.plane_owners() == 1,
-                                "shard cells must not outlive the cluster");
                 let tps = report.tokens_per_sec();
                 if shards == 1 {
                     one_shard_tps = Some(tps);
                 }
                 let vs1 = one_shard_tps.map(|t1| tps / t1.max(1e-9));
                 let resident = shared.weight_bytes();
-                resident_seen.entry(kind.label()).or_default().push(resident);
+                resident_seen
+                    .entry(format!("{}/{arch_label}", kind.label()))
+                    .or_default()
+                    .push(resident);
                 let s = &report.stats;
                 t.row(&[
                     kind.label().into(),
+                    arch_label.clone(),
                     shards.to_string(),
                     slots.to_string(),
                     s.completed.to_string(),
@@ -143,6 +146,8 @@ fn main() -> anyhow::Result<()> {
                     .collect();
                 let mut fields = vec![
                     ("backend", Json::Str(kind.label().to_string())),
+                    ("arch", Json::Str(shared.arch().label().to_string())),
+                    ("layers", Json::Num(shared.layers() as f64)),
                     ("shards", Json::Num(shards as f64)),
                     ("slots_per_shard", Json::Num(slots as f64)),
                     ("requests", Json::Num(s.completed as f64)),
@@ -164,11 +169,83 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+
+    // arch × depth axis: GRU and stacked models over the same cluster
+    // substrate — per-model resident bytes constant as shards grow,
+    // exactly like the LSTM sweep above
+    let arch_axis = [(CellArch::Gru, 1usize), (CellArch::Gru, 2),
+                     (CellArch::Lstm, 2)];
+    let kind = BackendKind::PackedCpu;
+    for (arch, layers) in arch_axis {
+        let w = ModelWeights::synthetic_arch(50, 256, arch, layers,
+                                             "ter", 0xC1057);
+        let shared = SharedModel::prepare(&w, kind, 3)?;
+        let arch_label = format!("{}x{layers}", arch.label());
+        let slots = 8usize;
+        let load = LoadSpec { n_requests: common::scaled(4 * slots).max(16),
+                              prompt_len: 4, gen_len: 12,
+                              temperature: 0.7, seed: 31 };
+        let mut one_shard_tps: Option<f64> = None;
+        for shards in [1usize, 2] {
+            let spec = BackendSpec::with(kind, slots, 3)
+                .with_shards(shards)
+                .with_arch(arch, layers);
+            let label = format!("{} {arch_label} {shards}x{slots}",
+                                kind.label());
+            let report = match run_config(&shared, &spec, policy, &load,
+                                          &label) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("  [{label}] failed: {e:#}");
+                    continue;
+                }
+            };
+            let tps = report.tokens_per_sec();
+            if shards == 1 {
+                one_shard_tps = Some(tps);
+            }
+            let vs1 = one_shard_tps.map(|t1| tps / t1.max(1e-9));
+            let resident = shared.weight_bytes();
+            resident_seen
+                .entry(format!("{}/{arch_label}", kind.label()))
+                .or_default()
+                .push(resident);
+            let s = &report.stats;
+            t.row(&[
+                kind.label().into(),
+                arch_label.clone(),
+                shards.to_string(),
+                slots.to_string(),
+                s.completed.to_string(),
+                format!("{tps:.0}"),
+                vs1.map(|v| format!("{v:.2}x")).unwrap_or_else(|| "-".into()),
+                format!("{:.2}", s.total.p50_ms),
+                format!("{:.2}", s.total.p95_ms),
+                format!("{:.2}", s.total.p99_ms),
+                resident.to_string(),
+            ]);
+            rows.push(obj(vec![
+                ("backend", Json::Str(kind.label().to_string())),
+                ("arch", Json::Str(arch.label().to_string())),
+                ("layers", Json::Num(layers as f64)),
+                ("shards", Json::Num(shards as f64)),
+                ("slots_per_shard", Json::Num(slots as f64)),
+                ("requests", Json::Num(s.completed as f64)),
+                ("policy", Json::Str(policy.label().to_string())),
+                ("tokens_per_sec", Json::Num(tps)),
+                ("p50_ms", Json::Num(s.total.p50_ms)),
+                ("p95_ms", Json::Num(s.total.p95_ms)),
+                ("p99_ms", Json::Num(s.total.p99_ms)),
+                ("engine_steps", Json::Num(s.engine_steps as f64)),
+                ("weight_bytes_resident", Json::Num(resident as f64)),
+            ]));
+        }
+    }
     t.print();
 
-    // the acceptance gate: resident weight bytes constant per kind
-    // (the kinds themselves may differ — sign/mask vs pos/neg layouts),
-    // i.e. every config of a kind reports the identical footprint.
+    // the acceptance gate: resident weight bytes constant within every
+    // (kind, arch, layers) group — every config of a group reports the
+    // identical footprint no matter the shard/slot counts.
     let constant = resident_seen
         .values()
         .all(|seen| seen.windows(2).all(|w| w[0] == w[1]));
@@ -176,8 +253,8 @@ fn main() -> anyhow::Result<()> {
                     "resident weight bytes varied across the shard sweep: \
                      {resident_seen:?}");
     println!("\nresident packed weight bytes constant across shards \
-              {shard_counts:?} x slots {slot_counts:?} — scale-out adds \
-              engines, not weight memory");
+              {shard_counts:?} x slots {slot_counts:?} (and the arch \
+              axis) — scale-out adds engines, not weight memory");
 
     let report = obj(vec![
         ("bench", Json::Str("serve_cluster".into())),

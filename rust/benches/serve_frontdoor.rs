@@ -1,0 +1,159 @@
+//! Front-door hop bench: what does the TCP + framing + pump path cost
+//! on top of in-process cluster serving?
+//!
+//! One `FrontDoor` (2 shards × 16 slots over one shared packed weight
+//! set, loopback ephemeral port) serves a sweep of payload size
+//! (prompt_len {1, 8, 32, 128}) × concurrent connections {1, 4, 16}.
+//! Every connection runs its requests sequentially (window 1), so each
+//! measured round-trip is a full wire hop: encode → socket → reader →
+//! cluster queue → shard → pump → `tok` stream → `done`. Per-cell
+//! round-trip p50/p95/p99 across all connections goes to
+//! `BENCH_serve_frontdoor.json`.
+//!
+//! Greedy decoding means every response is also checked for shape
+//! (exactly gen_len tokens) — a hop that drops or reorders frames fails
+//! the bench rather than skewing it.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use rbtw::cluster::{RoutePolicy, ServingCluster};
+use rbtw::coordinator::Request;
+use rbtw::engine::{BackendKind, BackendSpec, CellArch, ModelWeights,
+                   SharedModel};
+use rbtw::frontdoor::{FrontDoor, FrontDoorClient, WireOutcome};
+use rbtw::util::stats::LatencySummary;
+use rbtw::util::table::Table;
+use rbtw::util::{Json, Rng};
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect::<BTreeMap<_, _>>())
+}
+
+const GEN_LEN: usize = 8;
+
+/// One connection's share of a cell: sequential greedy requests, each
+/// timed wire-to-wire. Returns per-request round-trip millis.
+fn drive_conn(addr: &str, vocab: usize, prompt_len: usize, requests: usize,
+              seed: u64) -> anyhow::Result<Vec<f64>> {
+    let mut client = FrontDoorClient::connect(addr)?;
+    let mut rng = Rng::new(seed);
+    let mut ms = Vec::with_capacity(requests);
+    for id in 0..requests as u64 {
+        let req = Request {
+            id,
+            prompt: (0..prompt_len)
+                .map(|_| rng.below(vocab as u64) as i32)
+                .collect(),
+            gen_len: GEN_LEN,
+            temperature: 0.0,
+        };
+        let t0 = Instant::now();
+        let outcomes = client.run_greedy(std::slice::from_ref(&req), 1)?;
+        let dt = t0.elapsed().as_secs_f64() * 1e3;
+        match outcomes.into_iter().next() {
+            Some(WireOutcome::Done(r)) => anyhow::ensure!(
+                r.tokens.len() == GEN_LEN,
+                "request {id}: {} tokens streamed, expected {GEN_LEN}",
+                r.tokens.len()),
+            other => anyhow::bail!("request {id} not served: {other:?}"),
+        }
+        ms.push(dt);
+    }
+    Ok(ms)
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("front door: wire hop latency over payload x connections");
+    let weights = ModelWeights::synthetic_serving(CellArch::Lstm, 1);
+    let vocab = weights.vocab;
+    let kind = BackendKind::PackedCpu;
+    let spec = BackendSpec::with(kind, 16, 3).with_shards(2);
+    let shared = SharedModel::prepare(&weights, kind, spec.sample_seed)?;
+    let cluster = ServingCluster::new(&shared, &spec, 256,
+                                      RoutePolicy::LeastLoaded)?;
+    let fd = FrontDoor::serve(cluster, "127.0.0.1:0")?;
+    let addr = fd.local_addr().to_string();
+    println!("serving {} ({} x{} layer(s)) on {addr}: 2 shards x 16 slots\n",
+             shared.name(), shared.arch().label(), shared.layers());
+
+    let prompt_lens = [1usize, 8, 32, 128];
+    let conn_counts = [1usize, 4, 16];
+    let per_conn = common::scaled(12).clamp(3, 64);
+
+    let mut t = Table::new(&["prompt", "conns", "req", "hop p50 ms",
+                             "p95 ms", "p99 ms", "max ms", "req/s"]);
+    let mut rows = vec![];
+    for &prompt_len in &prompt_lens {
+        for &conns in &conn_counts {
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..conns)
+                .map(|c| {
+                    let addr = addr.clone();
+                    std::thread::spawn(move || {
+                        drive_conn(&addr, vocab, prompt_len, per_conn,
+                                   0xF00D + c as u64)
+                    })
+                })
+                .collect();
+            let mut ms = Vec::with_capacity(conns * per_conn);
+            for h in handles {
+                ms.extend(h.join().expect("conn thread panicked")?);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let n = ms.len();
+            let sum = LatencySummary::from_ms(&ms);
+            let rps = n as f64 / wall;
+            t.row(&[
+                prompt_len.to_string(),
+                conns.to_string(),
+                n.to_string(),
+                format!("{:.2}", sum.p50_ms),
+                format!("{:.2}", sum.p95_ms),
+                format!("{:.2}", sum.p99_ms),
+                format!("{:.2}", sum.max_ms),
+                format!("{rps:.0}"),
+            ]);
+            rows.push(obj(vec![
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("connections", Json::Num(conns as f64)),
+                ("requests", Json::Num(n as f64)),
+                ("gen_len", Json::Num(GEN_LEN as f64)),
+                ("hop_p50_ms", Json::Num(sum.p50_ms)),
+                ("hop_p95_ms", Json::Num(sum.p95_ms)),
+                ("hop_p99_ms", Json::Num(sum.p99_ms)),
+                ("hop_mean_ms", Json::Num(sum.mean_ms)),
+                ("hop_max_ms", Json::Num(sum.max_ms)),
+                ("requests_per_sec", Json::Num(rps)),
+            ]));
+        }
+    }
+    t.print();
+
+    let report = fd.drain()?;
+    let served = report.stats.completed;
+    let expected = (prompt_lens.len()
+        * conn_counts.iter().sum::<usize>()
+        * per_conn) as u64;
+    anyhow::ensure!(served == expected,
+                    "cluster served {served} requests, sweep sent {expected}");
+    println!("\nserver drained: {served} requests, zero accepted-loss");
+
+    let out = obj(vec![
+        ("bench", Json::Str("serve_frontdoor".into())),
+        ("model", Json::Str(shared.name().to_string())),
+        ("backend", Json::Str(kind.label().to_string())),
+        ("shards", Json::Num(2.0)),
+        ("slots_per_shard", Json::Num(16.0)),
+        ("per_conn_requests", Json::Num(per_conn as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_serve_frontdoor.json", format!("{out}\n"))?;
+    println!("wrote BENCH_serve_frontdoor.json");
+    Ok(())
+}

@@ -1,5 +1,5 @@
 //! Sharded serving cluster: one shared packed weight set, N engine-shard
-//! workers, one async router.
+//! workers, one async router — with live fleet operations.
 //!
 //! This is the "beyond one box" rung of the ROADMAP: the paper's §6
 //! argument makes the weight stream the scarce resource, and PR 2/3
@@ -18,33 +18,58 @@
 //! deployment weights are sampled, packed and BN-folded once, and every
 //! shard's cell is a clone that aliases the same `Arc`-backed plane
 //! allocations (see [`crate::quant::pack`]). Growing the cluster adds
-//! slot state and scratch — tens of KB — never plane bytes;
-//! `rust/tests/cluster_integration.rs` pins this down with
-//! `Arc::strong_count` and pointer-identity assertions, and the
+//! slot state and scratch — tens of KB — never plane bytes; that is
+//! also what makes [`ServingCluster::add_shard`] cheap enough to call
+//! while serving. `rust/tests/cluster_integration.rs` pins this down
+//! with `Arc::strong_count` and pointer-identity assertions, and the
 //! `serve_cluster` bench reports constant resident weight bytes across
 //! shard counts.
 //!
 //! ## Architecture
 //!
-//! * **Front door**: clients [`ServingCluster::submit`] into a bounded
-//!   MPMC queue ([`BoundedQueue`]); a full queue fails fast
-//!   (backpressure), a draining cluster rejects new work but completes
-//!   everything accepted.
+//! * **Front door**: clients [`ServingCluster::submit`] (or
+//!   [`ServingCluster::try_submit`] for the typed refusal) into a
+//!   bounded MPMC queue ([`BoundedQueue`]); a full queue fails fast with
+//!   [`SubmitRefused::Full`] (backpressure — "overloaded, retry"), a
+//!   draining cluster refuses with [`SubmitRefused::Draining`]
+//!   ("shutting down") but completes everything accepted.
 //! * **Router**: one async thread pops the front queue and dispatches to
 //!   per-shard bounded inboxes under a pluggable [`RoutePolicy`] —
 //!   `least-loaded` (default: argmin of in-flight requests) or
-//!   `round-robin`. A full inbox blocks the router, propagating
-//!   pressure back to the front door instead of buffering unboundedly.
+//!   `round-robin`. The route table is shared and mutable: shards can be
+//!   added and removed while the router runs. A full inbox blocks the
+//!   router, propagating pressure back to the front door; a closed inbox
+//!   (shard removed, or its worker died) makes the router re-route the
+//!   request to a surviving shard — accepted work is never dropped by a
+//!   topology change.
 //! * **Shard workers**: each owns an `InferenceServer` over a
 //!   [`from_shared`] backend and runs the continuous-batching loop —
 //!   admit from inbox, step all active slots, emit completions. The
 //!   single-server code path IS the 1-shard special case; the cluster
-//!   adds routing around it, never a second decode loop.
-//! * **Completions**: per-shard channels merge into one response stream
-//!   (`mpsc` sender clones); [`ServingCluster::drain`] closes the front
-//!   door, lets every accepted request finish, joins all threads and
-//!   returns the merged responses plus [`ClusterStats`] (per-shard and
-//!   whole-cluster tokens/sec, p50/p95/p99 latency).
+//!   adds routing around it, never a second decode loop. Workers publish
+//!   their counters through atomics so [`ServingCluster::live_stats`]
+//!   can snapshot a running fleet without stopping it.
+//! * **Completions**: per-shard channels merge into one response stream.
+//!   In-process callers read it via [`ServingCluster::try_recv`] or let
+//!   [`ServingCluster::drain`] collect it; a streaming consumer (the
+//!   network front door, [`crate::frontdoor`]) takes ownership of the
+//!   receiver with [`ServingCluster::take_responses`] and forwards each
+//!   response as it lands.
+//!
+//! ## Live shard add / remove
+//!
+//! [`ServingCluster::add_shard`] builds a new engine from the stored
+//! [`SharedModel`] (a refcount bump per plane, no byte copies), spawns
+//! its worker and publishes it to the route table — new requests start
+//! landing on it immediately. [`ServingCluster::remove_shard`] is a
+//! graceful per-shard drain: the shard leaves the route table (no new
+//! work), its inbox is closed (queued work still drains — a closed
+//! [`BoundedQueue`] hands out everything already queued), the worker
+//! finishes every admitted request and exits, and its final counters
+//! move to the retired list so cluster totals never lose history. The
+//! router re-routes any request it was about to place on the removed
+//! shard. Zero accepted-request loss in both directions is asserted by
+//! `rust/tests/frontdoor_integration.rs` under live load.
 //!
 //! ## Why shard outputs are bit-identical to a single server
 //!
@@ -55,12 +80,13 @@
 //! greedy sampling plus the prompt log-prob are pure functions of the
 //! logits. Routing therefore only decides *where* and *when* a request
 //! runs, never *what* it computes: for a greedy request set, a cluster
-//! with any shard count and either policy produces bit-identical
-//! generated tokens and prompt log-probs to one `InferenceServer` —
-//! enforced by `cluster_integration.rs` and the `ci.sh` shards=1 vs
-//! shards=2 digest diff. (At temperature > 0, sampled tokens depend on
-//! each server's rng stream and therefore on scheduling; equivalence is
-//! a greedy-decoding guarantee.)
+//! with any shard count and either policy — even one whose shard set
+//! changes mid-load — produces bit-identical generated tokens and
+//! prompt log-probs to one `InferenceServer` — enforced by
+//! `cluster_integration.rs` and the `ci.sh` shards=1 vs shards=2 digest
+//! diff. (At temperature > 0, sampled tokens depend on each server's
+//! rng stream and therefore on scheduling; equivalence is a
+//! greedy-decoding guarantee.)
 
 mod queue;
 mod stats;
@@ -69,16 +95,16 @@ pub use queue::{BoundedQueue, PushRefused};
 pub use stats::{ClusterStats, ShardStats};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{latency_breakdown, validate_request,
-                         InferenceServer, LoadSpec, Request, Response,
-                         ServerStats};
+use crate::coordinator::{validate_request, InferenceServer, LoadSpec,
+                         Request, Response, ServerStats};
 use crate::engine::{from_shared, BackendSpec, SharedModel, ThreadPool};
+use crate::util::stats::LatencySummary;
 
 /// How the router assigns requests to engine shards.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -126,6 +152,36 @@ impl std::fmt::Display for RoutePolicy {
     }
 }
 
+/// Why [`ServingCluster::try_submit`] refused a request — the typed
+/// split the front door needs to answer "overloaded, retry later"
+/// differently from "shutting down" on the wire (mirrors
+/// [`PushRefused`], plus validation).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitRefused {
+    /// The bounded front door is at capacity — backpressure; shed load
+    /// or retry later. `pending` is the queue depth observed at refusal.
+    Full { pending: usize },
+    /// The cluster is draining — no new work is accepted (everything
+    /// already accepted still completes).
+    Draining,
+    /// The request failed validation and was never enqueued.
+    Invalid(String),
+}
+
+impl std::fmt::Display for SubmitRefused {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitRefused::Full { pending } => write!(
+                f, "cluster queue full ({pending} pending)"),
+            SubmitRefused::Draining => write!(
+                f, "cluster is draining; no new requests accepted"),
+            SubmitRefused::Invalid(msg) => write!(f, "invalid request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitRefused {}
+
 /// A completed request, tagged with the shard that served it.
 #[derive(Clone, Debug)]
 pub struct ClusterResponse {
@@ -137,6 +193,10 @@ pub struct ClusterResponse {
 #[derive(Clone, Debug)]
 pub struct ClusterReport {
     /// Merged response stream (arrival order; sort by id to compare).
+    /// Empty when a streaming consumer took the receiver
+    /// ([`ServingCluster::take_responses`]) or consumed it via
+    /// [`ServingCluster::try_recv`] — the stats still cover every
+    /// request either way.
     pub responses: Vec<ClusterResponse>,
     pub stats: ClusterStats,
 }
@@ -149,15 +209,123 @@ impl ClusterReport {
 
 type Routed = (Request, Instant);
 
+/// One live shard's routing handle, shared with the router through the
+/// mutable route table. Cloned Arcs, so the router can hold a pick
+/// without holding the table lock across a (possibly blocking) push.
+struct RouteEntry {
+    id: usize,
+    inbox: Arc<BoundedQueue<Routed>>,
+    load: Arc<AtomicU64>,
+    routed: Arc<AtomicU64>,
+}
+
+/// Worker-published serving counters, snapshotted by
+/// [`ServingCluster::live_stats`] without stopping the shard.
+#[derive(Default)]
+struct ShardCounters {
+    completed: AtomicU64,
+    engine_steps: AtomicU64,
+    tokens_processed: AtomicU64,
+    peak_active_slots: AtomicU64,
+}
+
+impl ShardCounters {
+    fn publish(&self, s: &ServerStats) {
+        self.completed.store(s.completed, Ordering::SeqCst);
+        self.engine_steps.store(s.engine_steps, Ordering::SeqCst);
+        self.tokens_processed.store(s.tokens_processed, Ordering::SeqCst);
+        self.peak_active_slots
+            .store(s.peak_active_slots as u64, Ordering::SeqCst);
+    }
+
+    fn snapshot(&self) -> ServerStats {
+        ServerStats {
+            completed: self.completed.load(Ordering::SeqCst),
+            engine_steps: self.engine_steps.load(Ordering::SeqCst),
+            tokens_processed: self.tokens_processed.load(Ordering::SeqCst),
+            peak_active_slots:
+                self.peak_active_slots.load(Ordering::SeqCst) as usize,
+        }
+    }
+}
+
+/// Everything the cluster keeps per live shard.
+struct ShardHandle {
+    id: usize,
+    inbox: Arc<BoundedQueue<Routed>>,
+    load: Arc<AtomicU64>,
+    routed: Arc<AtomicU64>,
+    counters: Arc<ShardCounters>,
+    worker: JoinHandle<ServerStats>,
+}
+
+impl ShardHandle {
+    fn route_entry(&self) -> RouteEntry {
+        RouteEntry {
+            id: self.id,
+            inbox: self.inbox.clone(),
+            load: self.load.clone(),
+            routed: self.routed.clone(),
+        }
+    }
+}
+
+/// Completion-latency ring (capped so a long-lived serving process does
+/// not grow without bound): every completion lands here — streamed or
+/// drained, live or retired shard — so the p50/p95/p99 in
+/// [`ClusterStats`] always describe the full accepted workload, not
+/// just the responses one particular consumer happened to hold.
+const LATENCY_LOG_CAP: usize = 65536;
+
+#[derive(Default)]
+struct LatencyLog {
+    next: usize,
+    queue_ms: Vec<f64>,
+    run_ms: Vec<f64>,
+    total_ms: Vec<f64>,
+}
+
+impl LatencyLog {
+    fn record(&mut self, queue_ms: f64, run_ms: f64) {
+        let total = queue_ms + run_ms;
+        if self.queue_ms.len() < LATENCY_LOG_CAP {
+            self.queue_ms.push(queue_ms);
+            self.run_ms.push(run_ms);
+            self.total_ms.push(total);
+        } else {
+            self.queue_ms[self.next] = queue_ms;
+            self.run_ms[self.next] = run_ms;
+            self.total_ms[self.next] = total;
+        }
+        self.next = (self.next + 1) % LATENCY_LOG_CAP;
+    }
+
+    fn summaries(&self) -> (LatencySummary, LatencySummary, LatencySummary) {
+        (LatencySummary::from_ms(&self.queue_ms),
+         LatencySummary::from_ms(&self.run_ms),
+         LatencySummary::from_ms(&self.total_ms))
+    }
+}
+
 /// The sharded serving cluster; see the module docs.
 pub struct ServingCluster {
     front: Arc<BoundedQueue<Routed>>,
+    table: Arc<Mutex<Vec<RouteEntry>>>,
     router: Option<JoinHandle<()>>,
-    workers: Vec<JoinHandle<ServerStats>>,
-    routed: Arc<Vec<AtomicU64>>,
-    done_rx: mpsc::Receiver<ClusterResponse>,
+    shards: Vec<ShardHandle>,
+    /// Final counters of removed shards — totals keep their history.
+    retired: Vec<ShardStats>,
+    done_tx: Option<mpsc::Sender<ClusterResponse>>,
+    done_rx: Option<mpsc::Receiver<ClusterResponse>>,
+    latency: Arc<Mutex<LatencyLog>>,
+    /// The packed template — kept so [`Self::add_shard`] can build new
+    /// engines later. A clone of the caller's model: refcount bumps on
+    /// the plane `Arc`s, zero byte copies.
+    shared: SharedModel,
+    shard_spec: BackendSpec,
+    inbox_cap: usize,
+    next_shard_id: usize,
     vocab: usize,
-    n_shards: usize,
     slots_per_shard: usize,
     weight_bytes: usize,
     policy: RoutePolicy,
@@ -171,10 +339,11 @@ impl ServingCluster {
     /// router + worker threads. `queue_cap` bounds the front door.
     ///
     /// With `spec.threads = 0` (auto), the machine's per-core GEMM
-    /// worker budget is divided across the shards (`available / shards`
-    /// workers each, min 1) so scaling out shards doesn't oversubscribe
-    /// the CPU; an explicit thread count applies to every shard
-    /// unchanged.
+    /// worker budget is divided across the *initial* shard count
+    /// (`available / shards` workers each, min 1) so scaling out shards
+    /// doesn't oversubscribe the CPU; an explicit thread count applies
+    /// to every shard unchanged. Shards added later with
+    /// [`Self::add_shard`] reuse the same per-shard budget.
     pub fn new(shared: &SharedModel, spec: &BackendSpec, queue_cap: usize,
                policy: RoutePolicy) -> Result<Self> {
         let shards = spec.shards;
@@ -192,6 +361,10 @@ impl ServingCluster {
         if spec.batch_gemm && spec.threads == 0 {
             shard_spec.threads = (ThreadPool::available() / shards).max(1);
         }
+        // small bounded inboxes: enough lookahead to refill slots
+        // without stalling, small enough that backpressure reaches
+        // the router (and through it, the front door) quickly
+        let inbox_cap = (2 * spec.slots).max(2);
         // build every shard engine up front so a bad spec fails before
         // any thread exists
         let mut servers = Vec::with_capacity(shards);
@@ -202,60 +375,44 @@ impl ServingCluster {
         }
         let front: Arc<BoundedQueue<Routed>> =
             Arc::new(BoundedQueue::new(queue_cap));
-        let loads: Arc<Vec<AtomicU64>> =
-            Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect());
-        let routed: Arc<Vec<AtomicU64>> =
-            Arc::new((0..shards).map(|_| AtomicU64::new(0)).collect());
+        let table: Arc<Mutex<Vec<RouteEntry>>> =
+            Arc::new(Mutex::new(Vec::with_capacity(shards)));
+        let latency = Arc::new(Mutex::new(LatencyLog::default()));
         let (done_tx, done_rx) = mpsc::channel();
-        let mut inboxes: Vec<Arc<BoundedQueue<Routed>>> =
-            Vec::with_capacity(shards);
-        let mut workers = Vec::with_capacity(shards);
-        for (shard, server) in servers.into_iter().enumerate() {
-            // small bounded inbox: enough lookahead to refill slots
-            // without stalling, small enough that backpressure reaches
-            // the router (and through it, the front door) quickly
-            let inbox = Arc::new(BoundedQueue::new((2 * spec.slots).max(2)));
-            inboxes.push(inbox.clone());
-            let loads_w = loads.clone();
-            let done = done_tx.clone();
-            let spawned = std::thread::Builder::new()
-                .name(format!("rbtw-cluster-shard-{shard}"))
-                .spawn(move || shard_worker(shard, server, inbox, loads_w,
-                                            done));
-            match spawned {
-                Ok(h) => workers.push(h),
+        let mut handles: Vec<ShardHandle> = Vec::with_capacity(shards);
+        for (id, server) in servers.into_iter().enumerate() {
+            match spawn_shard(id, server, inbox_cap, latency.clone(),
+                              done_tx.clone()) {
+                Ok(h) => {
+                    table.lock().unwrap().push(h.route_entry());
+                    handles.push(h);
+                }
                 Err(e) => {
-                    for ib in &inboxes {
-                        ib.close();
+                    for h in &handles {
+                        h.inbox.close();
                     }
-                    for h in workers {
-                        let _ = h.join();
+                    for h in handles {
+                        let _ = h.worker.join();
                     }
-                    return Err(e).context("spawning a cluster shard worker");
+                    return Err(e);
                 }
             }
         }
-        // the workers hold the only senders: the merged stream closes
-        // exactly when the last worker exits
-        drop(done_tx);
         let router = {
             let front_r = front.clone();
-            let loads_r = loads.clone();
-            let routed_r = routed.clone();
-            let inboxes_r = inboxes.clone();
+            let table_r = table.clone();
             let spawned = std::thread::Builder::new()
                 .name("rbtw-cluster-router".to_string())
-                .spawn(move || router_loop(front_r, inboxes_r, loads_r,
-                                           routed_r, policy));
+                .spawn(move || router_loop(front_r, table_r, policy));
             match spawned {
                 Ok(h) => h,
                 Err(e) => {
                     front.close();
-                    for ib in &inboxes {
-                        ib.close();
+                    for h in &handles {
+                        h.inbox.close();
                     }
-                    for h in workers {
-                        let _ = h.join();
+                    for h in handles {
+                        let _ = h.worker.join();
                     }
                     return Err(e).context("spawning the cluster router");
                 }
@@ -263,12 +420,18 @@ impl ServingCluster {
         };
         Ok(Self {
             front,
+            table,
             router: Some(router),
-            workers,
-            routed,
-            done_rx,
+            shards: handles,
+            retired: vec![],
+            done_tx: Some(done_tx),
+            done_rx: Some(done_rx),
+            latency,
+            shared: shared.clone(),
+            shard_spec,
+            inbox_cap,
+            next_shard_id: shards,
             vocab: shared.vocab(),
-            n_shards: shards,
             slots_per_shard: spec.slots.max(1),
             weight_bytes: shared.weight_bytes(),
             policy,
@@ -277,8 +440,15 @@ impl ServingCluster {
         })
     }
 
+    /// Live shard count (changes under [`Self::add_shard`] /
+    /// [`Self::remove_shard`]).
     pub fn shards(&self) -> usize {
-        self.n_shards
+        self.shards.len()
+    }
+
+    /// Ids of the live shards, ascending. Retired ids are never reused.
+    pub fn shard_ids(&self) -> Vec<usize> {
+        self.shards.iter().map(|h| h.id).collect()
     }
 
     pub fn slots_per_shard(&self) -> usize {
@@ -314,30 +484,140 @@ impl ServingCluster {
         self.submitted
     }
 
-    /// Enqueue a request at the front door. Fails fast — without
-    /// touching any shard — when the bounded queue is full
-    /// (backpressure) or the cluster is draining. Validation runs here,
-    /// through the same [`validate_request`] the shard servers apply,
-    /// so a cluster-accepted request can never be one a shard rejects.
-    pub fn submit(&mut self, req: Request) -> Result<()> {
-        validate_request(&req, self.vocab)?;
+    /// Whether intake has been closed ([`Self::close_intake`] or a
+    /// [`Self::drain`] in progress); accepted work still completes.
+    pub fn is_draining(&self) -> bool {
+        self.front.is_closed()
+    }
+
+    /// Stop accepting new requests without tearing anything down — the
+    /// first half of a graceful shutdown, split out so a network front
+    /// door can refuse clients with "draining" while the fleet finishes
+    /// the accepted backlog.
+    pub fn close_intake(&self) {
+        self.front.close();
+    }
+
+    /// Enqueue a request at the front door with a typed refusal. Fails
+    /// fast — without touching any shard — when the bounded queue is
+    /// full ([`SubmitRefused::Full`]) or the cluster is draining
+    /// ([`SubmitRefused::Draining`]). Validation runs here, through the
+    /// same [`validate_request`] the shard servers apply, so a
+    /// cluster-accepted request can never be one a shard rejects.
+    pub fn try_submit(&mut self, req: Request)
+        -> std::result::Result<(), SubmitRefused> {
+        if let Err(e) = validate_request(&req, self.vocab) {
+            return Err(SubmitRefused::Invalid(format!("{e:#}")));
+        }
         match self.front.try_push((req, Instant::now())) {
             Ok(()) => {
                 self.submitted += 1;
                 Ok(())
             }
-            Err((_, PushRefused::Full)) => anyhow::bail!(
-                "cluster queue full ({} pending)", self.front.len()),
-            Err((_, PushRefused::Closed)) => anyhow::bail!(
-                "cluster is draining; no new requests accepted"),
+            Err((_, PushRefused::Full)) => {
+                Err(SubmitRefused::Full { pending: self.front.len() })
+            }
+            Err((_, PushRefused::Closed)) => Err(SubmitRefused::Draining),
         }
+    }
+
+    /// [`Self::try_submit`] with the refusal flattened into an error —
+    /// the in-process convenience surface.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        self.try_submit(req).map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     /// Non-blocking read of the merged response stream. Responses taken
     /// here (streaming mode) are not repeated in [`Self::drain`]'s
-    /// report.
+    /// report. Returns `None` once [`Self::take_responses`] has claimed
+    /// the stream.
     pub fn try_recv(&self) -> Option<ClusterResponse> {
-        self.done_rx.try_recv().ok()
+        self.done_rx.as_ref().and_then(|rx| rx.try_recv().ok())
+    }
+
+    /// Take ownership of the merged response stream — the streaming
+    /// consumer surface ([`crate::frontdoor`]'s pump thread). The
+    /// receiver disconnects after the last accepted response once the
+    /// cluster drains. Can be taken at most once.
+    pub fn take_responses(&mut self) -> Result<mpsc::Receiver<ClusterResponse>> {
+        self.done_rx.take().context("cluster response stream already taken")
+    }
+
+    /// Add one engine shard to the live fleet and return its id. Cheap:
+    /// the engine is built [`from_shared`], so the new shard aliases the
+    /// existing plane allocation (refcount bump, no weight copy). The
+    /// router starts dispatching to it as soon as it enters the route
+    /// table.
+    pub fn add_shard(&mut self) -> Result<usize> {
+        anyhow::ensure!(!self.front.is_closed(),
+                        "cluster is draining; cannot add a shard");
+        anyhow::ensure!(self.shards.len() < BackendSpec::MAX_SHARDS,
+                        "cluster already at {} shards (max {})",
+                        self.shards.len(), BackendSpec::MAX_SHARDS);
+        let backend = from_shared(&self.shared, &self.shard_spec)?;
+        let server = InferenceServer::with_backend(backend,
+                                                   self.slots_per_shard);
+        let done = self.done_tx.as_ref()
+            .context("cluster response channel gone")?
+            .clone();
+        let id = self.next_shard_id;
+        let h = spawn_shard(id, server, self.inbox_cap,
+                            self.latency.clone(), done)?;
+        self.next_shard_id += 1;
+        self.table.lock().unwrap().push(h.route_entry());
+        self.shards.push(h);
+        Ok(id)
+    }
+
+    /// Gracefully remove shard `id` from the live fleet: it leaves the
+    /// route table (no new work), its inbox closes (everything already
+    /// queued still drains), the worker finishes every admitted request
+    /// and exits, and its final counters are returned and retained in
+    /// the retired list. The router re-routes any request it was about
+    /// to place here, so a removal never drops accepted work. Refuses
+    /// to remove the last live shard.
+    pub fn remove_shard(&mut self, id: usize) -> Result<ShardStats> {
+        anyhow::ensure!(self.shards.len() > 1,
+                        "cannot remove the last live shard ({id})");
+        let pos = self.shards.iter().position(|h| h.id == id)
+            .with_context(|| format!("no live shard {id} (live: {:?})",
+                                     self.shard_ids()))?;
+        {
+            let mut t = self.table.lock().unwrap();
+            if let Some(tp) = t.iter().position(|e| e.id == id) {
+                t.remove(tp);
+            }
+        }
+        let h = self.shards.remove(pos);
+        h.inbox.close();
+        let server = h.worker.join().map_err(
+            |_| anyhow::anyhow!("shard {id} worker panicked during removal"))?;
+        let wall_s = self.started.elapsed().as_secs_f64();
+        let row = ShardStats {
+            shard: id,
+            routed: h.routed.load(Ordering::SeqCst),
+            tokens_per_sec: server.tokens_processed as f64
+                / wall_s.max(1e-12),
+            server,
+            retired: true,
+        };
+        self.retired.push(row.clone());
+        Ok(row)
+    }
+
+    /// Snapshot the running fleet's stats without stopping it: per-shard
+    /// counters from the workers' published atomics (retired shards keep
+    /// their final numbers), latency percentiles over every completion
+    /// so far, throughput over the wall clock so far.
+    pub fn live_stats(&self) -> ClusterStats {
+        let rows = self.shards.iter().map(|h| ShardStats {
+            shard: h.id,
+            routed: h.routed.load(Ordering::SeqCst),
+            tokens_per_sec: 0.0, // filled against the wall clock below
+            server: h.counters.snapshot(),
+            retired: false,
+        }).collect();
+        self.assemble_stats(rows)
     }
 
     /// Graceful shutdown: stop intake, let every accepted request finish
@@ -345,53 +625,69 @@ impl ServingCluster {
     /// slots), join all threads, and return the merged responses plus
     /// aggregated [`ClusterStats`].
     ///
-    /// The latency percentiles summarize the responses returned by THIS
-    /// call; responses already consumed via [`Self::try_recv`] are
-    /// excluded from them (the per-shard counters and throughput totals
-    /// still cover every request). Streaming consumers who need full
-    /// latency percentiles should summarize their own stream.
+    /// Responses already consumed via [`Self::try_recv`] — or streamed
+    /// through a receiver claimed by [`Self::take_responses`] — are not
+    /// repeated in the report, but every counter and latency percentile
+    /// still covers the full accepted workload (completions are
+    /// recorded at the shard, not at the consumer).
     pub fn drain(mut self) -> Result<ClusterReport> {
         self.front.close();
-        // the recv loop ends when the last worker exits and drops its
-        // sender — i.e. exactly when all accepted work has completed
+        // drop our sender so the stream disconnects exactly when the
+        // last worker exits — i.e. when all accepted work has completed
+        drop(self.done_tx.take());
         let mut responses = vec![];
-        while let Ok(r) = self.done_rx.recv() {
-            responses.push(r);
+        if let Some(rx) = self.done_rx.take() {
+            while let Ok(r) = rx.recv() {
+                responses.push(r);
+            }
         }
         if let Some(h) = self.router.take() {
             h.join()
                 .map_err(|_| anyhow::anyhow!("cluster router panicked"))?;
         }
-        let mut shard_servers = vec![];
+        let mut rows = vec![];
         let mut panicked = vec![];
-        for (i, h) in self.workers.drain(..).enumerate() {
-            match h.join() {
-                Ok(s) => shard_servers.push(s),
-                Err(_) => panicked.push(i),
+        for h in std::mem::take(&mut self.shards) {
+            let id = h.id;
+            let routed = h.routed.load(Ordering::SeqCst);
+            match h.worker.join() {
+                Ok(server) => rows.push(ShardStats {
+                    shard: id,
+                    routed,
+                    tokens_per_sec: 0.0, // filled in assemble_stats
+                    server,
+                    retired: false,
+                }),
+                Err(_) => panicked.push(id),
             }
         }
         anyhow::ensure!(panicked.is_empty(),
                         "cluster shard worker(s) {panicked:?} panicked");
+        let stats = self.assemble_stats(rows);
+        Ok(ClusterReport { responses, stats })
+    }
+
+    /// Fold live/final shard rows + retired history into [`ClusterStats`]
+    /// against the shared wall clock and the full completion-latency log.
+    fn assemble_stats(&self, rows: Vec<ShardStats>) -> ClusterStats {
         let wall_s = self.started.elapsed().as_secs_f64();
-        let (queue, run, total) =
-            latency_breakdown(responses.iter().map(|r| &r.response));
+        let (queue, run, total) = self.latency.lock().unwrap().summaries();
         let mut stats = ClusterStats { wall_s, queue, run, total,
                                        ..ClusterStats::default() };
-        for (i, server) in shard_servers.into_iter().enumerate() {
-            stats.completed += server.completed;
-            stats.tokens_processed += server.tokens_processed;
-            stats.engine_steps += server.engine_steps;
-            stats.shards.push(ShardStats {
-                shard: i,
-                routed: self.routed[i].load(Ordering::SeqCst),
-                tokens_per_sec: server.tokens_processed as f64
-                    / wall_s.max(1e-12),
-                server,
-            });
+        let mut all = self.retired.clone();
+        all.extend(rows);
+        all.sort_by_key(|s| s.shard);
+        for mut row in all {
+            row.tokens_per_sec = row.server.tokens_processed as f64
+                / wall_s.max(1e-12);
+            stats.completed += row.server.completed;
+            stats.tokens_processed += row.server.tokens_processed;
+            stats.engine_steps += row.server.engine_steps;
+            stats.shards.push(row);
         }
         stats.tokens_per_sec =
             stats.tokens_processed as f64 / wall_s.max(1e-12);
-        Ok(ClusterReport { responses, stats })
+        stats
     }
 }
 
@@ -404,54 +700,107 @@ impl Drop for ServingCluster {
         if let Some(h) = self.router.take() {
             let _ = h.join();
         }
-        for h in self.workers.drain(..) {
-            let _ = h.join();
+        for h in std::mem::take(&mut self.shards) {
+            let _ = h.worker.join();
         }
     }
 }
 
+/// Spawn one shard worker over its freshly built server; returns the
+/// cluster-side handle. Shared by construction and [`ServingCluster::add_shard`].
+fn spawn_shard(id: usize, server: InferenceServer, inbox_cap: usize,
+               latency: Arc<Mutex<LatencyLog>>,
+               done: mpsc::Sender<ClusterResponse>) -> Result<ShardHandle> {
+    let inbox: Arc<BoundedQueue<Routed>> =
+        Arc::new(BoundedQueue::new(inbox_cap));
+    let load = Arc::new(AtomicU64::new(0));
+    let routed = Arc::new(AtomicU64::new(0));
+    let counters = Arc::new(ShardCounters::default());
+    let worker = {
+        let inbox = inbox.clone();
+        let load = load.clone();
+        let counters = counters.clone();
+        std::thread::Builder::new()
+            .name(format!("rbtw-cluster-shard-{id}"))
+            .spawn(move || shard_worker(id, server, inbox, load, counters,
+                                        latency, done))
+            .context("spawning a cluster shard worker")?
+    };
+    Ok(ShardHandle { id, inbox, load, routed, counters, worker })
+}
+
 fn router_loop(front: Arc<BoundedQueue<Routed>>,
-               inboxes: Vec<Arc<BoundedQueue<Routed>>>,
-               loads: Arc<Vec<AtomicU64>>, routed: Arc<Vec<AtomicU64>>,
-               policy: RoutePolicy) {
+               table: Arc<Mutex<Vec<RouteEntry>>>, policy: RoutePolicy) {
     let mut rr = 0usize;
-    while let Some(item) = front.pop_wait() {
-        let shard = match policy {
-            RoutePolicy::RoundRobin => {
-                let s = rr % inboxes.len();
-                rr += 1;
-                s
-            }
-            RoutePolicy::LeastLoaded => {
-                let mut best = 0usize;
-                let mut best_load = u64::MAX;
-                for (i, l) in loads.iter().enumerate() {
-                    let v = l.load(Ordering::SeqCst);
-                    if v < best_load {
-                        best = i;
-                        best_load = v;
-                    }
+    while let Some(first) = front.pop_wait() {
+        let mut item = first;
+        loop {
+            // pick under the table lock, push outside it: push_wait can
+            // block on a full inbox, and a held lock would stall
+            // add_shard/remove_shard (and live_stats) behind it
+            let picked = {
+                let t = table.lock().unwrap();
+                if t.is_empty() {
+                    None
+                } else {
+                    let idx = match policy {
+                        RoutePolicy::RoundRobin => {
+                            let i = rr % t.len();
+                            rr += 1;
+                            i
+                        }
+                        RoutePolicy::LeastLoaded => {
+                            let mut best = 0usize;
+                            let mut best_load = u64::MAX;
+                            for (i, e) in t.iter().enumerate() {
+                                let v = e.load.load(Ordering::SeqCst);
+                                if v < best_load {
+                                    best = i;
+                                    best_load = v;
+                                }
+                            }
+                            best
+                        }
+                    };
+                    let e = &t[idx];
+                    Some((e.id, e.inbox.clone(), e.load.clone(),
+                          e.routed.clone()))
                 }
-                best
+            };
+            let Some((id, inbox, load, routed)) = picked else {
+                // no live shard left (teardown, or every worker died):
+                // the request is shed; a dead fleet additionally
+                // surfaces as join errors from drain()
+                break;
+            };
+            load.fetch_add(1, Ordering::SeqCst);
+            routed.fetch_add(1, Ordering::SeqCst);
+            // a full inbox blocks here — pressure propagates to the
+            // front door, which is where submit() fails fast
+            match inbox.push_wait(item) {
+                Ok(()) => break,
+                Err(refused) => {
+                    // inbox closed under us: the shard was removed, or
+                    // its worker died (the exit guard closes its inbox
+                    // so this router can never block on a dead shard).
+                    // Drop the stale route and retry on the survivors —
+                    // accepted work is re-routed, not shed.
+                    load.fetch_sub(1, Ordering::SeqCst);
+                    routed.fetch_sub(1, Ordering::SeqCst);
+                    let mut t = table.lock().unwrap();
+                    if let Some(p) = t.iter().position(|e| e.id == id) {
+                        t.remove(p);
+                    }
+                    drop(t);
+                    item = refused;
+                }
             }
-        };
-        loads[shard].fetch_add(1, Ordering::SeqCst);
-        routed[shard].fetch_add(1, Ordering::SeqCst);
-        // a full inbox blocks here — pressure propagates to the front
-        // door, which is where submit() fails fast
-        if inboxes[shard].push_wait(item).is_err() {
-            // inbox closed under us: either teardown, or the shard
-            // worker died (its exit guard closes its inbox so this
-            // router can never block on a dead shard). The request is
-            // shed; a dead worker additionally surfaces as an error
-            // from drain()'s join.
-            loads[shard].fetch_sub(1, Ordering::SeqCst);
-            routed[shard].fetch_sub(1, Ordering::SeqCst);
         }
     }
-    // front closed and fully routed: signal every shard to finish + exit
-    for inbox in &inboxes {
-        inbox.close();
+    // intake closed and fully routed: signal every live shard to
+    // finish + exit
+    for e in table.lock().unwrap().iter() {
+        e.inbox.close();
     }
 }
 
@@ -459,8 +808,9 @@ fn router_loop(front: Arc<BoundedQueue<Routed>>,
 /// panicking worker must not leave an open inbox behind: the router
 /// would eventually block forever in `push_wait` on it, never close the
 /// other shards' inboxes, and wedge the whole cluster (drain() and Drop
-/// included). With the guard, the router's push simply fails, the other
-/// shards drain normally, and the panic surfaces from drain()'s join.
+/// included). With the guard, the router's push simply fails, the
+/// request is re-routed to a surviving shard, and the panic surfaces
+/// from drain()'s join.
 struct InboxCloser(Arc<BoundedQueue<Routed>>);
 
 impl Drop for InboxCloser {
@@ -473,8 +823,9 @@ impl Drop for InboxCloser {
 /// private `InferenceServer`, fed from its bounded inbox. Exits when the
 /// inbox is closed AND every admitted request has completed.
 fn shard_worker(shard: usize, mut server: InferenceServer,
-                inbox: Arc<BoundedQueue<Routed>>,
-                loads: Arc<Vec<AtomicU64>>,
+                inbox: Arc<BoundedQueue<Routed>>, load: Arc<AtomicU64>,
+                counters: Arc<ShardCounters>,
+                latency: Arc<Mutex<LatencyLog>>,
                 done: mpsc::Sender<ClusterResponse>) -> ServerStats {
     let _closer = InboxCloser(inbox.clone());
     loop {
@@ -503,12 +854,17 @@ fn shard_worker(shard: usize, mut server: InferenceServer,
         }
         server.step().expect("engine step failed on a validated batch");
         while let Ok(resp) = server.done_rx.try_recv() {
-            loads[shard].fetch_sub(1, Ordering::SeqCst);
+            load.fetch_sub(1, Ordering::SeqCst);
+            latency.lock().unwrap().record(
+                resp.queue_time.as_secs_f64() * 1e3,
+                resp.run_time.as_secs_f64() * 1e3);
             // a gone collector is not an error mid-teardown; keep
             // stepping so accepted work still runs to completion
             let _ = done.send(ClusterResponse { shard, response: resp });
         }
+        counters.publish(&server.stats);
     }
+    counters.publish(&server.stats);
     server.stats.clone()
 }
 
@@ -538,6 +894,15 @@ mod tests {
     fn shared_model() -> SharedModel {
         let w = ModelWeights::synthetic(20, 12, "ter", 0xC1);
         SharedModel::prepare(&w, BackendKind::PackedCpu, 7).unwrap()
+    }
+
+    fn greedy(id: u64) -> Request {
+        Request {
+            id,
+            prompt: vec![(id % 20) as i32, 3],
+            gen_len: 3,
+            temperature: 0.0,
+        }
     }
 
     #[test]
@@ -571,14 +936,10 @@ mod tests {
             ServingCluster::new(&shared, &spec, 32, RoutePolicy::LeastLoaded)
                 .unwrap();
         assert_eq!(cluster.shards(), 2);
+        assert_eq!(cluster.shard_ids(), vec![0, 1]);
         assert_eq!(cluster.weight_bytes(), shared.weight_bytes());
         for id in 0..10u64 {
-            cluster.submit(Request {
-                id,
-                prompt: vec![(id % 20) as i32, 3],
-                gen_len: 3,
-                temperature: 0.0,
-            }).unwrap();
+            cluster.submit(greedy(id)).unwrap();
         }
         let report = cluster.drain().unwrap();
         assert_eq!(report.responses.len(), 10);
@@ -618,6 +979,127 @@ mod tests {
         let report = cluster.drain().unwrap();
         assert!(report.responses.is_empty());
         assert_eq!(report.stats.completed, 0);
+    }
+
+    #[test]
+    fn try_submit_reports_typed_refusals() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 1, 7);
+        let mut cluster =
+            ServingCluster::new(&shared, &spec, 1, RoutePolicy::LeastLoaded)
+                .unwrap();
+        // invalid request: typed, never enqueued
+        let refused = cluster
+            .try_submit(Request { id: 0, prompt: vec![], gen_len: 1,
+                                  temperature: 0.0 })
+            .unwrap_err();
+        assert!(matches!(refused, SubmitRefused::Invalid(_)));
+        assert_eq!(cluster.submitted(), 0);
+        // overload: keep pushing until the bounded pipeline refuses —
+        // the refusal must be Full (backpressure), never Draining
+        let mut saw_full = false;
+        for id in 0..2000u64 {
+            match cluster.try_submit(Request { id, prompt: vec![1],
+                                               gen_len: 512,
+                                               temperature: 0.0 }) {
+                Ok(()) => {}
+                Err(SubmitRefused::Full { pending }) => {
+                    assert!(pending >= 1);
+                    saw_full = true;
+                    break;
+                }
+                Err(other) => panic!("expected Full, got {other:?}"),
+            }
+        }
+        assert!(saw_full, "bounded front door never refused");
+        // draining: typed as Draining, distinct from Full
+        cluster.close_intake();
+        assert!(cluster.is_draining());
+        let refused = cluster.try_submit(greedy(9999)).unwrap_err();
+        assert_eq!(refused, SubmitRefused::Draining);
+        let accepted = cluster.submitted();
+        let report = cluster.drain().unwrap();
+        assert_eq!(report.stats.completed, accepted,
+                   "every accepted request completed despite refusals");
+    }
+
+    #[test]
+    fn add_and_remove_shards_while_serving() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7);
+        let mut cluster =
+            ServingCluster::new(&shared, &spec, 64, RoutePolicy::RoundRobin)
+                .unwrap();
+        assert_eq!(cluster.shard_ids(), vec![0]);
+        for id in 0..8u64 {
+            cluster.submit(greedy(id)).unwrap();
+        }
+        let new_id = cluster.add_shard().unwrap();
+        assert_eq!(new_id, 1);
+        assert_eq!(cluster.shard_ids(), vec![0, 1]);
+        for id in 8..16u64 {
+            cluster.submit(greedy(id)).unwrap();
+        }
+        // graceful removal mid-load: shard 0 finishes its admitted work
+        let row = cluster.remove_shard(0).unwrap();
+        assert!(row.retired);
+        assert_eq!(row.shard, 0);
+        assert_eq!(cluster.shard_ids(), vec![1]);
+        // the last live shard is protected
+        assert!(cluster.remove_shard(1).is_err());
+        // unknown ids are reported, not ignored
+        assert!(cluster.remove_shard(42).is_err());
+        for id in 16..20u64 {
+            cluster.submit(greedy(id)).unwrap();
+        }
+        let live = cluster.live_stats();
+        assert_eq!(live.shards.len(), 2, "retired + live rows");
+        assert!(live.shards.iter().any(|s| s.retired && s.shard == 0));
+        assert!(live.shards.iter().any(|s| !s.retired && s.shard == 1));
+        let report = cluster.drain().unwrap();
+        assert_eq!(report.responses.len(), 20,
+                   "zero accepted-request loss across add+remove");
+        let mut ids: Vec<u64> =
+            report.responses.iter().map(|r| r.response.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 20);
+        assert_eq!(report.stats.completed, 20,
+                   "retired shard history kept in the totals");
+        let routed_total: u64 =
+            report.stats.shards.iter().map(|s| s.routed).sum();
+        assert_eq!(routed_total, 20);
+    }
+
+    #[test]
+    fn take_responses_streams_while_stats_stay_complete() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7)
+            .with_shards(2);
+        let mut cluster =
+            ServingCluster::new(&shared, &spec, 16, RoutePolicy::LeastLoaded)
+                .unwrap();
+        let rx = cluster.take_responses().unwrap();
+        assert!(cluster.take_responses().is_err(), "stream taken once");
+        assert!(cluster.try_recv().is_none());
+        for id in 0..6u64 {
+            cluster.submit(greedy(id)).unwrap();
+        }
+        let collector = std::thread::spawn(move || {
+            let mut got = vec![];
+            while let Ok(r) = rx.recv() {
+                got.push(r);
+            }
+            got
+        });
+        let report = cluster.drain().unwrap();
+        let streamed = collector.join().unwrap();
+        assert!(report.responses.is_empty(),
+                "streaming consumer owns the responses");
+        assert_eq!(streamed.len(), 6);
+        assert_eq!(report.stats.completed, 6);
+        assert_eq!(report.stats.total.n, 6,
+                   "latency percentiles cover streamed completions");
     }
 
     #[test]

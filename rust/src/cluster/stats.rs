@@ -14,6 +14,10 @@ pub struct ShardStats {
     pub server: ServerStats,
     /// This shard's token throughput over the cluster wall time.
     pub tokens_per_sec: f64,
+    /// True once the shard has been removed from the live fleet
+    /// (`ServingCluster::remove_shard`); its counters are final and
+    /// stay in the cluster totals.
+    pub retired: bool,
 }
 
 /// Whole-cluster counters + latency percentiles for one serving run.

@@ -136,7 +136,7 @@ impl Config {
 /// Serving configuration: which engine backend, how many decode slots,
 /// queue depth, and the deployment-weight sample seed. Parsed from a
 /// `[serve]` section; the packed deployment engine is the default.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServeSpec {
     pub backend: BackendKind,
     pub slots: usize,
@@ -163,6 +163,11 @@ pub struct ServeSpec {
     pub arch: CellArch,
     /// Stacked recurrent layers for model-synthesis targets.
     pub layers: usize,
+    /// TCP listen address for the network front door
+    /// (`crate::frontdoor::FrontDoor`), e.g. `"127.0.0.1:4250"` or
+    /// `"127.0.0.1:0"` for an ephemeral port. `None` keeps serving
+    /// in-process (the self-driving load demo).
+    pub listen: Option<String>,
 }
 
 impl Default for ServeSpec {
@@ -178,6 +183,7 @@ impl Default for ServeSpec {
             policy: RoutePolicy::LeastLoaded,
             arch: CellArch::Lstm,
             layers: 1,
+            listen: None,
         }
     }
 }
@@ -270,6 +276,12 @@ impl Config {
                 spec.layers = bounded(v, "layers",
                                       *ServeSpec::LAYERS_RANGE.start() as i64,
                                       *ServeSpec::LAYERS_RANGE.end() as i64)?;
+            }
+            if let Some(v) = s.get("listen") {
+                let addr = v.as_str().context("listen")?;
+                anyhow::ensure!(!addr.is_empty(),
+                                "[serve] listen must not be empty");
+                spec.listen = Some(addr.to_string());
             }
         }
         Ok(spec)
@@ -479,6 +491,19 @@ mod tests {
             .serve_spec(ServeSpec::default())
             .is_err());
         assert!(Config::parse("[serve]\nqueue_cap = 0\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        // the network front door stays off unless a listen address is
+        // configured; empty addresses are rejected up front
+        assert_eq!(ServeSpec::default().listen, None);
+        assert_eq!(spec.listen, None);
+        let spec = Config::parse("[serve]\nlisten = \"127.0.0.1:0\"\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .unwrap();
+        assert_eq!(spec.listen.as_deref(), Some("127.0.0.1:0"));
+        assert!(Config::parse("[serve]\nlisten = \"\"\n")
             .unwrap()
             .serve_spec(ServeSpec::default())
             .is_err());

@@ -29,6 +29,13 @@ use crate::quant::{CellArch, PackedStack, RecurrentCell};
 
 /// One model's packed serving weights, prepared once and cheaply
 /// shareable across any number of engine shards.
+///
+/// `Clone` is cheap by the same argument as shard construction: the
+/// stack clone aliases the plane `Arc`s (one refcount bump per layer)
+/// and the head handles are `Arc`s — no weight bytes are copied. The
+/// cluster keeps a clone so it can build engines for shards added
+/// after construction.
+#[derive(Clone)]
 pub struct SharedModel {
     kind: BackendKind,
     sample_seed: u64,

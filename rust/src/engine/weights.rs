@@ -156,6 +156,16 @@ impl ModelWeights {
         Self::synthetic_arch(vocab, hidden, CellArch::Lstm, 1, quantizer, seed)
     }
 
+    /// THE synthetic serving model: the exact shape `rbtw serve
+    /// synthetic` builds for a given `--arch`/`--layers`. Kept as one
+    /// shared constructor so out-of-process clients
+    /// (`examples/netclient.rs --local`) and the CLI server can never
+    /// drift apart — the front-door digest gate compares their outputs
+    /// bit-for-bit.
+    pub fn synthetic_serving(arch: CellArch, layers: usize) -> Self {
+        Self::synthetic_arch(50, 128, arch, layers, "ter", 0xBE)
+    }
+
     /// A random `layers`-deep BN-`arch` LM for benches/tests: shadow
     /// weights uniform within the Glorot bound, BN gains 0.1 (Cooijmans
     /// init), slightly-off-nominal running statistics so the fold is

@@ -1,0 +1,204 @@
+//! Blocking wire client for the front door.
+//!
+//! [`FrontDoorClient`] speaks the [`super::proto`] framing over one TCP
+//! connection: a data-plane helper ([`FrontDoorClient::run_greedy`])
+//! that keeps a bounded window of `gen` requests in flight and
+//! reassembles the interleaved per-token stream, plus control-plane
+//! helpers (`ping`/`metrics`/`add_shard`/`remove_shard`/`drain_server`)
+//! for fleet operations.
+//!
+//! The control-plane helpers expect the *next* reply on the wire to be
+//! theirs, so they must not be called while `gen` responses are still
+//! streaming on the same connection — use a second connection for live
+//! fleet operations (the integration tests and `examples/netclient.rs`
+//! both do).
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::Request;
+use super::proto::{read_frame, write_frame, ClientMsg, ServerMsg};
+
+/// One fully streamed generation as seen from the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireResponse {
+    /// The client-scoped request id (echoed back by the server).
+    pub id: u64,
+    /// Generated tokens, reassembled from the `tok` stream in order.
+    pub tokens: Vec<i32>,
+    /// Raw IEEE-754 bits of the server-side prompt log-prob — carried
+    /// as bits so the digest gates can compare bit-exactly with an
+    /// in-process run, with no decimal round-trip in between.
+    pub logprob_bits: u64,
+    /// Which shard served the request.
+    pub shard: usize,
+}
+
+/// Terminal outcome of one submitted `gen` request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireOutcome {
+    /// Completed; tokens and log-prob attached.
+    Done(WireResponse),
+    /// Refused at admission: the cluster queue was full. Retry later.
+    Busy(u64),
+    /// Refused: the server is draining and takes no new work.
+    Closing(u64),
+    /// Refused: the request itself was invalid.
+    Failed { id: u64, msg: String },
+}
+
+impl WireOutcome {
+    pub fn id(&self) -> u64 {
+        match self {
+            WireOutcome::Done(r) => r.id,
+            WireOutcome::Busy(id)
+            | WireOutcome::Closing(id)
+            | WireOutcome::Failed { id, .. } => *id,
+        }
+    }
+
+    pub fn done(&self) -> Option<&WireResponse> {
+        match self {
+            WireOutcome::Done(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// A blocking front-door connection.
+pub struct FrontDoorClient {
+    stream: TcpStream,
+}
+
+impl FrontDoorClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to front door {addr}"))?;
+        Ok(Self { stream })
+    }
+
+    /// Send one framed message.
+    pub fn send(&mut self, msg: &ClientMsg) -> Result<()> {
+        write_frame(&mut self.stream, &msg.encode())
+            .context("writing frame to front door")
+    }
+
+    /// Block for the next framed server message.
+    pub fn recv(&mut self) -> Result<ServerMsg> {
+        let line = read_frame(&mut self.stream)
+            .map_err(|e| anyhow::anyhow!("reading frame from front \
+                                          door: {e}"))?;
+        ServerMsg::parse(&line)
+            .map_err(|e| anyhow::anyhow!("parsing server frame: {e}"))
+    }
+
+    /// Submit every request with at most `max_inflight` outstanding at
+    /// once, reassembling the interleaved token stream into one
+    /// [`WireOutcome`] per request (completion order). Request ids must
+    /// be unique within the batch.
+    pub fn run_greedy(&mut self, requests: &[Request], max_inflight: usize)
+        -> Result<Vec<WireOutcome>> {
+        let window = max_inflight.max(1);
+        let mut outcomes = Vec::with_capacity(requests.len());
+        let mut partial: HashMap<u64, Vec<i32>> = HashMap::new();
+        let mut next = 0usize;
+        let mut inflight = 0usize;
+        while outcomes.len() < requests.len() {
+            while next < requests.len() && inflight < window {
+                let r = &requests[next];
+                self.send(&ClientMsg::Gen {
+                    id: r.id,
+                    gen_len: r.gen_len,
+                    temperature: r.temperature,
+                    prompt: r.prompt.clone(),
+                })?;
+                next += 1;
+                inflight += 1;
+            }
+            match self.recv()? {
+                ServerMsg::Tok { id, index, token } => {
+                    let toks = partial.entry(id).or_default();
+                    ensure!(index == toks.len(),
+                            "token stream gap for request {id}: index \
+                             {index} after {} tokens", toks.len());
+                    toks.push(token);
+                }
+                ServerMsg::Done { id, n_tokens, logprob_bits, shard } => {
+                    let tokens = partial.remove(&id).unwrap_or_default();
+                    ensure!(tokens.len() == n_tokens,
+                            "done for request {id} declares {n_tokens} \
+                             tokens but {} were streamed", tokens.len());
+                    outcomes.push(WireOutcome::Done(WireResponse {
+                        id, tokens, logprob_bits, shard,
+                    }));
+                    inflight -= 1;
+                }
+                ServerMsg::Busy { id } => {
+                    outcomes.push(WireOutcome::Busy(id));
+                    inflight -= 1;
+                }
+                ServerMsg::Closing { id } => {
+                    outcomes.push(WireOutcome::Closing(id));
+                    inflight -= 1;
+                }
+                ServerMsg::Error { id: Some(id), msg } => {
+                    outcomes.push(WireOutcome::Failed { id, msg });
+                    inflight -= 1;
+                }
+                ServerMsg::Error { id: None, msg } => {
+                    bail!("protocol error from server: {msg}");
+                }
+                other => bail!("unexpected server message during \
+                                generation: {other:?}"),
+            }
+        }
+        Ok(outcomes)
+    }
+
+    /// Round-trip liveness check.
+    pub fn ping(&mut self) -> Result<()> {
+        self.send(&ClientMsg::Ping)?;
+        match self.recv()? {
+            ServerMsg::Pong => Ok(()),
+            other => bail!("expected pong, got {other:?}"),
+        }
+    }
+
+    /// Fetch the `/metrics` text snapshot.
+    pub fn metrics(&mut self) -> Result<String> {
+        self.send(&ClientMsg::Metrics)?;
+        match self.recv()? {
+            ServerMsg::Metrics { text } => Ok(text),
+            ServerMsg::Error { msg, .. } => bail!("metrics refused: {msg}"),
+            other => bail!("expected metrics, got {other:?}"),
+        }
+    }
+
+    /// Grow the live fleet by one shard; returns the server's ack line.
+    pub fn add_shard(&mut self) -> Result<String> {
+        self.send(&ClientMsg::AddShard)?;
+        self.expect_ok("add-shard")
+    }
+
+    /// Drain + retire one shard; returns the server's ack line.
+    pub fn remove_shard(&mut self, id: usize) -> Result<String> {
+        self.send(&ClientMsg::RemoveShard(id))?;
+        self.expect_ok("remove-shard")
+    }
+
+    /// Ask the server to drain and shut down; returns the ack line.
+    pub fn drain_server(&mut self) -> Result<String> {
+        self.send(&ClientMsg::Drain)?;
+        self.expect_ok("drain")
+    }
+
+    fn expect_ok(&mut self, what: &str) -> Result<String> {
+        match self.recv()? {
+            ServerMsg::Ok { msg } => Ok(msg),
+            ServerMsg::Error { msg, .. } => bail!("{what} refused: {msg}"),
+            other => bail!("expected ok for {what}, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,722 @@
+//! Network front door: TCP serving + live fleet operations for the
+//! packed cluster.
+//!
+//! Everything below PR 5 is in-process: [`crate::cluster::ServingCluster`]
+//! has a bounded front-door queue, a router and N engine shards, but no
+//! listener in front of it. This module is that listener — hand-rolled
+//! over `std::net` (no new crates, the same offline discipline as
+//! [`crate::engine::ThreadPool`]) with a small length-prefixed text
+//! protocol ([`proto`]).
+//!
+//! ## Topology
+//!
+//! ```text
+//! client ──TCP──▶ acceptor ─▶ per-conn reader ─▶ ServingCluster front
+//!                                    │               queue (bounded)
+//!                                    │                   │ router
+//!                                    ▼                   ▼
+//!                             per-conn writer ◀─ pump ◀─ shard workers
+//!                                    │          (merged ClusterResponse
+//! client ◀──TCP── streamed frames ◀──┘                stream)
+//! ```
+//!
+//! * **Acceptor**: one thread blocks in `TcpListener::accept`; each
+//!   connection gets a *reader* thread (parses request frames, submits
+//!   into the cluster) and a *writer* thread (the only writer to that
+//!   socket, fed by a bounded outbox channel — frames from the reader's
+//!   direct replies and the pump's streamed tokens can interleave per
+//!   message but never mid-frame).
+//! * **Pump**: one thread owns the cluster's merged response stream
+//!   ([`ServingCluster::take_responses`]) and forwards each completed
+//!   request to its connection as `tok` frames plus a `done` frame,
+//!   translating cluster-wide request ids back to the client's own ids.
+//! * **Admission**: the reader calls [`ServingCluster::try_submit`];
+//!   [`SubmitRefused::Full`] becomes a `busy` frame ("overloaded, retry
+//!   later"), [`SubmitRefused::Draining`] becomes `closing` ("shutting
+//!   down"), and validation failures come back as request-scoped `err`
+//!   frames. Accepted work is never dropped.
+//! * **Isolation**: a slow or vanished reader fills its own outbox; the
+//!   pump then disconnects THAT connection (its accepted work still
+//!   completes server-side) instead of blocking — one stalled client
+//!   cannot stall another client's stream, a worker, or the router.
+//!
+//! ## Fleet operations
+//!
+//! `add-shard` / `remove-shard <id>` frames (or the same methods on
+//! [`FrontDoor`] for the CLI's stdin console) call straight into
+//! [`ServingCluster::add_shard`] / [`ServingCluster::remove_shard`]:
+//! adding a shard is a plane-`Arc` refcount bump, removal is a graceful
+//! per-shard drain with the router re-routing in-flight placements.
+//! `metrics` returns a text snapshot ([`ServingCluster::live_stats`]):
+//! per-shard liveness/throughput, whole-cluster counters, queue depth
+//! and the queue/run/total latency percentiles.
+//!
+//! ## Drain lifecycle
+//!
+//! A `drain` frame (or SIGTERM→stdin `drain` in `rbtw serve`, or
+//! [`FrontDoor::drain`] directly) runs the same sequence: stop
+//! accepting connections, close the cluster's intake (new `gen` frames
+//! answer `closing`), let every accepted request finish and stream out,
+//! join the fleet, flush each connection's writer, then close the
+//! sockets and join every connection thread. The returned
+//! [`ClusterReport`] carries the final stats; responses themselves were
+//! already streamed to their clients.
+
+pub mod client;
+pub mod proto;
+
+pub use client::{FrontDoorClient, WireOutcome, WireResponse};
+pub use proto::{ClientMsg, FrameError, ServerMsg, MAX_FRAME};
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{ClusterReport, ClusterResponse, ClusterStats,
+                     ServingCluster, SubmitRefused};
+use crate::coordinator::Request;
+use proto::{read_frame, write_frame};
+
+/// Per-connection outbox depth (frames queued between the pump/reader
+/// and the writer). Sized so a full window of responses fits with
+/// margin; a connection that falls further behind than this is shed.
+const OUTBOX_CAP: usize = 4096;
+
+/// Upper bound on one blocking socket write. A healthy client drains
+/// its socket far faster; this only bounds how long a wedged writer can
+/// hold its thread (and therefore a drain) hostage.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Where a cluster-side completion must be delivered.
+struct PendingReq {
+    conn: u64,
+    client_id: u64,
+}
+
+struct ConnHandle {
+    tx: mpsc::SyncSender<ServerMsg>,
+    stream: TcpStream,
+}
+
+struct Shared {
+    cluster: Mutex<Option<ServingCluster>>,
+    conns: Mutex<HashMap<u64, ConnHandle>>,
+    /// cluster request id → (connection, client-scoped id).
+    pending: Mutex<HashMap<u64, PendingReq>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+    next_req: AtomicU64,
+    draining: AtomicBool,
+    stop_accept: AtomicBool,
+    /// Responses whose connection was gone or wedged at delivery time
+    /// (the request itself still completed).
+    dropped_deliveries: AtomicU64,
+    drain_flag: Mutex<bool>,
+    drain_cv: Condvar,
+}
+
+/// The running TCP front door; see the module docs.
+pub struct FrontDoor {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+    pump: Option<JoinHandle<u64>>,
+    stopped: bool,
+}
+
+impl FrontDoor {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port), take
+    /// ownership of `cluster`'s response stream and start serving.
+    pub fn serve(mut cluster: ServingCluster, listen: &str) -> Result<Self> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding front door to {listen}"))?;
+        let addr = listener.local_addr()
+            .context("reading the front door's local address")?;
+        let responses = cluster.take_responses()?;
+        let shared = Arc::new(Shared {
+            cluster: Mutex::new(Some(cluster)),
+            conns: Mutex::new(HashMap::new()),
+            pending: Mutex::new(HashMap::new()),
+            threads: Mutex::new(vec![]),
+            next_req: AtomicU64::new(1),
+            draining: AtomicBool::new(false),
+            stop_accept: AtomicBool::new(false),
+            dropped_deliveries: AtomicU64::new(0),
+            drain_flag: Mutex::new(false),
+            drain_cv: Condvar::new(),
+        });
+        let pump = {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name("rbtw-frontdoor-pump".to_string())
+                .spawn(move || pump_loop(sh, responses))
+                .context("spawning the front-door response pump")?
+        };
+        let acceptor = {
+            let sh = shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name("rbtw-frontdoor-accept".to_string())
+                .spawn(move || accept_loop(listener, sh));
+            match spawned {
+                Ok(h) => h,
+                Err(e) => {
+                    // tear back down: dropping the cluster drains it and
+                    // disconnects the pump's stream
+                    drop(shared.cluster.lock().unwrap().take());
+                    let _ = pump.join();
+                    return Err(e)
+                        .context("spawning the front-door acceptor");
+                }
+            }
+        };
+        Ok(Self {
+            addr,
+            shared,
+            acceptor: Some(acceptor),
+            pump: Some(pump),
+            stopped: false,
+        })
+    }
+
+    /// The bound address (resolves the actual port for `":0"` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Currently registered client connections.
+    pub fn connections(&self) -> usize {
+        self.shared.conns.lock().unwrap().len()
+    }
+
+    /// Whether a wire `drain` command has been received.
+    pub fn drain_requested(&self) -> bool {
+        *self.shared.drain_flag.lock().unwrap()
+    }
+
+    /// Block up to `timeout` for a wire `drain` command; returns whether
+    /// one has arrived. The serve loop polls this so a client-initiated
+    /// drain and an operator-initiated one converge on [`Self::drain`].
+    pub fn wait_drain_request(&self, timeout: Duration) -> bool {
+        let g = self.shared.drain_flag.lock().unwrap();
+        if *g {
+            return true;
+        }
+        let (g, _) = self.shared.drain_cv.wait_timeout(g, timeout).unwrap();
+        *g
+    }
+
+    /// The `/metrics` text (same payload the wire `metrics` command
+    /// returns); errors once the cluster is draining.
+    pub fn metrics_text(&self) -> Result<String> {
+        metrics_text(&self.shared)
+    }
+
+    /// Operator surface for the stdin console: grow the live fleet.
+    pub fn add_shard(&self) -> Result<usize> {
+        self.shared.cluster.lock().unwrap().as_mut()
+            .context("cluster is draining")?
+            .add_shard()
+    }
+
+    /// Operator surface for the stdin console: drain + remove a shard.
+    pub fn remove_shard(&self, id: usize) -> Result<()> {
+        self.shared.cluster.lock().unwrap().as_mut()
+            .context("cluster is draining")?
+            .remove_shard(id)
+            .map(|_| ())
+    }
+
+    /// Graceful shutdown; see the module docs' drain lifecycle. Every
+    /// accepted request completes and streams to its client before the
+    /// sockets close.
+    pub fn drain(mut self) -> Result<ClusterReport> {
+        self.stop().context("front door already stopped")?
+    }
+
+    /// Idempotent teardown shared by [`Self::drain`] and `Drop`.
+    fn stop(&mut self) -> Option<Result<ClusterReport>> {
+        if self.stopped {
+            return None;
+        }
+        self.stopped = true;
+        let shared = &self.shared;
+        shared.draining.store(true, Ordering::SeqCst);
+        // stop the acceptor: raise the flag, then self-connect to
+        // unblock its accept() so it observes the flag
+        shared.stop_accept.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // take the cluster out from under the connection handlers (gen
+        // frames answer `closing` from here on) and drain it: accepted
+        // work completes, shard workers exit, and the merged response
+        // stream disconnects after its last delivery
+        let cluster = shared.cluster.lock().unwrap().take();
+        let report = cluster.map(|c| c.drain());
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+        // every reply is now queued at its writer. Shut down only the
+        // READ half of each socket: readers unblock and exit, writers
+        // keep flushing, and each socket closes for real when its last
+        // handle drops (after the flush) — clients receive every frame.
+        for (_, h) in shared.conns.lock().unwrap().drain() {
+            let _ = h.stream.shutdown(Shutdown::Read);
+        }
+        let handles: Vec<JoinHandle<()>> = {
+            let mut t = shared.threads.lock().unwrap();
+            t.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        report
+    }
+}
+
+impl Drop for FrontDoor {
+    fn drop(&mut self) {
+        let _ = self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut next_conn = 0u64;
+    for stream in listener.incoming() {
+        if shared.stop_accept.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let conn_id = next_conn;
+        next_conn += 1;
+        let sh = shared.clone();
+        let spawned = std::thread::Builder::new()
+            .name(format!("rbtw-frontdoor-conn-{conn_id}"))
+            .spawn(move || conn_loop(stream, conn_id, sh));
+        match spawned {
+            Ok(h) => shared.threads.lock().unwrap().push(h),
+            Err(_) => {} // the stream drops here → connection refused
+        }
+    }
+}
+
+/// Per-connection reader: owns the socket's read half, parses frames,
+/// submits/answers, and tears the connection down on exit.
+fn conn_loop(stream: TcpStream, conn_id: u64, shared: Arc<Shared>) {
+    let (tx, rx) = mpsc::sync_channel::<ServerMsg>(OUTBOX_CAP);
+    let wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = wstream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let hstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer = std::thread::Builder::new()
+        .name(format!("rbtw-frontdoor-write-{conn_id}"))
+        .spawn(move || writer_loop(wstream, rx));
+    match writer {
+        Ok(h) => shared.threads.lock().unwrap().push(h),
+        Err(_) => return,
+    }
+    shared.conns.lock().unwrap().insert(conn_id, ConnHandle {
+        tx: tx.clone(),
+        stream: hstream,
+    });
+    // teardown raises stop_accept BEFORE it sweeps the conns map, so a
+    // registration that lands after the sweep must observe the flag
+    // here and hang up itself — otherwise its reader could block in
+    // read_frame forever with nobody left to shut the socket down
+    // (a wire `drain` alone keeps existing connections alive: they
+    // still stream accepted responses and answer `closing`)
+    if shared.stop_accept.load(Ordering::SeqCst) {
+        shared.conns.lock().unwrap().remove(&conn_id);
+        let _ = stream.shutdown(Shutdown::Both);
+        return;
+    }
+    let mut rstream = stream;
+    let mut shed = false;
+    loop {
+        match read_frame(&mut rstream) {
+            Ok(line) => {
+                if !handle_frame(&line, conn_id, &tx, &shared) {
+                    shed = true;
+                    break;
+                }
+            }
+            Err(FrameError::BadUtf8) => {
+                // the frame boundary is intact — report and carry on
+                let reply = ServerMsg::Error {
+                    id: None,
+                    msg: FrameError::BadUtf8.to_string(),
+                };
+                if tx.try_send(reply).is_err() {
+                    shed = true;
+                    break;
+                }
+            }
+            Err(e @ FrameError::Oversized(_)) => {
+                // the body was (deliberately) never read, so there is no
+                // boundary to resync at: report and hang up
+                let _ = tx.try_send(ServerMsg::Error {
+                    id: None,
+                    msg: e.to_string(),
+                });
+                break;
+            }
+            Err(_) => break, // Closed / Truncated / Io: peer is gone
+        }
+    }
+    shared.conns.lock().unwrap().remove(&conn_id);
+    if shed {
+        // the outbox is wedged or the writer died: cut the socket loose
+        // so nothing can block on this connection again
+        let _ = rstream.shutdown(Shutdown::Both);
+    }
+    // otherwise just drop our handles: the writer flushes whatever is
+    // queued (`busy`/`err` replies, streamed tokens) and the socket
+    // closes when its last clone drops
+}
+
+/// Handle one parsed frame; returns false when the connection should be
+/// shed (its outbox is full or its writer is gone).
+fn handle_frame(line: &str, conn_id: u64, tx: &mpsc::SyncSender<ServerMsg>,
+                shared: &Arc<Shared>) -> bool {
+    let send = |msg: ServerMsg| tx.try_send(msg).is_ok();
+    let msg = match ClientMsg::parse(line) {
+        Ok(m) => m,
+        Err(e) => return send(ServerMsg::Error { id: None, msg: e }),
+    };
+    match msg {
+        ClientMsg::Ping => send(ServerMsg::Pong),
+        ClientMsg::Metrics => {
+            let reply = match metrics_text(shared) {
+                Ok(text) => ServerMsg::Metrics { text },
+                Err(e) => ServerMsg::Error { id: None,
+                                             msg: format!("{e:#}") },
+            };
+            send(reply)
+        }
+        ClientMsg::AddShard => {
+            let res = {
+                let mut g = shared.cluster.lock().unwrap();
+                match g.as_mut() {
+                    Some(c) => c.add_shard().map_err(|e| format!("{e:#}")),
+                    None => Err("cluster is draining".to_string()),
+                }
+            };
+            let reply = match res {
+                Ok(id) => ServerMsg::Ok { msg: format!("added shard {id}") },
+                Err(e) => ServerMsg::Error { id: None, msg: e },
+            };
+            send(reply)
+        }
+        ClientMsg::RemoveShard(id) => {
+            let res = {
+                let mut g = shared.cluster.lock().unwrap();
+                match g.as_mut() {
+                    Some(c) => c.remove_shard(id)
+                        .map(|row| row.server.completed)
+                        .map_err(|e| format!("{e:#}")),
+                    None => Err("cluster is draining".to_string()),
+                }
+            };
+            let reply = match res {
+                Ok(completed) => ServerMsg::Ok {
+                    msg: format!(
+                        "removed shard {id} ({completed} requests served)"),
+                },
+                Err(e) => ServerMsg::Error { id: None, msg: e },
+            };
+            send(reply)
+        }
+        ClientMsg::Drain => {
+            // flags BEFORE the ack: once a client reads "draining",
+            // every later gen on any connection must answer `closing`
+            shared.draining.store(true, Ordering::SeqCst);
+            if let Some(c) = shared.cluster.lock().unwrap().as_ref() {
+                c.close_intake();
+            }
+            *shared.drain_flag.lock().unwrap() = true;
+            shared.drain_cv.notify_all();
+            send(ServerMsg::Ok { msg: "draining".to_string() })
+        }
+        ClientMsg::Gen { id, gen_len, temperature, prompt } => {
+            if shared.draining.load(Ordering::SeqCst) {
+                return send(ServerMsg::Closing { id });
+            }
+            let cid = shared.next_req.fetch_add(1, Ordering::SeqCst);
+            // register the route-back BEFORE submitting: a fast shard
+            // could otherwise complete the request before the pump can
+            // find out where its response goes
+            shared.pending.lock().unwrap()
+                .insert(cid, PendingReq { conn: conn_id, client_id: id });
+            let res = {
+                let mut g = shared.cluster.lock().unwrap();
+                match g.as_mut() {
+                    Some(c) => c.try_submit(Request {
+                        id: cid,
+                        prompt,
+                        gen_len,
+                        temperature,
+                    }),
+                    None => Err(SubmitRefused::Draining),
+                }
+            };
+            match res {
+                Ok(()) => true,
+                Err(refused) => {
+                    shared.pending.lock().unwrap().remove(&cid);
+                    let reply = match refused {
+                        SubmitRefused::Full { .. } => ServerMsg::Busy { id },
+                        SubmitRefused::Draining => ServerMsg::Closing { id },
+                        SubmitRefused::Invalid(m) => ServerMsg::Error {
+                            id: Some(id),
+                            msg: m,
+                        },
+                    };
+                    send(reply)
+                }
+            }
+        }
+    }
+}
+
+/// The only writer to its socket: drains the outbox until every sender
+/// is gone (or the socket dies), so frames never interleave mid-frame.
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<ServerMsg>) {
+    while let Ok(msg) = rx.recv() {
+        if write_frame(&mut stream, &msg.encode()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Owns the cluster's merged response stream: translate cluster ids back
+/// to (connection, client id) and stream `tok` + `done` frames. Returns
+/// the number of fully delivered responses. Never blocks on a slow
+/// connection — it sheds it instead.
+fn pump_loop(shared: Arc<Shared>, rx: mpsc::Receiver<ClusterResponse>)
+    -> u64 {
+    let mut delivered = 0u64;
+    while let Ok(cr) = rx.recv() {
+        let pend = shared.pending.lock().unwrap().remove(&cr.response.id);
+        let Some(p) = pend else { continue };
+        let tx = shared.conns.lock().unwrap()
+            .get(&p.conn)
+            .map(|h| h.tx.clone());
+        let Some(tx) = tx else {
+            // client hung up before its answer; the work is complete
+            // and accounted — only the delivery is dropped
+            shared.dropped_deliveries.fetch_add(1, Ordering::SeqCst);
+            continue;
+        };
+        let mut ok = true;
+        for (i, &t) in cr.response.generated.iter().enumerate() {
+            let frame = ServerMsg::Tok { id: p.client_id, index: i,
+                                         token: t };
+            if tx.try_send(frame).is_err() {
+                ok = false;
+                break;
+            }
+        }
+        if ok {
+            ok = tx.try_send(ServerMsg::Done {
+                id: p.client_id,
+                n_tokens: cr.response.generated.len(),
+                logprob_bits: cr.response.prompt_logprob.to_bits(),
+                shard: cr.shard,
+            }).is_ok();
+        }
+        if ok {
+            delivered += 1;
+        } else {
+            // slow reader: its outbox is full (or its writer died). Shed
+            // THIS connection so its backlog cannot stall the pump — and
+            // through it every other client's stream
+            shared.dropped_deliveries.fetch_add(1, Ordering::SeqCst);
+            if let Some(h) = shared.conns.lock().unwrap().remove(&p.conn) {
+                let _ = h.stream.shutdown(Shutdown::Both);
+            }
+        }
+    }
+    delivered
+}
+
+/// Front-door-level context folded into the metrics text alongside the
+/// cluster's [`ClusterStats`].
+struct MetricsMeta {
+    live_shards: Vec<usize>,
+    queue_depth: usize,
+    queue_capacity: usize,
+    submitted: u64,
+    weight_bytes: usize,
+    draining: bool,
+    connections: usize,
+    dropped_deliveries: u64,
+}
+
+fn metrics_text(shared: &Shared) -> Result<String> {
+    let g = shared.cluster.lock().unwrap();
+    let c = g.as_ref().context("cluster is draining")?;
+    let stats = c.live_stats();
+    let meta = MetricsMeta {
+        live_shards: c.shard_ids(),
+        queue_depth: c.pending(),
+        queue_capacity: c.queue_capacity(),
+        submitted: c.submitted(),
+        weight_bytes: c.weight_bytes(),
+        draining: c.is_draining(),
+        connections: shared.conns.lock().unwrap().len(),
+        dropped_deliveries: shared.dropped_deliveries
+            .load(Ordering::SeqCst),
+    };
+    Ok(render_metrics(&stats, &meta))
+}
+
+/// Render the `/metrics` text: one `name value` (or
+/// `name{label} value`) pair per line, in the flat text style scrapers
+/// expect. Per-shard liveness uses a 0/1 gauge so a scrape shows the
+/// changed shard set after add/remove (retired shards stay visible at
+/// 0 with their final counters).
+fn render_metrics(stats: &ClusterStats, meta: &MetricsMeta) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(1024);
+    let mut line = |s: String| {
+        out.push_str(&s);
+        out.push('\n');
+    };
+    line(format!("rbtw_frontdoor_connections {}", meta.connections));
+    line(format!("rbtw_frontdoor_dropped_deliveries {}",
+                 meta.dropped_deliveries));
+    line(format!("rbtw_cluster_draining {}", meta.draining as u8));
+    line(format!("rbtw_cluster_live_shards {}", meta.live_shards.len()));
+    line(format!("rbtw_cluster_queue_depth {}", meta.queue_depth));
+    line(format!("rbtw_cluster_queue_capacity {}", meta.queue_capacity));
+    line(format!("rbtw_cluster_submitted {}", meta.submitted));
+    line(format!("rbtw_cluster_completed {}", stats.completed));
+    line(format!("rbtw_cluster_tokens_processed {}",
+                 stats.tokens_processed));
+    line(format!("rbtw_cluster_engine_steps {}", stats.engine_steps));
+    line(format!("rbtw_cluster_weight_bytes {}", meta.weight_bytes));
+    line(format!("rbtw_cluster_tokens_per_sec {:.3}",
+                 stats.tokens_per_sec));
+    for (path, s) in [("queue", &stats.queue), ("run", &stats.run),
+                      ("total", &stats.total)] {
+        for (q, v) in [("p50", s.p50_ms), ("p95", s.p95_ms),
+                       ("p99", s.p99_ms)] {
+            line(format!(
+                "rbtw_latency_ms{{path=\"{path}\",q=\"{q}\"}} {v:.3}"));
+        }
+    }
+    let mut shard_lines = String::new();
+    for s in &stats.shards {
+        let live = !s.retired;
+        let _ = writeln!(shard_lines,
+                         "rbtw_shard_live{{shard=\"{}\"}} {}",
+                         s.shard, live as u8);
+        let _ = writeln!(shard_lines,
+                         "rbtw_shard_routed{{shard=\"{}\"}} {}",
+                         s.shard, s.routed);
+        let _ = writeln!(shard_lines,
+                         "rbtw_shard_completed{{shard=\"{}\"}} {}",
+                         s.shard, s.server.completed);
+        let _ = writeln!(shard_lines,
+                         "rbtw_shard_tokens_per_sec{{shard=\"{}\"}} {:.3}",
+                         s.shard, s.tokens_per_sec);
+    }
+    out.push_str(&shard_lines);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ShardStats;
+    use crate::coordinator::ServerStats;
+
+    #[test]
+    fn metrics_text_reports_the_shard_set() {
+        let mut stats = ClusterStats::default();
+        stats.completed = 12;
+        stats.tokens_processed = 48;
+        stats.shards.push(ShardStats {
+            shard: 0,
+            routed: 7,
+            server: ServerStats { completed: 7, engine_steps: 30,
+                                  tokens_processed: 28,
+                                  peak_active_slots: 2 },
+            tokens_per_sec: 10.0,
+            retired: true,
+        });
+        stats.shards.push(ShardStats {
+            shard: 1,
+            routed: 5,
+            server: ServerStats { completed: 5, engine_steps: 22,
+                                  tokens_processed: 20,
+                                  peak_active_slots: 2 },
+            tokens_per_sec: 8.0,
+            retired: false,
+        });
+        let meta = MetricsMeta {
+            live_shards: vec![1],
+            queue_depth: 3,
+            queue_capacity: 256,
+            submitted: 15,
+            weight_bytes: 4096,
+            draining: false,
+            connections: 2,
+            dropped_deliveries: 0,
+        };
+        let text = render_metrics(&stats, &meta);
+        assert!(text.contains("rbtw_cluster_live_shards 1\n"));
+        assert!(text.contains("rbtw_shard_live{shard=\"0\"} 0\n"),
+                "retired shard visible at 0: {text}");
+        assert!(text.contains("rbtw_shard_live{shard=\"1\"} 1\n"));
+        assert!(text.contains("rbtw_cluster_queue_depth 3\n"));
+        assert!(text.contains("rbtw_cluster_completed 12\n"));
+        assert!(text.contains("rbtw_latency_ms{path=\"total\",q=\"p99\"}"));
+        assert!(text.len() <= proto::MAX_FRAME,
+                "metrics text must fit one frame");
+    }
+
+    #[test]
+    fn metrics_text_fits_one_frame_at_max_fleet_size() {
+        // worst case: MAX_SHARDS shards with large counters must still
+        // fit the frame cap (the metrics reply is a single frame)
+        let mut stats = ClusterStats::default();
+        for id in 0..crate::engine::BackendSpec::MAX_SHARDS {
+            stats.shards.push(ShardStats {
+                shard: id,
+                routed: u64::MAX,
+                server: ServerStats { completed: u64::MAX,
+                                      engine_steps: u64::MAX,
+                                      tokens_processed: u64::MAX,
+                                      peak_active_slots: usize::MAX },
+                tokens_per_sec: 1e12,
+                retired: id % 2 == 0,
+            });
+        }
+        let meta = MetricsMeta {
+            live_shards: (0..crate::engine::BackendSpec::MAX_SHARDS)
+                .collect(),
+            queue_depth: usize::MAX,
+            queue_capacity: usize::MAX,
+            submitted: u64::MAX,
+            weight_bytes: usize::MAX,
+            draining: true,
+            connections: usize::MAX,
+            dropped_deliveries: u64::MAX,
+        };
+        let text = render_metrics(&stats, &meta);
+        assert!(text.len() <= proto::MAX_FRAME,
+                "metrics for a max fleet must fit one frame \
+                 ({} bytes)", text.len());
+    }
+}

@@ -1,0 +1,456 @@
+//! The front-door wire protocol: length-prefixed UTF-8 text frames.
+//!
+//! ## Framing
+//!
+//! Every message in either direction is one frame: a 4-byte big-endian
+//! `u32` payload length followed by that many bytes of UTF-8 text.
+//! Frames are self-delimiting, so multi-line payloads (the metrics
+//! text) need no escaping, and a reader can always resynchronize at the
+//! next frame boundary. Lengths above [`MAX_FRAME`] are rejected
+//! *before* any allocation — a hostile 4 GiB prefix costs the server
+//! four bytes of reads, not four gigabytes of memory.
+//!
+//! ## Messages
+//!
+//! Client → server ([`ClientMsg`]):
+//!
+//! | frame                                   | meaning                      |
+//! |-----------------------------------------|------------------------------|
+//! | `gen <id> <gen_len> <temp> <tok...>`    | submit a generation request  |
+//! | `metrics`                               | fetch the metrics text       |
+//! | `add-shard`                             | grow the live fleet by one   |
+//! | `remove-shard <id>`                     | gracefully drain shard `id`  |
+//! | `drain`                                 | finish accepted work, close  |
+//! | `ping`                                  | liveness probe               |
+//!
+//! Server → client ([`ServerMsg`]):
+//!
+//! | frame                                   | meaning                      |
+//! |-----------------------------------------|------------------------------|
+//! | `tok <id> <index> <token>`              | one streamed generated token |
+//! | `done <id> <n> <logprob:016x> <shard>`  | request complete             |
+//! | `busy <id>`                             | overloaded — retry later     |
+//! | `closing <id>`                          | draining — no new work       |
+//! | `err - <msg>` / `err <id> <msg>`        | protocol / request error     |
+//! | `ok <msg>`                              | fleet-operation acknowledged |
+//! | `pong`                                  | ping reply                   |
+//! | `metrics <text>`                        | metrics payload (multi-line) |
+//!
+//! `done` carries the prompt log-prob as the hex bits of its `f64`
+//! (`f64::to_bits`, zero-padded to 16 digits) so the value survives the
+//! text protocol bit-exactly — the basis of the ci.sh wire-vs-in-process
+//! digest gate. Token ids in `gen`/`tok` are the request's own `id`
+//! namespace (per connection); the front door maps them to cluster-wide
+//! ids internally, so concurrent connections can both use id 0.
+
+use std::io::{self, Read, Write};
+
+/// Hard ceiling on one frame's payload bytes (checked before the body
+/// is read or allocated). Large enough for a metrics dump over a big
+/// fleet and for long prompts; far below anything that could pressure
+/// the server's memory.
+pub const MAX_FRAME: usize = 64 * 1024;
+
+/// Upper bound on tokens requested per generation over the wire — an
+/// admission sanity cap so one frame cannot commit the server to an
+/// absurd amount of work (in-process callers are trusted; sockets are
+/// not).
+pub const MAX_WIRE_GEN: usize = 65536;
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean EOF exactly at a frame boundary — the peer closed.
+    Closed,
+    /// EOF mid-prefix or mid-payload — the peer vanished mid-frame.
+    Truncated,
+    /// Declared length exceeds [`MAX_FRAME`]; nothing was allocated.
+    Oversized(usize),
+    /// The payload is not valid UTF-8 (frame boundary still intact).
+    BadUtf8,
+    Io(io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "connection closed"),
+            FrameError::Truncated => write!(f, "connection closed mid-frame"),
+            FrameError::Oversized(n) => write!(
+                f, "frame length {n} exceeds the {MAX_FRAME}-byte limit"),
+            FrameError::BadUtf8 => write!(f, "frame payload is not UTF-8"),
+            FrameError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Write one length-prefixed frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, payload: &str) -> io::Result<()> {
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame payload {} exceeds MAX_FRAME {}", bytes.len(),
+                    MAX_FRAME)));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+/// Read one frame. Distinguishes a clean close (EOF before any prefix
+/// byte) from a mid-frame disconnect, and refuses oversized lengths
+/// before allocating or reading the body.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<String, FrameError> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 {
+                    FrameError::Closed
+                } else {
+                    FrameError::Truncated
+                });
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let len = u32::from_be_bytes(len4) as usize;
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut buf = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => return Err(FrameError::Truncated),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    String::from_utf8(buf).map_err(|_| FrameError::BadUtf8)
+}
+
+/// A parsed client → server message; see the module docs for the wire
+/// spellings.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientMsg {
+    Gen {
+        /// Client-chosen request id (scoped to this connection).
+        id: u64,
+        gen_len: usize,
+        temperature: f32,
+        prompt: Vec<i32>,
+    },
+    Metrics,
+    AddShard,
+    RemoveShard(usize),
+    Drain,
+    Ping,
+}
+
+impl ClientMsg {
+    /// Wire spelling of this message (inverse of [`Self::parse`]).
+    pub fn encode(&self) -> String {
+        match self {
+            ClientMsg::Gen { id, gen_len, temperature, prompt } => {
+                let mut s = format!("gen {id} {gen_len} {temperature}");
+                for t in prompt {
+                    s.push(' ');
+                    s.push_str(&t.to_string());
+                }
+                s
+            }
+            ClientMsg::Metrics => "metrics".to_string(),
+            ClientMsg::AddShard => "add-shard".to_string(),
+            ClientMsg::RemoveShard(id) => format!("remove-shard {id}"),
+            ClientMsg::Drain => "drain".to_string(),
+            ClientMsg::Ping => "ping".to_string(),
+        }
+    }
+
+    /// Parse one frame's payload. Errors are human-readable and safe to
+    /// echo back in an `err` reply.
+    pub fn parse(line: &str) -> Result<Self, String> {
+        let mut parts = line.split_whitespace();
+        let verb = parts.next().ok_or("empty frame")?;
+        let msg = match verb {
+            "gen" => {
+                let id: u64 = parse_field(parts.next(), "gen id")?;
+                let gen_len: usize =
+                    parse_field(parts.next(), "gen length")?;
+                if gen_len == 0 || gen_len > MAX_WIRE_GEN {
+                    return Err(format!(
+                        "gen length {gen_len} out of range [1, \
+                         {MAX_WIRE_GEN}]"));
+                }
+                let temperature: f32 =
+                    parse_field(parts.next(), "gen temperature")?;
+                if !temperature.is_finite() || temperature < 0.0 {
+                    return Err(format!(
+                        "gen temperature {temperature} must be finite and \
+                         >= 0"));
+                }
+                let mut prompt = vec![];
+                for p in parts {
+                    prompt.push(p.parse::<i32>().map_err(|_| {
+                        format!("bad prompt token '{p}'")
+                    })?);
+                }
+                if prompt.is_empty() {
+                    return Err("gen needs at least one prompt token"
+                        .to_string());
+                }
+                ClientMsg::Gen { id, gen_len, temperature, prompt }
+            }
+            "metrics" => ClientMsg::Metrics,
+            "add-shard" => ClientMsg::AddShard,
+            "remove-shard" => {
+                let id: usize = parse_field(parts.next(), "shard id")?;
+                ClientMsg::RemoveShard(id)
+            }
+            "drain" => ClientMsg::Drain,
+            "ping" => ClientMsg::Ping,
+            other => return Err(format!(
+                "unknown command '{other}' (accepted: gen, metrics, \
+                 add-shard, remove-shard, drain, ping)")),
+        };
+        Ok(msg)
+    }
+}
+
+/// A parsed server → client message; see the module docs for the wire
+/// spellings.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerMsg {
+    /// One streamed generated token (`index` counts from 0 within the
+    /// request).
+    Tok { id: u64, index: usize, token: i32 },
+    /// Request complete: `n_tokens` were streamed, the prompt log-prob
+    /// travels as its `f64` bit pattern (bit-exact through text), and
+    /// `shard` names the engine that served it.
+    Done { id: u64, n_tokens: usize, logprob_bits: u64, shard: usize },
+    /// Overloaded — the bounded front door refused; retry later.
+    Busy { id: u64 },
+    /// Draining — no new work; everything already accepted completes.
+    Closing { id: u64 },
+    /// Protocol or request error; `id` is present when the error is
+    /// scoped to one request.
+    Error { id: Option<u64>, msg: String },
+    /// Fleet operation acknowledged.
+    Ok { msg: String },
+    Pong,
+    /// The metrics text (multi-line; frames are length-delimited so no
+    /// escaping is needed).
+    Metrics { text: String },
+}
+
+impl ServerMsg {
+    pub fn encode(&self) -> String {
+        match self {
+            ServerMsg::Tok { id, index, token } => {
+                format!("tok {id} {index} {token}")
+            }
+            ServerMsg::Done { id, n_tokens, logprob_bits, shard } => {
+                format!("done {id} {n_tokens} {logprob_bits:016x} {shard}")
+            }
+            ServerMsg::Busy { id } => format!("busy {id}"),
+            ServerMsg::Closing { id } => format!("closing {id}"),
+            ServerMsg::Error { id: Some(id), msg } => format!("err {id} {msg}"),
+            ServerMsg::Error { id: None, msg } => format!("err - {msg}"),
+            ServerMsg::Ok { msg } => format!("ok {msg}"),
+            ServerMsg::Pong => "pong".to_string(),
+            ServerMsg::Metrics { text } => format!("metrics {text}"),
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Self, String> {
+        let (verb, rest) = match line.split_once(' ') {
+            Some((v, r)) => (v, r),
+            None => (line, ""),
+        };
+        let mut parts = rest.split_whitespace();
+        let msg = match verb {
+            "tok" => ServerMsg::Tok {
+                id: parse_field(parts.next(), "tok id")?,
+                index: parse_field(parts.next(), "tok index")?,
+                token: parse_field(parts.next(), "tok token")?,
+            },
+            "done" => ServerMsg::Done {
+                id: parse_field(parts.next(), "done id")?,
+                n_tokens: parse_field(parts.next(), "done count")?,
+                logprob_bits: u64::from_str_radix(
+                    parts.next().ok_or("missing done logprob")?, 16)
+                    .map_err(|_| "bad done logprob".to_string())?,
+                shard: parse_field(parts.next(), "done shard")?,
+            },
+            "busy" => ServerMsg::Busy {
+                id: parse_field(parts.next(), "busy id")?,
+            },
+            "closing" => ServerMsg::Closing {
+                id: parse_field(parts.next(), "closing id")?,
+            },
+            "err" => {
+                let (tag, msg) = match rest.split_once(' ') {
+                    Some((t, m)) => (t, m.to_string()),
+                    None => (rest, String::new()),
+                };
+                let id = if tag == "-" {
+                    None
+                } else {
+                    Some(tag.parse::<u64>()
+                        .map_err(|_| format!("bad err id '{tag}'"))?)
+                };
+                ServerMsg::Error { id, msg }
+            }
+            "ok" => ServerMsg::Ok { msg: rest.to_string() },
+            "pong" => ServerMsg::Pong,
+            "metrics" => ServerMsg::Metrics { text: rest.to_string() },
+            other => return Err(format!("unknown server message '{other}'")),
+        };
+        Ok(msg)
+    }
+}
+
+fn parse_field<T: std::str::FromStr>(part: Option<&str>, what: &str)
+    -> Result<T, String> {
+    let p = part.ok_or_else(|| format!("missing {what}"))?;
+    p.parse::<T>().map_err(|_| format!("bad {what} '{p}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let mut buf = vec![];
+        write_frame(&mut buf, "gen 1 4 0 2 3").unwrap();
+        write_frame(&mut buf, "").unwrap();
+        write_frame(&mut buf, "metrics line one\nline two").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), "gen 1 4 0 2 3");
+        assert_eq!(read_frame(&mut r).unwrap(), "");
+        assert_eq!(read_frame(&mut r).unwrap(), "metrics line one\nline two");
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn oversized_length_is_refused_before_allocation() {
+        let mut buf = vec![];
+        buf.extend_from_slice(&(u32::MAX).to_be_bytes());
+        buf.extend_from_slice(b"whatever");
+        let mut r = &buf[..];
+        match read_frame(&mut r) {
+            Err(FrameError::Oversized(n)) => {
+                assert_eq!(n, u32::MAX as usize)
+            }
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // one byte past the cap is also refused
+        let mut buf = vec![];
+        buf.extend_from_slice(&((MAX_FRAME as u32) + 1).to_be_bytes());
+        let mut r = &buf[..];
+        assert!(matches!(read_frame(&mut r),
+                         Err(FrameError::Oversized(_))));
+        // and writers refuse to produce such a frame in the first place
+        let big = "x".repeat(MAX_FRAME + 1);
+        assert!(write_frame(&mut vec![], &big).is_err());
+    }
+
+    #[test]
+    fn truncation_is_distinguished_from_clean_close() {
+        // mid-prefix
+        let buf = [0u8, 0];
+        let mut r = &buf[..];
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Truncated)));
+        // mid-payload
+        let mut buf = vec![];
+        buf.extend_from_slice(&8u32.to_be_bytes());
+        buf.extend_from_slice(b"abc");
+        let mut r = &buf[..];
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Truncated)));
+    }
+
+    #[test]
+    fn invalid_utf8_keeps_the_frame_boundary() {
+        let mut buf = vec![];
+        buf.extend_from_slice(&2u32.to_be_bytes());
+        buf.extend_from_slice(&[0xff, 0xfe]);
+        write_frame(&mut buf, "ping").unwrap();
+        let mut r = &buf[..];
+        assert!(matches!(read_frame(&mut r), Err(FrameError::BadUtf8)));
+        // the next frame is still readable — resync at the boundary
+        assert_eq!(read_frame(&mut r).unwrap(), "ping");
+    }
+
+    #[test]
+    fn client_messages_roundtrip() {
+        let msgs = [
+            ClientMsg::Gen { id: 7, gen_len: 12, temperature: 0.0,
+                             prompt: vec![1, 2, 3] },
+            ClientMsg::Metrics,
+            ClientMsg::AddShard,
+            ClientMsg::RemoveShard(3),
+            ClientMsg::Drain,
+            ClientMsg::Ping,
+        ];
+        for m in msgs {
+            assert_eq!(ClientMsg::parse(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn server_messages_roundtrip() {
+        let msgs = [
+            ServerMsg::Tok { id: 9, index: 0, token: -1 },
+            ServerMsg::Done { id: 9, n_tokens: 4,
+                              logprob_bits: (-1.5f64).to_bits(), shard: 2 },
+            ServerMsg::Busy { id: 1 },
+            ServerMsg::Closing { id: 2 },
+            ServerMsg::Error { id: Some(3), msg: "bad prompt".into() },
+            ServerMsg::Error { id: None, msg: "unknown command".into() },
+            ServerMsg::Ok { msg: "added shard 4".into() },
+            ServerMsg::Pong,
+            ServerMsg::Metrics { text: "a 1\nb 2".into() },
+        ];
+        for m in msgs {
+            assert_eq!(ServerMsg::parse(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn logprob_bits_survive_the_text_protocol_bit_exactly() {
+        for v in [0.0f64, -0.0, -123.456789e-12, f64::MIN_POSITIVE,
+                  -87.125] {
+            let m = ServerMsg::Done { id: 0, n_tokens: 0,
+                                      logprob_bits: v.to_bits(), shard: 0 };
+            match ServerMsg::parse(&m.encode()).unwrap() {
+                ServerMsg::Done { logprob_bits, .. } => {
+                    assert_eq!(f64::from_bits(logprob_bits).to_bits(),
+                               v.to_bits());
+                }
+                other => panic!("expected Done, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn gen_parse_rejects_malformed_requests() {
+        for bad in ["", "gen", "gen 1", "gen 1 4", "gen 1 4 0",
+                    "gen x 4 0 1", "gen 1 0 0 1", "gen 1 4 -1 1",
+                    "gen 1 4 nan 1", "gen 1 4 0 1 notanumber",
+                    "launch-missiles", "remove-shard", "remove-shard x"] {
+            assert!(ClientMsg::parse(bad).is_err(), "should reject: {bad:?}");
+        }
+        // a huge gen_len is an admission error, not accepted work
+        let huge = format!("gen 1 {} 0 1", MAX_WIRE_GEN + 1);
+        assert!(ClientMsg::parse(&huge).is_err());
+    }
+}

@@ -53,13 +53,34 @@
 //! (least-loaded or round-robin, [`cluster::RoutePolicy`]) feed the
 //! shards; completions merge into one response stream. Greedy cluster
 //! responses are bit-identical to the single server for every shard
-//! count and policy.
+//! count and policy. The fleet is live-mutable: [`cluster::ServingCluster::add_shard`]
+//! grows it (a plane-`Arc` refcount bump, no weight copy) and
+//! [`cluster::ServingCluster::remove_shard`] drains and retires one
+//! shard while the rest keep serving; admission is typed
+//! ([`cluster::SubmitRefused`]) so overload and drain are
+//! distinguishable refusals rather than one opaque error.
+//!
+//! # Network front door
+//!
+//! [`frontdoor::FrontDoor`] puts a TCP listener in front of the
+//! cluster — hand-rolled over `std::net` with a length-prefixed text
+//! protocol ([`frontdoor::proto`]): an acceptor plus per-connection
+//! reader/writer threads feed the bounded cluster queue, and a pump
+//! thread streams each completion back as per-token `tok` frames the
+//! moment the merged response stream yields it. The wire carries the
+//! prompt log-prob as raw f64 bits, so socket responses are
+//! bit-identical to an in-process run of the same model — the same
+//! digest gate the cluster layer already passes, extended across the
+//! network hop. Live fleet operations (`add-shard`, `remove-shard`,
+//! `metrics`, `drain`) ride the same protocol; `rbtw serve --listen`
+//! exposes the whole thing from the CLI with a stdin operator console.
 
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod frontdoor;
 pub mod hwsim;
 pub mod metrics;
 pub mod model;

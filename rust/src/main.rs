@@ -16,12 +16,14 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use rbtw::cluster::{run_cluster_load, RoutePolicy};
+use rbtw::cluster::{run_cluster_load, ClusterReport, RoutePolicy,
+                    ServingCluster};
 use rbtw::config::{default_spec_for_task, Config, ServeSpec};
 use rbtw::coordinator::{latency_breakdown, InferenceServer, LoadSpec,
                         Request, Split, Trainer};
 use rbtw::engine::{self, BackendKind, CellArch, InferBackend, ModelWeights,
                    SharedModel};
+use rbtw::frontdoor::FrontDoor;
 use rbtw::hwsim;
 use rbtw::model::export_packed;
 use rbtw::quant;
@@ -141,6 +143,10 @@ fn print_usage() {
          \x20                             --arch lstm|gru --layers N\n\
          \x20                             (<artifact> = 'synthetic' serves a\n\
          \x20                             generated model of that shape)\n\
+         \x20                             --listen HOST:PORT (network front\n\
+         \x20                             door; :0 = ephemeral. stdin console:\n\
+         \x20                             drain | metrics | add-shard |\n\
+         \x20                             remove-shard N)\n\
          \x20                             --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
@@ -295,6 +301,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         ServeSpec::LAYERS_RANGE.end());
         spec.layers = l;
     }
+    if let Some(l) = args.get("listen") {
+        anyhow::ensure!(l != "true",
+                        "--listen needs an address, e.g. --listen \
+                         127.0.0.1:4250 (:0 picks an ephemeral port)");
+        spec.listen = Some(l.to_string());
+    }
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
@@ -306,8 +318,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // target generates a model of the requested --arch/--layers
         // shape so deep/GRU serving can be demoed without artifacts.
         let weights = if name == "synthetic" {
-            ModelWeights::synthetic_arch(50, 128, spec.arch, spec.layers,
-                                         "ter", 0xBE)
+            ModelWeights::synthetic_serving(spec.arch, spec.layers)
         } else {
             ModelWeights::from_artifact(&dir, &name)?
         };
@@ -328,26 +339,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if spec.batch_gemm { "batched" } else { "per-slot" },
             shared.weight_bytes(),
         );
+        if spec.listen.is_some() {
+            // network front door: serve real sockets until a drain
+            // arrives (wire `drain` frame or stdin console)
+            return serve_network(shared, &spec);
+        }
         let load = LoadSpec { n_requests, prompt_len, gen_len,
                               temperature: 0.8, seed: 7 };
         let report = run_cluster_load(&shared, &backend_spec, spec.policy,
                                       spec.queue_cap, &load)?;
-        let s = &report.stats;
-        for sh in &s.shards {
-            println!(
-                "  shard {}: routed {:>4} | completed {:>4} | steps {:>6} | \
-                 {:.0} tok/s | peak batch {}",
-                sh.shard, sh.routed, sh.server.completed,
-                sh.server.engine_steps, sh.tokens_per_sec,
-                sh.server.peak_active_slots,
-            );
-        }
-        println!(
-            "served {} requests in {:.2}s | {:.0} tok/s | engine steps {} | \
-             latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms",
-            s.completed, s.wall_s, s.tokens_per_sec, s.engine_steps,
-            s.total.p50_ms, s.total.p95_ms, s.total.p99_ms,
-        );
+        print_cluster_summary(&report);
         return Ok(());
     }
 
@@ -393,6 +394,99 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total.p99_ms,
         server.stats.peak_active_slots,
     );
+    Ok(())
+}
+
+fn print_cluster_summary(report: &ClusterReport) {
+    let s = &report.stats;
+    for sh in &s.shards {
+        println!(
+            "  shard {}{}: routed {:>4} | completed {:>4} | steps {:>6} | \
+             {:.0} tok/s | peak batch {}",
+            sh.shard,
+            if sh.retired { " (retired)" } else { "" },
+            sh.routed, sh.server.completed,
+            sh.server.engine_steps, sh.tokens_per_sec,
+            sh.server.peak_active_slots,
+        );
+    }
+    println!(
+        "served {} requests in {:.2}s | {:.0} tok/s | engine steps {} | \
+         latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms",
+        s.completed, s.wall_s, s.tokens_per_sec, s.engine_steps,
+        s.total.p50_ms, s.total.p95_ms, s.total.p99_ms,
+    );
+}
+
+/// Serve the cluster behind the TCP front door until a drain arrives —
+/// over the wire (`drain` frame) or from the stdin operator console.
+fn serve_network(shared: SharedModel, spec: &ServeSpec) -> Result<()> {
+    let listen = spec.listen.as_deref().expect("serve_network needs listen");
+    let cluster = ServingCluster::new(&shared, &spec.backend_spec(),
+                                      spec.queue_cap, spec.policy)?;
+    let fd = FrontDoor::serve(cluster, listen)?;
+    // exact line scripts poll for (ci.sh waits for it before connecting)
+    println!("listening on {}", fd.local_addr());
+    println!("console: drain | quit | metrics | add-shard | remove-shard N");
+    // stdin console on its own thread; EOF just ends the console (a
+    // server with stdin </dev/null keeps serving until a wire drain)
+    let (tx, rx) = std::sync::mpsc::channel::<String>();
+    std::thread::spawn(move || {
+        let stdin = std::io::stdin();
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match std::io::BufRead::read_line(&mut stdin.lock(), &mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    if tx.send(line.trim().to_string()).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+    });
+    'serve: loop {
+        if fd.wait_drain_request(std::time::Duration::from_millis(200)) {
+            println!("drain requested over the wire");
+            break;
+        }
+        loop {
+            let cmd = match rx.try_recv() {
+                Ok(cmd) => cmd,
+                Err(_) => continue 'serve, // empty, or stdin closed
+            };
+            let mut words = cmd.split_whitespace();
+            match words.next() {
+                None => {}
+                Some("drain") | Some("quit") | Some("exit") => break 'serve,
+                Some("metrics") => match fd.metrics_text() {
+                    Ok(text) => print!("{text}"),
+                    Err(e) => eprintln!("metrics: {e:#}"),
+                },
+                Some("add-shard") => match fd.add_shard() {
+                    Ok(id) => println!("added shard {id}"),
+                    Err(e) => eprintln!("add-shard: {e:#}"),
+                },
+                Some("remove-shard") => {
+                    let id = words.next().and_then(|w| w.parse::<usize>().ok());
+                    match id {
+                        Some(id) => match fd.remove_shard(id) {
+                            Ok(()) => println!("removed shard {id}"),
+                            Err(e) => eprintln!("remove-shard: {e:#}"),
+                        },
+                        None => eprintln!("usage: remove-shard <id>"),
+                    }
+                }
+                Some(other) => eprintln!(
+                    "unknown command '{other}' (drain | quit | metrics | \
+                     add-shard | remove-shard N)"),
+            }
+        }
+    }
+    let report = fd.drain()?;
+    println!("drained; final cluster stats:");
+    print_cluster_summary(&report);
     Ok(())
 }
 

@@ -129,13 +129,14 @@ fn plane_bytes_allocated_once_per_model_not_per_shard() {
             let cluster = ServingCluster::new(&shared, &spec, 8,
                                               RoutePolicy::LeastLoaded)
                 .unwrap();
-            // one owner per live shard stack + the template, regardless
-            // of how many engines are serving — pointer identity plus
-            // refcount prove zero plane bytes were copied, for EVERY
-            // layer
+            // one owner per live shard stack + the template + the
+            // cluster's own model handle (kept for add_shard),
+            // regardless of how many engines are serving — pointer
+            // identity plus refcount prove zero plane bytes were
+            // copied, for EVERY layer
             for l in 0..2 {
                 assert_eq!(shared.stack().layer(l).wh().plane_owners(),
-                           1 + shards, "{} layer {l} shards={shards}",
+                           2 + shards, "{} layer {l} shards={shards}",
                            kind.label());
                 assert_eq!(shared.stack().layer(l).wh().plane_ptr(),
                            plane_ptrs[l].0);

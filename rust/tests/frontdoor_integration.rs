@@ -1,0 +1,373 @@
+//! Front-door integration: real sockets against a real cluster.
+//!
+//! Covers the wire contract end to end — bit-identical streamed
+//! responses vs in-process serving, typed admission refusals (`busy`
+//! vs `closing`), live shard add/remove under load with `/metrics`
+//! reflecting the changed fleet, graceful wire drain — and the abuse
+//! matrix: malformed frames, oversized length prefixes, partial
+//! writes, mid-stream disconnects and slow readers. None of it may
+//! panic a worker or corrupt another connection.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use rbtw::cluster::{run_cluster_load, RoutePolicy, ServingCluster};
+use rbtw::coordinator::{LoadSpec, Request};
+use rbtw::engine::{BackendKind, BackendSpec, ModelWeights, SharedModel};
+use rbtw::frontdoor::proto::{read_frame, write_frame};
+use rbtw::frontdoor::{ClientMsg, FrontDoor, FrontDoorClient, ServerMsg,
+                      WireOutcome};
+
+const KIND: BackendKind = BackendKind::PackedCpu;
+const SEED: u64 = 9;
+
+fn shared_model() -> SharedModel {
+    let w = ModelWeights::synthetic(30, 16, "ter", 0xD0);
+    SharedModel::prepare(&w, KIND, SEED).unwrap()
+}
+
+fn spec(shards: usize, slots: usize) -> BackendSpec {
+    BackendSpec::with(KIND, slots, SEED).with_shards(shards)
+}
+
+/// A served front door on an ephemeral loopback port.
+fn start(shards: usize, slots: usize, queue_cap: usize)
+    -> (FrontDoor, String) {
+    let cluster = ServingCluster::new(&shared_model(), &spec(shards, slots),
+                                      queue_cap, RoutePolicy::LeastLoaded)
+        .unwrap();
+    let fd = FrontDoor::serve(cluster, "127.0.0.1:0").unwrap();
+    let addr = fd.local_addr().to_string();
+    (fd, addr)
+}
+
+fn greedy_load(n: usize) -> (LoadSpec, Vec<Request>) {
+    load_with(n, 7)
+}
+
+fn load_with(n: usize, gen_len: usize) -> (LoadSpec, Vec<Request>) {
+    let load = LoadSpec { n_requests: n, prompt_len: 5, gen_len,
+                          temperature: 0.0, seed: 0x5151 };
+    let requests = load.requests(30);
+    (load, requests)
+}
+
+/// (id, tokens, logprob bits) rows sorted by id — the comparison shape.
+fn wire_rows(outcomes: Vec<WireOutcome>) -> Vec<(u64, Vec<i32>, u64)> {
+    let mut rows: Vec<_> = outcomes
+        .into_iter()
+        .map(|o| match o {
+            WireOutcome::Done(r) => (r.id, r.tokens, r.logprob_bits),
+            other => panic!("request not served: {other:?}"),
+        })
+        .collect();
+    rows.sort_by_key(|r| r.0);
+    rows
+}
+
+fn reference_rows(load: &LoadSpec) -> Vec<(u64, Vec<i32>, u64)> {
+    let report = run_cluster_load(&shared_model(), &spec(1, 4),
+                                  RoutePolicy::LeastLoaded, 64, load)
+        .unwrap();
+    let mut rows: Vec<_> = report.responses
+        .into_iter()
+        .map(|cr| (cr.response.id, cr.response.generated,
+                   cr.response.prompt_logprob.to_bits()))
+        .collect();
+    rows.sort_by_key(|r| r.0);
+    rows
+}
+
+#[test]
+fn wire_responses_bit_identical_to_in_process() {
+    let (fd, addr) = start(2, 4, 64);
+    let (load, requests) = greedy_load(24);
+    let mut client = FrontDoorClient::connect(&addr).unwrap();
+    client.ping().unwrap();
+    // window > 1 so responses interleave across requests on one socket
+    let outcomes = client.run_greedy(&requests, 8).unwrap();
+    let rows = wire_rows(outcomes);
+    assert_eq!(rows, reference_rows(&load),
+               "wire stream must be bit-identical to in-process serving \
+                (ids, every token, every logprob mantissa bit)");
+    drop(client);
+    let report = fd.drain().unwrap();
+    assert_eq!(report.stats.completed, 24);
+}
+
+#[test]
+fn overload_returns_busy_not_an_opaque_error() {
+    // tiny pipeline (queue 2, 1 shard x 1 slot) + long generations +
+    // a burst far larger than it can absorb → typed `busy` refusals on
+    // the wire while accepted requests still complete
+    let (fd, addr) = start(1, 1, 2);
+    let requests: Vec<Request> = (0..48u64)
+        .map(|id| Request { id, prompt: vec![(id % 30) as i32],
+                            gen_len: 256, temperature: 0.0 })
+        .collect();
+    let mut client = FrontDoorClient::connect(&addr).unwrap();
+    let outcomes = client.run_greedy(&requests, 48).unwrap();
+    assert_eq!(outcomes.len(), 48);
+    let done = outcomes.iter().filter(|o| o.done().is_some()).count();
+    let busy = outcomes.iter()
+        .filter(|o| matches!(o, WireOutcome::Busy(_)))
+        .count();
+    assert!(done >= 1, "the pipeline must still serve what it accepted");
+    assert!(busy >= 1,
+            "a 48-deep burst into a 2-deep queue must refuse with busy \
+             (done={done} busy={busy})");
+    assert_eq!(done + busy, 48, "no third outcome for a healthy client");
+    drop(client);
+    let report = fd.drain().unwrap();
+    assert_eq!(report.stats.completed, done as u64,
+               "exactly the accepted requests completed");
+}
+
+#[test]
+fn add_and_remove_shards_live_while_metrics_track_the_fleet() {
+    // THE acceptance path: grow 1 → 2 shards, retire shard 0, all under
+    // live load, with /metrics reflecting the changed shard set and
+    // zero accepted-request loss — and the tokens still bit-identical
+    // to a single-server run.
+    let (fd, addr) = start(1, 4, 64);
+    // longer generations keep the data stream in flight across the
+    // whole add → remove sequence
+    let (load, requests) = load_with(30, 48);
+    let data = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut client = FrontDoorClient::connect(&addr).unwrap();
+            client.run_greedy(&requests, 6).unwrap()
+        })
+    };
+    let mut ctl = FrontDoorClient::connect(&addr).unwrap();
+    let before = ctl.metrics().unwrap();
+    assert!(before.contains("rbtw_shard_live{shard=\"0\"} 1"),
+            "shard 0 live before the ops:\n{before}");
+    assert!(!before.contains("rbtw_shard_live{shard=\"1\"}"),
+            "no shard 1 yet:\n{before}");
+    let ack = ctl.add_shard().unwrap();
+    assert!(ack.contains("added shard 1"), "ack: {ack}");
+    let grown = ctl.metrics().unwrap();
+    assert!(grown.contains("rbtw_shard_live{shard=\"0\"} 1"), "{grown}");
+    assert!(grown.contains("rbtw_shard_live{shard=\"1\"} 1"), "{grown}");
+    assert!(grown.contains("rbtw_cluster_live_shards 2"), "{grown}");
+    let ack = ctl.remove_shard(0).unwrap();
+    assert!(ack.contains("removed shard 0"), "ack: {ack}");
+    let shrunk = ctl.metrics().unwrap();
+    assert!(shrunk.contains("rbtw_shard_live{shard=\"0\"} 0"),
+            "retired shard visible at 0:\n{shrunk}");
+    assert!(shrunk.contains("rbtw_shard_live{shard=\"1\"} 1"), "{shrunk}");
+    assert!(shrunk.contains("rbtw_cluster_live_shards 1"), "{shrunk}");
+    // the last shard must refuse to go
+    assert!(ctl.remove_shard(1).is_err());
+    // zero accepted loss across both fleet changes, and bit-identical
+    // tokens: routing NEVER touches greedy decode results
+    let outcomes = data.join().expect("data connection panicked");
+    let rows = wire_rows(outcomes);
+    assert_eq!(rows, reference_rows(&load));
+    drop(ctl);
+    let report = fd.drain().unwrap();
+    assert_eq!(report.stats.completed, 30, "zero accepted-request loss");
+    let routed: u64 = report.stats.shards.iter().map(|s| s.routed).sum();
+    assert_eq!(routed, 30);
+    assert!(report.stats.shards.iter().any(|s| s.retired),
+            "the retired shard's counters stay in the totals");
+}
+
+#[test]
+fn wire_drain_refuses_new_work_and_completes_accepted() {
+    let (fd, addr) = start(1, 2, 64);
+    let (_, requests) = greedy_load(10);
+    let reference = reference_rows(&greedy_load(10).0);
+    let mut data = FrontDoorClient::connect(&addr).unwrap();
+    // submit half, drain from a second connection, then submit the rest
+    for r in &requests[..5] {
+        data.send(&ClientMsg::Gen { id: r.id, gen_len: r.gen_len,
+                                    temperature: r.temperature,
+                                    prompt: r.prompt.clone() }).unwrap();
+    }
+    let mut ctl = FrontDoorClient::connect(&addr).unwrap();
+    let ack = ctl.drain_server().unwrap();
+    assert_eq!(ack, "draining");
+    for r in &requests[5..] {
+        data.send(&ClientMsg::Gen { id: r.id, gen_len: r.gen_len,
+                                    temperature: r.temperature,
+                                    prompt: r.prompt.clone() }).unwrap();
+    }
+    // collect exactly one terminal frame per request: the first five
+    // complete with their exact greedy tokens, the rest get `closing`
+    let mut done = 0u64;
+    let mut closing = 0u64;
+    let mut partial: std::collections::HashMap<u64, Vec<i32>> =
+        std::collections::HashMap::new();
+    let mut terminal = 0;
+    while terminal < 10 {
+        match data.recv().unwrap() {
+            ServerMsg::Tok { id, token, .. } => {
+                partial.entry(id).or_default().push(token);
+            }
+            ServerMsg::Done { id, logprob_bits, .. } => {
+                let toks = partial.remove(&id).unwrap_or_default();
+                let row = reference.iter().find(|r| r.0 == id).unwrap();
+                assert_eq!(toks, row.1, "request {id} tokens");
+                assert_eq!(logprob_bits, row.2, "request {id} logprob");
+                done += 1;
+                terminal += 1;
+            }
+            ServerMsg::Closing { .. } => {
+                closing += 1;
+                terminal += 1;
+            }
+            other => panic!("unexpected frame: {other:?}"),
+        }
+    }
+    assert_eq!(done, 5, "every accepted request completed");
+    assert_eq!(closing, 5, "every post-drain request got `closing`");
+    // the wire drain and the process-side drain converge
+    assert!(fd.drain_requested());
+    assert!(fd.wait_drain_request(Duration::from_millis(1)));
+    drop(data);
+    drop(ctl);
+    let report = fd.drain().unwrap();
+    assert_eq!(report.stats.completed, 5);
+}
+
+#[test]
+fn malformed_frames_error_without_hurting_other_connections() {
+    let (fd, addr) = start(1, 2, 16);
+    let mut abuser = TcpStream::connect(&addr).unwrap();
+    // unknown verb → err frame, connection stays up
+    write_frame(&mut abuser, "frobnicate 1 2 3").unwrap();
+    match ServerMsg::parse(&read_frame(&mut abuser).unwrap()).unwrap() {
+        ServerMsg::Error { id: None, msg } => {
+            assert!(msg.contains("unknown"), "err: {msg}")
+        }
+        other => panic!("expected err, got {other:?}"),
+    }
+    // malformed gen (bad number) → err, still up
+    write_frame(&mut abuser, "gen notanumber 4 0 1 2").unwrap();
+    assert!(matches!(
+        ServerMsg::parse(&read_frame(&mut abuser).unwrap()).unwrap(),
+        ServerMsg::Error { id: None, .. }));
+    // invalid UTF-8 payload → err, and the frame BOUNDARY survives so
+    // the next well-formed frame still parses
+    let bad = [0xFFu8, 0xFE, 0x80];
+    abuser.write_all(&(bad.len() as u32).to_be_bytes()).unwrap();
+    abuser.write_all(&bad).unwrap();
+    abuser.flush().unwrap();
+    assert!(matches!(
+        ServerMsg::parse(&read_frame(&mut abuser).unwrap()).unwrap(),
+        ServerMsg::Error { id: None, .. }));
+    write_frame(&mut abuser, "ping").unwrap();
+    assert!(matches!(
+        ServerMsg::parse(&read_frame(&mut abuser).unwrap()).unwrap(),
+        ServerMsg::Pong));
+    // a partial frame write delivered in dribbles still reassembles
+    let payload = ClientMsg::Ping.encode();
+    abuser.write_all(&(payload.len() as u32).to_be_bytes()[..2]).unwrap();
+    abuser.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    abuser.write_all(&(payload.len() as u32).to_be_bytes()[2..]).unwrap();
+    abuser.write_all(&payload.as_bytes()[..2]).unwrap();
+    abuser.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    abuser.write_all(&payload.as_bytes()[2..]).unwrap();
+    abuser.flush().unwrap();
+    assert!(matches!(
+        ServerMsg::parse(&read_frame(&mut abuser).unwrap()).unwrap(),
+        ServerMsg::Pong));
+    // a well-behaved neighbour is completely unaffected throughout
+    let (load, requests) = greedy_load(6);
+    let mut client = FrontDoorClient::connect(&addr).unwrap();
+    let rows = wire_rows(client.run_greedy(&requests, 3).unwrap());
+    assert_eq!(rows, reference_rows(&load));
+    drop(abuser);
+    drop(client);
+    fd.drain().unwrap();
+}
+
+#[test]
+fn oversized_length_prefix_is_refused_before_allocation() {
+    let (fd, addr) = start(1, 2, 16);
+    let mut abuser = TcpStream::connect(&addr).unwrap();
+    // claim a 4 GiB frame; the server must answer with err and hang up
+    // without ever allocating or reading a body
+    abuser.write_all(&u32::MAX.to_be_bytes()).unwrap();
+    abuser.flush().unwrap();
+    match ServerMsg::parse(&read_frame(&mut abuser).unwrap()).unwrap() {
+        ServerMsg::Error { id: None, msg } => {
+            assert!(msg.contains("exceeds"), "err: {msg}")
+        }
+        other => panic!("expected err, got {other:?}"),
+    }
+    // the server hangs up on this connection (no resync is possible)…
+    let mut rest = vec![];
+    abuser.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let n = abuser.read_to_end(&mut rest)
+        .expect("server must close the abusive connection, not leave it \
+                 hanging");
+    assert_eq!(n, 0, "no further frames after the refusal");
+    // …while fresh connections serve normally
+    let (load, requests) = greedy_load(4);
+    let mut client = FrontDoorClient::connect(&addr).unwrap();
+    let rows = wire_rows(client.run_greedy(&requests, 2).unwrap());
+    assert_eq!(rows, reference_rows(&load));
+    drop(client);
+    fd.drain().unwrap();
+}
+
+#[test]
+fn truncated_prefix_and_midstream_disconnect_are_tolerated() {
+    let (fd, addr) = start(1, 2, 32);
+    // half a length prefix, then vanish
+    let mut half = TcpStream::connect(&addr).unwrap();
+    half.write_all(&[0x00, 0x00]).unwrap();
+    half.flush().unwrap();
+    drop(half);
+    // submit real work, then vanish mid-stream without reading replies:
+    // the work still completes server-side, the delivery is dropped
+    let (_, requests) = greedy_load(4);
+    let mut ghost = FrontDoorClient::connect(&addr).unwrap();
+    for r in &requests {
+        ghost.send(&ClientMsg::Gen { id: r.id, gen_len: r.gen_len,
+                                     temperature: r.temperature,
+                                     prompt: r.prompt.clone() }).unwrap();
+    }
+    drop(ghost);
+    // a live neighbour is unaffected
+    let (load, live_requests) = greedy_load(6);
+    let mut client = FrontDoorClient::connect(&addr).unwrap();
+    let rows = wire_rows(client.run_greedy(&live_requests, 3).unwrap());
+    assert_eq!(rows, reference_rows(&load));
+    drop(client);
+    let report = fd.drain().unwrap();
+    // the ghost's accepted requests completed even with nobody to tell
+    assert_eq!(report.stats.completed, 4 + 6);
+}
+
+#[test]
+fn slow_reader_cannot_stall_other_connections() {
+    let (fd, addr) = start(1, 2, 32);
+    // a connection that submits and then never reads a single byte
+    let mut sleeper = TcpStream::connect(&addr).unwrap();
+    let (_, requests) = greedy_load(4);
+    for r in &requests {
+        let msg = ClientMsg::Gen { id: r.id, gen_len: r.gen_len,
+                                   temperature: r.temperature,
+                                   prompt: r.prompt.clone() };
+        write_frame(&mut sleeper, &msg.encode()).unwrap();
+    }
+    // neighbours keep full service while the sleeper's replies pile up
+    for _ in 0..3 {
+        let (load, live_requests) = greedy_load(6);
+        let mut client = FrontDoorClient::connect(&addr).unwrap();
+        let rows = wire_rows(client.run_greedy(&live_requests, 3).unwrap());
+        assert_eq!(rows, reference_rows(&load));
+    }
+    // drain must terminate even though the sleeper never read anything
+    let report = fd.drain().unwrap();
+    assert_eq!(report.stats.completed, 4 + 3 * 6);
+    drop(sleeper);
+}
