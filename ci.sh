@@ -72,6 +72,34 @@ fi
 echo "cluster digests identical across shard counts (1 vs 2):"
 cat target/cluster_digest_1.txt
 
+# Session determinism: the same conversation served straight-through
+# (one request) and served as prefill+suspend on one shard / resume on a
+# DIFFERENT shard (the suspending shard is retired in between) must
+# digest identically — generated tokens and prompt log-prob bits. A
+# mismatch means the snapshot/restore path perturbed the recurrent
+# state or the carried log-prob accounting.
+echo "== session determinism (straight-through vs cross-shard suspend/resume) =="
+rm -f target/session_digest_straight.txt target/session_digest_resume.txt
+RBTW_SESSION_DIGEST=target/session_digest_straight.txt \
+    RBTW_SESSION_MODE=straight \
+    cargo test -q --test session_integration session_digest_is_path_invariant
+RBTW_SESSION_DIGEST=target/session_digest_resume.txt \
+    RBTW_SESSION_MODE=resume \
+    cargo test -q --test session_integration session_digest_is_path_invariant
+for f in target/session_digest_straight.txt target/session_digest_resume.txt; do
+    if [ ! -s "$f" ]; then
+        echo "FAIL: $f missing or empty (session digest test did not write it)"
+        exit 1
+    fi
+done
+if ! cmp -s target/session_digest_straight.txt target/session_digest_resume.txt; then
+    echo "FAIL: suspend/resume digest differs from straight-through serve"
+    diff target/session_digest_straight.txt target/session_digest_resume.txt || true
+    exit 1
+fi
+echo "session digests identical (straight-through vs cross-shard resume):"
+cat target/session_digest_straight.txt
+
 # Front-door smoke: a real `rbtw serve --listen` process on an ephemeral
 # loopback port, driven by the netclient example over TCP, must produce a
 # greedy digest BIT-IDENTICAL to the same load served in-process (no
@@ -124,6 +152,14 @@ if [ "$WIRE_DIGEST" != "$LOCAL_DIGEST" ]; then
     exit 1
 fi
 echo "front-door digest identical over TCP and in-process: $WIRE_DIGEST"
+# the wire run also exercises the session/resume verbs (suspend under a
+# session id, resume with a continuation) before the greedy stream
+if ! printf '%s\n' "$WIRE_OUT" | grep -q '^session-roundtrip: ok'; then
+    echo "FAIL: wire session/resume round-trip did not report ok:"
+    printf '%s\n' "$WIRE_OUT"
+    exit 1
+fi
+echo "wire session/resume round-trip ok"
 
 # The seed code predates rustfmt; keep the check advisory unless
 # RBTW_CI_STRICT_FMT=1 (flip once the tree is formatted).

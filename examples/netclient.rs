@@ -104,6 +104,29 @@ fn main() -> anyhow::Result<()> {
     let rows: Vec<(u64, Vec<i32>, u64)> = if let Some(addr) = connect {
         let mut client = FrontDoorClient::connect(&addr)?;
         client.ping()?;
+        // session wire smoke (quiet connection, before the greedy
+        // stream): prefill + suspend under a session id, then resume
+        // with a continuation on the same id. Ids live far above the
+        // load's so they never enter the greedy digest rows.
+        {
+            let vocab = weights.vocab as i32;
+            let prefix: Vec<i32> = (0..6).map(|i| (i * 5 + 2) % vocab)
+                .collect();
+            let o = client.session(7, 900_001, 0.0, prefix)?;
+            let done = o.done().ok_or_else(|| anyhow::anyhow!(
+                "session suspend refused: {o:?}"))?;
+            anyhow::ensure!(done.tokens.is_empty(),
+                            "session suspend must not generate");
+            let cont: Vec<i32> = vec![1 % vocab, 3 % vocab];
+            let o = client.resume(7, 900_002, 4, 0.0, cont)?;
+            let done = o.done().ok_or_else(|| anyhow::anyhow!(
+                "session resume refused: {o:?}"))?;
+            anyhow::ensure!(done.tokens.len() == 4,
+                            "resume generated {} tokens, wanted 4",
+                            done.tokens.len());
+            println!("session-roundtrip: ok (sid 7, {} tokens resumed \
+                      on shard {})", done.tokens.len(), done.shard);
+        }
         let t0 = std::time::Instant::now();
         let outcomes = client.run_greedy(&requests, window)?;
         let wall = t0.elapsed().as_secs_f64();

@@ -1,0 +1,194 @@
+//! Session-cache bench: prefix reuse on the recurrent serving path.
+//!
+//! The point of caching RNN state: it is O(layers x hidden) — constant
+//! in sequence length, unlike a transformer KV cache — so a suspended
+//! snapshot of a long shared system prompt costs a few KB and a prefix
+//! hit skips the ENTIRE prefill of that prefix. This bench serves the
+//! same prompt twice (cold, then warm) for prefix lengths {32, 256,
+//! 1024} over a grid-32 cache and gates the books exactly:
+//!
+//! * warm engine steps == cold engine steps − prefix length (the skip
+//!   is exact, not approximate),
+//! * warm generated tokens and prompt log-prob are BIT-identical to
+//!   the cold pass (the cache changes where compute happens, never
+//!   what it computes),
+//! * the LRU byte budget holds under overflow, with evictions counted
+//!   and hit/miss gauges consistent.
+//!
+//! Writes `BENCH_serve_sessions.json`.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use rbtw::coordinator::{InferenceServer, Request, Response};
+use rbtw::engine::{self, BackendKind, BackendSpec, ModelWeights,
+                   SharedModel};
+use rbtw::session::{ServerSessions, SessionCache};
+use rbtw::util::table::Table;
+use rbtw::util::Json;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect::<BTreeMap<_, _>>())
+}
+
+const VOCAB: usize = 50;
+const GRID: usize = 32;
+const TAIL: usize = 8;
+const GEN: usize = 16;
+
+/// A session-enabled single server over `shared` (one decode slot: the
+/// step counts below are then exactly the per-request step counts).
+fn session_server(shared: &SharedModel, spec: &BackendSpec,
+                  cache: &SessionCache) -> anyhow::Result<InferenceServer> {
+    let backend = engine::from_shared(shared, spec)?;
+    let mut server = InferenceServer::with_backend(backend, 8);
+    server.set_sessions(Some(ServerSessions::new(cache.clone(), shared)));
+    Ok(server)
+}
+
+/// Serve one request to completion; returns (response, wall seconds).
+fn serve_one(server: &mut InferenceServer, req: Request)
+    -> anyhow::Result<(Response, f64)> {
+    let t0 = Instant::now();
+    server.submit(req)?;
+    let mut out = server.pump(1_000_000)?;
+    anyhow::ensure!(out.len() == 1, "expected exactly one response");
+    Ok((out.remove(0), t0.elapsed().as_secs_f64()))
+}
+
+fn prompt_for(l: usize) -> Vec<i32> {
+    // distinct token stream per prefix length so the sweeps never
+    // cross-hit each other's cache entries
+    (0..l + TAIL)
+        .map(|i| ((i * 7 + l * 13 + 3) % VOCAB) as i32)
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    common::banner("session cache: prefill skipped via recurrent-state \
+                    snapshots");
+    let weights = ModelWeights::synthetic(VOCAB, 256, "ter", 0x5E55);
+    let shared = SharedModel::prepare(&weights, BackendKind::PackedCpu, 3)?;
+    let spec = BackendSpec::with(BackendKind::PackedCpu, 1, 3);
+    let state_bytes = {
+        // one suspended snapshot's cost: layers x state rows of f32
+        let mut b = engine::from_shared(&shared, &spec)?;
+        b.reset_slot(0)?;
+        b.snapshot_slot(0)
+            .map_err(|e| anyhow::anyhow!("snapshot: {e}"))?
+            .bytes()
+    };
+
+    let cache = SessionCache::new(64 << 20, GRID);
+    let mut t = Table::new(&["prefix", "cold steps", "warm steps",
+                             "skipped", "cold ms", "warm ms", "speedup",
+                             "state B"]);
+    let mut rows = vec![];
+    for (i, &l) in [32usize, 256, 1024].iter().enumerate() {
+        let prompt = prompt_for(l);
+        let mut server = session_server(&shared, &spec, &cache)?;
+        let before = cache.counters();
+        let (cold, cold_s) = serve_one(&mut server, Request {
+            id: 2 * i as u64 + 1, prompt: prompt.clone(), gen_len: GEN,
+            temperature: 0.0,
+        })?;
+        let (warm, warm_s) = serve_one(&mut server, Request {
+            id: 2 * i as u64 + 2, prompt: prompt.clone(), gen_len: GEN,
+            temperature: 0.0,
+        })?;
+        let after = cache.counters();
+        // the acceptance gates: the skip is exactly the prefix length,
+        // and the answer is bit-identical to the cold pass
+        anyhow::ensure!(
+            warm.engine_steps == cold.engine_steps - l as u64,
+            "prefix {l}: warm pass took {} steps, cold {} — expected the \
+             hit to skip exactly {l} prefill steps",
+            warm.engine_steps, cold.engine_steps);
+        anyhow::ensure!(warm.generated == cold.generated,
+                        "prefix {l}: warm greedy tokens diverged");
+        anyhow::ensure!(
+            warm.prompt_logprob.to_bits() == cold.prompt_logprob.to_bits(),
+            "prefix {l}: warm prompt log-prob not bit-identical");
+        anyhow::ensure!(after.prefix_hits == before.prefix_hits + 1,
+                        "prefix {l}: expected exactly one hit");
+        anyhow::ensure!(after.prefix_misses == before.prefix_misses + 1,
+                        "prefix {l}: expected exactly one miss (the cold \
+                         pass)");
+        let speedup = cold_s / warm_s.max(1e-9);
+        t.row(&[
+            l.to_string(),
+            cold.engine_steps.to_string(),
+            warm.engine_steps.to_string(),
+            l.to_string(),
+            format!("{:.2}", cold_s * 1e3),
+            format!("{:.2}", warm_s * 1e3),
+            format!("{speedup:.2}x"),
+            state_bytes.to_string(),
+        ]);
+        rows.push(obj(vec![
+            ("prefix_len", Json::Num(l as f64)),
+            ("tail_len", Json::Num(TAIL as f64)),
+            ("gen_len", Json::Num(GEN as f64)),
+            ("cold_engine_steps", Json::Num(cold.engine_steps as f64)),
+            ("warm_engine_steps", Json::Num(warm.engine_steps as f64)),
+            ("steps_skipped",
+             Json::Num((cold.engine_steps - warm.engine_steps) as f64)),
+            ("cold_ms", Json::Num(cold_s * 1e3)),
+            ("warm_ms", Json::Num(warm_s * 1e3)),
+            ("speedup", Json::Num(speedup)),
+            ("bit_identical", Json::Bool(true)),
+        ]));
+    }
+    t.print();
+    println!("\nwarm steps == cold steps - prefix length on every row; \
+              warm responses bit-identical to cold");
+
+    // LRU byte budget under overflow: room for ~3 grid-32 snapshots,
+    // then 8 distinct prompts stream through. The budget must hold and
+    // the overflow must surface as eviction counts, not growth.
+    let small_budget = 3 * (state_bytes + 512);
+    let small = SessionCache::new(small_budget, GRID);
+    let mut server = session_server(&shared, &spec, &small)?;
+    for k in 0..8u64 {
+        let prompt: Vec<i32> = (0..GRID + TAIL)
+            .map(|i| ((i * 11 + k as usize * 17 + 5) % VOCAB) as i32)
+            .collect();
+        serve_one(&mut server, Request { id: 100 + k, prompt, gen_len: 2,
+                                         temperature: 0.0 })?;
+    }
+    let c = small.counters();
+    anyhow::ensure!(c.resident_bytes <= small_budget as u64,
+                    "LRU budget violated: {} resident > {} budget",
+                    c.resident_bytes, small_budget);
+    anyhow::ensure!(c.evictions > 0,
+                    "8 snapshots through a 3-snapshot budget must evict");
+    anyhow::ensure!(c.prefix_misses == 8,
+                    "each distinct prompt misses once, got {}",
+                    c.prefix_misses);
+    println!("LRU budget held: {} B resident <= {} B budget, {} evictions",
+             c.resident_bytes, small_budget, c.evictions);
+
+    let final_counters = cache.counters();
+    let report = obj(vec![
+        ("bench", Json::Str("serve_sessions".into())),
+        ("model", Json::Str(weights.name.clone())),
+        ("backend", Json::Str("packed".into())),
+        ("grid", Json::Num(GRID as f64)),
+        ("state_bytes", Json::Num(state_bytes as f64)),
+        ("prefix_hits", Json::Num(final_counters.prefix_hits as f64)),
+        ("prefix_misses", Json::Num(final_counters.prefix_misses as f64)),
+        ("lru_budget_bytes", Json::Num(small_budget as f64)),
+        ("lru_resident_bytes", Json::Num(c.resident_bytes as f64)),
+        ("lru_evictions", Json::Num(c.evictions as f64)),
+        ("lru_budget_held", Json::Bool(true)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_serve_sessions.json", format!("{report}\n"))?;
+    println!("wrote BENCH_serve_sessions.json");
+    Ok(())
+}

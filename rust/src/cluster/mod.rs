@@ -101,10 +101,13 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{validate_request, InferenceServer, LoadSpec,
-                         Request, Response, ServerStats};
+use crate::coordinator::{InferenceServer, LoadSpec, Request, Response,
+                         ServerStats};
 use crate::engine::{from_shared, BackendSpec, SharedModel, ThreadPool};
-use crate::util::stats::LatencySummary;
+use crate::session::{prepare_with, PreparedSubmit, ServerSessions,
+                     SessionCache, SubmitOpts, DEFAULT_SESSION_BYTES,
+                     DEFAULT_SESSION_GRID};
+use crate::util::stats::{safe_rate, LatencySummary};
 
 /// How the router assigns requests to engine shards.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -207,7 +210,11 @@ impl ClusterReport {
     }
 }
 
-type Routed = (Request, Instant);
+/// What travels through the router: a request already resolved against
+/// the session cache ([`PreparedSubmit`]), so restored session state
+/// rides along to whichever shard the router picks — resumed sessions
+/// are not shard-pinned.
+type Routed = (PreparedSubmit, Instant);
 
 /// One live shard's routing handle, shared with the router through the
 /// mutable route table. Cloned Arcs, so the router can hold a pick
@@ -331,6 +338,9 @@ pub struct ServingCluster {
     policy: RoutePolicy,
     submitted: u64,
     started: Instant,
+    /// The cluster-wide session cache handle (`None` = sessions
+    /// disabled; session/resume submits are refused as Invalid).
+    sessions: Option<ServerSessions>,
 }
 
 impl ServingCluster {
@@ -346,6 +356,21 @@ impl ServingCluster {
     /// [`Self::add_shard`] reuse the same per-shard budget.
     pub fn new(shared: &SharedModel, spec: &BackendSpec, queue_cap: usize,
                policy: RoutePolicy) -> Result<Self> {
+        Self::new_with_sessions(
+            shared, spec, queue_cap, policy,
+            Some(SessionCache::new(DEFAULT_SESSION_BYTES,
+                                   DEFAULT_SESSION_GRID)))
+    }
+
+    /// [`Self::new`] with an explicit session cache: pass a sized
+    /// [`SessionCache`] to share (or tune) it, or `None` to disable
+    /// sessions entirely (session/resume submits are then refused).
+    /// [`Self::new`] defaults to an enabled cache of
+    /// [`DEFAULT_SESSION_BYTES`] / [`DEFAULT_SESSION_GRID`].
+    pub fn new_with_sessions(shared: &SharedModel, spec: &BackendSpec,
+                             queue_cap: usize, policy: RoutePolicy,
+                             cache: Option<SessionCache>) -> Result<Self> {
+        let sessions = cache.map(|c| ServerSessions::new(c, shared));
         let shards = spec.shards;
         anyhow::ensure!(shards >= 1, "need at least one engine shard");
         anyhow::ensure!(shards <= BackendSpec::MAX_SHARDS,
@@ -370,8 +395,12 @@ impl ServingCluster {
         let mut servers = Vec::with_capacity(shards);
         for _ in 0..shards {
             let backend = from_shared(shared, &shard_spec)?;
-            servers.push(InferenceServer::with_backend(backend,
-                                                       spec.slots.max(1)));
+            let mut server = InferenceServer::with_backend(backend,
+                                                           spec.slots.max(1));
+            // every shard shares the ONE cache under the one model
+            // fingerprint — a prefix published by any shard hits on all
+            server.set_sessions(sessions.clone());
+            servers.push(server);
         }
         let front: Arc<BoundedQueue<Routed>> =
             Arc::new(BoundedQueue::new(queue_cap));
@@ -437,7 +466,13 @@ impl ServingCluster {
             policy,
             submitted: 0,
             started: Instant::now(),
+            sessions,
         })
+    }
+
+    /// The cluster-wide session cache handle, if sessions are enabled.
+    pub fn sessions(&self) -> Option<&ServerSessions> {
+        self.sessions.as_ref()
     }
 
     /// Live shard count (changes under [`Self::add_shard`] /
@@ -506,10 +541,23 @@ impl ServingCluster {
     /// cluster-accepted request can never be one a shard rejects.
     pub fn try_submit(&mut self, req: Request)
         -> std::result::Result<(), SubmitRefused> {
-        if let Err(e) = validate_request(&req, self.vocab) {
-            return Err(SubmitRefused::Invalid(format!("{e:#}")));
-        }
-        match self.front.try_push((req, Instant::now())) {
+        self.try_submit_with(req, &SubmitOpts::default())
+    }
+
+    /// [`Self::try_submit`] with session options: save the final state
+    /// under a session id, and/or resume a saved session (the prompt is
+    /// then the continuation). Resolution against the session cache
+    /// happens HERE, at cluster admission, so restored state travels
+    /// inside the routed item to whichever shard the router picks — a
+    /// resumed session is not pinned to the shard that suspended it.
+    pub fn try_submit_with(&mut self, req: Request, opts: &SubmitOpts)
+        -> std::result::Result<(), SubmitRefused> {
+        let ps = match prepare_with(self.sessions.as_ref(), self.vocab,
+                                    req, opts) {
+            Ok(ps) => ps,
+            Err(e) => return Err(SubmitRefused::Invalid(format!("{e:#}"))),
+        };
+        match self.front.try_push((ps, Instant::now())) {
             Ok(()) => {
                 self.submitted += 1;
                 Ok(())
@@ -555,8 +603,9 @@ impl ServingCluster {
                         "cluster already at {} shards (max {})",
                         self.shards.len(), BackendSpec::MAX_SHARDS);
         let backend = from_shared(&self.shared, &self.shard_spec)?;
-        let server = InferenceServer::with_backend(backend,
-                                                   self.slots_per_shard);
+        let mut server = InferenceServer::with_backend(backend,
+                                                       self.slots_per_shard);
+        server.set_sessions(self.sessions.clone());
         let done = self.done_tx.as_ref()
             .context("cluster response channel gone")?
             .clone();
@@ -596,8 +645,8 @@ impl ServingCluster {
         let row = ShardStats {
             shard: id,
             routed: h.routed.load(Ordering::SeqCst),
-            tokens_per_sec: server.tokens_processed as f64
-                / wall_s.max(1e-12),
+            tokens_per_sec: safe_rate(server.tokens_processed as f64,
+                                      wall_s),
             server,
             retired: true,
         };
@@ -678,15 +727,16 @@ impl ServingCluster {
         all.extend(rows);
         all.sort_by_key(|s| s.shard);
         for mut row in all {
-            row.tokens_per_sec = row.server.tokens_processed as f64
-                / wall_s.max(1e-12);
+            row.tokens_per_sec =
+                safe_rate(row.server.tokens_processed as f64, wall_s);
             stats.completed += row.server.completed;
             stats.tokens_processed += row.server.tokens_processed;
             stats.engine_steps += row.server.engine_steps;
             stats.shards.push(row);
         }
         stats.tokens_per_sec =
-            stats.tokens_processed as f64 / wall_s.max(1e-12);
+            safe_rate(stats.tokens_processed as f64, wall_s);
+        stats.sessions = self.sessions.as_ref().map(|s| s.cache.counters());
         stats
     }
 }
@@ -833,8 +883,8 @@ fn shard_worker(shard: usize, mut server: InferenceServer,
         // runnable work
         while server.pending() < server.queue_capacity() {
             match inbox.try_pop() {
-                Some((req, t0)) => server
-                    .submit_at(req, t0)
+                Some((ps, t0)) => server
+                    .submit_prepared(ps, t0)
                     .expect("cluster-validated request rejected by shard"),
                 None => break,
             }
@@ -843,9 +893,9 @@ fn shard_worker(shard: usize, mut server: InferenceServer,
             // idle: block for work, or exit once the inbox is closed
             // and drained
             match inbox.pop_wait() {
-                Some((req, t0)) => {
+                Some((ps, t0)) => {
                     server
-                        .submit_at(req, t0)
+                        .submit_prepared(ps, t0)
                         .expect("cluster-validated request rejected by shard");
                     continue;
                 }
@@ -1100,6 +1150,68 @@ mod tests {
         assert_eq!(report.stats.completed, 6);
         assert_eq!(report.stats.total.n, 6,
                    "latency percentiles cover streamed completions");
+    }
+
+    #[test]
+    fn instant_drain_reports_clean_zeroed_stats() {
+        // regression: a drain before any submit used to risk a
+        // percentile panic (empty samples) and inf/NaN rates (elapsed
+        // time ~ 0); it must report zeros.
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7)
+            .with_shards(2);
+        let cluster =
+            ServingCluster::new(&shared, &spec, 8, RoutePolicy::LeastLoaded)
+                .unwrap();
+        let report = cluster.drain().unwrap();
+        assert_eq!(report.stats.completed, 0);
+        assert_eq!(report.stats.total.n, 0);
+        assert_eq!(report.stats.total.max_ms, 0.0);
+        assert_eq!(report.stats.tokens_per_sec, 0.0);
+        assert!(report.stats.tokens_per_sec.is_finite());
+        for s in &report.stats.shards {
+            assert!(s.tokens_per_sec.is_finite());
+            assert_eq!(s.tokens_per_sec, 0.0);
+        }
+        assert_eq!(report.tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn session_cache_defaults_on_and_counters_surface() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7);
+        let mut cluster =
+            ServingCluster::new(&shared, &spec, 8, RoutePolicy::LeastLoaded)
+                .unwrap();
+        assert!(cluster.sessions().is_some());
+        let live = cluster.live_stats();
+        assert_eq!(live.sessions.expect("session counters in live stats"),
+                   crate::session::SessionCounters::default());
+        // a session save round-trips through the threaded fleet
+        cluster.try_submit_with(
+            Request { id: 1, prompt: vec![4, 5, 6], gen_len: 2,
+                      temperature: 0.0 },
+            &SubmitOpts { save_session: Some(11), ..Default::default() })
+            .unwrap();
+        let report = cluster.drain().unwrap();
+        assert_eq!(report.stats.completed, 1);
+        assert_eq!(report.stats.sessions.unwrap().sessions, 1,
+                   "suspended session resident after drain");
+        // sessions disabled: session opts refused as Invalid, plain
+        // requests unaffected, no counters in stats
+        let mut off = ServingCluster::new_with_sessions(
+            &shared, &spec, 8, RoutePolicy::LeastLoaded, None).unwrap();
+        assert!(off.sessions().is_none());
+        let refused = off.try_submit_with(
+            Request { id: 2, prompt: vec![1, 2], gen_len: 1,
+                      temperature: 0.0 },
+            &SubmitOpts { save_session: Some(1), ..Default::default() })
+            .unwrap_err();
+        assert!(matches!(refused, SubmitRefused::Invalid(_)));
+        off.try_submit(greedy(3)).unwrap();
+        let report = off.drain().unwrap();
+        assert_eq!(report.stats.completed, 1);
+        assert!(report.stats.sessions.is_none());
     }
 
     #[test]

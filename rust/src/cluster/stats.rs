@@ -2,6 +2,7 @@
 //! whole-cluster throughput and latency percentiles.
 
 use crate::coordinator::ServerStats;
+use crate::session::SessionCounters;
 use crate::util::stats::LatencySummary;
 
 /// One shard worker's contribution to a cluster run.
@@ -38,6 +39,9 @@ pub struct ClusterStats {
     pub queue: LatencySummary,
     pub run: LatencySummary,
     pub total: LatencySummary,
+    /// Session-cache gauges (prefix hits/misses, evictions, residency);
+    /// `None` when the cluster runs without a session cache.
+    pub sessions: Option<SessionCounters>,
 }
 
 impl ClusterStats {

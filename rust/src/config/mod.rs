@@ -168,6 +168,14 @@ pub struct ServeSpec {
     /// `"127.0.0.1:0"` for an ephemeral port. `None` keeps serving
     /// in-process (the self-driving load demo).
     pub listen: Option<String>,
+    /// Session-cache byte budget ([`crate::session::SessionCache`]):
+    /// bounds resident snapshot bytes (prefix entries + suspended
+    /// sessions, LRU-evicted). `0` disables the cache entirely —
+    /// `session`/`resume` frames are then refused at admission.
+    pub session_bytes: usize,
+    /// Prefix-capture grid: prompt prefixes are published at multiples
+    /// of this stride, and lookups only probe those lengths.
+    pub session_grid: usize,
 }
 
 impl Default for ServeSpec {
@@ -184,6 +192,8 @@ impl Default for ServeSpec {
             arch: CellArch::Lstm,
             layers: 1,
             listen: None,
+            session_bytes: crate::session::DEFAULT_SESSION_BYTES,
+            session_grid: crate::session::DEFAULT_SESSION_GRID,
         }
     }
 }
@@ -207,6 +217,16 @@ impl ServeSpec {
     /// and the `--layers` CLI flag.
     pub const LAYERS_RANGE: std::ops::RangeInclusive<usize> =
         1..=BackendSpec::MAX_LAYERS;
+
+    /// Valid session-cache byte-budget range (0 = cache disabled);
+    /// shared by the `[serve]` config parser and `--session-bytes`.
+    pub const SESSION_BYTES_RANGE: std::ops::RangeInclusive<usize> =
+        0..=(1 << 32);
+
+    /// Valid prefix-capture grid range; shared by the `[serve]` config
+    /// parser and the `--session-grid` CLI flag.
+    pub const SESSION_GRID_RANGE: std::ops::RangeInclusive<usize> =
+        1..=(1 << 20);
 
     /// The engine-layer spec for [`crate::engine::open`].
     pub fn backend_spec(&self) -> BackendSpec {
@@ -282,6 +302,18 @@ impl Config {
                 anyhow::ensure!(!addr.is_empty(),
                                 "[serve] listen must not be empty");
                 spec.listen = Some(addr.to_string());
+            }
+            if let Some(v) = s.get("session_bytes") {
+                spec.session_bytes = bounded(
+                    v, "session_bytes",
+                    *ServeSpec::SESSION_BYTES_RANGE.start() as i64,
+                    *ServeSpec::SESSION_BYTES_RANGE.end() as i64)?;
+            }
+            if let Some(v) = s.get("session_grid") {
+                spec.session_grid = bounded(
+                    v, "session_grid",
+                    *ServeSpec::SESSION_GRID_RANGE.start() as i64,
+                    *ServeSpec::SESSION_GRID_RANGE.end() as i64)?;
             }
         }
         Ok(spec)
@@ -504,6 +536,27 @@ mod tests {
             .unwrap();
         assert_eq!(spec.listen.as_deref(), Some("127.0.0.1:0"));
         assert!(Config::parse("[serve]\nlisten = \"\"\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        // session cache: on by default with the library budgets; 0
+        // bytes disables it, negative/oversized values are rejected
+        assert_eq!(ServeSpec::default().session_bytes,
+                   crate::session::DEFAULT_SESSION_BYTES);
+        assert_eq!(ServeSpec::default().session_grid,
+                   crate::session::DEFAULT_SESSION_GRID);
+        let spec = Config::parse(
+            "[serve]\nsession_bytes = 0\nsession_grid = 64\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .unwrap();
+        assert_eq!(spec.session_bytes, 0);
+        assert_eq!(spec.session_grid, 64);
+        assert!(Config::parse("[serve]\nsession_bytes = -1\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nsession_grid = 0\n")
             .unwrap()
             .serve_spec(ServeSpec::default())
             .is_err());

@@ -5,8 +5,8 @@
 pub mod server;
 pub mod trainer;
 
-pub use server::{latency_breakdown, run_load, validate_request,
-                 InferenceServer, LoadReport, LoadSpec, Request, Response,
-                 ServerStats};
+pub use server::{latency_breakdown, log_softmax_at, run_load,
+                 validate_request, InferenceServer, LoadReport, LoadSpec,
+                 Request, Response, ServerStats};
 pub use trainer::{EvalResult, LrSchedule, Split, TaskData, TrainReport,
                   TrainSpec, Trainer};

@@ -35,6 +35,8 @@ use anyhow::Result;
 
 use crate::engine::{InferBackend, PjrtDense};
 use crate::runtime::Engine;
+use crate::session::{prepare_with, PreparedSubmit, ServerSessions,
+                     SubmitOpts};
 use crate::util::stats::LatencySummary;
 use crate::util::Rng;
 
@@ -80,6 +82,14 @@ struct Slot {
     logprob_sum: f64,
     last_token: i32,
     steps: u64,
+    /// Scored tokens already folded into `logprob_sum` beyond this
+    /// request's own prompt (a resumed session carries its history).
+    scored_extra: usize,
+    /// Pending mid-prefill prefix-cache capture (see
+    /// [`crate::session::CapturePlan`]).
+    capture: Option<crate::session::CapturePlan>,
+    /// Session id to save the final state under at completion.
+    save: Option<u64>,
 }
 
 /// The in-process serving engine. Drive it with [`InferenceServer::pump`]
@@ -90,9 +100,11 @@ struct Slot {
 pub struct InferenceServer {
     backend: Box<dyn InferBackend + Send>,
     slots: Vec<Option<Slot>>,
-    queue: VecDeque<(Request, Instant)>,
+    queue: VecDeque<(PreparedSubmit, Instant)>,
     queue_cap: usize,
     vocab: usize,
+    /// Session cache handle; `None` = session verbs refused at submit.
+    sessions: Option<ServerSessions>,
     /// scratch: per-slot token feed + logits, reused every step.
     tokens: Vec<Option<i32>>,
     logits: Vec<f32>,
@@ -115,6 +127,7 @@ impl InferenceServer {
             queue: VecDeque::new(),
             queue_cap,
             vocab,
+            sessions: None,
             tokens: vec![None; n_slots],
             logits: vec![0.0; n_slots * vocab],
             done_tx,
@@ -122,6 +135,18 @@ impl InferenceServer {
             rng: Rng::new(0x5E17E),
             stats: ServerStats::default(),
         }
+    }
+
+    /// Attach (or detach) a session cache. The cluster sets this on
+    /// every shard server so they share one cache under one model
+    /// fingerprint.
+    pub fn set_sessions(&mut self, sessions: Option<ServerSessions>) {
+        self.sessions = sessions;
+    }
+
+    /// The attached session-cache handle, if any.
+    pub fn sessions(&self) -> Option<&ServerSessions> {
+        self.sessions.as_ref()
     }
 
     /// Back-compat constructor: serve `artifact` on the dense PJRT
@@ -145,7 +170,7 @@ impl InferenceServer {
     /// A rejected submit changes nothing: queue, slots and backend state
     /// are exactly as before the call.
     pub fn submit(&mut self, req: Request) -> Result<()> {
-        self.submit_at(req, Instant::now())
+        self.submit_with_at(req, &SubmitOpts::default(), Instant::now())
     }
 
     /// Like [`Self::submit`], with the queue-entry timestamp supplied by
@@ -154,10 +179,37 @@ impl InferenceServer {
     /// inbox + this server's queue — not just the last hop.
     pub fn submit_at(&mut self, req: Request, submitted: Instant)
         -> Result<()> {
+        self.submit_with_at(req, &SubmitOpts::default(), submitted)
+    }
+
+    /// Submit with session options (prefix save/resume); see
+    /// [`SubmitOpts`].
+    pub fn submit_with(&mut self, req: Request, opts: &SubmitOpts)
+        -> Result<()> {
+        self.submit_with_at(req, opts, Instant::now())
+    }
+
+    /// The full submit path: backpressure check, then session-cache
+    /// resolution + validation ([`crate::session::prepare_with`]), then
+    /// enqueue. Checking capacity FIRST keeps a backpressure-refused
+    /// submit from counting a cache miss.
+    pub fn submit_with_at(&mut self, req: Request, opts: &SubmitOpts,
+                          submitted: Instant) -> Result<()> {
         anyhow::ensure!(self.queue.len() < self.queue_cap,
                         "queue full ({} pending)", self.queue.len());
-        validate_request(&req, self.vocab)?;
-        self.queue.push_back((req, submitted));
+        let ps = prepare_with(self.sessions.as_ref(), self.vocab, req, opts)?;
+        self.queue.push_back((ps, submitted));
+        Ok(())
+    }
+
+    /// Enqueue a request already resolved against the session cache
+    /// (the cluster router prepares at cluster admission so restored
+    /// state travels to whichever shard it picks).
+    pub fn submit_prepared(&mut self, ps: PreparedSubmit,
+                           submitted: Instant) -> Result<()> {
+        anyhow::ensure!(self.queue.len() < self.queue_cap,
+                        "queue full ({} pending)", self.queue.len());
+        self.queue.push_back((ps, submitted));
         Ok(())
     }
 
@@ -181,16 +233,29 @@ impl InferenceServer {
                 // fresh backend state for the new stream — reset BEFORE
                 // popping so a failing backend can't lose the request
                 self.backend.reset_slot(i)?;
-                if let Some((req, submitted)) = self.queue.pop_front() {
-                    let first = req.prompt[0];
+                // a prefix hit / resumed session restores its cached
+                // state on top (also before popping, same reason)
+                if let Some(state) = self.queue.front()
+                    .and_then(|(ps, _)| ps.plan.state.as_ref()) {
+                    self.backend.restore_slot(i, state).map_err(|e| {
+                        anyhow::anyhow!("restoring cached session state \
+                                         into slot {i}: {e}")
+                    })?;
+                }
+                if let Some((ps, submitted)) = self.queue.pop_front() {
+                    let PreparedSubmit { req, plan, capture, save } = ps;
+                    let first = req.prompt[plan.start_pos];
                     self.slots[i] = Some(Slot {
                         started: Instant::now(),
                         submitted,
-                        pos: 0,
+                        pos: plan.start_pos,
                         generated: vec![],
-                        logprob_sum: 0.0,
+                        logprob_sum: plan.logprob_sum,
                         last_token: first,
                         steps: 0,
+                        scored_extra: plan.scored_extra,
+                        capture,
+                        save,
                         req,
                     });
                 }
@@ -221,6 +286,22 @@ impl InferenceServer {
             slot.steps += 1;
             self.stats.tokens_processed += 1;
             let row = &self.logits[i * self.vocab..(i + 1) * self.vocab];
+            // prefix-cache capture, BEFORE this step's score is folded:
+            // the state has consumed exactly `at` prompt tokens, `row`
+            // is the prediction for prompt[at], and `logprob_sum`
+            // covers tokens 1..at — exactly what a hit replays.
+            if let Some(cap) = slot.capture {
+                if slot.pos + 1 == cap.at {
+                    if let Some(ss) = &self.sessions {
+                        if let Ok(state) = self.backend.snapshot_slot(i) {
+                            ss.cache.publish_prefix(
+                                cap.key, &slot.req.prompt[..cap.at], state,
+                                row.to_vec(), slot.logprob_sum);
+                        }
+                    }
+                    slot.capture = None;
+                }
+            }
             // advance: either consume the next prompt token (scoring) or
             // sample a continuation.
             if slot.pos + 1 < slot.req.prompt.len() {
@@ -237,7 +318,19 @@ impl InferenceServer {
                 && slot.generated.len() >= slot.req.gen_len;
             if done {
                 let s = self.slots[i].take().unwrap();
-                let scored = (s.req.prompt.len() - 1).max(1);
+                if let (Some(sid), Some(ss)) = (s.save, &self.sessions) {
+                    // the freed slot's backend state stays intact until
+                    // the next schedule() resets it, so this snapshot
+                    // sees the final state; `last_token` is the one
+                    // token it never fed — the resume point.
+                    if let Ok(state) = self.backend.snapshot_slot(i) {
+                        ss.cache.save_session(
+                            ss.fingerprint, sid, state, s.last_token,
+                            s.logprob_sum,
+                            s.req.prompt.len() - 1 + s.scored_extra);
+                    }
+                }
+                let scored = (s.req.prompt.len() - 1 + s.scored_extra).max(1);
                 let resp = Response {
                     id: s.req.id,
                     generated: s.generated,
@@ -328,7 +421,8 @@ pub struct LoadReport {
 
 impl LoadReport {
     pub fn tokens_per_sec(&self) -> f64 {
-        self.stats.tokens_processed as f64 / self.wall_s.max(1e-12)
+        crate::util::stats::safe_rate(self.stats.tokens_processed as f64,
+                                      self.wall_s)
     }
 }
 
@@ -387,7 +481,11 @@ pub fn validate_request(req: &Request, vocab: usize) -> Result<()> {
     Ok(())
 }
 
-fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
+/// Log-probability of `idx` under softmax(`logits`). Public because the
+/// session cache's prefix-hit path must fold the one owed score with
+/// EXACTLY these operations for hits to stay bit-identical to
+/// straight-through serving.
+pub fn log_softmax_at(logits: &[f32], idx: usize) -> f64 {
     let max = logits.iter().cloned().fold(f32::MIN, f32::max);
     let z: f64 = logits.iter().map(|&l| ((l - max) as f64).exp()).sum();
     (logits[idx] - max) as f64 - z.ln()
@@ -552,5 +650,105 @@ mod tests {
             r[0].generated.clone()
         };
         assert_eq!(run(), run());
+    }
+
+    fn session_server(grid: usize) -> InferenceServer {
+        use crate::engine::{from_shared, SharedModel};
+        use crate::session::{ServerSessions, SessionCache};
+        let w = ModelWeights::synthetic(20, 16, "ter", 41);
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 4, 9);
+        let shared =
+            SharedModel::prepare(&w, spec.kind, spec.sample_seed).unwrap();
+        let mut server = InferenceServer::with_backend(
+            from_shared(&shared, &spec).unwrap(), 64);
+        server.set_sessions(Some(ServerSessions::new(
+            SessionCache::new(1 << 20, grid), &shared)));
+        server
+    }
+
+    #[test]
+    fn prefix_hit_skips_prefill_steps_bit_exactly() {
+        let mut server = session_server(4);
+        let prompt: Vec<i32> = (0..12).map(|i| (i * 3) % 20).collect();
+        let run = |server: &mut InferenceServer, id: u64| {
+            server.submit(Request { id, prompt: prompt.clone(), gen_len: 5,
+                                    temperature: 0.0 }).unwrap();
+            let r = server.pump(10_000).unwrap();
+            r.into_iter().find(|r| r.id == id).unwrap()
+        };
+        let cold = run(&mut server, 0);
+        // 12 prompt feeds (11 scored) + 5 generated = 16 steps
+        assert_eq!(cold.engine_steps, 16);
+        let c = server.sessions().unwrap().cache.counters();
+        assert_eq!((c.prefix_hits, c.prefix_misses), (0, 1));
+        assert_eq!(c.entries, 1, "mid-prefill capture published");
+        // warm run: hits the 8-token prefix, skips exactly 8 steps
+        let warm = run(&mut server, 1);
+        assert_eq!(warm.engine_steps, cold.engine_steps - 8);
+        assert_eq!(warm.generated, cold.generated);
+        assert_eq!(warm.prompt_logprob.to_bits(), cold.prompt_logprob.to_bits(),
+                   "hit must be bit-identical, not approximately equal");
+        let c = server.sessions().unwrap().cache.counters();
+        assert_eq!(c.prefix_hits, 1);
+        // a fresh cacheless server agrees: hits change nothing observable
+        let mut plain = packed_server(4, 64);
+        let reference = {
+            plain.submit(Request { id: 2, prompt: prompt.clone(), gen_len: 5,
+                                   temperature: 0.0 }).unwrap();
+            plain.pump(10_000).unwrap().remove(0)
+        };
+        assert_eq!(reference.generated, warm.generated);
+        assert_eq!(reference.prompt_logprob.to_bits(),
+                   warm.prompt_logprob.to_bits());
+    }
+
+    #[test]
+    fn suspend_resume_matches_straight_through() {
+        use crate::session::SubmitOpts;
+        let a: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let b: Vec<i32> = vec![5, 3, 5, 8, 9];
+        // straight through: A ++ B in one request (grid 1000: no prefix
+        // interference)
+        let mut straight = session_server(1000);
+        let whole: Vec<i32> = a.iter().chain(&b).copied().collect();
+        straight.submit(Request { id: 0, prompt: whole, gen_len: 6,
+                                  temperature: 0.0 }).unwrap();
+        let want = straight.pump(10_000).unwrap().remove(0);
+        // suspended: serve A (gen 0, save), then resume with B
+        let mut server = session_server(1000);
+        server.submit_with(
+            Request { id: 1, prompt: a, gen_len: 0, temperature: 0.0 },
+            &SubmitOpts { save_session: Some(77), ..Default::default() })
+            .unwrap();
+        let first = server.pump(10_000).unwrap().remove(0);
+        assert!(first.generated.is_empty());
+        assert_eq!(server.sessions().unwrap().cache.counters().sessions, 1);
+        server.submit_with(
+            Request { id: 2, prompt: b, gen_len: 6, temperature: 0.0 },
+            &SubmitOpts { resume: Some(77), ..Default::default() })
+            .unwrap();
+        let resumed = server.pump(10_000).unwrap().remove(0);
+        assert_eq!(resumed.generated, want.generated);
+        assert_eq!(resumed.prompt_logprob.to_bits(),
+                   want.prompt_logprob.to_bits(),
+                   "suspend/resume must be bit-identical");
+        // resuming an unknown id is refused at submit, queue untouched
+        let err = server.submit_with(
+            Request { id: 3, prompt: vec![1], gen_len: 1, temperature: 0.0 },
+            &SubmitOpts { resume: Some(999), ..Default::default() });
+        assert!(err.is_err());
+        assert_eq!(server.pending(), 0);
+    }
+
+    #[test]
+    fn session_opts_refused_without_a_cache() {
+        use crate::session::SubmitOpts;
+        let mut server = packed_server(2, 8);
+        let err = server.submit_with(
+            Request { id: 0, prompt: vec![1, 2], gen_len: 1,
+                      temperature: 0.0 },
+            &SubmitOpts { save_session: Some(1), ..Default::default() });
+        assert!(err.unwrap_err().to_string().contains("disabled"));
+        assert_eq!(server.pending(), 0);
     }
 }

@@ -99,6 +99,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::runtime::Engine;
+use crate::session::{SlotState, StateError};
 
 pub use packed::PackedBackend;
 pub use pjrt::PjrtDense;
@@ -180,6 +181,30 @@ pub trait InferBackend {
     /// Zero slot `slot`'s recurrent state (a fresh request stream).
     fn reset_slot(&mut self, slot: usize) -> Result<()>;
 
+    /// Export slot `slot`'s recurrent state as an opaque
+    /// [`SlotState`] blob (one flat row per layer in the
+    /// [`RecurrentCell`](crate::quant::RecurrentCell) layout: `h` at
+    /// offset 0, LSTM `[h | c]`, GRU `[h]`). Round-trips bit-exactly
+    /// through [`restore_slot`](InferBackend::restore_slot) — the
+    /// basis of the session cache ([`crate::session`]). Backends
+    /// without state export return a typed
+    /// [`StateError::Unsupported`], never a silent no-op.
+    fn snapshot_slot(&self, slot: usize) -> Result<SlotState, StateError> {
+        let _ = slot;
+        Err(StateError::Unsupported { backend: self.kind().label() })
+    }
+
+    /// Import a [`SlotState`] blob into slot `slot`, overwriting every
+    /// state row. Validates arch, layer count, hidden width and every
+    /// per-layer row width against the serving model and refuses a
+    /// mismatch with a typed [`StateError`] (the slot keeps its prior
+    /// state on refusal).
+    fn restore_slot(&mut self, slot: usize, state: &SlotState)
+        -> Result<(), StateError> {
+        let _ = (slot, state);
+        Err(StateError::Unsupported { backend: self.kind().label() })
+    }
+
     /// Advance every active slot by one token. `tokens[i]` is `Some(t)`
     /// for active slots and `None` for idle ones; `tokens.len()` must be
     /// `slots()`. Writes each active slot's next-token logits into row
@@ -212,6 +237,15 @@ impl<B: InferBackend + ?Sized> InferBackend for Box<B> {
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
         (**self).reset_slot(slot)
+    }
+
+    fn snapshot_slot(&self, slot: usize) -> Result<SlotState, StateError> {
+        (**self).snapshot_slot(slot)
+    }
+
+    fn restore_slot(&mut self, slot: usize, state: &SlotState)
+        -> Result<(), StateError> {
+        (**self).restore_slot(slot, state)
     }
 
     fn step_batch(&mut self, tokens: &[Option<i32>], logits: &mut [f32])

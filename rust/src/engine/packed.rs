@@ -51,6 +51,7 @@ use super::{BackendKind, BackendSpec, InferBackend};
 use crate::quant::gemm::gemm_f32_bias_cols;
 use crate::quant::{gemv_f32, GemmScratch, Packed, PackedStack,
                    RecurrentCell, SharedOut};
+use crate::session::{SlotState, StateError};
 
 /// Column-shard one packed GEMM (`out = x·w`) across the pool: each
 /// shard streams only its own columns' packed plane bytes through the
@@ -412,6 +413,60 @@ impl InferBackend for PackedBackend {
         for (l, state) in self.states.iter_mut().enumerate() {
             let sw = self.stack.layer(l).state_width();
             state[slot * sw..(slot + 1) * sw].fill(0.0);
+        }
+        Ok(())
+    }
+
+    fn snapshot_slot(&self, slot: usize) -> Result<SlotState, StateError> {
+        if slot >= self.n_slots {
+            return Err(StateError::SlotOutOfRange { slot,
+                                                    slots: self.n_slots });
+        }
+        let rows = self.states.iter().enumerate()
+            .map(|(l, state)| {
+                let sw = self.stack.layer(l).state_width();
+                state[slot * sw..(slot + 1) * sw].to_vec()
+            })
+            .collect();
+        Ok(SlotState { arch: self.stack.arch(), hidden: self.hidden, rows })
+    }
+
+    fn restore_slot(&mut self, slot: usize, state: &SlotState)
+        -> Result<(), StateError> {
+        if slot >= self.n_slots {
+            return Err(StateError::SlotOutOfRange { slot,
+                                                    slots: self.n_slots });
+        }
+        if state.arch != self.stack.arch() {
+            return Err(StateError::ArchMismatch {
+                expected: self.stack.arch(), got: state.arch });
+        }
+        if state.layers() != self.stack.layers() {
+            return Err(StateError::LayersMismatch {
+                expected: self.stack.layers(), got: state.layers() });
+        }
+        if state.hidden != self.hidden {
+            return Err(StateError::HiddenMismatch {
+                expected: self.hidden, got: state.hidden });
+        }
+        // validate every row BEFORE writing any, so a refused restore
+        // leaves the slot exactly as it was
+        for (l, row) in state.rows.iter().enumerate() {
+            let sw = self.stack.layer(l).state_width();
+            if row.len() != sw {
+                return Err(StateError::WidthMismatch {
+                    layer: l, expected: sw, got: row.len() });
+            }
+        }
+        // every state word this slot can ever expose lives in
+        // `states[l]`: the batched path gathers active rows into fresh
+        // scratch each step and idle logit rows are never written, so
+        // overwriting the full rows here cannot leave stale scratch
+        // visible to the restored stream
+        for (l, row) in state.rows.iter().enumerate() {
+            let sw = self.stack.layer(l).state_width();
+            self.states[l][slot * sw..(slot + 1) * sw]
+                .copy_from_slice(row);
         }
         Ok(())
     }

@@ -12,7 +12,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::{BackendKind, InferBackend};
+use crate::quant::CellArch;
 use crate::runtime::{literal, Engine, Session};
+use crate::session::{SlotState, StateError};
 
 /// Dense serving over a compiled `infer_*` entrypoint.
 pub struct PjrtDense {
@@ -108,6 +110,51 @@ impl InferBackend for PjrtDense {
         anyhow::ensure!(slot < self.n_slots, "slot {slot} out of range");
         self.h[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
         self.c[slot * self.hidden..(slot + 1) * self.hidden].fill(0.0);
+        Ok(())
+    }
+
+    fn snapshot_slot(&self, slot: usize) -> Result<SlotState, StateError> {
+        if slot >= self.n_slots {
+            return Err(StateError::SlotOutOfRange { slot,
+                                                    slots: self.n_slots });
+        }
+        // one LSTM layer, RecurrentCell layout `[h|c]` (h at offset 0)
+        let s = slot * self.hidden..(slot + 1) * self.hidden;
+        let mut row = Vec::with_capacity(2 * self.hidden);
+        row.extend_from_slice(&self.h[s.clone()]);
+        row.extend_from_slice(&self.c[s]);
+        Ok(SlotState { arch: CellArch::Lstm,
+                       hidden: self.hidden,
+                       rows: vec![row] })
+    }
+
+    fn restore_slot(&mut self, slot: usize, state: &SlotState)
+        -> Result<(), StateError> {
+        if slot >= self.n_slots {
+            return Err(StateError::SlotOutOfRange { slot,
+                                                    slots: self.n_slots });
+        }
+        if state.arch != CellArch::Lstm {
+            return Err(StateError::ArchMismatch { expected: CellArch::Lstm,
+                                                  got: state.arch });
+        }
+        if state.layers() != 1 {
+            return Err(StateError::LayersMismatch { expected: 1,
+                                                    got: state.layers() });
+        }
+        if state.hidden != self.hidden {
+            return Err(StateError::HiddenMismatch { expected: self.hidden,
+                                                    got: state.hidden });
+        }
+        let row = &state.rows[0];
+        if row.len() != 2 * self.hidden {
+            return Err(StateError::WidthMismatch { layer: 0,
+                                                   expected: 2 * self.hidden,
+                                                   got: row.len() });
+        }
+        let s = slot * self.hidden..(slot + 1) * self.hidden;
+        self.h[s.clone()].copy_from_slice(&row[..self.hidden]);
+        self.c[s].copy_from_slice(&row[self.hidden..]);
         Ok(())
     }
 

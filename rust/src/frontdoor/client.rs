@@ -157,6 +157,73 @@ impl FrontDoorClient {
         Ok(outcomes)
     }
 
+    /// Prefill `prompt` and suspend the resulting recurrent state under
+    /// the client-chosen session id `sid` (no generation); blocks for
+    /// the single outcome. Like the control-plane helpers, must not be
+    /// called while `gen` responses are still streaming here.
+    pub fn session(&mut self, sid: u64, id: u64, temperature: f32,
+                   prompt: Vec<i32>) -> Result<WireOutcome> {
+        self.send(&ClientMsg::Session { sid, id, temperature, prompt })?;
+        self.collect_one(id)
+    }
+
+    /// Resume session `sid`: feed the continuation `prompt` (may be
+    /// empty when `gen_len > 0`) and generate `gen_len` tokens. The
+    /// advanced state is re-saved under the same `sid`, so a chat can
+    /// keep alternating `resume` calls.
+    pub fn resume(&mut self, sid: u64, id: u64, gen_len: usize,
+                  temperature: f32, prompt: Vec<i32>)
+        -> Result<WireOutcome> {
+        self.send(&ClientMsg::Resume {
+            sid, id, gen_len, temperature, prompt,
+        })?;
+        self.collect_one(id)
+    }
+
+    /// Block for the terminal outcome of exactly one in-flight request,
+    /// reassembling its token stream. Any frame for a different id is a
+    /// protocol violation here (callers keep the connection quiet).
+    fn collect_one(&mut self, id: u64) -> Result<WireOutcome> {
+        let mut tokens: Vec<i32> = vec![];
+        loop {
+            match self.recv()? {
+                ServerMsg::Tok { id: rid, index, token } => {
+                    ensure!(rid == id, "token for request {rid} while \
+                            waiting on {id}");
+                    ensure!(index == tokens.len(),
+                            "token stream gap for request {id}: index \
+                             {index} after {} tokens", tokens.len());
+                    tokens.push(token);
+                }
+                ServerMsg::Done { id: rid, n_tokens, logprob_bits,
+                                  shard } => {
+                    ensure!(rid == id, "done for request {rid} while \
+                            waiting on {id}");
+                    ensure!(tokens.len() == n_tokens,
+                            "done for request {id} declares {n_tokens} \
+                             tokens but {} were streamed", tokens.len());
+                    return Ok(WireOutcome::Done(WireResponse {
+                        id, tokens, logprob_bits, shard,
+                    }));
+                }
+                ServerMsg::Busy { id: rid } if rid == id => {
+                    return Ok(WireOutcome::Busy(id));
+                }
+                ServerMsg::Closing { id: rid } if rid == id => {
+                    return Ok(WireOutcome::Closing(id));
+                }
+                ServerMsg::Error { id: Some(rid), msg } if rid == id => {
+                    return Ok(WireOutcome::Failed { id, msg });
+                }
+                ServerMsg::Error { id: None, msg } => {
+                    bail!("protocol error from server: {msg}");
+                }
+                other => bail!("unexpected server message while waiting \
+                                on request {id}: {other:?}"),
+            }
+        }
+    }
+
     /// Round-trip liveness check.
     pub fn ping(&mut self) -> Result<()> {
         self.send(&ClientMsg::Ping)?;

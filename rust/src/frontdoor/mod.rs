@@ -30,7 +30,10 @@
 //!   ([`ServingCluster::take_responses`]) and forwards each completed
 //!   request to its connection as `tok` frames plus a `done` frame,
 //!   translating cluster-wide request ids back to the client's own ids.
-//! * **Admission**: the reader calls [`ServingCluster::try_submit`];
+//! * **Admission**: the reader calls [`ServingCluster::try_submit`]
+//!   (`session`/`resume` frames go through
+//!   [`ServingCluster::try_submit_with`] carrying their
+//!   [`crate::session::SubmitOpts`]);
 //!   [`SubmitRefused::Full`] becomes a `busy` frame ("overloaded, retry
 //!   later"), [`SubmitRefused::Draining`] becomes `closing` ("shutting
 //!   down"), and validation failures come back as request-scoped `err`
@@ -80,6 +83,7 @@ use anyhow::{Context, Result};
 use crate::cluster::{ClusterReport, ClusterResponse, ClusterStats,
                      ServingCluster, SubmitRefused};
 use crate::coordinator::Request;
+use crate::session::SubmitOpts;
 use proto::{read_frame, write_frame};
 
 /// Per-connection outbox depth (frames queued between the pump/reader
@@ -448,42 +452,74 @@ fn handle_frame(line: &str, conn_id: u64, tx: &mpsc::SyncSender<ServerMsg>,
             send(ServerMsg::Ok { msg: "draining".to_string() })
         }
         ClientMsg::Gen { id, gen_len, temperature, prompt } => {
-            if shared.draining.load(Ordering::SeqCst) {
-                return send(ServerMsg::Closing { id });
-            }
-            let cid = shared.next_req.fetch_add(1, Ordering::SeqCst);
-            // register the route-back BEFORE submitting: a fast shard
-            // could otherwise complete the request before the pump can
-            // find out where its response goes
-            shared.pending.lock().unwrap()
-                .insert(cid, PendingReq { conn: conn_id, client_id: id });
-            let res = {
-                let mut g = shared.cluster.lock().unwrap();
-                match g.as_mut() {
-                    Some(c) => c.try_submit(Request {
-                        id: cid,
-                        prompt,
-                        gen_len,
-                        temperature,
-                    }),
-                    None => Err(SubmitRefused::Draining),
-                }
+            submit_wire(shared, conn_id, &send, id, Request {
+                id: 0, // assigned inside
+                prompt,
+                gen_len,
+                temperature,
+            }, SubmitOpts::default())
+        }
+        ClientMsg::Session { sid, id, temperature, prompt } => {
+            // prefill-and-suspend: no generation, state saved under sid
+            submit_wire(shared, conn_id, &send, id, Request {
+                id: 0,
+                prompt,
+                gen_len: 0,
+                temperature,
+            }, SubmitOpts { save_session: Some(sid),
+                            ..SubmitOpts::default() })
+        }
+        ClientMsg::Resume { sid, id, gen_len, temperature, prompt } => {
+            // restore sid's state, feed the continuation, and re-save
+            // under the same sid so a chat can keep alternating resumes
+            submit_wire(shared, conn_id, &send, id, Request {
+                id: 0,
+                prompt,
+                gen_len,
+                temperature,
+            }, SubmitOpts { save_session: Some(sid),
+                            resume: Some(sid) })
+        }
+    }
+}
+
+/// Shared admission path for `gen` / `session` / `resume` frames:
+/// allocate the cluster-wide id, register the route-back, submit with
+/// the frame's session options, and map refusals onto wire replies.
+/// Accepted work answers later through the pump.
+fn submit_wire(shared: &Arc<Shared>, conn_id: u64,
+               send: &dyn Fn(ServerMsg) -> bool, id: u64,
+               mut req: Request, opts: SubmitOpts) -> bool {
+    if shared.draining.load(Ordering::SeqCst) {
+        return send(ServerMsg::Closing { id });
+    }
+    let cid = shared.next_req.fetch_add(1, Ordering::SeqCst);
+    req.id = cid;
+    // register the route-back BEFORE submitting: a fast shard could
+    // otherwise complete the request before the pump can find out
+    // where its response goes
+    shared.pending.lock().unwrap()
+        .insert(cid, PendingReq { conn: conn_id, client_id: id });
+    let res = {
+        let mut g = shared.cluster.lock().unwrap();
+        match g.as_mut() {
+            Some(c) => c.try_submit_with(req, &opts),
+            None => Err(SubmitRefused::Draining),
+        }
+    };
+    match res {
+        Ok(()) => true,
+        Err(refused) => {
+            shared.pending.lock().unwrap().remove(&cid);
+            let reply = match refused {
+                SubmitRefused::Full { .. } => ServerMsg::Busy { id },
+                SubmitRefused::Draining => ServerMsg::Closing { id },
+                SubmitRefused::Invalid(m) => ServerMsg::Error {
+                    id: Some(id),
+                    msg: m,
+                },
             };
-            match res {
-                Ok(()) => true,
-                Err(refused) => {
-                    shared.pending.lock().unwrap().remove(&cid);
-                    let reply = match refused {
-                        SubmitRefused::Full { .. } => ServerMsg::Busy { id },
-                        SubmitRefused::Draining => ServerMsg::Closing { id },
-                        SubmitRefused::Invalid(m) => ServerMsg::Error {
-                            id: Some(id),
-                            msg: m,
-                        },
-                    };
-                    send(reply)
-                }
-            }
+            send(reply)
         }
     }
 }
@@ -607,6 +643,15 @@ fn render_metrics(stats: &ClusterStats, meta: &MetricsMeta) -> String {
     line(format!("rbtw_cluster_weight_bytes {}", meta.weight_bytes));
     line(format!("rbtw_cluster_tokens_per_sec {:.3}",
                  stats.tokens_per_sec));
+    if let Some(ss) = &stats.sessions {
+        line(format!("rbtw_session_prefix_hits {}", ss.prefix_hits));
+        line(format!("rbtw_session_prefix_misses {}", ss.prefix_misses));
+        line(format!("rbtw_session_evictions {}", ss.evictions));
+        line(format!("rbtw_session_entries {}", ss.entries));
+        line(format!("rbtw_session_sessions {}", ss.sessions));
+        line(format!("rbtw_session_resident_bytes {}",
+                     ss.resident_bytes));
+    }
     for (path, s) in [("queue", &stats.queue), ("run", &stats.run),
                       ("total", &stats.total)] {
         for (q, v) in [("p50", s.p50_ms), ("p95", s.p95_ms),
@@ -646,6 +691,14 @@ mod tests {
         let mut stats = ClusterStats::default();
         stats.completed = 12;
         stats.tokens_processed = 48;
+        stats.sessions = Some(crate::session::SessionCounters {
+            prefix_hits: 4,
+            prefix_misses: 2,
+            evictions: 1,
+            entries: 3,
+            sessions: 1,
+            resident_bytes: 2048,
+        });
         stats.shards.push(ShardStats {
             shard: 0,
             routed: 7,
@@ -682,8 +735,16 @@ mod tests {
         assert!(text.contains("rbtw_cluster_queue_depth 3\n"));
         assert!(text.contains("rbtw_cluster_completed 12\n"));
         assert!(text.contains("rbtw_latency_ms{path=\"total\",q=\"p99\"}"));
+        assert!(text.contains("rbtw_session_prefix_hits 4\n"));
+        assert!(text.contains("rbtw_session_evictions 1\n"));
+        assert!(text.contains("rbtw_session_resident_bytes 2048\n"));
         assert!(text.len() <= proto::MAX_FRAME,
                 "metrics text must fit one frame");
+        // a cacheless cluster omits the session gauges entirely
+        stats.sessions = None;
+        let text = render_metrics(&stats, &meta);
+        assert!(!text.contains("rbtw_session_"),
+                "no session gauges without a cache: {text}");
     }
 
     #[test]
@@ -691,6 +752,14 @@ mod tests {
         // worst case: MAX_SHARDS shards with large counters must still
         // fit the frame cap (the metrics reply is a single frame)
         let mut stats = ClusterStats::default();
+        stats.sessions = Some(crate::session::SessionCounters {
+            prefix_hits: u64::MAX,
+            prefix_misses: u64::MAX,
+            evictions: u64::MAX,
+            entries: u64::MAX,
+            sessions: u64::MAX,
+            resident_bytes: u64::MAX,
+        });
         for id in 0..crate::engine::BackendSpec::MAX_SHARDS {
             stats.shards.push(ShardStats {
                 shard: id,

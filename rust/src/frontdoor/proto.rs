@@ -14,14 +14,24 @@
 //!
 //! Client → server ([`ClientMsg`]):
 //!
-//! | frame                                   | meaning                      |
-//! |-----------------------------------------|------------------------------|
-//! | `gen <id> <gen_len> <temp> <tok...>`    | submit a generation request  |
-//! | `metrics`                               | fetch the metrics text       |
-//! | `add-shard`                             | grow the live fleet by one   |
-//! | `remove-shard <id>`                     | gracefully drain shard `id`  |
-//! | `drain`                                 | finish accepted work, close  |
-//! | `ping`                                  | liveness probe               |
+//! | frame                                     | meaning                      |
+//! |-------------------------------------------|------------------------------|
+//! | `gen <id> <gen_len> <temp> <tok...>`      | submit a generation request  |
+//! | `session <sid> <id> <temp> <tok...>`      | prefill + suspend under `sid`|
+//! | `resume <sid> <id> <gen_len> <temp> [tok...]` | resume session `sid` with a (possibly empty) continuation; re-saves under `sid` |
+//! | `metrics`                                 | fetch the metrics text       |
+//! | `add-shard`                               | grow the live fleet by one   |
+//! | `remove-shard <id>`                       | gracefully drain shard `id`  |
+//! | `drain`                                   | finish accepted work, close  |
+//! | `ping`                                    | liveness probe               |
+//!
+//! `session` runs the prompt through prefill (scoring it) and saves the
+//! slot's recurrent state under the client-chosen session id `sid`; it
+//! generates nothing (`done` reports 0 tokens). `resume` restores that
+//! state — on whichever shard the router picks — feeds the continuation
+//! tokens, generates `gen_len` tokens, and re-saves the advanced state
+//! under the same `sid`, so a chat alternates `resume` frames. Both
+//! reply with the usual `tok`/`done`/`err` stream keyed by `id`.
 //!
 //! Server → client ([`ServerMsg`]):
 //!
@@ -148,6 +158,24 @@ pub enum ClientMsg {
         temperature: f32,
         prompt: Vec<i32>,
     },
+    /// Prefill `prompt` and suspend the resulting recurrent state under
+    /// the client-chosen session id `sid` (no generation).
+    Session {
+        sid: u64,
+        id: u64,
+        temperature: f32,
+        prompt: Vec<i32>,
+    },
+    /// Resume session `sid`: feed `prompt` (the continuation — may be
+    /// empty when `gen_len > 0`), generate `gen_len` tokens, re-save
+    /// the advanced state under the same `sid`.
+    Resume {
+        sid: u64,
+        id: u64,
+        gen_len: usize,
+        temperature: f32,
+        prompt: Vec<i32>,
+    },
     Metrics,
     AddShard,
     RemoveShard(usize),
@@ -161,6 +189,23 @@ impl ClientMsg {
         match self {
             ClientMsg::Gen { id, gen_len, temperature, prompt } => {
                 let mut s = format!("gen {id} {gen_len} {temperature}");
+                for t in prompt {
+                    s.push(' ');
+                    s.push_str(&t.to_string());
+                }
+                s
+            }
+            ClientMsg::Session { sid, id, temperature, prompt } => {
+                let mut s = format!("session {sid} {id} {temperature}");
+                for t in prompt {
+                    s.push(' ');
+                    s.push_str(&t.to_string());
+                }
+                s
+            }
+            ClientMsg::Resume { sid, id, gen_len, temperature, prompt } => {
+                let mut s =
+                    format!("resume {sid} {id} {gen_len} {temperature}");
                 for t in prompt {
                     s.push(' ');
                     s.push_str(&t.to_string());
@@ -209,6 +254,56 @@ impl ClientMsg {
                 }
                 ClientMsg::Gen { id, gen_len, temperature, prompt }
             }
+            "session" => {
+                let sid: u64 = parse_field(parts.next(), "session sid")?;
+                let id: u64 = parse_field(parts.next(), "session id")?;
+                let temperature: f32 =
+                    parse_field(parts.next(), "session temperature")?;
+                if !temperature.is_finite() || temperature < 0.0 {
+                    return Err(format!(
+                        "session temperature {temperature} must be finite \
+                         and >= 0"));
+                }
+                let mut prompt = vec![];
+                for p in parts {
+                    prompt.push(p.parse::<i32>().map_err(|_| {
+                        format!("bad prompt token '{p}'")
+                    })?);
+                }
+                if prompt.is_empty() {
+                    return Err("session needs at least one prompt token"
+                        .to_string());
+                }
+                ClientMsg::Session { sid, id, temperature, prompt }
+            }
+            "resume" => {
+                let sid: u64 = parse_field(parts.next(), "resume sid")?;
+                let id: u64 = parse_field(parts.next(), "resume id")?;
+                let gen_len: usize =
+                    parse_field(parts.next(), "resume length")?;
+                if gen_len > MAX_WIRE_GEN {
+                    return Err(format!(
+                        "resume length {gen_len} out of range [0, \
+                         {MAX_WIRE_GEN}]"));
+                }
+                let temperature: f32 =
+                    parse_field(parts.next(), "resume temperature")?;
+                if !temperature.is_finite() || temperature < 0.0 {
+                    return Err(format!(
+                        "resume temperature {temperature} must be finite \
+                         and >= 0"));
+                }
+                // the continuation MAY be empty ("just keep generating")
+                // as long as gen_len >= 1; the session layer refuses the
+                // empty + gen 0 combination at admission
+                let mut prompt = vec![];
+                for p in parts {
+                    prompt.push(p.parse::<i32>().map_err(|_| {
+                        format!("bad prompt token '{p}'")
+                    })?);
+                }
+                ClientMsg::Resume { sid, id, gen_len, temperature, prompt }
+            }
             "metrics" => ClientMsg::Metrics,
             "add-shard" => ClientMsg::AddShard,
             "remove-shard" => {
@@ -218,8 +313,8 @@ impl ClientMsg {
             "drain" => ClientMsg::Drain,
             "ping" => ClientMsg::Ping,
             other => return Err(format!(
-                "unknown command '{other}' (accepted: gen, metrics, \
-                 add-shard, remove-shard, drain, ping)")),
+                "unknown command '{other}' (accepted: gen, session, \
+                 resume, metrics, add-shard, remove-shard, drain, ping)")),
         };
         Ok(msg)
     }
@@ -395,6 +490,12 @@ mod tests {
         let msgs = [
             ClientMsg::Gen { id: 7, gen_len: 12, temperature: 0.0,
                              prompt: vec![1, 2, 3] },
+            ClientMsg::Session { sid: 42, id: 8, temperature: 0.0,
+                                 prompt: vec![4, 5] },
+            ClientMsg::Resume { sid: 42, id: 9, gen_len: 6,
+                                temperature: 0.5, prompt: vec![6] },
+            ClientMsg::Resume { sid: 42, id: 10, gen_len: 1,
+                                temperature: 0.0, prompt: vec![] },
             ClientMsg::Metrics,
             ClientMsg::AddShard,
             ClientMsg::RemoveShard(3),
@@ -446,11 +547,20 @@ mod tests {
         for bad in ["", "gen", "gen 1", "gen 1 4", "gen 1 4 0",
                     "gen x 4 0 1", "gen 1 0 0 1", "gen 1 4 -1 1",
                     "gen 1 4 nan 1", "gen 1 4 0 1 notanumber",
-                    "launch-missiles", "remove-shard", "remove-shard x"] {
+                    "launch-missiles", "remove-shard", "remove-shard x",
+                    "session", "session 1", "session 1 2", "session 1 2 0",
+                    "session 1 2 -1 3", "session 1 2 0 x",
+                    "resume", "resume 1 2", "resume 1 2 x 0",
+                    "resume 1 2 4 nan", "resume 1 2 4 0 x"] {
             assert!(ClientMsg::parse(bad).is_err(), "should reject: {bad:?}");
         }
         // a huge gen_len is an admission error, not accepted work
         let huge = format!("gen 1 {} 0 1", MAX_WIRE_GEN + 1);
         assert!(ClientMsg::parse(&huge).is_err());
+        let huge = format!("resume 1 2 {} 0", MAX_WIRE_GEN + 1);
+        assert!(ClientMsg::parse(&huge).is_err());
+        // unknown-verb errors advertise the session verbs
+        let err = ClientMsg::parse("launch-missiles").unwrap_err();
+        assert!(err.contains("session") && err.contains("resume"), "{err}");
     }
 }

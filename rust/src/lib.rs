@@ -74,6 +74,24 @@
 //! network hop. Live fleet operations (`add-shard`, `remove-shard`,
 //! `metrics`, `drain`) ride the same protocol; `rbtw serve --listen`
 //! exposes the whole thing from the CLI with a stdin operator console.
+//!
+//! # Session cache
+//!
+//! [`session`] exploits the recurrent substrate's asymmetric advantage
+//! over transformer serving: per-slot state is `O(layers × hidden)` and
+//! constant in sequence length, so snapshots are cheap at any prompt
+//! depth. [`engine::InferBackend::snapshot_slot`] /
+//! [`engine::InferBackend::restore_slot`] export/import one slot's
+//! state as an opaque [`session::SlotState`] (typed
+//! [`session::StateError`] on any mismatch), and
+//! [`session::SessionCache`] layers three moves on top: a keyed
+//! **prefix cache** (requests sharing a system prompt skip its prefill,
+//! bit-exactly), **suspend/resume** (a completed request's state
+//! outlives its slot under a client-chosen session id and resumes on
+//! any shard — state travels through the router inside
+//! [`session::PreparedSubmit`]), and a bounded **LRU byte budget** with
+//! hit/miss/evict gauges in `live_stats` and `/metrics`. The `session`
+//! / `resume` wire verbs expose it through the front door.
 
 pub mod cluster;
 pub mod config;
@@ -86,4 +104,5 @@ pub mod metrics;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod session;
 pub mod util;

@@ -147,6 +147,10 @@ fn print_usage() {
          \x20                             door; :0 = ephemeral. stdin console:\n\
          \x20                             drain | metrics | add-shard |\n\
          \x20                             remove-shard N)\n\
+         \x20                             --session-bytes N (recurrent-state\n\
+         \x20                             session cache budget; 0 = off)\n\
+         \x20                             --session-grid N (prefix capture\n\
+         \x20                             stride)\n\
          \x20                             --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
@@ -307,6 +311,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
                          127.0.0.1:4250 (:0 picks an ephemeral port)");
         spec.listen = Some(l.to_string());
     }
+    if let Some(b) = args.get_usize("session-bytes")? {
+        anyhow::ensure!(ServeSpec::SESSION_BYTES_RANGE.contains(&b),
+                        "--session-bytes {b} out of range [{}, {}] \
+                         (0 disables the session cache)",
+                        ServeSpec::SESSION_BYTES_RANGE.start(),
+                        ServeSpec::SESSION_BYTES_RANGE.end());
+        spec.session_bytes = b;
+    }
+    if let Some(g) = args.get_usize("session-grid")? {
+        anyhow::ensure!(ServeSpec::SESSION_GRID_RANGE.contains(&g),
+                        "--session-grid {g} out of range [{}, {}]",
+                        ServeSpec::SESSION_GRID_RANGE.start(),
+                        ServeSpec::SESSION_GRID_RANGE.end());
+        spec.session_grid = g;
+    }
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
@@ -422,8 +441,14 @@ fn print_cluster_summary(report: &ClusterReport) {
 /// over the wire (`drain` frame) or from the stdin operator console.
 fn serve_network(shared: SharedModel, spec: &ServeSpec) -> Result<()> {
     let listen = spec.listen.as_deref().expect("serve_network needs listen");
-    let cluster = ServingCluster::new(&shared, &spec.backend_spec(),
-                                      spec.queue_cap, spec.policy)?;
+    // --session-bytes 0 turns the recurrent-state cache off entirely
+    // (session/resume frames then refuse at admission)
+    let cache = (spec.session_bytes > 0).then(|| {
+        rbtw::session::SessionCache::new(spec.session_bytes,
+                                         spec.session_grid)
+    });
+    let cluster = ServingCluster::new_with_sessions(
+        &shared, &spec.backend_spec(), spec.queue_cap, spec.policy, cache)?;
     let fd = FrontDoor::serve(cluster, listen)?;
     // exact line scripts poll for (ci.sh waits for it before connecting)
     println!("listening on {}", fd.local_addr());

@@ -295,6 +295,16 @@ impl Packed {
 /// `2H`); `PackedGruCell` is `[h]` (width `H`). A zeroed state row is
 /// the fresh-stream state for every implementation.
 ///
+/// The session layer ([`crate::session`]) snapshots and restores these
+/// rows verbatim (`SlotState` carries one row per layer in exactly this
+/// layout), so the contract is load-bearing beyond the engine: a row
+/// written back by `restore_slot` must leave the cell bit-for-bit
+/// indistinguishable from one that stepped the same tokens in place.
+/// Consequences for implementers: ALL cross-step recurrent memory must
+/// live in the state row (no side caches keyed to a slot), and any new
+/// cell kind picks a fixed row layout with h at offset 0 and documents
+/// it here.
+///
 /// ## Bit-exactness contract
 ///
 /// For any token/input sequence, [`Self::step_tokens`] /

@@ -1,0 +1,745 @@
+//! Recurrent-state session cache: slot snapshots, shared-prefix reuse
+//! and suspend/resume — the RNN answer to transformer prefix caching.
+//!
+//! ## Why this is cheap here
+//!
+//! A transformer's prefill cache grows with the sequence; our per-slot
+//! recurrent state is `O(layers × hidden)` and **constant in sequence
+//! length** — a snapshot taken after a 10k-token system prompt costs the
+//! same bytes as one taken after 10 tokens. That makes three serving
+//! moves nearly free:
+//!
+//! * **Snapshot/restore** ([`SlotState`]): export one decode slot's
+//!   per-layer state as an opaque blob and import it into any slot of
+//!   any engine serving the same model
+//!   ([`crate::engine::InferBackend::snapshot_slot`] /
+//!   [`restore_slot`](crate::engine::InferBackend::restore_slot)).
+//! * **Prefix cache**: requests sharing a system prompt skip its
+//!   prefill entirely. [`SessionCache`] keys grid-aligned prompt
+//!   prefixes by FNV-1a over (model fingerprint, prefix tokens); the
+//!   first request through a prefix publishes a snapshot mid-prefill,
+//!   later requests are hit-checked at submit time.
+//! * **Suspend/resume**: a completed request's state outlives its slot
+//!   under a client-chosen session id and a follow-up resumes it — on
+//!   *any* shard, because the restored state travels inside the
+//!   prepared request through the cluster router ([`PreparedSubmit`]).
+//!
+//! ## State layout contract
+//!
+//! A [`SlotState`] holds one flat f32 row per layer in the
+//! [`RecurrentCell`](crate::quant::RecurrentCell) layout: the first
+//! `hidden()` entries are the output `h` (LSTM rows are `[h | c]`,
+//! width `2 × hidden`; GRU rows are `[h]`, width `hidden`). Backends
+//! validate arch / layer count / hidden width / per-layer row width on
+//! restore and return a typed [`StateError`] — never silently accept a
+//! mismatched blob.
+//!
+//! ## Why restored serving is bit-exact
+//!
+//! Snapshots copy the exact f32 words the engine computes with — no
+//! requantization, no rounding. A prefix snapshot is taken at the step
+//! where the state has consumed exactly `at` prompt tokens, *before*
+//! that step's score is folded in, together with the logits row the
+//! step produced and the running prompt log-prob sum. A hit replays
+//! the one score the snapshot point owes (from the cached logits row,
+//! at prepare time) and then continues stepping — the same f32/f64
+//! operations in the same order as the straight-through run, so greedy
+//! tokens and prompt log-probs match bit for bit. The same argument
+//! covers suspend/resume: the saved entry carries the one not-yet-fed
+//! token (`pending`) so the resumed slot feeds the identical token
+//! sequence. Enforced by `rust/tests/session_integration.rs` and the
+//! ci.sh straight-vs-resume digest diff.
+//!
+//! ## Bounded residency
+//!
+//! The cache is one LRU tier with a byte budget
+//! ([`SessionCache::new`]): prefix entries and suspended sessions
+//! share it, inserts evict least-recently-used entries until the
+//! budget holds, and hit/miss/evict counters surface through
+//! [`SessionCounters`] into `live_stats` and the `/metrics` frame.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{log_softmax_at, validate_request, Request};
+use crate::engine::SharedModel;
+use crate::quant::CellArch;
+
+/// Default LRU byte budget for the serving session cache (16 MiB —
+/// thousands of sessions at recurrent-state sizes).
+pub const DEFAULT_SESSION_BYTES: usize = 16 << 20;
+
+/// Default prefix-capture grid: snapshots are taken (and looked up) at
+/// prompt positions that are multiples of this. Coarse enough that
+/// capture overhead is negligible, fine enough that a shared system
+/// prompt's tail is nearly always covered.
+pub const DEFAULT_SESSION_GRID: usize = 32;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv_feed(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// One decode slot's recurrent state, exported in the
+/// [`RecurrentCell`](crate::quant::RecurrentCell) layout (see the
+/// module docs' state layout contract). Opaque to everything except
+/// the backends that produce and consume it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotState {
+    /// Cell architecture the rows are laid out for.
+    pub arch: CellArch,
+    /// Hidden width (`h` occupies the first `hidden` entries per row).
+    pub hidden: usize,
+    /// One flat state row per layer, each `state_width()` long.
+    pub rows: Vec<Vec<f32>>,
+}
+
+impl SlotState {
+    pub fn layers(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Approximate resident bytes (payload + bookkeeping overhead);
+    /// the unit the LRU budget is accounted in.
+    pub fn bytes(&self) -> usize {
+        self.rows.iter().map(|r| r.len() * 4).sum::<usize>() + 48
+    }
+}
+
+/// Why a snapshot/restore was refused. Typed — a mismatched blob must
+/// fail loudly, never corrupt a slot silently.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StateError {
+    /// The backend has no state import/export (e.g. a mock).
+    Unsupported { backend: &'static str },
+    SlotOutOfRange { slot: usize, slots: usize },
+    ArchMismatch { expected: CellArch, got: CellArch },
+    LayersMismatch { expected: usize, got: usize },
+    HiddenMismatch { expected: usize, got: usize },
+    /// One layer's row length disagrees with the cell's
+    /// `state_width()`.
+    WidthMismatch { layer: usize, expected: usize, got: usize },
+}
+
+impl std::fmt::Display for StateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StateError::Unsupported { backend } => write!(
+                f, "backend {backend} does not support slot-state \
+                    snapshot/restore"),
+            StateError::SlotOutOfRange { slot, slots } => write!(
+                f, "slot {slot} out of range (backend has {slots} slots)"),
+            StateError::ArchMismatch { expected, got } => write!(
+                f, "state arch mismatch: backend serves {}, blob is {}",
+                expected.label(), got.label()),
+            StateError::LayersMismatch { expected, got } => write!(
+                f, "state layer-count mismatch: backend has {expected}, \
+                    blob has {got}"),
+            StateError::HiddenMismatch { expected, got } => write!(
+                f, "state hidden-width mismatch: backend is {expected}, \
+                    blob is {got}"),
+            StateError::WidthMismatch { layer, expected, got } => write!(
+                f, "state row width mismatch at layer {layer}: expected \
+                    {expected}, got {got}"),
+        }
+    }
+}
+
+impl std::error::Error for StateError {}
+
+/// Session options for a submit ([`InferenceServer::submit_with`]
+/// (crate::coordinator::InferenceServer::submit_with) /
+/// [`ServingCluster::try_submit_with`]
+/// (crate::cluster::ServingCluster::try_submit_with)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SubmitOpts {
+    /// Save the slot's final state under this session id at
+    /// completion, so a later request can resume it.
+    pub save_session: Option<u64>,
+    /// Resume a previously saved session: the request's prompt is the
+    /// *continuation* (may be empty when `gen_len > 0`) and is served
+    /// on top of the saved state.
+    pub resume: Option<u64>,
+}
+
+/// How a prepared request starts its slot: fresh (default), from a
+/// prefix-cache hit (`start_pos > 0`), or from a resumed session
+/// (restored state + carried log-prob accounting).
+#[derive(Clone, Debug, Default)]
+pub struct ResumePlan {
+    /// State to restore into the slot before the first step.
+    pub state: Option<SlotState>,
+    /// Prompt position the slot starts at (prefix-cache hits skip
+    /// `start_pos` prefill steps).
+    pub start_pos: usize,
+    /// Carried prompt log-prob sum (covers the skipped prefix / the
+    /// suspended session's scored tokens).
+    pub logprob_sum: f64,
+    /// Scored-token count already folded into `logprob_sum` beyond
+    /// this request's own prompt (resume carries the session's).
+    pub scored_extra: usize,
+}
+
+/// Mid-prefill snapshot instruction: when the slot's state has
+/// consumed exactly `at` prompt tokens, publish it under `key`.
+#[derive(Clone, Copy, Debug)]
+pub struct CapturePlan {
+    pub at: usize,
+    pub key: u64,
+}
+
+/// A request resolved against the session cache at submit time. This
+/// is what travels through queues and the cluster router, so a resumed
+/// session lands on whichever shard the router picks — state is not
+/// shard-pinned.
+#[derive(Clone, Debug)]
+pub struct PreparedSubmit {
+    pub req: Request,
+    pub plan: ResumePlan,
+    pub capture: Option<CapturePlan>,
+    /// Session id to save the final state under at completion.
+    pub save: Option<u64>,
+}
+
+impl PreparedSubmit {
+    /// A request with no session interaction at all.
+    pub fn plain(req: Request) -> Self {
+        Self { req, plan: ResumePlan::default(), capture: None, save: None }
+    }
+}
+
+/// Cache gauges for `live_stats` and the `/metrics` frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionCounters {
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub evictions: u64,
+    /// Resident prefix entries.
+    pub entries: u64,
+    /// Resident suspended sessions.
+    pub sessions: u64,
+    pub resident_bytes: u64,
+}
+
+struct PrefixEntry {
+    /// The exact prefix tokens — verified on every hit so an FNV key
+    /// collision degrades to a miss, never to wrong output.
+    prefix: Vec<i32>,
+    state: SlotState,
+    /// The logits row produced by the step that consumed the prefix's
+    /// last token (the prediction for token `prefix.len()`), so a hit
+    /// can replay the one score the snapshot point owes.
+    logits: Vec<f32>,
+    /// Prompt log-prob sum over tokens `1..prefix.len()-1`.
+    logprob_sum: f64,
+    stamp: u64,
+}
+
+impl PrefixEntry {
+    fn bytes(&self) -> usize {
+        self.state.bytes() + self.logits.len() * 4 + self.prefix.len() * 4
+            + 64
+    }
+}
+
+struct SessionEntry {
+    state: SlotState,
+    /// The one token the suspended slot had not yet fed (its
+    /// `last_token` at completion); a resume feeds it first.
+    pending: i32,
+    logprob_sum: f64,
+    /// Scored-token count behind `logprob_sum`.
+    scored: usize,
+    stamp: u64,
+}
+
+impl SessionEntry {
+    fn bytes(&self) -> usize {
+        self.state.bytes() + 64
+    }
+}
+
+struct Inner {
+    budget: usize,
+    grid: usize,
+    prefixes: HashMap<u64, PrefixEntry>,
+    sessions: HashMap<(u64, u64), SessionEntry>,
+    bytes: usize,
+    stamp: u64,
+    prefix_hits: u64,
+    prefix_misses: u64,
+    evictions: u64,
+}
+
+impl Inner {
+    fn touch(&mut self) -> u64 {
+        self.stamp += 1;
+        self.stamp
+    }
+
+    /// Evict least-recently-used entries (prefixes and sessions share
+    /// one budget) until resident bytes fit.
+    fn evict_to_budget(&mut self) {
+        while self.bytes > self.budget {
+            let oldest_prefix = self.prefixes.iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, e)| (*k, e.stamp));
+            let oldest_session = self.sessions.iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, e)| (*k, e.stamp));
+            match (oldest_prefix, oldest_session) {
+                (Some((pk, ps)), Some((_, ss))) if ps <= ss => {
+                    let e = self.prefixes.remove(&pk).unwrap();
+                    self.bytes -= e.bytes();
+                }
+                (_, Some((sk, _))) => {
+                    let e = self.sessions.remove(&sk).unwrap();
+                    self.bytes -= e.bytes();
+                }
+                (Some((pk, _)), None) => {
+                    let e = self.prefixes.remove(&pk).unwrap();
+                    self.bytes -= e.bytes();
+                }
+                (None, None) => break,
+            }
+            self.evictions += 1;
+        }
+    }
+}
+
+/// The shared (cluster-wide) session cache: one LRU byte budget over
+/// prefix snapshots and suspended sessions. `Clone` is a handle —
+/// every shard server and the cluster front door see the same cache.
+#[derive(Clone)]
+pub struct SessionCache {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl SessionCache {
+    /// `budget_bytes` bounds resident state; `grid` is the prefix
+    /// capture/lookup stride in tokens (clamped to >= 1).
+    pub fn new(budget_bytes: usize, grid: usize) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner {
+                budget: budget_bytes,
+                grid: grid.max(1),
+                prefixes: HashMap::new(),
+                sessions: HashMap::new(),
+                bytes: 0,
+                stamp: 0,
+                prefix_hits: 0,
+                prefix_misses: 0,
+                evictions: 0,
+            })),
+        }
+    }
+
+    pub fn grid(&self) -> usize {
+        self.inner.lock().unwrap().grid
+    }
+
+    pub fn counters(&self) -> SessionCounters {
+        let g = self.inner.lock().unwrap();
+        SessionCounters {
+            prefix_hits: g.prefix_hits,
+            prefix_misses: g.prefix_misses,
+            evictions: g.evictions,
+            entries: g.prefixes.len() as u64,
+            sessions: g.sessions.len() as u64,
+            resident_bytes: g.bytes as u64,
+        }
+    }
+
+    /// Resolve a request against the cache at submit time.
+    ///
+    /// * `opts.resume`: rewrite the prompt to `[pending] ++ prompt`
+    ///   over the saved session's restored state (error if the session
+    ///   is unknown or was evicted).
+    /// * otherwise: probe grid-aligned prompt prefixes longest-first;
+    ///   a verified hit skips that much prefill and replays its one
+    ///   owed score from the cached logits row. Independently, plan a
+    ///   mid-prefill capture for the longest grid-aligned prefix not
+    ///   yet cached.
+    ///
+    /// Non-resume callers must have validated the prompt against the
+    /// model vocab first (the hit path indexes the cached logits row
+    /// by the next prompt token).
+    pub fn prepare(&self, fingerprint: u64, req: Request, opts: &SubmitOpts)
+        -> Result<PreparedSubmit, String> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(sid) = opts.resume {
+            let stamp = g.touch();
+            let Some(e) = g.sessions.get_mut(&(fingerprint, sid)) else {
+                return Err(format!("unknown or evicted session {sid}"));
+            };
+            e.stamp = stamp;
+            if req.prompt.is_empty() && req.gen_len == 0 {
+                return Err(format!(
+                    "resume of session {sid} with an empty continuation \
+                     needs gen_len >= 1"));
+            }
+            let mut prompt = Vec::with_capacity(1 + req.prompt.len());
+            prompt.push(e.pending);
+            prompt.extend_from_slice(&req.prompt);
+            let plan = ResumePlan {
+                state: Some(e.state.clone()),
+                start_pos: 0,
+                logprob_sum: e.logprob_sum,
+                scored_extra: e.scored,
+            };
+            return Ok(PreparedSubmit {
+                req: Request { prompt, ..req },
+                plan,
+                capture: None,
+                save: opts.save_session,
+            });
+        }
+        if opts.save_session.is_some()
+            && req.prompt.len() == 1
+            && req.gen_len == 0 {
+            // degenerate: the slot would complete on the step that
+            // feeds its only token, leaving no pending token to resume
+            // from bit-exactly
+            return Err("session save needs prompt length >= 2 or \
+                        gen_len >= 1".to_string());
+        }
+        let n = req.prompt.len();
+        let grid = g.grid;
+        // every grid-aligned proper prefix's key, in one pass (FNV is
+        // prefix-incremental)
+        let mut h = FNV_OFFSET;
+        fnv_feed(&mut h, &fingerprint.to_le_bytes());
+        let mut cands: Vec<(usize, u64)> = vec![];
+        for (i, &t) in req.prompt.iter().enumerate() {
+            fnv_feed(&mut h, &t.to_le_bytes());
+            let m = i + 1;
+            if m % grid == 0 && m < n {
+                cands.push((m, h));
+            }
+        }
+        // longest verified hit wins. One carve-out: a save with
+        // gen_len == 0 must not start at n-1 — the slot would complete
+        // on the very step that feeds prompt[n-1], leaving no pending
+        // token for a bit-exact resume.
+        let max_start = if opts.save_session.is_some() && req.gen_len == 0 {
+            n.saturating_sub(2)
+        } else {
+            n.saturating_sub(1)
+        };
+        let mut plan = ResumePlan::default();
+        for &(m, key) in cands.iter().rev() {
+            if m > max_start {
+                continue;
+            }
+            let stamp = g.touch();
+            if let Some(e) = g.prefixes.get_mut(&key) {
+                if e.prefix == req.prompt[..m] {
+                    e.stamp = stamp;
+                    let next = req.prompt[m] as usize;
+                    plan = ResumePlan {
+                        state: Some(e.state.clone()),
+                        start_pos: m,
+                        logprob_sum: e.logprob_sum
+                            + log_softmax_at(&e.logits, next),
+                        scored_extra: 0,
+                    };
+                    break;
+                }
+            }
+        }
+        if !cands.is_empty() {
+            if plan.start_pos > 0 {
+                g.prefix_hits += 1;
+            } else {
+                g.prefix_misses += 1;
+            }
+        }
+        // capture the longest grid-aligned prefix nobody has published
+        let mut capture = None;
+        for &(m, key) in cands.iter().rev() {
+            if m <= plan.start_pos {
+                break;
+            }
+            let cached = g.prefixes.get(&key)
+                .map_or(false, |e| e.prefix == req.prompt[..m]);
+            if !cached {
+                capture = Some(CapturePlan { at: m, key });
+                break;
+            }
+        }
+        Ok(PreparedSubmit { req, plan, capture,
+                            save: opts.save_session })
+    }
+
+    /// Publish a mid-prefill snapshot (the engine worker calls this at
+    /// the [`CapturePlan`] point). Entries larger than the whole
+    /// budget are dropped rather than thrashing the cache.
+    pub fn publish_prefix(&self, key: u64, prefix: &[i32], state: SlotState,
+                          logits: Vec<f32>, logprob_sum: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let stamp = g.touch();
+        let entry = PrefixEntry {
+            prefix: prefix.to_vec(),
+            state,
+            logits,
+            logprob_sum,
+            stamp,
+        };
+        let bytes = entry.bytes();
+        if bytes > g.budget {
+            return;
+        }
+        if let Some(old) = g.prefixes.insert(key, entry) {
+            g.bytes -= old.bytes();
+        }
+        g.bytes += bytes;
+        g.evict_to_budget();
+    }
+
+    /// Save a completed slot's state under `(fingerprint, sid)` so a
+    /// later request can resume it. Re-saving a live id replaces it.
+    pub fn save_session(&self, fingerprint: u64, sid: u64, state: SlotState,
+                        pending: i32, logprob_sum: f64, scored: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let stamp = g.touch();
+        let entry = SessionEntry { state, pending, logprob_sum, scored,
+                                   stamp };
+        let bytes = entry.bytes();
+        if bytes > g.budget {
+            return;
+        }
+        if let Some(old) = g.sessions.insert((fingerprint, sid), entry) {
+            g.bytes -= old.bytes();
+        }
+        g.bytes += bytes;
+        g.evict_to_budget();
+    }
+}
+
+/// FNV-1a key of a prompt prefix under a model fingerprint — the
+/// prefix-cache key [`SessionCache::prepare`] computes incrementally.
+/// Exposed for tests and tooling.
+pub fn prefix_key(fingerprint: u64, prefix: &[i32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv_feed(&mut h, &fingerprint.to_le_bytes());
+    for &t in prefix {
+        fnv_feed(&mut h, &t.to_le_bytes());
+    }
+    h
+}
+
+/// Fingerprint of everything that determines a model's state
+/// trajectory: cached state is only reusable between engines that
+/// would compute identical f32 states for identical tokens.
+pub fn model_fingerprint(shared: &SharedModel) -> u64 {
+    let mut h = FNV_OFFSET;
+    fnv_feed(&mut h, shared.name().as_bytes());
+    fnv_feed(&mut h, shared.quantizer().as_bytes());
+    fnv_feed(&mut h, &(shared.vocab() as u64).to_le_bytes());
+    fnv_feed(&mut h, &(shared.hidden() as u64).to_le_bytes());
+    fnv_feed(&mut h, shared.arch().label().as_bytes());
+    fnv_feed(&mut h, &(shared.layers() as u64).to_le_bytes());
+    fnv_feed(&mut h, shared.kind().label().as_bytes());
+    fnv_feed(&mut h, &shared.sample_seed().to_le_bytes());
+    h
+}
+
+/// A server's handle on the shared cache: the cache plus the model
+/// fingerprint its entries are keyed under.
+#[derive(Clone)]
+pub struct ServerSessions {
+    pub cache: SessionCache,
+    pub fingerprint: u64,
+}
+
+impl ServerSessions {
+    pub fn new(cache: SessionCache, shared: &SharedModel) -> Self {
+        let fingerprint = model_fingerprint(shared);
+        Self { cache, fingerprint }
+    }
+}
+
+/// The one submit-time resolution path, shared by
+/// [`InferenceServer`](crate::coordinator::InferenceServer) and
+/// [`ServingCluster`](crate::cluster::ServingCluster) so admission
+/// semantics cannot drift between the two layers. With no cache
+/// configured, session options are refused (not ignored) and plain
+/// requests pass through untouched.
+pub fn prepare_with(sessions: Option<&ServerSessions>, vocab: usize,
+                    req: Request, opts: &SubmitOpts)
+    -> anyhow::Result<PreparedSubmit> {
+    let Some(ss) = sessions else {
+        anyhow::ensure!(opts.resume.is_none() && opts.save_session.is_none(),
+                        "session cache is disabled on this server");
+        validate_request(&req, vocab)?;
+        return Ok(PreparedSubmit::plain(req));
+    };
+    if opts.resume.is_some() {
+        // the continuation may be empty — validate the rewritten
+        // prompt (pending token ++ continuation), which never is
+        let ps = ss.cache.prepare(ss.fingerprint, req, opts)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        validate_request(&ps.req, vocab)?;
+        Ok(ps)
+    } else {
+        // validate BEFORE the prefix probe: the hit path indexes the
+        // cached logits row by the next prompt token
+        validate_request(&req, vocab)?;
+        ss.cache.prepare(ss.fingerprint, req, opts)
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(width: usize, fill: f32) -> SlotState {
+        SlotState { arch: CellArch::Lstm, hidden: width / 2,
+                    rows: vec![vec![fill; width]] }
+    }
+
+    fn req(prompt: Vec<i32>, gen_len: usize) -> Request {
+        Request { id: 0, prompt, gen_len, temperature: 0.0 }
+    }
+
+    #[test]
+    fn prefix_hit_skips_prefill_and_carries_the_owed_score() {
+        let cache = SessionCache::new(1 << 20, 4);
+        let fp = 0xF00D;
+        let prompt: Vec<i32> = (0..10).collect();
+        // first prepare: miss, capture planned at the longest
+        // grid-aligned proper prefix (8)
+        let ps = cache.prepare(fp, req(prompt.clone(), 2),
+                               &SubmitOpts::default()).unwrap();
+        assert!(ps.plan.state.is_none());
+        assert_eq!(ps.plan.start_pos, 0);
+        let cap = ps.capture.expect("capture planned");
+        assert_eq!(cap.at, 8);
+        assert_eq!(cap.key, prefix_key(fp, &prompt[..8]));
+        let c = cache.counters();
+        assert_eq!((c.prefix_hits, c.prefix_misses), (0, 1));
+        // publish what the engine would capture at that point
+        let logits = vec![0.0f32, 1.0, 2.0, 0.5, -1.0, 0.0, 0.25, 3.0,
+                          -2.0, 1.5];
+        cache.publish_prefix(cap.key, &prompt[..8], state(6, 0.5),
+                             logits.clone(), -3.25);
+        // second prepare: verified hit at 8, score for prompt[8] folded
+        let ps = cache.prepare(fp, req(prompt.clone(), 2),
+                               &SubmitOpts::default()).unwrap();
+        assert_eq!(ps.plan.start_pos, 8);
+        assert_eq!(ps.plan.state, Some(state(6, 0.5)));
+        let want = -3.25 + log_softmax_at(&logits, prompt[8] as usize);
+        assert_eq!(ps.plan.logprob_sum.to_bits(), want.to_bits());
+        assert!(ps.capture.is_none(), "nothing longer left to capture");
+        assert_eq!(cache.counters().prefix_hits, 1);
+        // a different model fingerprint shares nothing
+        let ps = cache.prepare(fp ^ 1, req(prompt, 2),
+                               &SubmitOpts::default()).unwrap();
+        assert_eq!(ps.plan.start_pos, 0);
+    }
+
+    #[test]
+    fn key_collision_degrades_to_a_miss() {
+        let cache = SessionCache::new(1 << 20, 4);
+        let fp = 7;
+        let b: Vec<i32> = (10..20).collect();
+        // poison the cache: B's key, but some OTHER prefix's tokens —
+        // what an FNV-64 collision would look like
+        cache.publish_prefix(prefix_key(fp, &b[..8]), &[1, 2, 3, 4],
+                             state(4, 1.0), vec![0.0; 4], 0.0);
+        let ps = cache.prepare(fp, req(b, 1),
+                               &SubmitOpts::default()).unwrap();
+        assert_eq!(ps.plan.start_pos, 0, "colliding entry must not hit");
+        assert!(ps.plan.state.is_none());
+    }
+
+    #[test]
+    fn lru_budget_is_respected_and_evictions_counted() {
+        // each entry: state 4*4+48 + logits 16 + prefix 16 + 64 = 160
+        let cache = SessionCache::new(400, 4);
+        for i in 0..4i32 {
+            let p = vec![i; 4];
+            cache.publish_prefix(prefix_key(1, &p), &p, state(4, i as f32),
+                                 vec![0.0; 4], 0.0);
+        }
+        let c = cache.counters();
+        assert!(c.resident_bytes <= 400, "budget: {}", c.resident_bytes);
+        assert_eq!(c.entries, 2);
+        assert_eq!(c.evictions, 2);
+        // oldest entries went first: prefixes 2 and 3 survive
+        let hit = |i: i32| {
+            let mut prompt = vec![i; 4];
+            prompt.push(0);
+            cache.prepare(1, req(prompt, 1), &SubmitOpts::default())
+                .unwrap().plan.start_pos
+        };
+        assert_eq!(hit(0), 0);
+        assert_eq!(hit(3), 4);
+        // an entry larger than the whole budget is refused outright
+        let cache = SessionCache::new(64, 4);
+        cache.publish_prefix(prefix_key(1, &[1, 2, 3, 4]), &[1, 2, 3, 4],
+                             state(1024, 0.0), vec![0.0; 4], 0.0);
+        assert_eq!(cache.counters().entries, 0);
+        assert_eq!(cache.counters().resident_bytes, 0);
+    }
+
+    #[test]
+    fn sessions_save_resume_and_evict() {
+        let cache = SessionCache::new(1 << 20, 32);
+        let fp = 3;
+        assert!(cache.prepare(fp, req(vec![1], 4),
+                              &SubmitOpts { resume: Some(9), ..Default::default() })
+            .is_err(), "unknown session must refuse");
+        cache.save_session(fp, 9, state(8, 2.0), 42, -1.5, 7);
+        let ps = cache.prepare(fp, req(vec![5, 6], 4),
+                               &SubmitOpts { resume: Some(9),
+                                             save_session: Some(9) })
+            .unwrap();
+        assert_eq!(ps.req.prompt, vec![42, 5, 6], "pending token leads");
+        assert_eq!(ps.plan.start_pos, 0);
+        assert_eq!(ps.plan.logprob_sum, -1.5);
+        assert_eq!(ps.plan.scored_extra, 7);
+        assert_eq!(ps.save, Some(9));
+        assert!(ps.capture.is_none(), "resumes are not captured");
+        // empty continuation is fine with gen_len >= 1, refused at 0
+        assert!(cache.prepare(fp, req(vec![], 4),
+                              &SubmitOpts { resume: Some(9), ..Default::default() })
+            .is_ok());
+        assert!(cache.prepare(fp, req(vec![], 0),
+                              &SubmitOpts { resume: Some(9), ..Default::default() })
+            .is_err());
+        assert_eq!(cache.counters().sessions, 1);
+    }
+
+    #[test]
+    fn degenerate_save_is_refused() {
+        let cache = SessionCache::new(1 << 20, 32);
+        let err = cache.prepare(1, req(vec![5], 0),
+                                &SubmitOpts { save_session: Some(1),
+                                              ..Default::default() });
+        assert!(err.is_err());
+        assert!(cache.prepare(1, req(vec![5], 1),
+                              &SubmitOpts { save_session: Some(1),
+                                            ..Default::default() }).is_ok());
+        assert!(cache.prepare(1, req(vec![5, 6], 0),
+                              &SubmitOpts { save_session: Some(1),
+                                            ..Default::default() }).is_ok());
+    }
+
+    #[test]
+    fn state_error_display_is_specific() {
+        let e = StateError::WidthMismatch { layer: 1, expected: 32, got: 16 };
+        let s = e.to_string();
+        assert!(s.contains("layer 1") && s.contains("32") && s.contains("16"),
+                "{s}");
+        let e = StateError::ArchMismatch { expected: CellArch::Gru,
+                                           got: CellArch::Lstm };
+        assert!(e.to_string().contains("gru"), "{e}");
+    }
+}

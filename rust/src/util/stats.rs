@@ -55,8 +55,13 @@ impl Summary {
 }
 
 /// Percentile of a sample (linear interpolation); `q` in [0, 1].
+/// Empty input reports 0.0 — a drain with zero completed requests (or
+/// a bench warm-up window) must summarize cleanly, not panic the
+/// report path.
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -67,11 +72,26 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
-/// Sort a copy and take percentiles in one pass.
+/// Sort a copy and take percentiles in one pass. `total_cmp`, not
+/// `partial_cmp().unwrap()`: one NaN sample must not panic the serving
+/// drain/report path mid-serve (NaNs sort above every finite value and
+/// surface in the high percentiles instead).
 pub fn percentiles(samples: &[f64], qs: &[f64]) -> Vec<f64> {
     let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     qs.iter().map(|&q| percentile(&s, q)).collect()
+}
+
+/// `count / secs` with the zero/denormal guard the serving stats need:
+/// anything that would put `inf`/`NaN` into `ClusterStats`, the
+/// `/metrics` text frame or a `BENCH_*.json` (an instant drain, a
+/// poisoned clock) reports 0.0 instead.
+pub fn safe_rate(count: f64, secs: f64) -> f64 {
+    if !secs.is_finite() || secs <= 0.0 {
+        return 0.0;
+    }
+    let rate = count / secs;
+    if rate.is_finite() { rate } else { 0.0 }
 }
 
 /// Latency sample summary in milliseconds — the serving percentiles the
@@ -90,13 +110,19 @@ pub struct LatencySummary {
 
 impl LatencySummary {
     pub fn from_ms(samples: &[f64]) -> Self {
-        if samples.is_empty() {
+        // drop non-finite samples (a poisoned clock or NaN latency):
+        // one bad sample must not push NaN/inf through the mean into
+        // /metrics or a BENCH_*.json; the finite majority still
+        // summarizes. n counts what was summarized.
+        let finite: Vec<f64> =
+            samples.iter().copied().filter(|x| x.is_finite()).collect();
+        if finite.is_empty() {
             return Self::default();
         }
-        let ps = percentiles(samples, &[0.5, 0.95, 0.99, 1.0]);
+        let ps = percentiles(&finite, &[0.5, 0.95, 0.99, 1.0]);
         Self {
-            n: samples.len(),
-            mean_ms: samples.iter().sum::<f64>() / samples.len() as f64,
+            n: finite.len(),
+            mean_ms: finite.iter().sum::<f64>() / finite.len() as f64,
             p50_ms: ps[0],
             p95_ms: ps[1],
             p99_ms: ps[2],
@@ -199,6 +225,50 @@ mod tests {
         let z = LatencySummary::from_ms(&[]);
         assert_eq!(z.n, 0);
         assert_eq!(z.max_ms, 0.0);
+    }
+
+    #[test]
+    fn percentiles_survive_nan_samples() {
+        // regression: partial_cmp().unwrap() panicked the drain/report
+        // path on one NaN latency sample.
+        let samples = [3.0, f64::NAN, 1.0, 2.0];
+        let ps = percentiles(&samples, &[0.0, 0.5, 1.0]);
+        assert_eq!(ps[0], 1.0, "finite values still ordered");
+        assert!(ps[2].is_nan(), "NaN sorts above every finite value");
+        // all-NaN input must not panic either
+        let _ = percentiles(&[f64::NAN, f64::NAN], &[0.5]);
+        // and the latency summary drops non-finite samples entirely
+        let s = LatencySummary::from_ms(&[1.0, f64::NAN, 3.0,
+                                          f64::INFINITY]);
+        assert_eq!(s.n, 2);
+        assert!((s.mean_ms - 2.0).abs() < 1e-12);
+        assert!(s.max_ms.is_finite());
+        let all_bad = LatencySummary::from_ms(&[f64::NAN]);
+        assert_eq!(all_bad.n, 0);
+        assert_eq!(all_bad.max_ms, 0.0);
+    }
+
+    #[test]
+    fn empty_percentile_reports_zero_not_panic() {
+        // regression: percentile() asserted on empty input, so a drain
+        // with zero completed requests panicked instead of reporting.
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentiles(&[], &[0.5, 0.99]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn safe_rate_guards_zero_and_nonfinite_denominators() {
+        // regression: tokens/sec divided by elapsed time unguarded — an
+        // instant drain emitted inf/NaN into stats and BENCH json.
+        assert_eq!(safe_rate(100.0, 0.0), 0.0);
+        assert_eq!(safe_rate(100.0, -1.0), 0.0);
+        assert_eq!(safe_rate(100.0, f64::NAN), 0.0);
+        assert_eq!(safe_rate(100.0, f64::INFINITY), 0.0);
+        assert_eq!(safe_rate(f64::INFINITY, 1.0), 0.0);
+        // denormal elapsed time must not overflow to inf
+        assert_eq!(safe_rate(1e300, f64::MIN_POSITIVE), 0.0);
+        assert_eq!(safe_rate(120.0, 2.0), 60.0);
+        assert_eq!(safe_rate(0.0, 5.0), 0.0);
     }
 
     #[test]

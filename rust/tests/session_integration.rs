@@ -1,0 +1,265 @@
+//! Session-cache integration: recurrent-state snapshot/restore must be
+//! an exact refinement of straight-through serving —
+//!
+//! * **Snapshot property**: `restore(snapshot(s))` then replaying a
+//!   continuation produces bit-identical logits to the slot that never
+//!   suspended, across `{lstm, gru}` × layers `{1, 2}` × both packed
+//!   layouts × engine threads `{1, 4}` — including through a
+//!   free (reset) → restore cycle on a previously dirty slot.
+//! * **Typed refusal**: a blob from the wrong architecture, depth,
+//!   hidden width or with a tampered row refuses with the matching
+//!   [`StateError`] variant and leaves the slot's state untouched.
+//! * **Digest hook**: `ci.sh` runs `session_digest_is_path_invariant`
+//!   with `RBTW_SESSION_MODE=straight` and `=resume`, each writing an
+//!   FNV digest of the final greedy response to `RBTW_SESSION_DIGEST`,
+//!   and diffs the two files — suspend on one shard + resume on a
+//!   *different* shard must be bit-identical to never suspending at
+//!   all. Without the env vars the test runs both paths in-process and
+//!   asserts the digests match directly.
+
+use rbtw::cluster::{RoutePolicy, ServingCluster};
+use rbtw::coordinator::{Request, Response};
+use rbtw::engine::{self, BackendKind, BackendSpec, CellArch, InferBackend,
+                   ModelWeights, SharedModel};
+use rbtw::session::{StateError, SubmitOpts};
+
+#[path = "digest.rs"]
+mod digest;
+
+const VOCAB: usize = 24;
+const HIDDEN: usize = 16;
+
+fn build(kind: BackendKind, arch: CellArch, layers: usize, threads: usize)
+    -> Box<dyn InferBackend + Send> {
+    let weights =
+        ModelWeights::synthetic_arch(VOCAB, HIDDEN, arch, layers, "ter",
+                                     0xBEE5);
+    let spec = BackendSpec::with(kind, 3, 9)
+        .with_arch(arch, layers)
+        .with_threads(threads);
+    engine::from_weights(&weights, &spec).unwrap()
+}
+
+/// Feed `toks` into `slot` one step at a time; returns the final
+/// logits row's raw bits.
+fn drive(backend: &mut Box<dyn InferBackend + Send>, slot: usize,
+         toks: &[i32]) -> Vec<u32> {
+    let slots = backend.slots();
+    let mut logits = vec![0f32; slots * VOCAB];
+    let mut tokens = vec![None; slots];
+    for &t in toks {
+        tokens[slot] = Some(t);
+        backend.step_batch(&tokens, &mut logits).unwrap();
+    }
+    logits[slot * VOCAB..(slot + 1) * VOCAB]
+        .iter()
+        .map(|x| x.to_bits())
+        .collect()
+}
+
+#[test]
+fn restored_state_replays_bit_exactly_everywhere() {
+    let prefix = [3i32, 1, 4, 1, 5, 9];
+    let cont = [2i32, 6, 5, 3];
+    for arch in [CellArch::Lstm, CellArch::Gru] {
+        for layers in [1usize, 2] {
+            for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+                for threads in [1usize, 4] {
+                    let label = format!("{} {} x{layers} threads={threads}",
+                                        kind.label(), arch.label());
+                    let mut b = build(kind, arch, layers, threads);
+                    // slot 2 is the straight-through reference
+                    drive(&mut b, 2, &prefix);
+                    // slot 0: same prefix, then suspend
+                    drive(&mut b, 0, &prefix);
+                    let snap = b.snapshot_slot(0).unwrap();
+                    assert_eq!(snap.rows.len(), layers, "[{label}]");
+                    assert_eq!(snap.arch, arch, "[{label}]");
+                    assert_eq!(snap.hidden, HIDDEN, "[{label}]");
+                    let want_width = match arch {
+                        CellArch::Lstm => 2 * HIDDEN, // [h | c]
+                        CellArch::Gru => HIDDEN,      // [h]
+                    };
+                    for row in &snap.rows {
+                        assert_eq!(row.len(), want_width, "[{label}]");
+                    }
+                    // slot 1: serve an unrelated request, free the
+                    // slot, then restore the suspended state into it —
+                    // the free→restore cycle the server's scheduler
+                    // performs between requests
+                    drive(&mut b, 1, &[7, 7, 7, 7, 7]);
+                    b.reset_slot(1).unwrap();
+                    b.restore_slot(1, &snap).unwrap();
+                    let resumed = drive(&mut b, 1, &cont);
+                    let straight = drive(&mut b, 2, &cont);
+                    assert_eq!(resumed, straight,
+                               "[{label}] restored slot's logits diverged \
+                                from the never-suspended slot");
+                    // and the advanced states themselves stay bit-equal
+                    let s1 = b.snapshot_slot(1).unwrap();
+                    let s2 = b.snapshot_slot(2).unwrap();
+                    assert_eq!(s1, s2, "[{label}] post-continuation state");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mismatched_blobs_refuse_with_typed_errors_and_leave_state_intact() {
+    let mut lstm = build(BackendKind::PackedCpu, CellArch::Lstm, 2, 1);
+    drive(&mut lstm, 0, &[1, 2, 3]);
+    let snap = lstm.snapshot_slot(0).unwrap();
+
+    // slot index out of range (3 slots configured)
+    assert_eq!(lstm.snapshot_slot(9).unwrap_err(),
+               StateError::SlotOutOfRange { slot: 9, slots: 3 });
+    assert_eq!(lstm.restore_slot(9, &snap).unwrap_err(),
+               StateError::SlotOutOfRange { slot: 9, slots: 3 });
+
+    // wrong architecture
+    let mut gru = build(BackendKind::PackedPlanes, CellArch::Gru, 2, 1);
+    assert_eq!(gru.restore_slot(0, &snap).unwrap_err(),
+               StateError::ArchMismatch { expected: CellArch::Gru,
+                                          got: CellArch::Lstm });
+
+    // wrong depth
+    let mut shallow = build(BackendKind::PackedCpu, CellArch::Lstm, 1, 1);
+    assert_eq!(shallow.restore_slot(0, &snap).unwrap_err(),
+               StateError::LayersMismatch { expected: 1, got: 2 });
+
+    // wrong hidden width
+    let mut narrow = snap.clone();
+    narrow.hidden = HIDDEN / 2;
+    assert_eq!(lstm.restore_slot(0, &narrow).unwrap_err(),
+               StateError::HiddenMismatch { expected: HIDDEN,
+                                            got: HIDDEN / 2 });
+
+    // one tampered row: refused with the layer index, and the refusal
+    // must not have half-written the slot
+    drive(&mut lstm, 1, &[4, 4]);
+    let before = lstm.snapshot_slot(1).unwrap();
+    let mut torn = snap.clone();
+    torn.rows[1].pop();
+    match lstm.restore_slot(1, &torn).unwrap_err() {
+        StateError::WidthMismatch { layer, expected, got } => {
+            assert_eq!(layer, 1);
+            assert_eq!(expected, 2 * HIDDEN);
+            assert_eq!(got, 2 * HIDDEN - 1);
+        }
+        other => panic!("expected WidthMismatch, got {other:?}"),
+    }
+    assert_eq!(lstm.snapshot_slot(1).unwrap(), before,
+               "a refused restore must leave the slot exactly as it was");
+}
+
+// ---- cross-shard suspend/resume digest ------------------------------
+
+/// The conversation: `PREFIX` is prefilled and suspended, `CONT` is the
+/// continuation served after resume. Straight-through serves the
+/// concatenation as one request.
+const PREFIX: [i32; 8] = [3, 1, 4, 1, 5, 9, 2, 6];
+const CONT: [i32; 5] = [5, 3, 5, 8, 9];
+const GEN: usize = 6;
+/// Both paths give the *final* request this id, so the digests compare
+/// exactly the payload scheduling must preserve.
+const FINAL_ID: u64 = 5;
+const SID: u64 = 42;
+
+fn session_cluster() -> (SharedModel, BackendSpec) {
+    let weights = ModelWeights::synthetic_arch(26, 18, CellArch::Lstm, 2,
+                                               "ter", 0x5E55);
+    let spec = BackendSpec::with(BackendKind::PackedPlanes, 2, 11)
+        .with_arch(CellArch::Lstm, 2)
+        .with_shards(2);
+    let shared = SharedModel::prepare(&weights, spec.kind, 11).unwrap();
+    (shared, spec)
+}
+
+fn digest_response(r: &Response) -> u64 {
+    let mut hash = digest::FNV_OFFSET;
+    digest::feed(&mut hash, &r.id.to_le_bytes());
+    for t in &r.generated {
+        digest::feed(&mut hash, &t.to_le_bytes());
+    }
+    digest::feed(&mut hash, &r.prompt_logprob.to_bits().to_le_bytes());
+    hash
+}
+
+/// One request carrying the whole conversation, no suspension.
+fn run_straight() -> u64 {
+    let (shared, spec) = session_cluster();
+    let mut cluster =
+        ServingCluster::new(&shared, &spec, 8, RoutePolicy::LeastLoaded)
+            .unwrap();
+    let mut prompt = PREFIX.to_vec();
+    prompt.extend_from_slice(&CONT);
+    cluster.submit(Request { id: FINAL_ID, prompt, gen_len: GEN,
+                             temperature: 0.0 }).unwrap();
+    let report = cluster.drain().unwrap();
+    assert_eq!(report.responses.len(), 1);
+    digest_response(&report.responses[0].response)
+}
+
+/// Prefill + suspend on whichever shard the router picks, then retire
+/// THAT shard and resume on the survivor — the state must travel
+/// through the router, not stay pinned to the engine that produced it.
+fn run_resume() -> u64 {
+    let (shared, spec) = session_cluster();
+    let mut cluster =
+        ServingCluster::new(&shared, &spec, 8, RoutePolicy::LeastLoaded)
+            .unwrap();
+    let rx = cluster.take_responses().unwrap();
+    cluster.try_submit_with(
+        Request { id: 900, prompt: PREFIX.to_vec(), gen_len: 0,
+                  temperature: 0.0 },
+        &SubmitOpts { save_session: Some(SID), ..Default::default() })
+        .unwrap();
+    let first = rx.recv().unwrap();
+    assert_eq!(first.response.id, 900);
+    assert!(first.response.generated.is_empty());
+    let suspended_on = first.shard;
+    // the shard that held the state retires before the resume arrives
+    cluster.remove_shard(suspended_on).unwrap();
+    cluster.try_submit_with(
+        Request { id: FINAL_ID, prompt: CONT.to_vec(), gen_len: GEN,
+                  temperature: 0.0 },
+        &SubmitOpts { save_session: Some(SID), resume: Some(SID) })
+        .unwrap();
+    let second = rx.recv().unwrap();
+    assert_eq!(second.response.id, FINAL_ID);
+    assert_ne!(second.shard, suspended_on,
+               "resume must have landed on a different shard");
+    let d = digest_response(&second.response);
+    drop(rx);
+    cluster.drain().unwrap();
+    d
+}
+
+/// The ci.sh determinism hook: `RBTW_SESSION_MODE=straight|resume`
+/// selects the path and `RBTW_SESSION_DIGEST` names the digest file;
+/// ci.sh diffs the two files. Unset, both paths run in-process.
+#[test]
+fn session_digest_is_path_invariant() {
+    let digest = match std::env::var("RBTW_SESSION_MODE") {
+        Ok(mode) => match mode.as_str() {
+            "straight" => run_straight(),
+            "resume" => run_resume(),
+            other => panic!(
+                "RBTW_SESSION_MODE must be straight|resume, got '{other}'"),
+        },
+        Err(_) => {
+            let straight = run_straight();
+            let resumed = run_resume();
+            assert_eq!(straight, resumed,
+                       "suspend/resume across shards diverged from the \
+                        straight-through serve");
+            straight
+        }
+    };
+    if let Ok(path) = std::env::var("RBTW_SESSION_DIGEST") {
+        let line = format!("session:{digest:016x}\n");
+        std::fs::write(&path, line)
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    }
+}
