@@ -161,6 +161,83 @@ if ! printf '%s\n' "$WIRE_OUT" | grep -q '^session-roundtrip: ok'; then
 fi
 echo "wire session/resume round-trip ok"
 
+# Chaos gate 1: the SAME wire load served while a seeded fault plan
+# kills a shard worker mid-load. Supervision must contain the panic,
+# respawn the engine from the shared packed weights, and replay the
+# dead generation's in-flight requests — so the greedy digest must be
+# BIT-IDENTICAL to the fault-free in-process digest above, with zero
+# accepted requests lost. `--expect-respawn` additionally asserts via
+# /metrics that the crash actually happened (a gate that silently
+# stops injecting faults must fail, not pass vacuously).
+echo "== chaos gate (scripted shard crash must be digest-invisible) =="
+rm -f target/chaos_server.log
+RBTW_FAULT_PLAN="panic:shard=1,step=20" \
+    ./target/release/rbtw serve synthetic --listen 127.0.0.1:0 \
+    --shards 2 --slots 4 > target/chaos_server.log < /dev/null &
+SRV=$!
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/^listening on //p' target/chaos_server.log | head -n1)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SRV" 2>/dev/null; then
+        echo "FAIL: chaos serve exited before binding:"
+        cat target/chaos_server.log
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "FAIL: chaos serve never printed its address:"
+    cat target/chaos_server.log
+    kill "$SRV" 2>/dev/null || true
+    exit 1
+fi
+CHAOS_OUT=$(timeout 120 ./target/release/examples/netclient \
+    --connect "$ADDR" --expect-respawn --drain)
+if ! wait "$SRV"; then
+    echo "FAIL: chaos serve exited non-zero after drain:"
+    cat target/chaos_server.log
+    exit 1
+fi
+CHAOS_DIGEST=$(printf '%s\n' "$CHAOS_OUT" | sed -n 's/^greedy://p')
+RESPAWNS=$(printf '%s\n' "$CHAOS_OUT" | sed -n 's/^respawns: //p')
+if [ -z "$CHAOS_DIGEST" ] || [ -z "$RESPAWNS" ]; then
+    echo "FAIL: chaos netclient did not report a digest + respawn count:"
+    printf '%s\n' "$CHAOS_OUT"
+    exit 1
+fi
+if [ "$CHAOS_DIGEST" != "$LOCAL_DIGEST" ]; then
+    echo "FAIL: chaos digest $CHAOS_DIGEST != fault-free digest $LOCAL_DIGEST"
+    echo "      (a respawned shard perturbed a greedy response)"
+    exit 1
+fi
+echo "mid-load shard crash invisible in the digest ($RESPAWNS respawn(s)): $CHAOS_DIGEST"
+
+# Chaos gate 2: a fault plan that flips one packed plane bit during the
+# load models a corrupt checkpoint. The integrity check must refuse to
+# serve — non-zero exit with a typed fingerprint error — never start
+# with silently wrong logits.
+echo "== chaos gate (corrupt plane word must refuse to load) =="
+rm -f target/corrupt_server.log
+set +e
+RBTW_FAULT_PLAN="flip:matrix=0,word=0,bit=5" \
+    timeout 60 ./target/release/rbtw serve synthetic \
+    --listen 127.0.0.1:0 --shards 1 --slots 2 \
+    > target/corrupt_server.log 2>&1 < /dev/null
+CORRUPT_RC=$?
+set -e
+if [ "$CORRUPT_RC" -eq 0 ]; then
+    echo "FAIL: serving a corrupted model succeeded (must refuse to load):"
+    cat target/corrupt_server.log
+    exit 1
+fi
+if ! grep -qi 'fingerprint' target/corrupt_server.log; then
+    echo "FAIL: corrupt load refused without a typed fingerprint error:"
+    cat target/corrupt_server.log
+    exit 1
+fi
+echo "corrupt plane word refused with a typed fingerprint error (exit $CORRUPT_RC)"
+
 # The seed code predates rustfmt; keep the check advisory unless
 # RBTW_CI_STRICT_FMT=1 (flip once the tree is formatted).
 if cargo fmt --version >/dev/null 2>&1; then

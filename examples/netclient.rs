@@ -22,6 +22,10 @@
 //!
 //! `--drain` additionally asks the server to drain and shut down after
 //! the load completes (what ci.sh uses to end the smoke server).
+//! `--expect-respawn` asserts via `/metrics` that supervision respawned
+//! at least one shard worker before the load finished — the chaos gate
+//! combines it with `RBTW_FAULT_PLAN` on the server side to prove a
+//! mid-load crash is invisible in the digest.
 
 use rbtw::cluster::run_cluster_load;
 use rbtw::config::ServeSpec;
@@ -88,6 +92,7 @@ fn main() -> anyhow::Result<()> {
     let layers = usize_flag(&args, "--layers", 1)?
         .clamp(1, BackendSpec::MAX_LAYERS);
     let drain = args.iter().any(|a| a == "--drain");
+    let expect_respawn = args.iter().any(|a| a == "--expect-respawn");
 
     // identical greedy load for both transports: temperature 0 makes
     // every response a pure function of model + prompt
@@ -103,6 +108,8 @@ fn main() -> anyhow::Result<()> {
 
     let rows: Vec<(u64, Vec<i32>, u64)> = if let Some(addr) = connect {
         let mut client = FrontDoorClient::connect(&addr)?;
+        let proto = client.hello()?;
+        println!("hello: protocol v{proto}");
         client.ping()?;
         // session wire smoke (quiet connection, before the greedy
         // stream): prefill + suspend under a session id, then resume
@@ -140,6 +147,8 @@ fn main() -> anyhow::Result<()> {
                     "request {id} refused: server overloaded (busy)"),
                 WireOutcome::Closing(id) => anyhow::bail!(
                     "request {id} refused: server draining"),
+                WireOutcome::Expired(id) => anyhow::bail!(
+                    "request {id} refused: deadline expired"),
                 WireOutcome::Failed { id, msg } => anyhow::bail!(
                     "request {id} failed: {msg}"),
             }
@@ -148,6 +157,21 @@ fn main() -> anyhow::Result<()> {
         println!("wire: {} responses over {addr} in {wall:.2}s \
                   ({:.0} tok/s end-to-end)",
                  rows.len(), tokens as f64 / wall);
+        if expect_respawn {
+            // scrape BEFORE the drain tears the cluster down
+            let metrics = client.metrics()?;
+            let respawns: u64 = metrics
+                .lines()
+                .find_map(|l| l.strip_prefix("rbtw_cluster_respawns "))
+                .ok_or_else(|| anyhow::anyhow!(
+                    "rbtw_cluster_respawns missing from /metrics"))?
+                .trim()
+                .parse()?;
+            anyhow::ensure!(respawns > 0,
+                            "--expect-respawn: no shard worker respawned \
+                             (is RBTW_FAULT_PLAN armed on the server?)");
+            println!("respawns: {respawns}");
+        }
         if drain {
             let ack = client.drain_server()?;
             println!("server ack: {ack}");
@@ -166,8 +190,10 @@ fn main() -> anyhow::Result<()> {
         println!("local: {} responses in-process ({:.0} tok/s)",
                  report.responses.len(), report.tokens_per_sec());
         report.responses.into_iter()
-            .map(|cr| (cr.response.id, cr.response.generated,
-                       cr.response.prompt_logprob.to_bits()))
+            .map(|cr| {
+                let r = cr.into_done().expect("local run serves everything");
+                (r.id, r.generated, r.prompt_logprob.to_bits())
+            })
             .collect()
     };
 

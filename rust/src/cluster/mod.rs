@@ -94,16 +94,19 @@ mod stats;
 pub use queue::{BoundedQueue, PushRefused};
 pub use stats::{ClusterStats, ShardStats};
 
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{InferenceServer, LoadSpec, Request, Response,
                          ServerStats};
 use crate::engine::{from_shared, BackendSpec, SharedModel, ThreadPool};
+use crate::faults::FaultPlan;
 use crate::session::{prepare_with, PreparedSubmit, ServerSessions,
                      SessionCache, SubmitOpts, DEFAULT_SESSION_BYTES,
                      DEFAULT_SESSION_GRID};
@@ -185,11 +188,71 @@ impl std::fmt::Display for SubmitRefused {
 
 impl std::error::Error for SubmitRefused {}
 
-/// A completed request, tagged with the shard that served it.
+/// Bounded retry-with-backoff at cluster admission, applied ONLY to
+/// [`SubmitRefused::Full`] (transient backpressure): the submit sleeps
+/// `backoff`, doubles it (capped at 100 ms) and tries again, up to
+/// `attempts` extra tries. `Draining` and `Invalid` refusals are never
+/// retried — they cannot succeed later / at all. The default is 0
+/// attempts, i.e. today's fail-fast behavior.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetrySpec {
+    /// Extra attempts after the first `Full` refusal (0 = fail fast).
+    pub attempts: usize,
+    /// First backoff sleep; doubles per retry, capped at 100 ms.
+    pub backoff: Duration,
+}
+
+impl RetrySpec {
+    /// Largest per-retry sleep the doubling backoff reaches.
+    pub const MAX_BACKOFF: Duration = Duration::from_millis(100);
+}
+
+impl Default for RetrySpec {
+    fn default() -> Self {
+        Self { attempts: 0, backoff: Duration::from_millis(2) }
+    }
+}
+
+/// What a shard produced for one accepted request: the completed
+/// response, or a typed deadline expiry (the request's latency budget
+/// ran out while it was still queued — it was never stepped).
+#[derive(Clone, Debug)]
+pub enum ShardOutcome {
+    Done(Response),
+    Expired { id: u64 },
+}
+
+/// A per-request outcome, tagged with the shard that produced it.
 #[derive(Clone, Debug)]
 pub struct ClusterResponse {
     pub shard: usize,
-    pub response: Response,
+    pub outcome: ShardOutcome,
+}
+
+impl ClusterResponse {
+    /// The request id this outcome answers.
+    pub fn id(&self) -> u64 {
+        match &self.outcome {
+            ShardOutcome::Done(r) => r.id,
+            ShardOutcome::Expired { id } => *id,
+        }
+    }
+
+    /// The completed response, when the outcome is [`ShardOutcome::Done`].
+    pub fn done(&self) -> Option<&Response> {
+        match &self.outcome {
+            ShardOutcome::Done(r) => Some(r),
+            ShardOutcome::Expired { .. } => None,
+        }
+    }
+
+    /// Owning variant of [`Self::done`].
+    pub fn into_done(self) -> Option<Response> {
+        match self.outcome {
+            ShardOutcome::Done(r) => Some(r),
+            ShardOutcome::Expired { .. } => None,
+        }
+    }
 }
 
 /// Everything a drained cluster run produced.
@@ -213,8 +276,54 @@ impl ClusterReport {
 /// What travels through the router: a request already resolved against
 /// the session cache ([`PreparedSubmit`]), so restored session state
 /// rides along to whichever shard the router picks — resumed sessions
-/// are not shard-pinned.
-type Routed = (PreparedSubmit, Instant);
+/// are not shard-pinned. `Clone` so a supervised shard can retain
+/// in-flight items and re-admit them after a crash.
+#[derive(Clone)]
+struct Routed {
+    ps: PreparedSubmit,
+    /// Admission time — queue_time covers the whole cluster path.
+    submitted: Instant,
+    /// Absolute latency budget; a request still queued past this point
+    /// is answered [`ShardOutcome::Expired`] instead of being stepped.
+    deadline: Option<Instant>,
+}
+
+/// Robustness knobs for [`ServingCluster::new_with_options`]; the other
+/// constructors use `Default` (supervision on, no deadline, fail-fast
+/// admission, no fault injection).
+pub struct ClusterOptions {
+    /// Front-door queue capacity (the fail-fast backpressure boundary).
+    pub queue_cap: usize,
+    pub policy: RoutePolicy,
+    /// Contain shard-worker panics and respawn the engine from the
+    /// shared model, re-admitting the dead generation's in-flight
+    /// requests (see the module docs). Off = a shard panic is fatal to
+    /// that shard and surfaces as a typed error from
+    /// [`ServingCluster::drain`].
+    pub supervise: bool,
+    /// Default per-request latency budget, measured from admission
+    /// (`None` = no deadline). A per-submit
+    /// [`SubmitOpts::deadline`] overrides it.
+    pub deadline: Option<Duration>,
+    /// Bounded retry-with-backoff for `Full` admission refusals.
+    pub retry: RetrySpec,
+    /// Deterministic fault-injection plan (tests / chaos gate only;
+    /// `None` in production — the hooks are zero-cost when absent).
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        Self {
+            queue_cap: 256,
+            policy: RoutePolicy::default(),
+            supervise: true,
+            deadline: None,
+            retry: RetrySpec::default(),
+            faults: None,
+        }
+    }
+}
 
 /// One live shard's routing handle, shared with the router through the
 /// mutable route table. Cloned Arcs, so the router can hold a pick
@@ -341,6 +450,14 @@ pub struct ServingCluster {
     /// The cluster-wide session cache handle (`None` = sessions
     /// disabled; session/resume submits are refused as Invalid).
     sessions: Option<ServerSessions>,
+    supervise: bool,
+    deadline: Option<Duration>,
+    retry: RetrySpec,
+    faults: Option<Arc<FaultPlan>>,
+    /// Shard-worker respawns performed by supervision (fleet-wide).
+    respawns: Arc<AtomicU64>,
+    /// Requests answered `Expired` instead of served (fleet-wide).
+    expired: Arc<AtomicU64>,
 }
 
 impl ServingCluster {
@@ -370,6 +487,19 @@ impl ServingCluster {
     pub fn new_with_sessions(shared: &SharedModel, spec: &BackendSpec,
                              queue_cap: usize, policy: RoutePolicy,
                              cache: Option<SessionCache>) -> Result<Self> {
+        Self::new_with_options(
+            shared, spec,
+            ClusterOptions { queue_cap, policy, ..Default::default() },
+            cache)
+    }
+
+    /// The full constructor: every robustness knob ([`ClusterOptions`])
+    /// plus the session cache choice of [`Self::new_with_sessions`].
+    pub fn new_with_options(shared: &SharedModel, spec: &BackendSpec,
+                            opts: ClusterOptions,
+                            cache: Option<SessionCache>) -> Result<Self> {
+        let ClusterOptions { queue_cap, policy, supervise, deadline,
+                             retry, faults } = opts;
         let sessions = cache.map(|c| ServerSessions::new(c, shared));
         let shards = spec.shards;
         anyhow::ensure!(shards >= 1, "need at least one engine shard");
@@ -408,10 +538,23 @@ impl ServingCluster {
             Arc::new(Mutex::new(Vec::with_capacity(shards)));
         let latency = Arc::new(Mutex::new(LatencyLog::default()));
         let (done_tx, done_rx) = mpsc::channel();
+        let respawns = Arc::new(AtomicU64::new(0));
+        let expired = Arc::new(AtomicU64::new(0));
+        let slots = spec.slots.max(1);
         let mut handles: Vec<ShardHandle> = Vec::with_capacity(shards);
         for (id, server) in servers.into_iter().enumerate() {
-            match spawn_shard(id, server, inbox_cap, latency.clone(),
-                              done_tx.clone()) {
+            let ctx = ShardContext {
+                inbox_cap,
+                latency: latency.clone(),
+                done: done_tx.clone(),
+                supervise,
+                faults: faults.clone(),
+                factory: respawn_factory(shared, &shard_spec, slots,
+                                         &sessions),
+                respawns: respawns.clone(),
+                expired: expired.clone(),
+            };
+            match spawn_shard(id, server, ctx) {
                 Ok(h) => {
                     table.lock().unwrap().push(h.route_entry());
                     handles.push(h);
@@ -467,12 +610,54 @@ impl ServingCluster {
             submitted: 0,
             started: Instant::now(),
             sessions,
+            supervise,
+            deadline,
+            retry,
+            faults,
+            respawns,
+            expired,
         })
     }
 
     /// The cluster-wide session cache handle, if sessions are enabled.
     pub fn sessions(&self) -> Option<&ServerSessions> {
         self.sessions.as_ref()
+    }
+
+    /// Whether shard-worker panics are contained and respawned.
+    pub fn supervised(&self) -> bool {
+        self.supervise
+    }
+
+    /// The default per-request latency budget, if any.
+    pub fn default_deadline(&self) -> Option<Duration> {
+        self.deadline
+    }
+
+    /// The admission retry policy for `Full` refusals.
+    pub fn retry(&self) -> RetrySpec {
+        self.retry
+    }
+
+    /// The active fault-injection plan, if any (chaos harness).
+    pub fn faults(&self) -> Option<Arc<FaultPlan>> {
+        self.faults.clone()
+    }
+
+    /// Verified integrity fingerprint of the packed serving bits (see
+    /// [`SharedModel::fingerprint`]).
+    pub fn fingerprint(&self) -> u64 {
+        self.shared.fingerprint()
+    }
+
+    /// Shard respawns performed by supervision so far.
+    pub fn respawn_count(&self) -> u64 {
+        self.respawns.load(Ordering::SeqCst)
+    }
+
+    /// Requests answered `Expired` instead of served so far.
+    pub fn expired_count(&self) -> u64 {
+        self.expired.load(Ordering::SeqCst)
     }
 
     /// Live shard count (changes under [`Self::add_shard`] /
@@ -557,15 +742,40 @@ impl ServingCluster {
             Ok(ps) => ps,
             Err(e) => return Err(SubmitRefused::Invalid(format!("{e:#}"))),
         };
-        match self.front.try_push((ps, Instant::now())) {
-            Ok(()) => {
-                self.submitted += 1;
-                Ok(())
+        let now = Instant::now();
+        let budget = opts.deadline.or(self.deadline);
+        let mut item = Routed {
+            ps,
+            submitted: now,
+            deadline: budget.map(|d| now + d),
+        };
+        // `Full` is transient backpressure: retry with doubling backoff
+        // up to the configured attempts. `Closed` (draining) is final —
+        // waiting cannot make a draining cluster accept, so it is never
+        // retried.
+        let mut backoff = self.retry.backoff;
+        let mut tries = 0usize;
+        loop {
+            match self.front.try_push(item) {
+                Ok(()) => {
+                    self.submitted += 1;
+                    return Ok(());
+                }
+                Err((_, PushRefused::Closed)) => {
+                    return Err(SubmitRefused::Draining);
+                }
+                Err((refused, PushRefused::Full)) => {
+                    if tries >= self.retry.attempts {
+                        return Err(SubmitRefused::Full {
+                            pending: self.front.len(),
+                        });
+                    }
+                    tries += 1;
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(RetrySpec::MAX_BACKOFF);
+                    item = refused;
+                }
             }
-            Err((_, PushRefused::Full)) => {
-                Err(SubmitRefused::Full { pending: self.front.len() })
-            }
-            Err((_, PushRefused::Closed)) => Err(SubmitRefused::Draining),
         }
     }
 
@@ -610,8 +820,18 @@ impl ServingCluster {
             .context("cluster response channel gone")?
             .clone();
         let id = self.next_shard_id;
-        let h = spawn_shard(id, server, self.inbox_cap,
-                            self.latency.clone(), done)?;
+        let ctx = ShardContext {
+            inbox_cap: self.inbox_cap,
+            latency: self.latency.clone(),
+            done,
+            supervise: self.supervise,
+            faults: self.faults.clone(),
+            factory: respawn_factory(&self.shared, &self.shard_spec,
+                                     self.slots_per_shard, &self.sessions),
+            respawns: self.respawns.clone(),
+            expired: self.expired.clone(),
+        };
+        let h = spawn_shard(id, server, ctx)?;
         self.next_shard_id += 1;
         self.table.lock().unwrap().push(h.route_entry());
         self.shards.push(h);
@@ -737,6 +957,8 @@ impl ServingCluster {
         stats.tokens_per_sec =
             safe_rate(stats.tokens_processed as f64, wall_s);
         stats.sessions = self.sessions.as_ref().map(|s| s.cache.counters());
+        stats.respawns = self.respawns.load(Ordering::SeqCst);
+        stats.expired = self.expired.load(Ordering::SeqCst);
         stats
     }
 }
@@ -756,13 +978,45 @@ impl Drop for ServingCluster {
     }
 }
 
+/// Everything a shard worker needs beyond its server: channels,
+/// counters, and the supervision machinery (respawn factory + fault
+/// hooks).
+struct ShardContext {
+    inbox_cap: usize,
+    latency: Arc<Mutex<LatencyLog>>,
+    done: mpsc::Sender<ClusterResponse>,
+    supervise: bool,
+    faults: Option<Arc<FaultPlan>>,
+    /// Builds a replacement engine after a contained panic: a
+    /// [`from_shared`] clone — plane-`Arc` refcount bump, no weight
+    /// copy — sharing the same session cache.
+    factory: Box<dyn Fn() -> Result<InferenceServer> + Send>,
+    respawns: Arc<AtomicU64>,
+    expired: Arc<AtomicU64>,
+}
+
+/// The respawn closure handed to every shard: captures cheap clones of
+/// the shared model (refcount bumps) and rebuilds an identical engine.
+fn respawn_factory(shared: &SharedModel, spec: &BackendSpec, slots: usize,
+                   sessions: &Option<ServerSessions>)
+    -> Box<dyn Fn() -> Result<InferenceServer> + Send> {
+    let shared = shared.clone();
+    let spec = *spec;
+    let sessions = sessions.clone();
+    Box::new(move || {
+        let backend = from_shared(&shared, &spec)?;
+        let mut server = InferenceServer::with_backend(backend, slots);
+        server.set_sessions(sessions.clone());
+        Ok(server)
+    })
+}
+
 /// Spawn one shard worker over its freshly built server; returns the
 /// cluster-side handle. Shared by construction and [`ServingCluster::add_shard`].
-fn spawn_shard(id: usize, server: InferenceServer, inbox_cap: usize,
-               latency: Arc<Mutex<LatencyLog>>,
-               done: mpsc::Sender<ClusterResponse>) -> Result<ShardHandle> {
+fn spawn_shard(id: usize, server: InferenceServer, ctx: ShardContext)
+    -> Result<ShardHandle> {
     let inbox: Arc<BoundedQueue<Routed>> =
-        Arc::new(BoundedQueue::new(inbox_cap));
+        Arc::new(BoundedQueue::new(ctx.inbox_cap));
     let load = Arc::new(AtomicU64::new(0));
     let routed = Arc::new(AtomicU64::new(0));
     let counters = Arc::new(ShardCounters::default());
@@ -773,7 +1027,7 @@ fn spawn_shard(id: usize, server: InferenceServer, inbox_cap: usize,
         std::thread::Builder::new()
             .name(format!("rbtw-cluster-shard-{id}"))
             .spawn(move || shard_worker(id, server, inbox, load, counters,
-                                        latency, done))
+                                        ctx))
             .context("spawning a cluster shard worker")?
     };
     Ok(ShardHandle { id, inbox, load, routed, counters, worker })
@@ -869,53 +1123,187 @@ impl Drop for InboxCloser {
     }
 }
 
-/// One engine shard: the continuous-batching loop over this shard's
-/// private `InferenceServer`, fed from its bounded inbox. Exits when the
-/// inbox is closed AND every admitted request has completed.
-fn shard_worker(shard: usize, mut server: InferenceServer,
+/// One engine shard: a supervisor shell around the continuous-batching
+/// serve loop. The loop runs panic-contained (`catch_unwind`); on a
+/// clean exit (inbox closed AND every admitted request completed) the
+/// final stats are returned. On a panic with supervision enabled, the
+/// dead engine is rebuilt from the shared model via the respawn factory
+/// (the broken stack's plane `Arc`s were released during the unwind, so
+/// the plane-owner invariant holds) and the generation's in-flight
+/// requests are re-admitted from the retention map — greedy decode is
+/// deterministic, so the replay is bit-identical. With supervision off
+/// the panic propagates and the shard dies as before (its exit guard
+/// still closes the inbox so the router re-routes queued work).
+fn shard_worker(shard: usize, server: InferenceServer,
                 inbox: Arc<BoundedQueue<Routed>>, load: Arc<AtomicU64>,
                 counters: Arc<ShardCounters>,
-                latency: Arc<Mutex<LatencyLog>>,
-                done: mpsc::Sender<ClusterResponse>) -> ServerStats {
+                ctx: ShardContext) -> ServerStats {
     let _closer = InboxCloser(inbox.clone());
+    // Admitted-but-uncompleted requests, keyed by request id (in-flight
+    // ids are unique: the front door allocates them, and the in-process
+    // harnesses never reuse an id while it is live). An entry is
+    // inserted at admission and removed when its completion is drained,
+    // so after a panic the map holds exactly the work the dead
+    // generation still owed.
+    let mut retained: BTreeMap<u64, Routed> = BTreeMap::new();
+    // Counter totals finalized by dead generations (a fresh engine
+    // restarts its ServerStats at zero; published totals must not go
+    // backwards). Replayed work is re-counted by the new generation —
+    // crash accounting is monotonic, not exactly-once.
+    let mut base = ServerStats::default();
+    let mut steps: u64 = 0;
+    let mut server = Some(server);
+    loop {
+        let mut srv = server.take().expect("serve generation owns a server");
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let stats = serve_generation(shard, &mut srv, &mut retained,
+                                         &mut steps, &inbox, &load,
+                                         &counters, &ctx, &base);
+            (srv, stats)
+        }));
+        match result {
+            Ok((_srv, stats)) => return stats,
+            Err(payload) => {
+                if !ctx.supervise {
+                    resume_unwind(payload);
+                }
+                // the last published snapshot is the dead generation's
+                // final word; fold it into the base so totals only grow
+                base = counters.snapshot();
+                ctx.respawns.fetch_add(1, Ordering::SeqCst);
+                let mut rebuilt = None;
+                for attempt in 0u32..8 {
+                    match (ctx.factory)() {
+                        Ok(s) => {
+                            rebuilt = Some(s);
+                            break;
+                        }
+                        Err(_) if attempt + 1 < 8 => std::thread::sleep(
+                            Duration::from_millis(5 << attempt)),
+                        Err(e) => panic!(
+                            "shard {shard} respawn failed after 8 \
+                             attempts: {e:#}"),
+                    }
+                }
+                server = rebuilt;
+            }
+        }
+    }
+}
+
+/// Fold a generation's live stats into the published counters on top of
+/// the totals its dead predecessors finalized.
+fn publish_totals(counters: &ShardCounters, base: &ServerStats,
+                  live: &ServerStats) {
+    counters.publish(&ServerStats {
+        completed: base.completed + live.completed,
+        engine_steps: base.engine_steps + live.engine_steps,
+        tokens_processed: base.tokens_processed + live.tokens_processed,
+        peak_active_slots: base.peak_active_slots.max(live.peak_active_slots),
+    });
+}
+
+/// Admit one routed request into the serve loop. An expired deadline is
+/// answered `Expired` without ever touching a slot; `replayed` items
+/// (re-admitted after a crash) skip the deadline check — they were
+/// already accepted and started, and the zero-loss guarantee outranks
+/// the latency budget.
+#[allow(clippy::too_many_arguments)]
+fn admit(shard: usize, server: &mut InferenceServer,
+         retained: &mut BTreeMap<u64, Routed>, load: &AtomicU64,
+         ctx: &ShardContext, r: Routed, replayed: bool) {
+    if !replayed {
+        if let Some(dl) = r.deadline {
+            if Instant::now() >= dl {
+                load.fetch_sub(1, Ordering::SeqCst);
+                ctx.expired.fetch_add(1, Ordering::SeqCst);
+                let _ = ctx.done.send(ClusterResponse {
+                    shard,
+                    outcome: ShardOutcome::Expired { id: r.ps.req.id },
+                });
+                return;
+            }
+        }
+        retained.insert(r.ps.req.id, r.clone());
+    }
+    server
+        .submit_prepared(r.ps, r.submitted)
+        .expect("cluster-validated request rejected by shard");
+}
+
+/// One serve generation: the continuous-batching loop over a private
+/// `InferenceServer`, fed first from the crash-replay queue, then from
+/// the shard inbox. Returns the lifetime stats (base + this generation)
+/// when the inbox is closed AND every admitted request has completed.
+#[allow(clippy::too_many_arguments)]
+fn serve_generation(shard: usize, server: &mut InferenceServer,
+                    retained: &mut BTreeMap<u64, Routed>, steps: &mut u64,
+                    inbox: &Arc<BoundedQueue<Routed>>, load: &AtomicU64,
+                    counters: &ShardCounters, ctx: &ShardContext,
+                    base: &ServerStats) -> ServerStats {
+    // Work a dead predecessor still owed, replayed in admission order
+    // (in-flight can exceed the server queue capacity, so items feed
+    // through the same top-up loop as fresh work instead of being
+    // submitted all at once).
+    let mut replay: Vec<Routed> = retained.values().cloned().collect();
+    replay.sort_by_key(|r| r.submitted);
+    let mut replay = std::collections::VecDeque::from(replay);
     loop {
         // top up the admission queue without blocking while there is
         // runnable work
         while server.pending() < server.queue_capacity() {
-            match inbox.try_pop() {
-                Some((ps, t0)) => server
-                    .submit_prepared(ps, t0)
-                    .expect("cluster-validated request rejected by shard"),
-                None => break,
+            if let Some(r) = replay.pop_front() {
+                admit(shard, server, retained, load, ctx, r, true);
+            } else if let Some(r) = inbox.try_pop() {
+                admit(shard, server, retained, load, ctx, r, false);
+            } else {
+                break;
             }
         }
         if server.pending() == 0 && server.active() == 0 {
             // idle: block for work, or exit once the inbox is closed
-            // and drained
+            // and drained (replay is empty here — a non-empty replay
+            // always leaves pending work above)
             match inbox.pop_wait() {
-                Some((ps, t0)) => {
-                    server
-                        .submit_prepared(ps, t0)
-                        .expect("cluster-validated request rejected by shard");
+                Some(r) => {
+                    admit(shard, server, retained, load, ctx, r, false);
                     continue;
                 }
                 None => break,
             }
         }
+        *steps += 1;
+        if let Some(f) = &ctx.faults {
+            if f.shard_panic_due(shard, *steps) {
+                panic!("fault injection: shard {shard} panicking at engine \
+                        step {steps}");
+            }
+        }
         server.step().expect("engine step failed on a validated batch");
         while let Ok(resp) = server.done_rx.try_recv() {
+            retained.remove(&resp.id);
             load.fetch_sub(1, Ordering::SeqCst);
-            latency.lock().unwrap().record(
+            ctx.latency.lock().unwrap().record(
                 resp.queue_time.as_secs_f64() * 1e3,
                 resp.run_time.as_secs_f64() * 1e3);
             // a gone collector is not an error mid-teardown; keep
             // stepping so accepted work still runs to completion
-            let _ = done.send(ClusterResponse { shard, response: resp });
+            let _ = ctx.done.send(ClusterResponse {
+                shard,
+                outcome: ShardOutcome::Done(resp),
+            });
         }
-        counters.publish(&server.stats);
+        publish_totals(counters, base, &server.stats);
     }
-    counters.publish(&server.stats);
-    server.stats.clone()
+    publish_totals(counters, base, &server.stats);
+    ServerStats {
+        completed: base.completed + server.stats.completed,
+        engine_steps: base.engine_steps + server.stats.engine_steps,
+        tokens_processed: base.tokens_processed
+            + server.stats.tokens_processed,
+        peak_active_slots: base.peak_active_slots
+            .max(server.stats.peak_active_slots),
+    }
 }
 
 /// Drive `load` through a fresh cluster over `shared` — the cluster twin
@@ -994,7 +1382,7 @@ mod tests {
         let report = cluster.drain().unwrap();
         assert_eq!(report.responses.len(), 10);
         let mut ids: Vec<u64> =
-            report.responses.iter().map(|r| r.response.id).collect();
+            report.responses.iter().map(|r| r.id()).collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 10, "every request completed exactly once");
@@ -1005,10 +1393,13 @@ mod tests {
         assert_eq!(report.stats.shards.len(), 2);
         assert_eq!(report.stats.total.n, 10);
         assert!(report.stats.tokens_per_sec > 0.0);
+        assert_eq!(report.stats.respawns, 0);
+        assert_eq!(report.stats.expired, 0);
         for r in &report.responses {
             assert!(r.shard < 2);
-            assert_eq!(r.response.generated.len(), 3);
-            assert!(r.response.prompt_logprob <= 0.0);
+            let resp = r.done().expect("no deadline => every outcome Done");
+            assert_eq!(resp.generated.len(), 3);
+            assert!(resp.prompt_logprob <= 0.0);
         }
     }
 
@@ -1110,7 +1501,7 @@ mod tests {
         assert_eq!(report.responses.len(), 20,
                    "zero accepted-request loss across add+remove");
         let mut ids: Vec<u64> =
-            report.responses.iter().map(|r| r.response.id).collect();
+            report.responses.iter().map(|r| r.id()).collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 20);
@@ -1228,5 +1619,141 @@ mod tests {
         let spec = BackendSpec::with(BackendKind::PackedPlanes, 2, 7);
         assert!(ServingCluster::new(&shared, &spec, 8,
                                     RoutePolicy::LeastLoaded).is_err());
+    }
+
+    /// id-sorted (id, tokens, logprob bits) rows — the comparison basis
+    /// for crash-replay bit-identity.
+    fn rows(report: &ClusterReport) -> Vec<(u64, Vec<i32>, u64)> {
+        let mut v: Vec<(u64, Vec<i32>, u64)> = report.responses.iter()
+            .map(|r| {
+                let resp = r.done().expect("outcome must be Done");
+                (resp.id, resp.generated.clone(),
+                 resp.prompt_logprob.to_bits())
+            })
+            .collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn supervised_shard_panic_replays_bit_identical() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7);
+        let run = |faults: Option<Arc<FaultPlan>>| {
+            let mut cluster = ServingCluster::new_with_options(
+                &shared, &spec,
+                ClusterOptions { queue_cap: 32, faults,
+                                 ..Default::default() },
+                Some(SessionCache::new(DEFAULT_SESSION_BYTES,
+                                       DEFAULT_SESSION_GRID))).unwrap();
+            for id in 0..12u64 {
+                cluster.submit(greedy(id)).unwrap();
+            }
+            cluster.drain().unwrap()
+        };
+        let clean = run(None);
+        assert_eq!(clean.stats.respawns, 0);
+        let plan = Arc::new(FaultPlan::parse("panic:shard=0,step=4").unwrap());
+        let chaos = run(Some(plan));
+        assert_eq!(chaos.stats.respawns, 1, "supervisor respawned once");
+        assert_eq!(chaos.responses.len(), 12,
+                   "zero accepted-request loss across the crash");
+        assert_eq!(rows(&clean), rows(&chaos),
+                   "crash replay must be bit-identical");
+    }
+
+    #[test]
+    fn unsupervised_shard_panic_fails_drain_typed() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7);
+        let plan = Arc::new(FaultPlan::parse("panic:shard=0,step=2").unwrap());
+        let mut cluster = ServingCluster::new_with_options(
+            &shared, &spec,
+            ClusterOptions { queue_cap: 32, supervise: false,
+                             faults: Some(plan), ..Default::default() },
+            None).unwrap();
+        for id in 0..6u64 {
+            cluster.submit(greedy(id)).unwrap();
+        }
+        let err = cluster.drain().expect_err("dead shard must fail drain");
+        assert!(err.to_string().contains("panicked"),
+                "typed panic report, got: {err:#}");
+    }
+
+    #[test]
+    fn expired_deadline_is_typed_not_silent() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7);
+        let mut cluster = ServingCluster::new_with_options(
+            &shared, &spec,
+            ClusterOptions { queue_cap: 32,
+                             deadline: Some(Duration::ZERO),
+                             ..Default::default() },
+            None).unwrap();
+        for id in 0..5u64 {
+            cluster.submit(greedy(id)).unwrap();
+        }
+        // a per-request deadline overrides the cluster default
+        cluster.try_submit_with(
+            greedy(100),
+            &SubmitOpts { deadline: Some(Duration::from_secs(3600)),
+                          ..Default::default() }).unwrap();
+        let report = cluster.drain().unwrap();
+        assert_eq!(report.responses.len(), 6,
+                   "every accepted request gets SOME typed outcome");
+        let expired: Vec<u64> = report.responses.iter()
+            .filter(|r| r.done().is_none())
+            .map(|r| r.id())
+            .collect();
+        assert_eq!(expired.len(), 5, "zero budget expires at the shard");
+        assert!(!expired.contains(&100),
+                "the long per-request deadline must be served");
+        assert_eq!(report.stats.expired, 5);
+        assert_eq!(report.stats.completed, 1);
+    }
+
+    #[test]
+    fn full_refusals_retry_with_backoff_until_accepted() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 1, 7);
+        // pipeline capacity ~4 (front 1 + inbox 2 + slot); 12 immediate
+        // submits of multi-step work would hit Full without retries
+        let mut cluster = ServingCluster::new_with_options(
+            &shared, &spec,
+            ClusterOptions {
+                queue_cap: 1,
+                retry: RetrySpec { attempts: 500,
+                                   backoff: Duration::from_millis(1) },
+                ..Default::default()
+            },
+            None).unwrap();
+        for id in 0..12u64 {
+            cluster.try_submit(Request { id, prompt: vec![1, 2],
+                                         gen_len: 16, temperature: 0.0 })
+                .expect("bounded retry must absorb transient Full");
+        }
+        // draining is refused immediately, never retried
+        cluster.close_intake();
+        let t0 = Instant::now();
+        let refused = cluster.try_submit(greedy(999)).unwrap_err();
+        assert_eq!(refused, SubmitRefused::Draining);
+        assert!(t0.elapsed() < Duration::from_millis(400),
+                "Draining must not burn retry backoff");
+        let report = cluster.drain().unwrap();
+        assert_eq!(report.stats.completed, 12);
+    }
+
+    #[test]
+    fn fingerprint_surfaces_on_the_cluster() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7);
+        let cluster = ServingCluster::new(&shared, &spec, 8,
+                                          RoutePolicy::LeastLoaded).unwrap();
+        assert_eq!(cluster.fingerprint(), shared.fingerprint());
+        assert!(cluster.supervised(), "supervision defaults on");
+        assert_eq!(cluster.retry(), RetrySpec::default());
+        assert!(cluster.default_deadline().is_none());
+        assert!(cluster.faults().is_none());
+        drop(cluster);
     }
 }

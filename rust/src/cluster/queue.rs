@@ -204,4 +204,62 @@ mod tests {
         let want: Vec<u64> = (0..2 * n).collect();
         assert_eq!(all, want, "every item delivered exactly once");
     }
+
+    #[test]
+    fn concurrent_close_never_loses_accepted_or_accepts_after_close() {
+        // Race close() against a herd of try_push-ers, many rounds. Two
+        // invariants: (1) every ACCEPTED item is still drainable after
+        // close — close rejects new work, it never drops queued work;
+        // (2) once a pusher has OBSERVED Closed, every later try_push
+        // from that thread is also Closed — the closed state is sticky
+        // and monotonic, with no accept-after-close window.
+        for round in 0..40u64 {
+            let q = Arc::new(BoundedQueue::new(usize::MAX >> 1));
+            let pushers: Vec<_> = (0..4u64)
+                .map(|p| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        let mut accepted = vec![];
+                        let mut saw_closed = false;
+                        for i in 0..500u64 {
+                            let v = p * 1_000_000 + i;
+                            match q.try_push(v) {
+                                Ok(()) => {
+                                    assert!(!saw_closed,
+                                            "accept after Closed observed");
+                                    accepted.push(v);
+                                }
+                                Err((w, PushRefused::Closed)) => {
+                                    assert_eq!(w, v, "refusal returns item");
+                                    saw_closed = true;
+                                }
+                                Err((_, PushRefused::Full)) => {
+                                    unreachable!("capacity is effectively \
+                                                  unbounded here")
+                                }
+                            }
+                        }
+                        accepted
+                    })
+                })
+                .collect();
+            // close at a varying point in the race
+            if round % 4 != 0 {
+                std::thread::yield_now();
+            }
+            q.close();
+            let mut accepted: Vec<u64> = pushers
+                .into_iter()
+                .flat_map(|p| p.join().unwrap())
+                .collect();
+            let mut drained = vec![];
+            while let Some(v) = q.pop_wait() {
+                drained.push(v);
+            }
+            accepted.sort_unstable();
+            drained.sort_unstable();
+            assert_eq!(accepted, drained,
+                       "round {round}: accepted set == drained set");
+        }
+    }
 }

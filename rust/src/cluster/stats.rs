@@ -42,6 +42,14 @@ pub struct ClusterStats {
     /// Session-cache gauges (prefix hits/misses, evictions, residency);
     /// `None` when the cluster runs without a session cache.
     pub sessions: Option<SessionCounters>,
+    /// Shard-worker respawns performed by supervision (fleet-wide; 0 on
+    /// a healthy run). Counters from a respawned shard re-count its
+    /// replayed work, so totals stay monotonic across a crash rather
+    /// than exactly-once.
+    pub respawns: u64,
+    /// Requests answered with a typed `Expired` outcome instead of
+    /// being served (their deadline passed while still queued).
+    pub expired: u64,
 }
 
 impl ClusterStats {

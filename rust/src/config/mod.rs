@@ -176,6 +176,20 @@ pub struct ServeSpec {
     /// Prefix-capture grid: prompt prefixes are published at multiples
     /// of this stride, and lookups only probe those lengths.
     pub session_grid: usize,
+    /// Default per-request latency budget in milliseconds, measured
+    /// from admission; requests still queued when it lapses answer
+    /// with a typed `expired` reply. `0` = no default deadline
+    /// (requests may still carry their own over the wire).
+    pub deadline_ms: u64,
+    /// Bounded retries at cluster admission when the front-door queue
+    /// refuses with `Full` (doubling backoff between attempts). `0` =
+    /// fail fast, the historical behaviour.
+    pub retries: usize,
+    /// Shard supervision: contain a panicking shard worker, respawn
+    /// its engine from the shared packed weights, and replay its
+    /// in-flight work bit-identically. Off = a worker panic fails the
+    /// whole drain (the pre-supervision contract).
+    pub supervise: bool,
 }
 
 impl Default for ServeSpec {
@@ -194,6 +208,9 @@ impl Default for ServeSpec {
             listen: None,
             session_bytes: crate::session::DEFAULT_SESSION_BYTES,
             session_grid: crate::session::DEFAULT_SESSION_GRID,
+            deadline_ms: 0,
+            retries: 0,
+            supervise: true,
         }
     }
 }
@@ -227,6 +244,15 @@ impl ServeSpec {
     /// parser and the `--session-grid` CLI flag.
     pub const SESSION_GRID_RANGE: std::ops::RangeInclusive<usize> =
         1..=(1 << 20);
+
+    /// Valid default-deadline range in milliseconds (0 = none); shared
+    /// by the `[serve]` config parser and the `--deadline-ms` CLI flag.
+    pub const DEADLINE_MS_RANGE: std::ops::RangeInclusive<u64> =
+        0..=86_400_000;
+
+    /// Valid admission-retry range (0 = fail fast); shared by the
+    /// `[serve]` config parser and the `--retries` CLI flag.
+    pub const RETRIES_RANGE: std::ops::RangeInclusive<usize> = 0..=1000;
 
     /// The engine-layer spec for [`crate::engine::open`].
     pub fn backend_spec(&self) -> BackendSpec {
@@ -314,6 +340,21 @@ impl Config {
                     v, "session_grid",
                     *ServeSpec::SESSION_GRID_RANGE.start() as i64,
                     *ServeSpec::SESSION_GRID_RANGE.end() as i64)?;
+            }
+            if let Some(v) = s.get("deadline_ms") {
+                spec.deadline_ms = bounded(
+                    v, "deadline_ms",
+                    *ServeSpec::DEADLINE_MS_RANGE.start() as i64,
+                    *ServeSpec::DEADLINE_MS_RANGE.end() as i64)? as u64;
+            }
+            if let Some(v) = s.get("retries") {
+                spec.retries = bounded(
+                    v, "retries",
+                    *ServeSpec::RETRIES_RANGE.start() as i64,
+                    *ServeSpec::RETRIES_RANGE.end() as i64)?;
+            }
+            if let Some(v) = s.get("supervise") {
+                spec.supervise = v.as_bool().context("supervise")?;
             }
         }
         Ok(spec)
@@ -557,6 +598,31 @@ mod tests {
             .serve_spec(ServeSpec::default())
             .is_err());
         assert!(Config::parse("[serve]\nsession_grid = 0\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        // robustness knobs: no default deadline, fail-fast admission,
+        // supervision ON by default
+        assert_eq!(ServeSpec::default().deadline_ms, 0);
+        assert_eq!(ServeSpec::default().retries, 0);
+        assert!(ServeSpec::default().supervise);
+        let spec = Config::parse(
+            "[serve]\ndeadline_ms = 750\nretries = 3\nsupervise = false\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .unwrap();
+        assert_eq!(spec.deadline_ms, 750);
+        assert_eq!(spec.retries, 3);
+        assert!(!spec.supervise);
+        assert!(Config::parse("[serve]\ndeadline_ms = -1\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nretries = 100000\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        assert!(Config::parse("[serve]\nsupervise = 1\n")
             .unwrap()
             .serve_spec(ServeSpec::default())
             .is_err());

@@ -104,8 +104,8 @@ use crate::session::{SlotState, StateError};
 pub use packed::PackedBackend;
 pub use pjrt::PjrtDense;
 pub use pool::ThreadPool;
-pub use shared::SharedModel;
-pub use weights::ModelWeights;
+pub use shared::{IntegrityError, SharedModel};
+pub use weights::{packed_model_fingerprint, ModelWeights};
 
 pub use crate::quant::{CellArch, PackedStack, RecurrentCell};
 

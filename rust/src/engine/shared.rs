@@ -23,9 +23,34 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use super::weights::ModelWeights;
+use super::weights::{packed_model_fingerprint, ModelWeights};
 use super::BackendKind;
+use crate::faults::FaultPlan;
 use crate::quant::{CellArch, PackedStack, RecurrentCell};
+
+/// Typed load failure: the packed bits built for serving do not match
+/// the fingerprint taken at pack time. A corrupt checkpoint fails here —
+/// before a single request is served — instead of producing wrong
+/// logits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntegrityError {
+    /// Pack-time fingerprint (what the bits should hash to).
+    pub expected: u64,
+    /// Fingerprint recomputed over the built stack + head.
+    pub actual: u64,
+}
+
+impl std::fmt::Display for IntegrityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f,
+               "packed model fingerprint mismatch: expected \
+                {:016x}, built stack hashes to {:016x} — corrupt \
+                checkpoint bits, refusing to serve",
+               self.expected, self.actual)
+    }
+}
+
+impl std::error::Error for IntegrityError {}
 
 /// One model's packed serving weights, prepared once and cheaply
 /// shareable across any number of engine shards.
@@ -49,6 +74,10 @@ pub struct SharedModel {
     /// Dense LM head, row-major (hidden, vocab), shared across shards.
     head_w: Arc<[f32]>,
     head_b: Arc<[f32]>,
+    /// Verified integrity fingerprint of the serving bits (planes +
+    /// head), exported via `/metrics` so a fleet can assert every shard
+    /// serves the same bits.
+    fingerprint: u64,
 }
 
 impl SharedModel {
@@ -62,6 +91,18 @@ impl SharedModel {
     /// via [`crate::engine::from_weights`] with the same spec.
     pub fn prepare(weights: &ModelWeights, kind: BackendKind, sample_seed: u64)
         -> Result<Self> {
+        Self::prepare_with_faults(weights, kind, sample_seed, None)
+    }
+
+    /// [`Self::prepare`] with a chaos hook: an optional [`FaultPlan`]
+    /// may corrupt one plane bit during the build (modeling a corrupt
+    /// checkpoint read). Either way the built stack + head are
+    /// re-hashed and checked against the pack-time fingerprint; a
+    /// mismatch is a typed [`IntegrityError`] (downcastable from the
+    /// returned `anyhow::Error`), never wrong logits.
+    pub fn prepare_with_faults(weights: &ModelWeights, kind: BackendKind,
+                               sample_seed: u64,
+                               faults: Option<&FaultPlan>) -> Result<Self> {
         let planes = match kind {
             BackendKind::PackedCpu => false,
             BackendKind::PackedPlanes => true,
@@ -69,7 +110,15 @@ impl SharedModel {
                 "PjrtDense serves from a compiled executable, not shared \
                  packed planes; use a packed backend kind"),
         };
-        let (stack, head_w, head_b) = weights.build_stack(sample_seed, planes)?;
+        let (stack, head_w, head_b, expected) =
+            weights.build_stack_with(sample_seed, planes, faults)?;
+        let actual = packed_model_fingerprint(
+            (0..stack.layers())
+                .flat_map(|l| [stack.layer(l).wx(), stack.layer(l).wh()]),
+            &head_w, &head_b);
+        if actual != expected {
+            return Err(IntegrityError { expected, actual }.into());
+        }
         Ok(Self {
             kind,
             sample_seed,
@@ -80,7 +129,13 @@ impl SharedModel {
             stack,
             head_w: head_w.into(),
             head_b: head_b.into(),
+            fingerprint: actual,
         })
+    }
+
+    /// Verified integrity fingerprint of the serving bits.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
     }
 
     pub fn kind(&self) -> BackendKind {
@@ -156,6 +211,29 @@ mod tests {
     fn prepare_rejects_pjrt() {
         let w = ModelWeights::synthetic(10, 8, "ter", 1);
         assert!(SharedModel::prepare(&w, BackendKind::PjrtDense, 1).is_err());
+    }
+
+    #[test]
+    fn corrupt_plane_bit_is_a_typed_load_error() {
+        let w = ModelWeights::synthetic(20, 12, "ter", 3);
+        for kind in [BackendKind::PackedCpu, BackendKind::PackedPlanes] {
+            let clean = SharedModel::prepare(&w, kind, 7).unwrap();
+            assert_ne!(clean.fingerprint(), 0);
+            // same weights, same seed => same verified fingerprint
+            let again = SharedModel::prepare(&w, kind, 7).unwrap();
+            assert_eq!(clean.fingerprint(), again.fingerprint());
+
+            let plan = FaultPlan::parse("flip:matrix=1,word=0,bit=5").unwrap();
+            let err = SharedModel::prepare_with_faults(&w, kind, 7,
+                                                       Some(&plan))
+                .expect_err("corrupt bits must not load");
+            let ie = err.downcast_ref::<IntegrityError>()
+                .expect("integrity failure must stay typed");
+            assert_eq!(ie.expected, clean.fingerprint());
+            assert_ne!(ie.actual, ie.expected);
+            assert!(err.to_string().contains("fingerprint"),
+                    "operator-facing message names the check: {err}");
+        }
     }
 
     #[test]

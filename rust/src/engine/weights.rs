@@ -20,12 +20,46 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::faults::FaultPlan;
 use crate::model::checkpoint::Checkpoint;
 use crate::model::export::{glorot_alpha, sample_quantized, PackedMatrix};
 use crate::quant::{CellArch, Packed, PackedGruCell, PackedLstmCell,
                    PackedStack, RecurrentCell};
 use crate::runtime::{ArtifactMeta, Session};
 use crate::util::Rng;
+
+/// FNV-1a fingerprint over a packed model's serving bits: every packed
+/// matrix's [`Packed::fingerprint`] in iteration order, then the raw
+/// f32 bits of the LM head. This is THE integrity fingerprint: taken
+/// over the freshly packed matrices at pack time
+/// ([`ModelWeights::build_stack_with`]) and re-computed over the built
+/// stack at load ([`crate::engine::SharedModel::prepare`]) — any
+/// divergence between the two is a corrupt checkpoint, caught before a
+/// single request is served.
+pub fn packed_model_fingerprint<'a>(
+    matrices: impl Iterator<Item = &'a Packed>,
+    head_w: &[f32], head_b: &[f32],
+) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut h = FNV_OFFSET;
+    let mut feed = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    for m in matrices {
+        feed(&m.fingerprint().to_le_bytes());
+    }
+    for &v in head_w {
+        feed(&v.to_bits().to_le_bytes());
+    }
+    for &v in head_b {
+        feed(&v.to_bits().to_le_bytes());
+    }
+    h
+}
 
 /// Named f32 arrays: name -> (shape, values).
 pub type ArrayMap = BTreeMap<String, (Vec<usize>, Vec<f32>)>;
@@ -362,6 +396,22 @@ impl ModelWeights {
     /// weights declare.
     pub fn build_stack(&self, sample_seed: u64, planes: bool)
         -> Result<(PackedStack, Vec<f32>, Vec<f32>)> {
+        let (stack, head_w, head_b, _) =
+            self.build_stack_with(sample_seed, planes, None)?;
+        Ok((stack, head_w, head_b))
+    }
+
+    /// [`Self::build_stack`] plus the integrity machinery: returns the
+    /// pack-time [`packed_model_fingerprint`] as a 4th element, taken
+    /// over the finalized serving matrices (post plane conversion) and
+    /// head bits **before** any injected corruption, and honors an
+    /// optional [`FaultPlan`] `flip` fault by flipping one plane bit of
+    /// the `matrix`-th packed matrix in build order (`l0/wx`, `l0/wh`,
+    /// `l1/wx`, …) — exactly what a corrupt read of a fingerprinted
+    /// checkpoint looks like, so load-time verification must catch it.
+    pub fn build_stack_with(&self, sample_seed: u64, planes: bool,
+                            faults: Option<&FaultPlan>)
+        -> Result<(PackedStack, Vec<f32>, Vec<f32>, u64)> {
         anyhow::ensure!(
             self.quantizer == "bin" || self.quantizer == "ter",
             "packed backends need a binary/ternary quantizer, got '{}' \
@@ -410,8 +460,10 @@ impl ModelWeights {
                            label as u64)?;
             sampled.insert(name.clone(), m);
         }
-        let mut cells: Vec<Box<dyn RecurrentCell>> =
-            Vec::with_capacity(self.layers);
+        // Finalize every matrix's serving representation first: the
+        // fingerprint must cover the bits the engine actually streams,
+        // so plane conversion happens before hashing.
+        let mut mats: Vec<(Packed, Packed)> = Vec::with_capacity(self.layers);
         for l in 0..self.layers {
             let mut wh = sampled.remove(&format!("l{l}/wh")).unwrap();
             let mut wx = sampled.remove(&format!("l{l}/wx")).unwrap();
@@ -419,6 +471,23 @@ impl ModelWeights {
                 wx = wx.to_planes();
                 wh = wh.to_planes();
             }
+            mats.push((wx, wh));
+        }
+        let (_, head_w) = self.param("head/w")?;
+        let (_, head_b) = self.param("head/b")?;
+        let fingerprint = packed_model_fingerprint(
+            mats.iter().flat_map(|(wx, wh)| [wx, wh]), head_w, head_b);
+        if let Some(f) = faults {
+            for (i, m) in mats.iter_mut()
+                .flat_map(|(wx, wh)| [wx, wh]).enumerate() {
+                if let Some((word, bit)) = f.plane_flip(i) {
+                    *m = m.with_flipped_bit(word, bit);
+                }
+            }
+        }
+        let mut cells: Vec<Box<dyn RecurrentCell>> =
+            Vec::with_capacity(self.layers);
+        for (l, (wx, wh)) in mats.into_iter().enumerate() {
             let (scale_x, shift_x) = self.fold_bn(
                 &format!("l{l}/phi_x"), &format!("l{l}/rm_x"),
                 &format!("l{l}/rv_x"), gw)?;
@@ -437,10 +506,7 @@ impl ModelWeights {
             cells.push(cell);
         }
         let stack = PackedStack::new(cells)?;
-
-        let (_, head_w) = self.param("head/w")?;
-        let (_, head_b) = self.param("head/b")?;
-        Ok((stack, head_w.to_vec(), head_b.to_vec()))
+        Ok((stack, head_w.to_vec(), head_b.to_vec(), fingerprint))
     }
 }
 
@@ -466,6 +532,29 @@ mod tests {
             // ternary stays 2 bits/weight, binary 1 bit/weight.
             assert_eq!(stack.weight_bytes(), stack_p.weight_bytes());
         }
+    }
+
+    #[test]
+    fn pack_fingerprint_is_stable_and_flip_fault_corrupts() {
+        let w = ModelWeights::synthetic(30, 12, "ter", 3);
+        let (_, _, _, a) = w.build_stack_with(5, true, None).unwrap();
+        let (_, _, _, b) = w.build_stack_with(5, true, None).unwrap();
+        assert_eq!(a, b, "same seed must fingerprint identically");
+        let (_, _, _, c) = w.build_stack_with(6, true, None).unwrap();
+        assert_ne!(a, c, "sample seed must move the fingerprint");
+
+        // A flip fault corrupts the BUILT stack but not the pack-time
+        // fingerprint — that gap is what load verification detects.
+        let plan = crate::faults::FaultPlan::parse(
+            "flip:matrix=0,word=3,bit=7").unwrap();
+        let (stack, hw, hb, d) =
+            w.build_stack_with(5, true, Some(&plan)).unwrap();
+        assert_eq!(a, d, "expected fingerprint is pre-corruption");
+        let actual = packed_model_fingerprint(
+            (0..stack.layers())
+                .flat_map(|l| [stack.layer(l).wx(), stack.layer(l).wh()]),
+            &hw, &hb);
+        assert_ne!(actual, a, "flipped plane bit must change the hash");
     }
 
     #[test]

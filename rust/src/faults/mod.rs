@@ -1,0 +1,320 @@
+//! Deterministic fault injection — the chaos harness behind the
+//! supervision, deadline, and integrity layers.
+//!
+//! A [`FaultPlan`] is a seeded, step-indexed script of failures: panic
+//! shard 1 at engine step 20, flip bit 7 of plane word 3 of the first
+//! packed matrix, stall the reader before frame 2, truncate outbound
+//! frame 5. Every fault fires **exactly once** and is addressed by a
+//! deterministic index (engine step, matrix build order, frame
+//! counter), so a failing chaos run replays identically under
+//! `RBTW_FAULT_PLAN` — the same property the serving digests lean on,
+//! extended to the failure paths.
+//!
+//! Injection points hold an `Option<Arc<FaultPlan>>` and do nothing on
+//! `None` — the hooks are a pointer test when fault injection is off,
+//! which is the only configuration production traffic ever sees.
+//!
+//! Plans parse from a compact spec (see [`FaultPlan::parse`]):
+//!
+//! ```text
+//! seed=7;panic:shard=1,step=20;flip:matrix=0,word=3,bit=7
+//! ```
+//!
+//! A fault value written as `~N` is derived from the plan seed
+//! (`1 + splitmix64(seed, fault_index) % N`), so one seed schedules a
+//! whole family of step-indexed failures reproducibly.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// Environment variable holding a fault-plan spec; parsed by
+/// [`FaultPlan::from_env`]. A test hook, not an operator knob.
+pub const FAULT_PLAN_ENV: &str = "RBTW_FAULT_PLAN";
+
+/// One scripted failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic shard `shard`'s serve loop once its cumulative engine-step
+    /// counter reaches `step` (counted across respawns, so the
+    /// respawned generation does not re-fire the same panic).
+    ShardPanic { shard: usize, step: u64 },
+    /// Flip `bit` of plane word `word` of the `matrix`-th packed
+    /// matrix (in build/export order), *after* the pack-time
+    /// fingerprint is taken — models a corrupt checkpoint reaching the
+    /// loader.
+    PlaneBitFlip { matrix: usize, word: usize, bit: u32 },
+    /// Sleep `delay_ms` before handling inbound frame `frame` on a
+    /// front-door connection — a slow reader.
+    SlowReader { frame: u64, delay_ms: u64 },
+    /// Cut the connection after writing only `keep` payload bytes of
+    /// outbound frame `frame` — a mid-frame crash the peer must see as
+    /// a typed truncation, not garbage.
+    TruncateFrame { frame: u64, keep: usize },
+}
+
+/// A seeded, step-indexed fault script; see the module docs.
+pub struct FaultPlan {
+    seed: u64,
+    faults: Vec<Fault>,
+    fired: Vec<AtomicBool>,
+}
+
+/// splitmix64 — the derivation behind `~N` spec values.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// A plan from an explicit fault list (tests); `seed` only matters
+    /// when faults were derived with `~N` spec values.
+    pub fn new(seed: u64, faults: Vec<Fault>) -> Self {
+        let fired = faults.iter().map(|_| AtomicBool::new(false)).collect();
+        Self { seed, faults, fired }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn faults(&self) -> &[Fault] {
+        &self.faults
+    }
+
+    /// Parse a `;`-separated spec: optional leading `seed=<u64>`, then
+    /// faults `kind:key=value,...`. Values may be decimal, `0x` hex,
+    /// or `~N` (seed-derived in `[1, N]`). Kinds:
+    ///
+    /// * `panic:shard=S,step=N`
+    /// * `flip:matrix=M,word=W,bit=B`
+    /// * `slow:frame=F,delay_ms=D`
+    /// * `truncate:frame=F,keep=K`
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut seed = 0u64;
+        let mut faults = vec![];
+        for (i, part) in spec
+            .split(';')
+            .map(str::trim)
+            .filter(|p| !p.is_empty())
+            .enumerate()
+        {
+            if let Some(v) = part.strip_prefix("seed=") {
+                anyhow::ensure!(faults.is_empty(),
+                                "fault spec: seed= must come first");
+                seed = parse_u64(v).context("fault spec: seed")?;
+                continue;
+            }
+            let (kind, body) = part.split_once(':').with_context(|| {
+                format!("fault spec entry '{part}': expected kind:key=value,...")
+            })?;
+            let mut get = |key: &str| -> Result<u64> {
+                for kv in body.split(',') {
+                    let (k, v) = kv.split_once('=').with_context(|| {
+                        format!("fault spec entry '{part}': bad field '{kv}'")
+                    })?;
+                    if k.trim() == key {
+                        return parse_fault_value(v.trim(), seed, i as u64)
+                            .with_context(|| {
+                                format!("fault spec entry '{part}': field {key}")
+                            });
+                    }
+                }
+                bail!("fault spec entry '{part}': missing field {key}")
+            };
+            let fault = match kind.trim() {
+                "panic" => Fault::ShardPanic {
+                    shard: get("shard")? as usize,
+                    step: get("step")?,
+                },
+                "flip" => Fault::PlaneBitFlip {
+                    matrix: get("matrix")? as usize,
+                    word: get("word")? as usize,
+                    bit: (get("bit")? % 64) as u32,
+                },
+                "slow" => Fault::SlowReader {
+                    frame: get("frame")?,
+                    delay_ms: get("delay_ms")?,
+                },
+                "truncate" => Fault::TruncateFrame {
+                    frame: get("frame")?,
+                    keep: get("keep")? as usize,
+                },
+                other => bail!(
+                    "fault spec: unknown kind '{other}' \
+                     (accepted: panic, flip, slow, truncate)"),
+            };
+            faults.push(fault);
+        }
+        anyhow::ensure!(!faults.is_empty(), "fault spec is empty");
+        Ok(Self::new(seed, faults))
+    }
+
+    /// The plan scripted in [`FAULT_PLAN_ENV`], if any. `Ok(None)` when
+    /// the variable is unset or empty.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        match std::env::var(FAULT_PLAN_ENV) {
+            Ok(spec) if !spec.trim().is_empty() => {
+                let plan = Self::parse(&spec)
+                    .with_context(|| format!("parsing {FAULT_PLAN_ENV}"))?;
+                Ok(Some(Arc::new(plan)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Claim fault `i` exactly once.
+    fn fire(&self, i: usize) -> bool {
+        self.fired[i]
+            .compare_exchange(false, true, Ordering::AcqRel,
+                              Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Shard-loop hook: should `shard` panic now, given its cumulative
+    /// engine-step counter? `step >=` the scripted step so a batched
+    /// loop that skips the exact index still fires.
+    pub fn shard_panic_due(&self, shard: usize, step: u64) -> bool {
+        for (i, f) in self.faults.iter().enumerate() {
+            if let Fault::ShardPanic { shard: s, step: at } = *f {
+                if s == shard && step >= at && self.fire(i) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Pack-time hook: the `(word, bit)` to flip in matrix `matrix`
+    /// (build/export order), once.
+    pub fn plane_flip(&self, matrix: usize) -> Option<(usize, u32)> {
+        for (i, f) in self.faults.iter().enumerate() {
+            if let Fault::PlaneBitFlip { matrix: m, word, bit } = *f {
+                if m == matrix && self.fire(i) {
+                    return Some((word, bit));
+                }
+            }
+        }
+        None
+    }
+
+    /// Reader hook: how long to stall before handling inbound frame
+    /// `frame`, once.
+    pub fn read_delay(&self, frame: u64) -> Option<Duration> {
+        for (i, f) in self.faults.iter().enumerate() {
+            if let Fault::SlowReader { frame: n, delay_ms } = *f {
+                if n == frame && self.fire(i) {
+                    return Some(Duration::from_millis(delay_ms));
+                }
+            }
+        }
+        None
+    }
+
+    /// Writer hook: payload bytes to keep of outbound frame `frame`
+    /// before cutting the connection, once.
+    pub fn truncate_frame(&self, frame: u64) -> Option<usize> {
+        for (i, f) in self.faults.iter().enumerate() {
+            if let Fault::TruncateFrame { frame: n, keep } = *f {
+                if n == frame && self.fire(i) {
+                    return Some(keep);
+                }
+            }
+        }
+        None
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan")
+            .field("seed", &self.seed)
+            .field("faults", &self.faults)
+            .finish()
+    }
+}
+
+fn parse_u64(s: &str) -> Result<u64> {
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).with_context(|| format!("bad hex '{s}'"))
+    } else {
+        s.parse::<u64>().with_context(|| format!("bad number '{s}'"))
+    }
+}
+
+fn parse_fault_value(s: &str, seed: u64, index: u64) -> Result<u64> {
+    if let Some(n) = s.strip_prefix('~') {
+        let n = parse_u64(n)?;
+        anyhow::ensure!(n > 0, "~N needs N >= 1");
+        Ok(1 + splitmix64(seed ^ index.wrapping_mul(0x9e37)) % n)
+    } else {
+        parse_u64(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_fires_once() {
+        let p = FaultPlan::parse(
+            "seed=7; panic:shard=1,step=20; flip:matrix=0,word=3,bit=7; \
+             slow:frame=2,delay_ms=50; truncate:frame=5,keep=4",
+        )
+        .unwrap();
+        assert_eq!(p.seed(), 7);
+        assert_eq!(p.faults().len(), 4);
+        // step-indexed: not due before its step, due at/after, once
+        assert!(!p.shard_panic_due(1, 19));
+        assert!(!p.shard_panic_due(0, 25), "wrong shard never fires");
+        assert!(p.shard_panic_due(1, 25));
+        assert!(!p.shard_panic_due(1, 26), "fires exactly once");
+        assert_eq!(p.plane_flip(1), None);
+        assert_eq!(p.plane_flip(0), Some((3, 7)));
+        assert_eq!(p.plane_flip(0), None, "fires exactly once");
+        assert_eq!(p.read_delay(2), Some(Duration::from_millis(50)));
+        assert_eq!(p.read_delay(2), None);
+        assert_eq!(p.truncate_frame(5), Some(4));
+        assert_eq!(p.truncate_frame(5), None);
+    }
+
+    #[test]
+    fn seeded_values_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::parse("seed=11;panic:shard=0,step=~64").unwrap();
+        let b = FaultPlan::parse("seed=11;panic:shard=0,step=~64").unwrap();
+        let c = FaultPlan::parse("seed=12;panic:shard=0,step=~64").unwrap();
+        assert_eq!(a.faults(), b.faults(), "same seed, same schedule");
+        let step = |p: &FaultPlan| match p.faults()[0] {
+            Fault::ShardPanic { step, .. } => step,
+            _ => unreachable!(),
+        };
+        assert!((1..=64).contains(&step(&a)));
+        assert!((1..=64).contains(&step(&c)));
+        assert_ne!((step(&a), 11), (step(&c), 12), "distinct plans");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("").is_err());
+        assert!(FaultPlan::parse("panic:shard=1").is_err(), "missing step");
+        assert!(FaultPlan::parse("meteor:impact=1").is_err());
+        assert!(FaultPlan::parse("panic:shard=x,step=1").is_err());
+        assert!(FaultPlan::parse("panic:shard=1,step=1;seed=3").is_err(),
+                "seed must lead");
+        let err = FaultPlan::parse("meteor:impact=1").unwrap_err();
+        assert!(format!("{err:#}").contains("panic, flip, slow, truncate"));
+    }
+
+    #[test]
+    fn hex_values_parse() {
+        let p = FaultPlan::parse("seed=0xBEEF;panic:shard=0,step=0x10")
+            .unwrap();
+        assert_eq!(p.seed(), 0xBEEF);
+        assert!(p.shard_panic_due(0, 16));
+    }
+}

@@ -14,12 +14,15 @@
 //! both do).
 
 use std::collections::HashMap;
+use std::io::ErrorKind;
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::Request;
-use super::proto::{read_frame, write_frame, ClientMsg, ServerMsg};
+use super::proto::{read_frame, write_frame, ClientMsg, ServerMsg,
+                   PROTO_VERSION};
 
 /// One fully streamed generation as seen from the wire.
 #[derive(Clone, Debug, PartialEq)]
@@ -45,6 +48,9 @@ pub enum WireOutcome {
     Busy(u64),
     /// Refused: the server is draining and takes no new work.
     Closing(u64),
+    /// Refused: the request's deadline lapsed before a shard could
+    /// serve it (a typed reply, never a silent drop).
+    Expired(u64),
     /// Refused: the request itself was invalid.
     Failed { id: u64, msg: String },
 }
@@ -55,6 +61,7 @@ impl WireOutcome {
             WireOutcome::Done(r) => r.id,
             WireOutcome::Busy(id)
             | WireOutcome::Closing(id)
+            | WireOutcome::Expired(id)
             | WireOutcome::Failed { id, .. } => *id,
         }
     }
@@ -73,10 +80,48 @@ pub struct FrontDoorClient {
 }
 
 impl FrontDoorClient {
+    /// Ceiling on the total time [`Self::connect`] spends retrying a
+    /// refused connection before giving up.
+    pub const CONNECT_RETRY_BUDGET: Duration = Duration::from_secs(5);
+
+    /// Connect, retrying `ECONNREFUSED` with doubling backoff for up to
+    /// [`Self::CONNECT_RETRY_BUDGET`]. A refused connection usually
+    /// means the server process is up but has not bound its listener
+    /// yet (the ci.sh smoke races exactly that window); every other
+    /// error — unreachable host, bad address — fails immediately.
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to front door {addr}"))?;
-        Ok(Self { stream })
+        let mut backoff = Duration::from_millis(10);
+        let mut waited = Duration::ZERO;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => return Ok(Self { stream }),
+                Err(e) if e.kind() == ErrorKind::ConnectionRefused
+                    && waited < Self::CONNECT_RETRY_BUDGET =>
+                {
+                    std::thread::sleep(backoff);
+                    waited += backoff;
+                    backoff = (backoff * 2).min(Duration::from_millis(500));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!(
+                        "connecting to front door {addr}"));
+                }
+            }
+        }
+    }
+
+    /// Protocol-version handshake: sends `hello` and errors if the
+    /// server speaks a different dialect (an `unsupported-version`
+    /// reply), so mismatches surface up front instead of mid-stream.
+    pub fn hello(&mut self) -> Result<u32> {
+        self.send(&ClientMsg::Hello { version: PROTO_VERSION })?;
+        match self.recv()? {
+            ServerMsg::Hello { version } => Ok(version),
+            ServerMsg::UnsupportedVersion { got, supported } => bail!(
+                "server refused protocol version {got} (it speaks \
+                 {supported})"),
+            other => bail!("expected hello, got {other:?}"),
+        }
     }
 
     /// Send one framed message.
@@ -112,6 +157,7 @@ impl FrontDoorClient {
                     id: r.id,
                     gen_len: r.gen_len,
                     temperature: r.temperature,
+                    deadline_ms: None,
                     prompt: r.prompt.clone(),
                 })?;
                 next += 1;
@@ -143,6 +189,10 @@ impl FrontDoorClient {
                     outcomes.push(WireOutcome::Closing(id));
                     inflight -= 1;
                 }
+                ServerMsg::Expired { id } => {
+                    outcomes.push(WireOutcome::Expired(id));
+                    inflight -= 1;
+                }
                 ServerMsg::Error { id: Some(id), msg } => {
                     outcomes.push(WireOutcome::Failed { id, msg });
                     inflight -= 1;
@@ -155,6 +205,19 @@ impl FrontDoorClient {
             }
         }
         Ok(outcomes)
+    }
+
+    /// Submit one `gen` request — optionally with a `deadline=<ms>`
+    /// latency budget — and block for its terminal outcome. Like the
+    /// control-plane helpers, must not be called while other `gen`
+    /// responses are streaming on this connection.
+    pub fn gen_one(&mut self, id: u64, gen_len: usize, temperature: f32,
+                   deadline_ms: Option<u64>, prompt: Vec<i32>)
+        -> Result<WireOutcome> {
+        self.send(&ClientMsg::Gen {
+            id, gen_len, temperature, deadline_ms, prompt,
+        })?;
+        self.collect_one(id)
     }
 
     /// Prefill `prompt` and suspend the resulting recurrent state under
@@ -211,6 +274,9 @@ impl FrontDoorClient {
                 }
                 ServerMsg::Closing { id: rid } if rid == id => {
                     return Ok(WireOutcome::Closing(id));
+                }
+                ServerMsg::Expired { id: rid } if rid == id => {
+                    return Ok(WireOutcome::Expired(id));
                 }
                 ServerMsg::Error { id: Some(rid), msg } if rid == id => {
                     return Ok(WireOutcome::Failed { id, msg });

@@ -69,9 +69,10 @@ pub mod client;
 pub mod proto;
 
 pub use client::{FrontDoorClient, WireOutcome, WireResponse};
-pub use proto::{ClientMsg, FrameError, ServerMsg, MAX_FRAME};
+pub use proto::{ClientMsg, FrameError, ServerMsg, MAX_FRAME, PROTO_VERSION};
 
 use std::collections::HashMap;
+use std::io::Write as _;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -81,8 +82,9 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::cluster::{ClusterReport, ClusterResponse, ClusterStats,
-                     ServingCluster, SubmitRefused};
+                     ServingCluster, ShardOutcome, SubmitRefused};
 use crate::coordinator::Request;
+use crate::faults::FaultPlan;
 use crate::session::SubmitOpts;
 use proto::{read_frame, write_frame};
 
@@ -121,6 +123,9 @@ struct Shared {
     dropped_deliveries: AtomicU64,
     drain_flag: Mutex<bool>,
     drain_cv: Condvar,
+    /// Deterministic fault-injection plan (chaos testing only; `None`
+    /// in production, and every hook is behind that `None` check).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// The running TCP front door; see the module docs.
@@ -141,6 +146,7 @@ impl FrontDoor {
         let addr = listener.local_addr()
             .context("reading the front door's local address")?;
         let responses = cluster.take_responses()?;
+        let faults = cluster.faults();
         let shared = Arc::new(Shared {
             cluster: Mutex::new(Some(cluster)),
             conns: Mutex::new(HashMap::new()),
@@ -152,6 +158,7 @@ impl FrontDoor {
             dropped_deliveries: AtomicU64::new(0),
             drain_flag: Mutex::new(false),
             drain_cv: Condvar::new(),
+            faults,
         });
         let pump = {
             let sh = shared.clone();
@@ -322,9 +329,10 @@ fn conn_loop(stream: TcpStream, conn_id: u64, shared: Arc<Shared>) {
         Ok(s) => s,
         Err(_) => return,
     };
+    let faults = shared.faults.clone();
     let writer = std::thread::Builder::new()
         .name(format!("rbtw-frontdoor-write-{conn_id}"))
-        .spawn(move || writer_loop(wstream, rx));
+        .spawn(move || writer_loop(wstream, rx, faults));
     match writer {
         Ok(h) => shared.threads.lock().unwrap().push(h),
         Err(_) => return,
@@ -398,6 +406,17 @@ fn handle_frame(line: &str, conn_id: u64, tx: &mpsc::SyncSender<ServerMsg>,
         Err(e) => return send(ServerMsg::Error { id: None, msg: e }),
     };
     match msg {
+        ClientMsg::Hello { version } => {
+            let reply = if version == PROTO_VERSION {
+                ServerMsg::Hello { version }
+            } else {
+                ServerMsg::UnsupportedVersion {
+                    got: version,
+                    supported: PROTO_VERSION,
+                }
+            };
+            send(reply)
+        }
         ClientMsg::Ping => send(ServerMsg::Pong),
         ClientMsg::Metrics => {
             let reply = match metrics_text(shared) {
@@ -451,13 +470,16 @@ fn handle_frame(line: &str, conn_id: u64, tx: &mpsc::SyncSender<ServerMsg>,
             shared.drain_cv.notify_all();
             send(ServerMsg::Ok { msg: "draining".to_string() })
         }
-        ClientMsg::Gen { id, gen_len, temperature, prompt } => {
+        ClientMsg::Gen { id, gen_len, temperature, deadline_ms, prompt } => {
             submit_wire(shared, conn_id, &send, id, Request {
                 id: 0, // assigned inside
                 prompt,
                 gen_len,
                 temperature,
-            }, SubmitOpts::default())
+            }, SubmitOpts {
+                deadline: deadline_ms.map(Duration::from_millis),
+                ..SubmitOpts::default()
+            })
         }
         ClientMsg::Session { sid, id, temperature, prompt } => {
             // prefill-and-suspend: no generation, state saved under sid
@@ -478,7 +500,8 @@ fn handle_frame(line: &str, conn_id: u64, tx: &mpsc::SyncSender<ServerMsg>,
                 gen_len,
                 temperature,
             }, SubmitOpts { save_session: Some(sid),
-                            resume: Some(sid) })
+                            resume: Some(sid),
+                            ..SubmitOpts::default() })
         }
     }
 }
@@ -526,8 +549,34 @@ fn submit_wire(shared: &Arc<Shared>, conn_id: u64,
 
 /// The only writer to its socket: drains the outbox until every sender
 /// is gone (or the socket dies), so frames never interleave mid-frame.
-fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<ServerMsg>) {
+///
+/// The fault hooks only exist when a [`FaultPlan`] is armed (chaos
+/// tests): `slow` stalls this writer before one frame — modelling a
+/// client that reads slowly, which must shed only THIS connection —
+/// and `truncate` sends a deliberately short payload then cuts the
+/// socket, so clients must treat a mid-frame EOF as `Truncated`, not
+/// as silent data.
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<ServerMsg>,
+               faults: Option<Arc<FaultPlan>>) {
+    let mut frame_no = 0u64;
     while let Ok(msg) = rx.recv() {
+        if let Some(plan) = &faults {
+            if let Some(delay) = plan.read_delay(frame_no) {
+                std::thread::sleep(delay);
+            }
+            if let Some(keep) = plan.truncate_frame(frame_no) {
+                let payload = msg.encode();
+                let bytes = payload.as_bytes();
+                let keep = keep.min(bytes.len());
+                let _ = stream.write_all(
+                    &(bytes.len() as u32).to_be_bytes());
+                let _ = stream.write_all(&bytes[..keep]);
+                let _ = stream.flush();
+                let _ = stream.shutdown(Shutdown::Both);
+                break;
+            }
+        }
+        frame_no += 1;
         if write_frame(&mut stream, &msg.encode()).is_err() {
             break;
         }
@@ -542,7 +591,7 @@ fn pump_loop(shared: Arc<Shared>, rx: mpsc::Receiver<ClusterResponse>)
     -> u64 {
     let mut delivered = 0u64;
     while let Ok(cr) = rx.recv() {
-        let pend = shared.pending.lock().unwrap().remove(&cr.response.id);
+        let pend = shared.pending.lock().unwrap().remove(&cr.id());
         let Some(p) = pend else { continue };
         let tx = shared.conns.lock().unwrap()
             .get(&p.conn)
@@ -554,21 +603,31 @@ fn pump_loop(shared: Arc<Shared>, rx: mpsc::Receiver<ClusterResponse>)
             continue;
         };
         let mut ok = true;
-        for (i, &t) in cr.response.generated.iter().enumerate() {
-            let frame = ServerMsg::Tok { id: p.client_id, index: i,
-                                         token: t };
-            if tx.try_send(frame).is_err() {
-                ok = false;
-                break;
+        match &cr.outcome {
+            ShardOutcome::Expired { .. } => {
+                // typed refusal: the deadline lapsed while queued
+                ok = tx.try_send(ServerMsg::Expired {
+                    id: p.client_id,
+                }).is_ok();
             }
-        }
-        if ok {
-            ok = tx.try_send(ServerMsg::Done {
-                id: p.client_id,
-                n_tokens: cr.response.generated.len(),
-                logprob_bits: cr.response.prompt_logprob.to_bits(),
-                shard: cr.shard,
-            }).is_ok();
+            ShardOutcome::Done(resp) => {
+                for (i, &t) in resp.generated.iter().enumerate() {
+                    let frame = ServerMsg::Tok { id: p.client_id, index: i,
+                                                 token: t };
+                    if tx.try_send(frame).is_err() {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    ok = tx.try_send(ServerMsg::Done {
+                        id: p.client_id,
+                        n_tokens: resp.generated.len(),
+                        logprob_bits: resp.prompt_logprob.to_bits(),
+                        shard: cr.shard,
+                    }).is_ok();
+                }
+            }
         }
         if ok {
             delivered += 1;
@@ -596,6 +655,10 @@ struct MetricsMeta {
     draining: bool,
     connections: usize,
     dropped_deliveries: u64,
+    /// Load-time verified packed-model fingerprint (FNV-1a over plane
+    /// words + head), so a scrape can confirm every shard serves the
+    /// same bits a checkpoint packed.
+    fingerprint: u64,
 }
 
 fn metrics_text(shared: &Shared) -> Result<String> {
@@ -612,6 +675,7 @@ fn metrics_text(shared: &Shared) -> Result<String> {
         connections: shared.conns.lock().unwrap().len(),
         dropped_deliveries: shared.dropped_deliveries
             .load(Ordering::SeqCst),
+        fingerprint: c.fingerprint(),
     };
     Ok(render_metrics(&stats, &meta))
 }
@@ -643,6 +707,11 @@ fn render_metrics(stats: &ClusterStats, meta: &MetricsMeta) -> String {
     line(format!("rbtw_cluster_weight_bytes {}", meta.weight_bytes));
     line(format!("rbtw_cluster_tokens_per_sec {:.3}",
                  stats.tokens_per_sec));
+    // robustness gauges (aggregate-only: the per-shard block below is
+    // the frame-budget hot spot, these three lines are flat)
+    line(format!("rbtw_cluster_respawns {}", stats.respawns));
+    line(format!("rbtw_cluster_expired {}", stats.expired));
+    line(format!("rbtw_cluster_fingerprint {:016x}", meta.fingerprint));
     if let Some(ss) = &stats.sessions {
         line(format!("rbtw_session_prefix_hits {}", ss.prefix_hits));
         line(format!("rbtw_session_prefix_misses {}", ss.prefix_misses));
@@ -691,6 +760,8 @@ mod tests {
         let mut stats = ClusterStats::default();
         stats.completed = 12;
         stats.tokens_processed = 48;
+        stats.respawns = 1;
+        stats.expired = 2;
         stats.sessions = Some(crate::session::SessionCounters {
             prefix_hits: 4,
             prefix_misses: 2,
@@ -726,9 +797,14 @@ mod tests {
             draining: false,
             connections: 2,
             dropped_deliveries: 0,
+            fingerprint: 0x00ab_cdef_0123_4567,
         };
         let text = render_metrics(&stats, &meta);
         assert!(text.contains("rbtw_cluster_live_shards 1\n"));
+        assert!(text.contains("rbtw_cluster_respawns 1\n"));
+        assert!(text.contains("rbtw_cluster_expired 2\n"));
+        assert!(text.contains("rbtw_cluster_fingerprint 00abcdef01234567\n"),
+                "fingerprint is zero-padded hex: {text}");
         assert!(text.contains("rbtw_shard_live{shard=\"0\"} 0\n"),
                 "retired shard visible at 0: {text}");
         assert!(text.contains("rbtw_shard_live{shard=\"1\"} 1\n"));
@@ -752,6 +828,8 @@ mod tests {
         // worst case: MAX_SHARDS shards with large counters must still
         // fit the frame cap (the metrics reply is a single frame)
         let mut stats = ClusterStats::default();
+        stats.respawns = u64::MAX;
+        stats.expired = u64::MAX;
         stats.sessions = Some(crate::session::SessionCounters {
             prefix_hits: u64::MAX,
             prefix_misses: u64::MAX,
@@ -782,6 +860,7 @@ mod tests {
             draining: true,
             connections: usize::MAX,
             dropped_deliveries: u64::MAX,
+            fingerprint: u64::MAX,
         };
         let text = render_metrics(&stats, &meta);
         assert!(text.len() <= proto::MAX_FRAME,

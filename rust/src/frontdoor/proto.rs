@@ -16,7 +16,8 @@
 //!
 //! | frame                                     | meaning                      |
 //! |-------------------------------------------|------------------------------|
-//! | `gen <id> <gen_len> <temp> <tok...>`      | submit a generation request  |
+//! | `hello <version>`                         | protocol-version handshake   |
+//! | `gen <id> <gen_len> <temp> [deadline=<ms>] <tok...>` | submit a generation request |
 //! | `session <sid> <id> <temp> <tok...>`      | prefill + suspend under `sid`|
 //! | `resume <sid> <id> <gen_len> <temp> [tok...]` | resume session `sid` with a (possibly empty) continuation; re-saves under `sid` |
 //! | `metrics`                                 | fetch the metrics text       |
@@ -37,10 +38,13 @@
 //!
 //! | frame                                   | meaning                      |
 //! |-----------------------------------------|------------------------------|
+//! | `hello <version>`                       | handshake accepted           |
+//! | `unsupported-version <got> <supported>` | handshake refused            |
 //! | `tok <id> <index> <token>`              | one streamed generated token |
 //! | `done <id> <n> <logprob:016x> <shard>`  | request complete             |
 //! | `busy <id>`                             | overloaded — retry later     |
 //! | `closing <id>`                          | draining — no new work       |
+//! | `expired <id>`                          | deadline passed before serve |
 //! | `err - <msg>` / `err <id> <msg>`        | protocol / request error     |
 //! | `ok <msg>`                              | fleet-operation acknowledged |
 //! | `pong`                                  | ping reply                   |
@@ -52,6 +56,16 @@
 //! digest gate. Token ids in `gen`/`tok` are the request's own `id`
 //! namespace (per connection); the front door maps them to cluster-wide
 //! ids internally, so concurrent connections can both use id 0.
+//!
+//! `hello` is optional (existing clients never send it) but recommended:
+//! a client opening with `hello <PROTO_VERSION>` learns immediately
+//! whether the server speaks its dialect. A server that cannot replies
+//! `unsupported-version <got> <supported>` and the client should hang
+//! up rather than guess. `gen` may carry `deadline=<ms>` between the
+//! temperature and the prompt tokens: a per-request latency budget,
+//! measured from admission. Work still queued when it lapses is
+//! answered with `expired <id>` instead of being served — a typed
+//! refusal, never a silent drop.
 
 use std::io::{self, Read, Write};
 
@@ -60,6 +74,11 @@ use std::io::{self, Read, Write};
 /// fleet and for long prompts; far below anything that could pressure
 /// the server's memory.
 pub const MAX_FRAME: usize = 64 * 1024;
+
+/// The protocol dialect this build speaks. Bumped whenever a frame
+/// changes shape incompatibly; the `hello` handshake lets a client
+/// detect a mismatch up front instead of mid-stream.
+pub const PROTO_VERSION: u32 = 1;
 
 /// Upper bound on tokens requested per generation over the wire — an
 /// admission sanity cap so one frame cannot commit the server to an
@@ -151,11 +170,16 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<String, FrameError> {
 /// spellings.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ClientMsg {
+    /// Protocol-version handshake; see [`PROTO_VERSION`].
+    Hello { version: u32 },
     Gen {
         /// Client-chosen request id (scoped to this connection).
         id: u64,
         gen_len: usize,
         temperature: f32,
+        /// Optional latency budget in milliseconds (wire spelling
+        /// `deadline=<ms>`); `None` inherits the server's default.
+        deadline_ms: Option<u64>,
         prompt: Vec<i32>,
     },
     /// Prefill `prompt` and suspend the resulting recurrent state under
@@ -187,8 +211,13 @@ impl ClientMsg {
     /// Wire spelling of this message (inverse of [`Self::parse`]).
     pub fn encode(&self) -> String {
         match self {
-            ClientMsg::Gen { id, gen_len, temperature, prompt } => {
+            ClientMsg::Hello { version } => format!("hello {version}"),
+            ClientMsg::Gen { id, gen_len, temperature, deadline_ms,
+                             prompt } => {
                 let mut s = format!("gen {id} {gen_len} {temperature}");
+                if let Some(ms) = deadline_ms {
+                    s.push_str(&format!(" deadline={ms}"));
+                }
                 for t in prompt {
                     s.push(' ');
                     s.push_str(&t.to_string());
@@ -226,6 +255,9 @@ impl ClientMsg {
         let mut parts = line.split_whitespace();
         let verb = parts.next().ok_or("empty frame")?;
         let msg = match verb {
+            "hello" => ClientMsg::Hello {
+                version: parse_field(parts.next(), "hello version")?,
+            },
             "gen" => {
                 let id: u64 = parse_field(parts.next(), "gen id")?;
                 let gen_len: usize =
@@ -242,6 +274,17 @@ impl ClientMsg {
                         "gen temperature {temperature} must be finite and \
                          >= 0"));
                 }
+                let mut parts = parts.peekable();
+                let deadline_ms = match parts.peek() {
+                    Some(p) if p.starts_with("deadline=") => {
+                        let ms = p["deadline=".len()..]
+                            .parse::<u64>()
+                            .map_err(|_| format!("bad gen deadline '{p}'"))?;
+                        parts.next();
+                        Some(ms)
+                    }
+                    _ => None,
+                };
                 let mut prompt = vec![];
                 for p in parts {
                     prompt.push(p.parse::<i32>().map_err(|_| {
@@ -252,7 +295,8 @@ impl ClientMsg {
                     return Err("gen needs at least one prompt token"
                         .to_string());
                 }
-                ClientMsg::Gen { id, gen_len, temperature, prompt }
+                ClientMsg::Gen { id, gen_len, temperature, deadline_ms,
+                                 prompt }
             }
             "session" => {
                 let sid: u64 = parse_field(parts.next(), "session sid")?;
@@ -313,7 +357,7 @@ impl ClientMsg {
             "drain" => ClientMsg::Drain,
             "ping" => ClientMsg::Ping,
             other => return Err(format!(
-                "unknown command '{other}' (accepted: gen, session, \
+                "unknown command '{other}' (accepted: hello, gen, session, \
                  resume, metrics, add-shard, remove-shard, drain, ping)")),
         };
         Ok(msg)
@@ -324,6 +368,11 @@ impl ClientMsg {
 /// spellings.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ServerMsg {
+    /// Handshake accepted; `version` is what the server speaks.
+    Hello { version: u32 },
+    /// Handshake refused: the client asked for `got`, the server only
+    /// speaks `supported`. The client should disconnect.
+    UnsupportedVersion { got: u32, supported: u32 },
     /// One streamed generated token (`index` counts from 0 within the
     /// request).
     Tok { id: u64, index: usize, token: i32 },
@@ -335,6 +384,9 @@ pub enum ServerMsg {
     Busy { id: u64 },
     /// Draining — no new work; everything already accepted completes.
     Closing { id: u64 },
+    /// The request's deadline lapsed while it was still queued; it was
+    /// refused with a typed reply rather than silently dropped.
+    Expired { id: u64 },
     /// Protocol or request error; `id` is present when the error is
     /// scoped to one request.
     Error { id: Option<u64>, msg: String },
@@ -349,6 +401,10 @@ pub enum ServerMsg {
 impl ServerMsg {
     pub fn encode(&self) -> String {
         match self {
+            ServerMsg::Hello { version } => format!("hello {version}"),
+            ServerMsg::UnsupportedVersion { got, supported } => {
+                format!("unsupported-version {got} {supported}")
+            }
             ServerMsg::Tok { id, index, token } => {
                 format!("tok {id} {index} {token}")
             }
@@ -357,6 +413,7 @@ impl ServerMsg {
             }
             ServerMsg::Busy { id } => format!("busy {id}"),
             ServerMsg::Closing { id } => format!("closing {id}"),
+            ServerMsg::Expired { id } => format!("expired {id}"),
             ServerMsg::Error { id: Some(id), msg } => format!("err {id} {msg}"),
             ServerMsg::Error { id: None, msg } => format!("err - {msg}"),
             ServerMsg::Ok { msg } => format!("ok {msg}"),
@@ -372,6 +429,14 @@ impl ServerMsg {
         };
         let mut parts = rest.split_whitespace();
         let msg = match verb {
+            "hello" => ServerMsg::Hello {
+                version: parse_field(parts.next(), "hello version")?,
+            },
+            "unsupported-version" => ServerMsg::UnsupportedVersion {
+                got: parse_field(parts.next(), "unsupported-version got")?,
+                supported: parse_field(
+                    parts.next(), "unsupported-version supported")?,
+            },
             "tok" => ServerMsg::Tok {
                 id: parse_field(parts.next(), "tok id")?,
                 index: parse_field(parts.next(), "tok index")?,
@@ -390,6 +455,9 @@ impl ServerMsg {
             },
             "closing" => ServerMsg::Closing {
                 id: parse_field(parts.next(), "closing id")?,
+            },
+            "expired" => ServerMsg::Expired {
+                id: parse_field(parts.next(), "expired id")?,
             },
             "err" => {
                 let (tag, msg) = match rest.split_once(' ') {
@@ -488,8 +556,11 @@ mod tests {
     #[test]
     fn client_messages_roundtrip() {
         let msgs = [
+            ClientMsg::Hello { version: PROTO_VERSION },
             ClientMsg::Gen { id: 7, gen_len: 12, temperature: 0.0,
-                             prompt: vec![1, 2, 3] },
+                             deadline_ms: None, prompt: vec![1, 2, 3] },
+            ClientMsg::Gen { id: 7, gen_len: 12, temperature: 0.0,
+                             deadline_ms: Some(250), prompt: vec![1, -2] },
             ClientMsg::Session { sid: 42, id: 8, temperature: 0.0,
                                  prompt: vec![4, 5] },
             ClientMsg::Resume { sid: 42, id: 9, gen_len: 6,
@@ -510,11 +581,14 @@ mod tests {
     #[test]
     fn server_messages_roundtrip() {
         let msgs = [
+            ServerMsg::Hello { version: PROTO_VERSION },
+            ServerMsg::UnsupportedVersion { got: 9, supported: 1 },
             ServerMsg::Tok { id: 9, index: 0, token: -1 },
             ServerMsg::Done { id: 9, n_tokens: 4,
                               logprob_bits: (-1.5f64).to_bits(), shard: 2 },
             ServerMsg::Busy { id: 1 },
             ServerMsg::Closing { id: 2 },
+            ServerMsg::Expired { id: 5 },
             ServerMsg::Error { id: Some(3), msg: "bad prompt".into() },
             ServerMsg::Error { id: None, msg: "unknown command".into() },
             ServerMsg::Ok { msg: "added shard 4".into() },
@@ -551,7 +625,10 @@ mod tests {
                     "session", "session 1", "session 1 2", "session 1 2 0",
                     "session 1 2 -1 3", "session 1 2 0 x",
                     "resume", "resume 1 2", "resume 1 2 x 0",
-                    "resume 1 2 4 nan", "resume 1 2 4 0 x"] {
+                    "resume 1 2 4 nan", "resume 1 2 4 0 x",
+                    "hello", "hello x", "hello -1",
+                    "gen 1 4 0 deadline=", "gen 1 4 0 deadline=x 1",
+                    "gen 1 4 0 deadline=5"] {
             assert!(ClientMsg::parse(bad).is_err(), "should reject: {bad:?}");
         }
         // a huge gen_len is an admission error, not accepted work
@@ -559,8 +636,28 @@ mod tests {
         assert!(ClientMsg::parse(&huge).is_err());
         let huge = format!("resume 1 2 {} 0", MAX_WIRE_GEN + 1);
         assert!(ClientMsg::parse(&huge).is_err());
-        // unknown-verb errors advertise the session verbs
+        // unknown-verb errors advertise the session verbs + handshake
         let err = ClientMsg::parse("launch-missiles").unwrap_err();
-        assert!(err.contains("session") && err.contains("resume"), "{err}");
+        assert!(err.contains("session") && err.contains("resume")
+                && err.contains("hello"), "{err}");
+    }
+
+    #[test]
+    fn deadline_field_parses_between_temperature_and_prompt() {
+        match ClientMsg::parse("gen 3 8 0 deadline=1500 7 9").unwrap() {
+            ClientMsg::Gen { deadline_ms, prompt, .. } => {
+                assert_eq!(deadline_ms, Some(1500));
+                assert_eq!(prompt, vec![7, 9]);
+            }
+            other => panic!("expected Gen, got {other:?}"),
+        }
+        // absent field -> None, prompt unchanged
+        match ClientMsg::parse("gen 3 8 0 7 9").unwrap() {
+            ClientMsg::Gen { deadline_ms, prompt, .. } => {
+                assert_eq!(deadline_ms, None);
+                assert_eq!(prompt, vec![7, 9]);
+            }
+            other => panic!("expected Gen, got {other:?}"),
+        }
     }
 }

@@ -92,12 +92,51 @@
 //! [`session::PreparedSubmit`]), and a bounded **LRU byte budget** with
 //! hit/miss/evict gauges in `live_stats` and `/metrics`. The `session`
 //! / `resume` wire verbs expose it through the front door.
+//!
+//! # Failure model
+//!
+//! The serving stack makes three hard guarantees, enforced by
+//! `rust/tests/faults_integration.rs` and the ci.sh chaos gate (which
+//! scripts failures deterministically via [`faults::FaultPlan`]):
+//!
+//! * **Shard death loses no accepted work.** Every shard serve loop
+//!   runs panic-contained (`catch_unwind`); its in-thread supervisor
+//!   rebuilds the engine from [`engine::SharedModel`] (a plane-`Arc`
+//!   refcount bump, no weight copy) and re-admits the dead
+//!   generation's in-flight requests — the same `PreparedSubmit`s that
+//!   passed [`session::prepare_with`] at admission. Greedy decode is
+//!   deterministic and a slot's trajectory depends only on the packed
+//!   weights and its own token stream, so the replay produces
+//!   bit-identical tokens and prompt-log-prob bits. Completions are
+//!   delivered at-least-once across a crash (exactly-once to wire
+//!   clients — the front door drops duplicate ids); suspended sessions
+//!   live in the cluster-wide [`session::SessionCache`], not in any
+//!   shard, and survive. Respawns surface in `live_stats` and
+//!   `/metrics` (`rbtw_cluster_respawns`). With supervision off, a
+//!   panicking shard fails the final drain with a typed error instead.
+//! * **Deadline expiry is a typed refusal, not silent loss.** A
+//!   per-request deadline (wire `deadline=<ms>` field or the cluster
+//!   default) rides [`session::SubmitOpts`] through admission and is
+//!   checked when a shard dequeues the request: expired work is never
+//!   stepped, and the client gets a typed `expired` reply
+//!   ([`cluster::ShardOutcome::Expired`]). `Full` refusals at
+//!   admission can be retried with bounded exponential backoff
+//!   ([`cluster::RetrySpec`]); `Draining` refusals are never retried.
+//! * **A corrupt checkpoint is a typed load error, not wrong logits.**
+//!   An FNV-1a fingerprint over every packed plane word and the f32
+//!   head bits is taken at pack/export time and re-verified over the
+//!   built stack at load ([`engine::SharedModel::prepare`]); any
+//!   mismatch fails with [`engine::IntegrityError`] before a single
+//!   request is served. The loaded fingerprint is exported via
+//!   `/metrics` so a fleet can assert every shard serves the same
+//!   bits.
 
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod faults;
 pub mod frontdoor;
 pub mod hwsim;
 pub mod metrics;

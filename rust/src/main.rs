@@ -16,9 +16,10 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use rbtw::cluster::{run_cluster_load, ClusterReport, RoutePolicy,
-                    ServingCluster};
+use rbtw::cluster::{run_cluster_load, ClusterOptions, ClusterReport,
+                    RetrySpec, RoutePolicy, ServingCluster};
 use rbtw::config::{default_spec_for_task, Config, ServeSpec};
+use rbtw::faults::FaultPlan;
 use rbtw::coordinator::{latency_breakdown, InferenceServer, LoadSpec,
                         Request, Split, Trainer};
 use rbtw::engine::{self, BackendKind, CellArch, InferBackend, ModelWeights,
@@ -151,6 +152,14 @@ fn print_usage() {
          \x20                             session cache budget; 0 = off)\n\
          \x20                             --session-grid N (prefix capture\n\
          \x20                             stride)\n\
+         \x20                             --deadline-ms N (per-request\n\
+         \x20                             latency budget; 0 = none)\n\
+         \x20                             --retries N (admission retries on\n\
+         \x20                             a full queue; 0 = fail fast)\n\
+         \x20                             --supervise true|false (respawn\n\
+         \x20                             crashed shard workers; default on)\n\
+         \x20                             (env RBTW_FAULT_PLAN arms the\n\
+         \x20                             deterministic chaos harness)\n\
          \x20                             --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
@@ -326,6 +335,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         ServeSpec::SESSION_GRID_RANGE.end());
         spec.session_grid = g;
     }
+    if let Some(v) = args.get("deadline-ms") {
+        let ms: u64 = v.parse().with_context(|| "--deadline-ms")?;
+        anyhow::ensure!(ServeSpec::DEADLINE_MS_RANGE.contains(&ms),
+                        "--deadline-ms {ms} out of range [{}, {}] \
+                         (0 disables the deadline)",
+                        ServeSpec::DEADLINE_MS_RANGE.start(),
+                        ServeSpec::DEADLINE_MS_RANGE.end());
+        spec.deadline_ms = ms;
+    }
+    if let Some(r) = args.get_usize("retries")? {
+        anyhow::ensure!(ServeSpec::RETRIES_RANGE.contains(&r),
+                        "--retries {r} out of range [{}, {}] \
+                         (0 fails fast on a full queue)",
+                        ServeSpec::RETRIES_RANGE.start(),
+                        ServeSpec::RETRIES_RANGE.end());
+        spec.retries = r;
+    }
+    if let Some(v) = args.get("supervise") {
+        spec.supervise = match v {
+            "true" => true,
+            "false" => false,
+            other => bail!("--supervise takes true|false, got '{other}'"),
+        };
+    }
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
@@ -341,8 +374,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             ModelWeights::from_artifact(&dir, &name)?
         };
-        let shared =
-            SharedModel::prepare(&weights, spec.backend, spec.sample_seed)?;
+        // the chaos gate arms RBTW_FAULT_PLAN; a `flip` fault corrupts
+        // a plane bit during the build, which the integrity check below
+        // must refuse with a typed fingerprint error
+        let faults = FaultPlan::from_env()?;
+        if let Some(plan) = &faults {
+            println!("fault plan armed: seed {}, {} fault(s)",
+                     plan.seed(), plan.faults().len());
+        }
+        let shared = SharedModel::prepare_with_faults(
+            &weights, spec.backend, spec.sample_seed, faults.as_deref())?;
         println!(
             "model {}: {} x{} layer(s), vocab {}, hidden {}\n\
              cluster: {} shard(s) x {} slots | {} routing | {} gemm | \
@@ -361,7 +402,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if spec.listen.is_some() {
             // network front door: serve real sockets until a drain
             // arrives (wire `drain` frame or stdin console)
-            return serve_network(shared, &spec);
+            return serve_network(shared, &spec, faults);
         }
         let load = LoadSpec { n_requests, prompt_len, gen_len,
                               temperature: 0.8, seed: 7 };
@@ -439,7 +480,8 @@ fn print_cluster_summary(report: &ClusterReport) {
 
 /// Serve the cluster behind the TCP front door until a drain arrives —
 /// over the wire (`drain` frame) or from the stdin operator console.
-fn serve_network(shared: SharedModel, spec: &ServeSpec) -> Result<()> {
+fn serve_network(shared: SharedModel, spec: &ServeSpec,
+                 faults: Option<std::sync::Arc<FaultPlan>>) -> Result<()> {
     let listen = spec.listen.as_deref().expect("serve_network needs listen");
     // --session-bytes 0 turns the recurrent-state cache off entirely
     // (session/resume frames then refuse at admission)
@@ -447,8 +489,19 @@ fn serve_network(shared: SharedModel, spec: &ServeSpec) -> Result<()> {
         rbtw::session::SessionCache::new(spec.session_bytes,
                                          spec.session_grid)
     });
-    let cluster = ServingCluster::new_with_sessions(
-        &shared, &spec.backend_spec(), spec.queue_cap, spec.policy, cache)?;
+    let cluster = ServingCluster::new_with_options(
+        &shared, &spec.backend_spec(),
+        ClusterOptions {
+            queue_cap: spec.queue_cap,
+            policy: spec.policy,
+            supervise: spec.supervise,
+            deadline: (spec.deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(spec.deadline_ms)),
+            retry: RetrySpec { attempts: spec.retries,
+                               ..RetrySpec::default() },
+            faults,
+        },
+        cache)?;
     let fd = FrontDoor::serve(cluster, listen)?;
     // exact line scripts poll for (ci.sh waits for it before connecting)
     println!("listening on {}", fd.local_addr());

@@ -36,6 +36,27 @@ impl PackedMatrix {
             PackedMatrix::Dense { rows, cols, .. } => (*rows, *cols),
         }
     }
+
+    /// FNV-1a integrity fingerprint of this matrix's export bits (see
+    /// [`PackedBinary::fingerprint`] / [`PackedTernary::fingerprint`];
+    /// dense baselines hash dims + raw f32 bits under a `"fp "` tag).
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            PackedMatrix::Binary(b) => b.fingerprint(),
+            PackedMatrix::Ternary(t) => t.fingerprint(),
+            PackedMatrix::Dense { rows, cols, data } => {
+                use crate::quant::pack::{fnv_feed, FNV_OFFSET};
+                let mut h = FNV_OFFSET;
+                fnv_feed(&mut h, b"fp ");
+                fnv_feed(&mut h, &(*rows as u64).to_le_bytes());
+                fnv_feed(&mut h, &(*cols as u64).to_le_bytes());
+                for v in data {
+                    fnv_feed(&mut h, &v.to_bits().to_le_bytes());
+                }
+                h
+            }
+        }
+    }
 }
 
 /// All recurrent matrices of a model, packed.
@@ -47,6 +68,20 @@ pub struct PackedModel {
 impl PackedModel {
     pub fn total_bytes(&self) -> usize {
         self.matrices.values().map(|m| m.bytes()).sum()
+    }
+
+    /// Whole-export integrity fingerprint: every matrix name and its
+    /// [`PackedMatrix::fingerprint`] in `BTreeMap` (sorted-name) order —
+    /// the same order `export_packed` samples in, so two exports of the
+    /// same session + seed fingerprint identically.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::quant::pack::{fnv_feed, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        for (name, m) in &self.matrices {
+            fnv_feed(&mut h, name.as_bytes());
+            fnv_feed(&mut h, &m.fingerprint().to_le_bytes());
+        }
+        h
     }
 }
 
@@ -158,6 +193,30 @@ mod tests {
         } else {
             panic!("expected ternary");
         }
+    }
+
+    #[test]
+    fn export_fingerprints_distinguish_models() {
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 64.0).collect();
+        let mk = |q: &str, seed: u64| {
+            let mut matrices = BTreeMap::new();
+            matrices.insert(
+                "l0/wx".to_string(),
+                sample_quantized(q, &w, 8, 8, &mut Rng::new(seed)).unwrap());
+            PackedModel { quantizer: q.to_string(), matrices }
+        };
+        for q in ["bin", "ter", "fp"] {
+            assert_eq!(mk(q, 3).fingerprint(), mk(q, 3).fingerprint(),
+                       "{q}: same sample, same fingerprint");
+        }
+        // different sampled bits and different quantizers both move it
+        assert_ne!(mk("ter", 3).fingerprint(), mk("ter", 4).fingerprint());
+        assert_ne!(mk("bin", 3).fingerprint(), mk("ter", 3).fingerprint());
+        // the name participates: same bits under another key differ
+        let mut a = mk("fp", 3);
+        let m = a.matrices.remove("l0/wx").unwrap();
+        a.matrices.insert("l1/wx".to_string(), m);
+        assert_ne!(a.fingerprint(), mk("fp", 3).fingerprint());
     }
 
     #[test]

@@ -172,6 +172,31 @@ impl Packed {
         }
     }
 
+    /// FNV-1a integrity fingerprint over the layout tag, dims, alpha
+    /// bits, and every plane word — taken at pack time, re-verified at
+    /// load ([`crate::engine::SharedModel::prepare`]) so a corrupt
+    /// checkpoint fails typed instead of serving wrong logits.
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            Packed::Binary(b) => b.fingerprint(),
+            Packed::Ternary(t) => t.fingerprint(),
+            Packed::Planes(p) => p.fingerprint(),
+        }
+    }
+
+    /// A copy with one primary-plane bit flipped — the chaos harness's
+    /// corrupt-checkpoint model ([`crate::faults::Fault::PlaneBitFlip`]);
+    /// never called on a production path.
+    pub fn with_flipped_bit(&self, word: usize, bit: u32) -> Packed {
+        match self {
+            Packed::Binary(b) => Packed::Binary(b.with_flipped_bit(word, bit)),
+            Packed::Ternary(t) => {
+                Packed::Ternary(t.with_flipped_bit(word, bit))
+            }
+            Packed::Planes(p) => Packed::Planes(p.with_flipped_bit(word, bit)),
+        }
+    }
+
     /// Convert to the bit-plane GEMV layout. Binary matrices stay as-is
     /// (the binary LUT GEMV already streams one plane byte per group).
     pub fn to_planes(self) -> Packed {

@@ -19,6 +19,37 @@
 
 use std::sync::Arc;
 
+pub(crate) const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+pub(crate) const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Feed bytes into a running FNV-1a hash — the integrity-fingerprint
+/// primitive shared by the packed layouts.
+pub(crate) fn fnv_feed(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+pub(crate) fn fnv_words(h: &mut u64, words: &[u64]) {
+    for &w in words {
+        fnv_feed(h, &w.to_le_bytes());
+    }
+}
+
+/// Flip `bit` of word `word % words.len()` in a copy of `words` — the
+/// plane-corruption primitive of the chaos harness
+/// ([`crate::faults::Fault::PlaneBitFlip`]). The planes themselves are
+/// immutable behind `Arc`, so corruption is modeled as a rebuilt
+/// allocation, exactly like a corrupt checkpoint read.
+pub(crate) fn flipped_words(words: &[u64], word: usize, bit: u32)
+    -> Arc<[u64]> {
+    let mut v: Vec<u64> = words.to_vec();
+    let w = word % v.len().max(1);
+    v[w] ^= 1u64 << (bit % 64);
+    v.into()
+}
+
 /// A packed binary matrix: values in {-alpha, +alpha}.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedBinary {
@@ -94,6 +125,24 @@ impl PackedBinary {
     pub fn plane_owners(&self) -> usize {
         Arc::strong_count(&self.sign)
     }
+
+    /// FNV-1a fingerprint over dims, alpha bits, and every sign-plane
+    /// word — taken at pack time, re-verified at load so a corrupt
+    /// checkpoint is a typed error, not wrong logits.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        fnv_feed(&mut h, b"bin");
+        fnv_feed(&mut h, &(self.rows as u64).to_le_bytes());
+        fnv_feed(&mut h, &(self.cols as u64).to_le_bytes());
+        fnv_feed(&mut h, &self.alpha.to_bits().to_le_bytes());
+        fnv_words(&mut h, &self.sign);
+        h
+    }
+
+    /// A copy with one sign-plane bit flipped (chaos harness only).
+    pub fn with_flipped_bit(&self, word: usize, bit: u32) -> Self {
+        Self { sign: flipped_words(&self.sign, word, bit), ..self.clone() }
+    }
 }
 
 impl PackedTernary {
@@ -150,6 +199,26 @@ impl PackedTernary {
     /// Live owners of the sign-plane allocation (1 = unshared).
     pub fn plane_owners(&self) -> usize {
         Arc::strong_count(&self.sign)
+    }
+
+    /// FNV-1a fingerprint over dims, alpha bits, and every sign- and
+    /// mask-plane word (see [`PackedBinary::fingerprint`]). Covers sign
+    /// bits under a cleared mask too: corruption is detected even where
+    /// it would not change an unpacked value.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        fnv_feed(&mut h, b"ter");
+        fnv_feed(&mut h, &(self.rows as u64).to_le_bytes());
+        fnv_feed(&mut h, &(self.cols as u64).to_le_bytes());
+        fnv_feed(&mut h, &self.alpha.to_bits().to_le_bytes());
+        fnv_words(&mut h, &self.sign);
+        fnv_words(&mut h, &self.mask);
+        h
+    }
+
+    /// A copy with one sign-plane bit flipped (chaos harness only).
+    pub fn with_flipped_bit(&self, word: usize, bit: u32) -> Self {
+        Self { sign: flipped_words(&self.sign, word, bit), ..self.clone() }
     }
 
     /// Fraction of non-zero weights (Fig. 1a reports the ternary weight
@@ -220,6 +289,32 @@ mod tests {
         assert_eq!(t2.plane_owners(), 2);
         drop(t2);
         assert_eq!(t.plane_owners(), 1);
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_bit_sensitive() {
+        let mut rng = Rng::new(5);
+        let data: Vec<f32> = (0..96 * 6)
+            .map(|_| [0.0f32, 0.5, -0.5][rng.below_usize(3)])
+            .collect();
+        let t = PackedTernary::pack(&data, 96, 6, 0.5);
+        assert_eq!(t.fingerprint(), t.clone().fingerprint(),
+                   "clones fingerprint identically");
+        let corrupt = t.with_flipped_bit(3, 17);
+        assert_ne!(t.fingerprint(), corrupt.fingerprint(),
+                   "one flipped plane bit must change the fingerprint");
+        // a sign flip under a cleared mask changes no unpacked value but
+        // IS caught — silent datapath corruption stays detectable
+        let masked_zero = (0..96 * 6).find(|i| data[*i] == 0.0).unwrap();
+        let (r, c) = (masked_zero / 6, masked_zero % 6);
+        let wpc = words_per_col(96);
+        let silent = t.with_flipped_bit(c * wpc + r / 64, (r % 64) as u32);
+        assert_eq!(silent.unpack(), t.unpack());
+        assert_ne!(silent.fingerprint(), t.fingerprint());
+        let b = PackedBinary::pack(&vec![1.0; 64 * 4], 64, 4, 1.0);
+        assert_ne!(b.fingerprint(), b.with_flipped_bit(0, 0).fingerprint());
+        assert_ne!(b.fingerprint(), t.fingerprint(),
+                   "layout tag separates binary from ternary");
     }
 
     #[test]

@@ -78,6 +78,27 @@ impl TernaryPlanes {
     pub fn plane_owners(&self) -> usize {
         Arc::strong_count(&self.pos)
     }
+
+    /// FNV-1a fingerprint over dims, alpha bits, and every pos- and
+    /// neg-plane word (see
+    /// [`PackedTernary::fingerprint`](super::pack::PackedTernary::fingerprint)).
+    pub fn fingerprint(&self) -> u64 {
+        use super::pack::{fnv_feed, fnv_words, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        fnv_feed(&mut h, b"pln");
+        fnv_feed(&mut h, &(self.rows as u64).to_le_bytes());
+        fnv_feed(&mut h, &(self.cols as u64).to_le_bytes());
+        fnv_feed(&mut h, &self.alpha.to_bits().to_le_bytes());
+        fnv_words(&mut h, &self.pos);
+        fnv_words(&mut h, &self.neg);
+        h
+    }
+
+    /// A copy with one pos-plane bit flipped (chaos harness only).
+    pub fn with_flipped_bit(&self, word: usize, bit: u32) -> Self {
+        Self { pos: super::pack::flipped_words(&self.pos, word, bit),
+               ..self.clone() }
+    }
 }
 
 /// LUT GEMV over precomputed pos/neg planes (no byte-ops in the loop).

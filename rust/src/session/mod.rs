@@ -165,6 +165,12 @@ pub struct SubmitOpts {
     /// *continuation* (may be empty when `gen_len > 0`) and is served
     /// on top of the saved state.
     pub resume: Option<u64>,
+    /// Latency budget measured from admission. A request still queued
+    /// when its deadline passes is never stepped — the shard answers
+    /// with a typed `expired` outcome instead
+    /// ([`crate::cluster::ShardOutcome::Expired`]). `None` inherits the
+    /// cluster default (which may itself be "no deadline").
+    pub deadline: Option<std::time::Duration>,
 }
 
 /// How a prepared request starts its slot: fresh (default), from a
@@ -699,7 +705,8 @@ mod tests {
         cache.save_session(fp, 9, state(8, 2.0), 42, -1.5, 7);
         let ps = cache.prepare(fp, req(vec![5, 6], 4),
                                &SubmitOpts { resume: Some(9),
-                                             save_session: Some(9) })
+                                             save_session: Some(9),
+                                             ..Default::default() })
             .unwrap();
         assert_eq!(ps.req.prompt, vec![42, 5, 6], "pending token leads");
         assert_eq!(ps.plan.start_pos, 0);

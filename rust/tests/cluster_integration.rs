@@ -97,7 +97,7 @@ fn cluster_matches_single_server_for_every_shard_count_and_policy() {
                 let mut got: Vec<Response> = report
                     .responses
                     .iter()
-                    .map(|r| r.response.clone())
+                    .map(|r| r.done().expect("served").clone())
                     .collect();
                 got.sort_by_key(|r| r.id);
                 assert_same_responses(&label, &got, &want);
@@ -186,11 +186,11 @@ fn cluster_backpressure_fails_fast_without_corrupting_state() {
     // completes exactly once, none of the rejected ones appear
     let report = cluster.drain().unwrap();
     let mut ids: Vec<u64> =
-        report.responses.iter().map(|r| r.response.id).collect();
+        report.responses.iter().map(|r| r.id()).collect();
     ids.sort_unstable();
     assert_eq!(ids, accepted, "accepted set served exactly once");
     for r in &report.responses {
-        assert_eq!(r.response.generated.len(), 256);
+        assert_eq!(r.done().expect("served").generated.len(), 256);
     }
 }
 
@@ -301,7 +301,7 @@ fn cluster_digest_is_shard_invariant() {
         let got: Vec<Response> = report
             .responses
             .iter()
-            .map(|r| r.response.clone())
+            .map(|r| r.done().expect("served").clone())
             .collect();
         digests.push(digest_responses(got));
     }

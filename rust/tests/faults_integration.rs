@@ -1,0 +1,343 @@
+//! Chaos-harness integration: deterministic fault injection against the
+//! real cluster and front door.
+//!
+//! The scripted failures exercise every robustness layer end to end —
+//! a shard panic is contained, respawned, and bit-invisible in the
+//! greedy digest (zero accepted-request loss); a suspended session
+//! survives the crash and resumes bit-exactly; a flipped plane bit is a
+//! typed [`IntegrityError`] at load, never wrong logits; a zero
+//! deadline expires as a typed outcome without touching a slot, both
+//! in-process and over the wire; the `hello` handshake negotiates the
+//! protocol version and refuses unknown ones without hanging up; and
+//! the writer-side faults (truncated frame, slow reader) fire exactly
+//! once on the scripted frame and nowhere else.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use rbtw::cluster::{run_cluster_load, ClusterOptions, ClusterResponse,
+                    RoutePolicy, ServingCluster, ShardOutcome};
+use rbtw::coordinator::{LoadSpec, Request};
+use rbtw::engine::{BackendKind, BackendSpec, IntegrityError, ModelWeights,
+                   SharedModel};
+use rbtw::faults::{Fault, FaultPlan};
+use rbtw::frontdoor::proto::{read_frame, write_frame};
+use rbtw::frontdoor::{FrontDoor, FrontDoorClient, ServerMsg, WireOutcome,
+                      PROTO_VERSION};
+use rbtw::session::{SessionCache, SubmitOpts};
+
+const KIND: BackendKind = BackendKind::PackedCpu;
+const SEED: u64 = 9;
+
+fn shared_model() -> SharedModel {
+    let w = ModelWeights::synthetic(30, 16, "ter", 0xD0);
+    SharedModel::prepare(&w, KIND, SEED).unwrap()
+}
+
+fn spec(shards: usize, slots: usize) -> BackendSpec {
+    BackendSpec::with(KIND, slots, SEED).with_shards(shards)
+}
+
+fn greedy_load(n: usize) -> (LoadSpec, Vec<Request>) {
+    let load = LoadSpec { n_requests: n, prompt_len: 5, gen_len: 7,
+                          temperature: 0.0, seed: 0x5151 };
+    let requests = load.requests(30);
+    (load, requests)
+}
+
+/// (id, tokens, logprob bits) rows sorted by id — the comparison shape.
+fn rows_of(responses: Vec<ClusterResponse>) -> Vec<(u64, Vec<i32>, u64)> {
+    let mut rows: Vec<_> = responses
+        .into_iter()
+        .map(|cr| {
+            let r = cr.into_done().expect("request not served");
+            (r.id, r.generated, r.prompt_logprob.to_bits())
+        })
+        .collect();
+    rows.sort_by_key(|r| r.0);
+    rows
+}
+
+fn reference_rows(load: &LoadSpec) -> Vec<(u64, Vec<i32>, u64)> {
+    let report = run_cluster_load(&shared_model(), &spec(1, 4),
+                                  RoutePolicy::LeastLoaded, 64, load)
+        .unwrap();
+    rows_of(report.responses)
+}
+
+/// A served front door over a cluster built with `opts`.
+fn serve_with(shards: usize, slots: usize, opts: ClusterOptions)
+    -> (FrontDoor, String) {
+    let cluster = ServingCluster::new_with_options(
+        &shared_model(), &spec(shards, slots), opts, None).unwrap();
+    let fd = FrontDoor::serve(cluster, "127.0.0.1:0").unwrap();
+    let addr = fd.local_addr().to_string();
+    (fd, addr)
+}
+
+#[test]
+fn shard_panic_respawn_is_invisible_in_the_digest() {
+    // shard 0 panics at its 10th engine step; supervision must contain
+    // it, respawn the engine from the shared model, replay the dead
+    // generation's in-flight work, and serve every accepted request
+    // with bit-identical greedy tokens
+    let plan = Arc::new(FaultPlan::new(0, vec![
+        Fault::ShardPanic { shard: 0, step: 10 },
+    ]));
+    let mut cluster = ServingCluster::new_with_options(
+        &shared_model(), &spec(2, 4),
+        ClusterOptions { queue_cap: 64, faults: Some(plan),
+                         ..Default::default() },
+        None).unwrap();
+    assert!(cluster.supervised());
+    let (load, requests) = greedy_load(24);
+    for r in requests {
+        cluster.submit(r).unwrap();
+    }
+    let report = cluster.drain().unwrap();
+    assert!(report.stats.respawns >= 1,
+            "the scripted panic never fired or was not contained \
+             (respawns = {})", report.stats.respawns);
+    let rows = rows_of(report.responses);
+    assert_eq!(rows.len(), 24, "zero accepted-request loss");
+    assert_eq!(rows, reference_rows(&load),
+               "a contained crash + replay must be invisible in the \
+                digest (ids, every token, every logprob mantissa bit)");
+}
+
+#[test]
+fn unsupervised_shard_panic_is_a_typed_drain_error_not_lost_silence() {
+    let plan = Arc::new(FaultPlan::new(0, vec![
+        Fault::ShardPanic { shard: 0, step: 5 },
+    ]));
+    let mut cluster = ServingCluster::new_with_options(
+        &shared_model(), &spec(2, 2),
+        ClusterOptions { queue_cap: 64, supervise: false,
+                         faults: Some(plan), ..Default::default() },
+        None).unwrap();
+    let (_, requests) = greedy_load(16);
+    for r in requests {
+        cluster.submit(r).unwrap();
+    }
+    let err = cluster.drain()
+        .expect_err("an unsupervised shard panic must surface from drain");
+    assert!(format!("{err:#}").contains("panicked"), "err: {err:#}");
+}
+
+#[test]
+fn suspended_session_survives_a_shard_crash_bit_exactly() {
+    const PREFIX: [i32; 6] = [3, 1, 4, 1, 5, 9];
+    const CONT: [i32; 3] = [2, 6, 5];
+    const GEN: usize = 5;
+    const FINAL_ID: u64 = 77;
+    const SID: u64 = 5;
+    // straight-through reference: the whole conversation as one
+    // request, no faults, no suspension
+    let straight = {
+        let mut cluster = ServingCluster::new(
+            &shared_model(), &spec(2, 4), 64, RoutePolicy::LeastLoaded)
+            .unwrap();
+        let mut prompt = PREFIX.to_vec();
+        prompt.extend_from_slice(&CONT);
+        cluster.submit(Request { id: FINAL_ID, prompt, gen_len: GEN,
+                                 temperature: 0.0 }).unwrap();
+        rows_of(cluster.drain().unwrap().responses)
+    };
+    // chaos path: suspend the prefix, crash shard 0 under filler load,
+    // then resume the session on the respawned fleet
+    let plan = Arc::new(FaultPlan::new(0, vec![
+        Fault::ShardPanic { shard: 0, step: 3 },
+    ]));
+    let mut cluster = ServingCluster::new_with_options(
+        &shared_model(), &spec(2, 4),
+        ClusterOptions { queue_cap: 64, faults: Some(plan),
+                         ..Default::default() },
+        Some(SessionCache::new(1 << 20, 4))).unwrap();
+    let rx = cluster.take_responses().unwrap();
+    cluster.try_submit_with(
+        Request { id: 900, prompt: PREFIX.to_vec(), gen_len: 0,
+                  temperature: 0.0 },
+        &SubmitOpts { save_session: Some(SID), ..Default::default() })
+        .unwrap();
+    let first = rx.recv().unwrap();
+    assert_eq!(first.id(), 900);
+    assert!(first.done().expect("suspend served").generated.is_empty());
+    // filler so both shards step well past the scripted crash point
+    for id in 0..8u64 {
+        cluster.submit(Request { id: 100 + id,
+                                 prompt: vec![(id % 30) as i32, 7],
+                                 gen_len: 6, temperature: 0.0 }).unwrap();
+    }
+    for _ in 0..8 {
+        rx.recv().unwrap();
+    }
+    cluster.try_submit_with(
+        Request { id: FINAL_ID, prompt: CONT.to_vec(), gen_len: GEN,
+                  temperature: 0.0 },
+        &SubmitOpts { save_session: Some(SID), resume: Some(SID),
+                      ..Default::default() })
+        .unwrap();
+    let second = rx.recv().unwrap();
+    assert_eq!(second.id(), FINAL_ID);
+    let r = second.done().expect("resume must serve");
+    let resumed = vec![(r.id, r.generated.clone(),
+                        r.prompt_logprob.to_bits())];
+    drop(rx);
+    let report = cluster.drain().unwrap();
+    assert!(report.stats.respawns >= 1,
+            "the crash never happened — the test proved nothing");
+    assert_eq!(resumed, straight,
+               "a session suspended before a shard crash must resume \
+                bit-identically to never suspending at all");
+}
+
+#[test]
+fn corrupt_plane_word_is_a_typed_integrity_error() {
+    let w = ModelWeights::synthetic(30, 16, "ter", 0xD0);
+    let plan = FaultPlan::new(0, vec![
+        Fault::PlaneBitFlip { matrix: 0, word: 0, bit: 5 },
+    ]);
+    let err = SharedModel::prepare_with_faults(&w, KIND, SEED, Some(&plan))
+        .expect_err("a flipped plane bit must refuse to load");
+    let ie = err.downcast_ref::<IntegrityError>().unwrap_or_else(|| {
+        panic!("expected a typed IntegrityError, got: {err:#}")
+    });
+    assert_ne!(ie.expected, ie.actual);
+    assert!(format!("{ie}").contains("fingerprint"), "display: {ie}");
+}
+
+#[test]
+fn zero_deadline_expires_typed_without_touching_a_slot() {
+    // per-submit deadline
+    let mut cluster = ServingCluster::new_with_options(
+        &shared_model(), &spec(1, 2),
+        ClusterOptions { queue_cap: 8, ..Default::default() },
+        None).unwrap();
+    let rx = cluster.take_responses().unwrap();
+    cluster.try_submit_with(
+        Request { id: 41, prompt: vec![1, 2, 3], gen_len: 5,
+                  temperature: 0.0 },
+        &SubmitOpts { deadline: Some(Duration::ZERO),
+                      ..Default::default() })
+        .unwrap();
+    let cr = rx.recv().unwrap();
+    assert_eq!(cr.id(), 41);
+    assert!(matches!(cr.outcome, ShardOutcome::Expired { id: 41 }),
+            "expected a typed expiry, got {:?}", cr.outcome);
+    drop(rx);
+    let report = cluster.drain().unwrap();
+    assert_eq!(report.stats.expired, 1);
+    assert_eq!(report.stats.completed, 0,
+               "an expired request must never have been stepped");
+
+    // the cluster-wide default deadline applies to plain submits too
+    let mut cluster = ServingCluster::new_with_options(
+        &shared_model(), &spec(1, 2),
+        ClusterOptions { queue_cap: 8, deadline: Some(Duration::ZERO),
+                         ..Default::default() },
+        None).unwrap();
+    cluster.submit(Request { id: 42, prompt: vec![1], gen_len: 3,
+                             temperature: 0.0 }).unwrap();
+    let report = cluster.drain().unwrap();
+    assert_eq!(report.stats.expired, 1);
+    assert!(matches!(report.responses[0].outcome,
+                     ShardOutcome::Expired { id: 42 }));
+}
+
+#[test]
+fn hello_negotiates_and_refuses_unknown_versions() {
+    let (fd, addr) = serve_with(1, 2, ClusterOptions {
+        queue_cap: 16, ..Default::default()
+    });
+    let mut client = FrontDoorClient::connect(&addr).unwrap();
+    assert_eq!(client.hello().unwrap(), PROTO_VERSION);
+    // an unknown version gets a typed refusal, not a hangup
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut raw, "hello 99").unwrap();
+    match ServerMsg::parse(&read_frame(&mut raw).unwrap()).unwrap() {
+        ServerMsg::UnsupportedVersion { got, supported } => {
+            assert_eq!((got, supported), (99, PROTO_VERSION));
+        }
+        other => panic!("expected unsupported-version, got {other:?}"),
+    }
+    // the connection survives the refusal
+    write_frame(&mut raw, "ping").unwrap();
+    assert!(matches!(
+        ServerMsg::parse(&read_frame(&mut raw).unwrap()).unwrap(),
+        ServerMsg::Pong));
+    drop(raw);
+    drop(client);
+    fd.drain().unwrap();
+}
+
+#[test]
+fn wire_deadline_expiry_is_a_typed_reply_and_counted() {
+    let (fd, addr) = serve_with(1, 2, ClusterOptions {
+        queue_cap: 16, ..Default::default()
+    });
+    let mut client = FrontDoorClient::connect(&addr).unwrap();
+    let out = client.gen_one(11, 6, 0.0, Some(0), vec![1, 2, 3]).unwrap();
+    assert!(matches!(out, WireOutcome::Expired(11)),
+            "expected `expired 11`, got {out:?}");
+    let m = client.metrics().unwrap();
+    let expired: u64 = m.lines()
+        .find_map(|l| l.strip_prefix("rbtw_cluster_expired "))
+        .expect("rbtw_cluster_expired missing from /metrics")
+        .trim().parse().unwrap();
+    assert!(expired >= 1, "metrics:\n{m}");
+    // a fresh request without a deadline still serves normally
+    let out = client.gen_one(12, 4, 0.0, None, vec![2, 4]).unwrap();
+    assert!(out.done().is_some(), "got {out:?}");
+    drop(client);
+    fd.drain().unwrap();
+}
+
+#[test]
+fn truncated_outbound_frame_cuts_cleanly_and_fires_once() {
+    let plan = Arc::new(FaultPlan::new(0, vec![
+        Fault::TruncateFrame { frame: 0, keep: 2 },
+    ]));
+    let (fd, addr) = serve_with(1, 2, ClusterOptions {
+        queue_cap: 16, faults: Some(plan), ..Default::default()
+    });
+    let mut victim = FrontDoorClient::connect(&addr).unwrap();
+    assert!(victim.ping().is_err(),
+            "a truncated reply must surface as a framing error, not \
+             parse as garbage");
+    // the fault fired exactly once: a fresh connection is untouched
+    let mut fresh = FrontDoorClient::connect(&addr).unwrap();
+    fresh.ping().unwrap();
+    drop(victim);
+    drop(fresh);
+    fd.drain().unwrap();
+}
+
+#[test]
+fn slow_reader_fault_stalls_only_the_scripted_frame() {
+    let plan = Arc::new(FaultPlan::new(0, vec![
+        Fault::SlowReader { frame: 0, delay_ms: 150 },
+    ]));
+    let (fd, addr) = serve_with(1, 2, ClusterOptions {
+        queue_cap: 16, faults: Some(plan), ..Default::default()
+    });
+    let mut client = FrontDoorClient::connect(&addr).unwrap();
+    let t0 = Instant::now();
+    client.ping().unwrap();
+    assert!(t0.elapsed() >= Duration::from_millis(150),
+            "the scripted stall must delay the first reply");
+    // fires exactly once; the connection then serves normally
+    client.ping().unwrap();
+    let (load, requests) = greedy_load(4);
+    let outcomes = client.run_greedy(&requests, 2).unwrap();
+    let mut rows: Vec<_> = outcomes.into_iter()
+        .map(|o| match o {
+            WireOutcome::Done(r) => (r.id, r.tokens, r.logprob_bits),
+            other => panic!("request not served: {other:?}"),
+        })
+        .collect();
+    rows.sort_by_key(|r| r.0);
+    assert_eq!(rows, reference_rows(&load));
+    drop(client);
+    fd.drain().unwrap();
+}

@@ -72,8 +72,10 @@ fn reference_rows(load: &LoadSpec) -> Vec<(u64, Vec<i32>, u64)> {
         .unwrap();
     let mut rows: Vec<_> = report.responses
         .into_iter()
-        .map(|cr| (cr.response.id, cr.response.generated,
-                   cr.response.prompt_logprob.to_bits()))
+        .map(|cr| {
+            let r = cr.into_done().expect("reference run serves everything");
+            (r.id, r.generated, r.prompt_logprob.to_bits())
+        })
         .collect();
     rows.sort_by_key(|r| r.0);
     rows
@@ -186,6 +188,7 @@ fn wire_drain_refuses_new_work_and_completes_accepted() {
     for r in &requests[..5] {
         data.send(&ClientMsg::Gen { id: r.id, gen_len: r.gen_len,
                                     temperature: r.temperature,
+                                    deadline_ms: None,
                                     prompt: r.prompt.clone() }).unwrap();
     }
     let mut ctl = FrontDoorClient::connect(&addr).unwrap();
@@ -194,6 +197,7 @@ fn wire_drain_refuses_new_work_and_completes_accepted() {
     for r in &requests[5..] {
         data.send(&ClientMsg::Gen { id: r.id, gen_len: r.gen_len,
                                     temperature: r.temperature,
+                                    deadline_ms: None,
                                     prompt: r.prompt.clone() }).unwrap();
     }
     // collect exactly one terminal frame per request: the first five
@@ -333,6 +337,7 @@ fn truncated_prefix_and_midstream_disconnect_are_tolerated() {
     for r in &requests {
         ghost.send(&ClientMsg::Gen { id: r.id, gen_len: r.gen_len,
                                      temperature: r.temperature,
+                                     deadline_ms: None,
                                      prompt: r.prompt.clone() }).unwrap();
     }
     drop(ghost);
@@ -356,6 +361,7 @@ fn slow_reader_cannot_stall_other_connections() {
     for r in &requests {
         let msg = ClientMsg::Gen { id: r.id, gen_len: r.gen_len,
                                    temperature: r.temperature,
+                                   deadline_ms: None,
                                    prompt: r.prompt.clone() };
         write_frame(&mut sleeper, &msg.encode()).unwrap();
     }

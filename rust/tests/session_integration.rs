@@ -198,7 +198,7 @@ fn run_straight() -> u64 {
                              temperature: 0.0 }).unwrap();
     let report = cluster.drain().unwrap();
     assert_eq!(report.responses.len(), 1);
-    digest_response(&report.responses[0].response)
+    digest_response(report.responses[0].done().expect("served"))
 }
 
 /// Prefill + suspend on whichever shard the router picks, then retire
@@ -216,21 +216,22 @@ fn run_resume() -> u64 {
         &SubmitOpts { save_session: Some(SID), ..Default::default() })
         .unwrap();
     let first = rx.recv().unwrap();
-    assert_eq!(first.response.id, 900);
-    assert!(first.response.generated.is_empty());
+    assert_eq!(first.id(), 900);
+    assert!(first.done().expect("served").generated.is_empty());
     let suspended_on = first.shard;
     // the shard that held the state retires before the resume arrives
     cluster.remove_shard(suspended_on).unwrap();
     cluster.try_submit_with(
         Request { id: FINAL_ID, prompt: CONT.to_vec(), gen_len: GEN,
                   temperature: 0.0 },
-        &SubmitOpts { save_session: Some(SID), resume: Some(SID) })
+        &SubmitOpts { save_session: Some(SID), resume: Some(SID),
+                      ..Default::default() })
         .unwrap();
     let second = rx.recv().unwrap();
-    assert_eq!(second.response.id, FINAL_ID);
+    assert_eq!(second.id(), FINAL_ID);
     assert_ne!(second.shard, suspended_on,
                "resume must have landed on a different shard");
-    let d = digest_response(&second.response);
+    let d = digest_response(second.done().expect("served"));
     drop(rx);
     cluster.drain().unwrap();
     d
