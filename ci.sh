@@ -238,6 +238,79 @@ if ! grep -qi 'fingerprint' target/corrupt_server.log; then
 fi
 echo "corrupt plane word refused with a typed fingerprint error (exit $CORRUPT_RC)"
 
+# Traced-serve gate: the SAME wire load served with the flight recorder
+# armed (--trace) must produce a greedy digest BIT-IDENTICAL to the
+# untraced in-process digest above — observability is provably
+# non-perturbing or it fails here. The run must also leave a non-empty,
+# parseable Chrome trace with real spans (`rbtw trace-check`), so the
+# gate cannot pass vacuously by recording nothing.
+echo "== traced-serve gate (tracing must be digest-invisible) =="
+rm -f target/trace_server.log target/trace_server.json
+./target/release/rbtw serve synthetic --listen 127.0.0.1:0 \
+    --shards 2 --slots 4 --trace --trace-out target/trace_server.json \
+    > target/trace_server.log < /dev/null &
+SRV=$!
+ADDR=""
+for _ in $(seq 1 100); do
+    ADDR=$(sed -n 's/^listening on //p' target/trace_server.log | head -n1)
+    [ -n "$ADDR" ] && break
+    if ! kill -0 "$SRV" 2>/dev/null; then
+        echo "FAIL: traced serve exited before binding:"
+        cat target/trace_server.log
+        exit 1
+    fi
+    sleep 0.1
+done
+if [ -z "$ADDR" ]; then
+    echo "FAIL: traced serve never printed its address:"
+    cat target/trace_server.log
+    kill "$SRV" 2>/dev/null || true
+    exit 1
+fi
+TRACED_OUT=$(timeout 120 ./target/release/examples/netclient \
+    --connect "$ADDR" --drain)
+if ! wait "$SRV"; then
+    echo "FAIL: traced serve exited non-zero after drain:"
+    cat target/trace_server.log
+    exit 1
+fi
+TRACED_DIGEST=$(printf '%s\n' "$TRACED_OUT" | sed -n 's/^greedy://p')
+if [ -z "$TRACED_DIGEST" ]; then
+    echo "FAIL: traced netclient did not print a greedy digest:"
+    printf '%s\n' "$TRACED_OUT"
+    exit 1
+fi
+if [ "$TRACED_DIGEST" != "$LOCAL_DIGEST" ]; then
+    echo "FAIL: traced digest $TRACED_DIGEST != untraced digest $LOCAL_DIGEST"
+    echo "      (--trace perturbed a greedy response)"
+    exit 1
+fi
+echo "tracing digest-invisible over the wire: $TRACED_DIGEST"
+if [ ! -s target/trace_server.json ]; then
+    echo "FAIL: traced serve wrote no trace file:"
+    cat target/trace_server.log
+    exit 1
+fi
+./target/release/rbtw trace-check target/trace_server.json
+
+# Bench-regression gate: re-measure the GEMM kernel bench and diff the
+# tracked throughput/latency keys against the stored baseline
+# (`rbtw bench-diff` exits non-zero past the tolerance; see
+# RBTW_BENCH_TOLERANCE). First run on a host has no baseline: the gate
+# skips cleanly and stores this run as the baseline for the next one.
+echo "== bench-regression gate (quant_gemm kernels) =="
+cargo bench --bench quant_gemm
+BENCH_BASELINE=target/bench_baseline/BENCH_gemm_kernels.json
+if [ -s "$BENCH_BASELINE" ]; then
+    ./target/release/rbtw bench-diff "$BENCH_BASELINE" \
+        BENCH_gemm_kernels.json
+else
+    echo "no stored baseline — saving this run to $BENCH_BASELINE \
+(regression diff starts next run)"
+    mkdir -p target/bench_baseline
+    cp BENCH_gemm_kernels.json "$BENCH_BASELINE"
+fi
+
 # The seed code predates rustfmt; keep the check advisory unless
 # RBTW_CI_STRICT_FMT=1 (flip once the tree is formatted).
 if cargo fmt --version >/dev/null 2>&1; then

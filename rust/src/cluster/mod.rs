@@ -107,6 +107,7 @@ use crate::coordinator::{InferenceServer, LoadSpec, Request, Response,
                          ServerStats};
 use crate::engine::{from_shared, BackendSpec, SharedModel, ThreadPool};
 use crate::faults::FaultPlan;
+use crate::obs::{EventKind, LogHistogram, Obs};
 use crate::session::{prepare_with, PreparedSubmit, ServerSessions,
                      SessionCache, SubmitOpts, DEFAULT_SESSION_BYTES,
                      DEFAULT_SESSION_GRID};
@@ -310,6 +311,9 @@ pub struct ClusterOptions {
     /// Deterministic fault-injection plan (tests / chaos gate only;
     /// `None` in production — the hooks are zero-cost when absent).
     pub faults: Option<Arc<FaultPlan>>,
+    /// Observability hub (`--trace`); `None` (the default) = tracing
+    /// off, every hook is a no-op branch — see [`crate::obs`].
+    pub obs: Option<Arc<Obs>>,
 }
 
 impl Default for ClusterOptions {
@@ -321,6 +325,7 @@ impl Default for ClusterOptions {
             deadline: None,
             retry: RetrySpec::default(),
             faults: None,
+            obs: None,
         }
     }
 }
@@ -421,6 +426,19 @@ impl LatencyLog {
          LatencySummary::from_ms(&self.run_ms),
          LatencySummary::from_ms(&self.total_ms))
     }
+
+    /// Log-bucketed distributions over the same samples the percentile
+    /// summaries cover (works with tracing off — the log always runs).
+    fn histograms(&self) -> (LogHistogram, LogHistogram, LogHistogram) {
+        let fill = |ms: &[f64]| {
+            let mut h = LogHistogram::latency_ms();
+            for &v in ms {
+                h.observe(v);
+            }
+            h
+        };
+        (fill(&self.queue_ms), fill(&self.run_ms), fill(&self.total_ms))
+    }
 }
 
 /// The sharded serving cluster; see the module docs.
@@ -454,6 +472,9 @@ pub struct ServingCluster {
     deadline: Option<Duration>,
     retry: RetrySpec,
     faults: Option<Arc<FaultPlan>>,
+    obs: Option<Arc<Obs>>,
+    /// `Full` admission refusals absorbed by retry backoff so far.
+    retry_attempts: u64,
     /// Shard-worker respawns performed by supervision (fleet-wide).
     respawns: Arc<AtomicU64>,
     /// Requests answered `Expired` instead of served (fleet-wide).
@@ -499,8 +520,11 @@ impl ServingCluster {
                             opts: ClusterOptions,
                             cache: Option<SessionCache>) -> Result<Self> {
         let ClusterOptions { queue_cap, policy, supervise, deadline,
-                             retry, faults } = opts;
+                             retry, faults, obs } = opts;
         let sessions = cache.map(|c| ServerSessions::new(c, shared));
+        if let Some(s) = &sessions {
+            s.cache.set_obs(obs.clone());
+        }
         let shards = spec.shards;
         anyhow::ensure!(shards >= 1, "need at least one engine shard");
         anyhow::ensure!(shards <= BackendSpec::MAX_SHARDS,
@@ -542,13 +566,15 @@ impl ServingCluster {
         let expired = Arc::new(AtomicU64::new(0));
         let slots = spec.slots.max(1);
         let mut handles: Vec<ShardHandle> = Vec::with_capacity(shards);
-        for (id, server) in servers.into_iter().enumerate() {
+        for (id, mut server) in servers.into_iter().enumerate() {
+            server.set_obs(obs.clone(), id);
             let ctx = ShardContext {
                 inbox_cap,
                 latency: latency.clone(),
                 done: done_tx.clone(),
                 supervise,
                 faults: faults.clone(),
+                obs: obs.clone(),
                 factory: respawn_factory(shared, &shard_spec, slots,
                                          &sessions),
                 respawns: respawns.clone(),
@@ -573,9 +599,10 @@ impl ServingCluster {
         let router = {
             let front_r = front.clone();
             let table_r = table.clone();
+            let obs_r = obs.clone();
             let spawned = std::thread::Builder::new()
                 .name("rbtw-cluster-router".to_string())
-                .spawn(move || router_loop(front_r, table_r, policy));
+                .spawn(move || router_loop(front_r, table_r, policy, obs_r));
             match spawned {
                 Ok(h) => h,
                 Err(e) => {
@@ -614,6 +641,8 @@ impl ServingCluster {
             deadline,
             retry,
             faults,
+            obs,
+            retry_attempts: 0,
             respawns,
             expired,
         })
@@ -642,6 +671,16 @@ impl ServingCluster {
     /// The active fault-injection plan, if any (chaos harness).
     pub fn faults(&self) -> Option<Arc<FaultPlan>> {
         self.faults.clone()
+    }
+
+    /// The observability hub, if tracing is on (see [`crate::obs`]).
+    pub fn obs(&self) -> Option<Arc<Obs>> {
+        self.obs.clone()
+    }
+
+    /// `Full` admission refusals absorbed by retry backoff so far.
+    pub fn retry_attempts(&self) -> u64 {
+        self.retry_attempts
     }
 
     /// Verified integrity fingerprint of the packed serving bits (see
@@ -737,10 +776,16 @@ impl ServingCluster {
     /// resumed session is not pinned to the shard that suspended it.
     pub fn try_submit_with(&mut self, req: Request, opts: &SubmitOpts)
         -> std::result::Result<(), SubmitRefused> {
+        let rid = req.id;
         let ps = match prepare_with(self.sessions.as_ref(), self.vocab,
                                     req, opts) {
             Ok(ps) => ps,
-            Err(e) => return Err(SubmitRefused::Invalid(format!("{e:#}"))),
+            Err(e) => {
+                if let Some(obs) = &self.obs {
+                    obs.event(rid, EventKind::Refused { reason: "invalid" });
+                }
+                return Err(SubmitRefused::Invalid(format!("{e:#}")));
+            }
         };
         let now = Instant::now();
         let budget = opts.deadline.or(self.deadline);
@@ -759,18 +804,34 @@ impl ServingCluster {
             match self.front.try_push(item) {
                 Ok(()) => {
                     self.submitted += 1;
+                    if let Some(obs) = &self.obs {
+                        obs.event(rid, EventKind::Admitted);
+                    }
                     return Ok(());
                 }
                 Err((_, PushRefused::Closed)) => {
+                    if let Some(obs) = &self.obs {
+                        obs.event(rid,
+                                  EventKind::Refused { reason: "draining" });
+                    }
                     return Err(SubmitRefused::Draining);
                 }
                 Err((refused, PushRefused::Full)) => {
                     if tries >= self.retry.attempts {
+                        if let Some(obs) = &self.obs {
+                            obs.event(rid,
+                                      EventKind::Refused { reason: "full" });
+                        }
                         return Err(SubmitRefused::Full {
                             pending: self.front.len(),
                         });
                     }
                     tries += 1;
+                    self.retry_attempts += 1;
+                    if let Some(obs) = &self.obs {
+                        obs.event(rid, EventKind::Retry {
+                            attempt: tries as u32 });
+                    }
                     std::thread::sleep(backoff);
                     backoff = (backoff * 2).min(RetrySpec::MAX_BACKOFF);
                     item = refused;
@@ -820,12 +881,14 @@ impl ServingCluster {
             .context("cluster response channel gone")?
             .clone();
         let id = self.next_shard_id;
+        server.set_obs(self.obs.clone(), id);
         let ctx = ShardContext {
             inbox_cap: self.inbox_cap,
             latency: self.latency.clone(),
             done,
             supervise: self.supervise,
             faults: self.faults.clone(),
+            obs: self.obs.clone(),
             factory: respawn_factory(&self.shared, &self.shard_spec,
                                      self.slots_per_shard, &self.sessions),
             respawns: self.respawns.clone(),
@@ -940,8 +1003,14 @@ impl ServingCluster {
     /// against the shared wall clock and the full completion-latency log.
     fn assemble_stats(&self, rows: Vec<ShardStats>) -> ClusterStats {
         let wall_s = self.started.elapsed().as_secs_f64();
-        let (queue, run, total) = self.latency.lock().unwrap().summaries();
+        let (queue, run, total, queue_hist, run_hist, total_hist) = {
+            let log = self.latency.lock().unwrap();
+            let (q, r, t) = log.summaries();
+            let (qh, rh, th) = log.histograms();
+            (q, r, t, qh, rh, th)
+        };
         let mut stats = ClusterStats { wall_s, queue, run, total,
+                                       queue_hist, run_hist, total_hist,
                                        ..ClusterStats::default() };
         let mut all = self.retired.clone();
         all.extend(rows);
@@ -959,6 +1028,10 @@ impl ServingCluster {
         stats.sessions = self.sessions.as_ref().map(|s| s.cache.counters());
         stats.respawns = self.respawns.load(Ordering::SeqCst);
         stats.expired = self.expired.load(Ordering::SeqCst);
+        stats.retry_attempts = self.retry_attempts;
+        stats.stages = self.obs.as_ref()
+            .map(|o| o.stage_snapshots())
+            .unwrap_or_default();
         stats
     }
 }
@@ -987,6 +1060,7 @@ struct ShardContext {
     done: mpsc::Sender<ClusterResponse>,
     supervise: bool,
     faults: Option<Arc<FaultPlan>>,
+    obs: Option<Arc<Obs>>,
     /// Builds a replacement engine after a contained panic: a
     /// [`from_shared`] clone — plane-`Arc` refcount bump, no weight
     /// copy — sharing the same session cache.
@@ -1034,7 +1108,8 @@ fn spawn_shard(id: usize, server: InferenceServer, ctx: ShardContext)
 }
 
 fn router_loop(front: Arc<BoundedQueue<Routed>>,
-               table: Arc<Mutex<Vec<RouteEntry>>>, policy: RoutePolicy) {
+               table: Arc<Mutex<Vec<RouteEntry>>>, policy: RoutePolicy,
+               obs: Option<Arc<Obs>>) {
     let mut rr = 0usize;
     while let Some(first) = front.pop_wait() {
         let mut item = first;
@@ -1079,10 +1154,16 @@ fn router_loop(front: Arc<BoundedQueue<Routed>>,
             };
             load.fetch_add(1, Ordering::SeqCst);
             routed.fetch_add(1, Ordering::SeqCst);
+            let rid = item.ps.req.id;
             // a full inbox blocks here — pressure propagates to the
             // front door, which is where submit() fails fast
             match inbox.push_wait(item) {
-                Ok(()) => break,
+                Ok(()) => {
+                    if let Some(obs) = &obs {
+                        obs.event(rid, EventKind::Routed { shard: id });
+                    }
+                    break;
+                }
                 Err(refused) => {
                     // inbox closed under us: the shard was removed, or
                     // its worker died (the exit guard closes its inbox
@@ -1152,6 +1233,7 @@ fn shard_worker(shard: usize, server: InferenceServer,
     // crash accounting is monotonic, not exactly-once.
     let mut base = ServerStats::default();
     let mut steps: u64 = 0;
+    let mut generation: u64 = 0;
     let mut server = Some(server);
     loop {
         let mut srv = server.take().expect("serve generation owns a server");
@@ -1171,10 +1253,15 @@ fn shard_worker(shard: usize, server: InferenceServer,
                 // final word; fold it into the base so totals only grow
                 base = counters.snapshot();
                 ctx.respawns.fetch_add(1, Ordering::SeqCst);
+                generation += 1;
+                if let Some(obs) = &ctx.obs {
+                    obs.event(0, EventKind::Respawn { shard, generation });
+                }
                 let mut rebuilt = None;
                 for attempt in 0u32..8 {
                     match (ctx.factory)() {
-                        Ok(s) => {
+                        Ok(mut s) => {
+                            s.set_obs(ctx.obs.clone(), shard);
                             rebuilt = Some(s);
                             break;
                         }
@@ -1213,10 +1300,16 @@ fn admit(shard: usize, server: &mut InferenceServer,
          retained: &mut BTreeMap<u64, Routed>, load: &AtomicU64,
          ctx: &ShardContext, r: Routed, replayed: bool) {
     if !replayed {
+        if let Some(obs) = &ctx.obs {
+            obs.event(r.ps.req.id, EventKind::Dequeued { shard });
+        }
         if let Some(dl) = r.deadline {
             if Instant::now() >= dl {
                 load.fetch_sub(1, Ordering::SeqCst);
                 ctx.expired.fetch_add(1, Ordering::SeqCst);
+                if let Some(obs) = &ctx.obs {
+                    obs.event(r.ps.req.id, EventKind::Expired { shard });
+                }
                 let _ = ctx.done.send(ClusterResponse {
                     shard,
                     outcome: ShardOutcome::Expired { id: r.ps.req.id },
@@ -1318,6 +1411,23 @@ pub fn run_cluster_load(shared: &SharedModel, spec: &BackendSpec,
                         load: &LoadSpec) -> Result<ClusterReport> {
     let mut cluster = ServingCluster::new(
         shared, spec, queue_cap.max(load.n_requests).max(1), policy)?;
+    for req in load.requests(cluster.vocab()) {
+        cluster.submit(req)?;
+    }
+    cluster.drain()
+}
+
+/// [`run_cluster_load`] with full [`ClusterOptions`]: the same
+/// byte-identical request set over a cluster with tracing,
+/// supervision, deadlines or fault plans armed. The obs-equivalence
+/// gates drive tracing through this (`opts.queue_cap` is clamped up to
+/// the load size, matching [`run_cluster_load`]).
+pub fn run_cluster_load_with(shared: &SharedModel, spec: &BackendSpec,
+                             mut opts: ClusterOptions, load: &LoadSpec)
+    -> Result<ClusterReport> {
+    opts.queue_cap = opts.queue_cap.max(load.n_requests).max(1);
+    let mut cluster =
+        ServingCluster::new_with_options(shared, spec, opts, None)?;
     for req in load.requests(cluster.vocab()) {
         cluster.submit(req)?;
     }
@@ -1754,6 +1864,37 @@ mod tests {
         assert_eq!(cluster.retry(), RetrySpec::default());
         assert!(cluster.default_deadline().is_none());
         assert!(cluster.faults().is_none());
+        assert!(cluster.obs().is_none(),
+                "tracing must default off (every hook a None branch)");
         drop(cluster);
+    }
+
+    #[test]
+    fn traced_cluster_spans_and_retry_attempts_surface_in_stats() {
+        let shared = shared_model();
+        let spec = BackendSpec::with(BackendKind::PackedCpu, 2, 7);
+        let obs = Obs::new(&crate::obs::ObsSpec::default());
+        let mut cluster = ServingCluster::new_with_options(
+            &shared, &spec,
+            ClusterOptions { queue_cap: 8, obs: Some(obs.clone()),
+                             ..ClusterOptions::default() },
+            None).unwrap();
+        assert!(cluster.obs().is_some());
+        for id in 0..6u64 {
+            cluster.submit(greedy(id)).unwrap();
+        }
+        let report = cluster.drain().unwrap();
+        assert_eq!(report.stats.completed, 6);
+        // stats carry the observability surfaces end to end
+        assert_eq!(report.stats.retry_attempts, 0);
+        assert_eq!(report.stats.total_hist.total(), 6,
+                   "one total-latency observation per request");
+        assert!(!report.stats.stages.is_empty(),
+                "per-shard stage breakdown missing from stats");
+        let spans = obs.completed_spans();
+        assert_eq!(spans.len(), 6, "one completed span per request");
+        for s in &spans {
+            assert!(s.done_us.is_some() && s.scheduled_us.is_some());
+        }
     }
 }

@@ -2,6 +2,7 @@
 //! whole-cluster throughput and latency percentiles.
 
 use crate::coordinator::ServerStats;
+use crate::obs::{LogHistogram, ShardStages};
 use crate::session::SessionCounters;
 use crate::util::stats::LatencySummary;
 
@@ -50,6 +51,18 @@ pub struct ClusterStats {
     /// Requests answered with a typed `Expired` outcome instead of
     /// being served (their deadline passed while still queued).
     pub expired: u64,
+    /// `Full` admission refusals absorbed by retry backoff
+    /// ([`super::RetrySpec`]) before the request was accepted/refused.
+    pub retry_attempts: u64,
+    /// Per-shard engine stage-time breakdown (x-GEMM / gate-GEMM /
+    /// gate-tail / LM-head); empty unless tracing is on
+    /// ([`crate::obs`]).
+    pub stages: Vec<ShardStages>,
+    /// Log-bucketed distributions over the same completion-latency
+    /// samples the percentile summaries cover (always populated).
+    pub queue_hist: LogHistogram,
+    pub run_hist: LogHistogram,
+    pub total_hist: LogHistogram,
 }
 
 impl ClusterStats {

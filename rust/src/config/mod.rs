@@ -190,6 +190,11 @@ pub struct ServeSpec {
     /// in-flight work bit-identically. Off = a worker panic fails the
     /// whole drain (the pre-supervision contract).
     pub supervise: bool,
+    /// Observability ([`crate::obs`]): per-request spans, the flight
+    /// recorder and the engine stage-time breakdown. Off by default —
+    /// every hook then compiles down to a `None` check; greedy digests
+    /// are bit-identical either way.
+    pub trace: bool,
 }
 
 impl Default for ServeSpec {
@@ -211,6 +216,7 @@ impl Default for ServeSpec {
             deadline_ms: 0,
             retries: 0,
             supervise: true,
+            trace: false,
         }
     }
 }
@@ -355,6 +361,9 @@ impl Config {
             }
             if let Some(v) = s.get("supervise") {
                 spec.supervise = v.as_bool().context("supervise")?;
+            }
+            if let Some(v) = s.get("trace") {
+                spec.trace = v.as_bool().context("trace")?;
             }
         }
         Ok(spec)
@@ -623,6 +632,17 @@ mod tests {
             .serve_spec(ServeSpec::default())
             .is_err());
         assert!(Config::parse("[serve]\nsupervise = 1\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        // tracing: off by default (zero-cost hooks), a plain bool knob
+        assert!(!ServeSpec::default().trace);
+        let spec = Config::parse("[serve]\ntrace = true\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .unwrap();
+        assert!(spec.trace);
+        assert!(Config::parse("[serve]\ntrace = 1\n")
             .unwrap()
             .serve_spec(ServeSpec::default())
             .is_err());

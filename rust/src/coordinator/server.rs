@@ -29,11 +29,13 @@
 use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::engine::{InferBackend, PjrtDense};
+use crate::obs::{EventKind, Obs};
 use crate::runtime::Engine;
 use crate::session::{prepare_with, PreparedSubmit, ServerSessions,
                      SubmitOpts};
@@ -112,6 +114,11 @@ pub struct InferenceServer {
     pub done_rx: mpsc::Receiver<Response>,
     rng: Rng,
     pub stats: ServerStats,
+    /// Observability hub; `None` (the default) = tracing off, no hook
+    /// takes a timestamp. See [`crate::obs`].
+    obs: Option<Arc<Obs>>,
+    /// This server's shard id in span/stage attribution (0 standalone).
+    obs_shard: usize,
 }
 
 impl InferenceServer {
@@ -134,6 +141,8 @@ impl InferenceServer {
             done_rx,
             rng: Rng::new(0x5E17E),
             stats: ServerStats::default(),
+            obs: None,
+            obs_shard: 0,
         }
     }
 
@@ -147,6 +156,16 @@ impl InferenceServer {
     /// The attached session-cache handle, if any.
     pub fn sessions(&self) -> Option<&ServerSessions> {
         self.sessions.as_ref()
+    }
+
+    /// Attach (or detach) the observability hub, attributing this
+    /// server's spans and engine-stage time to `shard`. Also hands the
+    /// backend its per-shard stage accumulator (detached on `None`).
+    pub fn set_obs(&mut self, obs: Option<Arc<Obs>>, shard: usize) {
+        self.backend
+            .set_stage_obs(obs.as_ref().map(|o| o.stage_accum(shard)));
+        self.obs = obs;
+        self.obs_shard = shard;
     }
 
     /// Back-compat constructor: serve `artifact` on the dense PJRT
@@ -245,6 +264,7 @@ impl InferenceServer {
                 if let Some((ps, submitted)) = self.queue.pop_front() {
                     let PreparedSubmit { req, plan, capture, save } = ps;
                     let first = req.prompt[plan.start_pos];
+                    let rid = req.id;
                     self.slots[i] = Some(Slot {
                         started: Instant::now(),
                         submitted,
@@ -258,6 +278,10 @@ impl InferenceServer {
                         save,
                         req,
                     });
+                    if let Some(obs) = &self.obs {
+                        obs.event(rid, EventKind::Scheduled {
+                            shard: self.obs_shard, slot: i });
+                    }
                 }
             }
         }
@@ -313,6 +337,12 @@ impl InferenceServer {
                 let next = sample_token(row, slot.req.temperature, &mut self.rng);
                 slot.generated.push(next);
                 slot.last_token = next;
+                if slot.generated.len() == 1 {
+                    if let Some(obs) = &self.obs {
+                        obs.event(slot.req.id, EventKind::FirstToken {
+                            shard: self.obs_shard, slot: i });
+                    }
+                }
             }
             let done = slot.pos + 1 >= slot.req.prompt.len()
                 && slot.generated.len() >= slot.req.gen_len;
@@ -339,6 +369,11 @@ impl InferenceServer {
                     run_time: s.started.elapsed(),
                     engine_steps: s.steps,
                 };
+                if let Some(obs) = &self.obs {
+                    obs.event(resp.id, EventKind::Done {
+                        shard: self.obs_shard, slot: i,
+                        tokens: resp.generated.len() });
+                }
                 let _ = self.done_tx.send(resp);
                 self.stats.completed += 1;
             }

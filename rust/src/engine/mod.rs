@@ -212,6 +212,17 @@ pub trait InferBackend {
     /// untouched.
     fn step_batch(&mut self, tokens: &[Option<i32>], logits: &mut [f32])
         -> Result<()>;
+
+    /// Attach (or detach) a per-shard stage-time accumulator
+    /// ([`crate::obs::StageAccum`]): backends that dispatch in stages
+    /// time each stage into it. Default: no-op (backends without stage
+    /// structure, e.g. the PJRT executable, record nothing). With
+    /// `None` attached — the default — stepping takes no timestamps
+    /// (the zero-cost-when-off tracing contract).
+    fn set_stage_obs(&mut self,
+                     accum: Option<std::sync::Arc<crate::obs::StageAccum>>) {
+        let _ = accum;
+    }
 }
 
 impl<B: InferBackend + ?Sized> InferBackend for Box<B> {
@@ -251,6 +262,11 @@ impl<B: InferBackend + ?Sized> InferBackend for Box<B> {
     fn step_batch(&mut self, tokens: &[Option<i32>], logits: &mut [f32])
         -> Result<()> {
         (**self).step_batch(tokens, logits)
+    }
+
+    fn set_stage_obs(&mut self,
+                     accum: Option<std::sync::Arc<crate::obs::StageAccum>>) {
+        (**self).set_stage_obs(accum)
     }
 }
 

@@ -41,6 +41,7 @@
 //! 12× saving of §6 — plus the (small) dense head.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -48,6 +49,7 @@ use super::pool::{shard_range, ThreadPool};
 use super::shared::SharedModel;
 use super::weights::ModelWeights;
 use super::{BackendKind, BackendSpec, InferBackend};
+use crate::obs::{Stage, StageAccum};
 use crate::quant::gemm::gemm_f32_bias_cols;
 use crate::quant::{gemv_f32, GemmScratch, Packed, PackedStack,
                    RecurrentCell, SharedOut};
@@ -114,6 +116,25 @@ pub struct PackedBackend {
     hw_b: Vec<f32>,
     /// per-slot path scratch: one layer-output h vector.
     x_slot: Vec<f32>,
+    /// Per-shard stage-time accumulator (tracing). `None` — the
+    /// default — means stepping takes NO timestamps: the only cost of
+    /// the hooks is this pointer test.
+    stage_obs: Option<Arc<StageAccum>>,
+}
+
+/// Clock one pooled stage into the attached accumulator; reads no
+/// clock at all when tracing is off.
+#[inline]
+fn timed_stage(stage_obs: &Option<Arc<StageAccum>>, stage: Stage,
+               f: impl FnOnce()) {
+    match stage_obs {
+        Some(acc) => {
+            let t0 = Instant::now();
+            f();
+            acc.add(stage, t0.elapsed());
+        }
+        None => f(),
+    }
 }
 
 impl PackedBackend {
@@ -182,6 +203,7 @@ impl PackedBackend {
             xw_b: vec![],
             hw_b: vec![],
             x_slot: vec![],
+            stage_obs: None,
         })
     }
 
@@ -298,9 +320,11 @@ impl PackedBackend {
             if l == 0 {
                 cell.wx().gather_rows(&self.toks, &mut self.xw_b[..nb * gw]);
             } else {
-                pooled_gemm_cols(&self.pool, &mut self.gemm_scratch,
-                                 cell.wx(), &self.xin[..nb * hid], nb,
-                                 &mut self.xw_b[..nb * gw]);
+                timed_stage(&self.stage_obs, Stage::XGemm, || {
+                    pooled_gemm_cols(&self.pool, &mut self.gemm_scratch,
+                                     cell.wx(), &self.xin[..nb * hid], nb,
+                                     &mut self.xw_b[..nb * gw]);
+                });
             }
             // recurrent gate GEMM, output columns sharded (one plane
             // pass per shard per step — see `pooled_gemm_cols`)
@@ -318,9 +342,11 @@ impl PackedBackend {
                     }
                     &self.hin[..nb * hid]
                 };
-                pooled_gemm_cols(&self.pool, &mut self.gemm_scratch,
-                                 cell.wh(), hin, nb,
-                                 &mut self.hw_b[..nb * gw]);
+                timed_stage(&self.stage_obs, Stage::GateGemm, || {
+                    pooled_gemm_cols(&self.pool, &mut self.gemm_scratch,
+                                     cell.wh(), hin, nb,
+                                     &mut self.hw_b[..nb * gw]);
+                });
             }
             // folded-BN gate tail, active rows sharded (disjoint row
             // chunks, so plain split borrows suffice)
@@ -338,7 +364,9 @@ impl PackedBackend {
                         cell.gate_tail_rows(xw_s, hw_s, st_s);
                     }));
                 }
-                self.pool.run(jobs);
+                timed_stage(&self.stage_obs, Stage::GateTail, || {
+                    self.pool.run(jobs);
+                });
             }
             // this layer's output h becomes the next layer's dense
             // input (and, after the last layer, the LM head input)
@@ -380,7 +408,9 @@ impl PackedBackend {
                     }
                 }));
             }
-            self.pool.run(jobs);
+            timed_stage(&self.stage_obs, Stage::LmHead, || {
+                self.pool.run(jobs);
+            });
         }
     }
 }
@@ -489,6 +519,10 @@ impl InferBackend for PackedBackend {
             self.step_per_slot(tokens, logits);
         }
         Ok(())
+    }
+
+    fn set_stage_obs(&mut self, accum: Option<Arc<StageAccum>>) {
+        self.stage_obs = accum;
     }
 }
 

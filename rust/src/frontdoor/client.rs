@@ -299,13 +299,45 @@ impl FrontDoorClient {
         }
     }
 
-    /// Fetch the `/metrics` text snapshot.
+    /// Fetch the `/metrics` text snapshot, reassembling continuation
+    /// chunks (`metrics-more` frames) until the final `metrics` frame.
     pub fn metrics(&mut self) -> Result<String> {
         self.send(&ClientMsg::Metrics)?;
-        match self.recv()? {
-            ServerMsg::Metrics { text } => Ok(text),
-            ServerMsg::Error { msg, .. } => bail!("metrics refused: {msg}"),
-            other => bail!("expected metrics, got {other:?}"),
+        let mut out = String::new();
+        loop {
+            match self.recv()? {
+                ServerMsg::MetricsMore { text } => out.push_str(&text),
+                ServerMsg::Metrics { text } => {
+                    out.push_str(&text);
+                    return Ok(out);
+                }
+                ServerMsg::Error { msg, .. } => {
+                    bail!("metrics refused: {msg}")
+                }
+                other => bail!("expected metrics, got {other:?}"),
+            }
+        }
+    }
+
+    /// Fetch the flight-recorder dump (Chrome trace-event JSON),
+    /// reassembling continuation chunks (`trace-more` frames) until the
+    /// final `trace` frame. Errors when the server runs with tracing
+    /// off.
+    pub fn trace(&mut self) -> Result<String> {
+        self.send(&ClientMsg::Trace)?;
+        let mut out = String::new();
+        loop {
+            match self.recv()? {
+                ServerMsg::TraceMore { text } => out.push_str(&text),
+                ServerMsg::Trace { text } => {
+                    out.push_str(&text);
+                    return Ok(out);
+                }
+                ServerMsg::Error { msg, .. } => {
+                    bail!("trace refused: {msg}")
+                }
+                other => bail!("expected trace, got {other:?}"),
+            }
         }
     }
 

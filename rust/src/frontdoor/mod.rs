@@ -85,6 +85,7 @@ use crate::cluster::{ClusterReport, ClusterResponse, ClusterStats,
                      ServingCluster, ShardOutcome, SubmitRefused};
 use crate::coordinator::Request;
 use crate::faults::FaultPlan;
+use crate::obs::{EventKind, Obs, Registry, Stage};
 use crate::session::SubmitOpts;
 use proto::{read_frame, write_frame};
 
@@ -126,6 +127,10 @@ struct Shared {
     /// Deterministic fault-injection plan (chaos testing only; `None`
     /// in production, and every hook is behind that `None` check).
     faults: Option<Arc<FaultPlan>>,
+    /// Observability handle shared with the cluster ([`crate::obs`]);
+    /// `None` when tracing is off, and every hook is behind that
+    /// `None` check — same zero-cost discipline as `faults`.
+    obs: Option<Arc<Obs>>,
 }
 
 /// The running TCP front door; see the module docs.
@@ -147,6 +152,7 @@ impl FrontDoor {
             .context("reading the front door's local address")?;
         let responses = cluster.take_responses()?;
         let faults = cluster.faults();
+        let obs = cluster.obs();
         let shared = Arc::new(Shared {
             cluster: Mutex::new(Some(cluster)),
             conns: Mutex::new(HashMap::new()),
@@ -159,6 +165,7 @@ impl FrontDoor {
             drain_flag: Mutex::new(false),
             drain_cv: Condvar::new(),
             faults,
+            obs,
         });
         let pump = {
             let sh = shared.clone();
@@ -224,6 +231,13 @@ impl FrontDoor {
     /// returns); errors once the cluster is draining.
     pub fn metrics_text(&self) -> Result<String> {
         metrics_text(&self.shared)
+    }
+
+    /// The flight-recorder dump as Chrome trace-event JSON (same
+    /// payload the wire `trace` command returns); `None` when the
+    /// server runs with tracing off.
+    pub fn trace_json(&self) -> Option<String> {
+        self.shared.obs.as_ref().map(|o| o.chrome_trace())
     }
 
     /// Operator surface for the stdin console: grow the live fleet.
@@ -419,12 +433,29 @@ fn handle_frame(line: &str, conn_id: u64, tx: &mpsc::SyncSender<ServerMsg>,
         }
         ClientMsg::Ping => send(ServerMsg::Pong),
         ClientMsg::Metrics => {
-            let reply = match metrics_text(shared) {
-                Ok(text) => ServerMsg::Metrics { text },
-                Err(e) => ServerMsg::Error { id: None,
-                                             msg: format!("{e:#}") },
-            };
-            send(reply)
+            match metrics_text(shared) {
+                Ok(text) => send_chunked(
+                    &send, &text,
+                    |text| ServerMsg::MetricsMore { text },
+                    |text| ServerMsg::Metrics { text }),
+                Err(e) => send(ServerMsg::Error { id: None,
+                                                  msg: format!("{e:#}") }),
+            }
+        }
+        ClientMsg::Trace => {
+            match &shared.obs {
+                Some(obs) => {
+                    let text = obs.chrome_trace();
+                    send_chunked(&send, &text,
+                                 |text| ServerMsg::TraceMore { text },
+                                 |text| ServerMsg::Trace { text })
+                }
+                None => send(ServerMsg::Error {
+                    id: None,
+                    msg: "tracing disabled (start the server with --trace)"
+                        .to_string(),
+                }),
+            }
         }
         ClientMsg::AddShard => {
             let res = {
@@ -504,6 +535,45 @@ fn handle_frame(line: &str, conn_id: u64, tx: &mpsc::SyncSender<ServerMsg>,
                             ..SubmitOpts::default() })
         }
     }
+}
+
+/// Per-chunk payload budget for chunked replies: [`MAX_FRAME`] minus
+/// headroom for the verb prefix (`metrics-more ` / `trace-more `).
+const CHUNK_BUDGET: usize = MAX_FRAME - 64;
+
+/// Split a payload into frame-sized chunks on char boundaries. Always
+/// returns at least one (possibly empty) chunk; all but the last go
+/// out as `-more` continuation frames.
+fn chunk_text(text: &str) -> Vec<&str> {
+    let mut chunks = vec![];
+    let mut rest = text;
+    while rest.len() > CHUNK_BUDGET {
+        let mut cut = CHUNK_BUDGET;
+        while !rest.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        let (head, tail) = rest.split_at(cut);
+        chunks.push(head);
+        rest = tail;
+    }
+    chunks.push(rest);
+    chunks
+}
+
+/// Queue a possibly-multi-frame payload on the outbox: zero or more
+/// `more` continuation frames, then exactly one `last` frame. Returns
+/// false when the outbox is full or its writer is gone.
+fn send_chunked(send: &dyn Fn(ServerMsg) -> bool, text: &str,
+                more: fn(String) -> ServerMsg,
+                last: fn(String) -> ServerMsg) -> bool {
+    let chunks = chunk_text(text);
+    let (final_chunk, cont) = chunks.split_last().unwrap();
+    for c in cont {
+        if !send(more(c.to_string())) {
+            return false;
+        }
+    }
+    send(last(final_chunk.to_string()))
 }
 
 /// Shared admission path for `gen` / `session` / `resume` frames:
@@ -600,6 +670,9 @@ fn pump_loop(shared: Arc<Shared>, rx: mpsc::Receiver<ClusterResponse>)
             // client hung up before its answer; the work is complete
             // and accounted — only the delivery is dropped
             shared.dropped_deliveries.fetch_add(1, Ordering::SeqCst);
+            if let Some(obs) = &shared.obs {
+                obs.event(cr.id(), EventKind::Shed { conn: p.conn });
+            }
             continue;
         };
         let mut ok = true;
@@ -636,6 +709,9 @@ fn pump_loop(shared: Arc<Shared>, rx: mpsc::Receiver<ClusterResponse>)
             // THIS connection so its backlog cannot stall the pump — and
             // through it every other client's stream
             shared.dropped_deliveries.fetch_add(1, Ordering::SeqCst);
+            if let Some(obs) = &shared.obs {
+                obs.event(cr.id(), EventKind::Shed { conn: p.conn });
+            }
             if let Some(h) = shared.conns.lock().unwrap().remove(&p.conn) {
                 let _ = h.stream.shutdown(Shutdown::Both);
             }
@@ -680,73 +756,163 @@ fn metrics_text(shared: &Shared) -> Result<String> {
     Ok(render_metrics(&stats, &meta))
 }
 
-/// Render the `/metrics` text: one `name value` (or
-/// `name{label} value`) pair per line, in the flat text style scrapers
-/// expect. Per-shard liveness uses a 0/1 gauge so a scrape shows the
-/// changed shard set after add/remove (retired shards stay visible at
-/// 0 with their final counters).
+/// Render the `/metrics` text through the typed [`Registry`]
+/// ([`crate::obs`]): Prometheus text format with `# HELP` / `# TYPE`
+/// headers, log-bucketed latency histograms, and (when tracing is on)
+/// the per-shard engine stage-time breakdown. Per-shard liveness uses
+/// a 0/1 gauge so a scrape shows the changed shard set after
+/// add/remove (retired shards stay visible at 0 with their final
+/// counters). The reply is chunked over the wire, so the payload may
+/// exceed one frame.
 fn render_metrics(stats: &ClusterStats, meta: &MetricsMeta) -> String {
-    use std::fmt::Write as _;
-    let mut out = String::with_capacity(1024);
-    let mut line = |s: String| {
-        out.push_str(&s);
-        out.push('\n');
-    };
-    line(format!("rbtw_frontdoor_connections {}", meta.connections));
-    line(format!("rbtw_frontdoor_dropped_deliveries {}",
-                 meta.dropped_deliveries));
-    line(format!("rbtw_cluster_draining {}", meta.draining as u8));
-    line(format!("rbtw_cluster_live_shards {}", meta.live_shards.len()));
-    line(format!("rbtw_cluster_queue_depth {}", meta.queue_depth));
-    line(format!("rbtw_cluster_queue_capacity {}", meta.queue_capacity));
-    line(format!("rbtw_cluster_submitted {}", meta.submitted));
-    line(format!("rbtw_cluster_completed {}", stats.completed));
-    line(format!("rbtw_cluster_tokens_processed {}",
-                 stats.tokens_processed));
-    line(format!("rbtw_cluster_engine_steps {}", stats.engine_steps));
-    line(format!("rbtw_cluster_weight_bytes {}", meta.weight_bytes));
-    line(format!("rbtw_cluster_tokens_per_sec {:.3}",
-                 stats.tokens_per_sec));
-    // robustness gauges (aggregate-only: the per-shard block below is
-    // the frame-budget hot spot, these three lines are flat)
-    line(format!("rbtw_cluster_respawns {}", stats.respawns));
-    line(format!("rbtw_cluster_expired {}", stats.expired));
-    line(format!("rbtw_cluster_fingerprint {:016x}", meta.fingerprint));
-    if let Some(ss) = &stats.sessions {
-        line(format!("rbtw_session_prefix_hits {}", ss.prefix_hits));
-        line(format!("rbtw_session_prefix_misses {}", ss.prefix_misses));
-        line(format!("rbtw_session_evictions {}", ss.evictions));
-        line(format!("rbtw_session_entries {}", ss.entries));
-        line(format!("rbtw_session_sessions {}", ss.sessions));
-        line(format!("rbtw_session_resident_bytes {}",
-                     ss.resident_bytes));
+    // exhaustive destructures: adding a field to ClusterStats or
+    // MetricsMeta without rendering it (or deliberately discarding it
+    // here) is a compile error, so counters cannot silently stop at
+    // the stats layer
+    let ClusterStats {
+        shards, completed, tokens_processed, engine_steps, wall_s,
+        tokens_per_sec, queue, run, total, sessions, respawns, expired,
+        retry_attempts, stages, queue_hist, run_hist, total_hist,
+    } = stats;
+    let MetricsMeta {
+        live_shards, queue_depth, queue_capacity, submitted, weight_bytes,
+        draining, connections, dropped_deliveries, fingerprint,
+    } = meta;
+    let mut r = Registry::new();
+    r.gauge("rbtw_frontdoor_connections",
+            "Currently registered client connections.",
+            &[], *connections as f64);
+    r.counter("rbtw_frontdoor_dropped_deliveries",
+              "Completed responses whose connection was gone or wedged \
+               at delivery time.",
+              &[], *dropped_deliveries as f64);
+    r.gauge("rbtw_cluster_draining",
+            "1 once the cluster stopped accepting new work.",
+            &[], *draining as u8 as f64);
+    r.gauge("rbtw_cluster_live_shards",
+            "Shards currently in the live fleet.",
+            &[], live_shards.len() as f64);
+    r.gauge("rbtw_cluster_queue_depth",
+            "Requests waiting in the bounded front-door queue.",
+            &[], *queue_depth as f64);
+    r.gauge("rbtw_cluster_queue_capacity",
+            "Front-door queue capacity.",
+            &[], *queue_capacity as f64);
+    r.counter("rbtw_cluster_submitted",
+              "Requests accepted at admission.",
+              &[], *submitted as f64);
+    r.counter("rbtw_cluster_completed",
+              "Requests fully served.",
+              &[], *completed as f64);
+    r.counter("rbtw_cluster_tokens_processed",
+              "Prompt + generated tokens processed.",
+              &[], *tokens_processed as f64);
+    r.counter("rbtw_cluster_engine_steps",
+              "Batched engine steps executed.",
+              &[], *engine_steps as f64);
+    r.gauge("rbtw_cluster_weight_bytes",
+            "Bytes of packed weights resident per shard.",
+            &[], *weight_bytes as f64);
+    r.gauge("rbtw_cluster_tokens_per_sec",
+            "Cluster token throughput over the shared wall clock.",
+            &[], *tokens_per_sec);
+    r.gauge("rbtw_cluster_wall_seconds",
+            "Wall-clock seconds covered by this snapshot.",
+            &[], *wall_s);
+    r.counter("rbtw_cluster_respawns",
+              "Shard workers respawned by supervision.",
+              &[], *respawns as f64);
+    r.counter("rbtw_cluster_expired",
+              "Requests answered with a typed Expired outcome.",
+              &[], *expired as f64);
+    r.counter("rbtw_cluster_retry_attempts",
+              "Full admission refusals absorbed by retry backoff.",
+              &[], *retry_attempts as f64);
+    r.gauge("rbtw_cluster_routing_imbalance",
+            "Largest routed-count gap between any two shards.",
+            &[], stats.routing_imbalance() as f64);
+    r.raw("rbtw_cluster_fingerprint",
+          "Load-time verified packed-model fingerprint (hex).",
+          &format!("{fingerprint:016x}"));
+    if let Some(ss) = sessions {
+        r.counter("rbtw_session_prefix_hits",
+                  "Resumes that reused a cached recurrent state.",
+                  &[], ss.prefix_hits as f64);
+        r.counter("rbtw_session_prefix_misses",
+                  "Resumes that had to replay their prefix.",
+                  &[], ss.prefix_misses as f64);
+        r.counter("rbtw_session_evictions",
+                  "Session-cache entries evicted to stay in budget.",
+                  &[], ss.evictions as f64);
+        r.gauge("rbtw_session_entries",
+                "Session-cache entries resident.",
+                &[], ss.entries as f64);
+        r.gauge("rbtw_session_sessions",
+                "Distinct session ids resident.",
+                &[], ss.sessions as f64);
+        r.gauge("rbtw_session_resident_bytes",
+                "Bytes of recurrent state resident in the cache.",
+                &[], ss.resident_bytes as f64);
     }
-    for (path, s) in [("queue", &stats.queue), ("run", &stats.run),
-                      ("total", &stats.total)] {
+    for (path, s, h) in [("queue", queue, queue_hist),
+                         ("run", run, run_hist),
+                         ("total", total, total_hist)] {
         for (q, v) in [("p50", s.p50_ms), ("p95", s.p95_ms),
                        ("p99", s.p99_ms)] {
-            line(format!(
-                "rbtw_latency_ms{{path=\"{path}\",q=\"{q}\"}} {v:.3}"));
+            r.gauge("rbtw_latency_ms",
+                    "Completion-latency percentiles by path.",
+                    &[("path", path.to_string()), ("q", q.to_string())],
+                    v);
+        }
+        r.histogram("rbtw_latency_hist_ms",
+                    "Log-bucketed completion-latency distribution by \
+                     path.",
+                    &[("path", path.to_string())], h);
+    }
+    for ss in stages {
+        for stage in Stage::all() {
+            let labels = [("shard", ss.shard.to_string()),
+                          ("stage", stage.label().to_string())];
+            r.counter("rbtw_engine_stage_seconds",
+                      "Engine time spent per pooled stage (tracing \
+                       only).",
+                      &labels, ss.snap.seconds(stage));
+            r.counter("rbtw_engine_stage_dispatches",
+                      "Pooled dispatches per engine stage (tracing \
+                       only).",
+                      &labels, ss.snap.dispatches(stage) as f64);
         }
     }
-    let mut shard_lines = String::new();
-    for s in &stats.shards {
-        let live = !s.retired;
-        let _ = writeln!(shard_lines,
-                         "rbtw_shard_live{{shard=\"{}\"}} {}",
-                         s.shard, live as u8);
-        let _ = writeln!(shard_lines,
-                         "rbtw_shard_routed{{shard=\"{}\"}} {}",
-                         s.shard, s.routed);
-        let _ = writeln!(shard_lines,
-                         "rbtw_shard_completed{{shard=\"{}\"}} {}",
-                         s.shard, s.server.completed);
-        let _ = writeln!(shard_lines,
-                         "rbtw_shard_tokens_per_sec{{shard=\"{}\"}} {:.3}",
-                         s.shard, s.tokens_per_sec);
+    for s in shards {
+        let labels = [("shard", s.shard.to_string())];
+        r.gauge("rbtw_shard_live",
+                "1 while the shard is in the live fleet.",
+                &labels, !s.retired as u8 as f64);
+        r.gauge("rbtw_shard_retired",
+                "1 once the shard was drained out of the fleet (its \
+                 final counters stay visible).",
+                &labels, s.retired as u8 as f64);
+        r.counter("rbtw_shard_routed",
+                  "Requests the router dispatched to this shard.",
+                  &labels, s.routed as f64);
+        r.counter("rbtw_shard_completed",
+                  "Requests this shard served.",
+                  &labels, s.server.completed as f64);
+        r.counter("rbtw_shard_engine_steps",
+                  "Batched engine steps this shard executed.",
+                  &labels, s.server.engine_steps as f64);
+        r.counter("rbtw_shard_tokens_processed",
+                  "Prompt + generated tokens this shard processed.",
+                  &labels, s.server.tokens_processed as f64);
+        r.gauge("rbtw_shard_peak_active_slots",
+                "Peak concurrently active slots on this shard.",
+                &labels, s.server.peak_active_slots as f64);
+        r.gauge("rbtw_shard_tokens_per_sec",
+                "This shard's token throughput over the cluster wall \
+                 clock.",
+                &labels, s.tokens_per_sec);
     }
-    out.push_str(&shard_lines);
-    out
+    r.render()
 }
 
 #[cfg(test)]
@@ -807,29 +973,130 @@ mod tests {
                 "fingerprint is zero-padded hex: {text}");
         assert!(text.contains("rbtw_shard_live{shard=\"0\"} 0\n"),
                 "retired shard visible at 0: {text}");
+        assert!(text.contains("rbtw_shard_retired{shard=\"0\"} 1\n"));
         assert!(text.contains("rbtw_shard_live{shard=\"1\"} 1\n"));
         assert!(text.contains("rbtw_cluster_queue_depth 3\n"));
         assert!(text.contains("rbtw_cluster_completed 12\n"));
         assert!(text.contains("rbtw_latency_ms{path=\"total\",q=\"p99\"}"));
+        assert!(text.contains("# TYPE rbtw_latency_hist_ms histogram\n"));
+        assert!(text.contains(
+            "rbtw_latency_hist_ms_bucket{path=\"queue\",le=\"+Inf\"}"));
         assert!(text.contains("rbtw_session_prefix_hits 4\n"));
         assert!(text.contains("rbtw_session_evictions 1\n"));
         assert!(text.contains("rbtw_session_resident_bytes 2048\n"));
-        assert!(text.len() <= proto::MAX_FRAME,
-                "metrics text must fit one frame");
         // a cacheless cluster omits the session gauges entirely
         stats.sessions = None;
         let text = render_metrics(&stats, &meta);
         assert!(!text.contains("rbtw_session_"),
                 "no session gauges without a cache: {text}");
+        // an untraced cluster omits the stage breakdown entirely
+        assert!(!text.contains("rbtw_engine_stage_"),
+                "no stage counters without tracing: {text}");
     }
 
     #[test]
-    fn metrics_text_fits_one_frame_at_max_fleet_size() {
-        // worst case: MAX_SHARDS shards with large counters must still
-        // fit the frame cap (the metrics reply is a single frame)
+    fn every_cluster_stat_reaches_the_metrics_text() {
+        // every ClusterStats field must surface as at least one metric
+        // line — together with render_metrics' exhaustive destructure
+        // this keeps a new counter from silently stopping at the stats
+        // layer
+        let mut stats = ClusterStats::default();
+        stats.completed = 1;
+        stats.tokens_processed = 2;
+        stats.engine_steps = 3;
+        stats.wall_s = 4.0;
+        stats.tokens_per_sec = 5.0;
+        stats.respawns = 6;
+        stats.expired = 7;
+        stats.retry_attempts = 8;
+        stats.sessions = Some(crate::session::SessionCounters::default());
+        stats.stages = vec![crate::obs::ShardStages {
+            shard: 0,
+            snap: crate::obs::StageSnapshot::default(),
+        }];
+        stats.shards.push(ShardStats {
+            shard: 0,
+            routed: 9,
+            server: ServerStats { completed: 1, engine_steps: 3,
+                                  tokens_processed: 2,
+                                  peak_active_slots: 1 },
+            tokens_per_sec: 5.0,
+            retired: false,
+        });
+        let meta = MetricsMeta {
+            live_shards: vec![0],
+            queue_depth: 0,
+            queue_capacity: 16,
+            submitted: 1,
+            weight_bytes: 64,
+            draining: false,
+            connections: 1,
+            dropped_deliveries: 1,
+            fingerprint: 1,
+        };
+        let text = render_metrics(&stats, &meta);
+        for name in [
+            // ClusterStats
+            "rbtw_cluster_completed", "rbtw_cluster_tokens_processed",
+            "rbtw_cluster_engine_steps", "rbtw_cluster_wall_seconds",
+            "rbtw_cluster_tokens_per_sec", "rbtw_latency_ms",
+            "rbtw_latency_hist_ms_bucket", "rbtw_latency_hist_ms_sum",
+            "rbtw_latency_hist_ms_count", "rbtw_session_prefix_hits",
+            "rbtw_session_prefix_misses", "rbtw_session_evictions",
+            "rbtw_session_entries", "rbtw_session_sessions",
+            "rbtw_session_resident_bytes", "rbtw_cluster_respawns",
+            "rbtw_cluster_expired", "rbtw_cluster_retry_attempts",
+            "rbtw_cluster_routing_imbalance", "rbtw_engine_stage_seconds",
+            "rbtw_engine_stage_dispatches", "rbtw_shard_live",
+            "rbtw_shard_retired", "rbtw_shard_routed",
+            "rbtw_shard_completed", "rbtw_shard_engine_steps",
+            "rbtw_shard_tokens_processed", "rbtw_shard_peak_active_slots",
+            "rbtw_shard_tokens_per_sec",
+            // MetricsMeta
+            "rbtw_frontdoor_connections",
+            "rbtw_frontdoor_dropped_deliveries", "rbtw_cluster_draining",
+            "rbtw_cluster_live_shards", "rbtw_cluster_queue_depth",
+            "rbtw_cluster_queue_capacity", "rbtw_cluster_submitted",
+            "rbtw_cluster_weight_bytes", "rbtw_cluster_fingerprint",
+        ] {
+            assert!(text.lines().any(|l| l.starts_with(name)
+                                     && !l.starts_with("# ")),
+                    "no value line for {name}:\n{text}");
+        }
+    }
+
+    #[test]
+    fn chunk_text_respects_budget_and_boundaries() {
+        // short payloads are one chunk (the final frame only)
+        assert_eq!(chunk_text("hello"), vec!["hello"]);
+        assert_eq!(chunk_text(""), vec![""]);
+        // long payloads split under the budget and reassemble exactly
+        let text = "x".repeat(CHUNK_BUDGET * 2 + 17);
+        let chunks = chunk_text(&text);
+        assert_eq!(chunks.len(), 3);
+        assert!(chunks.iter().all(|c| c.len() <= CHUNK_BUDGET));
+        assert_eq!(chunks.concat(), text);
+        // splits never land inside a multi-byte char
+        let uni = "é".repeat(CHUNK_BUDGET);
+        let chunks = chunk_text(&uni);
+        assert!(chunks.len() >= 2);
+        assert_eq!(chunks.concat(), uni);
+    }
+
+    #[test]
+    fn max_fleet_metrics_roundtrip_over_continuation_frames() {
+        // worst case: MAX_SHARDS shards with large counters, full
+        // histograms and the stage breakdown. The payload may exceed
+        // one frame — chunking must carry it over the wire intact.
         let mut stats = ClusterStats::default();
         stats.respawns = u64::MAX;
         stats.expired = u64::MAX;
+        stats.retry_attempts = u64::MAX;
+        for _ in 0..10_000 {
+            stats.queue_hist.observe(0.3);
+            stats.run_hist.observe(700.0);
+            stats.total_hist.observe(1e9);
+        }
         stats.sessions = Some(crate::session::SessionCounters {
             prefix_hits: u64::MAX,
             prefix_misses: u64::MAX,
@@ -849,6 +1116,13 @@ mod tests {
                 tokens_per_sec: 1e12,
                 retired: id % 2 == 0,
             });
+            stats.stages.push(crate::obs::ShardStages {
+                shard: id,
+                snap: crate::obs::StageSnapshot {
+                    nanos: [u64::MAX; crate::obs::Stage::COUNT],
+                    count: [u64::MAX; crate::obs::Stage::COUNT],
+                },
+            });
         }
         let meta = MetricsMeta {
             live_shards: (0..crate::engine::BackendSpec::MAX_SHARDS)
@@ -863,8 +1137,34 @@ mod tests {
             fingerprint: u64::MAX,
         };
         let text = render_metrics(&stats, &meta);
-        assert!(text.len() <= proto::MAX_FRAME,
-                "metrics for a max fleet must fit one frame \
-                 ({} bytes)", text.len());
+        assert!(text.len() > proto::MAX_FRAME,
+                "this test exists because the payload outgrew one \
+                 frame; got {} bytes", text.len());
+        // server side: chunk, encode, frame
+        let mut wire = vec![];
+        let chunks = chunk_text(&text);
+        let (last, cont) = chunks.split_last().unwrap();
+        for c in cont {
+            write_frame(&mut wire, &ServerMsg::MetricsMore {
+                text: c.to_string() }.encode()).unwrap();
+        }
+        write_frame(&mut wire, &ServerMsg::Metrics {
+            text: last.to_string() }.encode()).unwrap();
+        // client side: read frames, parse, reassemble
+        let mut r = &wire[..];
+        let mut got = String::new();
+        loop {
+            let frame = read_frame(&mut r).unwrap();
+            match ServerMsg::parse(&frame).unwrap() {
+                ServerMsg::MetricsMore { text } => got.push_str(&text),
+                ServerMsg::Metrics { text } => {
+                    got.push_str(&text);
+                    break;
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+        assert_eq!(got, text, "chunked metrics must reassemble exactly");
+        assert!(matches!(read_frame(&mut r), Err(FrameError::Closed)));
     }
 }

@@ -21,6 +21,7 @@
 //! | `session <sid> <id> <temp> <tok...>`      | prefill + suspend under `sid`|
 //! | `resume <sid> <id> <gen_len> <temp> [tok...]` | resume session `sid` with a (possibly empty) continuation; re-saves under `sid` |
 //! | `metrics`                                 | fetch the metrics text       |
+//! | `trace`                                   | dump the flight recorder     |
 //! | `add-shard`                               | grow the live fleet by one   |
 //! | `remove-shard <id>`                       | gracefully drain shard `id`  |
 //! | `drain`                                   | finish accepted work, close  |
@@ -49,6 +50,18 @@
 //! | `ok <msg>`                              | fleet-operation acknowledged |
 //! | `pong`                                  | ping reply                   |
 //! | `metrics <text>`                        | metrics payload (multi-line) |
+//! | `metrics-more <text>`                   | metrics continuation chunk   |
+//! | `trace <text>`                          | trace payload (final chunk)  |
+//! | `trace-more <text>`                     | trace continuation chunk     |
+//!
+//! Metrics and trace payloads can exceed one frame (a full fleet's
+//! histograms, a long flight-recorder dump), so both replies are
+//! chunked: the server sends zero or more `-more` continuation frames
+//! followed by exactly one final frame (`metrics` / `trace`), and the
+//! client concatenates the chunk texts in arrival order. A one-chunk
+//! reply is just the final frame, which is what old payloads always
+//! were — the encoding is backward compatible for every payload that
+//! fits one frame.
 //!
 //! `done` carries the prompt log-prob as the hex bits of its `f64`
 //! (`f64::to_bits`, zero-padded to 16 digits) so the value survives the
@@ -201,6 +214,9 @@ pub enum ClientMsg {
         prompt: Vec<i32>,
     },
     Metrics,
+    /// Dump the flight recorder as Chrome trace-event JSON (chunked
+    /// like `metrics`; `err` when the server runs with tracing off).
+    Trace,
     AddShard,
     RemoveShard(usize),
     Drain,
@@ -242,6 +258,7 @@ impl ClientMsg {
                 s
             }
             ClientMsg::Metrics => "metrics".to_string(),
+            ClientMsg::Trace => "trace".to_string(),
             ClientMsg::AddShard => "add-shard".to_string(),
             ClientMsg::RemoveShard(id) => format!("remove-shard {id}"),
             ClientMsg::Drain => "drain".to_string(),
@@ -349,6 +366,7 @@ impl ClientMsg {
                 ClientMsg::Resume { sid, id, gen_len, temperature, prompt }
             }
             "metrics" => ClientMsg::Metrics,
+            "trace" => ClientMsg::Trace,
             "add-shard" => ClientMsg::AddShard,
             "remove-shard" => {
                 let id: usize = parse_field(parts.next(), "shard id")?;
@@ -358,7 +376,8 @@ impl ClientMsg {
             "ping" => ClientMsg::Ping,
             other => return Err(format!(
                 "unknown command '{other}' (accepted: hello, gen, session, \
-                 resume, metrics, add-shard, remove-shard, drain, ping)")),
+                 resume, metrics, trace, add-shard, remove-shard, drain, \
+                 ping)")),
         };
         Ok(msg)
     }
@@ -394,8 +413,17 @@ pub enum ServerMsg {
     Ok { msg: String },
     Pong,
     /// The metrics text (multi-line; frames are length-delimited so no
-    /// escaping is needed).
+    /// escaping is needed). Final chunk of a metrics reply.
     Metrics { text: String },
+    /// A metrics continuation chunk — more frames follow; the client
+    /// appends chunk texts until the final [`ServerMsg::Metrics`].
+    MetricsMore { text: String },
+    /// The flight-recorder dump (Chrome trace-event JSON). Final chunk
+    /// of a trace reply.
+    Trace { text: String },
+    /// A trace continuation chunk — more frames follow; the client
+    /// appends chunk texts until the final [`ServerMsg::Trace`].
+    TraceMore { text: String },
 }
 
 impl ServerMsg {
@@ -419,6 +447,9 @@ impl ServerMsg {
             ServerMsg::Ok { msg } => format!("ok {msg}"),
             ServerMsg::Pong => "pong".to_string(),
             ServerMsg::Metrics { text } => format!("metrics {text}"),
+            ServerMsg::MetricsMore { text } => format!("metrics-more {text}"),
+            ServerMsg::Trace { text } => format!("trace {text}"),
+            ServerMsg::TraceMore { text } => format!("trace-more {text}"),
         }
     }
 
@@ -475,6 +506,11 @@ impl ServerMsg {
             "ok" => ServerMsg::Ok { msg: rest.to_string() },
             "pong" => ServerMsg::Pong,
             "metrics" => ServerMsg::Metrics { text: rest.to_string() },
+            "metrics-more" => ServerMsg::MetricsMore {
+                text: rest.to_string(),
+            },
+            "trace" => ServerMsg::Trace { text: rest.to_string() },
+            "trace-more" => ServerMsg::TraceMore { text: rest.to_string() },
             other => return Err(format!("unknown server message '{other}'")),
         };
         Ok(msg)
@@ -568,6 +604,7 @@ mod tests {
             ClientMsg::Resume { sid: 42, id: 10, gen_len: 1,
                                 temperature: 0.0, prompt: vec![] },
             ClientMsg::Metrics,
+            ClientMsg::Trace,
             ClientMsg::AddShard,
             ClientMsg::RemoveShard(3),
             ClientMsg::Drain,
@@ -594,9 +631,29 @@ mod tests {
             ServerMsg::Ok { msg: "added shard 4".into() },
             ServerMsg::Pong,
             ServerMsg::Metrics { text: "a 1\nb 2".into() },
+            ServerMsg::MetricsMore { text: "a 1\nb ".into() },
+            ServerMsg::Trace { text: "{\"traceEvents\":[]}".into() },
+            ServerMsg::TraceMore { text: "{\"traceEve".into() },
         ];
         for m in msgs {
             assert_eq!(ServerMsg::parse(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn chunk_texts_survive_arbitrary_split_points() {
+        // chunking splits payloads at byte offsets the content does not
+        // choose, so chunk text starting or ending with whitespace must
+        // roundtrip verbatim
+        for text in [" leading space", "trailing space ", "\nnewline first",
+                     "", "  ", "mid\n line"] {
+            for m in [ServerMsg::Metrics { text: text.into() },
+                      ServerMsg::MetricsMore { text: text.into() },
+                      ServerMsg::Trace { text: text.into() },
+                      ServerMsg::TraceMore { text: text.into() }] {
+                assert_eq!(ServerMsg::parse(&m.encode()).unwrap(), m,
+                           "chunk text {text:?} must roundtrip");
+            }
         }
     }
 

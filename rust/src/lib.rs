@@ -130,6 +130,34 @@
 //!   request is served. The loaded fingerprint is exported via
 //!   `/metrics` so a fleet can assert every shard serves the same
 //!   bits.
+//!
+//! # Observability
+//!
+//! [`obs`] is the flight-recorder + tracing layer (`--trace` /
+//! `[serve] trace`, default off). What is recorded when it is on:
+//! **per-request spans** (admission → route → inbox dequeue → slot
+//! schedule → first token → done, with retry/replay/expiry
+//! annotations), a bounded lock-light **flight recorder** of
+//! structured events (refusals, expiries, respawns, session
+//! hits/evictions, slow-reader sheds), and **per-stage engine time**
+//! (the packed backend attributes each pooled dispatch — inter-layer
+//! x-GEMM, recurrent gate GEMM, folded-BN gate tail, LM head — to a
+//! per-shard [`obs::StageAccum`], the software counterpart of
+//! `hwsim::latency`'s datapath stages). `/metrics` renders through the
+//! typed [`obs::Registry`] (Prometheus text with log-bucketed latency
+//! histograms, [`obs::LogHistogram`]) whether tracing is on or not.
+//!
+//! Overhead discipline: every hook is an `Option<Arc<obs::Obs>>` that
+//! does nothing on `None` — no timestamps, no allocation — the same
+//! zero-cost-when-off contract as [`faults`]. Traced greedy digests
+//! are bit-identical to untraced ones (`rust/tests/
+//! obs_equivalence.rs` + a ci.sh gate).
+//!
+//! To open a trace: `rbtw serve ... --trace --trace-out trace.json`
+//! (written at drain), the `trace` operator-console command, or the
+//! `trace` wire verb ([`frontdoor::FrontDoorClient::trace`]); load the
+//! JSON in `chrome://tracing` or <https://ui.perfetto.dev> (one pid
+//! per shard, one tid per slot).
 
 pub mod cluster;
 pub mod config;
@@ -141,6 +169,7 @@ pub mod frontdoor;
 pub mod hwsim;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod session;

@@ -16,8 +16,8 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use rbtw::cluster::{run_cluster_load, ClusterOptions, ClusterReport,
-                    RetrySpec, RoutePolicy, ServingCluster};
+use rbtw::cluster::{run_cluster_load, run_cluster_load_with, ClusterOptions,
+                    ClusterReport, RetrySpec, RoutePolicy, ServingCluster};
 use rbtw::config::{default_spec_for_task, Config, ServeSpec};
 use rbtw::faults::FaultPlan;
 use rbtw::coordinator::{latency_breakdown, InferenceServer, LoadSpec,
@@ -27,8 +27,11 @@ use rbtw::engine::{self, BackendKind, CellArch, InferBackend, ModelWeights,
 use rbtw::frontdoor::FrontDoor;
 use rbtw::hwsim;
 use rbtw::model::export_packed;
+use rbtw::obs::{Obs, ObsSpec};
 use rbtw::quant;
 use rbtw::runtime::{list_artifacts, ArtifactMeta, Engine};
+use rbtw::util::bench::{compare_reports, default_tolerance};
+use rbtw::util::json::Json;
 use rbtw::util::table::Table;
 use rbtw::util::Rng;
 
@@ -104,6 +107,8 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "hwsim" => cmd_hwsim(&args),
         "pack" => cmd_pack(&args),
+        "trace-check" => cmd_trace_check(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -160,9 +165,21 @@ fn print_usage() {
          \x20                             crashed shard workers; default on)\n\
          \x20                             (env RBTW_FAULT_PLAN arms the\n\
          \x20                             deterministic chaos harness)\n\
+         \x20                             --trace true|false (flight recorder\n\
+         \x20                             + per-stage profile; default off —\n\
+         \x20                             off compiles every hook to a None\n\
+         \x20                             check)\n\
+         \x20                             --trace-out FILE (write the Chrome\n\
+         \x20                             trace JSON on exit; implies --trace)\n\
          \x20                             --config F)\n\
          \x20 hwsim                       print Table-7 design points (--explore)\n\
          \x20 pack <artifact>             export packed weights (--checkpoint IN)\n\
+         \x20 trace-check <trace.json>    validate a Chrome trace dump (used\n\
+         \x20                             by the ci.sh traced-serve gate)\n\
+         \x20 bench-diff <base> <cur>     compare two BENCH_*.json reports\n\
+         \x20                             (--tolerance X, default 0.5 or env\n\
+         \x20                             RBTW_BENCH_TOLERANCE; non-zero exit\n\
+         \x20                             on a tracked-key regression)\n\
          \n\
          common options: --artifacts DIR (default ./artifacts)"
     );
@@ -359,6 +376,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             other => bail!("--supervise takes true|false, got '{other}'"),
         };
     }
+    if let Some(v) = args.get("trace") {
+        spec.trace = match v {
+            "true" => true,
+            "false" => false,
+            other => bail!("--trace takes true|false, got '{other}'"),
+        };
+    }
+    let trace_out = match args.get("trace-out") {
+        Some("true") => bail!("--trace-out needs a file path, e.g. \
+                               --trace-out trace.json"),
+        Some(path) => {
+            spec.trace = true; // a dump target implies tracing on
+            Some(PathBuf::from(path))
+        }
+        None => None,
+    };
     let n_requests = args.get_usize("requests")?.unwrap_or(64);
     let gen_len = args.get_usize("gen-len")?.unwrap_or(32);
     let prompt_len = args.get_usize("prompt-len")?.unwrap_or(16);
@@ -399,16 +432,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if spec.batch_gemm { "batched" } else { "per-slot" },
             shared.weight_bytes(),
         );
+        // --trace arms the observability hub; off (the default) leaves
+        // every hook a `None` branch and the serve path untouched
+        let obs = spec.trace.then(|| Obs::new(&ObsSpec::default()));
+        if obs.is_some() {
+            println!("tracing armed: flight recorder + per-request spans \
+                      + per-stage engine profile");
+        }
         if spec.listen.is_some() {
             // network front door: serve real sockets until a drain
             // arrives (wire `drain` frame or stdin console)
-            return serve_network(shared, &spec, faults);
+            return serve_network(shared, &spec, faults, obs,
+                                 trace_out.as_deref());
         }
         let load = LoadSpec { n_requests, prompt_len, gen_len,
                               temperature: 0.8, seed: 7 };
-        let report = run_cluster_load(&shared, &backend_spec, spec.policy,
-                                      spec.queue_cap, &load)?;
+        let report = match &obs {
+            None => run_cluster_load(&shared, &backend_spec, spec.policy,
+                                     spec.queue_cap, &load)?,
+            Some(obs) => run_cluster_load_with(
+                &shared, &backend_spec,
+                ClusterOptions {
+                    queue_cap: spec.queue_cap,
+                    policy: spec.policy,
+                    obs: Some(obs.clone()),
+                    ..ClusterOptions::default()
+                },
+                &load)?,
+        };
         print_cluster_summary(&report);
+        if let Some(obs) = &obs {
+            print_trace_summary(obs);
+            write_trace(obs, trace_out.as_deref())?;
+        }
         return Ok(());
     }
 
@@ -478,10 +534,47 @@ fn print_cluster_summary(report: &ClusterReport) {
     );
 }
 
+/// One-screen digest of a traced run: span coverage + the per-shard
+/// engine-stage breakdown (the full event stream goes to `--trace-out`).
+fn print_trace_summary(obs: &Obs) {
+    let spans = obs.completed_spans();
+    let with_first = spans.iter().filter(|s| s.first_token_us.is_some())
+        .count();
+    let expired = spans.iter().filter(|s| s.expired).count();
+    let replayed = spans.iter().filter(|s| s.replays > 0).count();
+    println!(
+        "trace: {} span(s) ({} with first-token, {} expired, {} replayed) \
+         | {} ring event(s) | {} span(s) dropped",
+        spans.len(), with_first, expired, replayed,
+        obs.recorder().dump().len(), obs.dropped_spans(),
+    );
+    for ss in obs.stage_snapshots() {
+        let line: Vec<String> = rbtw::obs::Stage::all()
+            .iter()
+            .map(|&st| format!("{} {:.1}ms/{}", st.label(),
+                               ss.snap.seconds(st) * 1e3,
+                               ss.snap.dispatches(st)))
+            .collect();
+        println!("  shard {} stages: {}", ss.shard, line.join(" | "));
+    }
+}
+
+/// Write the Chrome trace-event JSON to `path` (no-op when `--trace-out`
+/// was not given; `chrome://tracing` / Perfetto load the result).
+fn write_trace(obs: &Obs, path: Option<&std::path::Path>) -> Result<()> {
+    let Some(path) = path else { return Ok(()) };
+    std::fs::write(path, obs.chrome_trace())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    println!("trace written to {}", path.display());
+    Ok(())
+}
+
 /// Serve the cluster behind the TCP front door until a drain arrives —
 /// over the wire (`drain` frame) or from the stdin operator console.
 fn serve_network(shared: SharedModel, spec: &ServeSpec,
-                 faults: Option<std::sync::Arc<FaultPlan>>) -> Result<()> {
+                 faults: Option<std::sync::Arc<FaultPlan>>,
+                 obs: Option<std::sync::Arc<Obs>>,
+                 trace_out: Option<&std::path::Path>) -> Result<()> {
     let listen = spec.listen.as_deref().expect("serve_network needs listen");
     // --session-bytes 0 turns the recurrent-state cache off entirely
     // (session/resume frames then refuse at admission)
@@ -500,12 +593,14 @@ fn serve_network(shared: SharedModel, spec: &ServeSpec,
             retry: RetrySpec { attempts: spec.retries,
                                ..RetrySpec::default() },
             faults,
+            obs: obs.clone(),
         },
         cache)?;
     let fd = FrontDoor::serve(cluster, listen)?;
     // exact line scripts poll for (ci.sh waits for it before connecting)
     println!("listening on {}", fd.local_addr());
-    println!("console: drain | quit | metrics | add-shard | remove-shard N");
+    println!("console: drain | quit | metrics | trace | add-shard | \
+              remove-shard N");
     // stdin console on its own thread; EOF just ends the console (a
     // server with stdin </dev/null keeps serving until a wire drain)
     let (tx, rx) = std::sync::mpsc::channel::<String>();
@@ -542,6 +637,11 @@ fn serve_network(shared: SharedModel, spec: &ServeSpec,
                     Ok(text) => print!("{text}"),
                     Err(e) => eprintln!("metrics: {e:#}"),
                 },
+                Some("trace") => match fd.trace_json() {
+                    Some(text) => println!("{text}"),
+                    None => eprintln!(
+                        "tracing disabled (restart with --trace)"),
+                },
                 Some("add-shard") => match fd.add_shard() {
                     Ok(id) => println!("added shard {id}"),
                     Err(e) => eprintln!("add-shard: {e:#}"),
@@ -558,14 +658,99 @@ fn serve_network(shared: SharedModel, spec: &ServeSpec,
                 }
                 Some(other) => eprintln!(
                     "unknown command '{other}' (drain | quit | metrics | \
-                     add-shard | remove-shard N)"),
+                     trace | add-shard | remove-shard N)"),
             }
         }
     }
     let report = fd.drain()?;
     println!("drained; final cluster stats:");
     print_cluster_summary(&report);
+    if let Some(obs) = &obs {
+        print_trace_summary(obs);
+        write_trace(obs, trace_out)?;
+    }
     Ok(())
+}
+
+/// `rbtw trace-check <trace.json>` — parse a `--trace-out` dump and
+/// assert it is a non-empty Chrome trace (the ci.sh traced-serve gate
+/// runs this so a silently empty trace fails loudly).
+fn cmd_trace_check(args: &Args) -> Result<()> {
+    let path = args.positional.first()
+        .context("usage: rbtw trace-check <trace.json>")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let json = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let events = json.get("traceEvents").and_then(Json::as_arr)
+        .with_context(|| format!("{path}: no traceEvents array"))?;
+    anyhow::ensure!(!events.is_empty(),
+                    "{path}: traceEvents is empty (no spans recorded)");
+    let mut complete = 0usize;
+    let mut instants = 0usize;
+    for ev in events {
+        match ev.get("ph").and_then(Json::as_str) {
+            Some("X") => {
+                anyhow::ensure!(
+                    ev.get("dur").and_then(Json::as_f64).is_some(),
+                    "{path}: complete event missing dur: {ev:?}");
+                complete += 1;
+            }
+            Some("i") | Some("I") => instants += 1,
+            Some("M") => {} // metadata (process/thread names)
+            other => bail!("{path}: unexpected event phase {other:?}"),
+        }
+        if ev.get("ph").and_then(Json::as_str) != Some("M") {
+            anyhow::ensure!(
+                ev.get("ts").and_then(Json::as_f64).is_some()
+                    && ev.get("pid").is_some(),
+                "{path}: event missing ts/pid: {ev:?}");
+        }
+    }
+    anyhow::ensure!(complete > 0,
+                    "{path}: no complete ('X') span events recorded");
+    println!("trace ok: {} event(s) ({complete} span(s), \
+              {instants} instant(s))", events.len());
+    Ok(())
+}
+
+/// `rbtw bench-diff <baseline.json> <current.json> [--tolerance X]` —
+/// the bench-regression gate: non-zero exit when a tracked
+/// throughput/latency key moved the wrong way beyond tolerance.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let (base_path, cur_path) = match &args.positional[..] {
+        [b, c] => (b, c),
+        _ => bail!("usage: rbtw bench-diff <baseline.json> <current.json> \
+                    [--tolerance X]"),
+    };
+    let tolerance = match args.get("tolerance") {
+        Some(v) => {
+            let t: f64 = v.parse().context("--tolerance")?;
+            anyhow::ensure!(t.is_finite() && t >= 0.0,
+                            "--tolerance must be a non-negative fraction");
+            t
+        }
+        None => default_tolerance(),
+    };
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    };
+    let baseline = load(base_path)?;
+    let current = load(cur_path)?;
+    let regressions = compare_reports(&baseline, &current, tolerance);
+    if regressions.is_empty() {
+        println!("bench-diff ok: {cur_path} within {:.0}% of {base_path}",
+                 tolerance * 100.0);
+        return Ok(());
+    }
+    for r in &regressions {
+        eprintln!("REGRESSION {}", r.report());
+    }
+    bail!("{} tracked bench key(s) regressed beyond {:.0}% \
+           (baseline {base_path})",
+          regressions.len(), tolerance * 100.0);
 }
 
 fn cmd_hwsim(args: &Args) -> Result<()> {

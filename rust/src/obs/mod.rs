@@ -1,0 +1,947 @@
+//! Observability: flight recorder, per-request spans, engine-stage
+//! profiling and the metrics registry.
+//!
+//! The serving stack reports end-to-end percentiles; this module makes
+//! the *inside* of a request visible — where every microsecond and
+//! every request goes — without perturbing a single logit:
+//!
+//! * **Per-request spans** ([`SpanRec`]): monotonic timestamps at
+//!   admission, route, inbox-dequeue, slot-schedule, first token and
+//!   completion, plus retry / replay / expiry annotations. Completed
+//!   spans are kept in a bounded table and exported as Chrome
+//!   trace-event JSON ([`Obs::chrome_trace`]) — one `pid` per shard,
+//!   one `tid` per slot — so a serving run opens directly in a trace
+//!   viewer (`chrome://tracing`, Perfetto).
+//! * **Flight recorder** ([`FlightRecorder`]): a bounded, lock-light
+//!   ring of structured [`Event`]s (admission refusals, deadline
+//!   expiries, shard respawns, session hits/evictions, slow-reader
+//!   sheds). Writers take one atomic `fetch_add` plus one per-slot
+//!   mutex; the ring never grows and never blocks the hot path on a
+//!   reader.
+//! * **Engine-stage profiling** ([`StageAccum`]): the packed backend
+//!   times its pooled dispatch stages — inter-layer x-GEMM, recurrent
+//!   gate GEMM, folded-BN gate tail, LM head — into per-shard atomic
+//!   accumulators, so `/metrics` reports a stage-time breakdown
+//!   comparable to `hwsim::latency`'s datapath model.
+//! * **Metrics registry** ([`Registry`], [`LogHistogram`]): a typed
+//!   counter/gauge/histogram builder rendering Prometheus text
+//!   (`# HELP` / `# TYPE` headers, log-bucketed latency histograms),
+//!   replacing ad-hoc line formatting in the front door.
+//!
+//! ## Overhead discipline (zero-cost when off)
+//!
+//! Tracing follows the [`crate::faults`] hook contract: every
+//! injection point holds an `Option<Arc<Obs>>` and does **nothing**
+//! on `None` — no `Instant::now()`, no allocation, no atomic. The
+//! `--trace` / `[serve] trace` knob (default off) is the only thing
+//! that makes the option `Some`. With tracing ON, hooks only read
+//! clocks and append to pre-sized structures off the compute path, so
+//! greedy digests are bit-identical either way — enforced by
+//! `rust/tests/obs_equivalence.rs` and a ci.sh traced-serve gate.
+//!
+//! ## Opening a trace
+//!
+//! `rbtw serve ... --trace --trace-out trace.json` writes the Chrome
+//! trace at drain; the `trace` wire verb / operator-console command
+//! fetches the same JSON from a live server. Load the file in
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Tracing knobs (all sizes bounded; [`ObsSpec::default`] is what
+/// `--trace` arms).
+#[derive(Clone, Copy, Debug)]
+pub struct ObsSpec {
+    /// Flight-recorder ring capacity (events). Oldest events are
+    /// overwritten; the ring never grows.
+    pub ring_cap: usize,
+    /// Completed-span table capacity. Spans completing beyond this are
+    /// counted ([`Obs::dropped_spans`]) and dropped, never reallocated.
+    pub max_spans: usize,
+}
+
+impl Default for ObsSpec {
+    fn default() -> Self {
+        Self { ring_cap: 8192, max_spans: 65536 }
+    }
+}
+
+/// Engine stages the packed backend attributes time to. The split
+/// mirrors `hwsim::latency`'s datapath stages so software numbers line
+/// up against the ASIC model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Inter-layer x-path GEMM (layers ≥ 1; layer 0's one-hot gather is
+    /// a copy and is not timed separately).
+    XGemm = 0,
+    /// Recurrent gate GEMM, output columns sharded across the pool.
+    GateGemm = 1,
+    /// Folded-BN gate tail, active rows sharded.
+    GateTail = 2,
+    /// Dense LM-head projection, vocab columns sharded.
+    LmHead = 3,
+}
+
+impl Stage {
+    pub const COUNT: usize = 4;
+
+    pub fn all() -> [Stage; Stage::COUNT] {
+        [Stage::XGemm, Stage::GateGemm, Stage::GateTail, Stage::LmHead]
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::XGemm => "x_gemm",
+            Stage::GateGemm => "gate_gemm",
+            Stage::GateTail => "gate_tail",
+            Stage::LmHead => "lm_head",
+        }
+    }
+}
+
+/// Per-shard stage-time accumulator: nanoseconds + dispatch counts per
+/// [`Stage`], written with relaxed atomics from the engine worker and
+/// snapshotted by the stats/metrics path.
+#[derive(Debug, Default)]
+pub struct StageAccum {
+    nanos: [AtomicU64; Stage::COUNT],
+    count: [AtomicU64; Stage::COUNT],
+}
+
+impl StageAccum {
+    pub fn add(&self, stage: Stage, d: Duration) {
+        let i = stage as usize;
+        self.nanos[i].fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.count[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StageSnapshot {
+        let mut s = StageSnapshot::default();
+        for i in 0..Stage::COUNT {
+            s.nanos[i] = self.nanos[i].load(Ordering::Relaxed);
+            s.count[i] = self.count[i].load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+/// A point-in-time copy of one shard's [`StageAccum`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageSnapshot {
+    pub nanos: [u64; Stage::COUNT],
+    pub count: [u64; Stage::COUNT],
+}
+
+impl StageSnapshot {
+    pub fn seconds(&self, stage: Stage) -> f64 {
+        self.nanos[stage as usize] as f64 * 1e-9
+    }
+
+    pub fn dispatches(&self, stage: Stage) -> u64 {
+        self.count[stage as usize]
+    }
+}
+
+/// One shard's stage breakdown inside `ClusterStats`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardStages {
+    pub shard: usize,
+    pub snap: StageSnapshot,
+}
+
+/// What happened, attached to an [`Event`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum EventKind {
+    /// Request accepted into the cluster front door.
+    Admitted,
+    /// Router placed the request on a shard inbox.
+    Routed { shard: usize },
+    /// Shard worker dequeued the request from its inbox.
+    Dequeued { shard: usize },
+    /// Request entered a decode slot.
+    Scheduled { shard: usize, slot: usize },
+    /// First generated token sampled.
+    FirstToken { shard: usize, slot: usize },
+    /// Request completed (response sent).
+    Done { shard: usize, slot: usize, tokens: usize },
+    /// Admission refused `Full`, retrying with backoff.
+    Retry { attempt: u32 },
+    /// Admission refused terminally ("full" | "draining" | "invalid").
+    Refused { reason: &'static str },
+    /// Deadline lapsed before the request touched a slot.
+    Expired { shard: usize },
+    /// Supervised shard worker panicked and respawned.
+    Respawn { shard: usize, generation: u64 },
+    /// Session prefix-cache hit at admission.
+    SessionHit,
+    /// Session prefix-cache miss at admission.
+    SessionMiss,
+    /// Session cache evicted an entry to fit its byte budget.
+    SessionEvict,
+    /// Slow reader shed: a response frame was dropped for a connection.
+    Shed { conn: u64 },
+}
+
+impl EventKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Admitted => "admitted",
+            EventKind::Routed { .. } => "routed",
+            EventKind::Dequeued { .. } => "dequeued",
+            EventKind::Scheduled { .. } => "scheduled",
+            EventKind::FirstToken { .. } => "first_token",
+            EventKind::Done { .. } => "done",
+            EventKind::Retry { .. } => "retry",
+            EventKind::Refused { .. } => "refused",
+            EventKind::Expired { .. } => "expired",
+            EventKind::Respawn { .. } => "respawn",
+            EventKind::SessionHit => "session_hit",
+            EventKind::SessionMiss => "session_miss",
+            EventKind::SessionEvict => "session_evict",
+            EventKind::Shed { .. } => "shed",
+        }
+    }
+
+    /// The shard this event names, if any (chrome-trace pid).
+    fn shard(&self) -> Option<usize> {
+        match *self {
+            EventKind::Routed { shard }
+            | EventKind::Dequeued { shard }
+            | EventKind::Scheduled { shard, .. }
+            | EventKind::FirstToken { shard, .. }
+            | EventKind::Done { shard, .. }
+            | EventKind::Expired { shard }
+            | EventKind::Respawn { shard, .. } => Some(shard),
+            _ => None,
+        }
+    }
+}
+
+/// One flight-recorder entry: global sequence number, microseconds
+/// since the [`Obs`] epoch, the request id it concerns (0 = none) and
+/// the [`EventKind`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub t_us: u64,
+    pub id: u64,
+    pub kind: EventKind,
+}
+
+/// Bounded, lock-light ring of [`Event`]s.
+///
+/// Writers claim a slot with one `fetch_add` on the head counter and
+/// write it under that slot's own mutex — concurrent writers contend
+/// only when they hash to the same slot (ring_cap apart in sequence),
+/// and a dumping reader never blocks more than one slot at a time.
+/// Overwrite semantics: the ring always holds the most recent
+/// `ring_cap` events.
+pub struct FlightRecorder {
+    head: AtomicU64,
+    slots: Vec<Mutex<Option<Event>>>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            head: AtomicU64::new(0),
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (≥ the ring's resident count).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    pub fn push(&self, t_us: u64, id: u64, kind: EventKind) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let idx = (seq % self.slots.len() as u64) as usize;
+        let mut slot = self.slots[idx].lock().unwrap();
+        *slot = Some(Event { seq, t_us, id, kind });
+    }
+
+    /// Snapshot the resident events, oldest first.
+    pub fn dump(&self) -> Vec<Event> {
+        let mut out: Vec<Event> = self
+            .slots
+            .iter()
+            .filter_map(|s| s.lock().unwrap().clone())
+            .collect();
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+/// One request's life, assembled from span marks. Timestamps are
+/// microseconds since the [`Obs`] epoch; `None` = the request never
+/// reached that point.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpanRec {
+    pub id: u64,
+    pub admitted_us: u64,
+    pub routed_us: Option<u64>,
+    pub dequeued_us: Option<u64>,
+    pub scheduled_us: Option<u64>,
+    pub first_token_us: Option<u64>,
+    pub done_us: Option<u64>,
+    pub shard: Option<usize>,
+    pub slot: Option<usize>,
+    /// Admission `Full` refusals absorbed by backoff.
+    pub retries: u32,
+    /// Times the request was re-scheduled (crash replay).
+    pub replays: u32,
+    pub expired: bool,
+    pub tokens: usize,
+}
+
+#[derive(Default)]
+struct SpanTable {
+    inflight: HashMap<u64, SpanRec>,
+    completed: Vec<SpanRec>,
+}
+
+/// The observability hub: epoch clock + flight recorder + span table +
+/// per-shard stage accumulators. Shared as `Arc<Obs>` by cluster,
+/// shard servers, session cache and front door; absent (`None`)
+/// everywhere when tracing is off.
+pub struct Obs {
+    epoch: Instant,
+    recorder: FlightRecorder,
+    spans: Mutex<SpanTable>,
+    stages: Mutex<BTreeMap<usize, Arc<StageAccum>>>,
+    max_spans: usize,
+    dropped_spans: AtomicU64,
+}
+
+impl Obs {
+    pub fn new(spec: &ObsSpec) -> Arc<Self> {
+        Arc::new(Self {
+            epoch: Instant::now(),
+            recorder: FlightRecorder::new(spec.ring_cap),
+            spans: Mutex::new(SpanTable::default()),
+            stages: Mutex::new(BTreeMap::new()),
+            max_spans: spec.max_spans.max(1),
+            dropped_spans: AtomicU64::new(0),
+        })
+    }
+
+    /// Microseconds since this hub's epoch (monotonic).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one event: pushed onto the flight-recorder ring AND
+    /// folded into the request's span (for span-relevant kinds).
+    /// `id` = 0 for events not tied to a request.
+    pub fn event(&self, id: u64, kind: EventKind) {
+        let t_us = self.now_us();
+        self.apply_span(id, t_us, &kind);
+        self.recorder.push(t_us, id, kind);
+    }
+
+    fn apply_span(&self, id: u64, t_us: u64, kind: &EventKind) {
+        let mut table = self.spans.lock().unwrap();
+        match *kind {
+            EventKind::Admitted => {
+                let span = table.inflight.entry(id).or_default();
+                span.id = id;
+                span.admitted_us = t_us;
+            }
+            EventKind::Retry { .. } => {
+                let span = table.inflight.entry(id).or_default();
+                span.id = id;
+                if span.retries == 0 {
+                    span.admitted_us = t_us;
+                }
+                span.retries += 1;
+            }
+            EventKind::Routed { shard } => {
+                if let Some(span) = table.inflight.get_mut(&id) {
+                    span.routed_us = Some(t_us);
+                    span.shard = Some(shard);
+                }
+            }
+            EventKind::Dequeued { shard } => {
+                if let Some(span) = table.inflight.get_mut(&id) {
+                    span.dequeued_us = Some(t_us);
+                    span.shard = Some(shard);
+                }
+            }
+            EventKind::Scheduled { shard, slot } => {
+                if let Some(span) = table.inflight.get_mut(&id) {
+                    if span.scheduled_us.is_some() {
+                        // the slot saw this request before: crash replay
+                        span.replays += 1;
+                    }
+                    span.scheduled_us = Some(t_us);
+                    span.shard = Some(shard);
+                    span.slot = Some(slot);
+                }
+            }
+            EventKind::FirstToken { shard, slot } => {
+                if let Some(span) = table.inflight.get_mut(&id) {
+                    span.first_token_us = Some(t_us);
+                    span.shard = Some(shard);
+                    span.slot = Some(slot);
+                }
+            }
+            EventKind::Done { shard, slot, tokens } => {
+                if let Some(mut span) = table.inflight.remove(&id) {
+                    span.done_us = Some(t_us);
+                    span.shard = Some(shard);
+                    span.slot = Some(slot);
+                    span.tokens = tokens;
+                    self.finish(&mut table, span);
+                }
+            }
+            EventKind::Expired { shard } => {
+                if let Some(mut span) = table.inflight.remove(&id) {
+                    span.done_us = Some(t_us);
+                    span.shard = Some(shard);
+                    span.expired = true;
+                    self.finish(&mut table, span);
+                }
+            }
+            // a terminal refusal ends any placeholder span its retries
+            // created — refused ids must not pin inflight entries
+            EventKind::Refused { .. } => {
+                table.inflight.remove(&id);
+            }
+            // recorder-only kinds
+            EventKind::Respawn { .. }
+            | EventKind::SessionHit
+            | EventKind::SessionMiss
+            | EventKind::SessionEvict
+            | EventKind::Shed { .. } => {}
+        }
+    }
+
+    fn finish(&self, table: &mut SpanTable, span: SpanRec) {
+        if table.completed.len() < self.max_spans {
+            table.completed.push(span);
+        } else {
+            self.dropped_spans.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Completed spans dropped because the table hit `max_spans`.
+    pub fn dropped_spans(&self) -> u64 {
+        self.dropped_spans.load(Ordering::Relaxed)
+    }
+
+    /// The flight recorder (for direct dumps/tests).
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    /// Completed span records, completion order.
+    pub fn completed_spans(&self) -> Vec<SpanRec> {
+        self.spans.lock().unwrap().completed.clone()
+    }
+
+    /// This shard's stage accumulator, created on first use (shards can
+    /// be added to a live fleet).
+    pub fn stage_accum(&self, shard: usize) -> Arc<StageAccum> {
+        self.stages
+            .lock()
+            .unwrap()
+            .entry(shard)
+            .or_insert_with(|| Arc::new(StageAccum::default()))
+            .clone()
+    }
+
+    /// Snapshot every shard's stage breakdown.
+    pub fn stage_snapshots(&self) -> Vec<ShardStages> {
+        self.stages
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&shard, acc)| ShardStages { shard, snap: acc.snapshot() })
+            .collect()
+    }
+
+    /// Export the run as Chrome trace-event JSON: one complete-event
+    /// (`"ph": "X"`) triple per completed request — an enclosing
+    /// `request` span with nested `queue` and `run` children — with
+    /// `pid` = shard and `tid` = slot, plus instant events (`"ph": "i"`)
+    /// for recorder-only kinds (respawns, refusals, sheds, session
+    /// traffic). Timestamps are microseconds since the obs epoch, so
+    /// nesting is monotonic by construction.
+    pub fn chrome_trace(&self) -> String {
+        let spans = self.completed_spans();
+        let mut events: Vec<Json> = Vec::with_capacity(spans.len() * 3 + 16);
+        let x_event = |name: &str, pid: usize, tid: usize, ts: u64,
+                       dur: u64, args: Vec<(&str, Json)>| {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(name.to_string()));
+            m.insert("ph".to_string(), Json::Str("X".to_string()));
+            m.insert("pid".to_string(), Json::Num(pid as f64));
+            m.insert("tid".to_string(), Json::Num(tid as f64));
+            m.insert("ts".to_string(), Json::Num(ts as f64));
+            m.insert("dur".to_string(), Json::Num(dur as f64));
+            if !args.is_empty() {
+                let mut a = BTreeMap::new();
+                for (k, v) in args {
+                    a.insert(k.to_string(), v);
+                }
+                m.insert("args".to_string(), Json::Obj(a));
+            }
+            Json::Obj(m)
+        };
+        for s in &spans {
+            let Some(done) = s.done_us else { continue };
+            let pid = s.shard.unwrap_or(0);
+            let tid = s.slot.unwrap_or(0);
+            let t0 = s.admitted_us.min(done);
+            let name = if s.expired { "expired" } else { "request" };
+            events.push(x_event(
+                name, pid, tid, t0, done - t0,
+                vec![
+                    ("id", Json::Num(s.id as f64)),
+                    ("retries", Json::Num(s.retries as f64)),
+                    ("replays", Json::Num(s.replays as f64)),
+                    ("tokens", Json::Num(s.tokens as f64)),
+                ],
+            ));
+            if s.expired {
+                continue;
+            }
+            if let Some(sched) = s.scheduled_us {
+                let sched = sched.clamp(t0, done);
+                events.push(x_event("queue", pid, tid, t0, sched - t0,
+                                    vec![]));
+                events.push(x_event("run", pid, tid, sched, done - sched,
+                                    vec![]));
+            }
+        }
+        for e in self.recorder.dump() {
+            if matches!(
+                e.kind,
+                EventKind::Respawn { .. }
+                    | EventKind::Refused { .. }
+                    | EventKind::Retry { .. }
+                    | EventKind::SessionHit
+                    | EventKind::SessionMiss
+                    | EventKind::SessionEvict
+                    | EventKind::Shed { .. }
+            ) {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(),
+                         Json::Str(e.kind.label().to_string()));
+                m.insert("ph".to_string(), Json::Str("i".to_string()));
+                m.insert("s".to_string(), Json::Str("g".to_string()));
+                m.insert("pid".to_string(),
+                         Json::Num(e.kind.shard().unwrap_or(0) as f64));
+                m.insert("tid".to_string(), Json::Num(0.0));
+                m.insert("ts".to_string(), Json::Num(e.t_us as f64));
+                events.push(Json::Obj(m));
+            }
+        }
+        let mut root = BTreeMap::new();
+        root.insert("traceEvents".to_string(), Json::Arr(events));
+        root.insert("displayTimeUnit".to_string(),
+                    Json::Str("ms".to_string()));
+        Json::Obj(root).to_string()
+    }
+}
+
+/// A log-bucketed latency histogram (milliseconds), rendered in
+/// Prometheus histogram text format — the "not just p50/p95/p99" half
+/// of the latency story. Buckets double from 0.25 ms to ~16 s plus
+/// `+Inf`; bounds are fixed so series are comparable across runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    bounds: Vec<f64>,
+    /// one count per bound, plus the +Inf overflow bucket at the end.
+    counts: Vec<u64>,
+    sum_ms: f64,
+    total: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::latency_ms()
+    }
+}
+
+impl LogHistogram {
+    /// The standard latency shape: 0.25 ms · 2^k for k in 0..=16.
+    pub fn latency_ms() -> Self {
+        let bounds: Vec<f64> =
+            (0..=16).map(|k| 0.25 * f64::powi(2.0, k)).collect();
+        let counts = vec![0u64; bounds.len() + 1];
+        Self { bounds, counts, sum_ms: 0.0, total: 0 }
+    }
+
+    pub fn observe(&mut self, ms: f64) {
+        if !ms.is_finite() {
+            return;
+        }
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| ms <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum_ms += ms.max(0.0);
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ms
+    }
+
+    /// (upper bound in ms, cumulative count) per bucket; the final
+    /// entry is the +Inf bucket (bound = `f64::INFINITY`).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            let bound = self
+                .bounds
+                .get(i)
+                .copied()
+                .unwrap_or(f64::INFINITY);
+            out.push((bound, acc));
+        }
+        out
+    }
+}
+
+/// Format a metric value the way the scrapers here expect: integers
+/// bare (`3`, parseable as `u64`), everything else as shortest float.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn fmt_labels(labels: &[(&str, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Typed Prometheus text builder: counters, gauges and histograms with
+/// `# HELP` / `# TYPE` headers emitted once per metric family. This is
+/// THE metrics assembly path — the front door renders `/metrics`
+/// through it, so a counter that exists but is never registered simply
+/// does not appear (and the exhaustive-render test fails).
+#[derive(Default)]
+pub struct Registry {
+    out: String,
+    seen: BTreeSet<String>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, kind: &str, help: &str) {
+        if self.seen.insert(name.to_string()) {
+            self.out.push_str(&format!("# HELP {name} {help}\n"));
+            self.out.push_str(&format!("# TYPE {name} {kind}\n"));
+        }
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str,
+                   labels: &[(&str, String)], value: f64) {
+        self.header(name, "counter", help);
+        self.out.push_str(&format!("{name}{} {}\n", fmt_labels(labels),
+                                   fmt_value(value)));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str,
+                 labels: &[(&str, String)], value: f64) {
+        self.header(name, "gauge", help);
+        self.out.push_str(&format!("{name}{} {}\n", fmt_labels(labels),
+                                   fmt_value(value)));
+    }
+
+    /// An untyped, free-form value line (e.g. a hex fingerprint) —
+    /// kept for scrape-compatibility with pre-registry consumers.
+    pub fn raw(&mut self, name: &str, help: &str, value: &str) {
+        self.header(name, "untyped", help);
+        self.out.push_str(&format!("{name} {value}\n"));
+    }
+
+    pub fn histogram(&mut self, name: &str, help: &str,
+                     labels: &[(&str, String)], h: &LogHistogram) {
+        self.header(name, "histogram", help);
+        for (bound, cum) in h.cumulative() {
+            let le = if bound.is_infinite() {
+                "+Inf".to_string()
+            } else {
+                fmt_value_f(bound)
+            };
+            let mut ls: Vec<(&str, String)> = labels.to_vec();
+            ls.push(("le", le));
+            self.out.push_str(&format!("{name}_bucket{} {cum}\n",
+                                       fmt_labels(&ls)));
+        }
+        self.out.push_str(&format!("{name}_sum{} {}\n", fmt_labels(labels),
+                                   fmt_value_f(h.sum_ms())));
+        self.out.push_str(&format!("{name}_count{} {}\n",
+                                   fmt_labels(labels), h.total()));
+    }
+
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+/// Histogram bound/sum formatting (always decimal, never scientific).
+fn fmt_value_f(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_keeps_the_most_recent_events() {
+        let ring = FlightRecorder::new(8);
+        for i in 0..20u64 {
+            ring.push(i, i, EventKind::Admitted);
+        }
+        assert_eq!(ring.recorded(), 20);
+        let events = ring.dump();
+        assert_eq!(events.len(), 8, "ring stays bounded");
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<_>>(),
+                   "overwrite keeps the newest ring_cap events in order");
+    }
+
+    #[test]
+    fn ring_survives_concurrent_writers() {
+        let ring = Arc::new(FlightRecorder::new(64));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let ring = ring.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        ring.push(i, t * 1000 + i,
+                                  EventKind::Retry { attempt: t as u32 });
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(ring.recorded(), 8 * 500);
+        let events = ring.dump();
+        assert_eq!(events.len(), 64);
+        // every resident slot holds a distinct sequence number from the
+        // final window (no torn/duplicated writes)
+        let mut seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), 64);
+        assert!(seqs.iter().all(|&s| s < 4000));
+    }
+
+    #[test]
+    fn spans_assemble_the_request_lifecycle() {
+        let obs = Obs::new(&ObsSpec::default());
+        obs.event(7, EventKind::Retry { attempt: 1 });
+        obs.event(7, EventKind::Admitted);
+        obs.event(7, EventKind::Routed { shard: 1 });
+        obs.event(7, EventKind::Dequeued { shard: 1 });
+        obs.event(7, EventKind::Scheduled { shard: 1, slot: 3 });
+        obs.event(7, EventKind::FirstToken { shard: 1, slot: 3 });
+        obs.event(7, EventKind::Done { shard: 1, slot: 3, tokens: 5 });
+        let spans = obs.completed_spans();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!(s.id, 7);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.replays, 0);
+        assert_eq!((s.shard, s.slot), (Some(1), Some(3)));
+        assert_eq!(s.tokens, 5);
+        assert!(!s.expired);
+        // monotonic marks
+        let sched = s.scheduled_us.unwrap();
+        let done = s.done_us.unwrap();
+        assert!(s.admitted_us <= s.routed_us.unwrap());
+        assert!(s.routed_us.unwrap() <= s.dequeued_us.unwrap());
+        assert!(s.dequeued_us.unwrap() <= sched);
+        assert!(sched <= s.first_token_us.unwrap());
+        assert!(s.first_token_us.unwrap() <= done);
+    }
+
+    #[test]
+    fn replayed_schedule_counts_as_replay_and_expiry_is_typed() {
+        let obs = Obs::new(&ObsSpec::default());
+        obs.event(1, EventKind::Admitted);
+        obs.event(1, EventKind::Scheduled { shard: 0, slot: 0 });
+        obs.event(0, EventKind::Respawn { shard: 0, generation: 1 });
+        obs.event(1, EventKind::Scheduled { shard: 0, slot: 1 });
+        obs.event(1, EventKind::Done { shard: 0, slot: 1, tokens: 2 });
+        obs.event(2, EventKind::Admitted);
+        obs.event(2, EventKind::Expired { shard: 0 });
+        let spans = obs.completed_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].replays, 1);
+        assert_eq!(spans[0].slot, Some(1));
+        assert!(spans[1].expired);
+        assert!(spans[1].done_us.is_some());
+    }
+
+    #[test]
+    fn completed_span_table_is_bounded() {
+        let obs = Obs::new(&ObsSpec { ring_cap: 16, max_spans: 3 });
+        for id in 0..5u64 {
+            obs.event(id, EventKind::Admitted);
+            obs.event(id, EventKind::Done { shard: 0, slot: 0, tokens: 1 });
+        }
+        assert_eq!(obs.completed_spans().len(), 3);
+        assert_eq!(obs.dropped_spans(), 2);
+    }
+
+    #[test]
+    fn stage_accum_counts_nanos_per_stage() {
+        let acc = StageAccum::default();
+        acc.add(Stage::GateGemm, Duration::from_nanos(500));
+        acc.add(Stage::GateGemm, Duration::from_nanos(250));
+        acc.add(Stage::LmHead, Duration::from_micros(1));
+        let s = acc.snapshot();
+        assert_eq!(s.nanos[Stage::GateGemm as usize], 750);
+        assert_eq!(s.dispatches(Stage::GateGemm), 2);
+        assert_eq!(s.nanos[Stage::LmHead as usize], 1000);
+        assert_eq!(s.dispatches(Stage::XGemm), 0);
+        assert!(s.seconds(Stage::GateGemm) > 0.0);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_with_nested_monotonic_spans() {
+        let obs = Obs::new(&ObsSpec::default());
+        for id in 0..4u64 {
+            obs.event(id, EventKind::Admitted);
+            obs.event(id, EventKind::Routed { shard: id as usize % 2 });
+            obs.event(id, EventKind::Scheduled {
+                shard: id as usize % 2, slot: id as usize });
+            obs.event(id, EventKind::Done {
+                shard: id as usize % 2, slot: id as usize, tokens: 3 });
+        }
+        obs.event(0, EventKind::Respawn { shard: 1, generation: 1 });
+        let text = obs.chrome_trace();
+        let doc = Json::parse(&text).expect("chrome trace parses");
+        let events = doc.get("traceEvents").and_then(Json::as_arr)
+            .expect("traceEvents array");
+        // 4 requests x (request + queue + run) + 1 instant respawn
+        assert_eq!(events.len(), 13);
+        let field = |e: &Json, k: &str| -> f64 {
+            e.get(k).and_then(Json::as_f64).unwrap()
+        };
+        let named = |want: &str| -> Vec<Json> {
+            events.iter()
+                .filter(|e| e.get("name").and_then(Json::as_str)
+                    == Some(want))
+                .cloned()
+                .collect()
+        };
+        let requests = named("request");
+        assert_eq!(requests.len(), 4);
+        for r in &requests {
+            let (pid, tid) = (field(r, "pid"), field(r, "tid"));
+            let (ts, dur) = (field(r, "ts"), field(r, "dur"));
+            // children nest inside the parent request span on the same
+            // (pid, tid) lane with monotonic timestamps
+            for child in ["queue", "run"] {
+                let c = named(child).into_iter()
+                    .find(|c| field(c, "pid") == pid
+                        && field(c, "tid") == tid
+                        && field(c, "ts") >= ts
+                        && field(c, "ts") + field(c, "dur") <= ts + dur
+                        + 1e-9)
+                    .unwrap_or_else(|| panic!(
+                        "no nested {child} span inside request \
+                         pid={pid} tid={tid}"));
+                assert!(field(&c, "dur") >= 0.0);
+            }
+        }
+        assert_eq!(named("respawn").len(), 1);
+    }
+
+    #[test]
+    fn log_histogram_buckets_and_renders_prometheus_text() {
+        let mut h = LogHistogram::latency_ms();
+        h.observe(0.1); // <= 0.25
+        h.observe(0.25); // boundary: still first bucket
+        h.observe(3.0); // <= 4
+        h.observe(1e9); // +Inf overflow
+        h.observe(f64::NAN); // dropped
+        assert_eq!(h.total(), 4);
+        let cum = h.cumulative();
+        assert_eq!(cum[0], (0.25, 2));
+        assert_eq!(cum.last().unwrap().1, 4, "+Inf is cumulative total");
+        assert!(cum.last().unwrap().0.is_infinite());
+        // cumulative counts never decrease
+        for w in cum.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        let mut reg = Registry::new();
+        reg.histogram("rbtw_latency_ms", "latency",
+                      &[("path", "total".to_string())], &h);
+        let text = reg.render();
+        assert!(text.contains("# TYPE rbtw_latency_ms histogram"));
+        assert!(text.contains(
+            "rbtw_latency_ms_bucket{path=\"total\",le=\"0.25\"} 2"));
+        assert!(text.contains(
+            "rbtw_latency_ms_bucket{path=\"total\",le=\"+Inf\"} 4"));
+        assert!(text.contains("rbtw_latency_ms_count{path=\"total\"} 4"));
+    }
+
+    #[test]
+    fn registry_emits_headers_once_and_integer_values_bare() {
+        let mut reg = Registry::new();
+        reg.counter("rbtw_x_total", "x", &[], 3.0);
+        reg.counter("rbtw_x_total", "x",
+                    &[("shard", "1".to_string())], 4.0);
+        reg.gauge("rbtw_g", "g", &[], 2.5);
+        reg.raw("rbtw_fp", "fingerprint", "deadbeef");
+        let text = reg.render();
+        assert_eq!(text.matches("# TYPE rbtw_x_total counter").count(), 1);
+        assert!(text.contains("rbtw_x_total 3\n"),
+                "integer counters render bare: {text}");
+        assert!(text.contains("rbtw_x_total{shard=\"1\"} 4\n"));
+        assert!(text.contains("rbtw_g 2.5\n"));
+        assert!(text.contains("rbtw_fp deadbeef\n"));
+    }
+
+    #[test]
+    fn stage_labels_are_distinct() {
+        let labels: BTreeSet<&str> =
+            Stage::all().iter().map(|s| s.label()).collect();
+        assert_eq!(labels.len(), Stage::COUNT);
+    }
+}

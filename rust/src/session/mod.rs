@@ -63,6 +63,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::coordinator::{log_softmax_at, validate_request, Request};
 use crate::engine::SharedModel;
+use crate::obs::{EventKind, Obs};
 use crate::quant::CellArch;
 
 /// Default LRU byte budget for the serving session cache (16 MiB —
@@ -280,6 +281,8 @@ struct Inner {
     prefix_hits: u64,
     prefix_misses: u64,
     evictions: u64,
+    /// Observability hub; `None` = tracing off (see [`crate::obs`]).
+    obs: Option<Arc<Obs>>,
 }
 
 impl Inner {
@@ -314,6 +317,9 @@ impl Inner {
                 (None, None) => break,
             }
             self.evictions += 1;
+            if let Some(obs) = &self.obs {
+                obs.event(0, EventKind::SessionEvict);
+            }
         }
     }
 }
@@ -341,12 +347,21 @@ impl SessionCache {
                 prefix_hits: 0,
                 prefix_misses: 0,
                 evictions: 0,
+                obs: None,
             })),
         }
     }
 
     pub fn grid(&self) -> usize {
         self.inner.lock().unwrap().grid
+    }
+
+    /// Attach (or detach) the observability hub: prefix hits/misses
+    /// and evictions then land on the flight recorder (see
+    /// [`crate::obs`]). The cluster wires this when built with
+    /// tracing on.
+    pub fn set_obs(&self, obs: Option<Arc<Obs>>) {
+        self.inner.lock().unwrap().obs = obs;
     }
 
     pub fn counters(&self) -> SessionCounters {
@@ -461,8 +476,14 @@ impl SessionCache {
         if !cands.is_empty() {
             if plan.start_pos > 0 {
                 g.prefix_hits += 1;
+                if let Some(obs) = &g.obs {
+                    obs.event(req.id, EventKind::SessionHit);
+                }
             } else {
                 g.prefix_misses += 1;
+                if let Some(obs) = &g.obs {
+                    obs.event(req.id, EventKind::SessionMiss);
+                }
             }
         }
         // capture the longest grid-aligned prefix nobody has published

@@ -1,8 +1,14 @@
 //! Wall-clock bench harness (no `criterion` offline): warmup + timed
 //! iterations with robust statistics, used by every `cargo bench` target.
+//!
+//! Also home of the bench-regression gate: [`compare_reports`] diffs a
+//! current `BENCH_*.json` against a stored baseline, flagging tracked
+//! throughput/latency keys that moved the wrong way beyond a tolerance
+//! (`rbtw bench-diff` / the ci.sh bench gate drive it).
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::percentiles;
 
 /// Result of one benchmark measurement.
@@ -108,6 +114,128 @@ pub fn print_header(title: &str) {
     );
 }
 
+/// Which way a tracked bench key is allowed to move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Throughput-like (`*_per_sec`, `speedup*`): a drop regresses.
+    HigherIsBetter,
+    /// Latency-like (`*_ns`, `*_us`, `*_ms`): a rise regresses.
+    LowerIsBetter,
+}
+
+/// Classify a `BENCH_*.json` key: tracked keys gate the comparison,
+/// everything else (shape fields like `rows`, `batch`, seeds) is
+/// ignored.
+pub fn tracked_direction(key: &str) -> Option<Direction> {
+    if key.ends_with("_per_sec") || key.starts_with("speedup") {
+        return Some(Direction::HigherIsBetter);
+    }
+    if key.ends_with("_ns") || key.ends_with("_us") || key.ends_with("_ms")
+        || key.contains("_ns_per_") || key.contains("_ms_per_")
+    {
+        return Some(Direction::LowerIsBetter);
+    }
+    None
+}
+
+/// One tracked key that moved the wrong way beyond tolerance.
+#[derive(Clone, Debug)]
+pub struct BenchRegression {
+    /// Where in the report tree (`/kernels[3].ternary-lut/ns_per_call`).
+    pub path: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Relative change, signed so that positive = worse (e.g. `0.4` =
+    /// 40% slower / 40% less throughput).
+    pub worse_by: f64,
+}
+
+impl BenchRegression {
+    pub fn report(&self) -> String {
+        format!("{}: baseline {:.1} -> current {:.1} ({:.0}% worse)",
+                self.path, self.baseline, self.current,
+                self.worse_by * 100.0)
+    }
+}
+
+/// The bench gate's relative tolerance: `RBTW_BENCH_TOLERANCE` (a
+/// fraction, e.g. `0.3`) or a wide default — wall-clock benches on
+/// shared CI hosts are noisy, so the gate only catches collapses, not
+/// jitter.
+pub fn default_tolerance() -> f64 {
+    std::env::var("RBTW_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|t| t.is_finite() && *t >= 0.0)
+        .unwrap_or(0.5)
+}
+
+/// Diff `current` against `baseline` (two parsed `BENCH_*.json`
+/// trees): walk matching object keys and array indices, and flag every
+/// tracked numeric key that moved the wrong way by more than
+/// `tolerance` (relative). Keys present on only one side are ignored —
+/// adding or retiring a bench row is not a regression.
+pub fn compare_reports(baseline: &Json, current: &Json, tolerance: f64)
+    -> Vec<BenchRegression> {
+    let mut out = vec![];
+    walk_reports(baseline, current, "", tolerance, &mut out);
+    out
+}
+
+fn walk_reports(base: &Json, cur: &Json, path: &str, tol: f64,
+                out: &mut Vec<BenchRegression>) {
+    match (base, cur) {
+        (Json::Obj(b), Json::Obj(c)) => {
+            for (k, bv) in b {
+                let Some(cv) = c.get(k) else { continue };
+                if let (Json::Num(bn), Json::Num(cn)) = (bv, cv) {
+                    if let Some(dir) = tracked_direction(k) {
+                        check_pair(*bn, *cn, dir,
+                                   &format!("{path}/{k}"), tol, out);
+                    }
+                } else {
+                    walk_reports(bv, cv, &format!("{path}/{k}"), tol, out);
+                }
+            }
+        }
+        (Json::Arr(b), Json::Arr(c)) => {
+            for (i, (bv, cv)) in b.iter().zip(c.iter()).enumerate() {
+                // label array entries by their identity key when they
+                // carry one, so a report names the kernel, not just [3]
+                let tag = bv
+                    .get("kernel")
+                    .or_else(|| bv.get("name"))
+                    .or_else(|| bv.get("label"))
+                    .and_then(|j| j.as_str())
+                    .map(|s| format!("[{i}].{s}"))
+                    .unwrap_or_else(|| format!("[{i}]"));
+                walk_reports(bv, cv, &format!("{path}{tag}"), tol, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn check_pair(base: f64, cur: f64, dir: Direction, path: &str, tol: f64,
+              out: &mut Vec<BenchRegression>) {
+    // degenerate baselines (zero, negative, NaN) cannot gate anything
+    if !base.is_finite() || !cur.is_finite() || base <= 0.0 {
+        return;
+    }
+    let worse_by = match dir {
+        Direction::HigherIsBetter => (base - cur) / base,
+        Direction::LowerIsBetter => (cur - base) / base,
+    };
+    if worse_by > tol {
+        out.push(BenchRegression {
+            path: path.to_string(),
+            baseline: base,
+            current: cur,
+            worse_by,
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +264,64 @@ mod tests {
         assert!(fmt_ns(5_000.0).ends_with("µs"));
         assert!(fmt_ns(5_000_000.0).ends_with("ms"));
         assert!(fmt_ns(5e9).ends_with('s'));
+    }
+
+    #[test]
+    fn tracked_directions_cover_the_bench_key_families() {
+        assert_eq!(tracked_direction("tokens_per_sec"),
+                   Some(Direction::HigherIsBetter));
+        assert_eq!(tracked_direction("batched_tokens_per_sec"),
+                   Some(Direction::HigherIsBetter));
+        assert_eq!(tracked_direction("speedup_vs_per_slot"),
+                   Some(Direction::HigherIsBetter));
+        assert_eq!(tracked_direction("ns_per_call"),
+                   Some(Direction::LowerIsBetter));
+        assert_eq!(tracked_direction("p95_ms"),
+                   Some(Direction::LowerIsBetter));
+        assert_eq!(tracked_direction("per_slot_ns_per_call"),
+                   Some(Direction::LowerIsBetter));
+        // shape/identity fields never gate
+        assert_eq!(tracked_direction("rows"), None);
+        assert_eq!(tracked_direction("batch"), None);
+        assert_eq!(tracked_direction("seed"), None);
+    }
+
+    fn report(tps: f64, p95: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"bench":"x","rows":[{{"name":"a",
+                "tokens_per_sec":{tps},"p95_ms":{p95},"batch":8}}]}}"#))
+            .unwrap()
+    }
+
+    #[test]
+    fn compare_reports_flags_only_real_regressions() {
+        let base = report(1000.0, 10.0);
+        // identical -> clean
+        assert!(compare_reports(&base, &report(1000.0, 10.0), 0.3)
+            .is_empty());
+        // within tolerance -> clean (both directions)
+        assert!(compare_reports(&base, &report(800.0, 12.0), 0.3)
+            .is_empty());
+        // improvements never flag, however large
+        assert!(compare_reports(&base, &report(9000.0, 0.1), 0.3)
+            .is_empty());
+        // throughput collapse -> flagged, with the identity in the path
+        let regs = compare_reports(&base, &report(500.0, 10.0), 0.3);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].path.contains("tokens_per_sec"), "{}", regs[0].path);
+        assert!(regs[0].path.contains(".a"), "{}", regs[0].path);
+        assert!((regs[0].worse_by - 0.5).abs() < 1e-9);
+        // latency blow-up -> flagged
+        let regs = compare_reports(&base, &report(1000.0, 20.0), 0.3);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].path.contains("p95_ms"));
+        // keys only one side has are ignored (new/retired rows)
+        let extra = Json::parse(
+            r#"{"bench":"x","rows":[],"new_tokens_per_sec":1.0}"#).unwrap();
+        assert!(compare_reports(&base, &extra, 0.3).is_empty());
+        assert!(compare_reports(&extra, &base, 0.3).is_empty());
+        // a zero baseline cannot gate
+        let zero = report(0.0, 0.0);
+        assert!(compare_reports(&zero, &report(0.0, 5.0), 0.3).is_empty());
     }
 }

@@ -1,0 +1,213 @@
+//! Observability non-perturbation: `--trace` must be *provably* free —
+//! the same greedy load served with the obs hub armed and with it off
+//! produces bit-identical responses (ids, every generated token, every
+//! prompt log-prob mantissa bit) across cell archs, depths and thread
+//! counts. Tracing may observe scheduling; it may never change it in a
+//! way the responses can see.
+//!
+//! The second half checks the trace itself is worth trusting: spans
+//! cover admission → done for every completed request with monotonic
+//! marks, and the Chrome trace-event dump is valid JSON whose nested
+//! `queue`/`run` children stay inside their enclosing `request` span —
+//! including across a supervised shard respawn mid-load.
+
+use std::sync::Arc;
+
+use rbtw::cluster::{run_cluster_load, run_cluster_load_with, ClusterOptions,
+                    RoutePolicy};
+use rbtw::coordinator::LoadSpec;
+use rbtw::engine::{BackendKind, BackendSpec, CellArch, ModelWeights,
+                   SharedModel};
+use rbtw::faults::{Fault, FaultPlan};
+use rbtw::obs::{Obs, ObsSpec};
+use rbtw::util::Json;
+
+const SEED: u64 = 13;
+
+fn shared(arch: CellArch, layers: usize) -> SharedModel {
+    let w = ModelWeights::synthetic_arch(28, 16, arch, layers, "ter", 0x0B5);
+    SharedModel::prepare(&w, BackendKind::PackedPlanes, SEED).unwrap()
+}
+
+fn spec(arch: CellArch, layers: usize, threads: usize) -> BackendSpec {
+    BackendSpec::with(BackendKind::PackedPlanes, 4, SEED)
+        .with_arch(arch, layers)
+        .with_shards(2)
+        .with_threads(threads)
+}
+
+fn load(n: usize) -> LoadSpec {
+    LoadSpec { n_requests: n, prompt_len: 4, gen_len: 6,
+               temperature: 0.0, seed: 0x0B5E }
+}
+
+/// (id, tokens, logprob bits) rows sorted by id — everything tracing
+/// could corrupt, nothing it may legitimately change (timings).
+fn rows(report: rbtw::cluster::ClusterReport) -> Vec<(u64, Vec<i32>, u64)> {
+    let mut rows: Vec<_> = report
+        .responses
+        .into_iter()
+        .map(|cr| {
+            let r = cr.into_done().expect("request not served");
+            (r.id, r.generated, r.prompt_logprob.to_bits())
+        })
+        .collect();
+    rows.sort_by_key(|r| r.0);
+    rows
+}
+
+#[test]
+fn tracing_is_digest_invisible_across_arch_depth_and_threads() {
+    for (arch, layers) in [
+        (CellArch::Lstm, 1),
+        (CellArch::Lstm, 2),
+        (CellArch::Gru, 1),
+        (CellArch::Gru, 2),
+    ] {
+        let model = shared(arch, layers);
+        for threads in [1usize, 4] {
+            let label = format!("{} x{layers} threads={threads}",
+                                arch.label());
+            let sp = spec(arch, layers, threads);
+            let ld = load(16);
+            let off = rows(run_cluster_load(&model, &sp,
+                                            RoutePolicy::LeastLoaded,
+                                            ld.n_requests, &ld).unwrap());
+            let obs = Obs::new(&ObsSpec::default());
+            let on = rows(run_cluster_load_with(
+                &model, &sp,
+                ClusterOptions {
+                    queue_cap: ld.n_requests,
+                    policy: RoutePolicy::LeastLoaded,
+                    obs: Some(obs.clone()),
+                    ..ClusterOptions::default()
+                },
+                &ld).unwrap());
+            assert_eq!(on, off,
+                       "[{label}] tracing perturbed a greedy response");
+            // and the traced run actually traced: a span per request
+            assert_eq!(obs.completed_spans().len(), ld.n_requests,
+                       "[{label}] span coverage");
+        }
+    }
+}
+
+#[test]
+fn spans_cover_admission_to_done_with_monotonic_marks() {
+    let model = shared(CellArch::Gru, 2);
+    let obs = Obs::new(&ObsSpec::default());
+    let ld = load(20);
+    let got = rows(run_cluster_load_with(
+        &model, &spec(CellArch::Gru, 2, 1),
+        ClusterOptions { queue_cap: ld.n_requests,
+                         policy: RoutePolicy::RoundRobin,
+                         obs: Some(obs.clone()),
+                         ..ClusterOptions::default() },
+        &ld).unwrap());
+    assert_eq!(got.len(), ld.n_requests);
+    let mut spans = obs.completed_spans();
+    spans.sort_by_key(|s| s.id);
+    assert_eq!(spans.len(), ld.n_requests);
+    for s in &spans {
+        // every stage mark present, in causal order
+        let routed = s.routed_us.expect("routed mark");
+        let dequeued = s.dequeued_us.expect("dequeued mark");
+        let sched = s.scheduled_us.expect("scheduled mark");
+        let first = s.first_token_us.expect("first-token mark");
+        let done = s.done_us.expect("done mark");
+        assert!(s.admitted_us <= routed, "req {}", s.id);
+        assert!(routed <= dequeued, "req {}", s.id);
+        assert!(dequeued <= sched, "req {}", s.id);
+        assert!(sched <= first, "req {}", s.id);
+        assert!(first <= done, "req {}", s.id);
+        assert!(s.shard.is_some() && s.slot.is_some(), "req {}", s.id);
+        assert_eq!(s.tokens, 6, "req {} token count", s.id);
+        assert!(!s.expired);
+    }
+    // the engine-stage profile accumulated real time on both shards
+    let stages = obs.stage_snapshots();
+    assert_eq!(stages.len(), 2, "one stage accumulator per shard");
+    for ss in &stages {
+        let dispatches: u64 = rbtw::obs::Stage::all()
+            .iter()
+            .map(|&st| ss.snap.dispatches(st))
+            .sum();
+        assert!(dispatches > 0,
+                "shard {} profiled no stage dispatches", ss.shard);
+    }
+}
+
+/// Pull (name, pid, tid, ts, dur) out of a chrome-trace "X" event.
+fn x_event(ev: &Json) -> Option<(String, u64, u64, u64, u64)> {
+    if ev.get("ph").and_then(Json::as_str) != Some("X") {
+        return None;
+    }
+    Some((
+        ev.get("name").and_then(Json::as_str).unwrap().to_string(),
+        ev.get("pid").and_then(Json::as_f64).unwrap() as u64,
+        ev.get("tid").and_then(Json::as_f64).unwrap() as u64,
+        ev.get("ts").and_then(Json::as_f64).unwrap() as u64,
+        ev.get("dur").and_then(Json::as_f64).unwrap() as u64,
+    ))
+}
+
+#[test]
+fn chrome_trace_nests_spans_and_survives_a_supervised_respawn() {
+    let model = shared(CellArch::Lstm, 1);
+    let obs = Obs::new(&ObsSpec::default());
+    let plan = Arc::new(FaultPlan::new(0, vec![
+        Fault::ShardPanic { shard: 0, step: 8 },
+    ]));
+    let ld = load(24);
+    let report = run_cluster_load_with(
+        &model, &spec(CellArch::Lstm, 1, 1),
+        ClusterOptions { queue_cap: ld.n_requests,
+                         policy: RoutePolicy::LeastLoaded,
+                         supervise: true,
+                         faults: Some(plan),
+                         obs: Some(obs.clone()),
+                         ..ClusterOptions::default() },
+        &ld).unwrap();
+    assert!(report.stats.respawns >= 1,
+            "the scripted panic never fired — the test proved nothing");
+    assert_eq!(report.responses.len(), ld.n_requests,
+               "zero accepted-request loss under the crash");
+
+    let text = obs.chrome_trace();
+    let json = Json::parse(&text).expect("chrome trace must be valid JSON");
+    let events = json.get("traceEvents").and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+
+    // every completed request shows as an enclosing `request` span with
+    // `queue` + `run` children nested inside it on the same pid/tid
+    let xs: Vec<_> = events.iter().filter_map(x_event).collect();
+    let requests: Vec<_> =
+        xs.iter().filter(|e| e.0 == "request").collect();
+    assert_eq!(requests.len(), ld.n_requests, "one span per request");
+    for (name, pid, tid, ts, dur) in &xs {
+        if name == "request" {
+            continue;
+        }
+        assert!(name == "queue" || name == "run", "phase name {name}");
+        let enclosed = requests.iter().any(|(_, rp, rt, rts, rdur)| {
+            rp == pid && rt == tid && *rts <= *ts
+                && ts + dur <= rts + rdur
+        });
+        assert!(enclosed,
+                "{name} span at ts={ts} dur={dur} (pid {pid} tid {tid}) \
+                 not nested in any request span");
+    }
+    // the respawn shows up as an instant event on the crashed shard
+    let respawn = events.iter().any(|ev| {
+        ev.get("ph").and_then(Json::as_str) == Some("i")
+            && ev.get("name").and_then(Json::as_str) == Some("respawn")
+            && ev.get("pid").and_then(Json::as_f64) == Some(0.0)
+    });
+    assert!(respawn, "no respawn instant event in the trace");
+    // replayed requests are annotated on their spans
+    let replayed: u32 =
+        obs.completed_spans().iter().map(|s| s.replays).sum();
+    assert!(replayed >= 1,
+            "the crash replayed in-flight work but no span recorded it");
+}
