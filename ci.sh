@@ -293,6 +293,103 @@ if [ ! -s target/trace_server.json ]; then
 fi
 ./target/release/rbtw trace-check target/trace_server.json
 
+# Helper for the datapath gates below: start `rbtw serve synthetic
+# --listen` with the given extra flags, drive the standard netclient
+# load over the wire, and print the greedy digest on stdout. Failures
+# report on stderr and return non-zero (which aborts the script when
+# called via command substitution in an assignment).
+serve_wire_digest() {
+    local log="$1"; shift
+    rm -f "$log"
+    ./target/release/rbtw serve synthetic --listen 127.0.0.1:0 \
+        "$@" > "$log" < /dev/null &
+    local srv=$!
+    local addr=""
+    for _ in $(seq 1 100); do
+        addr=$(sed -n 's/^listening on //p' "$log" | head -n1)
+        [ -n "$addr" ] && break
+        if ! kill -0 "$srv" 2>/dev/null; then
+            echo "FAIL: serve $* exited before binding:" >&2
+            cat "$log" >&2
+            return 1
+        fi
+        sleep 0.1
+    done
+    if [ -z "$addr" ]; then
+        echo "FAIL: serve $* never printed its address:" >&2
+        cat "$log" >&2
+        kill "$srv" 2>/dev/null || true
+        return 1
+    fi
+    local out
+    if ! out=$(timeout 120 ./target/release/examples/netclient \
+        --connect "$addr" --drain); then
+        echo "FAIL: netclient failed against serve $*" >&2
+        cat "$log" >&2
+        return 1
+    fi
+    if ! wait "$srv"; then
+        echo "FAIL: serve $* exited non-zero after drain:" >&2
+        cat "$log" >&2
+        return 1
+    fi
+    printf '%s\n' "$out" | sed -n 's/^greedy://p'
+}
+
+# Datapath gate 1: `--datapath f32` is the documented exact escape
+# hatch — its wire digest must be BIT-IDENTICAL to the flag-free
+# in-process digest above. Any drift means the datapath plumbing
+# perturbed the default path.
+echo "== datapath gate (--datapath f32 must match the default digest) =="
+F32_DIGEST=$(serve_wire_digest target/datapath_f32_server.log \
+    --shards 2 --slots 4 --datapath f32)
+if [ -z "$F32_DIGEST" ]; then
+    echo "FAIL: --datapath f32 serve produced no greedy digest"
+    exit 1
+fi
+if [ "$F32_DIGEST" != "$LOCAL_DIGEST" ]; then
+    echo "FAIL: --datapath f32 digest $F32_DIGEST != default $LOCAL_DIGEST"
+    echo "      (the f32 datapath must be bit-identical to no flag at all)"
+    exit 1
+fi
+echo "--datapath f32 digest identical to the default build: $F32_DIGEST"
+
+# Datapath gate 2: the xnor datapath changes logits by design, so there
+# is no f32 reference digest — instead its digest must be
+# SELF-CONSISTENT: identical across thread counts {1, 4} and shard
+# counts {1, 2}. A split means the quantized accumulators leaked
+# scheduling or column-sharding into the logits.
+echo "== datapath gate (xnor digest invariant across threads x shards) =="
+XNOR_REF=""
+for threads in 1 4; do
+    for shards in 1 2; do
+        DGST=$(serve_wire_digest \
+            "target/datapath_xnor_t${threads}_s${shards}.log" \
+            --shards "$shards" --slots 4 --threads "$threads" \
+            --datapath xnor)
+        if [ -z "$DGST" ]; then
+            echo "FAIL: xnor serve (threads=$threads shards=$shards)" \
+                 "produced no greedy digest"
+            exit 1
+        fi
+        if [ -z "$XNOR_REF" ]; then
+            XNOR_REF="$DGST"
+        elif [ "$DGST" != "$XNOR_REF" ]; then
+            echo "FAIL: xnor digest $DGST (threads=$threads" \
+                 "shards=$shards) != $XNOR_REF"
+            echo "      (the xnor datapath must be thread- and" \
+                 "shard-invariant)"
+            exit 1
+        fi
+    done
+done
+if [ "$XNOR_REF" = "$LOCAL_DIGEST" ]; then
+    echo "FAIL: xnor digest equals the f32 digest — the xnor datapath"
+    echo "      never engaged (the gate would be vacuous)"
+    exit 1
+fi
+echo "xnor digest stable across threads {1,4} x shards {1,2}: $XNOR_REF"
+
 # Bench-regression gate: re-measure the GEMM kernel bench and diff the
 # tracked throughput/latency keys against the stored baseline
 # (`rbtw bench-diff` exits non-zero past the tolerance; see
@@ -309,6 +406,23 @@ else
 (regression diff starts next run)"
     mkdir -p target/bench_baseline
     cp BENCH_gemm_kernels.json "$BENCH_BASELINE"
+fi
+
+# Same gate for the end-to-end serving bench: per-backend throughput
+# rows (per-slot vs batched, thread/layer sweep) diffed against the
+# stored baseline. Identity-keyed row matching in bench-diff means a
+# new backend/datapath row in either report is skipped, not mispaired.
+echo "== bench-regression gate (serve_backends throughput) =="
+cargo bench --bench serve_backends
+SERVE_BASELINE=target/bench_baseline/BENCH_serve_backends.json
+if [ -s "$SERVE_BASELINE" ]; then
+    ./target/release/rbtw bench-diff "$SERVE_BASELINE" \
+        BENCH_serve_backends.json
+else
+    echo "no stored baseline — saving this run to $SERVE_BASELINE \
+(regression diff starts next run)"
+    mkdir -p target/bench_baseline
+    cp BENCH_serve_backends.json "$SERVE_BASELINE"
 fi
 
 # The seed code predates rustfmt; keep the check advisory unless

@@ -14,10 +14,11 @@ mod common;
 
 use std::collections::BTreeMap;
 
+use rbtw::quant::act::BinarizedBatch;
 use rbtw::quant::{gemm_binary_lut, gemm_ternary_lut, gemm_ternary_planes,
-                  gemv_binary_lut, gemv_ternary_lut, gemv_ternary_planes,
-                  GemmScratch, LutScratch, PackedBinary, PackedTernary,
-                  TernaryPlanes};
+                  gemm_xnor, gemv_binary_lut, gemv_ternary_lut,
+                  gemv_ternary_planes, GemmScratch, LutScratch, Packed,
+                  PackedBinary, PackedTernary, TernaryPlanes};
 use rbtw::util::bench::{bench, black_box};
 use rbtw::util::table::Table;
 use rbtw::util::{Json, Rng};
@@ -45,6 +46,9 @@ fn main() -> anyhow::Result<()> {
     let tern = PackedTernary::pack(&tern_dense, rows, cols, alpha);
     let planes = TernaryPlanes::from_packed(&tern);
     let bin = PackedBinary::pack(&bin_dense, rows, cols, alpha);
+    let tern_packed = Packed::Ternary(tern.clone());
+    let planes_packed = Packed::Planes(planes.clone());
+    let bin_packed = Packed::Binary(bin.clone());
 
     let mut t = Table::new(&["kernel", "batch", "ns/call", "ns/row",
                              "vs per-slot"]);
@@ -55,12 +59,15 @@ fn main() -> anyhow::Result<()> {
         let mut gs = GemmScratch::default();
         let mut ls = LutScratch::default();
 
-        // (label, per-slot reference ns, tiled ns) per layout
-        let mut record = |label: &str, per_slot_ns: f64, tiled_ns: f64,
-                          t: &mut Table, json_rows: &mut Vec<Json>| {
+        // (label, datapath tag, per-slot reference ns, tiled ns) per
+        // layout — the datapath tag keeps bench-diff's kernel-identity
+        // matching from pairing f32-activation rows with xnor rows.
+        let mut record = |label: &str, datapath: &str, per_slot_ns: f64,
+                          tiled_ns: f64, t: &mut Table,
+                          json_rows: &mut Vec<Json>| {
             let speedup = per_slot_ns / tiled_ns.max(1e-9);
             t.row(&[
-                label.into(),
+                format!("{label}[{datapath}]"),
                 batch.to_string(),
                 format!("{tiled_ns:.0}"),
                 format!("{:.0}", tiled_ns / batch as f64),
@@ -68,6 +75,7 @@ fn main() -> anyhow::Result<()> {
             ]);
             json_rows.push(obj(vec![
                 ("kernel", Json::Str(label.to_string())),
+                ("datapath", Json::Str(datapath.to_string())),
                 ("rows", Json::Num(rows as f64)),
                 ("cols", Json::Num(cols as f64)),
                 ("batch", Json::Num(batch as f64)),
@@ -91,7 +99,8 @@ fn main() -> anyhow::Result<()> {
             gemm_ternary_lut(black_box(&tern), black_box(&x), batch, &mut y,
                              &mut gs);
         });
-        record("ternary-lut", ref_tern, m.median_ns, &mut t, &mut json_rows);
+        record("ternary-lut", "f32", ref_tern, m.median_ns, &mut t,
+               &mut json_rows);
 
         let m = bench(&format!("per-slot plane GEMV x{batch}"), || {
             for b in 0..batch {
@@ -106,7 +115,8 @@ fn main() -> anyhow::Result<()> {
             gemm_ternary_planes(black_box(&planes), black_box(&x), batch,
                                 &mut y, &mut gs);
         });
-        record("ternary-planes", ref_pl, m.median_ns, &mut t, &mut json_rows);
+        record("ternary-planes", "f32", ref_pl, m.median_ns, &mut t,
+               &mut json_rows);
 
         let m = bench(&format!("per-slot binary LUT GEMV x{batch}"), || {
             for b in 0..batch {
@@ -121,7 +131,26 @@ fn main() -> anyhow::Result<()> {
             gemm_binary_lut(black_box(&bin), black_box(&x), batch, &mut y,
                             &mut gs);
         });
-        record("binary-lut", ref_bin, m.median_ns, &mut t, &mut json_rows);
+        record("binary-lut", "f32", ref_bin, m.median_ns, &mut t,
+               &mut json_rows);
+
+        // the xnor/popcount datapath: binarize the batch and run the
+        // popcount GEMM, timed together — the pair is what replaces one
+        // recurrent f32 GEMM under --datapath xnor, so the pack cost
+        // must be on the clock.
+        let mut xb = BinarizedBatch::default();
+        for (label, w, per_slot) in [
+            ("ternary-lut", &tern_packed, ref_tern),
+            ("ternary-planes", &planes_packed, ref_pl),
+            ("binary-lut", &bin_packed, ref_bin),
+        ] {
+            let m = bench(&format!("xnor {label} pack+gemm x{batch}"), || {
+                xb.pack(black_box(&x), batch, rows);
+                gemm_xnor(black_box(w), &xb, batch, &mut y, &mut gs);
+            });
+            record(label, "xnor", per_slot, m.median_ns, &mut t,
+                   &mut json_rows);
+        }
     }
     t.print();
     println!("(per-slot column re-streams the packed planes once per batch \

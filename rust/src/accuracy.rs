@@ -1,0 +1,386 @@
+//! `rbtw accuracy` — task-level accuracy deltas per [`Datapath`].
+//!
+//! The low-bit activation datapaths (`lut8`, `xnor`) trade arithmetic
+//! exactness for hardware cost; this harness measures what that trade
+//! does to *task* metrics on the paper's three evaluation settings:
+//!
+//! | table  | task                 | model            |
+//! |--------|----------------------|------------------|
+//! | table1 | char-level PTB       | BN-LSTM ×1, h128 |
+//! | table4 | sequential MNIST     | BN-LSTM ×1, h64  |
+//! | table6 | char-level Linux Kernel | BN-GRU ×1, h128 |
+//!
+//! Each table runs once per datapath over the **same** synthetic model
+//! and the **same** deterministic inputs, so every difference in the
+//! report is attributable to the datapath alone. Char-LM tracks are
+//! teacher-forced and scored in f64 log-softmax bits-per-character;
+//! seq-MNIST feeds each 28×28 glyph as 784 intensity-binned tokens and
+//! takes the argmax over the first 10 logits at the final step.
+//!
+//! Because the serving models are synthetic (untrained), the raw metric
+//! is near chance and the headline number is
+//! `top1_agreement_vs_f32` — the fraction of per-step argmax decisions
+//! that match the f32 run. The f32 rows always report `delta_vs_f32 =
+//! 0` and agreement `1.0` by construction (the comparison is against
+//! the f32 run itself, which is deterministic).
+//!
+//! The CLI verb writes the report to `BENCH_accuracy_datapath.json`;
+//! the row keys are deliberately outside `bench-diff`'s tracked-metric
+//! grammar (`*_per_sec`, `*_ns`, ...) so accuracy rows inform humans
+//! without gating CI on an untrained model's noise.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::data::charlm::{self, CharCorpus};
+use crate::data::mnist::{GlyphSet, CLASSES, PIXELS};
+use crate::engine::{self, BackendKind, BackendSpec, ModelWeights};
+use crate::quant::cell::CellArch;
+use crate::quant::Datapath;
+use crate::util::{Json, Rng};
+
+/// Fixed seed for the synthetic eval models (shared by every datapath).
+const MODEL_SEED: u64 = 0xACC0;
+/// Slots driven in parallel during eval.
+const EVAL_SLOTS: usize = 8;
+/// Intensity bins for sequential MNIST (token = bin of pixel value).
+const MNIST_BINS: usize = 16;
+
+/// Knobs for one harness run; defaults match the CLI verb.
+#[derive(Clone, Copy, Debug)]
+pub struct AccuracyOpts {
+    /// Char-LM predictions scored per table (split across tracks).
+    pub lm_tokens: usize,
+    /// Seq-MNIST glyphs classified.
+    pub class_samples: usize,
+    /// Worker threads for the backend.
+    pub threads: usize,
+}
+
+impl Default for AccuracyOpts {
+    fn default() -> Self {
+        Self { lm_tokens: 4096, class_samples: 64, threads: 1 }
+    }
+}
+
+/// One eval setting (a row group in the report).
+#[derive(Clone, Copy, Debug)]
+pub struct TableSpec {
+    pub table: &'static str,
+    pub task: &'static str,
+    pub arch: CellArch,
+    pub layers: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    /// Metric label: `bpc` (lower better) or `accuracy` (higher).
+    pub metric: &'static str,
+}
+
+/// The three paper tables the harness reproduces.
+pub fn tables() -> [TableSpec; 3] {
+    [
+        TableSpec { table: "table1", task: "char-ptb", arch: CellArch::Lstm,
+                    layers: 1, vocab: 50, hidden: 128, metric: "bpc" },
+        TableSpec { table: "table4", task: "seq-mnist", arch: CellArch::Lstm,
+                    layers: 1, vocab: MNIST_BINS, hidden: 64,
+                    metric: "accuracy" },
+        TableSpec { table: "table6", task: "char-lk", arch: CellArch::Gru,
+                    layers: 1, vocab: 101, hidden: 128, metric: "bpc" },
+    ]
+}
+
+/// One (table, datapath) result row.
+#[derive(Clone, Debug)]
+pub struct AccuracyRow {
+    pub table: &'static str,
+    pub task: &'static str,
+    pub arch: CellArch,
+    pub layers: usize,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub datapath: Datapath,
+    pub metric: &'static str,
+    pub value: f64,
+    pub delta_vs_f32: f64,
+    pub top1_agreement_vs_f32: f64,
+}
+
+/// Metric value + the per-decision argmax trace (for agreement).
+struct EvalOut {
+    value: f64,
+    preds: Vec<i32>,
+}
+
+fn backend_for(weights: &ModelWeights, dp: Datapath, threads: usize)
+    -> Result<Box<dyn engine::InferBackend + Send>>
+{
+    let spec = BackendSpec::with(BackendKind::PackedCpu, EVAL_SLOTS, 0x5EED)
+        .with_arch(weights.arch, weights.layers)
+        .with_threads(threads)
+        .with_datapath(dp);
+    engine::from_weights(weights, &spec)
+}
+
+/// f64 log-softmax surprisal of `target` plus the row argmax.
+fn score_row(logits: &[f32], target: usize) -> (f64, i32) {
+    debug_assert!(target < logits.len());
+    let mut max = f64::NEG_INFINITY;
+    let mut arg = 0usize;
+    for (i, &l) in logits.iter().enumerate() {
+        if (l as f64) > max {
+            max = l as f64;
+            arg = i;
+        }
+    }
+    let mut denom = 0.0f64;
+    for &l in logits {
+        denom += (l as f64 - max).exp();
+    }
+    let nll = -((logits[target] as f64 - max) - denom.ln());
+    (nll, arg as i32)
+}
+
+/// Teacher-forced char-LM eval over `EVAL_SLOTS` contiguous tracks of
+/// the corpus test split. Returns bits-per-character.
+fn eval_char_lm(weights: &ModelWeights, dp: Datapath, corpus: &CharCorpus,
+                opts: &AccuracyOpts) -> Result<EvalOut>
+{
+    ensure!(corpus.vocab == weights.vocab,
+            "corpus vocab {} != model vocab {}",
+            corpus.vocab, weights.vocab);
+    let data = &corpus.test;
+    let want = opts.lm_tokens.div_ceil(EVAL_SLOTS).max(1);
+    // each track needs steps+1 tokens (last one is only ever a target)
+    let steps = want.min(data.len() / EVAL_SLOTS - 1);
+    ensure!(steps >= 1, "test split too short for {EVAL_SLOTS} tracks");
+    let track = data.len() / EVAL_SLOTS;
+
+    let mut be = backend_for(weights, dp, opts.threads)?;
+    for s in 0..EVAL_SLOTS {
+        be.reset_slot(s)?;
+    }
+    let vocab = weights.vocab;
+    let mut logits = vec![0.0f32; EVAL_SLOTS * vocab];
+    let mut tokens = vec![None; EVAL_SLOTS];
+    let mut nll_nats = 0.0f64;
+    let mut preds = Vec::with_capacity(steps * EVAL_SLOTS);
+    for t in 0..steps {
+        for (s, tok) in tokens.iter_mut().enumerate() {
+            *tok = Some(data[s * track + t] as i32);
+        }
+        be.step_batch(&tokens, &mut logits)?;
+        for s in 0..EVAL_SLOTS {
+            let target = data[s * track + t + 1] as usize;
+            let row = &logits[s * vocab..(s + 1) * vocab];
+            let (nll, arg) = score_row(row, target);
+            nll_nats += nll;
+            preds.push(arg);
+        }
+    }
+    let n = (steps * EVAL_SLOTS) as f64;
+    Ok(EvalOut { value: nll_nats / n / std::f64::consts::LN_2, preds })
+}
+
+/// Pixel value → token: 16 equal-width intensity bins.
+fn pixel_token(p: f32) -> i32 {
+    ((p * MNIST_BINS as f32) as usize).min(MNIST_BINS - 1) as i32
+}
+
+/// Sequential-MNIST eval: 784 binned-pixel steps per glyph, argmax over
+/// the first 10 logits at the final step. Returns accuracy.
+fn eval_mnist(weights: &ModelWeights, dp: Datapath, opts: &AccuracyOpts)
+    -> Result<EvalOut>
+{
+    ensure!(weights.vocab >= CLASSES && weights.vocab >= MNIST_BINS,
+            "seq-mnist model vocab {} too narrow", weights.vocab);
+    // Inputs fixed before the datapath loop runs: same glyphs, same
+    // order, for every datapath.
+    let glyphs = GlyphSet::new(0x600D);
+    let mut rng = Rng::new(0xD161);
+    let samples: Vec<(Vec<f32>, usize)> = (0..opts.class_samples.max(1))
+        .map(|_| glyphs.sample(&mut rng))
+        .collect();
+
+    let mut be = backend_for(weights, dp, opts.threads)?;
+    let vocab = weights.vocab;
+    let mut logits = vec![0.0f32; EVAL_SLOTS * vocab];
+    let mut preds = Vec::with_capacity(samples.len());
+    let mut correct = 0usize;
+    for chunk in samples.chunks(EVAL_SLOTS) {
+        let mut tokens = vec![None; EVAL_SLOTS];
+        for s in 0..chunk.len() {
+            be.reset_slot(s)?;
+        }
+        for t in 0..PIXELS {
+            for (s, tok) in tokens.iter_mut().enumerate() {
+                *tok = chunk.get(s).map(|(px, _)| pixel_token(px[t]));
+            }
+            be.step_batch(&tokens, &mut logits)?;
+        }
+        for (s, &(_, label)) in chunk.iter().enumerate() {
+            let row = &logits[s * vocab..s * vocab + CLASSES];
+            let mut arg = 0usize;
+            for (i, &l) in row.iter().enumerate() {
+                if l > row[arg] {
+                    arg = i;
+                }
+            }
+            preds.push(arg as i32);
+            if arg == label {
+                correct += 1;
+            }
+        }
+    }
+    Ok(EvalOut { value: correct as f64 / samples.len() as f64, preds })
+}
+
+fn eval_one(spec: &TableSpec, weights: &ModelWeights, dp: Datapath,
+            opts: &AccuracyOpts) -> Result<EvalOut>
+{
+    match spec.task {
+        "seq-mnist" => eval_mnist(weights, dp, opts),
+        "char-ptb" => {
+            let corpus = CharCorpus::synthetic(&charlm::ptb_like());
+            eval_char_lm(weights, dp, &corpus, opts)
+        }
+        "char-lk" => {
+            let corpus = CharCorpus::synthetic(&charlm::lk_like());
+            eval_char_lm(weights, dp, &corpus, opts)
+        }
+        other => anyhow::bail!("unknown accuracy task '{other}'"),
+    }
+}
+
+fn agreement(a: &[i32], b: &[i32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 1.0;
+    }
+    let same = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    same as f64 / a.len() as f64
+}
+
+/// Run every table under every datapath; rows are ordered
+/// (table-major, datapath f32 → lut8 → xnor).
+pub fn run(opts: &AccuracyOpts) -> Result<Vec<AccuracyRow>> {
+    let mut rows = Vec::new();
+    for spec in tables() {
+        let weights = ModelWeights::synthetic_arch(
+            spec.vocab, spec.hidden, spec.arch, spec.layers, "ter",
+            MODEL_SEED);
+        let mut f32_out: Option<EvalOut> = None;
+        for dp in Datapath::all() {
+            let out = eval_one(&spec, &weights, dp, opts)
+                .with_context(|| format!("{} under {dp}", spec.table))?;
+            let (delta, agree) = match &f32_out {
+                Some(base) => (out.value - base.value,
+                               agreement(&out.preds, &base.preds)),
+                None => (0.0, 1.0), // the f32 row IS the baseline
+            };
+            rows.push(AccuracyRow {
+                table: spec.table,
+                task: spec.task,
+                arch: spec.arch,
+                layers: spec.layers,
+                vocab: spec.vocab,
+                hidden: spec.hidden,
+                datapath: dp,
+                metric: spec.metric,
+                value: out.value,
+                delta_vs_f32: delta,
+                top1_agreement_vs_f32: agree,
+            });
+            if dp == Datapath::F32 {
+                f32_out = Some(out);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// The `BENCH_accuracy_datapath.json` document.
+pub fn report_json(rows: &[AccuracyRow]) -> Json {
+    let obj = |entries: Vec<(&str, Json)>| {
+        Json::Obj(entries
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>())
+    };
+    let json_rows = rows
+        .iter()
+        .map(|r| obj(vec![
+            ("name", Json::Str(format!("{}.{}", r.table, r.datapath))),
+            ("table", Json::Str(r.table.to_string())),
+            ("task", Json::Str(r.task.to_string())),
+            ("arch", Json::Str(r.arch.label().to_string())),
+            ("layers", Json::Num(r.layers as f64)),
+            ("vocab", Json::Num(r.vocab as f64)),
+            ("hidden", Json::Num(r.hidden as f64)),
+            ("datapath", Json::Str(r.datapath.label().to_string())),
+            ("metric", Json::Str(r.metric.to_string())),
+            ("value", Json::Num(r.value)),
+            ("delta_vs_f32", Json::Num(r.delta_vs_f32)),
+            ("top1_agreement_vs_f32", Json::Num(r.top1_agreement_vs_f32)),
+        ]))
+        .collect();
+    obj(vec![
+        ("bench", Json::Str("accuracy_datapath".to_string())),
+        ("rows", Json::Arr(json_rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> AccuracyOpts {
+        AccuracyOpts { lm_tokens: 64, class_samples: 8, threads: 1 }
+    }
+
+    #[test]
+    fn nine_rows_f32_exact_and_metrics_finite() {
+        let rows = run(&tiny_opts()).unwrap();
+        assert_eq!(rows.len(), 9, "3 tables x 3 datapaths");
+        for r in &rows {
+            assert!(r.value.is_finite(), "{}/{}: non-finite value",
+                    r.table, r.datapath);
+            assert!((0.0..=1.0).contains(&r.top1_agreement_vs_f32));
+            if r.metric == "accuracy" {
+                assert!((0.0..=1.0).contains(&r.value));
+            } else {
+                assert!(r.value > 0.0, "bpc must be positive");
+            }
+            if r.datapath == Datapath::F32 {
+                assert_eq!(r.delta_vs_f32, 0.0);
+                assert_eq!(r.top1_agreement_vs_f32, 1.0);
+            }
+        }
+        // row order: table-major, f32 first in each group
+        for (i, spec) in tables().iter().enumerate() {
+            assert_eq!(rows[3 * i].table, spec.table);
+            assert_eq!(rows[3 * i].datapath, Datapath::F32);
+        }
+    }
+
+    #[test]
+    fn report_json_carries_datapath_tags() {
+        let rows = run(&tiny_opts()).unwrap();
+        let doc = report_json(&rows);
+        assert_eq!(doc.str_at("bench"), "accuracy_datapath");
+        let arr = doc.at("rows").as_arr().unwrap();
+        assert_eq!(arr.len(), 9);
+        for r in arr {
+            assert!(Datapath::parse(r.str_at("datapath")).is_ok());
+            assert!(r.f64_at("value").is_finite());
+            assert!(r.str_at("name").contains('.'));
+        }
+    }
+
+    #[test]
+    fn pixel_binning_saturates() {
+        assert_eq!(pixel_token(0.0), 0);
+        assert_eq!(pixel_token(1.0), (MNIST_BINS - 1) as i32);
+        assert_eq!(pixel_token(0.5), (MNIST_BINS / 2) as i32);
+    }
+}

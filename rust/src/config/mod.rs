@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::RoutePolicy;
 use crate::coordinator::{LrSchedule, TrainSpec};
-use crate::engine::{BackendKind, BackendSpec, CellArch};
+use crate::engine::{BackendKind, BackendSpec, CellArch, Datapath};
 
 /// One parsed scalar value.
 #[derive(Clone, Debug, PartialEq)]
@@ -163,6 +163,10 @@ pub struct ServeSpec {
     pub arch: CellArch,
     /// Stacked recurrent layers for model-synthesis targets.
     pub layers: usize,
+    /// Activation datapath (`"f32"` | `"lut8"` | `"xnor"`) for the
+    /// packed backends' batched path. `f32` (default) serves
+    /// bit-identically to a build without the low-bit code paths.
+    pub datapath: Datapath,
     /// TCP listen address for the network front door
     /// (`crate::frontdoor::FrontDoor`), e.g. `"127.0.0.1:4250"` or
     /// `"127.0.0.1:0"` for an ephemeral port. `None` keeps serving
@@ -210,6 +214,7 @@ impl Default for ServeSpec {
             policy: RoutePolicy::LeastLoaded,
             arch: CellArch::Lstm,
             layers: 1,
+            datapath: Datapath::F32,
             listen: None,
             session_bytes: crate::session::DEFAULT_SESSION_BYTES,
             session_grid: crate::session::DEFAULT_SESSION_GRID,
@@ -271,6 +276,7 @@ impl ServeSpec {
             shards: self.shards,
             arch: self.arch,
             layers: self.layers,
+            datapath: self.datapath,
         }
     }
 }
@@ -328,6 +334,10 @@ impl Config {
                 spec.layers = bounded(v, "layers",
                                       *ServeSpec::LAYERS_RANGE.start() as i64,
                                       *ServeSpec::LAYERS_RANGE.end() as i64)?;
+            }
+            if let Some(v) = s.get("datapath") {
+                spec.datapath =
+                    Datapath::parse(v.as_str().context("datapath")?)?;
             }
             if let Some(v) = s.get("listen") {
                 let addr = v.as_str().context("listen")?;
@@ -632,6 +642,19 @@ mod tests {
             .serve_spec(ServeSpec::default())
             .is_err());
         assert!(Config::parse("[serve]\nsupervise = 1\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .is_err());
+        // the activation datapath defaults to the bit-exact f32 tail;
+        // unknown spellings are config errors
+        assert_eq!(ServeSpec::default().datapath, Datapath::F32);
+        let spec = Config::parse("[serve]\ndatapath = \"xnor\"\n")
+            .unwrap()
+            .serve_spec(ServeSpec::default())
+            .unwrap();
+        assert_eq!(spec.datapath, Datapath::Xnor);
+        assert_eq!(spec.backend_spec().datapath, Datapath::Xnor);
+        assert!(Config::parse("[serve]\ndatapath = \"int4\"\n")
             .unwrap()
             .serve_spec(ServeSpec::default())
             .is_err());

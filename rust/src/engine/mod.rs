@@ -107,7 +107,7 @@ pub use pool::ThreadPool;
 pub use shared::{IntegrityError, SharedModel};
 pub use weights::{packed_model_fingerprint, ModelWeights};
 
-pub use crate::quant::{CellArch, PackedStack, RecurrentCell};
+pub use crate::quant::{CellArch, Datapath, PackedStack, RecurrentCell};
 
 /// Which inference engine serves a model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -310,13 +310,22 @@ pub struct BackendSpec {
     /// Stacked recurrent layers for synthesized models (same caveat as
     /// [`BackendSpec::arch`]).
     pub layers: usize,
+    /// Activation datapath for the packed backends' batched path
+    /// (`--datapath` / `[serve] datapath`, default [`Datapath::F32`]).
+    /// `f32` serves bit-identically to a build without the low-bit
+    /// code; `lut8` swaps the gate tails' tanh/sigmoid for shared int8
+    /// LUTs; `xnor` additionally binarizes hidden state (recurrent GEMM
+    /// becomes pure xnor/popcount) and quantizes the LM head to int8.
+    /// Ignored by `PjrtDense`; the per-slot reference path only accepts
+    /// `f32`.
+    pub datapath: Datapath,
 }
 
 impl Default for BackendSpec {
     fn default() -> Self {
         Self { kind: BackendKind::PackedCpu, slots: 16, sample_seed: 0x5EED,
                batch_gemm: true, threads: 0, shards: 1,
-               arch: CellArch::Lstm, layers: 1 }
+               arch: CellArch::Lstm, layers: 1, datapath: Datapath::F32 }
     }
 }
 
@@ -363,6 +372,12 @@ impl BackendSpec {
     pub fn with_arch(mut self, arch: CellArch, layers: usize) -> Self {
         self.arch = arch;
         self.layers = layers;
+        self
+    }
+
+    /// Select the activation datapath (default [`Datapath::F32`]).
+    pub fn with_datapath(mut self, datapath: Datapath) -> Self {
+        self.datapath = datapath;
         self
     }
 
@@ -519,6 +534,10 @@ mod tests {
         let deep = spec.with_arch(CellArch::Gru, 2);
         assert_eq!(deep.arch, CellArch::Gru);
         assert_eq!(deep.layers, 2);
+        // the activation datapath defaults to the bit-exact f32 tail
+        assert_eq!(BackendSpec::default().datapath, Datapath::F32);
+        assert_eq!(spec.with_datapath(Datapath::Xnor).datapath,
+                   Datapath::Xnor);
     }
 
     #[test]

@@ -50,8 +50,10 @@ use super::shared::SharedModel;
 use super::weights::ModelWeights;
 use super::{BackendKind, BackendSpec, InferBackend};
 use crate::obs::{Stage, StageAccum};
-use crate::quant::gemm::gemm_f32_bias_cols;
-use crate::quant::{gemv_f32, GemmScratch, Packed, PackedStack,
+use crate::quant::act::head::QuantizedRows;
+use crate::quant::act::{BinarizedBatch, QuantHead};
+use crate::quant::gemm::{gemm_f32_bias_cols, gemm_xnor_cols};
+use crate::quant::{gemv_f32, Datapath, GemmScratch, Packed, PackedStack,
                    RecurrentCell, SharedOut};
 use crate::session::{SlotState, StateError};
 
@@ -77,6 +79,29 @@ fn pooled_gemm_cols(pool: &ThreadPool, scratches: &mut [GemmScratch],
             // which is untouched until `run` returns (it blocks until
             // every shard completed).
             unsafe { w.gemm_cols(x, batch, c0, c1, out, scratch) };
+        }));
+    }
+    pool.run(jobs);
+}
+
+/// Column-shard the xnor/popcount recurrent GEMM across the pool —
+/// same `*_cols` column contract and shard heuristic as
+/// [`pooled_gemm_cols`], so the fan-out (and cluster sharding above it)
+/// is datapath-oblivious.
+fn pooled_gemm_xnor_cols(pool: &ThreadPool, scratches: &mut [GemmScratch],
+                         w: &Packed, xb: &BinarizedBatch, batch: usize,
+                         out_buf: &mut [f32]) {
+    let cols = w.cols();
+    let shards = pool.threads().min(cols / 64).max(1);
+    let out = SharedOut::new(out_buf);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(shards);
+    for (si, scratch) in scratches[..shards].iter_mut().enumerate() {
+        let (c0, c1) = shard_range(cols, shards, si);
+        jobs.push(Box::new(move || {
+            // SAFETY: shards cover disjoint column ranges of `out_buf`,
+            // which is untouched until `run` returns.
+            unsafe { gemm_xnor_cols(w, xb, batch, c0, c1, out, scratch) };
         }));
     }
     pool.run(jobs);
@@ -116,6 +141,15 @@ pub struct PackedBackend {
     hw_b: Vec<f32>,
     /// per-slot path scratch: one layer-output h vector.
     x_slot: Vec<f32>,
+    /// Activation datapath ([`BackendSpec::datapath`]); `F32` leaves
+    /// every existing code path untouched.
+    datapath: Datapath,
+    /// int8 LM head, built only under [`Datapath::Xnor`].
+    qhead: Option<QuantHead>,
+    /// xnor-datapath scratch: binarized h rows for the recurrent GEMM.
+    xbin: BinarizedBatch,
+    /// xnor-datapath scratch: int8-quantized h rows for the LM head.
+    qrows: QuantizedRows,
     /// Per-shard stage-time accumulator (tracing). `None` — the
     /// default — means stepping takes NO timestamps: the only cost of
     /// the hooks is this pointer test.
@@ -169,6 +203,10 @@ impl PackedBackend {
         anyhow::ensure!(spec.threads <= BackendSpec::MAX_THREADS,
                         "threads {} out of range [0, {}]", spec.threads,
                         BackendSpec::MAX_THREADS);
+        anyhow::ensure!(spec.batch_gemm || spec.datapath == Datapath::F32,
+                        "the per-slot reference path serves --datapath f32 \
+                         only (got {}); use the batched path for low-bit \
+                         datapaths", spec.datapath);
         // the per-slot reference path never dispatches shards; don't
         // hold idle worker threads for it
         let threads = if spec.batch_gemm { spec.threads_resolved() } else { 1 };
@@ -178,6 +216,10 @@ impl PackedBackend {
         let stack = shared.share_stack();
         let (head_w, head_b) = shared.share_head();
         let (vocab, hidden) = (shared.vocab(), shared.hidden());
+        // int8 head exists only when a datapath consumes it; the dense
+        // f32 head stays the shared Arc allocation either way
+        let qhead = (spec.datapath == Datapath::Xnor)
+            .then(|| QuantHead::new(&head_w, &head_b, hidden, vocab));
         let states: Vec<Vec<f32>> = (0..stack.layers())
             .map(|l| vec![0.0f32; spec.slots * stack.layer(l).state_width()])
             .collect();
@@ -203,6 +245,10 @@ impl PackedBackend {
             xw_b: vec![],
             hw_b: vec![],
             x_slot: vec![],
+            datapath: spec.datapath,
+            qhead,
+            xbin: BinarizedBatch::default(),
+            qrows: QuantizedRows::default(),
             stage_obs: None,
         })
     }
@@ -220,6 +266,17 @@ impl PackedBackend {
     /// Threads the batched path shards across (1 = fully inline).
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The activation datapath this backend serves with.
+    pub fn datapath(&self) -> Datapath {
+        self.datapath
+    }
+
+    /// The int8 LM head (present only under [`Datapath::Xnor`]) — the
+    /// accuracy harness drives its fused top-k directly.
+    pub fn qhead(&self) -> Option<&QuantHead> {
+        self.qhead.as_ref()
     }
 
     /// Read-only view of one slot's final-layer hidden state (the LM
@@ -342,15 +399,31 @@ impl PackedBackend {
                     }
                     &self.hin[..nb * hid]
                 };
-                timed_stage(&self.stage_obs, Stage::GateGemm, || {
-                    pooled_gemm_cols(&self.pool, &mut self.gemm_scratch,
-                                     cell.wh(), hin, nb,
-                                     &mut self.hw_b[..nb * gw]);
-                });
+                if self.datapath == Datapath::Xnor {
+                    // binarize the h block; the recurrent GEMM becomes
+                    // pure xnor/popcount over the packed bit planes
+                    self.xbin.pack(hin, nb, hid);
+                    let xbin = &self.xbin;
+                    timed_stage(&self.stage_obs, Stage::XnorGemm, || {
+                        pooled_gemm_xnor_cols(&self.pool,
+                                              &mut self.gemm_scratch,
+                                              cell.wh(), xbin, nb,
+                                              &mut self.hw_b[..nb * gw]);
+                    });
+                } else {
+                    timed_stage(&self.stage_obs, Stage::GateGemm, || {
+                        pooled_gemm_cols(&self.pool, &mut self.gemm_scratch,
+                                         cell.wh(), hin, nb,
+                                         &mut self.hw_b[..nb * gw]);
+                    });
+                }
             }
             // folded-BN gate tail, active rows sharded (disjoint row
-            // chunks, so plain split borrows suffice)
+            // chunks, so plain split borrows suffice). The datapath
+            // selects the activation evaluator; rows stay independent
+            // on every datapath, so the sharding is unchanged.
             {
+                let dp = self.datapath;
                 let shards = self.pool.threads().min(nb).max(1);
                 let rows_per = nb.div_ceil(shards);
                 let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
@@ -361,7 +434,7 @@ impl PackedBackend {
                     .zip(self.sb[l][..nb * sw].chunks_mut(rows_per * sw))
                 {
                     jobs.push(Box::new(move || {
-                        cell.gate_tail_rows(xw_s, hw_s, st_s);
+                        cell.gate_tail_rows_dp(dp, xw_s, hw_s, st_s);
                     }));
                 }
                 timed_stage(&self.stage_obs, Stage::GateTail, || {
@@ -383,11 +456,32 @@ impl PackedBackend {
                     .copy_from_slice(&self.sb[l][j * sw..(j + 1) * sw]);
             }
         }
-        // dense LM head over the last layer's h block, vocab columns
-        // sharded, written straight into the ACTIVE slots' logit rows
-        // (idle rows are never zeroed, scattered over, or otherwise
-        // touched)
-        {
+        // LM head over the last layer's h block, vocab columns sharded,
+        // written straight into the ACTIVE slots' logit rows (idle rows
+        // are never zeroed, scattered over, or otherwise touched).
+        // Under the xnor datapath the head runs int8-quantized
+        // ([`QuantHead`]) behind the same column-shard contract.
+        if let Some(q) = &self.qhead {
+            self.qrows.pack(&self.xin[..nb * hid], nb, hid);
+            let qrows = &self.qrows;
+            let shards = self.pool.threads().min(self.vocab).max(1);
+            let out = SharedOut::new(logits);
+            let active = &self.active[..];
+            let vocab = self.vocab;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(shards);
+            for si in 0..shards {
+                let (v0, v1) = shard_range(vocab, shards, si);
+                jobs.push(Box::new(move || {
+                    // SAFETY: shards cover disjoint vocab column ranges
+                    // of `logits`, which outlives `run` (it blocks).
+                    unsafe { q.logits_cols(qrows, active, v0, v1, out) };
+                }));
+            }
+            timed_stage(&self.stage_obs, Stage::LmHead, || {
+                self.pool.run(jobs);
+            });
+        } else {
             let shards = self.pool.threads().min(self.vocab).max(1);
             let out = SharedOut::new(logits);
             let head_w = &self.head_w[..];
@@ -678,5 +772,115 @@ mod tests {
         let spec = BackendSpec::with(BackendKind::PackedCpu, 3, 5)
             .with_threads(BackendSpec::MAX_THREADS + 1);
         assert!(PackedBackend::from_weights(&w, &spec).is_err());
+    }
+
+    fn dp_backend(kind: BackendKind, dp: Datapath, threads: usize,
+                  arch: CellArch, layers: usize) -> PackedBackend {
+        let w = ModelWeights::synthetic_arch(25, 16, arch, layers, "ter", 77);
+        let spec = BackendSpec::with(kind, 3, 5)
+            .with_threads(threads)
+            .with_arch(arch, layers)
+            .with_datapath(dp);
+        PackedBackend::from_weights(&w, &spec).unwrap()
+    }
+
+    fn drive(b: &mut PackedBackend) -> Vec<f32> {
+        for s in 0..3 {
+            b.reset_slot(s).unwrap();
+        }
+        let schedule: &[[Option<i32>; 3]] = &[
+            [Some(4), None, Some(9)],
+            [Some(1), Some(2), Some(3)],
+            [None, Some(8), None],
+            [Some(0), Some(24), Some(12)],
+        ];
+        let mut all = vec![];
+        for toks in schedule {
+            let mut l = vec![0.0f32; 3 * 25];
+            b.step_batch(toks, &mut l).unwrap();
+            all.extend_from_slice(&l);
+        }
+        all
+    }
+
+    #[test]
+    fn explicit_f32_datapath_is_bit_identical_to_default() {
+        // --datapath f32 must take EXACTLY the pre-datapath code paths:
+        // same logits, bit for bit, as a spec that never mentions it
+        for (arch, layers) in [(CellArch::Lstm, 2), (CellArch::Gru, 1)] {
+            let mut plain = {
+                let w = ModelWeights::synthetic_arch(25, 16, arch, layers,
+                                                     "ter", 77);
+                let spec = BackendSpec::with(BackendKind::PackedCpu, 3, 5)
+                    .with_threads(2).with_arch(arch, layers);
+                PackedBackend::from_weights(&w, &spec).unwrap()
+            };
+            let mut f32dp = dp_backend(BackendKind::PackedCpu, Datapath::F32,
+                                       2, arch, layers);
+            assert!(f32dp.qhead().is_none(),
+                    "f32 datapath must not build the int8 head");
+            let (la, lb) = (drive(&mut plain), drive(&mut f32dp));
+            for (x, y) in la.iter().zip(&lb) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn low_bit_datapaths_serve_deterministically() {
+        for dp in [Datapath::Lut8, Datapath::Xnor] {
+            for (arch, layers) in [(CellArch::Lstm, 1), (CellArch::Gru, 2)] {
+                let mut a = dp_backend(BackendKind::PackedCpu, dp, 1,
+                                       arch, layers);
+                let mut b = dp_backend(BackendKind::PackedCpu, dp, 1,
+                                       arch, layers);
+                assert_eq!(a.datapath(), dp);
+                let (la, lb) = (drive(&mut a), drive(&mut b));
+                assert!(la.iter().all(|x| x.is_finite()),
+                        "{dp}: non-finite logits");
+                assert!(la.iter().any(|&x| x != 0.0));
+                for (x, y) in la.iter().zip(&lb) {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "{dp}: same build must serve identically");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xnor_datapath_is_thread_and_layout_invariant() {
+        // thread count and packed layout must not change a single xnor
+        // logit bit — the same structural-determinism contract as f32
+        for (arch, layers) in [(CellArch::Lstm, 2), (CellArch::Gru, 1)] {
+            let mut t1 = dp_backend(BackendKind::PackedCpu, Datapath::Xnor,
+                                    1, arch, layers);
+            let mut t4 = dp_backend(BackendKind::PackedCpu, Datapath::Xnor,
+                                    4, arch, layers);
+            let mut pl = dp_backend(BackendKind::PackedPlanes, Datapath::Xnor,
+                                    4, arch, layers);
+            assert!(t1.qhead().is_some());
+            let base = drive(&mut t1);
+            for (tag, other) in [("threads=4", drive(&mut t4)),
+                                 ("planes", drive(&mut pl))] {
+                for (x, y) in base.iter().zip(&other) {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "{} x{layers} {tag}", arch.label());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_slot_path_rejects_low_bit_datapaths() {
+        let w = ModelWeights::synthetic(25, 16, "ter", 77);
+        for dp in [Datapath::Lut8, Datapath::Xnor] {
+            let spec = BackendSpec::with(BackendKind::PackedCpu, 3, 5)
+                .per_slot().with_datapath(dp);
+            assert!(PackedBackend::from_weights(&w, &spec).is_err(),
+                    "{dp} must be refused on the per-slot path");
+        }
+        let ok = BackendSpec::with(BackendKind::PackedCpu, 3, 5)
+            .per_slot().with_datapath(Datapath::F32);
+        assert!(PackedBackend::from_weights(&w, &ok).is_ok());
     }
 }

@@ -12,6 +12,45 @@
 
 use super::config::HwConfig;
 use crate::quant::Cell;
+use crate::quant::Datapath;
+
+/// Accumulate/round pipeline drain per matmul pass.
+pub(super) const PIPE_DEPTH: u64 = 4;
+
+/// How a software [`Datapath`] maps onto the array's per-stage costs —
+/// the hardware mirror of `BackendSpec::datapath`, so the ASIC model
+/// tracks the serving datapath choice (`rbtw stage-compare`).
+#[derive(Clone, Copy, Debug)]
+pub struct DatapathConfig {
+    pub datapath: Datapath,
+    /// Cycles per lane-wide gate-activation pass: 4 for the f32
+    /// polynomial tail, 1 for a LUT lookup (`quant::act::lut`).
+    pub gate_act_cycles: u64,
+    /// Bits per recurrent-state element entering the W_h matmul.
+    pub state_bits: u32,
+    /// Bits per LM-head activation (int8 `QuantHead` under xnor).
+    pub head_bits: u32,
+    /// Recurrent GEMM runs as xnor/popcount over 64-bit words.
+    pub xnor_recurrent: bool,
+}
+
+/// The per-stage cost profile for a software datapath.
+pub fn datapath_config(dp: Datapath) -> DatapathConfig {
+    match dp {
+        Datapath::F32 => DatapathConfig {
+            datapath: dp, gate_act_cycles: 4, state_bits: 32,
+            head_bits: 32, xnor_recurrent: false,
+        },
+        Datapath::Lut8 => DatapathConfig {
+            datapath: dp, gate_act_cycles: 1, state_bits: 32,
+            head_bits: 32, xnor_recurrent: false,
+        },
+        Datapath::Xnor => DatapathConfig {
+            datapath: dp, gate_act_cycles: 1, state_bits: 1,
+            head_bits: 8, xnor_recurrent: true,
+        },
+    }
+}
 
 /// Simulation result for one recurrent timestep.
 #[derive(Clone, Debug)]
@@ -60,7 +99,6 @@ pub fn simulate_timestep(cfg: &HwConfig, cell: Cell, d_in: usize,
     let mut useful = 0u64;
     let mut dram_bits = 0u64;
     let mut act_evals = 0u64;
-    const PIPE_DEPTH: u64 = 4; // accumulate/round pipeline drain per pass
 
     for l in 0..layers {
         let din = if l == 0 { d_in } else { hidden } as u64;
@@ -136,6 +174,22 @@ mod tests {
         let cfg = HwConfig::low_power(Precision::Fixed12);
         let s = simulate_timestep(&cfg, Cell::Lstm, 512, 512, 1);
         assert!(s.utilization > 0.95, "util {}", s.utilization);
+    }
+
+    #[test]
+    fn datapath_config_invariants() {
+        let f = datapath_config(Datapath::F32);
+        assert_eq!((f.gate_act_cycles, f.state_bits, f.head_bits,
+                    f.xnor_recurrent), (4, 32, 32, false));
+        let l = datapath_config(Datapath::Lut8);
+        assert_eq!((l.gate_act_cycles, l.state_bits, l.head_bits,
+                    l.xnor_recurrent), (1, 32, 32, false));
+        let x = datapath_config(Datapath::Xnor);
+        assert_eq!((x.gate_act_cycles, x.state_bits, x.head_bits,
+                    x.xnor_recurrent), (1, 1, 8, true));
+        for dp in Datapath::all() {
+            assert_eq!(datapath_config(dp).datapath, dp);
+        }
     }
 
     #[test]

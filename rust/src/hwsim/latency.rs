@@ -1,8 +1,10 @@
 //! Per-task latency + energy roll-up (Fig. 7 and the §6 speedup claims).
 
 use super::config::{HwConfig, Precision};
-use super::datapath::{simulate_timestep, CycleStats};
+use super::datapath::{simulate_timestep, CycleStats, DatapathConfig,
+                      PIPE_DEPTH};
 use super::mac::{high_speed_design, synthesize};
+use crate::obs::Stage;
 use crate::quant::Cell;
 
 /// Task workload descriptor: the recurrent dims of each paper benchmark.
@@ -72,9 +74,79 @@ pub fn fig7_points(w: &Workload) -> (LatencyPoint, LatencyPoint, LatencyPoint) {
     )
 }
 
+/// Modeled cost of one engine stage, keyed by the *same* [`Stage`] enum
+/// the software engine's `StageAccum` uses — so `rbtw stage-compare`
+/// can print measured and modeled seconds side by side with no name
+/// translation.
+#[derive(Clone, Copy, Debug)]
+pub struct StageEstimate {
+    pub stage: Stage,
+    pub cycles: u64,
+    pub seconds: f64,
+}
+
+/// Per-stage cycle model of one decode step under a datapath profile.
+///
+/// Returns exactly four estimates, in engine-stage order: `x_gemm`
+/// (inter-layer input GEMMs — layers ≥ 1 only, matching the software
+/// stage, which does not time layer 0's one-hot gather), the recurrent
+/// GEMM (`gate_gemm`, or `xnor_gemm` when
+/// [`DatapathConfig::xnor_recurrent`] — contraction shrinks to 64-bit
+/// popcount words), `gate_tail` (LUT vs polynomial activation cost via
+/// [`DatapathConfig::gate_act_cycles`]), and `lm_head` (contraction
+/// packed by [`DatapathConfig::head_bits`]: 32/head_bits MACs per
+/// lane-cycle).
+pub fn stage_breakdown(cfg: &HwConfig, w: &Workload, vocab: usize,
+                       dpc: &DatapathConfig) -> Vec<StageEstimate> {
+    let lanes = cfg.mac_units as u64;
+    let gates = w.cell.gates() as u64;
+    let h = w.hidden as u64;
+    let n_out = gates * h;
+    let gate_passes = n_out.div_ceil(lanes);
+    let matmul = |contraction: u64| gate_passes * contraction
+        + gate_passes * PIPE_DEPTH;
+
+    // inter-layer x-GEMMs: layer 0's one-hot gather is a table row copy
+    // in both SW and HW and is not modeled as MAC work.
+    let x_cycles = (w.layers.saturating_sub(1) as u64) * matmul(h);
+
+    // recurrent W_h per layer: f32/lut states contract over h elements;
+    // binarized states contract over 64-bit sign words.
+    let recur_contraction = if dpc.xnor_recurrent { h.div_ceil(64) } else { h };
+    let (recur_stage, recur_cycles) = (
+        if dpc.xnor_recurrent { Stage::XnorGemm } else { Stage::GateGemm },
+        w.layers as u64 * matmul(recur_contraction),
+    );
+
+    // elementwise tail: gates*h nonlinearities + h state updates, lane-wide
+    let act_evals = w.layers as u64 * (gates * h + h);
+    let tail_cycles = act_evals.div_ceil(lanes) * dpc.gate_act_cycles;
+
+    // LM head: vocab output neurons, contraction over h activations at
+    // head_bits each (32/head_bits packed MACs per lane-cycle).
+    let head_passes = (vocab as u64).div_ceil(lanes);
+    let head_contraction = h.div_ceil((32 / dpc.head_bits) as u64);
+    let head_cycles = head_passes * head_contraction
+        + head_passes * PIPE_DEPTH;
+
+    let sec = |cycles: u64| cycles as f64 / (cfg.freq_mhz * 1e6);
+    [
+        (Stage::XGemm, x_cycles),
+        (recur_stage, recur_cycles),
+        (Stage::GateTail, tail_cycles),
+        (Stage::LmHead, head_cycles),
+    ]
+    .into_iter()
+    .map(|(stage, cycles)| StageEstimate { stage, cycles,
+                                           seconds: sec(cycles) })
+    .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hwsim::datapath::datapath_config;
+    use crate::quant::Datapath;
 
     #[test]
     fn fig7_speedups_match_paper_shape() {
@@ -106,6 +178,56 @@ mod tests {
         // same latency (100 lanes each), ~9x lower power => ~9x energy.
         let ratio = fp / b;
         assert!((ratio - 9.08).abs() < 0.3, "energy ratio {ratio}");
+    }
+
+    #[test]
+    fn stage_breakdown_mirrors_engine_stage_names() {
+        let cfg = HwConfig::low_power(Precision::Ternary);
+        let w = Workload { name: "t", cell: Cell::Lstm, d_in: 50,
+                           hidden: 128, layers: 2 };
+        for dp in Datapath::all() {
+            let dpc = datapath_config(dp);
+            let st = stage_breakdown(&cfg, &w, 50, &dpc);
+            assert_eq!(st.len(), 4);
+            assert_eq!(st[0].stage, Stage::XGemm);
+            assert_eq!(st[1].stage, if dpc.xnor_recurrent {
+                Stage::XnorGemm
+            } else {
+                Stage::GateGemm
+            });
+            assert_eq!(st[2].stage, Stage::GateTail);
+            assert_eq!(st[3].stage, Stage::LmHead);
+            for e in &st[1..] {
+                assert!(e.cycles > 0 && e.seconds > 0.0,
+                        "{dp}: {:?} must cost something", e.stage);
+            }
+            assert!(st[0].cycles > 0, "2 layers => one inter-layer x-GEMM");
+        }
+    }
+
+    #[test]
+    fn xnor_and_lut_cut_the_right_stages() {
+        let cfg = HwConfig::low_power(Precision::Ternary);
+        let w = Workload { name: "t", cell: Cell::Gru, d_in: 50,
+                           hidden: 256, layers: 1 };
+        let f = stage_breakdown(&cfg, &w, 50, &datapath_config(Datapath::F32));
+        let l = stage_breakdown(&cfg, &w, 50,
+                                &datapath_config(Datapath::Lut8));
+        let x = stage_breakdown(&cfg, &w, 50,
+                                &datapath_config(Datapath::Xnor));
+        // one layer: no inter-layer x-GEMM in any profile
+        assert_eq!(f[0].cycles, 0);
+        // lut8: only the tail gets cheaper (4-cycle poly -> 1-cycle LUT)
+        assert_eq!(l[1].cycles, f[1].cycles);
+        assert_eq!(l[3].cycles, f[3].cycles);
+        assert_eq!(l[2].cycles * 4, f[2].cycles);
+        // xnor: recurrent contraction collapses to 64-bit words...
+        let words = 256u64.div_ceil(64);
+        assert!(x[1].cycles * 16 < f[1].cycles,
+                "xnor {} vs f32 {}", x[1].cycles, f[1].cycles);
+        assert!(x[1].cycles >= words, "still pays the word stream");
+        // ...and the int8 head contracts 4 MACs per lane-cycle
+        assert!(x[3].cycles < f[3].cycles);
     }
 
     #[test]

@@ -17,8 +17,10 @@ pub mod latency;
 pub mod mac;
 
 pub use config::{HwConfig, Precision};
-pub use datapath::{simulate_timestep, CycleStats};
-pub use latency::{fig7_points, paper_workloads, timestep_energy_nj,
-                  timestep_latency, LatencyPoint, Workload};
+pub use datapath::{datapath_config, simulate_timestep, CycleStats,
+                   DatapathConfig};
+pub use latency::{fig7_points, paper_workloads, stage_breakdown,
+                  timestep_energy_nj, timestep_latency, LatencyPoint,
+                  StageEstimate, Workload};
 pub use mac::{explore_design, high_speed_design, low_power_savings, mac_cost,
               synthesize, Budget, MacCost, Synthesis};

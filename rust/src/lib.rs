@@ -131,6 +131,41 @@
 //!   `/metrics` so a fleet can assert every shard serves the same
 //!   bits.
 //!
+//! # Datapaths
+//!
+//! The packed engines store *weights* at 1–2 bits, but historically ran
+//! every *activation* in f32. [`quant::act`] closes those last f32
+//! islands behind an explicit per-backend knob,
+//! [`engine::BackendSpec::datapath`] (`--datapath` on the CLI, `[serve]
+//! datapath` in config):
+//!
+//! * `f32` (default) — **bit-identical to the pre-datapath engine**:
+//!   none of the low-bit activation code executes, and every existing
+//!   digest/equivalence gate keeps its exact output. This is the escape
+//!   hatch — if a low-bit path ever misbehaves in production, `--datapath
+//!   f32` restores the historical numerics with no rebuild.
+//! * `lut8` — the gate tail's tanh/sigmoid evaluate through shared
+//!   256-entry int8 lookup tables ([`quant::act::lut`], rounding rule
+//!   documented there); GEMMs and the LM head stay f32.
+//! * `xnor` — the full low-bit path: 64K-entry int16 gate LUTs, hidden
+//!   states binarized per step ([`quant::act::BinarizedBatch`]) so the
+//!   recurrent GEMM runs as pure xnor/popcount over the resident weight
+//!   bit planes ([`quant::gemm::gemm_xnor`], surfaced as the
+//!   `xnor_gemm` stage in `rbtw_engine_stage_seconds`), and an int8 LM
+//!   head with fused top-k ([`quant::act::QuantHead`]).
+//!
+//! What stays exact under every datapath: token/one-hot gathers, packed
+//! weight planes, slot state layout, snapshot/restore, and the
+//! scheduler — a low-bit datapath changes *numerics inside a step*,
+//! never *which* steps run. Low-bit digests are still deterministic and
+//! invariant across thread/shard counts (ci.sh gates `xnor` across
+//! threads {1,4} × shards {1,2}); they are simply not bit-equal to
+//! `f32`. Task-level impact is measured by `rbtw accuracy` ([`accuracy`]),
+//! which writes per-table deltas vs the f32 tail to
+//! `BENCH_accuracy_datapath.json`; the ASIC model mirrors the same knob
+//! via `hwsim::datapath_config` so `rbtw stage-compare` can line up
+//! measured stage seconds against modeled ones.
+//!
 //! # Observability
 //!
 //! [`obs`] is the flight-recorder + tracing layer (`--trace` /
@@ -159,6 +194,7 @@
 //! JSON in `chrome://tracing` or <https://ui.perfetto.dev> (one pid
 //! per shard, one tid per slot).
 
+pub mod accuracy;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

@@ -22,8 +22,9 @@ use rbtw::config::{default_spec_for_task, Config, ServeSpec};
 use rbtw::faults::FaultPlan;
 use rbtw::coordinator::{latency_breakdown, InferenceServer, LoadSpec,
                         Request, Split, Trainer};
-use rbtw::engine::{self, BackendKind, CellArch, InferBackend, ModelWeights,
-                   SharedModel};
+use rbtw::accuracy::{self, AccuracyOpts};
+use rbtw::engine::{self, BackendKind, CellArch, Datapath, InferBackend,
+                   ModelWeights, SharedModel};
 use rbtw::frontdoor::FrontDoor;
 use rbtw::hwsim;
 use rbtw::model::export_packed;
@@ -109,6 +110,8 @@ fn main() -> ExitCode {
         "pack" => cmd_pack(&args),
         "trace-check" => cmd_trace_check(&args),
         "bench-diff" => cmd_bench_diff(&args),
+        "accuracy" => cmd_accuracy(&args),
+        "stage-compare" => cmd_stage_compare(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -147,6 +150,9 @@ fn print_usage() {
          \x20                             shared weight set; packed only)\n\
          \x20                             --policy least-loaded|round-robin\n\
          \x20                             --arch lstm|gru --layers N\n\
+         \x20                             --datapath f32|lut8|xnor (low-bit\n\
+         \x20                             activation datapath; f32 = exact\n\
+         \x20                             historical numerics, default)\n\
          \x20                             (<artifact> = 'synthetic' serves a\n\
          \x20                             generated model of that shape)\n\
          \x20                             --listen HOST:PORT (network front\n\
@@ -180,6 +186,15 @@ fn print_usage() {
          \x20                             (--tolerance X, default 0.5 or env\n\
          \x20                             RBTW_BENCH_TOLERANCE; non-zero exit\n\
          \x20                             on a tracked-key regression)\n\
+         \x20 accuracy                    task-metric deltas per datapath on\n\
+         \x20                             the table1/table4/table6 settings\n\
+         \x20                             (--lm-tokens N --samples N\n\
+         \x20                             --threads N --out FILE; writes\n\
+         \x20                             BENCH_accuracy_datapath.json)\n\
+         \x20 stage-compare               measured vs modeled per-stage step\n\
+         \x20                             time (--arch lstm|gru --layers N\n\
+         \x20                             --datapath f32|lut8|xnor --steps N\n\
+         \x20                             --slots N --threads N)\n\
          \n\
          common options: --artifacts DIR (default ./artifacts)"
     );
@@ -331,6 +346,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         ServeSpec::LAYERS_RANGE.end());
         spec.layers = l;
     }
+    if let Some(d) = args.get("datapath") {
+        spec.datapath = Datapath::parse(d)?;
+    }
     if let Some(l) = args.get("listen") {
         anyhow::ensure!(l != "true",
                         "--listen needs an address, e.g. --listen \
@@ -420,6 +438,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "model {}: {} x{} layer(s), vocab {}, hidden {}\n\
              cluster: {} shard(s) x {} slots | {} routing | {} gemm | \
+             {} datapath | \
              {} B resident packed weights (shared across shards)",
             shared.name(),
             shared.arch().label(),
@@ -430,6 +449,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             spec.slots,
             spec.policy.label(),
             if spec.batch_gemm { "batched" } else { "per-slot" },
+            spec.datapath.label(),
             shared.weight_bytes(),
         );
         // --trace arms the observability hub; off (the default) leaves
@@ -751,6 +771,121 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     bail!("{} tracked bench key(s) regressed beyond {:.0}% \
            (baseline {base_path})",
           regressions.len(), tolerance * 100.0);
+}
+
+/// `rbtw accuracy` — run the table1/table4/table6 eval settings under
+/// every activation datapath and report task-metric deltas vs f32 (see
+/// `rbtw::accuracy`). Writes `BENCH_accuracy_datapath.json`.
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let mut opts = AccuracyOpts::default();
+    if let Some(n) = args.get_usize("lm-tokens")? {
+        anyhow::ensure!(n >= 1, "--lm-tokens must be >= 1");
+        opts.lm_tokens = n;
+    }
+    if let Some(n) = args.get_usize("samples")? {
+        anyhow::ensure!(n >= 1, "--samples must be >= 1");
+        opts.class_samples = n;
+    }
+    if let Some(t) = args.get_usize("threads")? {
+        opts.threads = t;
+    }
+    println!("accuracy harness: {} char-LM predictions, {} glyphs per \
+              table, per datapath f32|lut8|xnor",
+             opts.lm_tokens, opts.class_samples);
+    let rows = accuracy::run(&opts)?;
+    let mut t = Table::new(&["table", "task", "arch", "datapath", "metric",
+                             "value", "delta vs f32", "top1 agree"]);
+    for r in &rows {
+        t.row(&[
+            r.table.into(),
+            r.task.into(),
+            format!("{}x{}", r.arch.label(), r.layers),
+            r.datapath.label().into(),
+            r.metric.into(),
+            format!("{:.4}", r.value),
+            format!("{:+.4}", r.delta_vs_f32),
+            format!("{:.1}%", r.top1_agreement_vs_f32 * 100.0),
+        ]);
+    }
+    t.print();
+    println!("(models are synthetic/untrained — top1 agreement vs the f32 \
+              run is the informative column)");
+    let out = args.get("out").unwrap_or("BENCH_accuracy_datapath.json");
+    std::fs::write(out, format!("{}\n", accuracy::report_json(&rows)))
+        .with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// `rbtw stage-compare` — drive the packed engine with per-stage timing
+/// on, then print measured seconds next to the `hwsim` cycle model's
+/// estimate for the same stage keys (`x_gemm`/`gate_gemm` or
+/// `xnor_gemm`/`gate_tail`/`lm_head`).
+fn cmd_stage_compare(args: &Args) -> Result<()> {
+    use rbtw::obs::StageAccum;
+    use std::sync::Arc;
+
+    let arch = match args.get("arch") {
+        Some(a) => CellArch::parse(a)?,
+        None => CellArch::Lstm,
+    };
+    let layers = args.get_usize("layers")?.unwrap_or(1).max(1);
+    let dp = match args.get("datapath") {
+        Some(d) => Datapath::parse(d)?,
+        None => Datapath::F32,
+    };
+    let steps = args.get_usize("steps")?.unwrap_or(200).max(1);
+    let threads = args.get_usize("threads")?.unwrap_or(1);
+    let slots = args.get_usize("slots")?.unwrap_or(8).max(1);
+
+    let weights = ModelWeights::synthetic_serving(arch, layers);
+    let spec = engine::BackendSpec::with(BackendKind::PackedCpu, slots,
+                                         0x5EED)
+        .with_arch(arch, layers)
+        .with_threads(threads)
+        .with_datapath(dp);
+    let mut be = engine::from_weights(&weights, &spec)?;
+    let accum = Arc::new(StageAccum::default());
+    be.set_stage_obs(Some(accum.clone()));
+    for s in 0..slots {
+        be.reset_slot(s)?;
+    }
+    let vocab = weights.vocab;
+    let mut logits = vec![0.0f32; slots * vocab];
+    let mut tokens = vec![None; slots];
+    let mut rng = Rng::new(0x57A6);
+    for _ in 0..steps {
+        for tok in tokens.iter_mut() {
+            *tok = Some(rng.below(vocab as u64) as i32);
+        }
+        be.step_batch(&tokens, &mut logits)?;
+    }
+    let snap = accum.snapshot();
+
+    let cfg = hwsim::HwConfig::low_power(hwsim::Precision::Ternary);
+    let w = hwsim::Workload { name: "stage-compare", cell: arch,
+                              d_in: vocab, hidden: weights.hidden, layers };
+    let model = hwsim::stage_breakdown(&cfg, &w, vocab,
+                                       &hwsim::datapath_config(dp));
+    println!("stage-compare: {}x{layers} h{} vocab {vocab} | datapath {dp} \
+              | {slots} slot(s) x {steps} step(s) | modeled on {} MACs @ \
+              {:.0} MHz",
+             arch.label(), weights.hidden, cfg.mac_units, cfg.freq_mhz);
+    let mut t = Table::new(&["stage", "measured us/step", "dispatches",
+                             "modeled us/step"]);
+    for est in &model {
+        t.row(&[
+            est.stage.label().into(),
+            format!("{:.2}", snap.seconds(est.stage) / steps as f64 * 1e6),
+            snap.dispatches(est.stage).to_string(),
+            format!("{:.3}", est.seconds * 1e6),
+        ]);
+    }
+    t.print();
+    println!("(measured = this host's packed engine wall time per decode \
+              step; modeled = the ASIC cycle model under the same \
+              datapath — same stage keys as rbtw_engine_stage_seconds)");
+    Ok(())
 }
 
 fn cmd_hwsim(args: &Args) -> Result<()> {

@@ -85,13 +85,18 @@ pub enum Stage {
     GateTail = 2,
     /// Dense LM-head projection, vocab columns sharded.
     LmHead = 3,
+    /// Recurrent gate GEMM on the xnor/popcount datapath (replaces
+    /// [`Stage::GateGemm`] under `--datapath xnor`, so a profile shows
+    /// exactly one recurrent-GEMM stage with nonzero time).
+    XnorGemm = 4,
 }
 
 impl Stage {
-    pub const COUNT: usize = 4;
+    pub const COUNT: usize = 5;
 
     pub fn all() -> [Stage; Stage::COUNT] {
-        [Stage::XGemm, Stage::GateGemm, Stage::GateTail, Stage::LmHead]
+        [Stage::XGemm, Stage::GateGemm, Stage::GateTail, Stage::LmHead,
+         Stage::XnorGemm]
     }
 
     pub fn label(self) -> &'static str {
@@ -100,6 +105,7 @@ impl Stage {
             Stage::GateGemm => "gate_gemm",
             Stage::GateTail => "gate_tail",
             Stage::LmHead => "lm_head",
+            Stage::XnorGemm => "xnor_gemm",
         }
     }
 }

@@ -1,0 +1,101 @@
+//! Per-step hidden-state binarization: the input side of the
+//! xnor/popcount recurrent GEMM.
+//!
+//! Under [`Datapath::Xnor`](super::Datapath) each decode step packs the
+//! active slots' h rows into sign bit-words: bit `r` of row `j` is set
+//! iff `h[j][r] >= 0` (ties to +1 — `+0.0` and `-0.0` both compare
+//! `>= 0`, so the rule is total and deterministic), with a per-row
+//! scale `s_j = mean(|h[j]|)` restoring magnitude after the integer
+//! dot product (the standard binary-activation estimator: `h ≈ s_j ·
+//! sign(h)`). A freshly-zeroed state row binarizes to all-set bits but
+//! `s_j = 0`, so its xnor GEMM contribution is exactly `0.0` — fresh
+//! streams behave identically to the f32 path.
+//!
+//! The word layout matches the weight planes' column layout
+//! (`words_per_col` words per row, bit `b` of word `w` covering
+//! element `64*w + b`, padding bits zero), so the xnor kernel walks
+//! both operands with the same indexing.
+
+use crate::quant::pack::words_per_col;
+
+/// Grow-only scratch holding one batch's binarized rows + scales.
+#[derive(Default)]
+pub struct BinarizedBatch {
+    /// `(batch, words_per_col(rows))` row-major sign words.
+    pub words: Vec<u64>,
+    /// Per-row dequant scale `mean(|h|)`.
+    pub scales: Vec<f32>,
+    /// Elements per row (the GEMM contraction width).
+    pub rows: usize,
+}
+
+impl BinarizedBatch {
+    /// Pack `x` (row-major `(batch, rows)`) into sign words + scales.
+    /// Reuses the allocations across steps; contents are overwritten.
+    pub fn pack(&mut self, x: &[f32], batch: usize, rows: usize) {
+        debug_assert_eq!(x.len(), batch * rows);
+        let wpc = words_per_col(rows);
+        self.rows = rows;
+        self.words.clear();
+        self.words.resize(batch * wpc, 0);
+        self.scales.clear();
+        self.scales.resize(batch, 0.0);
+        for j in 0..batch {
+            let row = &x[j * rows..(j + 1) * rows];
+            let words = &mut self.words[j * wpc..(j + 1) * wpc];
+            let mut abs_sum = 0.0f32;
+            for (r, &v) in row.iter().enumerate() {
+                abs_sum += v.abs();
+                if v >= 0.0 {
+                    words[r / 64] |= 1u64 << (r % 64);
+                }
+            }
+            self.scales[j] = abs_sum / rows as f32;
+        }
+    }
+
+    /// One row's sign words.
+    pub fn row_words(&self, j: usize) -> &[u64] {
+        let wpc = words_per_col(self.rows);
+        &self.words[j * wpc..(j + 1) * wpc]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packs_signs_and_mean_abs_scale() {
+        let mut b = BinarizedBatch::default();
+        let x = [1.0f32, -2.0, 0.5, -0.25];
+        b.pack(&x, 1, 4);
+        assert_eq!(b.rows, 4);
+        assert_eq!(b.row_words(0)[0], 0b0101);
+        assert!((b.scales[0] - 3.75 / 4.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn zero_row_scales_to_zero() {
+        let mut b = BinarizedBatch::default();
+        b.pack(&[0.0; 8], 1, 8);
+        // sign(0) = +1 per the tie rule, but the scale is exactly 0
+        assert_eq!(b.row_words(0)[0], 0xFF);
+        assert_eq!(b.scales[0], 0.0);
+    }
+
+    #[test]
+    fn padding_bits_stay_zero_and_scratch_is_reused() {
+        let mut b = BinarizedBatch::default();
+        b.pack(&vec![1.0; 2 * 70], 2, 70);
+        for j in 0..2 {
+            let w = b.row_words(j);
+            assert_eq!(w.len(), 2);
+            assert_eq!(w[1] >> 6, 0, "pad bits beyond row 70 must be 0");
+        }
+        // repack smaller: stale words must not leak through
+        b.pack(&[-1.0, -1.0], 1, 2);
+        assert_eq!(b.row_words(0)[0], 0);
+        assert_eq!(b.scales.len(), 1);
+    }
+}

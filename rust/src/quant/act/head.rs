@@ -1,0 +1,329 @@
+//! int8 LM head with per-row/per-column scales and a fused top-k.
+//!
+//! **Quantization rule.** Weights are quantized per *column* (one
+//! output token each): `s_c = max_r |w[r,c]| / 127`, `qw[r,c] =
+//! round(w[r,c] / s_c)` clamped to `[-127, 127]` (`f32::round`, ties
+//! away from zero; an all-zero column keeps `s_c = 0`). Activations
+//! are quantized per *row* at consume time: `a_j = max_r |h[j,r]| /
+//! 127`, same round/clamp. A logit is then the pure int32 dot product
+//! dequantized once: `logit[j,c] = a_j · s_c · Σ_r qh[j,r]·qw[r,c] +
+//! bias[c]` — the bias stays f32 (it is read once per logit, not per
+//! MAC, so quantizing it buys nothing).
+//!
+//! The weight matrix is stored **column-major** (`qw[c*hidden + r]`)
+//! so a column shard `[c0, c1)` streams a contiguous byte range —
+//! the same locality contract as the packed-plane GEMM shards.
+//!
+//! **Fused top-k.** When only argmax/top-k is consumed, the
+//! column-sharded pass keeps a running k-best list per shard instead
+//! of writing `vocab` f32 logits ([`QuantHead::topk_cols`] /
+//! [`QuantHead::topk`]): the full f32 logit row is never
+//! materialized. Ordering is deterministic — descending logit, ties
+//! broken toward the **lower** token index — so any shard split
+//! merges to the same answer.
+
+use crate::quant::simd::SharedOut;
+
+/// Grow-only scratch holding one batch's int8-quantized h rows.
+#[derive(Default)]
+pub struct QuantizedRows {
+    /// `(batch, width)` row-major int8 values.
+    pub q: Vec<i8>,
+    /// Per-row dequant scale `a_j`.
+    pub scales: Vec<f32>,
+    /// Elements per row.
+    pub width: usize,
+}
+
+impl QuantizedRows {
+    /// Quantize `h` (row-major `(batch, width)`) per the documented
+    /// rule. Reuses allocations; contents are overwritten.
+    pub fn pack(&mut self, h: &[f32], batch: usize, width: usize) {
+        debug_assert_eq!(h.len(), batch * width);
+        self.width = width;
+        self.q.clear();
+        self.q.resize(batch * width, 0);
+        self.scales.clear();
+        self.scales.resize(batch, 0.0);
+        for j in 0..batch {
+            let row = &h[j * width..(j + 1) * width];
+            let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if amax == 0.0 {
+                continue; // scale 0, all-zero q row
+            }
+            let a = amax / 127.0;
+            self.scales[j] = a;
+            let q = &mut self.q[j * width..(j + 1) * width];
+            for (qv, &v) in q.iter_mut().zip(row) {
+                *qv = (v / a).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+
+    /// One row's int8 values.
+    pub fn row(&self, j: usize) -> &[i8] {
+        &self.q[j * self.width..(j + 1) * self.width]
+    }
+}
+
+/// The int8 LM head: column-quantized weights + f32 bias.
+pub struct QuantHead {
+    pub hidden: usize,
+    pub vocab: usize,
+    /// Column-major int8 weights: column `c` at `[c*hidden, (c+1)*hidden)`.
+    qw: Vec<i8>,
+    /// Per-column dequant scale `s_c`.
+    col_scale: Vec<f32>,
+    /// f32 bias (added after dequantization).
+    bias: Vec<f32>,
+}
+
+impl QuantHead {
+    /// Quantize a row-major `(hidden, vocab)` f32 head.
+    pub fn new(head_w: &[f32], head_b: &[f32], hidden: usize, vocab: usize)
+        -> Self {
+        assert_eq!(head_w.len(), hidden * vocab);
+        assert_eq!(head_b.len(), vocab);
+        let mut qw = vec![0i8; hidden * vocab];
+        let mut col_scale = vec![0.0f32; vocab];
+        for c in 0..vocab {
+            let mut amax = 0.0f32;
+            for r in 0..hidden {
+                amax = amax.max(head_w[r * vocab + c].abs());
+            }
+            if amax == 0.0 {
+                continue;
+            }
+            let s = amax / 127.0;
+            col_scale[c] = s;
+            for r in 0..hidden {
+                qw[c * hidden + r] = (head_w[r * vocab + c] / s)
+                    .round()
+                    .clamp(-127.0, 127.0) as i8;
+            }
+        }
+        Self { hidden, vocab, qw, col_scale, bias: head_b.to_vec() }
+    }
+
+    /// Packed weight bytes (1 byte/weight + per-column scale + bias).
+    pub fn bytes(&self) -> usize {
+        self.qw.len() + (self.col_scale.len() + self.bias.len()) * 4
+    }
+
+    #[inline]
+    fn logit(&self, qh: &[i8], a: f32, c: usize) -> f32 {
+        let col = &self.qw[c * self.hidden..(c + 1) * self.hidden];
+        let mut dot: i32 = 0;
+        for (&q, &w) in qh.iter().zip(col) {
+            dot += q as i32 * w as i32;
+        }
+        a * self.col_scale[c] * dot as f32 + self.bias[c]
+    }
+
+    /// Column shard `[c0, c1)` of the quantized logit pass, scattered
+    /// into active slots' logit rows — the drop-in counterpart of
+    /// `quant::gemm::gemm_f32_bias_cols` for the xnor datapath: `qh` is
+    /// the quantized `(batch, hidden)` block ([`QuantizedRows`]),
+    /// `row_of` maps block rows to output rows.
+    ///
+    /// # Safety
+    /// `out` must view a live buffer of at least `(max(row_of)+1) *
+    /// vocab` elements, and no concurrent shard may overlap this one's
+    /// column range.
+    pub unsafe fn logits_cols(&self, qh: &QuantizedRows, row_of: &[usize],
+                              c0: usize, c1: usize, out: SharedOut) {
+        debug_assert_eq!(qh.width, self.hidden);
+        debug_assert!(c0 <= c1 && c1 <= self.vocab);
+        for (j, &orow) in row_of.iter().enumerate() {
+            let row = qh.row(j);
+            let a = qh.scales[j];
+            for c in c0..c1 {
+                // SAFETY: forwarded from this function's contract.
+                unsafe { out.write(orow * self.vocab + c,
+                                   self.logit(row, a, c)) };
+            }
+        }
+    }
+
+    /// Shard-local fused top-k over columns `[c0, c1)`: appends this
+    /// shard's k best `(token, logit)` candidates for one quantized h
+    /// row to `cands` without materializing any full logit row. Merge
+    /// shards with [`QuantHead::merge_topk`].
+    pub fn topk_cols(&self, qh: &[i8], a: f32, c0: usize, c1: usize,
+                     k: usize, cands: &mut Vec<(usize, f32)>) {
+        let base = cands.len();
+        for c in c0..c1 {
+            let v = self.logit(qh, a, c);
+            let local = &mut cands[base..];
+            if local.len() < k {
+                cands.push((c, v));
+                continue;
+            }
+            // replace the shard's current worst if strictly better
+            // (ties keep the earlier, lower-index candidate)
+            let (wi, &(wc, wv)) = local
+                .iter()
+                .enumerate()
+                .min_by(|(_, x), (_, y)| {
+                    x.1.partial_cmp(&y.1)
+                        .unwrap()
+                        .then(y.0.cmp(&x.0)) // equal logits: higher idx is worse
+                })
+                .unwrap();
+            if v > wv || (v == wv && c < wc) {
+                local[wi] = (c, v);
+            }
+        }
+    }
+
+    /// Deterministic candidate merge: descending logit, ties toward the
+    /// lower token index; truncates to `k`. Shard-split-invariant.
+    pub fn merge_topk(cands: &mut Vec<(usize, f32)>, k: usize) {
+        cands.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+        cands.dedup_by_key(|e| e.0);
+        cands.truncate(k);
+    }
+
+    /// Full fused top-k for one f32 h row (quantize + sharded candidate
+    /// pass + merge), split across `shards` column ranges.
+    pub fn topk(&self, h: &[f32], k: usize, shards: usize)
+        -> Vec<(usize, f32)> {
+        let mut rows = QuantizedRows::default();
+        rows.pack(h, 1, self.hidden);
+        let (qh, a) = (rows.row(0), rows.scales[0]);
+        let mut cands = Vec::with_capacity(k * shards.max(1));
+        let shards = shards.max(1).min(self.vocab.max(1));
+        for si in 0..shards {
+            let c0 = si * self.vocab / shards;
+            let c1 = (si + 1) * self.vocab / shards;
+            self.topk_cols(qh, a, c0, c1, k, &mut cands);
+        }
+        Self::merge_topk(&mut cands, k);
+        cands
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk_head(hidden: usize, vocab: usize, seed: u64)
+        -> (QuantHead, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> =
+            (0..hidden * vocab).map(|_| 0.3 * rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..vocab).map(|_| 0.1 * rng.normal_f32()).collect();
+        (QuantHead::new(&w, &b, hidden, vocab), w, b)
+    }
+
+    fn full_logits(q: &QuantHead, h: &[f32]) -> Vec<f32> {
+        let mut rows = QuantizedRows::default();
+        rows.pack(h, 1, q.hidden);
+        let mut y = vec![f32::NAN; q.vocab];
+        {
+            let out = SharedOut::new(&mut y);
+            // SAFETY: one shard over all columns, buffer outlives it.
+            unsafe { q.logits_cols(&rows, &[0], 0, q.vocab, out) };
+        }
+        y
+    }
+
+    #[test]
+    fn quantized_logits_track_f32_head() {
+        let mut rng = Rng::new(91);
+        let (q, w, b) = mk_head(48, 60, 7);
+        let h: Vec<f32> = (0..48).map(|_| rng.normal_f32()).collect();
+        let got = full_logits(&q, &h);
+        let mut worst = 0.0f32;
+        let mut scale = 0.0f32;
+        for c in 0..60 {
+            let want: f32 =
+                (0..48).map(|r| h[r] * w[r * 60 + c]).sum::<f32>() + b[c];
+            worst = worst.max((got[c] - want).abs());
+            scale = scale.max(want.abs());
+        }
+        // two int8 quantizers in series: ~1% relative is the budget
+        assert!(worst <= 0.02 * scale.max(1.0),
+                "head error {worst} (scale {scale})");
+    }
+
+    #[test]
+    fn column_shards_reassemble_bitwise() {
+        let mut rng = Rng::new(93);
+        let (q, _, _) = mk_head(32, 41, 9);
+        let h: Vec<f32> = (0..2 * 32).map(|_| rng.normal_f32()).collect();
+        let mut rows = QuantizedRows::default();
+        rows.pack(&h, 2, 32);
+        let run = |splits: &[usize]| {
+            let mut y = vec![f32::NAN; 2 * 41];
+            {
+                let out = SharedOut::new(&mut y);
+                for p in splits.windows(2) {
+                    // SAFETY: disjoint shards, buffer outlives them.
+                    unsafe { q.logits_cols(&rows, &[0, 1], p[0], p[1], out) };
+                }
+            }
+            y
+        };
+        let whole = run(&[0, 41]);
+        for splits in [vec![0, 1, 41], vec![0, 13, 27, 41]] {
+            let sharded = run(&splits);
+            for (i, (a, b)) in whole.iter().zip(&sharded).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{splits:?} elt {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_topk_matches_full_argsort_for_every_shard_split() {
+        let mut rng = Rng::new(95);
+        let (q, _, _) = mk_head(40, 73, 11);
+        for trial in 0..10 {
+            let h: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+            let logits = full_logits(&q, &h);
+            let mut order: Vec<usize> = (0..73).collect();
+            order.sort_by(|&a, &b| {
+                logits[b].partial_cmp(&logits[a]).unwrap().then(a.cmp(&b))
+            });
+            for k in [1usize, 5] {
+                let want: Vec<usize> = order[..k].to_vec();
+                for shards in [1usize, 2, 5, 73] {
+                    let got: Vec<usize> = q
+                        .topk(&h, k, shards)
+                        .into_iter()
+                        .map(|(c, _)| c)
+                        .collect();
+                    assert_eq!(got, want,
+                               "trial {trial} k {k} shards {shards}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_h_and_zero_column_are_exact() {
+        let mut w = vec![0.5f32; 8 * 5];
+        for c in 0..5 {
+            // column 2 all-zero
+            if c == 2 {
+                for r in 0..8 {
+                    w[r * 5 + c] = 0.0;
+                }
+            }
+        }
+        let b = vec![1.0f32, -1.0, 0.25, 0.0, 2.0];
+        let q = QuantHead::new(&w, &b, 8, 5);
+        assert!(q.bytes() >= 8 * 5);
+        let logits = full_logits(&q, &[0.0; 8]);
+        // zero h: every logit collapses to the exact f32 bias
+        for c in 0..5 {
+            assert_eq!(logits[c].to_bits(), b[c].to_bits());
+        }
+        // zero column: exact bias regardless of h
+        let logits = full_logits(&q, &[1.0; 8]);
+        assert_eq!(logits[2].to_bits(), 0.25f32.to_bits());
+    }
+}

@@ -1,0 +1,174 @@
+//! Shared tanh/sigmoid lookup tables (int8: 256 entries, int16: 64K).
+//!
+//! This is the software twin of the accelerator's activation LUT ROM
+//! (Ott et al. map where low-precision recurrent nonlinearities break;
+//! the fix is a fixed, documented rounding rule applied consistently at
+//! table build AND at lookup):
+//!
+//! **Rounding rule.** The input domain is clamped to `[-8, +8]` (both
+//! tanh and sigmoid are flat to ~1e-6 beyond ±8). For an `N`-entry
+//! table, entry `i` holds the function evaluated at the uniform grid
+//! point `x_i = -8 + i * 16/(N-1)`, quantized to the signed integer
+//! range by `round(f(x_i) * Q)` with `Q = 127` (int8) or `Q = 32767`
+//! (int16) — `f32::round`, ties away from zero. A lookup maps `x` to
+//! the **nearest** grid index `i = round((clamp(x) + 8) * (N-1)/16)`
+//! (same tie rule) and dequantizes by `entry / Q`. Both the grid and
+//! the integer quantizer are monotone, so the tables are monotone
+//! non-decreasing — enforced by a property test, because a
+//! non-monotone gate nonlinearity breaks recurrent stability in ways
+//! plain max-abs-error bounds don't catch.
+//!
+//! Worst-case absolute error (bounded by grid spacing × max slope +
+//! output quantization step): int8 ≤ ~0.036 for tanh (slope ≤ 1),
+//! int16 ≤ ~1.4e-4 — both asserted with margin in
+//! `rust/tests/quant_properties.rs`.
+//!
+//! Tables are built once per process behind `OnceLock` and shared by
+//! every backend/shard (they are pure functions of the rule above, so
+//! sharing cannot couple streams).
+
+use std::sync::OnceLock;
+
+/// Input clamp bound: tanh/sigmoid are saturated outside `[-8, 8]`.
+pub const ACT_CLAMP: f32 = 8.0;
+
+/// Entries in the int8 tables ([`Datapath::Lut8`](super::Datapath)).
+pub const LUT8_ENTRIES: usize = 256;
+
+/// Entries in the int16 tables ([`Datapath::Xnor`](super::Datapath)).
+pub const LUT16_ENTRIES: usize = 1 << 16;
+
+struct Tables8 {
+    tanh: [i8; LUT8_ENTRIES],
+    sig: [i8; LUT8_ENTRIES],
+}
+
+struct Tables16 {
+    tanh: Vec<i16>,
+    sig: Vec<i16>,
+}
+
+static T8: OnceLock<Tables8> = OnceLock::new();
+static T16: OnceLock<Tables16> = OnceLock::new();
+
+fn grid(i: usize, n: usize) -> f32 {
+    -ACT_CLAMP + (i as f32) * (2.0 * ACT_CLAMP) / ((n - 1) as f32)
+}
+
+fn t8() -> &'static Tables8 {
+    T8.get_or_init(|| {
+        let mut tanh = [0i8; LUT8_ENTRIES];
+        let mut sig = [0i8; LUT8_ENTRIES];
+        for i in 0..LUT8_ENTRIES {
+            let x = grid(i, LUT8_ENTRIES);
+            tanh[i] = (x.tanh() * 127.0).round() as i8;
+            sig[i] = (sigmoid_exact(x) * 127.0).round() as i8;
+        }
+        Tables8 { tanh, sig }
+    })
+}
+
+fn t16() -> &'static Tables16 {
+    T16.get_or_init(|| {
+        let mut tanh = vec![0i16; LUT16_ENTRIES];
+        let mut sig = vec![0i16; LUT16_ENTRIES];
+        for i in 0..LUT16_ENTRIES {
+            let x = grid(i, LUT16_ENTRIES);
+            tanh[i] = (x.tanh() * 32767.0).round() as i16;
+            sig[i] = (sigmoid_exact(x) * 32767.0).round() as i16;
+        }
+        Tables16 { tanh, sig }
+    })
+}
+
+/// The exact sigmoid the f32 gate tails use (reference for the tables).
+#[inline]
+pub fn sigmoid_exact(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Nearest-grid-index lookup per the documented rounding rule.
+#[inline]
+fn index(x: f32, n: usize) -> usize {
+    let t = (x.clamp(-ACT_CLAMP, ACT_CLAMP) + ACT_CLAMP)
+        * ((n - 1) as f32) / (2.0 * ACT_CLAMP);
+    // t ∈ [0, n-1]; round ties away from zero (all t ≥ 0 here)
+    t.round() as usize
+}
+
+/// int8-table tanh (dequantized to f32).
+#[inline]
+pub fn tanh_lut8(x: f32) -> f32 {
+    t8().tanh[index(x, LUT8_ENTRIES)] as f32 / 127.0
+}
+
+/// int8-table sigmoid (dequantized to f32).
+#[inline]
+pub fn sigmoid_lut8(x: f32) -> f32 {
+    t8().sig[index(x, LUT8_ENTRIES)] as f32 / 127.0
+}
+
+/// int16-table tanh (dequantized to f32).
+#[inline]
+pub fn tanh_lut16(x: f32) -> f32 {
+    t16().tanh[index(x, LUT16_ENTRIES)] as f32 / 32767.0
+}
+
+/// int16-table sigmoid (dequantized to f32).
+#[inline]
+pub fn sigmoid_lut16(x: f32) -> f32 {
+    t16().sig[index(x, LUT16_ENTRIES)] as f32 / 32767.0
+}
+
+/// Raw table views for monotonicity/round-rule property tests.
+pub fn tables_i8() -> (&'static [i8], &'static [i8]) {
+    let t = t8();
+    (&t.tanh, &t.sig)
+}
+
+/// Raw table views for monotonicity/round-rule property tests.
+pub fn tables_i16() -> (&'static [i16], &'static [i16]) {
+    let t = t16();
+    (&t.tanh, &t.sig)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_hits_documented_grid() {
+        // entry 0 is f(-8), the last entry f(+8), the midpoint f(0)
+        assert_eq!(tanh_lut8(-100.0), -1.0);
+        assert_eq!(tanh_lut8(100.0), 1.0);
+        assert_eq!(tanh_lut16(0.0), 0.0);
+        assert!((sigmoid_lut16(0.0) - 0.5).abs() < 1e-4);
+        assert!(sigmoid_lut8(-100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn error_vs_exact_is_bounded() {
+        let mut worst8 = 0.0f32;
+        let mut worst16 = 0.0f32;
+        let mut x = -9.0f32;
+        while x < 9.0 {
+            worst8 = worst8
+                .max((tanh_lut8(x) - x.tanh()).abs())
+                .max((sigmoid_lut8(x) - sigmoid_exact(x)).abs());
+            worst16 = worst16
+                .max((tanh_lut16(x) - x.tanh()).abs())
+                .max((sigmoid_lut16(x) - sigmoid_exact(x)).abs());
+            x += 0.00313;
+        }
+        assert!(worst8 <= 0.05, "int8 act error {worst8}");
+        assert!(worst16 <= 2.5e-4, "int16 act error {worst16}");
+    }
+
+    #[test]
+    fn nan_input_is_contained() {
+        // clamp(NaN) stays NaN; the usize cast lands on entry 0 — a
+        // saturated value, never an out-of-bounds read
+        assert!(tanh_lut8(f32::NAN).is_finite());
+        assert!(sigmoid_lut16(f32::NAN).is_finite());
+    }
+}

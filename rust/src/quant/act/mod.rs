@@ -1,0 +1,105 @@
+//! Low-bit **activation** datapath (the last f32 islands, quantized).
+//!
+//! The packed serving path stores weights at 1–2 bits, but until this
+//! module every activation, gate tail, and the LM head ran in f32 — the
+//! paper's "MACs become accumulations" regime never actually reached
+//! the serving hot loop. `quant::act` closes that gap behind an explicit
+//! per-backend knob ([`Datapath`], wired through
+//! `BackendSpec::datapath` / `[serve] datapath` / `--datapath`):
+//!
+//! * [`Datapath::F32`] (default) — **bit-identical to the historical
+//!   engine**: none of this module's code executes; every digest gate
+//!   and equivalence test keeps its exact pre-datapath output. This is
+//!   the escape hatch.
+//! * [`Datapath::Lut8`] — the gate tail's tanh/sigmoid evaluate through
+//!   shared 256-entry int8 lookup tables ([`lut`]) instead of `exp`;
+//!   everything else (GEMMs, LM head) stays f32.
+//! * [`Datapath::Xnor`] — the full low-bit path: int16 64K-entry gate
+//!   LUTs, hidden states **binarized** per step ([`binarize`]) so the
+//!   recurrent GEMM runs as pure xnor/popcount over the existing
+//!   `Arc<[u64]>` weight bit planes (`quant::gemm::gemm_xnor`), and the
+//!   LM head evaluated in int8 with per-row/per-column scales
+//!   ([`head::QuantHead`]), including a fused top-k that never
+//!   materializes the full f32 logit row.
+//!
+//! Rounding rules are documented at each table ([`lut`]) and quantizer
+//! ([`head`]); property tests bound the LUT tails' max-abs error vs the
+//! f32 tails and pin the xnor accumulator bit-for-bit against a dense
+//! ±1 integer reference.
+
+pub mod binarize;
+pub mod head;
+pub mod lut;
+pub mod tail;
+
+pub use binarize::BinarizedBatch;
+pub use head::QuantHead;
+
+use anyhow::{bail, Result};
+
+/// Which activation datapath a packed backend runs (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Datapath {
+    /// Full-precision activations — bit-identical to the pre-datapath
+    /// engine (the escape hatch; default).
+    F32,
+    /// int8 256-entry tanh/sigmoid LUT gate tail; GEMMs and head f32.
+    Lut8,
+    /// int16 LUT tails + binarized hidden state (xnor/popcount
+    /// recurrent GEMM) + int8 LM head.
+    Xnor,
+}
+
+impl Datapath {
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Datapath::F32,
+            "lut8" => Datapath::Lut8,
+            "xnor" => Datapath::Xnor,
+            other => bail!("unknown datapath '{other}' \
+                            (accepted: f32, lut8, xnor)"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Datapath::F32 => "f32",
+            Datapath::Lut8 => "lut8",
+            Datapath::Xnor => "xnor",
+        }
+    }
+
+    pub fn all() -> [Datapath; 3] {
+        [Datapath::F32, Datapath::Lut8, Datapath::Xnor]
+    }
+}
+
+impl Default for Datapath {
+    fn default() -> Self {
+        Datapath::F32
+    }
+}
+
+impl std::fmt::Display for Datapath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_error_lists_accepted() {
+        for dp in Datapath::all() {
+            assert_eq!(Datapath::parse(dp.label()).unwrap(), dp);
+        }
+        assert_eq!(Datapath::default(), Datapath::F32);
+        let err = format!("{:#}", Datapath::parse("int4").unwrap_err());
+        assert!(err.contains("f32") && err.contains("lut8")
+                && err.contains("xnor"),
+                "datapath parse error must list accepted values: {err}");
+    }
+}

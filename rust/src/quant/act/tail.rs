@@ -1,0 +1,159 @@
+//! Datapath-selectable gate tails: the exact op sequence of the f32
+//! LSTM/GRU tails (`quant::cell`), with the nonlinearities swapped for
+//! the shared LUTs of [`super::lut`].
+//!
+//! The affine folded-BN part stays f32 on every datapath — the LUTs
+//! replace only the transcendental evaluations, which is where the
+//! accelerator's datapath differs from a CPU (an activation ROM read
+//! vs an `exp` ladder). Keeping the fold bitwise-identical to the f32
+//! tail means the per-datapath error is exactly the table error, which
+//! the property tests can bound tightly.
+//!
+//! Rows are independent, so the engine shards these across pool
+//! workers exactly like `RecurrentCell::gate_tail_rows`.
+
+use super::lut::{sigmoid_exact, sigmoid_lut16, sigmoid_lut8, tanh_lut16,
+                 tanh_lut8};
+use super::Datapath;
+use crate::quant::cell::{CellArch, GateParams};
+
+#[inline]
+fn acts(dp: Datapath) -> (fn(f32) -> f32, fn(f32) -> f32) {
+    match dp {
+        Datapath::F32 => (|x| x.tanh(), sigmoid_exact),
+        Datapath::Lut8 => (tanh_lut8, sigmoid_lut8),
+        Datapath::Xnor => (tanh_lut16, sigmoid_lut16),
+    }
+}
+
+/// Datapath-selected gate tail over a row-major block of streams —
+/// same contract as `RecurrentCell::gate_tail_rows` (`xw` consumed in
+/// place, row count inferred from `xw.len()`), dispatched on `arch`.
+pub fn gate_tail_rows_dp(dp: Datapath, arch: CellArch, p: &GateParams<'_>,
+                         hid: usize, xw: &mut [f32], hw: &[f32],
+                         state: &mut [f32]) {
+    match arch {
+        CellArch::Lstm => lstm_tail_rows(dp, p, hid, xw, hw, state),
+        CellArch::Gru => gru_tail_rows(dp, p, hid, xw, hw, state),
+    }
+}
+
+/// LSTM tail (state rows `[h | c]`, gate order `[i, f, g, o]`) with
+/// the datapath's tanh/sigmoid. On [`Datapath::F32`] this walks the
+/// identical op sequence as the cell's own f32 tail.
+pub fn lstm_tail_rows(dp: Datapath, p: &GateParams<'_>, hid: usize,
+                      xw: &mut [f32], hw: &[f32], state: &mut [f32]) {
+    let (tanh_f, sig_f) = acts(dp);
+    let n4 = 4 * hid;
+    let sw = 2 * hid;
+    debug_assert_eq!(xw.len() % n4, 0);
+    let rows = xw.len() / n4;
+    debug_assert_eq!(hw.len(), rows * n4);
+    debug_assert_eq!(state.len(), rows * sw);
+    for b in 0..rows {
+        let xw = &mut xw[b * n4..(b + 1) * n4];
+        let hw = &hw[b * n4..(b + 1) * n4];
+        let (h, c) = state[b * sw..(b + 1) * sw].split_at_mut(hid);
+        for j in 0..n4 {
+            xw[j] = xw[j] * p.scale_x[j] + p.shift_x[j]
+                + hw[j] * p.scale_h[j] + p.shift_h[j]
+                + p.bias[j];
+        }
+        for k in 0..hid {
+            let i = sig_f(xw[k]);
+            let f = sig_f(xw[hid + k]);
+            let g = tanh_f(xw[2 * hid + k]);
+            let o = sig_f(xw[3 * hid + k]);
+            c[k] = f * c[k] + i * g;
+            h[k] = o * tanh_f(c[k]);
+        }
+    }
+}
+
+/// GRU tail (state rows `[h]`, gate order `[r, z, n]`, reset gate on
+/// the recurrent candidate) with the datapath's tanh/sigmoid.
+pub fn gru_tail_rows(dp: Datapath, p: &GateParams<'_>, hid: usize,
+                     xw: &mut [f32], hw: &[f32], state: &mut [f32]) {
+    let (tanh_f, sig_f) = acts(dp);
+    let n3 = 3 * hid;
+    debug_assert_eq!(xw.len() % n3, 0);
+    let rows = xw.len() / n3;
+    debug_assert_eq!(hw.len(), rows * n3);
+    debug_assert_eq!(state.len(), rows * hid);
+    for b in 0..rows {
+        let xw = &mut xw[b * n3..(b + 1) * n3];
+        let hw = &hw[b * n3..(b + 1) * n3];
+        let h = &mut state[b * hid..(b + 1) * hid];
+        for j in 0..n3 {
+            xw[j] = xw[j] * p.scale_x[j] + p.shift_x[j] + p.bias[j];
+        }
+        for j in 0..2 * hid {
+            xw[j] += hw[j] * p.scale_h[j] + p.shift_h[j];
+        }
+        for k in 0..hid {
+            let r = sig_f(xw[k]);
+            let z = sig_f(xw[hid + k]);
+            let hn = hw[2 * hid + k] * p.scale_h[2 * hid + k]
+                + p.shift_h[2 * hid + k];
+            let n = tanh_f(xw[2 * hid + k] + r * hn);
+            h[k] = (1.0 - z) * n + z * h[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn params(gw: usize, rng: &mut Rng)
+        -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            (0..gw).map(|_| 1.0 + 0.1 * rng.normal_f32()).collect(),
+            (0..gw).map(|_| 0.05 * rng.normal_f32()).collect(),
+            (0..gw).map(|_| 1.0 + 0.1 * rng.normal_f32()).collect(),
+            (0..gw).map(|_| 0.05 * rng.normal_f32()).collect(),
+            (0..gw).map(|_| 0.2 * rng.normal_f32()).collect(),
+        )
+    }
+
+    #[test]
+    fn lut_tails_track_f32_tail() {
+        // one tail call: LUT output must sit within a small, datapath-
+        // dependent band of the exact-f32 tail on the same inputs
+        let mut rng = Rng::new(77);
+        for arch in CellArch::all() {
+            let hid = 24;
+            let gw = arch.gates() * hid;
+            let sw = if arch == CellArch::Lstm { 2 * hid } else { hid };
+            let (sx, fx, sh, fh, b) = params(gw, &mut rng);
+            let p = GateParams { scale_x: &sx, shift_x: &fx, scale_h: &sh,
+                                 shift_h: &fh, bias: &b };
+            let rows = 3;
+            let xw0: Vec<f32> =
+                (0..rows * gw).map(|_| rng.normal_f32()).collect();
+            let hw: Vec<f32> =
+                (0..rows * gw).map(|_| rng.normal_f32()).collect();
+            let st0: Vec<f32> =
+                (0..rows * sw).map(|_| 0.3 * rng.normal_f32()).collect();
+            let run = |dp: Datapath| {
+                let mut xw = xw0.clone();
+                let mut st = st0.clone();
+                gate_tail_rows_dp(dp, arch, &p, hid, &mut xw, &hw, &mut st);
+                st
+            };
+            let exact = run(Datapath::F32);
+            for (dp, bound) in [(Datapath::Lut8, 0.2f32),
+                                (Datapath::Xnor, 1.5e-3)] {
+                let got = run(dp);
+                let worst = exact
+                    .iter()
+                    .zip(&got)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst <= bound,
+                        "{arch} {dp}: tail error {worst} > {bound}");
+            }
+        }
+    }
+}

@@ -46,6 +46,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use super::act::{self, Datapath};
 use super::gemm::{gemm_binary_lut, gemm_binary_lut_cols, gemm_ternary_lut,
                   gemm_ternary_lut_cols, gemm_ternary_planes,
                   gemm_ternary_planes_cols, GemmScratch};
@@ -402,6 +403,20 @@ pub trait RecurrentCell: Send + Sync {
     /// the per-slot tail, so the engine can shard rows across worker
     /// threads without changing a single state bit.
     fn gate_tail_rows(&self, xw: &mut [f32], hw: &[f32], state: &mut [f32]);
+
+    /// Datapath-selected gate tail: [`Datapath::F32`] routes through
+    /// [`Self::gate_tail_rows`] untouched (bit-identical serving), the
+    /// low-bit datapaths through the shared activation LUTs of
+    /// [`crate::quant::act`] on the same affine fold and op order.
+    fn gate_tail_rows_dp(&self, dp: Datapath, xw: &mut [f32], hw: &[f32],
+                         state: &mut [f32]) {
+        if dp == Datapath::F32 {
+            self.gate_tail_rows(xw, hw, state);
+        } else {
+            act::tail::gate_tail_rows_dp(dp, self.arch(), &self.gate_params(),
+                                         self.hidden(), xw, hw, state);
+        }
+    }
 
     /// Cheap clone for shard fan-out: aliases the `Arc`-backed plane
     /// allocations, owns fresh scratch.

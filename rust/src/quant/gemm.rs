@@ -48,6 +48,8 @@
 //! match the per-slot reference path bit for bit — enforced by
 //! `rust/tests/quant_properties.rs` across batches {1, 7, 8, 9, 64}.
 
+use super::act::BinarizedBatch;
+use super::cell::Packed;
 use super::gemv_lut::le_bytes;
 use super::pack::{words_per_col, PackedBinary, PackedTernary};
 use super::planes::TernaryPlanes;
@@ -73,6 +75,8 @@ pub struct GemmScratch {
     acc: Vec<F32x8>,
     /// Per-batch-row activation sums (binary kernel only).
     totals: Vec<f32>,
+    /// int32 popcount accumulators (xnor kernel only).
+    xnor: Vec<i32>,
 }
 
 impl GemmScratch {
@@ -381,6 +385,164 @@ pub unsafe fn gemm_f32_bias_cols(w: &[f32], rows: usize, cols: usize,
     }
 }
 
+/// Integer xnor/popcount accumulators for the binarized recurrent GEMM
+/// (`Datapath::Xnor`): for each batch row `j` (sign words `xwords[j*wpc
+/// ..]`, bit set = +1) and column `c` in `[c0, c1)`, computes the exact
+/// ±1 dot product
+///
+/// ```text
+/// acc[j*(c1-c0) + (c-c0)] = Σ_r sign(x[j,r]) · w[r,c]   (w ∈ {-1,0,+1})
+/// ```
+///
+/// entirely in i32 — **no float enters the accumulation**, which is the
+/// paper's accumulator-only datapath taken literally and what the
+/// property tests pin bit-for-bit against a dense ±1 integer reference.
+/// Per layout:
+///
+/// * binary: matches = popcount(xnor(x, sign) & valid) per word (the
+///   `valid` mask zeroes padding rows in the last word, where a clear
+///   sign bit would otherwise read as a spurious −1), `dot =
+///   2·matches − rows`;
+/// * ternary/planes: `dot = (2·pc(x & pos) − |pos|) − (2·pc(x & neg) −
+///   |neg|)` with the per-column plane populations `|pos|`/`|neg|`
+///   hoisted out of the batch loop (plane padding bits are packed zero,
+///   so no mask is needed).
+pub fn gemm_xnor_acc_cols(w: &Packed, xwords: &[u64], batch: usize,
+                          c0: usize, c1: usize, acc: &mut [i32]) {
+    let rows = w.rows();
+    let wpc = words_per_col(rows);
+    let ncols = c1 - c0;
+    debug_assert!(c0 <= c1 && c1 <= w.cols());
+    debug_assert_eq!(xwords.len(), batch * wpc);
+    debug_assert!(acc.len() >= batch * ncols);
+    if batch == 0 || ncols == 0 {
+        return;
+    }
+    let tail = rows % 64;
+    let valid_last = if tail == 0 { u64::MAX } else { (1u64 << tail) - 1 };
+    match w {
+        Packed::Binary(b) => {
+            for ci in 0..ncols {
+                let sw = &b.sign[(c0 + ci) * wpc..(c0 + ci + 1) * wpc];
+                for j in 0..batch {
+                    let xw = &xwords[j * wpc..(j + 1) * wpc];
+                    let mut matches = 0i32;
+                    for wi in 0..wpc {
+                        let valid =
+                            if wi + 1 == wpc { valid_last } else { u64::MAX };
+                        matches += (!(xw[wi] ^ sw[wi]) & valid)
+                            .count_ones() as i32;
+                    }
+                    acc[j * ncols + ci] = 2 * matches - rows as i32;
+                }
+            }
+        }
+        Packed::Ternary(t) => {
+            for ci in 0..ncols {
+                let base = (c0 + ci) * wpc;
+                let sw = &t.sign[base..base + wpc];
+                let mw = &t.mask[base..base + wpc];
+                let mut npos = 0i32;
+                let mut nneg = 0i32;
+                for wi in 0..wpc {
+                    npos += (mw[wi] & sw[wi]).count_ones() as i32;
+                    nneg += (mw[wi] & !sw[wi]).count_ones() as i32;
+                }
+                for j in 0..batch {
+                    let xw = &xwords[j * wpc..(j + 1) * wpc];
+                    let mut pc_pos = 0i32;
+                    let mut pc_neg = 0i32;
+                    for wi in 0..wpc {
+                        pc_pos += (xw[wi] & mw[wi] & sw[wi])
+                            .count_ones() as i32;
+                        pc_neg += (xw[wi] & mw[wi] & !sw[wi])
+                            .count_ones() as i32;
+                    }
+                    acc[j * ncols + ci] =
+                        (2 * pc_pos - npos) - (2 * pc_neg - nneg);
+                }
+            }
+        }
+        Packed::Planes(p) => {
+            for ci in 0..ncols {
+                let base = (c0 + ci) * wpc;
+                let pw = &p.pos[base..base + wpc];
+                let nw = &p.neg[base..base + wpc];
+                let npos: i32 =
+                    pw.iter().map(|w| w.count_ones() as i32).sum();
+                let nneg: i32 =
+                    nw.iter().map(|w| w.count_ones() as i32).sum();
+                for j in 0..batch {
+                    let xw = &xwords[j * wpc..(j + 1) * wpc];
+                    let mut pc_pos = 0i32;
+                    let mut pc_neg = 0i32;
+                    for wi in 0..wpc {
+                        pc_pos += (xw[wi] & pw[wi]).count_ones() as i32;
+                        pc_neg += (xw[wi] & nw[wi]).count_ones() as i32;
+                    }
+                    acc[j * ncols + ci] =
+                        (2 * pc_pos - npos) - (2 * pc_neg - nneg);
+                }
+            }
+        }
+    }
+}
+
+/// Column shard `[c0, c1)` of the binarized recurrent GEMM: the integer
+/// accumulators of [`gemm_xnor_acc_cols`] dequantized by the per-row
+/// binarization scale and the weight alpha — `y[j,c] = alpha · s_j ·
+/// acc[j,c]`. Same [`SharedOut`] disjoint-column contract (and the same
+/// `shard_range` fan-out) as the LUT `*_cols` kernels, so `engine::pool`
+/// and cluster sharding work unchanged.
+///
+/// # Safety
+/// Same contract as [`gemm_binary_lut_cols`].
+pub unsafe fn gemm_xnor_cols(w: &Packed, xb: &BinarizedBatch, batch: usize,
+                             c0: usize, c1: usize, out: SharedOut,
+                             scratch: &mut GemmScratch) {
+    let cols = w.cols();
+    let ncols = c1 - c0;
+    debug_assert_eq!(xb.rows, w.rows());
+    debug_assert_eq!(out.len(), batch * cols);
+    debug_assert!(c0 <= c1 && c1 <= cols);
+    if batch == 0 || ncols == 0 {
+        return;
+    }
+    if scratch.xnor.len() < batch * ncols {
+        scratch.xnor.resize(batch * ncols, 0);
+    }
+    let wpc = words_per_col(w.rows());
+    gemm_xnor_acc_cols(w, &xb.words[..batch * wpc], batch, c0, c1,
+                       &mut scratch.xnor);
+    let alpha = match w {
+        Packed::Binary(b) => b.alpha,
+        Packed::Ternary(t) => t.alpha,
+        Packed::Planes(p) => p.alpha,
+    };
+    for j in 0..batch {
+        let s = alpha * xb.scales[j];
+        for ci in 0..ncols {
+            let v = s * scratch.xnor[j * ncols + ci] as f32;
+            // SAFETY: forwarded from this function's contract.
+            unsafe { out.write(j * cols + c0 + ci, v) };
+        }
+    }
+}
+
+/// Full-width binarized recurrent GEMM: `Y = binarize(X)·W` with
+/// per-row scale correction, `Y` row-major `(batch, cols)`
+/// (overwritten). See [`gemm_xnor_acc_cols`] for the integer core.
+pub fn gemm_xnor(w: &Packed, xb: &BinarizedBatch, batch: usize,
+                 y: &mut [f32], scratch: &mut GemmScratch) {
+    assert_eq!(y.len(), batch * w.cols());
+    if batch == 0 {
+        return;
+    }
+    let out = SharedOut::new(y);
+    // SAFETY: one shard covering every column of `y` (see above).
+    unsafe { gemm_xnor_cols(w, xb, batch, 0, w.cols(), out, scratch) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -567,5 +729,123 @@ mod tests {
         gemm_ternary_planes(&planes, &[], 0, &mut y, &mut s);
         let b = PackedBinary::pack(&[1.0f32, -1.0, 1.0, 1.0], 4, 1, 1.0);
         gemm_binary_lut(&b, &[], 0, &mut y, &mut s);
+        gemm_xnor(&Packed::Ternary(w), &BinarizedBatch::default(), 0,
+                  &mut y, &mut s);
+    }
+
+    /// Dense ±1 integer reference for the xnor accumulator: sign(x) ∈
+    /// {+1, -1} (ties to +1), w ∈ {-1, 0, +1}, plain i32 adds.
+    fn dense_pm1_acc(wd: &[f32], rows: usize, cols: usize, x: &[f32],
+                     batch: usize, alpha: f32) -> Vec<i32> {
+        let mut acc = vec![0i32; batch * cols];
+        for j in 0..batch {
+            for c in 0..cols {
+                let mut dot = 0i32;
+                for r in 0..rows {
+                    let xs = if x[j * rows + r] >= 0.0 { 1 } else { -1 };
+                    let ws = if wd[r * cols + c] > alpha * 0.5 {
+                        1
+                    } else if wd[r * cols + c] < -alpha * 0.5 {
+                        -1
+                    } else {
+                        0
+                    };
+                    dot += xs * ws;
+                }
+                acc[j * cols + c] = dot;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn xnor_accumulator_matches_dense_pm1_reference_exactly() {
+        // every packed layout, rows straddling word boundaries, batches
+        // straddling the lane tile — the i32 accumulators must be EQUAL
+        // (integers: no tolerance)
+        let mut rng = Rng::new(71);
+        for (rows, cols) in [(64, 16), (70, 9), (128, 5), (33, 21)] {
+            for batch in [1usize, 7, 8, 9, 64] {
+                let alpha = 0.2f32;
+                let ter = rand_ternary(&mut rng, rows * cols, alpha);
+                let bin: Vec<f32> = (0..rows * cols)
+                    .map(|_| if rng.bernoulli(0.5) { alpha } else { -alpha })
+                    .collect();
+                let x: Vec<f32> =
+                    (0..batch * rows).map(|_| rng.normal_f32()).collect();
+                let mut xb = BinarizedBatch::default();
+                xb.pack(&x, batch, rows);
+                let pt = PackedTernary::pack(&ter, rows, cols, alpha);
+                let layouts: Vec<(&str, Packed, &[f32])> = vec![
+                    ("binary",
+                     Packed::Binary(PackedBinary::pack(&bin, rows, cols,
+                                                       alpha)),
+                     &bin),
+                    ("ternary", Packed::Ternary(pt.clone()), &ter),
+                    ("planes",
+                     Packed::Planes(TernaryPlanes::from_packed(&pt)), &ter),
+                ];
+                for (name, w, wd) in layouts {
+                    let want = dense_pm1_acc(wd, rows, cols, &x, batch, alpha);
+                    let mut acc = vec![0i32; batch * cols];
+                    gemm_xnor_acc_cols(&w, &xb.words, batch, 0, cols,
+                                       &mut acc);
+                    assert_eq!(acc, want,
+                               "{name} ({rows},{cols}) batch {batch}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xnor_column_shards_reassemble_the_full_gemm() {
+        let mut rng = Rng::new(73);
+        let (rows, cols, batch) = (70, 29, 11);
+        let alpha = 0.15f32;
+        let ter = rand_ternary(&mut rng, rows * cols, alpha);
+        let w = Packed::Ternary(PackedTernary::pack(&ter, rows, cols, alpha));
+        let x: Vec<f32> =
+            (0..batch * rows).map(|_| rng.normal_f32()).collect();
+        let mut xb = BinarizedBatch::default();
+        xb.pack(&x, batch, rows);
+        let mut s = GemmScratch::default();
+        let mut whole = vec![0.0f32; batch * cols];
+        gemm_xnor(&w, &xb, batch, &mut whole, &mut s);
+        for splits in [vec![0, 1, 29], vec![0, 7, 13, 28, 29]] {
+            let mut sharded = vec![f32::NAN; batch * cols];
+            {
+                let out = SharedOut::new(&mut sharded);
+                for pair in splits.windows(2) {
+                    // SAFETY: disjoint column shards, buffer outlives them.
+                    unsafe {
+                        gemm_xnor_cols(&w, &xb, batch, pair[0], pair[1], out,
+                                       &mut s);
+                    }
+                }
+            }
+            for (i, (a, b)) in whole.iter().zip(&sharded).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "splits {splits:?} elt {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn xnor_scale_fold_and_zero_rows() {
+        // y = alpha * s_j * dot, with a zeroed row contributing exactly 0
+        let alpha = 0.5f32;
+        let wd = vec![alpha; 4 * 3]; // all +1
+        let w = Packed::Binary(PackedBinary::pack(&wd, 4, 3, alpha));
+        let x = [1.0f32, -2.0, 3.0, -4.0, 0.0, 0.0, 0.0, 0.0];
+        let mut xb = BinarizedBatch::default();
+        xb.pack(&x, 2, 4);
+        let mut s = GemmScratch::default();
+        let mut y = vec![f32::NAN; 2 * 3];
+        gemm_xnor(&w, &xb, 2, &mut y, &mut s);
+        // row 0: signs [+,-,+,-] vs all +1 => dot 0 => y 0
+        // row 1: zero h => scale 0 => y exactly 0 despite dot = 4
+        for (i, v) in y.iter().enumerate() {
+            assert_eq!(v.to_bits(), 0.0f32.to_bits(), "elt {i}");
+        }
     }
 }

@@ -2,6 +2,7 @@
 //! batched GEMM (the CPU realization of the paper's mux-based MAC
 //! units), and the memory-footprint accounting behind every Size column.
 
+pub mod act;
 pub mod cell;
 pub mod gemm;
 pub mod gemv;
@@ -11,10 +12,11 @@ pub mod pack;
 pub mod planes;
 pub mod simd;
 
+pub use act::Datapath;
 pub use cell::{CellArch, GateParams, Packed, PackedGruCell, PackedLstmCell,
                PackedStack, RecurrentCell};
 pub use gemm::{gemm_binary_lut, gemm_ternary_lut, gemm_ternary_planes,
-               GemmScratch};
+               gemm_xnor, GemmScratch};
 pub use simd::{F32x8, SharedOut};
 pub use gemv::{gemm_binary, gemm_ternary, gemv_binary, gemv_f32, gemv_ternary};
 pub use gemv_lut::{gemv_binary_lut, gemv_ternary_lut, LutScratch};

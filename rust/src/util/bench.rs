@@ -6,6 +6,7 @@
 //! throughput/latency keys that moved the wrong way beyond a tolerance
 //! (`rbtw bench-diff` / the ci.sh bench gate drive it).
 
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use super::json::Json;
@@ -199,17 +200,46 @@ fn walk_reports(base: &Json, cur: &Json, path: &str, tol: f64,
             }
         }
         (Json::Arr(b), Json::Arr(c)) => {
-            for (i, (bv, cv)) in b.iter().zip(c.iter()).enumerate() {
-                // label array entries by their identity key when they
-                // carry one, so a report names the kernel, not just [3]
-                let tag = bv
-                    .get("kernel")
-                    .or_else(|| bv.get("name"))
-                    .or_else(|| bv.get("label"))
-                    .and_then(|j| j.as_str())
-                    .map(|s| format!("[{i}].{s}"))
-                    .unwrap_or_else(|| format!("[{i}]"));
-                walk_reports(bv, cv, &format!("{path}{tag}"), tol, out);
+            // Entries carrying an identity key (kernel/name/label, plus
+            // the datapath and batch tags when present) are matched BY
+            // that key, not by position — a bench that adds or reorders
+            // rows must never pair one kernel's baseline with another
+            // kernel's current number. Rows whose key exists on only
+            // one side are skipped (new/retired rows never gate), and
+            // keyless entries keep the positional walk.
+            let identity = |v: &Json| -> Option<String> {
+                let id = v.get("kernel")
+                    .or_else(|| v.get("name"))
+                    .or_else(|| v.get("label"))
+                    .and_then(|j| j.as_str())?;
+                let mut k = id.to_string();
+                if let Some(dp) = v.get("datapath").and_then(|j| j.as_str()) {
+                    k.push('.');
+                    k.push_str(dp);
+                }
+                if let Some(batch) = v.get("batch").and_then(|j| j.as_f64()) {
+                    k.push_str(&format!(".x{batch}"));
+                }
+                Some(k)
+            };
+            let cur_by_key: HashMap<String, &Json> = c.iter()
+                .filter_map(|v| identity(v).map(|k| (k, v)))
+                .collect();
+            for (i, bv) in b.iter().enumerate() {
+                match identity(bv) {
+                    Some(k) => {
+                        if let Some(cv) = cur_by_key.get(&k) {
+                            walk_reports(bv, cv, &format!("{path}[{i}].{k}"),
+                                         tol, out);
+                        }
+                    }
+                    None => {
+                        if let Some(cv) = c.get(i) {
+                            walk_reports(bv, cv, &format!("{path}[{i}]"),
+                                         tol, out);
+                        }
+                    }
+                }
             }
         }
         _ => {}
@@ -323,5 +353,38 @@ mod tests {
         // a zero baseline cannot gate
         let zero = report(0.0, 0.0);
         assert!(compare_reports(&zero, &report(0.0, 5.0), 0.3).is_empty());
+    }
+
+    #[test]
+    fn array_rows_match_by_kernel_datapath_identity_not_position() {
+        let row = |kernel: &str, dp: &str, ns: f64| {
+            format!(r#"{{"kernel":"{kernel}","datapath":"{dp}",
+                        "batch":8,"ns_per_call":{ns}}}"#)
+        };
+        let base = Json::parse(&format!(
+            r#"{{"kernels":[{}]}}"#, row("ternary-lut", "f32", 100.0)))
+            .unwrap();
+        // current interleaves a new xnor row BEFORE the old f32 row: a
+        // positional zip would compare f32's 100ns baseline against the
+        // xnor row; keyed matching must pair like with like
+        let cur = Json::parse(&format!(
+            r#"{{"kernels":[{},{}]}}"#,
+            row("ternary-lut", "xnor", 900.0),
+            row("ternary-lut", "f32", 105.0)))
+            .unwrap();
+        assert!(compare_reports(&base, &cur, 0.3).is_empty(),
+                "same-key row is within tolerance; new xnor row must not \
+                 pair with the f32 baseline");
+        // and a genuine same-key regression still fires, with the
+        // datapath in the reported path
+        let bad = Json::parse(&format!(
+            r#"{{"kernels":[{},{}]}}"#,
+            row("ternary-lut", "xnor", 900.0),
+            row("ternary-lut", "f32", 200.0)))
+            .unwrap();
+        let regs = compare_reports(&base, &bad, 0.3);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].path.contains("ternary-lut.f32.x8"),
+                "{}", regs[0].path);
     }
 }

@@ -21,11 +21,24 @@
 //!   bit for bit, per arch and packing layout
 //! * the GRU batched `step_tokens` equals its per-slot GEMV reference
 //!   (`step_token_slot`) bit for bit
+//! * the activation LUT tables (`quant::act::lut`) are monotone
+//!   non-decreasing and track the exact tanh/sigmoid within the
+//!   documented error bounds, clamping outside ±8
+//! * the datapath-selected gate tail under `f32` is bit-identical to
+//!   the plain tail, and the `lut8`/`xnor` tails stay within a
+//!   max-abs state-error bound of it
+//! * the xnor/popcount accumulator (`gemm_xnor_acc_cols`) equals a
+//!   dense ±1 integer reference EXACTLY (i32 ==, no float tolerance)
+//!   for every packing layout, with bitwise column-shard reassembly
 
 use rbtw::engine::{self, BackendKind, BackendSpec, InferBackend, ModelWeights};
-use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, CellArch, GemmScratch,
-                  LutScratch, Packed, PackedBinary, PackedGruCell,
-                  PackedLstmCell, PackedStack, PackedTernary, RecurrentCell};
+use rbtw::quant::act::lut::{self, ACT_CLAMP};
+use rbtw::quant::act::BinarizedBatch;
+use rbtw::quant::gemm::gemm_xnor_acc_cols;
+use rbtw::quant::{gemv_binary, gemv_f32, gemv_ternary, CellArch, Datapath,
+                  GemmScratch, LutScratch, Packed, PackedBinary,
+                  PackedGruCell, PackedLstmCell, PackedStack, PackedTernary,
+                  RecurrentCell};
 use rbtw::util::prop::{self, assert_that};
 use rbtw::util::prop::Gen;
 
@@ -456,6 +469,170 @@ fn prop_backend_threads_bit_identical() {
                              step {step} logit {i}: 1-thread {x} \
                              N-thread {y}", kind.label()),
                 )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_act_luts_monotone_and_track_exact() {
+    // the raw int tables must be monotone non-decreasing (tanh and
+    // sigmoid both are; a rounding rule that broke this would make the
+    // quantized gates non-monotone in their pre-activations)
+    let (t8, s8) = lut::tables_i8();
+    let (t16, s16) = lut::tables_i16();
+    assert!(t8.windows(2).all(|w| w[0] <= w[1]), "tanh8 not monotone");
+    assert!(s8.windows(2).all(|w| w[0] <= w[1]), "sig8 not monotone");
+    assert!(t16.windows(2).all(|w| w[0] <= w[1]), "tanh16 not monotone");
+    assert!(s16.windows(2).all(|w| w[0] <= w[1]), "sig16 not monotone");
+    // tanh endpoints saturate symmetrically; sigmoid stays in [0, 1]
+    assert_eq!((t8[0], *t8.last().unwrap()), (-127, 127));
+    assert!(s8[0] >= 0 && *s8.last().unwrap() <= 127);
+    assert!(t16[0] == -32767 && *t16.last().unwrap() == 32767);
+    assert!(s16[0] >= 0 && *s16.last().unwrap() <= 32767);
+
+    prop::check("LUT activations track exact", 300, |g| {
+        // inside the clamp: the documented max-abs error bounds
+        let x = g.f32_in(-ACT_CLAMP, ACT_CLAMP);
+        let (et, es) = (x.tanh(), lut::sigmoid_exact(x));
+        assert_that((lut::tanh_lut8(x) - et).abs() <= 0.05,
+                    format!("tanh8({x})"))?;
+        assert_that((lut::sigmoid_lut8(x) - es).abs() <= 0.05,
+                    format!("sig8({x})"))?;
+        assert_that((lut::tanh_lut16(x) - et).abs() <= 2.5e-4,
+                    format!("tanh16({x})"))?;
+        assert_that((lut::sigmoid_lut16(x) - es).abs() <= 2.5e-4,
+                    format!("sig16({x})"))?;
+        // outside the clamp: exactly the boundary value, bit for bit
+        let far = g.f32_in(ACT_CLAMP, 100.0);
+        for (l, r) in [(lut::tanh_lut8(far), lut::tanh_lut8(ACT_CLAMP)),
+                       (lut::tanh_lut8(-far), lut::tanh_lut8(-ACT_CLAMP)),
+                       (lut::sigmoid_lut16(far),
+                        lut::sigmoid_lut16(ACT_CLAMP)),
+                       (lut::sigmoid_lut16(-far),
+                        lut::sigmoid_lut16(-ACT_CLAMP))] {
+            assert_that(l.to_bits() == r.to_bits(),
+                        format!("clamp({far}): {l} vs {r}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lut_gate_tail_tracks_f32_tail() {
+    // the datapath-selected tail: F32 must be bit-identical to the
+    // plain tail (it IS the plain tail), and the LUT tails must stay
+    // within a max-abs state-error bound of it — per arch, layout and
+    // row count (same bound for every row of a batch: the tail is
+    // row-independent).
+    prop::check("dp gate tail tracks f32 tail", 40, |g| {
+        let arch = if g.bool() { CellArch::Lstm } else { CellArch::Gru };
+        let layout = if arch == CellArch::Lstm { g.usize_in(0, 2) }
+                     else { g.usize_in(1, 2) };
+        let input = g.usize_in(2, 10);
+        let hid = g.usize_in(2, 16);
+        let rows = g.usize_in(1, 4);
+        let cell = random_cell(g, arch, input, hid, layout);
+        let gw = arch.gates() * hid;
+        let sw = cell.state_width();
+        let xw0 = g.f32_vec(rows * gw, -3.0, 3.0);
+        let hw = g.f32_vec(rows * gw, -3.0, 3.0);
+        let st0 = g.f32_vec(rows * sw, -1.0, 1.0);
+
+        let mut xw_ref = xw0.clone();
+        let mut st_ref = st0.clone();
+        cell.gate_tail_rows(&mut xw_ref, &hw, &mut st_ref);
+
+        let mut xw_f32 = xw0.clone();
+        let mut st_f32 = st0.clone();
+        cell.gate_tail_rows_dp(Datapath::F32, &mut xw_f32, &hw, &mut st_f32);
+        for (k, (a, b)) in st_f32.iter().zip(&st_ref).enumerate() {
+            assert_that(a.to_bits() == b.to_bits(),
+                        format!("{arch} f32 dp state[{k}]: {a} vs {b}"))?;
+        }
+
+        for (dp, bound) in [(Datapath::Lut8, 0.25f32),
+                            (Datapath::Xnor, 5e-3)] {
+            let mut xw = xw0.clone();
+            let mut st = st0.clone();
+            cell.gate_tail_rows_dp(dp, &mut xw, &hw, &mut st);
+            let worst = st.iter().zip(&st_ref)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert_that(worst <= bound,
+                        format!("{arch} layout {layout} hid {hid} rows \
+                                 {rows} {dp}: max state err {worst} > \
+                                 {bound}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_xnor_accumulator_matches_dense_pm1_bitwise() {
+    // the paper's accumulator datapath taken literally: the popcount
+    // accumulator must equal a dense ±1 integer reference EXACTLY
+    // (i32 equality — there is no tolerance to hide behind), for every
+    // packing layout, batch widths straddling the 8-lane tile, and
+    // non-word-aligned contraction dims; and splitting the columns at
+    // an arbitrary point must reassemble the full result bit for bit
+    // (the engine's column-shard contract).
+    prop::check("xnor acc == dense +-1", 120, |g| {
+        let rows = g.usize_in(1, 150);
+        let cols = g.usize_in(1, 24);
+        let batch = [1, 7, 8, 9, 64, g.usize_in(1, 6)][g.usize_in(0, 5)];
+        let layout = g.usize_in(0, 2); // 0=binary, 1=ternary, 2=planes
+        let alpha = g.f32_in(0.05, 1.0);
+        let data: Vec<f32> = if layout == 0 {
+            g.binary_vec(rows * cols).iter().map(|x| x * alpha).collect()
+        } else {
+            g.ternary_vec(rows * cols).iter().map(|x| x * alpha).collect()
+        };
+        let packed = match layout {
+            0 => Packed::Binary(PackedBinary::pack(&data, rows, cols, alpha)),
+            1 => Packed::Ternary(PackedTernary::pack(&data, rows, cols,
+                                                     alpha)),
+            _ => Packed::Ternary(PackedTernary::pack(&data, rows, cols,
+                                                     alpha)).to_planes(),
+        };
+        let x = g.f32_vec(batch * rows, -2.0, 2.0);
+        let mut xb = BinarizedBatch::default();
+        xb.pack(&x, batch, rows);
+        let mut acc = vec![0i32; batch * cols];
+        gemm_xnor_acc_cols(&packed, &xb.words, batch, 0, cols, &mut acc);
+        for j in 0..batch {
+            for c in 0..cols {
+                let mut dot = 0i32;
+                for r in 0..rows {
+                    // the binarizer's tie rule: x >= 0 maps to +1
+                    let xs = if x[j * rows + r] >= 0.0 { 1 } else { -1 };
+                    let w = data[r * cols + c];
+                    let wi = if w > 0.0 { 1 } else if w < 0.0 { -1 }
+                             else { 0 };
+                    dot += xs * wi;
+                }
+                assert_that(
+                    acc[j * cols + c] == dot,
+                    format!("layout {layout} ({rows},{cols}) row {j} col \
+                             {c}: acc {} dense {dot}", acc[j * cols + c]))?;
+            }
+        }
+        // column-shard reassembly (each call writes (batch, ncols))
+        let mid = g.usize_in(0, cols);
+        let mut lo = vec![0i32; batch * mid];
+        let mut hi = vec![0i32; batch * (cols - mid)];
+        gemm_xnor_acc_cols(&packed, &xb.words, batch, 0, mid, &mut lo);
+        gemm_xnor_acc_cols(&packed, &xb.words, batch, mid, cols, &mut hi);
+        for j in 0..batch {
+            for ci in 0..mid {
+                assert_that(lo[j * mid + ci] == acc[j * cols + ci],
+                            format!("lo shard row {j} col {ci}"))?;
+            }
+            for ci in 0..cols - mid {
+                assert_that(hi[j * (cols - mid) + ci]
+                                == acc[j * cols + mid + ci],
+                            format!("hi shard row {j} col {ci}"))?;
             }
         }
         Ok(())
